@@ -1,0 +1,40 @@
+//! Fig. 9 explorer: prune a synthetic BERT attention weight matrix with
+//! all six patterns at 75% sparsity and render the surviving-weight
+//! density heatmaps + distribution statistics.
+//!
+//!   cargo run --release --example pattern_explorer [sparsity]
+
+use tilewise::figures::fig9::{patterns_at_75, synth_bert_wq};
+use tilewise::sparse::{mask_stats, render_heatmap, Pattern};
+
+fn main() {
+    let sparsity: f64 = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(0.75);
+    let w = synth_bert_wq(768, 42);
+
+    if (sparsity - 0.75).abs() < 1e-9 {
+        for (label, mask) in patterns_at_75(&w) {
+            let s = mask_stats(&mask, 32);
+            println!(
+                "--- {label}: sparsity={:.3} block_var={:.5} irregularity={:.3} ---",
+                s.sparsity, s.block_variance, s.irregularity
+            );
+            println!("{}", render_heatmap(&mask, 32));
+        }
+        return;
+    }
+
+    // arbitrary sparsity: the patterns that support it
+    for (label, p) in [
+        ("EW", Pattern::Ew),
+        ("BW-64", Pattern::Bw { g: 64 }),
+        ("TW-128", Pattern::Tw { g: 128 }),
+    ] {
+        let mask = p.prune(&w, sparsity);
+        let s = mask_stats(&mask, 32);
+        println!(
+            "--- {label} @ {sparsity}: sparsity={:.3} block_var={:.5} irregularity={:.3} ---",
+            s.sparsity, s.block_variance, s.irregularity
+        );
+        println!("{}", render_heatmap(&mask, 32));
+    }
+}

@@ -1,0 +1,63 @@
+//! Multi-stage prune→fine-tune of the trainable proxy model under every
+//! sparsity pattern — the accuracy-mechanism validation behind Fig. 6c/8
+//! (the surrogate curves carry the paper-scale magnitudes; this run shows
+//! the *ordering* emerges from real training + real pruning).
+//!
+//!   cargo run --release --example prune_model
+
+use tilewise::accuracy::{prune_finetune_sweep, Task};
+use tilewise::sparse::Pattern;
+
+fn main() {
+    let task = Task::synth(64, 8, 3000, 1000, 2024);
+    let sparsities = [0.5, 0.75, 0.875, 0.9375, 0.96875];
+    let hidden = 48;
+
+    let patterns: Vec<(&str, Pattern)> = vec![
+        ("EW", Pattern::Ew),
+        ("VW-4", Pattern::Vw { m: 4 }),
+        ("BW-16", Pattern::Bw { g: 16 }),
+        ("TW-8", Pattern::Tw { g: 8 }),
+        ("TEW-5%", Pattern::Tew { g: 8, delta_pct: 5 }),
+        ("TVW-4", Pattern::Tvw { g: 8, m: 4 }),
+    ];
+
+    println!("proxy MLP (64->48->8) on synthetic clusters; multi-stage prune + fine-tune");
+    print!("{:<8}", "pattern");
+    for s in sparsities {
+        print!("{:>9}", format!("{:.1}%", s * 100.0));
+    }
+    println!();
+
+    let mut results = Vec::new();
+    for (label, p) in &patterns {
+        let pts = prune_finetune_sweep(&task, *p, &sparsities, hidden, 7);
+        print!("{label:<8}");
+        for pt in &pts {
+            print!("{:>9.3}", pt.accuracy);
+        }
+        println!();
+        results.push((label.to_string(), pts));
+    }
+
+    // the paper's qualitative claims, checked on real training runs:
+    let acc = |label: &str, idx: usize| {
+        results.iter().find(|(l, _)| l == label).map(|(_, p)| p[idx].accuracy).unwrap()
+    };
+    println!("\nchecks (at 93.75% sparsity, tolerance 0.05):");
+    let checks = [
+        ("EW >= TW (unstructured dominates)", acc("EW", 3) + 0.05 >= acc("TW-8", 3)),
+        ("TW >= BW (finer structure wins)", acc("TW-8", 3) + 0.05 >= acc("BW-16", 3)),
+        ("TEW >= TW (remedy helps)", acc("TEW-5%", 3) + 0.05 >= acc("TW-8", 3)),
+        ("TVW >= TW (register-level freedom)", acc("TVW-4", 3) + 0.05 >= acc("TW-8", 3)),
+    ];
+    let mut all_ok = true;
+    for (desc, ok) in checks {
+        println!("  [{}] {desc}", if ok { "ok" } else { "MISS" });
+        all_ok &= ok;
+    }
+    if !all_ok {
+        println!("  (single-seed noise can flip a check; the ignored lib test");
+        println!("   accuracy_ordering_matches_paper covers the averaged case)");
+    }
+}

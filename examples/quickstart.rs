@@ -1,0 +1,89 @@
+//! Quickstart: the smallest end-to-end tour of the tilewise API.
+//!
+//! 1. prune a weight matrix to the TW pattern (Algorithm 3),
+//! 2. encode the condensed CTO plan,
+//! 3. run the fused-CTO GEMM on the CPU and check it against the oracle,
+//! 4. run the same computation through the AOT-compiled PJRT artifact,
+//! 5. ask the gpusim what the speedup would be on an A100.
+//!
+//!   cargo run --release --example quickstart
+
+use tilewise::gemm::{matmul, tw_matmul};
+use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
+use tilewise::runtime::Engine;
+use tilewise::sparse::{prune_tw, TwPlan};
+use tilewise::tensor::Matrix;
+use tilewise::util::{Rng, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. prune ---------------------------------------------------------
+    let mut rng = Rng::new(42);
+    let (m, k, n, g, sparsity) = (256usize, 512usize, 512usize, 64usize, 0.75);
+    let w = Matrix::randn(k, n, &mut rng);
+    let a = Matrix::randn(m, k, &mut rng);
+    let tw = prune_tw(&w, sparsity, g, None);
+    println!(
+        "pruned {}x{} to TW-{g}: {} tiles, sparsity {:.3}",
+        k, n, tw.num_tiles(), tw.sparsity()
+    );
+
+    // --- 2. encode the CTO plan -------------------------------------------
+    let plan = TwPlan::encode(&w, &tw);
+    println!(
+        "CTO plan: kmax={} storage {:.1} KiB (dense would be {:.1} KiB)",
+        plan.kmax,
+        plan.storage_bytes() as f64 / 1024.0,
+        (k * n * 4) as f64 / 1024.0
+    );
+
+    // --- 3. fused-CTO GEMM on the CPU vs the mask oracle ------------------
+    let sw = Stopwatch::start();
+    let c_tw = tw_matmul(&a, &plan);
+    let t_tw = sw.micros();
+    let sw = Stopwatch::start();
+    let c_ref = matmul(&a, &tw.mask().apply(&w));
+    let t_dense = sw.micros();
+    println!(
+        "CPU fused-CTO GEMM: {:.0}us vs dense-masked {:.0}us, max|diff|={:.2e}",
+        t_tw, t_dense, c_tw.max_abs_diff(&c_ref)
+    );
+    assert!(c_tw.max_abs_diff(&c_ref) < 1e-3);
+
+    // --- 4. same computation via the AOT PJRT artifact --------------------
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("meta.json").exists() {
+        let engine = Engine::load_only(dir, &["gemm_tw", "gemm_dense"])?;
+        let model = engine.model("gemm_tw")?;
+        let act: Vec<f32> = {
+            let rows = model.activation_shape[0];
+            let cols = model.activation_shape[1];
+            let mut r2 = Rng::new(7);
+            (0..rows * cols).map(|_| r2.normal_f32()).collect()
+        };
+        let sw = Stopwatch::start();
+        let out = engine.run(model, &act)?;
+        println!(
+            "PJRT gemm_tw artifact: output {:?} in {:.0}us (Pallas TW kernel lowered via XLA)",
+            model.output_shape,
+            sw.micros()
+        );
+        assert!(out.iter().all(|v| v.is_finite()));
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the PJRT leg)");
+    }
+
+    // --- 5. what would an A100 do? ----------------------------------------
+    let specs = gpusim::a100();
+    let cal = Calibration::default();
+    let shape = GemmShape::new(m, k, n);
+    let dense = gpusim::dense_plan(shape, Pipe::TensorFp16, &specs, &cal).latency(&specs);
+    let tiles = gpusim::tw_tiles_from_plan(&plan);
+    let twl = gpusim::tw_latency(shape, &tiles, g, Pipe::TensorFp16, TwStrategy::FusedCto, &specs, &cal);
+    println!(
+        "gpusim A100 estimate: dense-TC {:.1}us, TW-{g} {:.1}us -> {:.2}x speedup",
+        dense * 1e6,
+        twl * 1e6,
+        dense / twl
+    );
+    Ok(())
+}

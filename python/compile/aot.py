@@ -1,0 +1,256 @@
+"""AOT compile path: lower every model variant + standalone GEMM kernel to
+HLO **text** and emit the runtime artifact set.
+
+Interchange is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``artifacts/``):
+  model_{dense,tw,tvw}.hlo.txt   encoder-stack executables
+  gemm_{dense,tw,vw24,tvw}.hlo.txt  single-GEMM executables (quickstart +
+                                    kernel microbenches)
+  bundle.bin / bundle.json       every runtime argument tensor (weights,
+                                 condensed tiles, CTO tables, 2:4 payloads)
+  meta.json                      executable index: HLO file, activation
+                                 spec, argument tensor names (bundle keys),
+                                 output shape
+
+Run once via ``make artifacts``; Python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import bundle, golden, model, plans, pruning
+from .kernels import dense_matmul, tw_matmul, tvw_matmul, vw24_matmul
+from .kernels.tew_gemm import encode_remedy_coo, tew_matmul
+
+# Standalone-GEMM artifact configuration (kept small so `make artifacts`
+# stays fast; the gpusim benches sweep the paper's 4096^3 shape analytically).
+GEMM_M, GEMM_K, GEMM_N = 256, 512, 512
+GEMM_G = 64
+GEMM_SPARSITY = 0.75
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the crate-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(arr: np.ndarray) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def lower_model_variant(
+    spec: model.ModelSpec,
+    variant: str,
+    params: dict[str, np.ndarray],
+    batch: int,
+    seq: int,
+    writer: bundle.BundleWriter,
+) -> dict:
+    """Prune (if sparse), lower to HLO text, register argument tensors."""
+    pruned = model.prune_params(params, spec, variant)
+    args = model.flatten_args(params, spec, variant, pruned)
+    apply_fn = model.make_apply(spec, variant)
+    x_spec = jax.ShapeDtypeStruct((batch, seq, spec.d_model), jnp.float32)
+    lowered = jax.jit(apply_fn).lower(x_spec, *[_spec_of(a) for _, a in args])
+    text = to_hlo_text(lowered)
+    arg_names = []
+    for name, arr in args:
+        key = f"model_{variant}/{name}"
+        writer.add(key, arr)
+        arg_names.append(key)
+    return {
+        "hlo": f"model_{variant}.hlo.txt",
+        "kind": "model",
+        "activation": {"shape": [batch, seq, spec.d_model], "dtype": "f32"},
+        "args": arg_names,
+        "output_shape": [batch, spec.n_classes],
+        "hlo_text": text,
+    }
+
+
+def lower_gemms(writer: bundle.BundleWriter, seed: int = 7) -> dict[str, dict]:
+    """Standalone single-GEMM executables for all four kernels."""
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((GEMM_K, GEMM_N)) / np.sqrt(GEMM_K)).astype(np.float32)
+    a_spec = jax.ShapeDtypeStruct((GEMM_M, GEMM_K), jnp.float32)
+    out: dict[str, dict] = {}
+
+    def entry(name, fn, arg_arrays, extra_static=()):
+        arg_names = []
+        for aname, arr in arg_arrays:
+            key = f"{name}/{aname}"
+            writer.add(key, arr)
+            arg_names.append(key)
+        lowered = jax.jit(fn).lower(a_spec, *[_spec_of(arr) for _, arr in arg_arrays])
+        out[name] = {
+            "hlo": f"{name}.hlo.txt",
+            "kind": "gemm",
+            "activation": {"shape": [GEMM_M, GEMM_K], "dtype": "f32"},
+            "args": arg_names,
+            "output_shape": [GEMM_M, GEMM_N],
+            "hlo_text": to_hlo_text(lowered),
+        }
+
+    # dense
+    entry("gemm_dense", lambda x, b: dense_matmul(x, b), [("w", w)])
+
+    # TW
+    tw = pruning.prune_tw(w, GEMM_SPARSITY, g=GEMM_G)
+    p = plans.encode_tw(w, tw)
+    entry(
+        "gemm_tw",
+        lambda x, bc, ri, ci: tw_matmul(x, bc, ri, ci, n=GEMM_N),
+        [("b_cond", p.b_cond), ("row_idx", p.row_idx), ("col_idx", p.col_idx)],
+    )
+
+    # VW 2:4
+    mask24 = pruning.prune_vw(w, 0.5, 4)
+    vp = plans.encode_vw24(w, mask24)
+    entry(
+        "gemm_vw24",
+        lambda x, bv, bs: vw24_matmul(x, bv, bs),
+        [("b_vals", vp.b_vals), ("b_sel", vp.b_sel)],
+    )
+
+    # TEW: TW at s+delta plus the padded COO remainder
+    delta = 0.02
+    tws, remedy = pruning.prune_tew(w, GEMM_SPARSITY, delta, g=GEMM_G)
+    pt = plans.encode_tw(w, tws)
+    nnz_pad = int(np.ceil(remedy.sum() / 256) * 256)
+    r_vals, r_rows, r_cols = encode_remedy_coo(w, remedy, nnz_pad)
+    entry(
+        "gemm_tew",
+        lambda x, bc, ri, ci, rv, rr, rc: tew_matmul(x, bc, ri, ci, rv, rr, rc, n=GEMM_N),
+        [
+            ("b_cond", pt.b_cond), ("row_idx", pt.row_idx), ("col_idx", pt.col_idx),
+            ("r_vals", r_vals), ("r_rows", r_rows), ("r_cols", r_cols),
+        ],
+    )
+
+    # TVW
+    tw2, mask = pruning.prune_tvw(w, GEMM_SPARSITY, g=GEMM_G)
+    q = plans.encode_tvw(w, tw2, mask)
+    entry(
+        "gemm_tvw",
+        lambda x, bv, bs, ri, ci: tvw_matmul(x, bv, bs, ri, ci, n=GEMM_N),
+        [
+            ("b_vals", q.b_vals),
+            ("b_sel", q.b_sel),
+            ("row_idx", q.row_idx),
+            ("col_idx", q.col_idx),
+        ],
+    )
+    return out
+
+
+def lower_train(
+    spec: model.ModelSpec,
+    params: dict,
+    batch: int,
+    seq: int,
+    writer: bundle.BundleWriter,
+    lr: float = 0.05,
+) -> dict:
+    """Lower one SGD train step to HLO text; initial parameters go into the
+    bundle so the Rust fine-tuning driver can seed its state."""
+    args = model.flatten_args(params, spec, "dense", {})
+    step = model.make_train_step(spec, lr=lr)
+    x_spec = jax.ShapeDtypeStruct((batch, seq, spec.d_model), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(step).lower(x_spec, y_spec, *[_spec_of(a) for _, a in args])
+    arg_names = []
+    for name, arr in args:
+        key = f"train_dense/{name}"
+        writer.add(key, arr)
+        arg_names.append(key)
+    return {
+        "hlo": "train_dense.hlo.txt",
+        "kind": "train",
+        "inputs": [
+            {"shape": [batch, seq, spec.d_model], "dtype": "f32"},
+            {"shape": [batch], "dtype": "i32"},
+        ],
+        "activation": {"shape": [batch, seq, spec.d_model], "dtype": "f32"},
+        "args": arg_names,
+        "output_shape": [],
+        "output_shapes": [[]] + [list(arr.shape) for _, arr in args],
+        "hlo_text": to_hlo_text(lowered),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--sparsity", type=float, default=0.75)
+    ap.add_argument("--granularity", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    spec = model.ModelSpec(
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        d_ff=args.d_ff,
+        n_layers=args.n_layers,
+        sparsity=args.sparsity,
+        granularity=args.granularity,
+    )
+    params = model.init_params(args.seed, spec)
+
+    writer = bundle.BundleWriter()
+    executables: dict[str, dict] = {}
+    for variant in ("dense", "tw", "tvw"):
+        print(f"[aot] lowering model_{variant} ...")
+        executables[f"model_{variant}"] = lower_model_variant(
+            spec, variant, params, args.batch, args.seq, writer
+        )
+    print("[aot] lowering train step ...")
+    executables["train_dense"] = lower_train(spec, params, args.batch, args.seq, writer)
+    print("[aot] lowering standalone GEMMs ...")
+    executables.update(lower_gemms(writer))
+
+    for name, entry in executables.items():
+        text = entry.pop("hlo_text")
+        (out_dir / entry["hlo"]).write_text(text)
+        print(f"[aot]   {entry['hlo']}: {len(text)} chars")
+
+    writer.write(out_dir)
+    golden.write(out_dir)
+    print("[aot] wrote golden.json cross-language fixture")
+    meta = {
+        "spec": dataclasses.asdict(spec),
+        "batch": args.batch,
+        "seq": args.seq,
+        "executables": executables,
+    }
+    (out_dir / "meta.json").write_text(json.dumps(meta, indent=1))
+    print(f"[aot] wrote {out_dir}/meta.json ({len(executables)} executables)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Tensor-bundle interchange format between the Python compile path and the
+Rust runtime.
+
+``bundle.bin`` is a flat little-endian blob; ``bundle.json`` is an index of
+named tensors (name, dtype, shape, byte offset, byte length).  The Rust
+side (`runtime::bundle`) mmap-reads the blob and materialises PJRT literals
+for the executable arguments listed in ``meta.json`` — no Python at
+runtime, no pickle, no framework-specific container.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+__all__ = ["BundleWriter", "DTYPES"]
+
+DTYPES = {"float32": "f32", "int32": "i32"}
+
+
+class BundleWriter:
+    """Accumulates named tensors and writes blob + index."""
+
+    def __init__(self) -> None:
+        self._entries: list[dict] = []
+        self._chunks: list[bytes] = []
+        self._offset = 0
+        self._names: set[str] = set()
+
+    def add(self, name: str, array: np.ndarray) -> str:
+        if name in self._names:
+            raise ValueError(f"duplicate tensor name {name!r}")
+        arr = np.ascontiguousarray(array)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        if arr.dtype == np.int64:
+            arr = arr.astype(np.int32)
+        if str(arr.dtype) not in DTYPES:
+            raise TypeError(f"unsupported dtype {arr.dtype} for {name}")
+        raw = arr.tobytes()  # C-order little-endian on all supported hosts
+        self._entries.append(
+            {
+                "name": name,
+                "dtype": DTYPES[str(arr.dtype)],
+                "shape": list(arr.shape),
+                "offset": self._offset,
+                "nbytes": len(raw),
+            }
+        )
+        self._chunks.append(raw)
+        self._offset += len(raw)
+        self._names.add(name)
+        return name
+
+    def write(self, out_dir: pathlib.Path, stem: str = "bundle") -> None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{stem}.bin").write_bytes(b"".join(self._chunks))
+        index = {"blob": f"{stem}.bin", "tensors": self._entries}
+        (out_dir / f"{stem}.json").write_text(json.dumps(index, indent=1))

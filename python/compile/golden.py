@@ -1,0 +1,59 @@
+"""Golden cross-language fixtures: prune small matrices with the Python
+implementation and dump (weights, masks, plans) as JSON so the Rust twin
+(`rust/tests/golden_parity.rs`) can verify bit-identical pattern decisions.
+
+Invoked by aot.py as part of ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from . import plans, pruning
+
+
+def _mask_to_bits(mask: np.ndarray) -> list[int]:
+    return [int(x) for x in mask.reshape(-1)]
+
+
+def build_fixture(seed: int = 314) -> dict:
+    rng = np.random.default_rng(seed)
+    k, n, g = 32, 24, 8
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    fixture: dict = {
+        "k": k,
+        "n": n,
+        "g": g,
+        "w": [float(x) for x in w.reshape(-1)],
+        "cases": {},
+    }
+
+    fixture["cases"]["ew_50"] = _mask_to_bits(pruning.prune_ew(w, 0.5))
+    fixture["cases"]["vw4_50"] = _mask_to_bits(pruning.prune_vw(w, 0.5, 4))
+    fixture["cases"]["bw8_50"] = _mask_to_bits(pruning.prune_bw(w, 0.5, 8))
+
+    tw = pruning.prune_tw(w, 0.6, g=g)
+    fixture["cases"]["tw_60"] = _mask_to_bits(tw.mask())
+    plan = plans.encode_tw(w, tw)
+    fixture["tw_plan"] = {
+        "tiles": plan.num_tiles,
+        "kmax": plan.kmax,
+        "row_len": [int(x) for x in plan.row_len],
+        "col_idx": [int(x) for x in plan.col_idx.reshape(-1)],
+        "row_idx": [int(x) for x in plan.row_idx.reshape(-1)],
+    }
+
+    tws, remedy = pruning.prune_tew(w, 0.6, 0.05, g=g)
+    fixture["cases"]["tew_60_5"] = _mask_to_bits(tws.mask() | remedy)
+
+    twv, tvmask = pruning.prune_tvw(w, 0.75, g=g)
+    fixture["cases"]["tvw_75"] = _mask_to_bits(tvmask)
+    return fixture
+
+
+def write(out_dir: pathlib.Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "golden.json").write_text(json.dumps(build_fixture(), indent=1))

@@ -1,0 +1,14 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from .dense_gemm import dense_matmul
+from .tw_gemm import tw_matmul, tw_matmul_tiles
+from .vw_gemm import vw24_matmul
+from .tvw_gemm import tvw_matmul, tvw_matmul_tiles
+
+__all__ = [
+    "dense_matmul",
+    "tw_matmul",
+    "tw_matmul_tiles",
+    "vw24_matmul",
+    "tvw_matmul",
+    "tvw_matmul_tiles",
+]

@@ -1,0 +1,78 @@
+"""Layer-1 Pallas kernel: tiled dense GEMM baseline.
+
+The classic three-level schedule the paper's §V builds on: the grid walks
+output tiles (Mtile x Ntile) with an inner reduction walk over Ktile; each
+program stages an A block and a B block into VMEM (the TPU analogue of the
+threadblock's shared-memory tile), accumulates partial sums in the output
+block, and the MXU executes the per-block matmul.
+
+Hardware adaptation (DESIGN.md §1): the paper's CUTLASS threadblock /
+warp / fragment hierarchy maps to BlockSpec grid tiles / VMEM blocks /
+MXU-internal accumulation.  ``interpret=True`` always — the CPU PJRT
+client cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dense_matmul", "DEFAULT_BLOCK"]
+
+# Default (Mtile, Ntile, Ktile).  128x128 output tiles mirror the paper's
+# TW-128 configuration; Ktile=128 keeps the VMEM footprint of the two
+# staged blocks at 2*128*128*4B = 128 KiB, inside a TPU core's ~16 MiB VMEM
+# with ample room for double buffering.
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output block; grid axis 2 walks the K reduction."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _pad_to(x, mult0, mult1):
+    m, n = x.shape
+    pm, pn = (-m) % mult0, (-n) % mult1
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dense_matmul(a, b, *, block: tuple[int, int, int] = DEFAULT_BLOCK):
+    """C = A @ B with a tiled Pallas kernel.
+
+    Shapes need not be multiples of the block — inputs are zero-padded and
+    the result cropped, mirroring CUTLASS's predicated edge tiles.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"reduction mismatch {k} vs {k2}"
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,105 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+Each ``ref_*`` function computes the same mathematical result as its
+Pallas twin using only straight-line jnp ops — no tiling, no CTO, no
+compression tricks — so the pytest suite can ``assert_allclose`` the two.
+The TW/TVW oracles additionally exist in a *mask* form (multiply by the
+pruning mask and run a dense matmul), which cross-checks the CTO
+encode/condense path itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ref_dense",
+    "ref_masked",
+    "ref_tw_condensed",
+    "ref_vw24",
+    "ref_tvw_condensed",
+    "ref_tew",
+    "decode_vw24",
+    "scatter_tiles",
+]
+
+
+def ref_dense(a, b):
+    """C = A @ B, the dense baseline."""
+    return jnp.matmul(a, b)
+
+
+def ref_masked(a, b, mask):
+    """C = A @ (B * mask): any pattern expressed as an element keep-mask."""
+    return jnp.matmul(a, b * mask.astype(b.dtype))
+
+
+def scatter_tiles(cc, col_idx, m, n):
+    """Assemble per-tile outputs ``cc (T, M, G)`` into C (M, N) using the
+    CTO column table; sentinel indices (== N) are dropped."""
+    t, _, g = cc.shape
+    flat_cols = col_idx.reshape(-1)                      # (T*G,)
+    cc_flat = jnp.transpose(cc, (1, 0, 2)).reshape(m, t * g)
+    c = jnp.zeros((m, n), dtype=cc.dtype)
+    return c.at[:, flat_cols].set(cc_flat, mode="drop")
+
+
+def ref_tw_condensed(a, b_cond, row_idx, col_idx, n):
+    """TW GEMM straight from the CTO plan, without Pallas.
+
+    For every tile t: gather A columns by ``row_idx[t]`` (padded rows point
+    at column 0 but multiply a zero row of ``b_cond``), matmul against the
+    condensed tile, scatter the G outputs to their original columns.
+    """
+    m = a.shape[0]
+    ag = a[:, row_idx]                    # (M, T, Kmax) gather
+    cc = jnp.einsum("mtk,tkg->tmg", ag, b_cond)
+    return scatter_tiles(cc, col_idx, m, n)
+
+
+def decode_vw24(b_vals, b_sel, k):
+    """Decompress 2:4 storage (K/2, N) values + in-group positions back to
+    a dense (K, N) matrix."""
+    khalf, n = b_vals.shape
+    rows = (jnp.arange(khalf) // 2) * 4
+    rows = rows[:, None] + b_sel                          # (K/2, N)
+    cols = jnp.broadcast_to(jnp.arange(n)[None, :], (khalf, n))
+    dense = jnp.zeros((k, n), dtype=b_vals.dtype)
+    return dense.at[rows, cols].set(b_vals, mode="drop")
+
+
+def ref_vw24(a, b_vals, b_sel):
+    """2:4 sparse GEMM via explicit decompression."""
+    k = a.shape[1]
+    return jnp.matmul(a, decode_vw24(b_vals, b_sel, k))
+
+
+def ref_tvw_condensed(a, b_vals, b_sel, row_idx, col_idx, n):
+    """TVW GEMM from the fused plan: per-tile 2:4 decode + CTO gather/scatter."""
+    t, khalf, g = b_vals.shape
+    kmax = khalf * 2
+
+    def decode_tile(vals, sel):
+        rows = (jnp.arange(khalf) // 2) * 4
+        rows = rows[:, None] + sel
+        cols = jnp.broadcast_to(jnp.arange(g)[None, :], (khalf, g))
+        dense = jnp.zeros((kmax, g), dtype=vals.dtype)
+        return dense.at[rows, cols].set(vals, mode="drop")
+
+    b_cond = jax.vmap(decode_tile)(b_vals, b_sel)         # (T, Kmax, G)
+    return ref_tw_condensed(a, b_cond, row_idx, col_idx, n)
+
+
+def ref_tew(a, b_cond, row_idx, col_idx, n, remedy_vals, remedy_rows, remedy_cols):
+    """TEW = TW condensed GEMM + sparse (COO) remainder of remedied elements.
+
+    The paper executes the two parts separately (TW on the tensor core, the
+    EW remainder as CSC on CUDA cores) and sums — the linearity trick of
+    §III-A.  ``remedy_*`` are COO triplets; pad with column index >= N to
+    have entries dropped.
+    """
+    c = ref_tw_condensed(a, b_cond, row_idx, col_idx, n)
+    # C += outer-product accumulation: A[:, r] * v into column c per nnz
+    contrib = a[:, remedy_rows] * remedy_vals[None, :]    # (M, nnz)
+    return c.at[:, remedy_cols].add(contrib, mode="drop")

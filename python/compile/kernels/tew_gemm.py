@@ -1,0 +1,54 @@
+"""Layer-1 Pallas composition: tile-element-wise (TEW) GEMM.
+
+TEW executes as two linear parts (paper §III-A): the TW-condensed GEMM on
+the tensor core plus the delta-EW remainder as a sparse (COO) update on
+the CUDA cores, summed by linearity.  Here both parts lower into one XLA
+executable: the fused-CTO Pallas kernel for the TW part, and a padded COO
+scatter-add for the remainder (padding entries carry column index >= N
+and are dropped by the scatter).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .tw_gemm import tw_matmul
+
+__all__ = ["tew_matmul", "encode_remedy_coo"]
+
+
+def encode_remedy_coo(w, remedy_mask, nnz_pad: int):
+    """Encode the remedy elements as fixed-size COO arrays.
+
+    Returns (vals, rows, cols) each of length `nnz_pad`; unused slots have
+    col == N (the drop sentinel).  Raises if the remedy has more nonzeros
+    than `nnz_pad`.
+    """
+    import numpy as np
+
+    rr, cc = np.nonzero(remedy_mask)
+    if len(rr) > nnz_pad:
+        raise ValueError(f"remedy nnz {len(rr)} exceeds pad {nnz_pad}")
+    n = w.shape[1]
+    vals = np.zeros(nnz_pad, dtype=np.float32)
+    rows = np.zeros(nnz_pad, dtype=np.int32)
+    cols = np.full(nnz_pad, n, dtype=np.int32)
+    vals[: len(rr)] = w[rr, cc]
+    rows[: len(rr)] = rr
+    cols[: len(rr)] = cc
+    return vals, rows, cols
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_m"))
+def tew_matmul(a, b_cond, row_idx, col_idx, r_vals, r_rows, r_cols, *, n: int, block_m: int = 128):
+    """C = A @ (B_tw + B_remedy): fused-CTO TW kernel + COO remainder.
+
+    ``r_vals/r_rows/r_cols`` are the padded COO triplets from
+    :func:`encode_remedy_coo`.
+    """
+    c = tw_matmul(a, b_cond, row_idx, col_idx, n=n, block_m=block_m)
+    contrib = a[:, r_rows] * r_vals[None, :]      # (M, nnz_pad)
+    return c.at[:, r_cols].add(contrib, mode="drop")

@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: fused tile-vector-wise (TVW) GEMM.
+
+TVW composes the paper's two orthogonal levels in one kernel (§III-A):
+
+  * TW operates at the *global memory* level — condensed tiles, CTO row
+    gather of A, CTO column scatter of C (as in ``tw_gemm``);
+  * VW (2:4) operates at the *register* level — inside each condensed tile
+    B is stored as (Kmax/2, G) values + positions, expanded right before
+    the MXU matmul (as in ``vw_gemm``).
+
+grid = (T, M/Tm); program (t, i):
+  1. gather A columns via CTO_k,
+  2. metadata-expand the tile's 2:4 payload,
+  3. MXU matmul → (Tm, G) block,
+then the surrounding scatter places columns via CTO_n.  Numerics are
+checked against ``ref.ref_tvw_condensed`` and the mask oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import scatter_tiles
+
+__all__ = ["tvw_matmul", "tvw_matmul_tiles"]
+
+
+def _tvw_kernel(a_ref, idx_ref, v_ref, s_ref, o_ref):
+    """a_ref (Tm, K); idx_ref (1, Kmax); v_ref/s_ref (1, Kmax/2, G);
+    o_ref (1, Tm, G)."""
+    a = a_ref[...]
+    idx = idx_ref[0, :]
+    vals = v_ref[0]                                     # (Kmax/2, G)
+    sel = s_ref[0]
+    khalf, g = vals.shape
+    kmax = khalf * 2
+    # register-level 2:4 expansion of the condensed tile
+    rows = (jax.lax.iota(jnp.int32, khalf)[:, None] // 2) * 4 + sel
+    cols = jnp.broadcast_to(jax.lax.iota(jnp.int32, g)[None, :], (khalf, g))
+    b = jnp.zeros((kmax, g), dtype=vals.dtype).at[rows, cols].set(vals, mode="drop")
+    # global-memory-level CTO gather of A
+    a_g = jnp.take(a, idx, axis=1)                      # (Tm, Kmax)
+    o_ref[0] = jnp.dot(a_g, b, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def tvw_matmul_tiles(a, b_vals, b_sel, row_idx, *, block_m: int = 128):
+    """Fused TVW kernel returning per-tile outputs ``(T, M, G)``."""
+    m, k = a.shape
+    t, khalf, g = b_vals.shape
+    kmax = khalf * 2
+    assert row_idx.shape == (t, kmax)
+    bm = min(block_m, m)
+    pad_m = (-m) % bm
+    ap = jnp.pad(a, ((0, pad_m), (0, 0))) if pad_m else a
+    mp = ap.shape[0]
+    grid = (t, mp // bm)
+    cc = pl.pallas_call(
+        _tvw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda tt, i: (i, 0)),
+            pl.BlockSpec((1, kmax), lambda tt, i: (tt, 0)),
+            pl.BlockSpec((1, khalf, g), lambda tt, i: (tt, 0, 0)),
+            pl.BlockSpec((1, khalf, g), lambda tt, i: (tt, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, g), lambda tt, i: (tt, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, mp, g), a.dtype),
+        interpret=True,
+    )(ap, row_idx, b_vals, b_sel)
+    return cc[:, :m, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_m"))
+def tvw_matmul(a, b_vals, b_sel, row_idx, col_idx, *, n: int, block_m: int = 128):
+    """Full TVW GEMM: fused kernel + CTO column scatter → C (M, N)."""
+    cc = tvw_matmul_tiles(a, b_vals, b_sel, row_idx, block_m=block_m)
+    return scatter_tiles(cc, col_idx, a.shape[0], n)

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: fused tile-wise (TW) GEMM with CTO (paper §V).
+
+One kernel covers *all* condensed tiles — the paper's "Tile Fusion and
+Compressed Tile Offset" optimization (Fig. 4 step 5/6, Listing 1) — instead
+of one kernel launch per tile:
+
+  grid = (T, M/Tm): program (t, i) computes the (Tm x G) output block of
+  condensed tile t for row block i.
+    1. load the A row-block (Tm x K) staged by BlockSpec,
+    2. gather the Kmax needed columns with the CTO row table (``CTO_k`` in
+       Listing 1) — padding entries index column 0 but multiply a zeroed
+       row of the condensed tile, so they contribute nothing,
+    3. MXU matmul against the condensed tile (Kmax x G),
+  and the surrounding jnp scatter places each tile's G columns at their
+  original positions via the CTO column table (``CTO_n``), dropping the
+  sentinel (==N) padding columns.  The gather/compute and the scatter lower
+  into one fused XLA executable — the single-kernel execution of §V.
+
+The uncoalesced-access analysis of Fig. 4 applies to the *GPU* data path;
+here the layout cost shows up in `gpusim` (Rust), while this kernel gets
+the numerics bit-exact against ``ref.ref_tw_condensed`` / ``ref_masked``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import scatter_tiles
+
+__all__ = ["tw_matmul", "tw_matmul_tiles"]
+
+
+def _tw_kernel(a_ref, idx_ref, b_ref, o_ref):
+    """One (Tm, G) output block of one condensed tile.
+
+    a_ref   (Tm, K)    A row block (full reduction width)
+    idx_ref (1, Kmax)  CTO row offsets for this tile
+    b_ref   (1, Kmax, G) condensed tile values
+    o_ref   (1, Tm, G)
+    """
+    a = a_ref[...]
+    idx = idx_ref[0, :]
+    b = b_ref[0]
+    a_g = jnp.take(a, idx, axis=1)        # (Tm, Kmax) CTO gather
+    o_ref[0] = jnp.dot(a_g, b, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def tw_matmul_tiles(a, b_cond, row_idx, *, block_m: int = 128):
+    """Run the fused TW kernel and return per-tile outputs ``(T, M, G)``.
+
+    ``a`` (M, K); ``b_cond`` (T, Kmax, G); ``row_idx`` (T, Kmax) int32.
+    M is zero-padded to a multiple of ``block_m``.
+    """
+    m, k = a.shape
+    t, kmax, g = b_cond.shape
+    bm = min(block_m, m)
+    pad_m = (-m) % bm
+    ap = jnp.pad(a, ((0, pad_m), (0, 0))) if pad_m else a
+    mp = ap.shape[0]
+    grid = (t, mp // bm)
+    cc = pl.pallas_call(
+        _tw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda tt, i: (i, 0)),
+            pl.BlockSpec((1, kmax), lambda tt, i: (tt, 0)),
+            pl.BlockSpec((1, kmax, g), lambda tt, i: (tt, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, g), lambda tt, i: (tt, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, mp, g), a.dtype),
+        interpret=True,
+    )(ap, row_idx, b_cond)
+    return cc[:, :m, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_m"))
+def tw_matmul(a, b_cond, row_idx, col_idx, *, n: int, block_m: int = 128):
+    """Full TW GEMM: fused-CTO Pallas kernel + column scatter.
+
+    Returns C (M, N) == A @ B_tw where B_tw is the TW-pruned weight whose
+    condensed representation is ``(b_cond, row_idx, col_idx)``.
+    """
+    cc = tw_matmul_tiles(a, b_cond, row_idx, block_m=block_m)
+    return scatter_tiles(cc, col_idx, a.shape[0], n)

@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: 2:4 vector-wise sparse GEMM (sparse tensor core).
+
+The Ampere sparse tensor core stores B compressed along K — two values out
+of every four plus a 2-bit position word — and expands them against the
+*selected* A operands inside the MAC array (paper Fig. 1).  On the CPU/TPU
+substrate we reproduce the storage format exactly (``b_vals`` (K/2, N) +
+``b_sel`` (K/2, N) positions) and perform the metadata-driven expansion in
+VMEM before an MXU matmul; the 2x throughput of the real unit is modeled
+by `gpusim` (Rust), while this kernel supplies bit-exact numerics against
+``ref.ref_vw24``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["vw24_matmul"]
+
+
+def _vw_kernel(a_ref, v_ref, s_ref, o_ref):
+    """One (bm, bn) output block; full-K reduction.
+
+    a_ref (bm, K); v_ref (K/2, bn); s_ref (K/2, bn); o_ref (bm, bn).
+    """
+    a = a_ref[...]
+    vals = v_ref[...]
+    sel = s_ref[...]
+    khalf, bn = vals.shape
+    k = a.shape[1]
+    # metadata expansion: value j of compressed row i lives at dense row
+    # (i // 2) * 4 + sel[i, j]
+    rows = (jax.lax.iota(jnp.int32, khalf)[:, None] // 2) * 4 + sel
+    cols = jnp.broadcast_to(jax.lax.iota(jnp.int32, bn)[None, :], (khalf, bn))
+    dense = jnp.zeros((k, bn), dtype=vals.dtype).at[rows, cols].set(vals, mode="drop")
+    o_ref[...] = jnp.dot(a, dense, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vw24_matmul(a, b_vals, b_sel, *, block: tuple[int, int] = (128, 128)):
+    """C = A @ B where B is 2:4-compressed along K.
+
+    ``a`` (M, K) with K % 4 == 0; ``b_vals``/``b_sel`` (K/2, N).
+    """
+    m, k = a.shape
+    khalf, n = b_vals.shape
+    assert khalf * 2 == k, f"compressed K mismatch: {khalf}*2 != {k}"
+    bm, bn = min(block[0], m), min(block[1], n)
+    pm, pn = (-m) % bm, (-n) % bn
+    ap = jnp.pad(a, ((0, pm), (0, 0))) if pm else a
+    vp = jnp.pad(b_vals, ((0, 0), (0, pn))) if pn else b_vals
+    sp = jnp.pad(b_sel, ((0, 0), (0, pn))) if pn else b_sel
+    mp, np_ = ap.shape[0], vp.shape[1]
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _vw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((khalf, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((khalf, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, vp, sp)
+    return out[:m, :n]

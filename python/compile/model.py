@@ -1,0 +1,282 @@
+"""Layer-2 JAX model: a BERT-style transformer encoder whose GEMMs route
+through the Layer-1 Pallas kernels.
+
+The paper evaluates TW/TVW on BERT by replacing every weight GEMM with the
+pattern's sparse GEMM; we do the same on a configurable encoder stack
+(MHA + FFN + post-LN, mean-pool + classifier head).  Three weight variants
+exist per model:
+
+  dense  — all four per-layer GEMMs through :func:`kernels.dense_matmul`
+  tw     — the four weight matrices TW-pruned (Alg. 3) and executed with
+           the fused CTO kernel :func:`kernels.tw_matmul`
+  tvw    — TVW-pruned and executed with :func:`kernels.tvw_matmul`
+
+All sparse-plan arrays (condensed values, CTO row/col tables, 2:4 payload)
+are *runtime arguments*, not baked constants, so the Rust coordinator feeds
+them from the artifact bundle and the HLO stays small.  ``aot.py`` lowers
+``make_apply(...)`` for each variant to HLO text.
+
+This module is build-time only: it is never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import plans, pruning
+from .kernels import dense_matmul, tw_matmul, tvw_matmul
+
+__all__ = ["ModelSpec", "MATMUL_DEFS", "init_params", "prune_params", "make_apply", "flatten_args"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Encoder-stack hyper-parameters (BERT-mini scale by default)."""
+
+    d_model: int = 256
+    n_heads: int = 4
+    d_ff: int = 1024
+    n_layers: int = 2
+    n_classes: int = 8
+    # pruning hyper-parameters for the sparse variants
+    sparsity: float = 0.75
+    granularity: int = 64
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def matmul_defs(spec: ModelSpec) -> list[tuple[str, int, int]]:
+    """The prunable GEMMs per layer: (name, K, N) with B of shape (K, N)."""
+    d, f = spec.d_model, spec.d_ff
+    defs = []
+    for layer in range(spec.n_layers):
+        defs += [
+            (f"layer{layer}/wqkv", d, 3 * d),
+            (f"layer{layer}/wo", d, d),
+            (f"layer{layer}/w1", d, f),
+            (f"layer{layer}/w2", f, d),
+        ]
+    return defs
+
+
+MATMUL_DEFS = matmul_defs  # legacy alias
+
+
+def init_params(seed: int, spec: ModelSpec) -> dict[str, np.ndarray]:
+    """Xavier-ish initialisation of every parameter tensor (numpy, f32)."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for name, k, n in matmul_defs(spec):
+        params[name] = (rng.standard_normal((k, n)) / np.sqrt(k)).astype(np.float32)
+    for layer in range(spec.n_layers):
+        for ln in ("ln1", "ln2"):
+            params[f"layer{layer}/{ln}/scale"] = np.ones(spec.d_model, dtype=np.float32)
+            params[f"layer{layer}/{ln}/bias"] = np.zeros(spec.d_model, dtype=np.float32)
+    params["head"] = (
+        rng.standard_normal((spec.d_model, spec.n_classes)) / np.sqrt(spec.d_model)
+    ).astype(np.float32)
+    return params
+
+
+def prune_params(
+    params: dict[str, np.ndarray], spec: ModelSpec, variant: str
+) -> dict[str, object]:
+    """Prune every prunable GEMM weight to ``variant`` and encode its plan.
+
+    Returns a dict mapping matmul name -> TwPlan | TvwPlan.  Dense variant
+    returns an empty dict.
+    """
+    out: dict[str, object] = {}
+    if variant == "dense":
+        return out
+    for name, _, _ in matmul_defs(spec):
+        w = params[name]
+        if variant == "tw":
+            tw = pruning.prune_tw(w, spec.sparsity, g=spec.granularity)
+            out[name] = plans.encode_tw(w, tw)
+        elif variant == "tvw":
+            tw, mask = pruning.prune_tvw(w, max(spec.sparsity, 0.5), g=spec.granularity)
+            out[name] = plans.encode_tvw(w, tw, mask)
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Argument flattening: a deterministic (name, tensor) order shared with the
+# Rust side via meta.json.
+# ---------------------------------------------------------------------------
+
+def flatten_args(
+    params: dict[str, np.ndarray], spec: ModelSpec, variant: str, pruned: dict[str, object]
+) -> list[tuple[str, np.ndarray]]:
+    """Runtime-argument tensors, in lowering order (activations excluded)."""
+    args: list[tuple[str, np.ndarray]] = []
+    for name, _, _ in matmul_defs(spec):
+        if variant == "dense":
+            args.append((name, params[name]))
+        elif variant == "tw":
+            p: plans.TwPlan = pruned[name]  # type: ignore[assignment]
+            args += [
+                (f"{name}/b_cond", p.b_cond),
+                (f"{name}/row_idx", p.row_idx),
+                (f"{name}/col_idx", p.col_idx),
+            ]
+        else:  # tvw
+            q: plans.TvwPlan = pruned[name]  # type: ignore[assignment]
+            args += [
+                (f"{name}/b_vals", q.b_vals),
+                (f"{name}/b_sel", q.b_sel),
+                (f"{name}/row_idx", q.row_idx),
+                (f"{name}/col_idx", q.col_idx),
+            ]
+    for layer in range(spec.n_layers):
+        for ln in ("ln1", "ln2"):
+            args.append((f"layer{layer}/{ln}/scale", params[f"layer{layer}/{ln}/scale"]))
+            args.append((f"layer{layer}/{ln}/bias", params[f"layer{layer}/{ln}/bias"]))
+    args.append(("head", params["head"]))
+    return args
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def make_apply(spec: ModelSpec, variant: str, block_m: int = 128):
+    """Build ``apply(x, *arg_tensors) -> logits`` for one weight variant.
+
+    ``x`` is (B, S, D) activations; ``arg_tensors`` follow the order of
+    :func:`flatten_args`.  The function is pure and jittable; ``aot.py``
+    lowers it to HLO text.
+    """
+    n_per_matmul = {"dense": 1, "tw": 3, "tvw": 4}[variant]
+    defs = matmul_defs(spec)
+
+    def matmul(x2d, args, mm_index):
+        base = mm_index * n_per_matmul
+        _, _, n = defs[mm_index]
+        if variant == "dense":
+            return dense_matmul(x2d, args[base])
+        if variant == "tw":
+            b_cond, row_idx, col_idx = args[base : base + 3]
+            return tw_matmul(x2d, b_cond, row_idx, col_idx, n=n, block_m=block_m)
+        b_vals, b_sel, row_idx, col_idx = args[base : base + 4]
+        return tvw_matmul(x2d, b_vals, b_sel, row_idx, col_idx, n=n, block_m=block_m)
+
+    def apply(x, *args):
+        b, s, d = x.shape
+        h, dh = spec.n_heads, spec.d_head
+        ln_base = len(defs) * n_per_matmul
+        mm = 0
+        for layer in range(spec.n_layers):
+            x2d = x.reshape(b * s, d)
+            # --- multi-head attention ---
+            qkv = matmul(x2d, args, mm); mm += 1
+            q, k_, v = jnp.split(qkv.reshape(b, s, 3 * d), 3, axis=-1)
+            q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+            k_ = k_.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+            v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+            scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_) / np.sqrt(dh)
+            attn = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+            ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+            proj = matmul(ctx, args, mm); mm += 1
+            scale1 = args[ln_base + layer * 4 + 0]
+            bias1 = args[ln_base + layer * 4 + 1]
+            x = _layer_norm(x + proj.reshape(b, s, d), scale1, bias1)
+            # --- feed-forward ---
+            x2d = x.reshape(b * s, d)
+            hdn = matmul(x2d, args, mm); mm += 1
+            hdn = jax.nn.gelu(hdn)
+            out = matmul(hdn, args, mm); mm += 1
+            scale2 = args[ln_base + layer * 4 + 2]
+            bias2 = args[ln_base + layer * 4 + 3]
+            x = _layer_norm(x + out.reshape(b, s, d), scale2, bias2)
+        pooled = jnp.mean(x, axis=1)                       # (B, D)
+        head = args[-1]
+        return jnp.matmul(pooled, head)                    # (B, n_classes)
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# Training step (build-time lowering; the Rust runtime drives the loop)
+# ---------------------------------------------------------------------------
+
+def make_apply_jnp(spec: ModelSpec):
+    """Pure-jnp forward (same math as ``make_apply(spec, "dense")`` but
+    through native XLA matmuls instead of the Pallas kernels).  Used for
+    the training graph: Pallas interpret-mode kernels have no JVP rule,
+    and training wants XLA's fused backward anyway — the Pallas kernels
+    are the *inference* hot path."""
+    defs = matmul_defs(spec)
+
+    def apply(x, *args):
+        b, s, d = x.shape
+        h, dh = spec.n_heads, spec.d_head
+        ln_base = len(defs)
+        mm = 0
+        for layer in range(spec.n_layers):
+            x2d = x.reshape(b * s, d)
+            qkv = jnp.matmul(x2d, args[mm]); mm += 1
+            q, k_, v = jnp.split(qkv.reshape(b, s, 3 * d), 3, axis=-1)
+            q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+            k_ = k_.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+            v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+            scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_) / np.sqrt(dh)
+            attn = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+            ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+            proj = jnp.matmul(ctx, args[mm]); mm += 1
+            scale1 = args[ln_base + layer * 4 + 0]
+            bias1 = args[ln_base + layer * 4 + 1]
+            x = _layer_norm(x + proj.reshape(b, s, d), scale1, bias1)
+            x2d = x.reshape(b * s, d)
+            hdn = jax.nn.gelu(jnp.matmul(x2d, args[mm])); mm += 1
+            out = jnp.matmul(hdn, args[mm]); mm += 1
+            scale2 = args[ln_base + layer * 4 + 2]
+            bias2 = args[ln_base + layer * 4 + 3]
+            x = _layer_norm(x + out.reshape(b, s, d), scale2, bias2)
+        pooled = jnp.mean(x, axis=1)
+        return jnp.matmul(pooled, args[-1])
+
+    return apply
+
+
+def make_train_step(spec: ModelSpec, lr: float = 0.05):
+    """Build ``train_step(x, y, *params) -> (loss, *new_params)``.
+
+    Softmax cross-entropy over the classifier head + one SGD step, all
+    inside one jitted graph so the Rust fine-tuning driver (the paper's
+    Algorithm 1 "FineTune" hook) can run pruning-aware training through
+    PJRT with no Python.  Dense math only — pruned variants fine-tune by
+    masking the returned weights (the driver re-applies the mask after
+    every step, exactly Algorithm 1's prune→fine-tune contract).
+    """
+    apply_fn = make_apply_jnp(spec)
+
+    def loss_fn(params, x, y):
+        logits = apply_fn(x, *params)
+        logp = jax.nn.log_softmax(logits)
+        picked = jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+        return -jnp.mean(picked)
+
+    def train_step(x, y, *params):
+        loss, grads = jax.value_and_grad(loss_fn)(tuple(params), x, y)
+        new_params = tuple(p - lr * g for p, g in zip(params, grads))
+        return (loss,) + new_params
+
+    return train_step

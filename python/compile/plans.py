@@ -1,0 +1,224 @@
+"""Compressed-Tile-Offset (CTO) execution plans for TW / TVW GEMM.
+
+The paper's §V executes a TW-pruned GEMM by condensing each weight tile
+offline (removing pruned rows/columns), then running one fused kernel that
+*gathers* the needed rows of A via a per-tile row-index table (``CTO_k``)
+and *scatters* the output columns via a column-index table (``CTO_n``).
+
+This module turns a :class:`pruning.TwStructure` into the fixed-shape,
+padded arrays the Pallas kernels (and the Rust runtime) consume:
+
+``TwPlan``
+    b_cond   (T, Kmax, G) f32 — condensed tile values, zero padded
+    row_idx  (T, Kmax)    i32 — original row index per condensed row
+                                 (padding rows point at 0; their b_cond row
+                                 is zero so the gathered A values are
+                                 multiplied by 0)
+    row_len  (T,)         i32 — valid rows per tile
+    col_idx  (T, G)       i32 — original column index per condensed column
+                                 (padding columns use the sentinel N, which
+                                 the scatter drops as out-of-bounds)
+
+``TvwPlan`` additionally compresses ``b_cond`` 2:4 along the condensed K
+dimension into ``b_vals (T, Kmax/2, G)`` + ``b_sel (T, Kmax/2, G)`` where
+``b_sel`` holds the in-group position (0..3) of each kept value, i.e. the
+sparse-tensor-core metadata word.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .pruning import TwStructure
+
+__all__ = ["TwPlan", "TvwPlan", "Vw24Plan", "encode_tw", "encode_tvw", "encode_vw24"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass
+class TwPlan:
+    """Padded CTO arrays for one TW-pruned weight matrix (see module doc)."""
+
+    b_cond: np.ndarray   # (T, Kmax, G) f32
+    row_idx: np.ndarray  # (T, Kmax) i32
+    row_len: np.ndarray  # (T,) i32
+    col_idx: np.ndarray  # (T, G) i32, sentinel = N for padding
+    n: int               # original N (output width)
+    k: int               # original K (reduction size)
+
+    @property
+    def num_tiles(self) -> int:
+        return self.b_cond.shape[0]
+
+    @property
+    def kmax(self) -> int:
+        return self.b_cond.shape[1]
+
+    @property
+    def g(self) -> int:
+        return self.b_cond.shape[2]
+
+    def flops(self, m_rows: int) -> int:
+        """MACs*2 actually executed by the condensed GEMM for M=m_rows."""
+        return int(2 * m_rows * self.g * int(self.row_len.sum()))
+
+    def dense_flops(self, m_rows: int) -> int:
+        return 2 * m_rows * self.k * self.n
+
+
+def encode_tw(w: np.ndarray, tw: TwStructure, kmax_multiple: int = 8) -> TwPlan:
+    """Encode a TW structure over weight matrix ``w`` into padded CTO arrays."""
+    k, n = tw.shape
+    g = tw.g
+    t_count = tw.num_tiles
+    kmax = _round_up(max((len(r) for r in tw.tile_rows), default=1), kmax_multiple)
+    kmax = max(kmax, kmax_multiple)
+
+    b_cond = np.zeros((t_count, kmax, g), dtype=np.float32)
+    row_idx = np.zeros((t_count, kmax), dtype=np.int32)
+    row_len = np.zeros((t_count,), dtype=np.int32)
+    col_idx = np.full((t_count, g), n, dtype=np.int32)  # sentinel N
+
+    for t in range(t_count):
+        rows = tw.tile_rows[t]
+        cols = tw.tile_cols(t)
+        row_len[t] = len(rows)
+        row_idx[t, : len(rows)] = rows
+        col_idx[t, : len(cols)] = cols
+        if len(rows) and len(cols):
+            b_cond[t, : len(rows), : len(cols)] = w[np.ix_(rows, cols)]
+    return TwPlan(b_cond=b_cond, row_idx=row_idx, row_len=row_len, col_idx=col_idx, n=n, k=k)
+
+
+@dataclasses.dataclass
+class TvwPlan:
+    """TW plan whose condensed tiles are further 2:4-compressed along K."""
+
+    b_vals: np.ndarray   # (T, Kmax//2, G) f32 — kept values
+    b_sel: np.ndarray    # (T, Kmax//2, G) i32 — in-group position 0..3
+    row_idx: np.ndarray  # (T, Kmax) i32
+    row_len: np.ndarray  # (T,) i32
+    col_idx: np.ndarray  # (T, G) i32
+    n: int
+    k: int
+
+    @property
+    def num_tiles(self) -> int:
+        return self.b_vals.shape[0]
+
+    @property
+    def kmax(self) -> int:
+        return self.row_idx.shape[1]
+
+    @property
+    def g(self) -> int:
+        return self.b_vals.shape[2]
+
+    def flops(self, m_rows: int) -> int:
+        # the sparse tensor core executes only the kept half of each vector
+        return int(2 * m_rows * self.g * int(self.row_len.sum())) // 2
+
+
+def encode_tvw(w: np.ndarray, tw: TwStructure, tvw_mask: np.ndarray) -> TvwPlan:
+    """Encode a TVW pruning result (TW structure + final keep mask) into a
+    2:4-compressed CTO plan.  ``tvw_mask`` must keep exactly 2 elements per
+    4-row group of condensed rows (zero-padded groups keep the 2 largest,
+    which are zeros — still a valid 2:4 encoding)."""
+    base = encode_tw(np.where(tvw_mask, w, 0.0).astype(np.float32), tw, kmax_multiple=8)
+    t_count, kmax, g = base.b_cond.shape
+    assert kmax % 4 == 0
+    groups = base.b_cond.reshape(t_count, kmax // 4, 4, g)
+    mag = np.abs(groups)
+    # positions of the two largest magnitudes per group, sorted ascending
+    order = np.argsort(-mag, axis=2, kind="stable")[:, :, :2, :]
+    sel = np.sort(order, axis=2).astype(np.int32)          # (T, Kmax/4, 2, G)
+    vals = np.take_along_axis(groups, sel, axis=2).astype(np.float32)
+    b_sel = sel.reshape(t_count, kmax // 2, g)
+    b_vals = vals.reshape(t_count, kmax // 2, g)
+    return TvwPlan(
+        b_vals=b_vals, b_sel=b_sel,
+        row_idx=base.row_idx, row_len=base.row_len, col_idx=base.col_idx,
+        n=base.n, k=base.k,
+    )
+
+
+@dataclasses.dataclass
+class Vw24Plan:
+    """Plain 2:4 compression of a full (K, N) matrix along K (the Ampere
+    sparse-tensor-core storage format: values + 2-bit metadata)."""
+
+    b_vals: np.ndarray  # (K//2, N) f32
+    b_sel: np.ndarray   # (K//2, N) i32 in [0,4)
+    k: int
+    n: int
+
+
+def encode_vw24(w: np.ndarray, mask: np.ndarray) -> Vw24Plan:
+    """Compress a 2:4-masked matrix.  ``mask`` must keep exactly 2 of every
+    4 consecutive elements along K."""
+    k, n = w.shape
+    assert k % 4 == 0, "K must be a multiple of 4 for 2:4 compression"
+    wm = np.where(mask, w, 0.0).astype(np.float32)
+    groups = wm.reshape(k // 4, 4, n)
+    gmask = mask.reshape(k // 4, 4, n)
+    counts = gmask.sum(axis=1)
+    if not np.all(counts == 2):
+        raise ValueError("mask is not exactly 2:4 along K")
+    # indices of the two kept positions, ascending
+    sel = np.argsort(~gmask, axis=1, kind="stable")[:, :2, :]
+    sel = np.sort(sel, axis=1).astype(np.int32)
+    vals = np.take_along_axis(groups, sel, axis=1).astype(np.float32)
+    return Vw24Plan(
+        b_vals=vals.reshape(k // 2, n),
+        b_sel=sel.reshape(k // 2, n),
+        k=k, n=n,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decoders (test/debug): expand plans back to dense masked matrices.
+# ---------------------------------------------------------------------------
+
+def decode_tw(plan: TwPlan) -> np.ndarray:
+    """Expand a TwPlan back to the dense (K, N) masked weight matrix."""
+    w = np.zeros((plan.k, plan.n), dtype=np.float32)
+    t_count, kmax, g = plan.b_cond.shape
+    for t in range(t_count):
+        kt = int(plan.row_len[t])
+        rows = plan.row_idx[t, :kt]
+        cols = plan.col_idx[t]
+        valid = cols < plan.n
+        w[np.ix_(rows, cols[valid])] = plan.b_cond[t][:kt][:, valid]
+    return w
+
+
+def decode_tvw(plan: TvwPlan) -> np.ndarray:
+    """Expand a TvwPlan back to the dense (K, N) masked weight matrix."""
+    t_count, khalf, g = plan.b_vals.shape
+    kmax = khalf * 2
+    b_cond = np.zeros((t_count, kmax, g), dtype=np.float32)
+    grp = (np.arange(khalf) // 2) * 4
+    for t in range(t_count):
+        rows = grp[:, None] + plan.b_sel[t]
+        cols = np.broadcast_to(np.arange(g)[None, :], (khalf, g))
+        b_cond[t][rows.reshape(-1), cols.reshape(-1)] = plan.b_vals[t].reshape(-1)
+    base = TwPlan(
+        b_cond=b_cond, row_idx=plan.row_idx, row_len=plan.row_len,
+        col_idx=plan.col_idx, n=plan.n, k=plan.k,
+    )
+    return decode_tw(base)
+
+
+def decode_vw24(plan: Vw24Plan) -> np.ndarray:
+    """Expand 2:4 storage back to the dense (K, N) masked matrix."""
+    khalf, n = plan.b_vals.shape
+    w = np.zeros((plan.k, plan.n), dtype=np.float32)
+    rows = ((np.arange(khalf) // 2) * 4)[:, None] + plan.b_sel
+    cols = np.broadcast_to(np.arange(n)[None, :], (khalf, n))
+    w[rows.reshape(-1), cols.reshape(-1)] = plan.b_vals.reshape(-1)
+    return w

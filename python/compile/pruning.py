@@ -1,0 +1,342 @@
+"""Build-time implementation of the paper's pruning algorithms (Alg. 1-3).
+
+This module is the *compile-path* (Python) twin of the Rust `pruner` +
+`sparse::pattern` modules: it shapes weight matrices into the paper's six
+sparsity patterns so that `aot.py` can bake condensed weights + CTO tables
+into the runtime artifacts.  All functions are pure numpy and deterministic
+(rank-based selection rather than float percentiles) so the Rust
+implementation can be golden-tested against JSON fixtures produced here.
+
+Patterns (paper Fig. 2):
+  EW   element-wise (unstructured)
+  VW   vector-wise n:m along the K (reduction) dimension, e.g. 2:4
+  BW   block-wise GxG blocks
+  TW   tile-wise: global column pruning, re-tile to width-G tiles, then
+       per-tile row pruning with a *global* threshold (Alg. 3 ``TW``)
+  TEW  TW overlaid with a small element-wise remedy (Alg. 3 ``TEW``)
+  TVW  TW fused with fixed 2:4 VW inside each condensed tile (Alg. 3 ``TVW``)
+
+Conventions: the weight matrix ``w`` has shape (K, N) — K is the GEMM
+reduction dimension, N the output dimension — matching the paper's
+``C[M,N] = A[M,K] @ B[K,N]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "importance_element",
+    "prune_ew",
+    "prune_vw",
+    "prune_bw",
+    "TwStructure",
+    "prune_tw",
+    "prune_tew",
+    "prune_tvw",
+    "multi_stage_prune",
+]
+
+
+# ---------------------------------------------------------------------------
+# Importance scores (paper §IV "Importance Score")
+# ---------------------------------------------------------------------------
+
+def importance_element(w: np.ndarray, grad: np.ndarray | None = None) -> np.ndarray:
+    """Per-element importance.
+
+    Magnitude score |w| by default; if a gradient is supplied, use the
+    first-order Taylor score |w * grad| (Molchanov et al. [31]), the
+    "incurred error by removing a parameter".
+    """
+    if grad is None:
+        return np.abs(w)
+    return np.abs(w * grad)
+
+
+def _keep_topk_mask(scores: np.ndarray, keep: int) -> np.ndarray:
+    """Boolean mask keeping the ``keep`` highest-scoring entries of a 1-D
+    score vector.  Rank-based (exact count) rather than percentile-based so
+    results are deterministic under ties."""
+    flat = scores.reshape(-1)
+    keep = int(np.clip(keep, 0, flat.size))
+    mask = np.zeros(flat.size, dtype=bool)
+    if keep > 0:
+        # stable ties: argsort is stable on the negated scores
+        idx = np.argsort(-flat, kind="stable")[:keep]
+        mask[idx] = True
+    return mask.reshape(scores.shape)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: EW / VW / BW
+# ---------------------------------------------------------------------------
+
+def prune_ew(w: np.ndarray, sparsity: float, grad: np.ndarray | None = None) -> np.ndarray:
+    """Element-wise pruning: keep the top (1-s) fraction of elements
+    globally.  Returns a boolean keep-mask of ``w``'s shape."""
+    scores = importance_element(w, grad)
+    keep = round((1.0 - sparsity) * w.size)
+    return _keep_topk_mask(scores, keep)
+
+
+def prune_vw(w: np.ndarray, sparsity: float, g: int = 4) -> np.ndarray:
+    """Vector-wise n:m pruning along the K (reduction) dimension.
+
+    Splits each column of ``w`` (K, N) into vectors of ``g`` consecutive
+    elements and keeps the top ``round((1-s)*g)`` elements of every vector
+    (balanced sparsity; g=4, s=0.5 is the Ampere sparse-tensor-core 2:4).
+    K must be divisible by g.
+    """
+    k, n = w.shape
+    if k % g != 0:
+        raise ValueError(f"K={k} not divisible by vector size g={g}")
+    keep_per_vec = int(round((1.0 - sparsity) * g))
+    scores = np.abs(w).reshape(k // g, g, n)
+    # rank within each vector
+    order = np.argsort(-scores, axis=1, kind="stable")
+    ranks = np.empty_like(order)
+    np.put_along_axis(ranks, order, np.arange(g)[None, :, None].repeat(k // g, 0).repeat(n, 2), axis=1)
+    mask = ranks < keep_per_vec
+    return mask.reshape(k, n)
+
+
+def prune_bw(w: np.ndarray, sparsity: float, g: int = 16) -> np.ndarray:
+    """Block-wise pruning with GxG blocks and a global threshold.
+
+    Ragged edge blocks (when K or N is not a multiple of g) are scored by
+    the sum of their valid elements.
+    """
+    k, n = w.shape
+    bk, bn = -(-k // g), -(-n // g)
+    padded = np.zeros((bk * g, bn * g), dtype=w.dtype)
+    padded[:k, :n] = np.abs(w)
+    blocks = padded.reshape(bk, g, bn, g).sum(axis=(1, 3))
+    # normalise by valid area so ragged edge blocks compete fairly
+    ones = np.zeros((bk * g, bn * g), dtype=np.float64)
+    ones[:k, :n] = 1.0
+    area = ones.reshape(bk, g, bn, g).sum(axis=(1, 3))
+    density = blocks / np.maximum(area, 1.0)
+    keep = round((1.0 - sparsity) * blocks.size)
+    bmask = _keep_topk_mask(density, keep)
+    full = np.repeat(np.repeat(bmask, g, axis=0), g, axis=1)
+    return full[:k, :n]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: TW / TEW / TVW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TwStructure:
+    """Structural description of a TW-pruned matrix.
+
+    ``kept_cols``  sorted original column indices that survived TW-C.
+    ``tile_rows``  for each width-G tile of the *condensed* column space,
+                   the sorted original row indices that survived TW-R.
+    ``g``          tile granularity.
+    ``shape``      original (K, N).
+    """
+
+    kept_cols: np.ndarray          # (Nk,) int64
+    tile_rows: list[np.ndarray]    # T entries, each (Kt,) int64
+    g: int
+    shape: tuple[int, int]
+
+    @property
+    def num_tiles(self) -> int:
+        return len(self.tile_rows)
+
+    def tile_cols(self, t: int) -> np.ndarray:
+        """Original column indices covered by condensed tile ``t``."""
+        return self.kept_cols[t * self.g : (t + 1) * self.g]
+
+    def mask(self) -> np.ndarray:
+        """Expand to a boolean keep-mask in original (K, N) coordinates."""
+        k, n = self.shape
+        m = np.zeros((k, n), dtype=bool)
+        for t in range(self.num_tiles):
+            cols = self.tile_cols(t)
+            rows = self.tile_rows[t]
+            if len(cols) and len(rows):
+                m[np.ix_(rows, cols)] = True
+        return m
+
+    def sparsity(self) -> float:
+        k, n = self.shape
+        kept = sum(len(self.tile_rows[t]) * len(self.tile_cols(t)) for t in range(self.num_tiles))
+        return 1.0 - kept / (k * n)
+
+
+def prune_tw(
+    w: np.ndarray,
+    sparsity: float,
+    g: int = 64,
+    col_sparsity: float | None = None,
+) -> TwStructure:
+    """Tile-wise pruning (Alg. 3 ``TW``).
+
+    Stage 1 (TW-C): score whole columns (K,1 vectors), keep the top
+    ``1 - s_c`` fraction; condense the survivors.
+    Stage 2 (TW-R): split the condensed matrix into width-``g`` column
+    tiles; score each per-tile (1,G) row segment; keep the top ``1 - s_r``
+    fraction *globally across tiles* (the paper's global weight pruning).
+
+    The per-stage sparsity follows the paper's equal split
+    ``s = 1 - sqrt(1 - s_t)`` unless ``col_sparsity`` overrides stage 1.
+    """
+    k, n = w.shape
+    if col_sparsity is None:
+        s_stage = 1.0 - float(np.sqrt(max(0.0, 1.0 - sparsity)))
+        s_c = s_r = s_stage
+    else:
+        s_c = col_sparsity
+        # choose s_r so the combined sparsity hits the target
+        s_r = 1.0 - (1.0 - sparsity) / max(1e-12, (1.0 - s_c))
+        s_r = float(np.clip(s_r, 0.0, 1.0))
+
+    # --- TW-C: column pruning with global ranking ---
+    col_scores = np.abs(w).sum(axis=0)
+    keep_c = max(1, round((1.0 - s_c) * n))
+    col_mask = _keep_topk_mask(col_scores, keep_c)
+    kept_cols = np.nonzero(col_mask)[0]
+    wc = w[:, kept_cols]                      # condensed (K, Nk)
+    nk = wc.shape[1]
+
+    # --- TW-R: per-tile row pruning with a global threshold ---
+    # Segments are ranked by importance *density* (score / segment width) and
+    # kept greedily until the element budget (1 - s_r) * K * Nk is reached.
+    # With N a multiple of G this reduces to the paper's plain percentile
+    # over segment scores; with a ragged last tile it keeps the element
+    # sparsity on target instead of the segment-count sparsity.
+    num_tiles = -(-nk // g)
+    widths = np.array(
+        [min(g, nk - t * g) for t in range(num_tiles)], dtype=np.int64
+    )
+    seg_scores = []
+    for t in range(num_tiles):
+        tile = wc[:, t * g : (t + 1) * g]     # (K, <=G)
+        seg_scores.append(np.abs(tile).sum(axis=1))
+    seg = np.stack(seg_scores, axis=1)        # (K, T)
+    density = seg / widths[None, :]
+    target_kept = round((1.0 - s_r) * k * nk)
+    order = np.argsort(-density.reshape(-1), kind="stable")
+    seg_widths = np.broadcast_to(widths[None, :], seg.shape).reshape(-1)
+    csum = np.cumsum(seg_widths[order])
+    n_keep = int(np.searchsorted(csum, target_kept, side="right"))
+    n_keep = max(n_keep, num_tiles)
+    seg_mask = np.zeros(seg.size, dtype=bool)
+    seg_mask[order[:n_keep]] = True
+    seg_mask = seg_mask.reshape(seg.shape)    # (K, T)
+    # guarantee every tile keeps at least one row (an all-empty tile would
+    # produce a zero-size GEMM; the paper's condense step has the same
+    # invariant implicitly)
+    for t in range(num_tiles):
+        if not seg_mask[:, t].any():
+            seg_mask[np.argmax(seg[:, t]), t] = True
+
+    tile_rows = [np.nonzero(seg_mask[:, t])[0] for t in range(num_tiles)]
+    return TwStructure(kept_cols=kept_cols, tile_rows=tile_rows, g=g, shape=(k, n))
+
+
+def prune_tew(
+    w: np.ndarray,
+    sparsity: float,
+    delta: float,
+    g: int = 64,
+) -> tuple[TwStructure, np.ndarray]:
+    """Tile-element-wise pruning (Alg. 3 ``TEW``).
+
+    Prunes TW at ``sparsity + delta``, then remedies the ``delta`` fraction
+    of highest-importance elements *among those TW removed*.  Returns the
+    TW structure plus the boolean remedy mask (the CSC-stored EW remainder).
+    """
+    s = min(0.995, sparsity + delta)
+    tw = prune_tw(w, s, g)
+    tw_mask = tw.mask()
+    scores = importance_element(w).copy()
+    scores[tw_mask] = 0.0                     # only consider pruned elements
+    remedy_count = round(delta * w.size)
+    remedy = _keep_topk_mask(scores, remedy_count)
+    remedy &= ~tw_mask
+    return tw, remedy
+
+
+def prune_tvw(w: np.ndarray, sparsity: float, g: int = 64, m: int = 4) -> tuple[TwStructure, np.ndarray]:
+    """Tile-vector-wise pruning (Alg. 3 ``TVW``).
+
+    TW at ``s = 1 - 2*(1 - s_t)`` followed by fixed 50% (2:4 when m=4)
+    vector-wise pruning along K inside each condensed tile.  Returns the TW
+    structure and the final keep-mask in original coordinates (TW mask with
+    half of each 4-row group of *condensed* rows dropped).
+
+    Requires ``sparsity >= 0.5`` — the sparse tensor core's fixed 2:4 floor
+    (paper §VI-C: "the curve of TVW-4 can only start from 50%").
+    """
+    if sparsity < 0.5 - 1e-9:
+        raise ValueError("TVW sparsity must be >= 0.5 (fixed 2:4 floor)")
+    s_tw = 1.0 - 2.0 * (1.0 - sparsity)
+    tw = prune_tw(w, s_tw, g)
+    # VW 50% within each condensed tile, along the condensed K dimension.
+    mask = np.zeros(w.shape, dtype=bool)
+    half = m // 2
+    for t in range(tw.num_tiles):
+        rows = tw.tile_rows[t]
+        cols = tw.tile_cols(t)
+        if len(rows) == 0 or len(cols) == 0:
+            continue
+        sub = np.abs(w[np.ix_(rows, cols)])   # (Kt, <=G) condensed tile
+        kt = sub.shape[0]
+        pad = (-kt) % m
+        if pad:
+            sub = np.vstack([sub, np.zeros((pad, sub.shape[1]), dtype=sub.dtype)])
+        groups = sub.reshape(-1, m, sub.shape[1])
+        order = np.argsort(-groups, axis=1, kind="stable")
+        ranks = np.empty_like(order)
+        np.put_along_axis(
+            ranks, order,
+            np.broadcast_to(np.arange(m)[None, :, None], order.shape).copy(),
+            axis=1,
+        )
+        keep = (ranks < half).reshape(-1, sub.shape[1])[:kt]
+        mask[np.ix_(rows, cols)] = keep
+    return tw, mask
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: multi-stage prune -> fine-tune schedule
+# ---------------------------------------------------------------------------
+
+def multi_stage_prune(
+    w: np.ndarray,
+    target_sparsity: float,
+    step: float,
+    prune_fn,
+    fine_tune_fn=None,
+):
+    """Multi-stage pruning (Alg. 1): repeatedly raise the sparsity target by
+    ``step``, prune with ``prune_fn(w, s_t)``, and let ``fine_tune_fn``
+    adjust the surviving weights.  Returns ``(w, last_prune_result)``.
+
+    ``prune_fn`` must return either a keep-mask or a ``TwStructure``; the
+    weight matrix is re-masked after every stage, mirroring the paper's
+    prune→fine-tune loop.
+    """
+    w = w.copy()
+    s_t, result = 0.0, None
+    while s_t < target_sparsity - 1e-9:
+        s_t = min(target_sparsity, s_t + step)
+        result = prune_fn(w, s_t)
+        if isinstance(result, TwStructure):
+            mask = result.mask()
+        elif isinstance(result, tuple):  # (TwStructure, extra mask)
+            tw, extra = result
+            mask = tw.mask() | extra
+        else:
+            mask = result
+        w = np.where(mask, w, 0.0)
+        if fine_tune_fn is not None:
+            w = fine_tune_fn(w, mask)
+    return w, result

@@ -1,0 +1,15 @@
+"""Shared fixtures for the compile-path test suite."""
+
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+# allow `pytest python/tests` from the repo root as well as `cd python && pytest tests`
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

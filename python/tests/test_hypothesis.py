@@ -1,0 +1,98 @@
+"""Property-based shape/sparsity sweeps of the Pallas kernels (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import plans, pruning
+from compile.kernels import dense_matmul, tw_matmul, tvw_matmul, vw24_matmul
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+COMMON = dict(max_examples=20, deadline=None)
+
+dims = st.integers(min_value=1, max_value=96)
+dims4 = st.integers(min_value=1, max_value=24).map(lambda x: x * 4)
+dims8 = st.integers(min_value=1, max_value=12).map(lambda x: x * 8)
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@settings(**COMMON)
+@given(m=dims, k=dims, n=dims, bm=st.sampled_from([8, 16, 32, 128]), seed=st.integers(0, 2**16))
+def test_dense_any_shape(m, k, n, bm, seed):
+    a, w = _rand((m, k), seed), _rand((k, n), seed + 1)
+    got = dense_matmul(jnp.asarray(a), jnp.asarray(w), block=(bm, bm, bm))
+    np.testing.assert_allclose(np.asarray(got), a @ w, **TOL)
+
+
+@settings(**COMMON)
+@given(
+    m=dims,
+    k=dims8,
+    n=dims,
+    g=st.sampled_from([8, 16, 32]),
+    s=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**16),
+)
+def test_tw_any_shape_any_sparsity(m, k, n, g, s, seed):
+    a, w = _rand((m, k), seed), _rand((k, n), seed + 1)
+    tw = pruning.prune_tw(w, s, g=g)
+    p = plans.encode_tw(w, tw)
+    got = tw_matmul(
+        jnp.asarray(a), jnp.asarray(p.b_cond), jnp.asarray(p.row_idx),
+        jnp.asarray(p.col_idx), n=p.n, block_m=16,
+    )
+    np.testing.assert_allclose(np.asarray(got), a @ (w * tw.mask()), **TOL)
+
+
+@settings(**COMMON)
+@given(m=dims, k=dims4, n=dims, seed=st.integers(0, 2**16))
+def test_vw24_any_shape(m, k, n, seed):
+    a, w = _rand((m, k), seed), _rand((k, n), seed + 1)
+    mask = pruning.prune_vw(w, 0.5, 4)
+    p = plans.encode_vw24(w, mask)
+    got = vw24_matmul(jnp.asarray(a), jnp.asarray(p.b_vals), jnp.asarray(p.b_sel), block=(16, 16))
+    np.testing.assert_allclose(np.asarray(got), a @ (w * mask), **TOL)
+
+
+@settings(**COMMON)
+@given(
+    m=dims,
+    k=dims8,
+    n=dims,
+    g=st.sampled_from([8, 16]),
+    s=st.floats(0.5, 0.9),
+    seed=st.integers(0, 2**16),
+)
+def test_tvw_any_shape_any_sparsity(m, k, n, g, s, seed):
+    a, w = _rand((m, k), seed), _rand((k, n), seed + 1)
+    tw, mask = pruning.prune_tvw(w, s, g=g)
+    p = plans.encode_tvw(w, tw, mask)
+    got = tvw_matmul(
+        jnp.asarray(a), jnp.asarray(p.b_vals), jnp.asarray(p.b_sel),
+        jnp.asarray(p.row_idx), jnp.asarray(p.col_idx), n=p.n, block_m=16,
+    )
+    np.testing.assert_allclose(np.asarray(got), a @ (w * mask), **TOL)
+
+
+@settings(**COMMON)
+@given(
+    k=dims8, n=dims, g=st.sampled_from([8, 16]),
+    s=st.floats(0.0, 0.95), seed=st.integers(0, 2**16),
+)
+def test_tw_plan_roundtrip_property(k, n, g, s, seed):
+    w = _rand((k, n), seed)
+    tw = pruning.prune_tw(w, s, g=g)
+    p = plans.encode_tw(w, tw)
+    np.testing.assert_allclose(plans.decode_tw(p), w * tw.mask())
+
+
+@settings(**COMMON)
+@given(k=dims8, n=dims, s=st.floats(0.5, 0.95), g=st.sampled_from([8, 16]), seed=st.integers(0, 2**16))
+def test_tvw_plan_roundtrip_property(k, n, s, g, seed):
+    w = _rand((k, n), seed)
+    tw, mask = pruning.prune_tvw(w, s, g=g)
+    p = plans.encode_tvw(w, tw, mask)
+    np.testing.assert_allclose(plans.decode_tvw(p), w * mask)

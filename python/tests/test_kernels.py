@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import plans, pruning
+from compile.kernels import (
+    dense_matmul,
+    ref,
+    tw_matmul,
+    tw_matmul_tiles,
+    tvw_matmul,
+    vw24_matmul,
+)
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _mats(rng, m, k, n):
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    return jnp.asarray(a), w
+
+
+class TestDense:
+    @pytest.mark.parametrize("shape", [(32, 32, 32), (40, 96, 80), (128, 256, 64), (1, 8, 8)])
+    def test_vs_ref(self, rng, shape):
+        m, k, n = shape
+        a, w = _mats(rng, m, k, n)
+        got = dense_matmul(a, jnp.asarray(w), block=(32, 32, 32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref.ref_dense(a, w)), **TOL)
+
+    def test_non_divisible_blocks(self, rng):
+        a, w = _mats(rng, 50, 70, 30)
+        got = dense_matmul(a, jnp.asarray(w), block=(16, 16, 16))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ w, **TOL)
+
+    def test_block_larger_than_matrix(self, rng):
+        a, w = _mats(rng, 8, 8, 8)
+        got = dense_matmul(a, jnp.asarray(w), block=(128, 128, 128))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ w, **TOL)
+
+
+class TestTW:
+    @pytest.mark.parametrize("s", [0.25, 0.5, 0.75])
+    @pytest.mark.parametrize("g", [16, 32])
+    def test_vs_mask_oracle(self, rng, s, g):
+        a, w = _mats(rng, 40, 96, 80)
+        tw = pruning.prune_tw(w, s, g=g)
+        p = plans.encode_tw(w, tw)
+        got = tw_matmul(
+            a, jnp.asarray(p.b_cond), jnp.asarray(p.row_idx), jnp.asarray(p.col_idx),
+            n=p.n, block_m=16,
+        )
+        want = np.asarray(a) @ (w * tw.mask())
+        np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+    def test_vs_condensed_ref(self, rng):
+        a, w = _mats(rng, 32, 64, 64)
+        tw = pruning.prune_tw(w, 0.6, g=16)
+        p = plans.encode_tw(w, tw)
+        args = (jnp.asarray(p.b_cond), jnp.asarray(p.row_idx), jnp.asarray(p.col_idx))
+        got = tw_matmul(a, *args, n=p.n, block_m=16)
+        want = ref.ref_tw_condensed(a, *args, p.n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    def test_tiles_shape(self, rng):
+        a, w = _mats(rng, 24, 32, 48)
+        tw = pruning.prune_tw(w, 0.5, g=16)
+        p = plans.encode_tw(w, tw)
+        cc = tw_matmul_tiles(a, jnp.asarray(p.b_cond), jnp.asarray(p.row_idx), block_m=8)
+        assert cc.shape == (p.num_tiles, 24, p.g)
+
+    def test_pruned_columns_are_zero(self, rng):
+        a, w = _mats(rng, 16, 32, 32)
+        tw = pruning.prune_tw(w, 0.7, g=8)
+        p = plans.encode_tw(w, tw)
+        got = np.asarray(
+            tw_matmul(a, jnp.asarray(p.b_cond), jnp.asarray(p.row_idx),
+                      jnp.asarray(p.col_idx), n=p.n, block_m=8)
+        )
+        pruned_cols = sorted(set(range(p.n)) - set(tw.kept_cols.tolist()))
+        assert (got[:, pruned_cols] == 0).all()
+
+
+class TestVW24:
+    @pytest.mark.parametrize("shape", [(32, 64, 48), (40, 128, 80), (8, 8, 8)])
+    def test_vs_mask_oracle(self, rng, shape):
+        m, k, n = shape
+        a, w = _mats(rng, m, k, n)
+        mask = pruning.prune_vw(w, 0.5, 4)
+        p = plans.encode_vw24(w, mask)
+        got = vw24_matmul(a, jnp.asarray(p.b_vals), jnp.asarray(p.b_sel), block=(16, 16))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ (w * mask), **TOL)
+
+    def test_vs_decode_ref(self, rng):
+        a, w = _mats(rng, 16, 32, 32)
+        p = plans.encode_vw24(w, pruning.prune_vw(w, 0.5, 4))
+        got = vw24_matmul(a, jnp.asarray(p.b_vals), jnp.asarray(p.b_sel), block=(8, 8))
+        want = ref.ref_vw24(a, jnp.asarray(p.b_vals), jnp.asarray(p.b_sel))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+class TestTVW:
+    @pytest.mark.parametrize("s", [0.5, 0.7, 0.875])
+    def test_vs_mask_oracle(self, rng, s):
+        a, w = _mats(rng, 40, 96, 80)
+        tw, mask = pruning.prune_tvw(w, s, g=16)
+        p = plans.encode_tvw(w, tw, mask)
+        got = tvw_matmul(
+            a, jnp.asarray(p.b_vals), jnp.asarray(p.b_sel),
+            jnp.asarray(p.row_idx), jnp.asarray(p.col_idx), n=p.n, block_m=16,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ (w * mask), **TOL)
+
+    def test_vs_condensed_ref(self, rng):
+        a, w = _mats(rng, 24, 64, 64)
+        tw, mask = pruning.prune_tvw(w, 0.75, g=16)
+        p = plans.encode_tvw(w, tw, mask)
+        args = (
+            jnp.asarray(p.b_vals), jnp.asarray(p.b_sel),
+            jnp.asarray(p.row_idx), jnp.asarray(p.col_idx),
+        )
+        got = tvw_matmul(a, *args, n=p.n, block_m=8)
+        want = ref.ref_tvw_condensed(a, *args, p.n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+class TestTEW:
+    def test_ref_tew_equals_mask_oracle(self, rng):
+        a, w = _mats(rng, 32, 64, 64)
+        tw, remedy = pruning.prune_tew(w, 0.6, 0.05, g=16)
+        p = plans.encode_tw(w, tw)
+        rr, cc = np.nonzero(remedy)
+        got = ref.ref_tew(
+            a, jnp.asarray(p.b_cond), jnp.asarray(p.row_idx), jnp.asarray(p.col_idx),
+            p.n,
+            jnp.asarray(w[rr, cc]), jnp.asarray(rr.astype(np.int32)),
+            jnp.asarray(cc.astype(np.int32)),
+        )
+        want = np.asarray(a) @ (w * (tw.mask() | remedy))
+        np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+    def test_tew_kernel_composition(self, rng):
+        """TEW executes as TW kernel + COO remainder (linearity, §III-A)."""
+        a, w = _mats(rng, 16, 32, 32)
+        tw, remedy = pruning.prune_tew(w, 0.5, 0.03, g=8)
+        p = plans.encode_tw(w, tw)
+        c_tw = np.asarray(
+            tw_matmul(a, jnp.asarray(p.b_cond), jnp.asarray(p.row_idx),
+                      jnp.asarray(p.col_idx), n=p.n, block_m=8)
+        )
+        c_rem = np.asarray(a) @ (w * remedy)
+        want = np.asarray(a) @ (w * (tw.mask() | remedy))
+        np.testing.assert_allclose(c_tw + c_rem, want, **TOL)

@@ -1,0 +1,113 @@
+"""Layer-2 model: shape checks and sparse-variant equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, plans, pruning
+
+SPEC = model.ModelSpec(d_model=32, n_heads=2, d_ff=64, n_layers=1, n_classes=4,
+                       sparsity=0.6, granularity=8)
+
+
+def _build(variant, spec=SPEC, seed=3):
+    params = model.init_params(seed, spec)
+    pruned = model.prune_params(params, spec, variant)
+    args = model.flatten_args(params, spec, variant, pruned)
+    apply_fn = model.make_apply(spec, variant, block_m=16)
+    return params, pruned, args, apply_fn
+
+
+class TestShapes:
+    @pytest.mark.parametrize("variant", ["dense", "tw", "tvw"])
+    def test_output_shape(self, rng, variant):
+        _, _, args, apply_fn = _build(variant)
+        x = jnp.asarray(rng.normal(size=(2, 8, SPEC.d_model)).astype(np.float32))
+        out = apply_fn(x, *[jnp.asarray(a) for _, a in args])
+        assert out.shape == (2, SPEC.n_classes)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_matmul_defs_cover_layers(self):
+        spec = model.ModelSpec(n_layers=3)
+        defs = model.matmul_defs(spec)
+        assert len(defs) == 12
+        assert defs[0][0] == "layer0/wqkv"
+        assert defs[-1][0] == "layer2/w2"
+
+    def test_flatten_order_is_stable(self):
+        params, pruned, args, _ = _build("tw")
+        names = [n for n, _ in args]
+        assert names[0] == "layer0/wqkv/b_cond"
+        assert names[-1] == "head"
+
+
+class TestSparseEquivalence:
+    """The sparse variants must equal the dense model evaluated with the
+    masked weights — the pattern changes *which* weights survive, never the
+    arithmetic."""
+
+    @pytest.mark.parametrize("variant", ["tw", "tvw"])
+    def test_variant_equals_masked_dense(self, rng, variant):
+        params, pruned, args, apply_fn = _build(variant)
+        x = jnp.asarray(rng.normal(size=(2, 8, SPEC.d_model)).astype(np.float32))
+        got = apply_fn(x, *[jnp.asarray(a) for _, a in args])
+
+        # dense model with masked weights
+        masked = dict(params)
+        for name, _, _ in model.matmul_defs(SPEC):
+            p = pruned[name]
+            masked[name] = (
+                plans.decode_tw(p) if variant == "tw" else plans.decode_tvw(p)
+            )
+        dense_args = model.flatten_args(masked, SPEC, "dense", {})
+        dense_fn = model.make_apply(SPEC, "dense")
+        want = dense_fn(x, *[jnp.asarray(a) for _, a in dense_args])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+    def test_dense_variant_matches_pure_jnp(self, rng):
+        """The dense variant's Pallas matmuls agree with jnp.matmul end to end."""
+        params, _, args, apply_fn = _build("dense")
+        x = jnp.asarray(rng.normal(size=(2, 8, SPEC.d_model)).astype(np.float32))
+        got = apply_fn(x, *[jnp.asarray(a) for _, a in args])
+
+        # independent jnp-only reimplementation
+        def ln(h, scale, bias):
+            mu = h.mean(-1, keepdims=True)
+            var = h.var(-1, keepdims=True)
+            return (h - mu) / jnp.sqrt(var + 1e-5) * scale + bias
+
+        h = x
+        b, s, d = x.shape
+        nh, dh = SPEC.n_heads, SPEC.d_model // SPEC.n_heads
+        p = params
+        qkv = h.reshape(b * s, d) @ p["layer0/wqkv"]
+        q, k_, v = jnp.split(qkv.reshape(b, s, 3 * d), 3, axis=-1)
+        q = q.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+        k_ = k_.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+        attn = jax.nn.softmax(jnp.einsum("bhqd,bhkd->bhqk", q, k_) / np.sqrt(dh), -1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v).transpose(0, 2, 1, 3).reshape(b * s, d)
+        h = ln(h + (ctx @ p["layer0/wo"]).reshape(b, s, d),
+               p["layer0/ln1/scale"], p["layer0/ln1/bias"])
+        ff = jax.nn.gelu(h.reshape(b * s, d) @ p["layer0/w1"]) @ p["layer0/w2"]
+        h = ln(h + ff.reshape(b, s, d), p["layer0/ln2/scale"], p["layer0/ln2/bias"])
+        want = h.mean(axis=1) @ p["head"]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+class TestPruneParams:
+    def test_sparsity_applied_per_weight(self):
+        params, pruned, _, _ = _build("tw")
+        for name, _, _ in model.matmul_defs(SPEC):
+            assert abs(pruned[name].row_len.sum() * pruned[name].g /
+                       (pruned[name].k * pruned[name].n) - (1 - SPEC.sparsity)) < 0.15
+
+    def test_dense_variant_has_no_plans(self):
+        params = model.init_params(0, SPEC)
+        assert model.prune_params(params, SPEC, "dense") == {}
+
+    def test_unknown_variant_raises(self):
+        params = model.init_params(0, SPEC)
+        with pytest.raises(ValueError):
+            model.prune_params(params, SPEC, "banana")

@@ -1,0 +1,94 @@
+"""CTO plan encode/decode round-trips."""
+
+import numpy as np
+import pytest
+
+from compile import plans, pruning
+
+
+class TestTwPlan:
+    def test_roundtrip(self, rng):
+        w = rng.normal(size=(96, 80)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.6, g=16)
+        plan = plans.encode_tw(w, tw)
+        np.testing.assert_allclose(plans.decode_tw(plan), w * tw.mask())
+
+    def test_padding_invariants(self, rng):
+        w = rng.normal(size=(64, 48)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.5, g=16)
+        plan = plans.encode_tw(w, tw)
+        assert plan.kmax % 8 == 0
+        for t in range(plan.num_tiles):
+            kt = int(plan.row_len[t])
+            # padded rows are zero-valued
+            assert (plan.b_cond[t, kt:, :] == 0).all()
+            # padded row indices are in-range (they index row 0)
+            assert (plan.row_idx[t] < plan.k).all()
+            # padded columns carry the sentinel N
+            width = (plan.col_idx[t] < plan.n).sum()
+            assert (plan.col_idx[t, width:] == plan.n).all()
+
+    def test_flops_accounting(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.75, g=16)
+        plan = plans.encode_tw(w, tw)
+        m = 32
+        assert plan.flops(m) < plan.dense_flops(m)
+        # condensed flops == 2*M*G*sum(row_len)
+        assert plan.flops(m) == 2 * m * plan.g * int(plan.row_len.sum())
+
+    def test_col_idx_covers_kept_cols(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.5, g=16)
+        plan = plans.encode_tw(w, tw)
+        valid = plan.col_idx[plan.col_idx < plan.n]
+        assert sorted(valid.tolist()) == sorted(tw.kept_cols.tolist())
+
+
+class TestVw24Plan:
+    def test_roundtrip(self, rng):
+        w = rng.normal(size=(64, 48)).astype(np.float32)
+        mask = pruning.prune_vw(w, 0.5, 4)
+        plan = plans.encode_vw24(w, mask)
+        np.testing.assert_allclose(plans.decode_vw24(plan), w * mask)
+
+    def test_storage_is_half(self, rng):
+        w = rng.normal(size=(64, 32)).astype(np.float32)
+        plan = plans.encode_vw24(w, pruning.prune_vw(w, 0.5, 4))
+        assert plan.b_vals.shape == (32, 32)
+        assert plan.b_sel.shape == (32, 32)
+        assert plan.b_sel.min() >= 0 and plan.b_sel.max() <= 3
+
+    def test_rejects_non_24_mask(self, rng):
+        w = rng.normal(size=(8, 4)).astype(np.float32)
+        bad = np.ones((8, 4), dtype=bool)
+        with pytest.raises(ValueError):
+            plans.encode_vw24(w, bad)
+
+    def test_sel_strictly_increasing_in_group(self, rng):
+        w = rng.normal(size=(64, 16)).astype(np.float32)
+        plan = plans.encode_vw24(w, pruning.prune_vw(w, 0.5, 4))
+        sel = plan.b_sel.reshape(16, 2, 16)
+        assert (sel[:, 1, :] > sel[:, 0, :]).all()
+
+
+class TestTvwPlan:
+    def test_roundtrip(self, rng):
+        w = rng.normal(size=(96, 80)).astype(np.float32)
+        tw, mask = pruning.prune_tvw(w, 0.7, g=16)
+        plan = plans.encode_tvw(w, tw, mask)
+        np.testing.assert_allclose(plans.decode_tvw(plan), w * mask)
+
+    def test_storage_halves_kmax(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw, mask = pruning.prune_tvw(w, 0.75, g=16)
+        plan = plans.encode_tvw(w, tw, mask)
+        assert plan.b_vals.shape[1] * 2 == plan.kmax
+        assert plan.kmax % 8 == 0
+
+    def test_flops_half_of_tw(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw, mask = pruning.prune_tvw(w, 0.75, g=16)
+        plan = plans.encode_tvw(w, tw, mask)
+        base = plans.encode_tw(w, tw)
+        assert plan.flops(32) * 2 == base.flops(32)

@@ -1,0 +1,220 @@
+"""Invariants of the pruning algorithms (Alg. 1-3)."""
+
+import numpy as np
+import pytest
+
+from compile import pruning
+
+
+class TestEW:
+    def test_target_sparsity(self, rng):
+        w = rng.normal(size=(64, 96)).astype(np.float32)
+        for s in (0.1, 0.5, 0.75, 0.9):
+            mask = pruning.prune_ew(w, s)
+            assert abs((1 - mask.mean()) - s) < 1e-3
+
+    def test_keeps_largest(self, rng):
+        w = rng.normal(size=(32, 32)).astype(np.float32)
+        mask = pruning.prune_ew(w, 0.5)
+        kept_min = np.abs(w[mask]).min()
+        pruned_max = np.abs(w[~mask]).max()
+        assert kept_min >= pruned_max
+
+    def test_taylor_score(self, rng):
+        w = rng.normal(size=(16, 16)).astype(np.float32)
+        g = rng.normal(size=(16, 16)).astype(np.float32)
+        mask = pruning.prune_ew(w, 0.5, grad=g)
+        kept_min = np.abs((w * g)[mask]).min()
+        pruned_max = np.abs((w * g)[~mask]).max()
+        assert kept_min >= pruned_max
+
+    def test_extremes(self, rng):
+        w = rng.normal(size=(8, 8)).astype(np.float32)
+        assert pruning.prune_ew(w, 0.0).all()
+        assert not pruning.prune_ew(w, 1.0).any()
+
+
+class TestVW:
+    def test_24_balance(self, rng):
+        w = rng.normal(size=(64, 48)).astype(np.float32)
+        mask = pruning.prune_vw(w, 0.5, 4)
+        groups = mask.reshape(16, 4, 48)
+        assert (groups.sum(axis=1) == 2).all()
+
+    def test_416(self, rng):
+        w = rng.normal(size=(64, 32)).astype(np.float32)
+        mask = pruning.prune_vw(w, 0.75, 16)
+        groups = mask.reshape(4, 16, 32)
+        assert (groups.sum(axis=1) == 4).all()
+
+    def test_keeps_largest_in_vector(self, rng):
+        w = rng.normal(size=(8, 4)).astype(np.float32)
+        mask = pruning.prune_vw(w, 0.5, 4)
+        for col in range(4):
+            for grp in range(2):
+                vec = np.abs(w[grp * 4 : grp * 4 + 4, col])
+                kept = vec[mask[grp * 4 : grp * 4 + 4, col]]
+                assert kept.min() >= np.median(vec)
+
+    def test_indivisible_k_raises(self, rng):
+        w = rng.normal(size=(10, 4)).astype(np.float32)
+        with pytest.raises(ValueError):
+            pruning.prune_vw(w, 0.5, 4)
+
+
+class TestBW:
+    def test_block_structure(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        mask = pruning.prune_bw(w, 0.5, 16)
+        blocks = mask.reshape(4, 16, 4, 16)
+        per_block = blocks.sum(axis=(1, 3))
+        assert set(np.unique(per_block)) <= {0, 256}
+
+    def test_target_sparsity(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        mask = pruning.prune_bw(w, 0.75, 16)
+        assert abs((1 - mask.mean()) - 0.75) < 0.1
+
+    def test_ragged_edges(self, rng):
+        w = rng.normal(size=(70, 50)).astype(np.float32)
+        mask = pruning.prune_bw(w, 0.5, 16)
+        assert mask.shape == (70, 50)
+        assert 0.3 < (1 - mask.mean()) < 0.7
+
+
+class TestTW:
+    @pytest.mark.parametrize("s", [0.25, 0.5, 0.75])
+    @pytest.mark.parametrize("g", [16, 32, 64])
+    def test_target_sparsity(self, rng, s, g):
+        w = rng.normal(size=(256, 256)).astype(np.float32)
+        tw = pruning.prune_tw(w, s, g=g)
+        assert abs(tw.sparsity() - s) < 0.03
+
+    def test_structure_consistency(self, rng):
+        w = rng.normal(size=(96, 80)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.6, g=16)
+        # kept columns sorted and unique
+        assert (np.diff(tw.kept_cols) > 0).all()
+        # every tile keeps at least one row (condense invariant)
+        assert all(len(r) >= 1 for r in tw.tile_rows)
+        # tile rows sorted
+        for r in tw.tile_rows:
+            assert (np.diff(r) > 0).all() or len(r) <= 1
+        # mask sparsity agrees with structure sparsity
+        assert abs((1 - tw.mask().mean()) - tw.sparsity()) < 1e-9
+
+    def test_mask_is_tile_structured(self, rng):
+        """Inside every tile, the mask must be the outer product of a row
+        indicator and a column indicator (whole rows/cols pruned)."""
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.5, g=16)
+        m = tw.mask()
+        for t in range(tw.num_tiles):
+            cols = tw.tile_cols(t)
+            sub = m[:, cols]
+            rows_on = sub.any(axis=1)
+            cols_on = sub.any(axis=0)
+            assert (sub == np.outer(rows_on, cols_on)).all()
+
+    def test_g_equal_n_is_global_structural(self, rng):
+        """G == N degenerates to global row/column pruning (paper §I)."""
+        w = rng.normal(size=(32, 32)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.5, g=32)
+        assert tw.num_tiles == 1
+
+    def test_col_sparsity_override(self, rng):
+        w = rng.normal(size=(128, 128)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.75, g=32, col_sparsity=0.5)
+        assert len(tw.kept_cols) == 64
+        assert abs(tw.sparsity() - 0.75) < 0.05
+
+
+class TestTEW:
+    def test_remedy_disjoint_and_sized(self, rng):
+        w = rng.normal(size=(96, 96)).astype(np.float32)
+        tw, remedy = pruning.prune_tew(w, 0.7, 0.05, g=16)
+        assert not (tw.mask() & remedy).any()
+        assert abs(remedy.mean() - 0.05) < 0.01
+
+    def test_final_sparsity(self, rng):
+        w = rng.normal(size=(128, 128)).astype(np.float32)
+        tw, remedy = pruning.prune_tew(w, 0.7, 0.05, g=32)
+        final = tw.mask() | remedy
+        assert abs((1 - final.mean()) - 0.7) < 0.03
+
+    def test_remedy_picks_highest_pruned(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw, remedy = pruning.prune_tew(w, 0.6, 0.03, g=16)
+        pruned = ~(tw.mask() | remedy)
+        if remedy.any() and pruned.any():
+            assert np.abs(w[remedy]).min() >= np.abs(w[pruned]).max() - 1e-6
+
+
+class TestTVW:
+    def test_24_inside_tiles(self, rng):
+        w = rng.normal(size=(128, 128)).astype(np.float32)
+        tw, mask = pruning.prune_tvw(w, 0.75, g=32)
+        for t in range(tw.num_tiles):
+            rows, cols = tw.tile_rows[t], tw.tile_cols(t)
+            sub = mask[np.ix_(rows, cols)]
+            kt = sub.shape[0]
+            pad = (-kt) % 4
+            padded = np.vstack([sub, np.zeros((pad, sub.shape[1]), dtype=bool)])
+            per_group = padded.reshape(-1, 4, sub.shape[1]).sum(axis=1)
+            assert (per_group <= 2).all()
+
+    def test_floor_is_half(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        with pytest.raises(ValueError):
+            pruning.prune_tvw(w, 0.3, g=16)
+
+    def test_sparsity_at_half_is_pure_vw(self, rng):
+        """At s=0.5 TVW degenerates to plain 2:4 over the whole matrix."""
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw, mask = pruning.prune_tvw(w, 0.5, g=16)
+        assert len(tw.kept_cols) == 64
+        assert abs((1 - mask.mean()) - 0.5) < 0.02
+
+    def test_target_sparsity(self, rng):
+        w = rng.normal(size=(256, 256)).astype(np.float32)
+        for s in (0.5, 0.625, 0.75, 0.875):
+            _, mask = pruning.prune_tvw(w, s, g=64)
+            assert abs((1 - mask.mean()) - s) < 0.02
+
+    def test_mask_subset_of_tw(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        tw, mask = pruning.prune_tvw(w, 0.75, g=16)
+        assert not (mask & ~tw.mask()).any()
+
+
+class TestMultiStage:
+    def test_monotone_sparsity(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        seen = []
+
+        def prune_fn(w_, s_t):
+            seen.append(s_t)
+            return pruning.prune_ew(w_, s_t)
+
+        final, _ = pruning.multi_stage_prune(w, 0.75, 0.25, prune_fn)
+        assert seen == [0.25, 0.5, 0.75]
+        assert abs((final == 0).mean() - 0.75) < 0.02
+
+    def test_fine_tune_hook_called(self, rng):
+        w = rng.normal(size=(32, 32)).astype(np.float32)
+        calls = []
+
+        def ft(w_, mask):
+            calls.append(mask.mean())
+            return w_ * 1.01  # pretend-finetune
+
+        pruning.multi_stage_prune(w, 0.5, 0.25, lambda w_, s: pruning.prune_ew(w_, s), ft)
+        assert len(calls) == 2
+
+    def test_tw_multi_stage(self, rng):
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        final, tw = pruning.multi_stage_prune(
+            w, 0.75, 0.25, lambda w_, s: pruning.prune_tw(w_, s, g=16)
+        )
+        assert isinstance(tw, pruning.TwStructure)
+        assert abs(tw.sparsity() - 0.75) < 0.05

@@ -1,0 +1,100 @@
+"""TEW kernel composition + the train-step lowering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, plans, pruning
+from compile.kernels.tew_gemm import encode_remedy_coo, tew_matmul
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+class TestTewKernel:
+    def test_vs_mask_oracle(self, rng):
+        m, k, n = 32, 64, 64
+        a = rng.normal(size=(m, k)).astype(np.float32)
+        w = rng.normal(size=(k, n)).astype(np.float32)
+        tw, remedy = pruning.prune_tew(w, 0.6, 0.05, g=16)
+        p = plans.encode_tw(w, tw)
+        vals, rows, cols = encode_remedy_coo(w, remedy, 256)
+        got = tew_matmul(
+            jnp.asarray(a), jnp.asarray(p.b_cond), jnp.asarray(p.row_idx),
+            jnp.asarray(p.col_idx), jnp.asarray(vals), jnp.asarray(rows),
+            jnp.asarray(cols), n=n, block_m=16,
+        )
+        want = a @ (w * (tw.mask() | remedy))
+        np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+    def test_padding_entries_dropped(self, rng):
+        m, k, n = 8, 16, 16
+        a = rng.normal(size=(m, k)).astype(np.float32)
+        w = rng.normal(size=(k, n)).astype(np.float32)
+        tw = pruning.prune_tw(w, 0.5, g=8)
+        p = plans.encode_tw(w, tw)
+        # all-padding remainder: must equal plain TW
+        vals = np.zeros(64, dtype=np.float32)
+        rows = np.zeros(64, dtype=np.int32)
+        cols = np.full(64, n, dtype=np.int32)
+        got = tew_matmul(
+            jnp.asarray(a), jnp.asarray(p.b_cond), jnp.asarray(p.row_idx),
+            jnp.asarray(p.col_idx), jnp.asarray(vals), jnp.asarray(rows),
+            jnp.asarray(cols), n=n, block_m=8,
+        )
+        want = a @ (w * tw.mask())
+        np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+    def test_encode_rejects_overflow(self, rng):
+        w = rng.normal(size=(16, 16)).astype(np.float32)
+        remedy = np.ones((16, 16), dtype=bool)
+        with pytest.raises(ValueError):
+            encode_remedy_coo(w, remedy, 4)
+
+
+SPEC = model.ModelSpec(d_model=32, n_heads=2, d_ff=64, n_layers=1, n_classes=4)
+
+
+class TestTrainStep:
+    def _setup(self, rng):
+        params = model.init_params(3, SPEC)
+        args = model.flatten_args(params, SPEC, "dense", {})
+        x = jnp.asarray(rng.normal(size=(4, 8, SPEC.d_model)).astype(np.float32))
+        y = jnp.asarray(np.array([0, 1, 2, 3], dtype=np.int32))
+        tensors = [jnp.asarray(a) for _, a in args]
+        return x, y, tensors
+
+    def test_jnp_forward_matches_pallas(self, rng):
+        params = model.init_params(3, SPEC)
+        args = model.flatten_args(params, SPEC, "dense", {})
+        t = [jnp.asarray(a) for _, a in args]
+        x = jnp.asarray(rng.normal(size=(2, 8, SPEC.d_model)).astype(np.float32))
+        ap = model.make_apply(SPEC, "dense")(x, *t)
+        aj = model.make_apply_jnp(SPEC)(x, *t)
+        np.testing.assert_allclose(np.asarray(ap), np.asarray(aj), rtol=1e-3, atol=1e-3)
+
+    def test_loss_decreases(self, rng):
+        x, y, tensors = self._setup(rng)
+        step = model.make_train_step(SPEC)
+        out = step(x, y, *tensors)
+        l0 = float(out[0])
+        for _ in range(25):
+            out = step(x, y, *out[1:])
+        assert float(out[0]) < l0
+
+    def test_output_arity_and_shapes(self, rng):
+        x, y, tensors = self._setup(rng)
+        step = model.make_train_step(SPEC)
+        out = step(x, y, *tensors)
+        assert len(out) == len(tensors) + 1
+        assert out[0].shape == ()
+        for o, t in zip(out[1:], tensors):
+            assert o.shape == t.shape
+
+    def test_masked_params_stay_learnable(self, rng):
+        """Zeroed weights receive gradients (the driver re-masks each step);
+        the step itself must not NaN on sparse params."""
+        x, y, tensors = self._setup(rng)
+        tensors[0] = tensors[0].at[:, ::2].set(0.0)
+        step = model.make_train_step(SPEC)
+        out = step(x, y, *tensors)
+        assert np.isfinite(float(out[0]))

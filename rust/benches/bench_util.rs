@@ -1,0 +1,37 @@
+//! Shared measurement harness for the benches (the offline registry has no
+//! criterion; this provides warmup + median-of-N timing with MAD spread).
+
+use std::time::Instant;
+
+/// Run `f` until `min_runs` samples and `min_secs` have elapsed; report
+/// median and median-absolute-deviation in microseconds.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..2 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let min_runs = 5;
+    let min_secs = 0.25;
+    while samples.len() < min_runs || start.elapsed().as_secs_f64() < min_secs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        if samples.len() >= 200 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = dev[dev.len() / 2];
+    println!("{name:<44} {median:>12.1} us  (±{mad:.1}, n={})", samples.len());
+    median
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}

@@ -1,0 +1,68 @@
+//! Bench: the L3 serving stack — batcher throughput, metrics overhead,
+//! and (when artifacts are present) end-to-end request latency through
+//! the PJRT executor per model variant.
+//!
+//!   make artifacts && cargo bench --bench coordinator
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Duration;
+
+use bench_util::{bench, section};
+use tilewise::coordinator::{pack_batch, start, BatcherConfig, Metrics, Policy, Request, ServerConfig};
+use tilewise::util::Rng;
+
+fn mk_request(id: u64, len: usize) -> Request {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::mem::forget(rx); // bench: nobody reads the response
+    Request {
+        id,
+        activation: vec![0.5; len],
+        variant: None,
+        submitted: std::time::Instant::now(),
+        respond_to: tx,
+    }
+}
+
+fn main() {
+    section("micro: batching + metrics hot-path costs");
+    let reqs: Vec<Request> = (0..8).map(|i| mk_request(i, 64 * 256)).collect();
+    bench("pack_batch 8x(64x256)", || {
+        std::hint::black_box(pack_batch(&reqs, 8, 64 * 256));
+    });
+    let metrics = Metrics::default();
+    bench("metrics.record x100", || {
+        for i in 0..100 {
+            metrics.record("model_tw", 0.001 * i as f64, 4);
+        }
+    });
+    bench("metrics.snapshot", || {
+        std::hint::black_box(metrics.snapshot());
+    });
+
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("artifacts/ missing - skipping end-to-end serving bench (run `make artifacts`)");
+        return;
+    }
+
+    section("end-to-end: closed-loop single-request latency per variant");
+    for variant in ["model_dense", "model_tw", "model_tvw"] {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(100) },
+            policy: Policy::Fixed(variant.into()),
+            variants: vec![variant.into()],
+            max_queue: 0,
+        };
+        let handle = start(dir, cfg).expect("server start");
+        let len = handle.seq * handle.d_model;
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        bench(&format!("{variant} single request (batch=1)"), || {
+            let resp = handle.infer(x.clone(), None).expect("infer");
+            std::hint::black_box(resp);
+        });
+    }
+    println!("\ncoordinator bench complete");
+}

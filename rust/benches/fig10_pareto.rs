@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 8 (accuracy curves), Fig. 9 (pattern stats),
+//! Fig. 10/11 (speedup-vs-accuracy Pareto per model) and the headline
+//! table (§VI-D averages vs the paper's reported numbers).
+//!
+//!   cargo bench --bench fig10_pareto
+
+use tilewise::figures::{fig10, fig8, fig9, headline};
+
+fn main() {
+    for t in fig8::fig8_all() {
+        println!("{}", t.render());
+    }
+    println!("{}", fig9::fig9_stats().render());
+    for t in fig10::fig10_all() {
+        println!("{}", t.render());
+    }
+    for t in fig10::fig11_all() {
+        println!("{}", t.render());
+    }
+    println!("{}", headline::headline().render());
+    println!("fig8/9/10/11 + headline bench complete");
+}

@@ -1,0 +1,61 @@
+//! Bench: regenerate Fig. 6a/6b/6c (4096^3 GEMM latency sweeps + the
+//! granularity-accuracy trade-off), then validate the *shape* of the
+//! simulated curves against real CPU-kernel timings at 512^3.
+//!
+//!   cargo bench --bench fig6_gemm
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use tilewise::figures::fig6;
+use tilewise::gemm::{csr_spmm, matmul, tw_matmul, vw24_matmul};
+use tilewise::sparse::{prune_ew, prune_tw, prune_vw, Csr, TwPlan, Vw24Plan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+fn main() {
+    // --- the paper figures (simulated A100) --------------------------------
+    println!("{}", fig6::fig6a().render());
+    println!("{}", fig6::fig6b().render());
+    println!("{}", fig6::fig6c().render());
+
+    // --- real CPU kernel cross-check at 512^3 -------------------------------
+    section("CPU kernel validation at 512^3 (same orderings must hold)");
+    let mut rng = Rng::new(2026);
+    let (m, k, n) = (512usize, 512usize, 512usize);
+    let a = Matrix::randn(m, k, &mut rng);
+    let w = Matrix::randn(k, n, &mut rng);
+
+    let t_dense = bench("dense blocked", || {
+        std::hint::black_box(matmul(&a, &w));
+    });
+
+    let mut crossover_seen = false;
+    for s in [0.25f64, 0.5, 0.75, 0.9] {
+        let tw = prune_tw(&w, s, 64, None);
+        let plan = TwPlan::encode(&w, &tw);
+        let t = bench(&format!("TW-64 fused-CTO @ {:.0}%", s * 100.0), || {
+            std::hint::black_box(tw_matmul(&a, &plan));
+        });
+        if t < t_dense {
+            crossover_seen = true;
+        }
+    }
+    assert!(crossover_seen, "TW must beat dense somewhere in the sweep");
+
+    let mask24 = prune_vw(&w, 0.5, 4);
+    let vplan = Vw24Plan::encode(&w, &mask24).unwrap();
+    bench("VW-4 (2:4 emulated) @ 50%", || {
+        std::hint::black_box(vw24_matmul(&a, &vplan));
+    });
+
+    for s in [0.75f64, 0.95, 0.99] {
+        let maske = prune_ew(&w, s, None);
+        let csr = Csr::from_masked(&w, &maske);
+        bench(&format!("EW CSR SpMM @ {:.0}%", s * 100.0), || {
+            std::hint::black_box(csr_spmm(&a, &csr));
+        });
+    }
+    println!("\nfig6 bench complete");
+}

@@ -1,0 +1,58 @@
+//! Bench: regenerate Fig. 7a/7b (the TEW delta trade-off) and time the
+//! real CPU composition TW-kernel + CSC remainder that implements TEW's
+//! linear split (§III-A).
+//!
+//!   cargo bench --bench fig7_tew
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use tilewise::figures::fig7;
+use tilewise::gemm::{csr_spmm, tw_matmul};
+use tilewise::sparse::{prune_tew, Csr, TwPlan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+fn main() {
+    println!("{}", fig7::fig7a().render());
+    println!("{}", fig7::fig7b().render());
+
+    section("CPU TEW composition at 512^3, 75% sparsity");
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (512usize, 512usize, 512usize);
+    let a = Matrix::randn(m, k, &mut rng);
+    let w = Matrix::randn(k, n, &mut rng);
+
+    for delta_pct in [1u8, 5, 10] {
+        let delta = delta_pct as f64 / 100.0;
+        let (tw, remedy) = prune_tew(&w, 0.75, delta, 64);
+        let plan = TwPlan::encode(&w, &tw);
+        let remainder = Csr::from_masked(&w, &remedy);
+        let t_tw = bench(&format!("TEW-{delta_pct}%: TW part"), || {
+            std::hint::black_box(tw_matmul(&a, &plan));
+        });
+        let t_rem = bench(&format!("TEW-{delta_pct}%: EW remainder ({} nnz)", remainder.nnz()), || {
+            std::hint::black_box(csr_spmm(&a, &remainder));
+        });
+        println!(
+            "  -> TEW-{delta_pct}% serial total {:.1} us (concurrent would be max = {:.1} us)",
+            t_tw + t_rem,
+            t_tw.max(t_rem)
+        );
+    }
+
+    // correctness of the linear split
+    let (tw, remedy) = prune_tew(&w, 0.75, 0.05, 64);
+    let plan = TwPlan::encode(&w, &tw);
+    let remainder = Csr::from_masked(&w, &remedy);
+    let c_tw = tw_matmul(&a, &plan);
+    let c_rem = csr_spmm(&a, &remainder);
+    let mut c = c_tw.clone();
+    for (x, y) in c.data.iter_mut().zip(&c_rem.data) {
+        *x += y;
+    }
+    let full = tilewise::gemm::matmul(&a, &tw.mask().or(&remedy).apply(&w));
+    assert!(c.max_abs_diff(&full) < 1e-2, "TEW split mismatch");
+    println!("\nfig7 bench complete (TEW linear split verified)");
+}

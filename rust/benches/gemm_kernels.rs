@@ -1,0 +1,90 @@
+//! Bench: the CPU GEMM hot paths — the §Perf profiling harness.
+//! Reports every kernel variant so before/after optimization deltas are
+//! directly visible (EXPERIMENTS.md §Perf quotes these numbers).
+//!
+//!   cargo bench --bench gemm_kernels
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use tilewise::gemm::{
+    block_spmm, csr_spmm, matmul, matmul_naive, matmul_parallel, tw_matmul, tw_matmul_into,
+    tw_matmul_masked, tw_matmul_parallel, tw_matmul_per_tile, tvw_matmul, vw24_matmul,
+    BlockSparse,
+};
+use tilewise::sparse::{
+    prune_bw, prune_ew, prune_tvw, prune_tw, prune_vw, Csr, TvwPlan, TwPlan, Vw24Plan,
+};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(4242);
+    let (m, k, n) = (256usize, 512usize, 512usize);
+    let a = Matrix::randn(m, k, &mut rng);
+    let w = Matrix::randn(k, n, &mut rng);
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    println!("shape {m}x{k}x{n}, {threads} threads available");
+
+    section("dense baselines");
+    let t_naive = bench("dense naive (i,j,k)", || {
+        std::hint::black_box(matmul_naive(&a, &w));
+    });
+    let t_blocked = bench("dense blocked (i,k,j)", || {
+        std::hint::black_box(matmul(&a, &w));
+    });
+    bench("dense parallel", || {
+        std::hint::black_box(matmul_parallel(&a, &w, threads));
+    });
+    assert!(t_blocked < t_naive, "blocked must beat naive");
+
+    section("TW strategies at 75% sparsity, G=64 (the Fig. 4 ladder on CPU)");
+    let tw = prune_tw(&w, 0.75, 64, None);
+    let plan = TwPlan::encode(&w, &tw);
+    let mask = tw.mask();
+    bench("TW masked dense-loop (strawman)", || {
+        std::hint::black_box(tw_matmul_masked(&a, &w, &mask));
+    });
+    bench("TW per-tile kernels", || {
+        std::hint::black_box(tw_matmul_per_tile(&a, &plan));
+    });
+    let t_fused = bench("TW fused-CTO", || {
+        std::hint::black_box(tw_matmul(&a, &plan));
+    });
+    bench("TW fused-CTO parallel", || {
+        std::hint::black_box(tw_matmul_parallel(&a, &plan, threads));
+    });
+    let mut c = Matrix::zeros(m, n);
+    bench("TW fused-CTO into (no alloc)", || {
+        tw_matmul_into(&a, &plan, &mut c);
+        std::hint::black_box(&c);
+    });
+    assert!(t_fused < t_blocked, "TW at 75% must beat the dense kernel");
+
+    section("2:4 and TVW");
+    let mask24 = prune_vw(&w, 0.5, 4);
+    let vplan = Vw24Plan::encode(&w, &mask24).unwrap();
+    bench("VW-4 2:4 GEMM @50%", || {
+        std::hint::black_box(vw24_matmul(&a, &vplan));
+    });
+    let (tws, tvmask) = prune_tvw(&w, 0.75, 64);
+    let tvplan = TvwPlan::encode(&w, &tws, &tvmask);
+    bench("TVW fused GEMM @75%", || {
+        std::hint::black_box(tvw_matmul(&a, &tvplan));
+    });
+
+    section("sparse baselines");
+    let maske = prune_ew(&w, 0.75, None);
+    let csr = Csr::from_masked(&w, &maske);
+    bench("EW CSR SpMM @75%", || {
+        std::hint::black_box(csr_spmm(&a, &csr));
+    });
+    let maskb = prune_bw(&w, 0.75, 16);
+    let bs = BlockSparse::from_masked(&w, &maskb, 16);
+    bench("BW block-sparse @75% (16x16)", || {
+        std::hint::black_box(block_spmm(&a, &bs));
+    });
+
+    println!("\ngemm_kernels bench complete");
+}

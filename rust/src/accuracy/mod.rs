@@ -1,0 +1,10 @@
+//! Accuracy models: `proxy` (a genuinely trained + pruned + fine-tuned MLP
+//! validating the paper's accuracy *ordering* mechanism) and `surrogate`
+//! (calibrated per-model curves reproducing the paper's *magnitudes*).
+//! Every figure harness reports which source produced its accuracy axis.
+
+pub mod proxy;
+pub mod surrogate;
+
+pub use proxy::{prune_finetune_sweep, Mlp, SweepPoint, Task};
+pub use surrogate::{accuracy, max_sparsity_within_tolerance, ModelFamily};

@@ -1,0 +1,262 @@
+//! Trainable proxy model: a 2-layer MLP classifier trained with SGD on a
+//! synthetic Gaussian-cluster task, run through the *real* multi-stage
+//! prune→fine-tune loop (Algorithm 1) for every sparsity pattern.
+//!
+//! The paper fine-tunes BERT/VGG/ResNet/NMT on their datasets — hardware
+//! and data we don't have (DESIGN.md §1).  The proxy preserves the
+//! *mechanism* that produces the paper's accuracy ordering: pattern
+//! constraint tightness determines how much importance mass pruning can
+//! retain, and fine-tuning recovers what the constraint allows.  Expected
+//! ordering (paper Fig. 6c/8): EW >= TEW >= TVW >= TW >= VW >= BW, with a
+//! collapse past ~75% sparsity for the structured patterns.
+
+use crate::gemm::matmul;
+use crate::sparse::{Mask, Pattern};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Synthetic classification task: `classes` Gaussian clusters in
+/// `dim`-dimensional space with within-cluster correlated structure (so
+/// weights have genuinely uneven importance — what TW exploits).
+pub struct Task {
+    pub dim: usize,
+    pub classes: usize,
+    pub train_x: Matrix,
+    pub train_y: Vec<usize>,
+    pub test_x: Matrix,
+    pub test_y: Vec<usize>,
+}
+
+impl Task {
+    pub fn synth(dim: usize, classes: usize, n_train: usize, n_test: usize, seed: u64) -> Task {
+        let mut rng = Rng::new(seed);
+        // cluster means; a small subset of dimensions is informative and
+        // the separation is modest, so the task does not saturate — pruning
+        // damage must be visible.  The skew also gives the weight matrix an
+        // uneven importance distribution (what TW exploits).
+        let mut means = Matrix::zeros(classes, dim);
+        let informative = (dim / 4).max(4);
+        for c in 0..classes {
+            for d in 0..informative {
+                *means.at_mut(c, d) = rng.normal_f32() * 0.9;
+            }
+        }
+        let mut gen = |n: usize| {
+            let mut x = Matrix::zeros(n, dim);
+            let mut y = Vec::with_capacity(n);
+            for i in 0..n {
+                let c = rng.below(classes);
+                y.push(c);
+                for d in 0..dim {
+                    *x.at_mut(i, d) = means.at(c, d) + rng.normal_f32();
+                }
+            }
+            (x, y)
+        };
+        let (train_x, train_y) = gen(n_train);
+        let (test_x, test_y) = gen(n_test);
+        Task { dim, classes, train_x, train_y, test_x, test_y }
+    }
+}
+
+/// 2-layer MLP: x -> relu(x W1) W2 -> softmax.
+#[derive(Clone)]
+pub struct Mlp {
+    pub w1: Matrix,
+    pub w2: Matrix,
+}
+
+impl Mlp {
+    pub fn init(dim: usize, hidden: usize, classes: usize, seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        Mlp { w1: Matrix::randn(dim, hidden, &mut rng), w2: Matrix::randn(hidden, classes, &mut rng) }
+    }
+
+    fn forward(&self, x: &Matrix) -> (Matrix, Matrix) {
+        let mut h = matmul(x, &self.w1);
+        for v in &mut h.data {
+            *v = v.max(0.0);
+        }
+        let logits = matmul(&h, &self.w2);
+        (h, logits)
+    }
+
+    pub fn accuracy(&self, x: &Matrix, y: &[usize]) -> f64 {
+        let (_, logits) = self.forward(x);
+        let mut correct = 0usize;
+        for i in 0..x.rows {
+            let row = logits.row(i);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += (pred == y[i]) as usize;
+        }
+        correct as f64 / x.rows as f64
+    }
+
+    /// One epoch of minibatch SGD with optional masks (masked-out weights
+    /// receive no update and stay zero — pruning-aware fine-tuning).
+    pub fn sgd_epoch(
+        &mut self,
+        x: &Matrix,
+        y: &[usize],
+        lr: f32,
+        batch: usize,
+        masks: Option<(&Mask, &Mask)>,
+        rng: &mut Rng,
+    ) {
+        let n = x.rows;
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(batch) {
+            let bs = chunk.len();
+            let mut xb = Matrix::zeros(bs, x.cols);
+            for (bi, &i) in chunk.iter().enumerate() {
+                xb.row_mut(bi).copy_from_slice(x.row(i));
+            }
+            let (h, logits) = self.forward(&xb);
+            // softmax CE gradient on logits
+            let mut dl = Matrix::zeros(bs, self.w2.cols);
+            for bi in 0..bs {
+                let row = logits.row(bi);
+                let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+                let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+                let z: f32 = exps.iter().sum();
+                for c in 0..self.w2.cols {
+                    let p = exps[c] / z;
+                    *dl.at_mut(bi, c) = (p - ((y[chunk[bi]] == c) as u8 as f32)) / bs as f32;
+                }
+            }
+            // grads
+            let dw2 = matmul(&h.transpose(), &dl);
+            let mut dh = matmul(&dl, &self.w2.transpose());
+            for (dv, hv) in dh.data.iter_mut().zip(&h.data) {
+                if *hv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            let dw1 = matmul(&xb.transpose(), &dh);
+            // update
+            for (w, d) in self.w1.data.iter_mut().zip(&dw1.data) {
+                *w -= lr * d;
+            }
+            for (w, d) in self.w2.data.iter_mut().zip(&dw2.data) {
+                *w -= lr * d;
+            }
+            if let Some((m1, m2)) = masks {
+                for (w, k) in self.w1.data.iter_mut().zip(&m1.keep) {
+                    if !*k {
+                        *w = 0.0;
+                    }
+                }
+                for (w, k) in self.w2.data.iter_mut().zip(&m2.keep) {
+                    if !*k {
+                        *w = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Result of one pattern's prune→fine-tune sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub sparsity: f64,
+    pub accuracy: f64,
+}
+
+/// Train a dense MLP, then multi-stage prune the hidden weight matrix W1
+/// with `pattern` (W2 stays dense — it is tiny), fine-tuning between
+/// stages; report accuracy at each target sparsity.
+pub fn prune_finetune_sweep(
+    task: &Task,
+    pattern: Pattern,
+    sparsities: &[f64],
+    hidden: usize,
+    seed: u64,
+) -> Vec<SweepPoint> {
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let mut model = Mlp::init(task.dim, hidden, task.classes, seed);
+    for _ in 0..30 {
+        model.sgd_epoch(&task.train_x, &task.train_y, 0.05, 32, None, &mut rng);
+    }
+    let mut out = Vec::new();
+    let full2 = Mask::all(model.w2.rows, model.w2.cols);
+    for &s in sparsities {
+        // TVW cannot express < 50%; ramp through TW (as the pruner does)
+        let eff = match pattern {
+            Pattern::Tvw { g, .. } if s < 0.5 => Pattern::Tw { g },
+            p => p,
+        };
+        let mask = eff.prune(&model.w1, s);
+        model.w1 = mask.apply(&model.w1);
+        for _ in 0..10 {
+            model.sgd_epoch(&task.train_x, &task.train_y, 0.05, 32, Some((&mask, &full2)), &mut rng);
+        }
+        out.push(SweepPoint { sparsity: s, accuracy: model.accuracy(&task.test_x, &task.test_y) });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_task() -> Task {
+        Task::synth(32, 4, 800, 400, 7)
+    }
+
+    #[test]
+    fn dense_model_learns() {
+        let task = small_task();
+        let mut rng = Rng::new(1);
+        let mut m = Mlp::init(task.dim, 64, task.classes, 2);
+        let before = m.accuracy(&task.test_x, &task.test_y);
+        for _ in 0..20 {
+            m.sgd_epoch(&task.train_x, &task.train_y, 0.05, 32, None, &mut rng);
+        }
+        let after = m.accuracy(&task.test_x, &task.test_y);
+        assert!(after > 0.8, "dense accuracy {after}");
+        assert!(after > before);
+    }
+
+    #[test]
+    fn mild_pruning_retains_accuracy() {
+        let task = small_task();
+        let pts = prune_finetune_sweep(&task, Pattern::Ew, &[0.5], 64, 3);
+        assert!(pts[0].accuracy > 0.75, "{pts:?}");
+    }
+
+    #[test]
+    fn masked_sgd_keeps_zeros() {
+        let task = small_task();
+        let mut rng = Rng::new(4);
+        let mut m = Mlp::init(task.dim, 32, task.classes, 5);
+        let mask = Pattern::Ew.prune(&m.w1, 0.7);
+        m.w1 = mask.apply(&m.w1);
+        let full2 = Mask::all(m.w2.rows, m.w2.cols);
+        m.sgd_epoch(&task.train_x, &task.train_y, 0.05, 32, Some((&mask, &full2)), &mut rng);
+        for (w, k) in m.w1.data.iter().zip(&mask.keep) {
+            if !*k {
+                assert_eq!(*w, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    #[ignore = "slow ordering validation; run explicitly"]
+    fn accuracy_ordering_matches_paper() {
+        let task = Task::synth(64, 8, 2000, 800, 11);
+        let sp = [0.25, 0.5, 0.75];
+        let ew = prune_finetune_sweep(&task, Pattern::Ew, &sp, 128, 1);
+        let tw = prune_finetune_sweep(&task, Pattern::Tw { g: 16 }, &sp, 128, 1);
+        let bw = prune_finetune_sweep(&task, Pattern::Bw { g: 16 }, &sp, 128, 1);
+        // at 75%: EW >= TW >= BW (allow small noise)
+        assert!(ew[2].accuracy + 0.02 >= tw[2].accuracy, "EW {} TW {}", ew[2].accuracy, tw[2].accuracy);
+        assert!(tw[2].accuracy + 0.02 >= bw[2].accuracy, "TW {} BW {}", tw[2].accuracy, bw[2].accuracy);
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic batcher: size- and deadline-bounded request coalescing.
+//!
+//! The executable has a fixed batch dimension B (AOT shapes are static),
+//! so the batcher's job is to fill as much of B as possible without
+//! letting the head request wait longer than `max_wait` — the classic
+//! serving trade-off (throughput from batching vs p99 from waiting).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Fixed executable batch size (pad with zeros beyond real requests).
+    pub max_batch: usize,
+    /// Longest the head-of-line request may wait for co-batching.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect the next batch from `rx`.  Blocks for the first request (or
+/// returns `None` if the channel closed), then drains until the batch is
+/// full or the head request's deadline expires.
+pub fn collect_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + cfg.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Pack per-request activations into one padded batch tensor.
+/// Returns the flat `(B, per_request_len)` tensor; missing slots are zero.
+pub fn pack_batch(batch: &[Request], max_batch: usize, per_request_len: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; max_batch * per_request_len];
+    for (i, req) in batch.iter().enumerate().take(max_batch) {
+        out[i * per_request_len..i * per_request_len + req.activation.len()]
+            .copy_from_slice(&req.activation);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64, len: usize) -> (Request, mpsc::Receiver<super::super::request::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                activation: vec![id as f32; len],
+                variant: None,
+                submitted: Instant::now(),
+                respond_to: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, resp_rx) = req(i, 4);
+            keep.push(resp_rx);
+            tx.send(r).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) };
+        let batch = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch2 = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn deadline_bounds_waiting() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (r, _resp) = req(1, 4);
+        tx.send(r).unwrap();
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let start = Instant::now();
+        let batch = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(start.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        assert!(collect_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+
+    #[test]
+    fn pack_pads_with_zeros() {
+        let (r1, _k1) = req(1, 3);
+        let (r2, _k2) = req(2, 3);
+        let packed = pack_batch(&[r1, r2], 4, 3);
+        assert_eq!(packed.len(), 12);
+        assert_eq!(&packed[0..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&packed[3..6], &[2.0, 2.0, 2.0]);
+        assert_eq!(&packed[6..], &[0.0; 6]);
+    }
+}

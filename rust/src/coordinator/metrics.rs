@@ -1,0 +1,111 @@
+//! Serving metrics: per-variant latency samples + counters, with
+//! percentile snapshots for the e2e report.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::{mean, percentile};
+
+#[derive(Default)]
+struct Inner {
+    /// Per-variant end-to-end latency samples (seconds).
+    latency: HashMap<String, Vec<f64>>,
+    /// Per-variant batch-size samples.
+    batch_sizes: HashMap<String, Vec<f64>>,
+    completed: u64,
+    started_at: Option<Instant>,
+}
+
+/// Thread-safe metrics sink shared between the executor and clients.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Snapshot of one variant's serving statistics.
+#[derive(Clone, Debug)]
+pub struct VariantStats {
+    pub variant: String,
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn record(&self, variant: &str, latency_secs: f64, batch_size: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.started_at.is_none() {
+            inner.started_at = Some(Instant::now());
+        }
+        inner.latency.entry(variant.to_string()).or_default().push(latency_secs);
+        inner.batch_sizes.entry(variant.to_string()).or_default().push(batch_size as f64);
+        inner.completed += 1;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.lock().unwrap().completed
+    }
+
+    /// Requests per second since the first recorded completion.
+    pub fn throughput(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        match inner.started_at {
+            Some(t0) => inner.completed as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+            None => 0.0,
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<VariantStats> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (variant, lats) in &inner.latency {
+            let mut ms: Vec<f64> = lats.iter().map(|s| s * 1e3).collect();
+            let batches = inner.batch_sizes.get(variant).cloned().unwrap_or_default();
+            out.push(VariantStats {
+                variant: variant.clone(),
+                count: ms.len(),
+                mean_ms: mean(&ms),
+                p50_ms: percentile(&mut ms, 0.50),
+                p95_ms: percentile(&mut ms, 0.95),
+                p99_ms: percentile(&mut ms, 0.99),
+                mean_batch: mean(&batches),
+            });
+        }
+        out.sort_by(|a, b| a.variant.cmp(&b.variant));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = Metrics::default();
+        for i in 1..=100 {
+            m.record("model_tw", i as f64 / 1000.0, 4);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 1);
+        let s = &snap[0];
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 50.5).abs() < 1.0);
+        assert!(s.p99_ms > 98.0);
+        assert_eq!(s.mean_batch, 4.0);
+    }
+
+    #[test]
+    fn multiple_variants_separate() {
+        let m = Metrics::default();
+        m.record("a", 0.001, 1);
+        m.record("b", 0.002, 2);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(m.completed(), 2);
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 serving coordinator: request router, dynamic batcher,
+//! executable registry, metrics — the deployment wrapper that turns the
+//! AOT artifacts into a service (vLLM-router-shaped, scaled to this
+//! paper's inference-acceleration setting).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{collect_batch, pack_batch, BatcherConfig};
+pub use metrics::{Metrics, VariantStats};
+pub use request::{Request, Response};
+pub use router::{Policy, Router};
+pub use server::{start, ServerConfig, ServerHandle};

@@ -1,0 +1,38 @@
+//! Request/response types flowing through the serving stack.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One inference request: a single sequence's activations `(seq, d_model)`
+/// flattened row-major.  The dynamic batcher packs up to `batch` of these
+/// into one executable invocation.
+pub struct Request {
+    pub id: u64,
+    pub activation: Vec<f32>,
+    /// Preferred model variant ("model_dense" / "model_tw" / "model_tvw");
+    /// `None` lets the router decide.
+    pub variant: Option<String>,
+    pub submitted: Instant,
+    pub respond_to: mpsc::Sender<Response>,
+}
+
+/// The answer: per-sequence logits plus serving telemetry.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Which executable served this request.
+    pub variant: String,
+    /// Time spent waiting in the queue + batcher, seconds.
+    pub queue_secs: f64,
+    /// Executable invocation time (shared by the whole batch), seconds.
+    pub execute_secs: f64,
+    /// How many real requests shared the batch.
+    pub batch_size: usize,
+}
+
+impl Response {
+    pub fn total_secs(&self) -> f64 {
+        self.queue_secs + self.execute_secs
+    }
+}

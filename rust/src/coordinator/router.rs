@@ -1,0 +1,102 @@
+//! Variant router: which executable serves a batch.
+//!
+//! The TW/TVW artifacts trade accuracy for latency; the router lets the
+//! deployment pick a policy: a fixed variant, round-robin (for A/B
+//! latency comparisons, as the e2e example does), or load-adaptive —
+//! serve dense while the queue is short, shed to the sparse variant under
+//! pressure (the paper's motivation: sparse models buy latency headroom).
+
+use super::request::Request;
+
+#[derive(Clone, Debug)]
+pub enum Policy {
+    /// Always this variant.
+    Fixed(String),
+    /// Rotate over variants per batch.
+    RoundRobin(Vec<String>),
+    /// Dense until queue depth exceeds the threshold, then sparse.
+    Adaptive { dense: String, sparse: String, queue_threshold: usize },
+}
+
+pub struct Router {
+    policy: Policy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: Policy) -> Router {
+        Router { policy, rr_next: 0 }
+    }
+
+    /// Pick the executable for a batch.  A request's explicit variant
+    /// preference (first in the batch that has one) wins over the policy.
+    pub fn route(&mut self, batch: &[Request], queue_depth: usize) -> String {
+        if let Some(v) = batch.iter().find_map(|r| r.variant.clone()) {
+            return v;
+        }
+        match &self.policy {
+            Policy::Fixed(v) => v.clone(),
+            Policy::RoundRobin(vs) => {
+                let v = vs[self.rr_next % vs.len()].clone();
+                self.rr_next += 1;
+                v
+            }
+            Policy::Adaptive { dense, sparse, queue_threshold } => {
+                if queue_depth > *queue_threshold {
+                    sparse.clone()
+                } else {
+                    dense.clone()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(variant: Option<&str>) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id: 0,
+            activation: vec![],
+            variant: variant.map(String::from),
+            submitted: Instant::now(),
+            respond_to: tx,
+        }
+    }
+
+    #[test]
+    fn fixed_policy() {
+        let mut r = Router::new(Policy::Fixed("model_tw".into()));
+        assert_eq!(r.route(&[req(None)], 0), "model_tw");
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut r = Router::new(Policy::RoundRobin(vec!["a".into(), "b".into()]));
+        assert_eq!(r.route(&[req(None)], 0), "a");
+        assert_eq!(r.route(&[req(None)], 0), "b");
+        assert_eq!(r.route(&[req(None)], 0), "a");
+    }
+
+    #[test]
+    fn adaptive_sheds_under_load() {
+        let mut r = Router::new(Policy::Adaptive {
+            dense: "model_dense".into(),
+            sparse: "model_tvw".into(),
+            queue_threshold: 4,
+        });
+        assert_eq!(r.route(&[req(None)], 0), "model_dense");
+        assert_eq!(r.route(&[req(None)], 10), "model_tvw");
+    }
+
+    #[test]
+    fn explicit_preference_wins() {
+        let mut r = Router::new(Policy::Fixed("model_dense".into()));
+        assert_eq!(r.route(&[req(None), req(Some("model_tvw"))], 0), "model_tvw");
+    }
+}

@@ -1,0 +1,272 @@
+//! The serving loop: an executor thread owning the PJRT engine, fed by a
+//! request channel through the dynamic batcher and the router.
+//!
+//! Python never appears here — artifacts were compiled once by `make
+//! artifacts`; this loop is allocation-light and lock-free on the hot path
+//! (one channel recv, one buffer staging, one execute).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{collect_batch, pack_batch, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use super::router::{Policy, Router};
+use crate::runtime::Engine;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub policy: Policy,
+    /// Which executables to load ("model_*" entries in meta.json).
+    pub variants: Vec<String>,
+    /// Backpressure: submissions beyond this queue depth are shed
+    /// immediately instead of growing the tail (0 = unbounded).
+    pub max_queue: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            batcher: BatcherConfig::default(),
+            policy: Policy::Fixed("model_tw".into()),
+            variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
+            max_queue: 0,
+        }
+    }
+}
+
+/// Client handle: submit requests, read metrics, shut down.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    queue_depth: Arc<AtomicUsize>,
+    join: Option<std::thread::JoinHandle<()>>,
+    max_queue: usize,
+    shed: AtomicU64,
+    pub seq: usize,
+    pub d_model: usize,
+    pub batch: usize,
+    pub n_classes: usize,
+}
+
+impl ServerHandle {
+    /// Number of requests shed by backpressure so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Submit with backpressure: sheds (returns None) when the queue is
+    /// beyond `max_queue`.
+    pub fn try_submit(
+        &self,
+        activation: Vec<f32>,
+        variant: Option<String>,
+    ) -> Option<mpsc::Receiver<Response>> {
+        if self.max_queue > 0 && self.queue_depth.load(Ordering::Relaxed) >= self.max_queue {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(self.submit(activation, variant))
+    }
+
+    /// Submit one sequence's activations; returns the response receiver.
+    pub fn submit(&self, activation: Vec<f32>, variant: Option<String>) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            activation,
+            variant,
+            submitted: Instant::now(),
+            respond_to: tx,
+        };
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        // a closed channel means the server already shut down; the caller
+        // sees it as a dropped response channel
+        let _ = self.tx.send(req);
+        rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, activation: Vec<f32>, variant: Option<String>) -> Result<Response> {
+        let rx = self.submit(activation, variant);
+        Ok(rx.recv()?)
+    }
+
+    /// Graceful shutdown: close the request channel and join the executor.
+    /// (Equivalent to dropping the handle; provided for explicitness.)
+    pub fn shutdown(self) {}
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        // Closing tx ends collect_batch -> executor exits.
+        let (dead_tx, _) = mpsc::channel();
+        self.tx = dead_tx;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start the serving stack over an artifact directory.
+///
+/// The PJRT engine is not `Send` (it wraps `Rc` handles), so it is created
+/// *inside* the executor thread; startup results are handed back over a
+/// one-shot channel.
+pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<ServerHandle> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let metrics = Arc::new(Metrics::default());
+    let queue_depth = Arc::new(AtomicUsize::new(0));
+    let (init_tx, init_rx) = mpsc::channel::<Result<(usize, usize, usize, usize)>>();
+
+    let metrics2 = metrics.clone();
+    let queue_depth2 = queue_depth.clone();
+    let batcher_cfg = cfg.batcher.clone();
+    let policy = cfg.policy.clone();
+    let variants = cfg.variants.clone();
+    let dir = artifact_dir.to_path_buf();
+    let join = std::thread::Builder::new()
+        .name("tilewise-executor".into())
+        .spawn(move || {
+            let variant_refs: Vec<&str> = variants.iter().map(String::as_str).collect();
+            let engine = match Engine::load_only(&dir, &variant_refs) {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            let (batch, n_classes) = match engine.model(&variants[0]) {
+                Ok(m) => (m.output_shape[0], m.output_shape[1]),
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            let (seq, d_model) = (engine.meta.seq, engine.meta.d_model);
+            let per_request_len = seq * d_model;
+            let _ = init_tx.send(Ok((batch, n_classes, seq, d_model)));
+            // never collect more requests than the executable batch holds —
+            // overflow requests would silently get no response
+            let mut batcher_cfg = batcher_cfg;
+            batcher_cfg.max_batch = batcher_cfg.max_batch.min(batch).max(1);
+            let mut router = Router::new(policy);
+            while let Some(batch_reqs) = collect_batch(&rx, &batcher_cfg) {
+                let depth = queue_depth2.load(Ordering::Relaxed).saturating_sub(batch_reqs.len());
+                let variant = router.route(&batch_reqs, depth);
+                let packed = pack_batch(&batch_reqs, batch, per_request_len);
+                let t0 = Instant::now();
+                let result = engine.run_named(&variant, &packed);
+                let exec_secs = t0.elapsed().as_secs_f64();
+                queue_depth2.fetch_sub(batch_reqs.len().min(batch), Ordering::Relaxed);
+                match result {
+                    Ok(logits) => {
+                        for (i, req) in batch_reqs.into_iter().enumerate().take(batch) {
+                            let queue_secs =
+                                (t0 - req.submitted).as_secs_f64().max(0.0);
+                            metrics2.record(&variant, queue_secs + exec_secs, i + 1);
+                            let _ = req.respond_to.send(Response {
+                                id: req.id,
+                                logits: logits[i * n_classes..(i + 1) * n_classes].to_vec(),
+                                variant: variant.clone(),
+                                queue_secs,
+                                execute_secs: exec_secs,
+                                batch_size: i + 1,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("[server] execute failed: {e:#}");
+                        // responses dropped: clients see a closed channel
+                    }
+                }
+            }
+        })?;
+
+    let (batch, n_classes, seq, d_model) = init_rx.recv()??;
+    Ok(ServerHandle {
+        tx,
+        metrics,
+        next_id: AtomicU64::new(0),
+        queue_depth,
+        join: Some(join),
+        max_queue: cfg.max_queue,
+        shed: AtomicU64::new(0),
+        seq,
+        d_model,
+        batch,
+        n_classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn serve_roundtrip_all_variants() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let handle = start(&dir, ServerConfig::default()).unwrap();
+        let len = handle.seq * handle.d_model;
+        let mut rng = crate::util::Rng::new(8);
+        for variant in ["model_dense", "model_tw", "model_tvw"] {
+            let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let resp = handle.infer(x, Some(variant.into())).unwrap();
+            assert_eq!(resp.variant, variant);
+            assert_eq!(resp.logits.len(), handle.n_classes);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(handle.metrics.completed(), 3);
+    }
+
+    #[test]
+    fn backpressure_sheds_over_limit() {
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = ServerConfig { max_queue: 2, ..Default::default() };
+        let handle = start(&dir, cfg).unwrap();
+        let len = handle.seq * handle.d_model;
+        let mut kept = Vec::new();
+        let mut shed = 0;
+        for _ in 0..32 {
+            match handle.try_submit(vec![0.1; len], None) {
+                Some(rx) => kept.push(rx),
+                None => shed += 1,
+            }
+        }
+        assert!(shed > 0, "expected some sheds with max_queue=2");
+        assert_eq!(handle.shed_count(), shed);
+        for rx in kept {
+            let _ = rx.recv();
+        }
+    }
+
+    #[test]
+    fn batching_coalesces_concurrent_requests() {
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(50) },
+            ..Default::default()
+        };
+        let handle = start(&dir, cfg).unwrap();
+        let len = handle.seq * handle.d_model;
+        let rxs: Vec<_> = (0..4).map(|_| handle.submit(vec![0.1; len], None)).collect();
+        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        // all four should have shared one executable invocation
+        let max_batch_seen = resps.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(max_batch_seen >= 4, "batch {max_batch_seen}");
+    }
+}

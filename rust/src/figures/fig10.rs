@@ -1,0 +1,220 @@
+//! Fig. 10 (tensor core) and Fig. 11 (CUDA core): the speedup-vs-accuracy
+//! trade-off per model.  Speedups come from `gpusim` over the model zoo's
+//! GEMM workloads; accuracies from the calibrated surrogate.
+
+use super::{model_latency, LatencyPattern, Table};
+use crate::accuracy::{accuracy, ModelFamily};
+use crate::gpusim::{a100, Calibration, Pipe};
+use crate::models::{bert_base, nmt, resnet18, resnet50, vgg16, ModelWorkload};
+use crate::sparse::Pattern;
+
+/// (family, workload) pairs of the evaluation; BERT serves two tasks.
+pub fn eval_models() -> Vec<(ModelFamily, ModelWorkload)> {
+    vec![
+        (ModelFamily::Vgg16, vgg16()),
+        (ModelFamily::Resnet18, resnet18()),
+        (ModelFamily::Resnet50, resnet50()),
+        (ModelFamily::Nmt, nmt(128)),
+        (ModelFamily::BertMnli, bert_base(8, 128)),
+        (ModelFamily::BertSquad, bert_base(8, 384)),
+    ]
+}
+
+fn g_for(family: ModelFamily) -> usize {
+    super::fig8::model_granularity(family)
+}
+
+/// Fig. 10, one model: rows = pattern, cols = (sparsity, speedup,
+/// accuracy) triplets flattened over the sweep grid.  Speedup is vs the
+/// dense model on the dense tensor core.
+pub fn fig10_model(family: ModelFamily, workload: &ModelWorkload) -> Table {
+    let specs = a100();
+    let cal = Calibration::default();
+    let g = g_for(family);
+    let sweep = [0.5, 0.625, 0.75, 0.8125, 0.875];
+    let mut cols = Vec::new();
+    for s in sweep {
+        cols.push(format!("spd@{:.0}%", s * 100.0));
+        cols.push(format!("acc@{:.0}%", s * 100.0));
+    }
+    let mut t = Table::new(
+        "fig10",
+        &format!("{}: speedup (dense-TC baseline) vs accuracy on (S)TC", family.label()),
+        cols,
+    );
+    let dense = model_latency(
+        workload,
+        |_| LatencyPattern::Dense(Pipe::TensorFp16),
+        Pipe::TensorFp16,
+        &specs,
+        &cal,
+    );
+
+    let mut push_sweep = |label: &str, f: &dyn Fn(f64) -> (f64, f64)| {
+        let mut cells = Vec::new();
+        for &s in &sweep {
+            let (lat, acc) = f(s);
+            cells.push(if lat.is_nan() { f64::NAN } else { dense / lat });
+            cells.push(acc);
+        }
+        t.push(label, cells);
+    };
+
+    push_sweep(&format!("TW-{g}"), &|s| {
+        let lat = model_latency(
+            workload,
+            |_| LatencyPattern::Tw { g, pipe: Pipe::TensorFp16, sparsity: s },
+            Pipe::TensorFp16,
+            &specs,
+            &cal,
+        );
+        (lat, accuracy(family, &Pattern::Tw { g }, s))
+    });
+    push_sweep(&format!("TVW-4(G={g})"), &|s| {
+        let lat = model_latency(
+            workload,
+            |_| LatencyPattern::Tvw { g, sparsity: s },
+            Pipe::TensorFp16,
+            &specs,
+            &cal,
+        );
+        (lat, accuracy(family, &Pattern::Tvw { g, m: 4 }, s))
+    });
+    push_sweep("BW-16", &|s| {
+        let lat = model_latency(
+            workload,
+            |_| LatencyPattern::Bw { g: 16, sparsity: s },
+            Pipe::TensorFp16,
+            &specs,
+            &cal,
+        );
+        (lat, accuracy(family, &Pattern::Bw { g: 16 }, s))
+    });
+    // fixed points
+    let vw = model_latency(workload, |_| LatencyPattern::Vw4 { int8: false }, Pipe::TensorFp16, &specs, &cal);
+    let vw_acc = accuracy(family, &Pattern::Vw { m: 4 }, 0.5);
+    t.push("VW-4(STC)", vec![dense / vw, vw_acc, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN]);
+    let i8d = model_latency(workload, |_| LatencyPattern::Int8Dense, Pipe::TensorInt8, &specs, &cal);
+    t.push("Int8-Dense", vec![dense / i8d, family.baseline(), f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN]);
+    let i8s = model_latency(workload, |_| LatencyPattern::Vw4 { int8: true }, Pipe::TensorInt8, &specs, &cal);
+    t.push("Int8-Sparse", vec![dense / i8s, vw_acc, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN]);
+    t
+}
+
+/// Fig. 11, one model: TW and EW on the CUDA core, vs dense CUDA.
+pub fn fig11_model(family: ModelFamily, workload: &ModelWorkload) -> Table {
+    let specs = a100();
+    let cal = Calibration::default();
+    let g = g_for(family);
+    let sweep = [0.25, 0.5, 0.625, 0.75, 0.8125, 0.875];
+    let mut cols = Vec::new();
+    for s in sweep {
+        cols.push(format!("spd@{:.0}%", s * 100.0));
+        cols.push(format!("acc@{:.0}%", s * 100.0));
+    }
+    let mut t = Table::new(
+        "fig11",
+        &format!("{}: speedup (dense-CUDA baseline) vs accuracy on CUDA core", family.label()),
+        cols,
+    );
+    let dense = model_latency(
+        workload,
+        |_| LatencyPattern::Dense(Pipe::CudaFp32),
+        Pipe::CudaFp32,
+        &specs,
+        &cal,
+    );
+    let mut tw_cells = Vec::new();
+    let mut ew_cells = Vec::new();
+    for &s in &sweep {
+        let tw = model_latency(
+            workload,
+            |_| LatencyPattern::Tw { g, pipe: Pipe::CudaFp32, sparsity: s },
+            Pipe::CudaFp32,
+            &specs,
+            &cal,
+        );
+        tw_cells.push(dense / tw);
+        tw_cells.push(accuracy(family, &Pattern::Tw { g }, s));
+        let ew = {
+            // EW latency scales with nnz; use ew_plan per layer at sparsity s
+            let specs2 = &specs;
+            let cal2 = &cal;
+            let mut total = 0.0;
+            for layer in &workload.layers {
+                let lat = if layer.prunable {
+                    crate::gpusim::ew_plan(layer.shape, s, specs2, cal2).latency(specs2)
+                } else {
+                    crate::gpusim::dense_plan(layer.shape, Pipe::CudaFp32, specs2, cal2)
+                        .latency(specs2)
+                };
+                total += lat * layer.count as f64;
+            }
+            total
+        };
+        ew_cells.push(dense / ew);
+        ew_cells.push(accuracy(family, &Pattern::Ew, s));
+    }
+    t.push(&format!("TW-{g}"), tw_cells);
+    t.push("EW(cuSparse)", ew_cells);
+    t
+}
+
+pub fn fig10_all() -> Vec<Table> {
+    eval_models().into_iter().map(|(f, w)| fig10_model(f, &w)).collect()
+}
+
+pub fn fig11_all() -> Vec<Table> {
+    eval_models().into_iter().map(|(f, w)| fig11_model(f, &w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_bert_pareto_extends() {
+        let t = fig10_model(ModelFamily::BertMnli, &bert_base(8, 128));
+        let row = |label_prefix: &str| {
+            t.rows
+                .iter()
+                .find(|(l, _)| l.starts_with(label_prefix))
+                .map(|(_, c)| c.clone())
+                .unwrap()
+        };
+        let tw = row("TW-");
+        // at 75% (index 4 = spd, 5 = acc): meaningful speedup, small drop
+        assert!(tw[4] > 1.3, "TW speedup at 75%: {}", tw[4]);
+        assert!(ModelFamily::BertMnli.baseline() - tw[5] < 4.0);
+        // TVW keeps more accuracy than TW at every sparsity (less
+        // constrained pattern) — the iso-accuracy Pareto advantage
+        let tvw = row("TVW-4");
+        for i in [1usize, 3, 5, 7, 9] {
+            assert!(tvw[i] >= tw[i], "acc col {i}: TVW {} vs TW {}", tvw[i], tw[i]);
+        }
+        // BW slower than TW at iso-sparsity
+        let bw = row("BW-16");
+        assert!(bw[4] < tw[4]);
+    }
+
+    #[test]
+    fn fig10_vw_point_shape_dependence() {
+        // VW-4 speedup should be healthy on BERT but weak on CNNs (§VI-D)
+        let bert = fig10_model(ModelFamily::BertMnli, &bert_base(8, 128));
+        let r50 = fig10_model(ModelFamily::Resnet50, &resnet50());
+        let vw_of = |t: &Table| {
+            t.rows.iter().find(|(l, _)| l.starts_with("VW-4")).map(|(_, c)| c[0]).unwrap()
+        };
+        assert!(vw_of(&bert) > vw_of(&r50), "bert {} r50 {}", vw_of(&bert), vw_of(&r50));
+    }
+
+    #[test]
+    fn fig11_tw_beats_ew() {
+        let t = fig11_model(ModelFamily::BertMnli, &bert_base(8, 128));
+        let tw = t.rows.iter().find(|(l, _)| l.starts_with("TW-")).map(|(_, c)| c.clone()).unwrap();
+        let ew = t.rows.iter().find(|(l, _)| l.starts_with("EW")).map(|(_, c)| c.clone()).unwrap();
+        // at 75%: TW >1x speedup, EW <1x (paper: EW cannot deliver speedups)
+        assert!(tw[6] > 1.0, "TW at 75% on CUDA: {}", tw[6]);
+        assert!(ew[6] < 1.0, "EW at 75% on CUDA: {}", ew[6]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Fig. 6: normalized latency (a: tensor core, b: CUDA core) of the
+//! 4096x4096x4096 GEMM across patterns and sparsities, and (c) accuracy
+//! vs sparsity under different pruning granularities (BERT-MNLI).
+
+use super::Table;
+use crate::accuracy::{accuracy, ModelFamily};
+use crate::gpusim::{
+    bw_plan, dense_plan, ew_plan, tvw_latency, tw_latency, tw_uniform_tiles, vw24_plan,
+    Calibration, GemmShape, Pipe, TwStrategy,
+};
+use crate::sparse::Pattern;
+
+const SHAPE: GemmShape = GemmShape { m: 4096, k: 4096, n: 4096 };
+
+fn sparsities() -> Vec<f64> {
+    (0..=18).map(|i| i as f64 * 0.05).collect()
+}
+
+/// Fig. 6a: tensor-core latency, normalized to the dense tensor core.
+pub fn fig6a() -> Table {
+    let specs = crate::gpusim::a100();
+    let cal = Calibration::default();
+    let sp = sparsities();
+    let mut t = Table::new(
+        "fig6a",
+        "4096^3 GEMM normalized latency on (sparse) tensor core",
+        sp.iter().map(|s| format!("{:.0}%", s * 100.0)).collect(),
+    );
+    let dense = dense_plan(SHAPE, Pipe::TensorFp16, &specs, &cal).latency(&specs);
+    t.push("Dense-DTC", sp.iter().map(|_| 1.0).collect());
+    t.push(
+        "VW-4(STC)",
+        sp.iter()
+            .map(|&s| {
+                // fixed 50% sparsity: defined only at s = 0.5
+                if (s - 0.5).abs() < 1e-9 {
+                    vw24_plan(SHAPE, false, &specs, &cal).latency(&specs) / dense
+                } else {
+                    f64::NAN
+                }
+            })
+            .collect(),
+    );
+    for g in [16usize, 32] {
+        t.push(
+            &format!("BW-{g}"),
+            sp.iter()
+                .map(|&s| bw_plan(SHAPE, s, g, &specs, &cal).latency(&specs) / dense)
+                .collect(),
+        );
+    }
+    for g in [64usize, 128] {
+        t.push(
+            &format!("TW-{g}"),
+            sp.iter()
+                .map(|&s| {
+                    let tiles = tw_uniform_tiles(SHAPE, s, g);
+                    tw_latency(SHAPE, &tiles, g, Pipe::TensorFp16, TwStrategy::FusedCto, &specs, &cal)
+                        / dense
+                })
+                .collect(),
+        );
+    }
+    t.push(
+        "TVW-4(G=128)",
+        sp.iter()
+            .map(|&s| {
+                if s < 0.5 {
+                    f64::NAN
+                } else {
+                    let tiles = tw_uniform_tiles(SHAPE, 1.0 - 2.0 * (1.0 - s), 128);
+                    tvw_latency(SHAPE, &tiles, 128, &specs, &cal) / dense
+                }
+            })
+            .collect(),
+    );
+    t.push(
+        "Int8-Dense",
+        sp.iter()
+            .map(|_| dense_plan(SHAPE, Pipe::TensorInt8, &specs, &cal).latency(&specs) / dense)
+            .collect(),
+    );
+    t.push(
+        "Int8-VW4",
+        sp.iter()
+            .map(|&s| {
+                if (s - 0.5).abs() < 1e-9 {
+                    vw24_plan(SHAPE, true, &specs, &cal).latency(&specs) / dense
+                } else {
+                    f64::NAN
+                }
+            })
+            .collect(),
+    );
+    t
+}
+
+/// Fig. 6b: CUDA-core latency, normalized to the dense CUDA core; the DTC
+/// row shows the dense tensor core on the same scale (the ~9.7x gap).
+pub fn fig6b() -> Table {
+    let specs = crate::gpusim::a100();
+    let cal = Calibration::default();
+    let sp = sparsities();
+    let mut t = Table::new(
+        "fig6b",
+        "4096^3 GEMM normalized latency on CUDA core",
+        sp.iter().map(|s| format!("{:.0}%", s * 100.0)).collect(),
+    );
+    let dense = dense_plan(SHAPE, Pipe::CudaFp32, &specs, &cal).latency(&specs);
+    t.push("Dense-CUDA", sp.iter().map(|_| 1.0).collect());
+    t.push(
+        "EW(cuSparse)",
+        sp.iter().map(|&s| ew_plan(SHAPE, s, &specs, &cal).latency(&specs) / dense).collect(),
+    );
+    for g in [64usize, 128] {
+        t.push(
+            &format!("TW-{g}"),
+            sp.iter()
+                .map(|&s| {
+                    let tiles = tw_uniform_tiles(SHAPE, s, g);
+                    tw_latency(SHAPE, &tiles, g, Pipe::CudaFp32, TwStrategy::FusedCto, &specs, &cal)
+                        / dense
+                })
+                .collect(),
+        );
+    }
+    let dtc = dense_plan(SHAPE, Pipe::TensorFp16, &specs, &cal).latency(&specs);
+    t.push("Dense-DTC(ref)", sp.iter().map(|_| dtc / dense).collect());
+    t
+}
+
+/// Fig. 6c: accuracy vs sparsity under different granularities on
+/// BERT-MNLI (surrogate model; the proxy validation lives in
+/// `accuracy::proxy` and examples/prune_model.rs).
+pub fn fig6c() -> Table {
+    let sp: Vec<f64> = (0..=9).map(|i| i as f64 * 0.1).collect();
+    let mut t = Table::new(
+        "fig6c",
+        "BERT-MNLI accuracy vs sparsity by granularity (surrogate)",
+        sp.iter().map(|s| format!("{:.0}%", s * 100.0)).collect(),
+    );
+    let fam = ModelFamily::BertMnli;
+    let patterns: Vec<(String, Pattern)> = vec![
+        ("EW".into(), Pattern::Ew),
+        ("BW-32".into(), Pattern::Bw { g: 32 }),
+        ("BW-64".into(), Pattern::Bw { g: 64 }),
+        ("TW-32".into(), Pattern::Tw { g: 32 }),
+        ("TW-64".into(), Pattern::Tw { g: 64 }),
+        ("TW-128".into(), Pattern::Tw { g: 128 }),
+    ];
+    for (label, p) in patterns {
+        t.push(&label, sp.iter().map(|&s| accuracy(fam, &p, s)).collect());
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_paper_shape() {
+        let t = fig6a();
+        let get = |label: &str| {
+            t.rows.iter().find(|(l, _)| l == label).map(|(_, c)| c.clone()).unwrap()
+        };
+        let tw128 = get("TW-128");
+        // crossover near 10%: slower than dense at 5%, faster at 20%
+        assert!(tw128[1] > 1.0, "TW-128 at 5%: {}", tw128[1]);
+        assert!(tw128[4] < 1.0, "TW-128 at 20%: {}", tw128[4]);
+        // VW-4 fixed point ~ 1/1.67
+        let vw = get("VW-4(STC)");
+        assert!((vw[10] - 1.0 / 1.67).abs() < 0.1, "VW point {}", vw[10]);
+        // BW-16 crosses later than BW-32
+        let bw16 = get("BW-16");
+        let bw32 = get("BW-32");
+        let cross = |c: &Vec<f64>| c.iter().position(|&v| v < 1.0).unwrap_or(usize::MAX);
+        assert!(cross(&bw16) > cross(&bw32));
+    }
+
+    #[test]
+    fn fig6b_paper_shape() {
+        let t = fig6b();
+        let get = |label: &str| {
+            t.rows.iter().find(|(l, _)| l == label).map(|(_, c)| c.clone()).unwrap()
+        };
+        // DTC reference ~ 1/9.7 of dense CUDA
+        let dtc = get("Dense-DTC(ref)");
+        assert!((dtc[0] - 1.0 / 9.7).abs() < 0.03, "DTC ref {}", dtc[0]);
+        // EW needs >95% to beat dense: still slower at 90%
+        let ew = get("EW(cuSparse)");
+        assert!(ew[18] > 1.0, "EW at 90% should still be above dense: {}", ew[18]);
+        assert!(ew[14] > 1.0, "EW at 70% should be above dense: {}", ew[14]);
+        // TW crossover earlier on CUDA (~5%)
+        let tw128 = get("TW-128");
+        assert!(tw128[2] < 1.0, "TW-128 at 10% on CUDA: {}", tw128[2]);
+    }
+
+    #[test]
+    fn fig6c_granularity_ordering() {
+        let t = fig6c();
+        let at75 = |label: &str| {
+            t.rows.iter().find(|(l, _)| l == label).map(|(_, c)| c[7]).unwrap()
+        };
+        assert!(at75("EW") > at75("TW-128"));
+        assert!(at75("TW-32") > at75("TW-128")); // smaller G = better accuracy
+        assert!(at75("TW-128") > at75("BW-32"));
+        assert!(at75("BW-32") > at75("BW-64"));
+    }
+}

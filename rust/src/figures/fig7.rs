@@ -1,0 +1,119 @@
+//! Fig. 7: the TEW hybrid — (a) accuracy for delta in {1, 5, 10}% vs EW
+//! and TW; (b) latency (tensor core + CUDA core) and accuracy of the
+//! 75%-sparse BERT model as delta varies, normalized to dense-on-CUDA.
+
+use super::Table;
+use crate::accuracy::{accuracy, ModelFamily};
+use crate::gpusim::{
+    dense_plan, tew_latency, tw_latency, tw_uniform_tiles, Calibration, GemmShape, Pipe,
+    TwStrategy,
+};
+use crate::sparse::Pattern;
+
+const SHAPE: GemmShape = GemmShape { m: 4096, k: 4096, n: 4096 };
+
+/// Fig. 7a: accuracy vs sparsity for EW, TW, TEW-{1,5,10}% (surrogate).
+pub fn fig7a() -> Table {
+    let sp: Vec<f64> = (0..=9).map(|i| i as f64 * 0.1).collect();
+    let mut t = Table::new(
+        "fig7a",
+        "BERT accuracy: TEW delta sweep (surrogate)",
+        sp.iter().map(|s| format!("{:.0}%", s * 100.0)).collect(),
+    );
+    let fam = ModelFamily::BertMnli;
+    t.push("EW", sp.iter().map(|&s| accuracy(fam, &Pattern::Ew, s)).collect());
+    t.push("TW-128", sp.iter().map(|&s| accuracy(fam, &Pattern::Tw { g: 128 }, s)).collect());
+    for d in [1u8, 5, 10] {
+        t.push(
+            &format!("TEW-{d}%"),
+            sp.iter()
+                .map(|&s| accuracy(fam, &Pattern::Tew { g: 128, delta_pct: d }, s))
+                .collect(),
+        );
+    }
+    t
+}
+
+/// Fig. 7b: latency of dense / TW / TEW(delta) at fixed 75% sparsity on
+/// both pipes, all normalized to the dense model on the CUDA core, plus
+/// the accuracy row.
+pub fn fig7b() -> Table {
+    let specs = crate::gpusim::a100();
+    let cal = Calibration::default();
+    let mut t = Table::new(
+        "fig7b",
+        "75%-sparse BERT: latency (normalized to dense CUDA) & accuracy vs delta",
+        vec!["lat-TC".into(), "lat-CUDA".into(), "accuracy".into()],
+    );
+    let dense_cuda = dense_plan(SHAPE, Pipe::CudaFp32, &specs, &cal).latency(&specs);
+    let dense_tc = dense_plan(SHAPE, Pipe::TensorFp16, &specs, &cal).latency(&specs);
+    let fam = ModelFamily::BertMnli;
+    let s = 0.75;
+
+    t.push("Dense", vec![dense_tc / dense_cuda, 1.0, fam.baseline()]);
+    let tiles = tw_uniform_tiles(SHAPE, s, 128);
+    let tw_tc =
+        tw_latency(SHAPE, &tiles, 128, Pipe::TensorFp16, TwStrategy::FusedCto, &specs, &cal);
+    let tw_cuda =
+        tw_latency(SHAPE, &tiles, 128, Pipe::CudaFp32, TwStrategy::FusedCto, &specs, &cal);
+    t.push(
+        "TW-128",
+        vec![tw_tc / dense_cuda, tw_cuda / dense_cuda, accuracy(fam, &Pattern::Tw { g: 128 }, s)],
+    );
+    for d in [1u8, 2, 5, 10] {
+        let delta = d as f64 / 100.0;
+        // at fixed total sparsity, the TW part carries s + delta
+        let tew_tiles = tw_uniform_tiles(SHAPE, (s + delta).min(0.99), 128);
+        let tc = tew_latency(SHAPE, &tew_tiles, 128, delta, Pipe::TensorFp16, &specs, &cal);
+        let cuda = tew_latency(SHAPE, &tew_tiles, 128, delta, Pipe::CudaFp32, &specs, &cal);
+        t.push(
+            &format!("TEW-{d}%"),
+            vec![
+                tc / dense_cuda,
+                cuda / dense_cuda,
+                accuracy(fam, &Pattern::Tew { g: 128, delta_pct: d }, s),
+            ],
+        );
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7a_delta_recovers_accuracy() {
+        let t = fig7a();
+        let at = |label: &str, i: usize| {
+            t.rows.iter().find(|(l, _)| l == label).map(|(_, c)| c[i]).unwrap()
+        };
+        // at 80% sparsity: TEW-1 < TEW-5 <= ~EW <= TEW-10 ordering
+        assert!(at("TEW-1%", 8) < at("TEW-5%", 8));
+        assert!(at("TEW-5%", 8) <= at("EW", 8) + 0.5);
+        assert!(at("TEW-10%", 8) >= at("EW", 8) - 0.1);
+        assert!(at("TW-128", 8) < at("TEW-1%", 8));
+    }
+
+    #[test]
+    fn fig7b_paper_shape() {
+        let t = fig7b();
+        let row = |label: &str| {
+            t.rows.iter().find(|(l, _)| l == label).map(|(_, c)| c.clone()).unwrap()
+        };
+        let dense = row("Dense");
+        let tw = row("TW-128");
+        let tew1 = row("TEW-1%");
+        let tew10 = row("TEW-10%");
+        // TW on TC is ~3x faster than dense TC (paper: 2.98x)
+        let tw_speedup = dense[0] / tw[0];
+        assert!(tw_speedup > 2.0 && tw_speedup < 4.5, "TW speedup {tw_speedup}");
+        // TEW latency grows with delta; TEW-1% loses (most of) TW's gain
+        assert!(tew1[0] > tw[0]);
+        assert!(tew10[0] > tew1[0]);
+        // on CUDA cores only, TEW-1% still beats the dense model (paper: ~2x)
+        assert!(tew1[1] < 1.0, "TEW-1% on CUDA: {}", tew1[1]);
+        // accuracy column increases with delta
+        assert!(tew10[2] > tew1[2]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Fig. 8: accuracy vs sparsity for all six model/task pairs under every
+//! pattern (surrogate magnitudes; mechanism validated by accuracy::proxy).
+
+use super::Table;
+use crate::accuracy::{accuracy, ModelFamily};
+use crate::sparse::Pattern;
+
+/// The paper's per-model granularity choice: G=64 for CNNs, 128 for
+/// NMT/BERT; BW fixed at 16 (the §VI-B design-space conclusion).
+pub fn model_granularity(family: ModelFamily) -> usize {
+    match family {
+        ModelFamily::Vgg16 | ModelFamily::Resnet18 | ModelFamily::Resnet50 => 64,
+        _ => 128,
+    }
+}
+
+pub fn families() -> Vec<ModelFamily> {
+    vec![
+        ModelFamily::Vgg16,
+        ModelFamily::Resnet18,
+        ModelFamily::Resnet50,
+        ModelFamily::Nmt,
+        ModelFamily::BertMnli,
+        ModelFamily::BertSquad,
+    ]
+}
+
+fn patterns(g: usize) -> Vec<(String, Pattern)> {
+    vec![
+        ("EW".into(), Pattern::Ew),
+        ("VW-4".into(), Pattern::Vw { m: 4 }),
+        ("VW-16".into(), Pattern::Vw { m: 16 }),
+        ("BW-16".into(), Pattern::Bw { g: 16 }),
+        (format!("TW-{g}"), Pattern::Tw { g }),
+        (format!("TVW-4(G={g})"), Pattern::Tvw { g, m: 4 }),
+        (format!("TVW-16(G={g})"), Pattern::Tvw { g, m: 16 }),
+    ]
+}
+
+/// One sub-figure: accuracy curves for a model family.
+pub fn fig8_model(family: ModelFamily) -> Table {
+    let sp: Vec<f64> = vec![0.25, 0.5, 0.625, 0.75, 0.8125, 0.875, 0.9375];
+    let g = model_granularity(family);
+    let mut t = Table::new(
+        "fig8",
+        &format!("{} accuracy ({}) vs sparsity (surrogate)", family.label(), family.metric_name()),
+        sp.iter().map(|s| format!("{:.1}%", s * 100.0)).collect(),
+    );
+    for (label, p) in patterns(g) {
+        t.push(
+            &label,
+            sp.iter()
+                .map(|&s| {
+                    // TVW starts at 50% (hardware floor); VW points are fixed
+                    match p {
+                        Pattern::Tvw { .. } if s < 0.5 => f64::NAN,
+                        Pattern::Vw { m: 4 } if (s - 0.5).abs() > 1e-9 => f64::NAN,
+                        Pattern::Vw { m: 16 } if (s - 0.75).abs() > 1e-9 => f64::NAN,
+                        _ => accuracy(family, &p, s),
+                    }
+                })
+                .collect(),
+        );
+    }
+    t
+}
+
+impl ModelFamily {
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            ModelFamily::Nmt => "BLEU",
+            ModelFamily::BertSquad => "F1",
+            ModelFamily::BertMnli => "acc",
+            _ => "top-5",
+        }
+    }
+}
+
+/// All six sub-figures.
+pub fn fig8_all() -> Vec<Table> {
+    families().into_iter().map(fig8_model).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_subfigures() {
+        assert_eq!(fig8_all().len(), 6);
+    }
+
+    #[test]
+    fn ew_best_everywhere() {
+        for t in fig8_all() {
+            let ew: Vec<f64> =
+                t.rows.iter().find(|(l, _)| l == "EW").map(|(_, c)| c.clone()).unwrap();
+            for (label, cells) in &t.rows {
+                if label == "EW" {
+                    continue;
+                }
+                for (i, (&e, &o)) in ew.iter().zip(cells).enumerate() {
+                    if !o.is_nan() {
+                        assert!(e >= o - 0.3, "{}: EW {e} < {label} {o} at col {i}", t.title);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tvw16_beats_tw() {
+        let t = fig8_model(ModelFamily::BertMnli);
+        let get = |label: &str| {
+            t.rows.iter().find(|(l, _)| l.starts_with(label)).map(|(_, c)| c.clone()).unwrap()
+        };
+        let tvw16 = get("TVW-16");
+        let tw = get("TW-");
+        // beyond 50%, TVW-16 dominates TW (paper §VI-C)
+        for i in 1..tw.len() {
+            if !tvw16[i].is_nan() {
+                assert!(tvw16[i] >= tw[i], "col {i}: {} vs {}", tvw16[i], tw[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn collapse_past_75_for_structured() {
+        let t = fig8_model(ModelFamily::BertMnli);
+        let tw: Vec<f64> =
+            t.rows.iter().find(|(l, _)| l.starts_with("TW-")).map(|(_, c)| c.clone()).unwrap();
+        // columns: ..., 75% at idx 3, 93.75% at idx 6
+        let drop_mid = ModelFamily::BertMnli.baseline() - tw[3];
+        let drop_high = ModelFamily::BertMnli.baseline() - tw[6];
+        assert!(drop_high > 3.0 * drop_mid);
+    }
+}

@@ -1,0 +1,215 @@
+//! Figure-regeneration harnesses: one function per table/figure in the
+//! paper's evaluation (§VI), emitting structured tables the CLI prints
+//! and the benches record.  DESIGN.md §3 maps each figure to its modules.
+
+pub mod fig10;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod headline;
+
+use crate::gpusim::{
+    bw_plan, dense_plan, ew_plan, tvw_latency, tw_latency, tw_uniform_tiles, vw24_plan,
+    Calibration, GemmShape, GpuSpecs, Pipe, TwStrategy,
+};
+use crate::models::ModelWorkload;
+
+/// A rendered figure: column headers + rows of (label, numeric cells).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub id: &'static str,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(id: &'static str, title: &str, columns: Vec<String>) -> Table {
+        Table { id, title: title.to_string(), columns, rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, label: &str, cells: Vec<f64>) {
+        self.rows.push((label.to_string(), cells));
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap_or(8)
+            + 2;
+        out.push_str(&format!("{:label_w$}", ""));
+        for c in &self.columns {
+            out.push_str(&format!("{c:>12}"));
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("{label:label_w$}"));
+            for v in cells {
+                if v.is_nan() {
+                    out.push_str(&format!("{:>12}", "-"));
+                } else if v.abs() >= 1000.0 {
+                    out.push_str(&format!("{v:>12.0}"));
+                } else {
+                    out.push_str(&format!("{v:>12.3}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label");
+        for c in &self.columns {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(label);
+            for v in cells {
+                out.push(',');
+                if v.is_nan() {
+                    out.push_str("");
+                } else {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Serialise to the json module's value type.
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::{arr, num, obj, s, Json};
+        obj(vec![
+            ("id", s(self.id)),
+            ("title", s(&self.title)),
+            ("columns", Json::Arr(self.columns.iter().map(|c| s(c)).collect())),
+            (
+                "rows",
+                arr(self
+                    .rows
+                    .iter()
+                    .map(|(l, cells)| {
+                        obj(vec![
+                            ("label", s(l)),
+                            ("cells", Json::Arr(cells.iter().map(|&v| num(v)).collect())),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Pattern selector for model-level latency aggregation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyPattern {
+    Dense(Pipe),
+    Vw4 { int8: bool },
+    Bw { g: usize, sparsity: f64 },
+    Ew,
+    Tw { g: usize, pipe: Pipe, sparsity: f64 },
+    Tvw { g: usize, sparsity: f64 },
+    Int8Dense,
+}
+
+/// Simulated latency of one GEMM under a pattern.
+pub fn gemm_latency(
+    shape: GemmShape,
+    pattern: LatencyPattern,
+    specs: &GpuSpecs,
+    cal: &Calibration,
+) -> f64 {
+    match pattern {
+        LatencyPattern::Dense(pipe) => dense_plan(shape, pipe, specs, cal).latency(specs),
+        LatencyPattern::Int8Dense => dense_plan(shape, Pipe::TensorInt8, specs, cal).latency(specs),
+        LatencyPattern::Vw4 { int8 } => vw24_plan(shape, int8, specs, cal).latency(specs),
+        LatencyPattern::Bw { g, sparsity } => bw_plan(shape, sparsity, g, specs, cal).latency(specs),
+        LatencyPattern::Ew => ew_plan(shape, 0.0, specs, cal).latency(specs),
+        LatencyPattern::Tw { g, pipe, sparsity } => {
+            let tiles = tw_uniform_tiles(shape, sparsity, g);
+            tw_latency(shape, &tiles, g, pipe, TwStrategy::FusedCto, specs, cal)
+        }
+        LatencyPattern::Tvw { g, sparsity } => {
+            let s_tw = (1.0 - 2.0 * (1.0 - sparsity)).max(0.0);
+            let tiles = tw_uniform_tiles(shape, s_tw, g);
+            tvw_latency(shape, &tiles, g, specs, cal)
+        }
+    }
+}
+
+/// Simulated latency of a whole model: prunable layers use `pattern` (at
+/// `sparsity` where applicable), non-prunable layers stay dense on
+/// `dense_pipe` (the paper keeps first convs dense).
+pub fn model_latency(
+    model: &ModelWorkload,
+    pattern: impl Fn(GemmShape) -> LatencyPattern,
+    dense_pipe: Pipe,
+    specs: &GpuSpecs,
+    cal: &Calibration,
+) -> f64 {
+    let mut total = 0.0;
+    for layer in &model.layers {
+        let lat = if layer.prunable {
+            gemm_latency(layer.shape, pattern(layer.shape), specs, cal)
+        } else {
+            dense_plan(layer.shape, dense_pipe, specs, cal).latency(specs)
+        };
+        total += lat * layer.count as f64;
+    }
+    total
+}
+
+/// Sparsity at which a model-level pattern is evaluated by Fig. 10/11:
+/// highest sparsity within the iso-accuracy tolerance (the paper's "<2%
+/// accuracy drop" comparison).
+pub fn sparsity_grid() -> Vec<f64> {
+    vec![0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.8125, 0.875, 0.9375]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::a100;
+    use crate::models::bert_base;
+
+    #[test]
+    fn table_renders_and_roundtrips_csv() {
+        let mut t = Table::new("test", "demo", vec!["a".into(), "b".into()]);
+        t.push("row1", vec![1.0, f64::NAN]);
+        let txt = t.render();
+        assert!(txt.contains("row1"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("label,a,b"));
+        assert!(crate::json::Json::parse(&t.to_json().to_string()).is_ok());
+    }
+
+    #[test]
+    fn model_latency_tw_beats_dense_at_75() {
+        let specs = a100();
+        let cal = Calibration::default();
+        let bert = bert_base(8, 128);
+        let dense = model_latency(&bert, |_| LatencyPattern::Dense(Pipe::TensorFp16),
+                                  Pipe::TensorFp16, &specs, &cal);
+        let tw = model_latency(
+            &bert,
+            |_| LatencyPattern::Tw { g: 128, pipe: Pipe::TensorFp16, sparsity: 0.75 },
+            Pipe::TensorFp16,
+            &specs,
+            &cal,
+        );
+        assert!(tw < dense, "tw {tw} dense {dense}");
+        assert!(dense / tw > 1.5, "speedup {}", dense / tw);
+    }
+}

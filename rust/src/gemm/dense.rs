@@ -1,0 +1,140 @@
+//! Dense CPU GEMM — the baseline hot path.
+//!
+//! `matmul` is the cache-blocked, auto-vectorizing kernel used everywhere;
+//! `matmul_naive` is the textbook triple loop kept for correctness
+//! cross-checks and as the "before" point of the §Perf log.
+
+use crate::tensor::Matrix;
+
+/// Blocked C = A * B.  Loop order (i, k, j) with row-major operands makes
+/// the inner j-loop a contiguous FMA stream the compiler vectorizes.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // block sizes tuned for ~32 KiB L1: a-block 64x64 f32 = 16 KiB
+    const BM: usize = 64;
+    const BK: usize = 64;
+    for i0 in (0..m).step_by(BM) {
+        let i1 = (i0 + BM).min(m);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                // 2-way k unroll: one pass over the C row per two B rows
+                let mut kk = k0;
+                while kk + 1 < k1 {
+                    let a0 = arow[kk];
+                    let a1 = arow[kk + 1];
+                    let b0 = &b.data[kk * n..(kk + 1) * n];
+                    let b1 = &b.data[(kk + 1) * n..(kk + 2) * n];
+                    for ((cv, bv0), bv1) in crow.iter_mut().zip(b0).zip(b1) {
+                        *cv += a0 * bv0 + a1 * bv1;
+                    }
+                    kk += 2;
+                }
+                if kk < k1 {
+                    let aik = arow[kk];
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Textbook triple loop (correctness oracle).
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a.at(i, kk) * b.at(kk, j);
+            }
+            *c.at_mut(i, j) = acc;
+        }
+    }
+    c
+}
+
+/// Multi-threaded blocked GEMM: row bands across `threads` std threads.
+pub fn matmul_parallel(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if threads <= 1 || m < threads * 8 {
+        return matmul(a, b);
+    }
+    let mut c = Matrix::zeros(m, n);
+    let band = m.div_ceil(threads);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    let chunks: Vec<&mut [f32]> = c.data.chunks_mut(band * n).collect();
+    std::thread::scope(|scope| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let i0 = t * band;
+            scope.spawn(move || {
+                let rows = chunk.len() / n;
+                for i in 0..rows {
+                    let arow = &a_data[(i0 + i) * k..(i0 + i + 1) * k];
+                    let crow = &mut chunk[i * n..(i + 1) * n];
+                    for (kk, &aik) in arow.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b_data[kk * n..(kk + 1) * n];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(70);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 13, 5), (64, 64, 64), (100, 37, 59)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c1 = matmul(&a, &b);
+            let c2 = matmul_naive(&a, &b);
+            assert!(c1.max_abs_diff(&c2) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_blocked() {
+        let mut rng = Rng::new(71);
+        let a = Matrix::randn(128, 96, &mut rng);
+        let b = Matrix::randn(96, 64, &mut rng);
+        let c1 = matmul(&a, &b);
+        let c2 = matmul_parallel(&a, &b, 4);
+        assert!(c1.max_abs_diff(&c2) < 1e-3);
+    }
+
+    #[test]
+    fn identity_multiplication() {
+        let mut rng = Rng::new(72);
+        let a = Matrix::randn(16, 16, &mut rng);
+        let mut eye = Matrix::zeros(16, 16);
+        for i in 0..16 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        assert!(matmul(&a, &eye).max_abs_diff(&a) < 1e-6);
+    }
+}

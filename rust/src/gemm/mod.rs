@@ -1,0 +1,14 @@
+//! CPU GEMM kernels: the dense baseline, the TW fused-CTO kernel and its
+//! ablation variants, the 2:4 / TVW kernels, and the CSR / block-sparse
+//! baselines.  These are the §Perf-profiled hot paths; the GPU-side cost
+//! analysis lives in `gpusim`.
+
+pub mod dense;
+pub mod spmm;
+pub mod tw;
+pub mod vw;
+
+pub use dense::{matmul, matmul_naive, matmul_parallel};
+pub use spmm::{block_spmm, csr_spmm, BlockSparse};
+pub use tw::{tw_matmul, tw_matmul_into, tw_matmul_masked, tw_matmul_parallel, tw_matmul_per_tile};
+pub use vw::{tvw_matmul, vw24_matmul};

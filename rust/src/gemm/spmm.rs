@@ -1,0 +1,138 @@
+//! Sparse-dense matrix multiplication baselines: CSR SpMM (the EW /
+//! cuSparse analogue) and block-sparse GEMM (the BW / Triton-blocksparse
+//! analogue).
+
+use crate::sparse::{Csr, Mask};
+use crate::tensor::Matrix;
+
+/// C = A * W with W in CSR.  Irregular inner access over W's columns —
+/// the structural reason EW is slow on wide-vector hardware; on CPU the
+/// penalty shows up as strided writes across C.
+pub fn csr_spmm(a: &Matrix, w: &Csr) -> Matrix {
+    assert_eq!(a.cols, w.rows);
+    let (m, n) = (a.rows, w.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for kk in 0..w.rows {
+            let aik = arow[kk];
+            if aik == 0.0 {
+                continue;
+            }
+            for idx in w.row_ptr[kk]..w.row_ptr[kk + 1] {
+                crow[w.col_idx[idx] as usize] += aik * w.vals[idx];
+            }
+        }
+    }
+    c
+}
+
+/// Block descriptor for the block-sparse GEMM: which GxG blocks of W are
+/// kept, plus the dense payload of those blocks.
+#[derive(Clone, Debug)]
+pub struct BlockSparse {
+    pub k: usize,
+    pub n: usize,
+    pub g: usize,
+    /// (block_row, block_col) of each kept block.
+    pub blocks: Vec<(u32, u32)>,
+    /// g*g values per kept block, row-major.
+    pub vals: Vec<f32>,
+}
+
+impl BlockSparse {
+    /// Build from a BW-masked matrix; K and N must be multiples of g for
+    /// the payload extraction (callers pad otherwise).
+    pub fn from_masked(w: &Matrix, mask: &Mask, g: usize) -> BlockSparse {
+        assert_eq!(w.rows % g, 0);
+        assert_eq!(w.cols % g, 0);
+        let wm = mask.apply(w);
+        let (bk, bn) = (w.rows / g, w.cols / g);
+        let mut blocks = Vec::new();
+        let mut vals = Vec::new();
+        for bi in 0..bk {
+            for bj in 0..bn {
+                let any = (0..g).any(|r| (0..g).any(|c| mask.at(bi * g + r, bj * g + c)));
+                if any {
+                    blocks.push((bi as u32, bj as u32));
+                    for r in 0..g {
+                        for c in 0..g {
+                            vals.push(wm.at(bi * g + r, bj * g + c));
+                        }
+                    }
+                }
+            }
+        }
+        BlockSparse { k: w.rows, n: w.cols, g, blocks, vals }
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// C = A * W with W block-sparse: dense micro-GEMM per kept block.
+pub fn block_spmm(a: &Matrix, w: &BlockSparse) -> Matrix {
+    assert_eq!(a.cols, w.k);
+    let (m, n, g) = (a.rows, w.n, w.g);
+    let mut c = Matrix::zeros(m, n);
+    for (bidx, &(bi, bj)) in w.blocks.iter().enumerate() {
+        let k0 = bi as usize * g;
+        let n0 = bj as usize * g;
+        let payload = &w.vals[bidx * g * g..(bidx + 1) * g * g];
+        for i in 0..m {
+            let arow = &a.row(i)[k0..k0 + g];
+            let crow = &mut c.row_mut(i)[n0..n0 + g];
+            for (r, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &payload[r * g..(r + 1) * g];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dense::matmul_naive;
+    use crate::sparse::{prune_bw, prune_ew};
+    use crate::util::Rng;
+
+    #[test]
+    fn csr_spmm_matches_oracle() {
+        let mut rng = Rng::new(100);
+        let a = Matrix::randn(20, 48, &mut rng);
+        let w = Matrix::randn(48, 36, &mut rng);
+        let mask = prune_ew(&w, 0.8, None);
+        let csr = Csr::from_masked(&w, &mask);
+        let want = matmul_naive(&a, &mask.apply(&w));
+        assert!(csr_spmm(&a, &csr).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn block_spmm_matches_oracle() {
+        let mut rng = Rng::new(101);
+        let a = Matrix::randn(24, 64, &mut rng);
+        let w = Matrix::randn(64, 64, &mut rng);
+        let mask = prune_bw(&w, 0.6, 16);
+        let bs = BlockSparse::from_masked(&w, &mask, 16);
+        let want = matmul_naive(&a, &mask.apply(&w));
+        assert!(block_spmm(&a, &bs).max_abs_diff(&want) < 1e-3);
+        assert!(bs.nnz_blocks() < 16);
+    }
+
+    #[test]
+    fn empty_csr_gives_zero() {
+        let a = Matrix::zeros(4, 8);
+        let w = Matrix::zeros(8, 8);
+        let csr = Csr::from_dense(&w);
+        assert_eq!(csr_spmm(&a, &csr), Matrix::zeros(4, 8));
+    }
+}

@@ -1,0 +1,277 @@
+//! TW condensed GEMM on the CPU — the Rust twin of the fused-CTO kernel
+//! (paper §V), plus the naive variants used by the Fig. 4 ablation.
+//!
+//! Strategies, in the paper's optimization order:
+//!   1. `tw_matmul_masked`  — skip pruned work via mask tests inside the
+//!      dense loop (the "naive tiling" strawman; uncoalesced analogue).
+//!   2. `tw_matmul_per_tile` — one GEMM per condensed tile (the
+//!      stream/batched stage: condensed operands, separate launches).
+//!   3. `tw_matmul`          — single fused pass over all tiles driven by
+//!      the CTO offset tables (the paper's final CTO kernel).
+
+use crate::sparse::{Mask, TwPlan};
+use crate::tensor::Matrix;
+
+/// Strawman: dense loop with per-element mask tests (no condensation).
+pub fn tw_matmul_masked(a: &Matrix, w: &Matrix, mask: &Mask) -> Matrix {
+    assert_eq!(a.cols, w.rows);
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a.at(i, kk);
+            for j in 0..n {
+                if mask.at(kk, j) {
+                    *c.at_mut(i, j) += aik * w.at(kk, j);
+                }
+            }
+        }
+    }
+    c
+}
+
+/// One condensed GEMM per tile: gather A columns, multiply, scatter C.
+pub fn tw_matmul_per_tile(a: &Matrix, plan: &TwPlan) -> Matrix {
+    let m = a.rows;
+    let mut c = Matrix::zeros(m, plan.n);
+    let mut a_gather = vec![0.0f32; m * plan.kmax];
+    for t in 0..plan.tiles {
+        let kt = plan.row_len[t] as usize;
+        let width = (0..plan.g).take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < plan.n).count();
+        // gather: a_gather (m x kt)
+        for i in 0..m {
+            let arow = a.row(i);
+            for ii in 0..kt {
+                a_gather[i * plan.kmax + ii] = arow[plan.row_idx[t * plan.kmax + ii] as usize];
+            }
+        }
+        // multiply + scatter
+        for i in 0..m {
+            for j in 0..width {
+                let cj = plan.col_idx[t * plan.g + j] as usize;
+                let mut acc = 0.0f32;
+                for ii in 0..kt {
+                    acc += a_gather[i * plan.kmax + ii] * plan.b_cond[(t * plan.kmax + ii) * plan.g + j];
+                }
+                *c.at_mut(i, cj) = acc;
+            }
+        }
+    }
+    c
+}
+
+/// The fused-CTO kernel: a single pass over all tiles with a blocked inner
+/// GEMM over the gathered operands.  This is the §Perf-optimized hot path.
+pub fn tw_matmul(a: &Matrix, plan: &TwPlan) -> Matrix {
+    let m = a.rows;
+    let mut c = Matrix::zeros(m, plan.n);
+    tw_matmul_into(a, plan, &mut c);
+    c
+}
+
+/// In-place variant (the serving loop reuses the output allocation).
+pub fn tw_matmul_into(a: &Matrix, plan: &TwPlan, c: &mut Matrix) {
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
+    let m = a.rows;
+    const BM: usize = 32;
+    let mut a_gather = vec![0.0f32; BM * plan.kmax];
+    let mut c_tile = vec![0.0f32; BM * plan.g];
+    for t in 0..plan.tiles {
+        let kt = plan.row_len[t] as usize;
+        let width = (0..plan.g)
+            .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < plan.n)
+            .count();
+        if kt == 0 || width == 0 {
+            continue;
+        }
+        let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+        for i0 in (0..m).step_by(BM) {
+            let bm = BM.min(m - i0);
+            // CTO gather of A columns into a compact (bm x kt) block
+            for i in 0..bm {
+                let arow = a.row(i0 + i);
+                let dst = &mut a_gather[i * plan.kmax..i * plan.kmax + kt];
+                for (d, &r) in dst.iter_mut().zip(rows) {
+                    *d = arow[r as usize];
+                }
+            }
+            // blocked (bm x kt) x (kt x width) GEMM into c_tile
+            // (§Perf: 2-way k unroll matching gemm::dense — one pass over
+            // the C row per two condensed B rows)
+            c_tile[..bm * width].fill(0.0);
+            for i in 0..bm {
+                let ag = &a_gather[i * plan.kmax..i * plan.kmax + kt];
+                let crow = &mut c_tile[i * width..(i + 1) * width];
+                let mut ii = 0usize;
+                while ii + 1 < kt {
+                    let a0 = ag[ii];
+                    let a1 = ag[ii + 1];
+                    let base0 = (t * plan.kmax + ii) * plan.g;
+                    let base1 = (t * plan.kmax + ii + 1) * plan.g;
+                    let b0 = &plan.b_cond[base0..base0 + width];
+                    let b1 = &plan.b_cond[base1..base1 + width];
+                    for ((cv, bv0), bv1) in crow.iter_mut().zip(b0).zip(b1) {
+                        *cv += a0 * bv0 + a1 * bv1;
+                    }
+                    ii += 2;
+                }
+                if ii < kt {
+                    let av = ag[ii];
+                    let base = (t * plan.kmax + ii) * plan.g;
+                    let brow = &plan.b_cond[base..base + width];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            // CTO scatter of output columns
+            for i in 0..bm {
+                let crow = c.row_mut(i0 + i);
+                for j in 0..width {
+                    crow[plan.col_idx[t * plan.g + j] as usize] = c_tile[i * width + j];
+                }
+            }
+        }
+    }
+}
+
+/// Multi-threaded fused kernel: tiles are independent (they write disjoint
+/// output columns), so they parallelise across threads without locks.
+pub fn tw_matmul_parallel(a: &Matrix, plan: &TwPlan, threads: usize) -> Matrix {
+    let m = a.rows;
+    if threads <= 1 || plan.tiles < 2 {
+        return tw_matmul(a, plan);
+    }
+    let mut c = Matrix::zeros(m, plan.n);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    let n = plan.n;
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(plan.tiles) {
+            let next = &next;
+            let c_ptr = &c_ptr;
+            scope.spawn(move || {
+                let mut a_gather = vec![0.0f32; plan.kmax];
+                loop {
+                    let t = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if t >= plan.tiles {
+                        break;
+                    }
+                    let kt = plan.row_len[t] as usize;
+                    let width = (0..plan.g)
+                        .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < n)
+                        .count();
+                    if kt == 0 || width == 0 {
+                        continue;
+                    }
+                    let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+                    for i in 0..m {
+                        let arow = a.row(i);
+                        for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
+                            *d = arow[r as usize];
+                        }
+                        for j in 0..width {
+                            let mut acc = 0.0f32;
+                            for ii in 0..kt {
+                                acc += a_gather[ii] * plan.b_cond[(t * plan.kmax + ii) * plan.g + j];
+                            }
+                            let cj = plan.col_idx[t * plan.g + j] as usize;
+                            // SAFETY: tiles own disjoint output columns
+                            unsafe { *c_ptr.0.add(i * n + cj) = acc };
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dense::matmul_naive;
+    use crate::sparse::prune_tw;
+    use crate::util::Rng;
+
+    fn setup(m: usize, k: usize, n: usize, s: f64, g: usize, seed: u64) -> (Matrix, Matrix, crate::sparse::TwStructure, TwPlan) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        let tw = prune_tw(&w, s, g, None);
+        let plan = TwPlan::encode(&w, &tw);
+        (a, w, tw, plan)
+    }
+
+    #[test]
+    fn fused_matches_mask_oracle() {
+        let (a, w, tw, plan) = setup(40, 96, 80, 0.6, 16, 80);
+        let want = matmul_naive(&a, &tw.mask().apply(&w));
+        let got = tw_matmul(&a, &plan);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let (a, w, tw, plan) = setup(24, 64, 48, 0.5, 16, 81);
+        let oracle = matmul_naive(&a, &tw.mask().apply(&w));
+        let masked = tw_matmul_masked(&a, &w, &tw.mask());
+        let per_tile = tw_matmul_per_tile(&a, &plan);
+        let fused = tw_matmul(&a, &plan);
+        let par = tw_matmul_parallel(&a, &plan, 4);
+        for (name, got) in [
+            ("masked", &masked),
+            ("per_tile", &per_tile),
+            ("fused", &fused),
+            ("parallel", &par),
+        ] {
+            assert!(got.max_abs_diff(&oracle) < 1e-3, "{name}");
+        }
+    }
+
+    #[test]
+    fn pruned_columns_are_zero() {
+        let (a, _, tw, plan) = setup(16, 32, 32, 0.7, 8, 82);
+        let got = tw_matmul(&a, &plan);
+        let kept: std::collections::HashSet<usize> = tw.kept_cols.iter().copied().collect();
+        for j in 0..32 {
+            if !kept.contains(&j) {
+                for i in 0..16 {
+                    assert_eq!(got.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn high_sparsity_extreme() {
+        let (a, w, tw, plan) = setup(8, 64, 64, 0.95, 16, 83);
+        let want = matmul_naive(&a, &tw.mask().apply(&w));
+        assert!(tw_matmul(&a, &plan).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn into_variant_overwrites() {
+        let (a, w, tw, plan) = setup(8, 32, 32, 0.5, 8, 84);
+        let mut c = Matrix::zeros(8, 32);
+        // poison kept columns; scatter must overwrite them
+        for v in &mut c.data {
+            *v = 123.0;
+        }
+        tw_matmul_into(&a, &plan, &mut c);
+        let want = matmul_naive(&a, &tw.mask().apply(&w));
+        let kept: std::collections::HashSet<usize> = tw.kept_cols.iter().copied().collect();
+        for i in 0..8 {
+            for j in 0..32 {
+                if kept.contains(&j) {
+                    assert!((c.at(i, j) - want.at(i, j)).abs() < 1e-3);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! 2:4 vector-wise sparse GEMM (sparse-tensor-core emulation) and the TVW
+//! fused kernel on the CPU.
+
+use crate::sparse::{TvwPlan, Vw24Plan};
+use crate::tensor::Matrix;
+
+/// C = A * B with B stored 2:4-compressed along K.  Walks only the kept
+/// half of the operands — the arithmetic saving the sparse tensor core
+/// realises in hardware.
+///
+/// Perf (§Perf log): processes one 4-row *group* at a time, staging the
+/// four A operands in a register-resident array indexed by the 2-bit
+/// metadata, and fusing the group's two compressed rows into one pass —
+/// halving metadata-loop overhead and removing the strided A re-reads of
+/// the naive per-compressed-row loop (2.0x on the 256x512x512 bench).
+pub fn vw24_matmul(a: &Matrix, plan: &Vw24Plan) -> Matrix {
+    assert_eq!(a.cols, plan.k);
+    let (m, n) = (a.rows, plan.n);
+    let groups = plan.k / 4;
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for g in 0..groups {
+            // the four candidate A operands of this group, in registers
+            let a4 = [arow[g * 4], arow[g * 4 + 1], arow[g * 4 + 2], arow[g * 4 + 3]];
+            if a4 == [0.0; 4] {
+                continue;
+            }
+            let v0 = &plan.b_vals[(g * 2) * n..(g * 2 + 1) * n];
+            let s0 = &plan.b_sel[(g * 2) * n..(g * 2 + 1) * n];
+            let v1 = &plan.b_vals[(g * 2 + 1) * n..(g * 2 + 2) * n];
+            let s1 = &plan.b_sel[(g * 2 + 1) * n..(g * 2 + 2) * n];
+            for j in 0..n {
+                crow[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+            }
+        }
+    }
+    c
+}
+
+/// TVW fused kernel: CTO gather (global-memory level) + 2:4 metadata
+/// expansion (register level) per condensed tile.
+pub fn tvw_matmul(a: &Matrix, plan: &TvwPlan) -> Matrix {
+    let m = a.rows;
+    let khalf = plan.kmax / 2;
+    let mut c = Matrix::zeros(m, plan.n);
+    let mut a_gather = vec![0.0f32; plan.kmax];
+    for t in 0..plan.tiles {
+        let kt = plan.row_len[t] as usize;
+        let width = (0..plan.g)
+            .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < plan.n)
+            .count();
+        if kt == 0 || width == 0 {
+            continue;
+        }
+        let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+        // only groups whose base is inside the valid kt range can carry
+        // nonzeros (encode zero-pads beyond kt)
+        let groups_max = kt.div_ceil(4).min(plan.kmax / 4);
+        // §Perf: accumulate into a compact c_tile and scatter once per row —
+        // the inner loop then writes a contiguous stream the compiler can
+        // vectorize, instead of CTO-scattered stores per element.
+        let mut c_tile = vec![0.0f32; width];
+        for i in 0..m {
+            let arow = a.row(i);
+            for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
+                *d = arow[r as usize];
+            }
+            for x in a_gather[kt..plan.kmax].iter_mut() {
+                *x = 0.0;
+            }
+            c_tile.fill(0.0);
+            for g in 0..groups_max {
+                let a4 = [
+                    a_gather[g * 4],
+                    a_gather[g * 4 + 1],
+                    a_gather[g * 4 + 2],
+                    a_gather[g * 4 + 3],
+                ];
+                if a4 == [0.0; 4] {
+                    continue;
+                }
+                let base0 = (t * khalf + g * 2) * plan.g;
+                let base1 = (t * khalf + g * 2 + 1) * plan.g;
+                let v0 = &plan.b_vals[base0..base0 + width];
+                let s0 = &plan.b_sel[base0..base0 + width];
+                let v1 = &plan.b_vals[base1..base1 + width];
+                let s1 = &plan.b_sel[base1..base1 + width];
+                for j in 0..width {
+                    c_tile[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+                }
+            }
+            let crow = c.row_mut(i);
+            for j in 0..width {
+                crow[plan.col_idx[t * plan.g + j] as usize] += c_tile[j];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dense::matmul_naive;
+    use crate::sparse::{prune_tvw, prune_vw, TvwPlan, Vw24Plan};
+    use crate::util::Rng;
+
+    #[test]
+    fn vw24_matches_mask_oracle() {
+        let mut rng = Rng::new(90);
+        let a = Matrix::randn(24, 64, &mut rng);
+        let w = Matrix::randn(64, 48, &mut rng);
+        let mask = prune_vw(&w, 0.5, 4);
+        let plan = Vw24Plan::encode(&w, &mask).unwrap();
+        let want = matmul_naive(&a, &mask.apply(&w));
+        assert!(vw24_matmul(&a, &plan).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn tvw_matches_mask_oracle() {
+        let mut rng = Rng::new(91);
+        let a = Matrix::randn(24, 96, &mut rng);
+        let w = Matrix::randn(96, 80, &mut rng);
+        for &s in &[0.5, 0.7, 0.875] {
+            let (tw, mask) = prune_tvw(&w, s, 16);
+            let plan = TvwPlan::encode(&w, &tw, &mask);
+            let want = matmul_naive(&a, &mask.apply(&w));
+            let got = tvw_matmul(&a, &plan);
+            assert!(got.max_abs_diff(&want) < 1e-3, "s={s}: {}", got.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn tvw_agrees_with_decode_then_dense() {
+        let mut rng = Rng::new(92);
+        let a = Matrix::randn(16, 64, &mut rng);
+        let w = Matrix::randn(64, 64, &mut rng);
+        let (tw, mask) = prune_tvw(&w, 0.75, 16);
+        let plan = TvwPlan::encode(&w, &tw, &mask);
+        let want = matmul_naive(&a, &plan.decode());
+        assert!(tvw_matmul(&a, &plan).max_abs_diff(&want) < 1e-3);
+    }
+}

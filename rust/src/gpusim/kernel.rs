@@ -1,0 +1,187 @@
+//! Kernel latency model: greedy list-scheduling of threadblock tiles over
+//! SMs with a per-tile roofline (compute vs HBM traffic).
+//!
+//! The makespan scheduler naturally exposes the two effects the paper's §V
+//! optimizations target: *load imbalance* from heterogeneous TW tiles and
+//! *under-utilization* from kernels with fewer tiles than SMs — and shows
+//! how batching/fusion (merging tile lists into one schedule) fixes both.
+
+use super::specs::{GpuSpecs, Pipe};
+
+/// One threadblock tile's work.
+#[derive(Clone, Copy, Debug)]
+pub struct TileWork {
+    /// FLOPs (or int OPs) executed by this tile — *kept* work only.
+    pub flops: f64,
+    /// HBM bytes read, already adjusted for L2/wave reuse by the plan
+    /// builder.
+    pub bytes_in: f64,
+    /// HBM bytes written.
+    pub bytes_out: f64,
+}
+
+/// A GPU kernel: homogeneous pipe + efficiency, heterogeneous tiles.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    pub pipe: Pipe,
+    /// Fraction of pipe peak this kernel family achieves (calibrated).
+    pub efficiency: f64,
+    /// Uncoalesced access pattern: scattered loads/stores cannot be
+    /// double-buffered behind compute, so memory time *adds* to compute
+    /// time instead of overlapping (the Fig. 4 "naive tiling" pathology).
+    pub serialize_mem: bool,
+    pub tiles: Vec<TileWork>,
+}
+
+impl Kernel {
+    /// Time one tile takes on one SM, given `active_sms` sharing HBM.
+    fn tile_time(&self, t: &TileWork, specs: &GpuSpecs, active_sms: usize) -> f64 {
+        let rate = self.pipe.rate(specs) * self.efficiency / specs.sms as f64;
+        let bw = specs.hbm_bytes_per_sec / active_sms.max(1) as f64;
+        let compute = t.flops / rate;
+        let mem = (t.bytes_in + t.bytes_out) / bw;
+        let body = if self.serialize_mem { compute + mem } else { compute.max(mem) };
+        body + specs.tile_overhead
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.tiles.iter().map(|t| t.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.tiles.iter().map(|t| t.bytes_in + t.bytes_out).sum()
+    }
+
+    /// Simulated execution latency (seconds) of this kernel alone.
+    pub fn latency(&self, specs: &GpuSpecs) -> f64 {
+        specs.launch_overhead + makespan(std::slice::from_ref(self), specs)
+    }
+}
+
+/// Greedy list-scheduling makespan of a set of kernels' tiles over the
+/// SMs.  Tiles are taken longest-first (LPT); each SM takes the next tile
+/// when free.  `active_sms` for the bandwidth share is the number of SMs
+/// that actually receive work.
+pub fn makespan(kernels: &[Kernel], specs: &GpuSpecs) -> f64 {
+    let mut times: Vec<f64> = Vec::new();
+    let total_tiles: usize = kernels.iter().map(|k| k.tiles.len()).sum();
+    if total_tiles == 0 {
+        return 0.0;
+    }
+    let active = total_tiles.min(specs.sms);
+    for k in kernels {
+        for t in &k.tiles {
+            times.push(k.tile_time(t, specs, active));
+        }
+    }
+    // LPT list scheduling over `sms` machines via a simple binary heap of
+    // machine loads (smallest load first).
+    times.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut loads = std::collections::BinaryHeap::with_capacity(specs.sms);
+    for _ in 0..specs.sms {
+        loads.push(std::cmp::Reverse(OrderedF64(0.0)));
+    }
+    for t in times {
+        let std::cmp::Reverse(OrderedF64(l)) = loads.pop().unwrap();
+        loads.push(std::cmp::Reverse(OrderedF64(l + t)));
+    }
+    loads
+        .into_iter()
+        .map(|std::cmp::Reverse(OrderedF64(l))| l)
+        .fold(0.0, f64::max)
+}
+
+/// Latency of kernels launched back-to-back in one stream.
+pub fn sequential_latency(kernels: &[Kernel], specs: &GpuSpecs) -> f64 {
+    kernels.iter().map(|k| k.latency(specs)).sum()
+}
+
+/// Latency of kernels launched on concurrent streams: the SM scheduler
+/// fills from all kernels' tiles, but the host still dispatches launches
+/// serially — so stream execution pays one launch overhead per kernel
+/// while fused execution (a single kernel) pays exactly one.  This gap is
+/// the paper's Fig. 4 step 5→6 fusion gain.
+pub fn concurrent_latency(kernels: &[Kernel], specs: &GpuSpecs) -> f64 {
+    if kernels.is_empty() {
+        return 0.0;
+    }
+    specs.launch_overhead * kernels.len() as f64 + makespan(kernels, specs)
+}
+
+#[derive(PartialEq)]
+struct OrderedF64(f64);
+impl Eq for OrderedF64 {}
+impl PartialOrd for OrderedF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrderedF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::specs::a100;
+
+    fn uniform_kernel(n: usize, flops: f64, bytes: f64) -> Kernel {
+        Kernel {
+            name: "test".into(),
+            pipe: Pipe::TensorFp16,
+            efficiency: 1.0,
+            serialize_mem: false,
+            tiles: vec![TileWork { flops, bytes_in: bytes, bytes_out: 0.0 }; n],
+        }
+    }
+
+    #[test]
+    fn makespan_scales_with_waves() {
+        let s = a100();
+        let one_wave = uniform_kernel(108, 1e8, 0.0).latency(&s);
+        let two_waves = uniform_kernel(216, 1e8, 0.0).latency(&s);
+        let ratio = (two_waves - s.launch_overhead) / (one_wave - s.launch_overhead);
+        assert!((ratio - 2.0).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn under_utilization_visible() {
+        let s = a100();
+        // 10 tiles on 108 SMs: same latency as 1 tile (all parallel)
+        let k10 = uniform_kernel(10, 1e8, 0.0).latency(&s);
+        let k1 = uniform_kernel(1, 1e8, 0.0).latency(&s);
+        assert!((k10 - k1).abs() / k1 < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_beats_sequential_for_small_kernels() {
+        let s = a100();
+        let kernels: Vec<Kernel> = (0..8).map(|_| uniform_kernel(16, 1e8, 0.0)).collect();
+        let seq = sequential_latency(&kernels, &s);
+        let conc = concurrent_latency(&kernels, &s);
+        assert!(conc < seq / 2.0, "seq={seq} conc={conc}");
+    }
+
+    #[test]
+    fn load_imbalance_hurts() {
+        let s = a100();
+        // same total work, one mix balanced / one skewed
+        let balanced = uniform_kernel(108, 1e8, 0.0);
+        let mut skewed = uniform_kernel(107, 0.5e8, 0.0);
+        skewed.tiles.push(TileWork { flops: 54.5e8, bytes_in: 0.0, bytes_out: 0.0 });
+        assert!(skewed.latency(&s) > balanced.latency(&s) * 1.5);
+    }
+
+    #[test]
+    fn memory_bound_tiles_use_roofline() {
+        let s = a100();
+        // huge traffic, trivial compute: latency tracks bytes/bandwidth
+        let k = uniform_kernel(108, 1.0, 1e7);
+        let lat = k.latency(&s) - s.launch_overhead;
+        let expected = 1e7 / (s.hbm_bytes_per_sec / 108.0) + s.tile_overhead;
+        assert!((lat - expected).abs() / expected < 0.01);
+    }
+}

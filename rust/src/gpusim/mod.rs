@@ -1,0 +1,20 @@
+//! Analytical A100-class latency simulator (the GPU-substitution substrate;
+//! see DESIGN.md §1).
+//!
+//! Structure: `specs` holds hardware constants + calibrated per-family
+//! efficiencies; `kernel` schedules threadblock tiles over SMs with a
+//! per-tile roofline; `plans` builds the tile lists for every sparsity
+//! pattern and execution strategy in the paper's evaluation.
+
+pub mod kernel;
+pub mod plans;
+pub mod report;
+pub mod specs;
+
+pub use kernel::{concurrent_latency, makespan, sequential_latency, Kernel, TileWork};
+pub use plans::{
+    bw_plan, dense_plan, ew_plan, tew_latency, tvw_latency, tw_latency, tw_tiles_from_plan,
+    tw_uniform_tiles, vw24_plan, GemmShape, TwStrategy, TwTileDesc,
+};
+pub use report::{report, Bound, KernelReport};
+pub use specs::{a100, Calibration, GpuSpecs, Pipe};

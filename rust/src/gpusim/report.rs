@@ -1,0 +1,127 @@
+//! Utilization reporting: turn a simulated kernel into the numbers a
+//! profiler would show — achieved throughput, fraction of pipe peak,
+//! occupancy, and the binding resource — used by the `simulate-model`
+//! CLI for per-layer breakdowns.
+
+use super::kernel::Kernel;
+use super::specs::GpuSpecs;
+
+/// What limits a kernel in the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+    Occupancy,
+    Overhead,
+}
+
+impl Bound {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+            Bound::Occupancy => "occupancy",
+            Bound::Overhead => "overhead",
+        }
+    }
+}
+
+/// Profiler-style summary of one simulated kernel.
+#[derive(Clone, Debug)]
+pub struct KernelReport {
+    pub name: String,
+    pub latency: f64,
+    /// Achieved (kept-)FLOP/s.
+    pub achieved_flops: f64,
+    /// Fraction of the pipe's calibrated-efficiency peak.
+    pub peak_fraction: f64,
+    /// Mean busy fraction of the SMs over the kernel's lifetime.
+    pub occupancy: f64,
+    pub bound: Bound,
+    pub tiles: usize,
+}
+
+/// Build the report for one kernel.
+pub fn report(kernel: &Kernel, specs: &GpuSpecs) -> KernelReport {
+    let latency = kernel.latency(specs);
+    let flops = kernel.total_flops();
+    let achieved = flops / latency.max(1e-12);
+    let pipe_rate = kernel.pipe.rate(specs) * kernel.efficiency;
+    let peak_fraction = achieved / pipe_rate;
+
+    // occupancy: total tile-busy time over (latency x SMs)
+    let active = kernel.tiles.len().min(specs.sms);
+    let busy: f64 = kernel
+        .tiles
+        .iter()
+        .map(|t| {
+            let rate = pipe_rate / specs.sms as f64;
+            let bw = specs.hbm_bytes_per_sec / active.max(1) as f64;
+            let compute = t.flops / rate;
+            let mem = (t.bytes_in + t.bytes_out) / bw;
+            if kernel.serialize_mem { compute + mem } else { compute.max(mem) }
+        })
+        .sum();
+    let occupancy = (busy / (latency * specs.sms as f64)).min(1.0);
+
+    // binding resource: compare aggregate compute vs memory vs overhead time
+    let compute_time: f64 = flops / pipe_rate;
+    let mem_time: f64 = kernel.total_bytes() / specs.hbm_bytes_per_sec;
+    let overhead = specs.launch_overhead + kernel.tiles.len() as f64 * specs.tile_overhead
+        / specs.sms as f64;
+    let bound = if kernel.tiles.len() < specs.sms / 2 && occupancy < 0.5 {
+        Bound::Occupancy
+    } else if overhead > compute_time.max(mem_time) {
+        Bound::Overhead
+    } else if mem_time > compute_time {
+        Bound::Memory
+    } else {
+        Bound::Compute
+    };
+
+    KernelReport {
+        name: kernel.name.clone(),
+        latency,
+        achieved_flops: achieved,
+        peak_fraction,
+        occupancy,
+        bound,
+        tiles: kernel.tiles.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::plans::{dense_plan, ew_plan, GemmShape};
+    use crate::gpusim::specs::{a100, Calibration, Pipe};
+
+    #[test]
+    fn big_dense_is_compute_bound_high_occupancy() {
+        let s = a100();
+        let k = dense_plan(GemmShape::new(4096, 4096, 4096), Pipe::TensorFp16, &s,
+                           &Calibration::default());
+        let r = report(&k, &s);
+        assert_eq!(r.bound, Bound::Compute);
+        assert!(r.occupancy > 0.9, "{}", r.occupancy);
+        assert!(r.peak_fraction > 0.8, "{}", r.peak_fraction);
+    }
+
+    #[test]
+    fn tiny_gemm_is_occupancy_bound() {
+        let s = a100();
+        let k = dense_plan(GemmShape::new(32, 64, 64), Pipe::TensorFp16, &s,
+                           &Calibration::default());
+        let r = report(&k, &s);
+        assert_eq!(r.bound, Bound::Occupancy);
+    }
+
+    #[test]
+    fn ew_never_reaches_compute_peak() {
+        let s = a100();
+        let k = ew_plan(GemmShape::new(4096, 4096, 4096), 0.9, &s, &Calibration::default());
+        let r = report(&k, &s);
+        assert!(r.peak_fraction < 1.0);
+        assert!(r.achieved_flops < 19.5e12);
+    }
+}

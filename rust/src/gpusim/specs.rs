@@ -1,0 +1,167 @@
+//! A100-class GPU constants and execution pipes.
+//!
+//! Peak numbers from the NVIDIA A100 whitepaper [9]: 108 SMs, 19.5 TFLOPS
+//! FP32 (CUDA cores), 312 TFLOPS FP16 (tensor cores), 624 TFLOPS FP16 on
+//! the sparse tensor core (2:4), 624/1248 TOPS INT8 dense/sparse, 1555
+//! GB/s HBM2e.
+
+/// Static hardware description used by the latency model.
+#[derive(Clone, Debug)]
+pub struct GpuSpecs {
+    pub name: &'static str,
+    pub sms: usize,
+    /// HBM bandwidth, bytes/second.
+    pub hbm_bytes_per_sec: f64,
+    /// FP32 CUDA-core throughput, FLOP/s.
+    pub cuda_fp32_flops: f64,
+    /// FP16 dense tensor-core throughput, FLOP/s.
+    pub tc_fp16_flops: f64,
+    /// FP16 sparse tensor-core throughput on 2:4 *kept* operations, FLOP/s.
+    /// (The STC doubles per-cycle MACs; counting only the kept half of the
+    /// operands, its effective rate on kept FLOPs equals the dense rate —
+    /// the 2x shows up because the kept FLOPs are half the dense FLOPs.)
+    pub stc_fp16_flops: f64,
+    /// INT8 tensor-core throughput, OP/s.
+    pub tc_int8_ops: f64,
+    pub stc_int8_ops: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Fixed per-threadblock-tile overhead, seconds (scheduling, smem
+    /// staging latency, epilogue).  This term is what makes small tiles
+    /// (BW-16) inefficient.
+    pub tile_overhead: f64,
+    /// Transaction-inflation factor for uncoalesced global accesses
+    /// (32B granules out of 128B lines).
+    pub uncoalesced_factor: f64,
+}
+
+/// Execution pipe: which functional units + datatype a kernel runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pipe {
+    /// FP32 on CUDA cores.
+    CudaFp32,
+    /// FP16 on dense tensor cores.
+    TensorFp16,
+    /// FP16 2:4 on sparse tensor cores (rate applies to *kept* FLOPs).
+    SparseTensorFp16,
+    /// INT8 on dense tensor cores.
+    TensorInt8,
+    /// INT8 2:4 on sparse tensor cores.
+    SparseTensorInt8,
+}
+
+impl Pipe {
+    /// Peak rate in (kept-)FLOP/s on `specs`.
+    pub fn rate(&self, specs: &GpuSpecs) -> f64 {
+        match self {
+            Pipe::CudaFp32 => specs.cuda_fp32_flops,
+            Pipe::TensorFp16 => specs.tc_fp16_flops,
+            Pipe::SparseTensorFp16 => specs.stc_fp16_flops,
+            Pipe::TensorInt8 => specs.tc_int8_ops,
+            Pipe::SparseTensorInt8 => specs.stc_int8_ops,
+        }
+    }
+
+    /// Bytes per element of the operand datatype.
+    pub fn elem_bytes(&self) -> f64 {
+        match self {
+            Pipe::CudaFp32 => 4.0,
+            Pipe::TensorFp16 | Pipe::SparseTensorFp16 => 2.0,
+            Pipe::TensorInt8 | Pipe::SparseTensorInt8 => 1.0,
+        }
+    }
+}
+
+/// The Tesla A100 of the paper's testbed.
+pub fn a100() -> GpuSpecs {
+    GpuSpecs {
+        name: "A100",
+        sms: 108,
+        hbm_bytes_per_sec: 1.555e12,
+        cuda_fp32_flops: 19.5e12,
+        tc_fp16_flops: 312e12,
+        stc_fp16_flops: 312e12, // on kept FLOPs; see field doc
+        tc_int8_ops: 624e12,
+        stc_int8_ops: 624e12,
+        launch_overhead: 4e-6,
+        tile_overhead: 1.2e-6,
+        uncoalesced_factor: 4.0,
+    }
+}
+
+/// Calibrated per-pattern efficiency factors (fraction of pipe peak a
+/// well-tuned kernel of that family reaches on large compute-bound
+/// shapes).  Each value is derived once from an anchor the paper states
+/// explicitly, then *frozen* — EXPERIMENTS.md records anchor vs model:
+///   - dense TC ~ 9.7x over dense CUDA on 4096^3 (Fig. 6b)
+///     => dense_eff_tc / dense_eff_cuda = 9.7 / 16;
+///   - VW-4 = 1.67x over dense TC on 4096^3 (Fig. 6a)
+///     => stc_eff = dense_eff_tc * 1.67 / 2;
+///   - TW-128 crossover vs dense at ~10% sparsity on TC, ~5% on CUDA
+///     => tw_eff = dense_eff * (1 - crossover);
+///   - EW (cuSparse) crossover vs dense CUDA at ~95% sparsity
+///     => ew_eff = dense_eff_cuda * 0.05;
+///   - BW-32 / BW-16 crossovers at 40% / 70% on TC
+///     => bw_eff(g) ~ dense_eff_tc * g / 53 (linear small-tile MMA loss);
+///   - Int8-dense 1.62x, Int8-sparse 2.16x over FP16 dense TC (§VI-B).
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub dense_eff_tc: f64,
+    pub dense_eff_cuda: f64,
+    pub stc_eff: f64,
+    pub tw_eff_tc: f64,
+    pub tw_eff_cuda: f64,
+    /// BW efficiency per unit of block size g (clamped to dense_eff_tc).
+    pub bw_eff_per_g: f64,
+    pub ew_eff: f64,
+    pub int8_eff: f64,
+    pub int8_sparse_eff: f64,
+}
+
+impl Calibration {
+    pub fn bw_eff(&self, g: usize) -> f64 {
+        (self.bw_eff_per_g * g as f64).min(self.dense_eff_tc)
+    }
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            dense_eff_tc: 0.60,
+            dense_eff_cuda: 0.97,
+            stc_eff: 0.50,       // 0.60 * 1.67 / 2
+            tw_eff_tc: 0.54,     // 0.60 * (1 - 0.10)
+            tw_eff_cuda: 0.92,   // 0.97 * (1 - 0.05)
+            bw_eff_per_g: 0.01125, // g=16 -> 0.18, g=32 -> 0.36
+            ew_eff: 0.0485,      // 0.97 * 0.05
+            int8_eff: 0.49,      // 1.62x over FP16 dense TC
+            int8_sparse_eff: 0.33, // 2.16x over FP16 dense TC
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_headline_ratio() {
+        let s = a100();
+        // 312 TFLOPS FP16 TC vs 19.5 TFLOPS FP32 CUDA = 16x raw
+        assert!((s.tc_fp16_flops / s.cuda_fp32_flops - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipe_rates_monotone() {
+        let s = a100();
+        assert!(Pipe::TensorFp16.rate(&s) > Pipe::CudaFp32.rate(&s));
+        assert!(Pipe::TensorInt8.rate(&s) > Pipe::TensorFp16.rate(&s));
+    }
+
+    #[test]
+    fn elem_bytes() {
+        assert_eq!(Pipe::CudaFp32.elem_bytes(), 4.0);
+        assert_eq!(Pipe::TensorFp16.elem_bytes(), 2.0);
+        assert_eq!(Pipe::TensorInt8.elem_bytes(), 1.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! # tilewise
+//!
+//! A full-system reproduction of *"Accelerating Sparse DNNs Based on Tiled
+//! GEMM"* (Guo et al., 2024): the tile-wise (TW), tile-element-wise (TEW)
+//! and tile-vector-wise (TVW) sparsity patterns, the multi-stage global
+//! pruning algorithm, the condensed/CTO GEMM execution machinery, and the
+//! serving runtime that runs AOT-compiled JAX/Pallas artifacts through
+//! PJRT — Python never on the request path.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`sparse`] — the six sparsity patterns, CTO plans, CSR/CSC, stats
+//! - [`pruner`] — Algorithm 1 multi-stage schedule + global budget
+//! - [`gemm`] — CPU GEMM hot paths (dense, TW fused-CTO, 2:4, TVW, SpMM)
+//! - [`gpusim`] — A100-class analytical latency simulator
+//! - [`models`] — model zoo: per-layer GEMM workloads (BERT, VGG, ResNet, NMT)
+//! - [`accuracy`] — trainable proxy + calibrated surrogate accuracy models
+//! - [`runtime`] — PJRT engine: load HLO-text artifacts, execute
+//! - [`coordinator`] — serving layer: router, dynamic batcher, metrics
+//! - [`figures`] — regeneration harnesses for every paper figure
+
+pub mod accuracy;
+pub mod coordinator;
+pub mod figures;
+pub mod gemm;
+pub mod gpusim;
+pub mod json;
+pub mod models;
+pub mod nn;
+pub mod pruner;
+pub mod quant;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

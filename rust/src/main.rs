@@ -1,0 +1,288 @@
+//! `tilewise` CLI — leader entrypoint for the serving stack, the figure
+//! harnesses, and the inspection tools.
+//!
+//! Subcommands (hand-rolled parser; the offline registry has no clap):
+//!   serve             run the serving stack with a synthetic open-loop client
+//!   figure <id|all>   regenerate a paper figure (fig6a..fig11, headline)
+//!   inspect-patterns  print the Fig. 9 mask heatmaps + statistics
+//!   prune             run the multi-stage pruner on a synthetic matrix
+//!   simulate          one-off gpusim query (shape x pattern x sparsity)
+
+use std::path::PathBuf;
+
+use tilewise::coordinator::{start, BatcherConfig, Policy, ServerConfig};
+use tilewise::figures::{fig10, fig6, fig7, fig8, fig9, headline};
+use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
+use tilewise::sparse::Pattern;
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("inspect-patterns") => cmd_inspect(),
+        Some("prune") => cmd_prune(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("simulate-model") => cmd_simulate_model(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: tilewise <command>\n\
+                 \n\
+                 commands:\n\
+                 \x20 serve [--artifacts DIR] [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive]\n\
+                 \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
+                 \x20 inspect-patterns\n\
+                 \x20 prune [--pattern ew|vw|bw|tw|tew|tvw] [--sparsity S] [--g G]\n\
+                 \x20 simulate [--m M --k K --n N] [--sparsity S] [--g G]\n\
+                 \x20 simulate-model [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--g G]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let dir = PathBuf::from(flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+    let requests: usize = flag(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let rate: f64 = flag(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(50.0);
+    let policy = match flag(args, "--policy").as_deref() {
+        Some("dense") => Policy::Fixed("model_dense".into()),
+        Some("tvw") => Policy::Fixed("model_tvw".into()),
+        Some("rr") => Policy::RoundRobin(vec![
+            "model_dense".into(),
+            "model_tw".into(),
+            "model_tvw".into(),
+        ]),
+        Some("adaptive") => Policy::Adaptive {
+            dense: "model_dense".into(),
+            sparse: "model_tvw".into(),
+            queue_threshold: 8,
+        },
+        _ => Policy::Fixed("model_tw".into()),
+    };
+    let cfg = ServerConfig {
+        batcher: BatcherConfig::default(),
+        policy,
+        variants: ServerConfig::default().variants,
+        max_queue: 0,
+    };
+    let handle = match start(&dir, cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("failed to start server: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "serving: batch={} seq={} d_model={} classes={}",
+        handle.batch, handle.seq, handle.d_model, handle.n_classes
+    );
+    let len = handle.seq * handle.d_model;
+    let mut rng = Rng::new(123);
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        pending.push(handle.submit(x, None));
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    println!(
+        "completed {ok}/{requests} requests, throughput {:.1} req/s",
+        handle.metrics.throughput()
+    );
+    for s in handle.metrics.snapshot() {
+        println!(
+            "  {:<12} n={:<5} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms batch={:.1}",
+            s.variant, s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms, s.mean_batch
+        );
+    }
+    0
+}
+
+fn cmd_figure(args: &[String]) -> i32 {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let csv_dir = flag(args, "--csv").map(PathBuf::from);
+    let mut tables = Vec::new();
+    match which {
+        "fig6a" => tables.push(fig6::fig6a()),
+        "fig6b" => tables.push(fig6::fig6b()),
+        "fig6c" => tables.push(fig6::fig6c()),
+        "fig7a" => tables.push(fig7::fig7a()),
+        "fig7b" => tables.push(fig7::fig7b()),
+        "fig8" => tables.extend(fig8::fig8_all()),
+        "fig9" => {
+            println!("{}", fig9::fig9_heatmaps());
+            tables.push(fig9::fig9_stats());
+        }
+        "fig10" => tables.extend(fig10::fig10_all()),
+        "fig11" => tables.extend(fig10::fig11_all()),
+        "headline" => tables.push(headline::headline()),
+        "all" => {
+            tables.push(fig6::fig6a());
+            tables.push(fig6::fig6b());
+            tables.push(fig6::fig6c());
+            tables.push(fig7::fig7a());
+            tables.push(fig7::fig7b());
+            tables.extend(fig8::fig8_all());
+            tables.push(fig9::fig9_stats());
+            tables.extend(fig10::fig10_all());
+            tables.extend(fig10::fig11_all());
+            tables.push(headline::headline());
+        }
+        other => {
+            eprintln!("unknown figure {other:?}");
+            return 2;
+        }
+    }
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        if let Some(dir) = &csv_dir {
+            let _ = std::fs::create_dir_all(dir);
+            let path = dir.join(format!("{}_{i}.csv", t.id));
+            if let Err(e) = std::fs::write(&path, t.to_csv()) {
+                eprintln!("writing {}: {e}", path.display());
+            }
+        }
+    }
+    0
+}
+
+fn cmd_inspect() -> i32 {
+    println!("{}", fig9::fig9_heatmaps());
+    println!("{}", fig9::fig9_stats().render());
+    0
+}
+
+fn parse_pattern(name: &str, g: usize) -> Option<Pattern> {
+    Some(match name {
+        "ew" => Pattern::Ew,
+        "vw" => Pattern::Vw { m: 4 },
+        "vw16" => Pattern::Vw { m: 16 },
+        "bw" => Pattern::Bw { g },
+        "tw" => Pattern::Tw { g },
+        "tew" => Pattern::Tew { g, delta_pct: 5 },
+        "tvw" => Pattern::Tvw { g, m: 4 },
+        _ => return None,
+    })
+}
+
+fn cmd_prune(args: &[String]) -> i32 {
+    let sparsity: f64 = flag(args, "--sparsity").and_then(|v| v.parse().ok()).unwrap_or(0.75);
+    let g: usize = flag(args, "--g").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let pname = flag(args, "--pattern").unwrap_or_else(|| "tw".into());
+    let Some(pattern) = parse_pattern(&pname, g) else {
+        eprintln!("unknown pattern {pname:?}");
+        return 2;
+    };
+    let mut rng = Rng::new(1);
+    let w = Matrix::randn(512, 512, &mut rng);
+    let pruner = tilewise::pruner::MultiStagePruner::new(pattern, sparsity, 0.25);
+    let (_, mask, reports) = pruner.run(&w, |_, _| {});
+    println!("pattern {} target {sparsity} on 512x512:", pattern.label());
+    for r in reports {
+        println!("  stage target={:.2} achieved={:.4}", r.target_sparsity, r.achieved_sparsity);
+    }
+    let stats = tilewise::sparse::mask_stats(&mask, 32);
+    println!(
+        "final sparsity={:.4} block_var={:.5} irregularity={:.4}",
+        stats.sparsity, stats.block_variance, stats.irregularity
+    );
+    0
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let m: usize = flag(args, "--m").and_then(|v| v.parse().ok()).unwrap_or(4096);
+    let k: usize = flag(args, "--k").and_then(|v| v.parse().ok()).unwrap_or(4096);
+    let n: usize = flag(args, "--n").and_then(|v| v.parse().ok()).unwrap_or(4096);
+    let sparsity: f64 = flag(args, "--sparsity").and_then(|v| v.parse().ok()).unwrap_or(0.75);
+    let g: usize = flag(args, "--g").and_then(|v| v.parse().ok()).unwrap_or(128);
+    let shape = GemmShape::new(m, k, n);
+    let specs = gpusim::a100();
+    let cal = Calibration::default();
+    let dense_tc = gpusim::dense_plan(shape, Pipe::TensorFp16, &specs, &cal).latency(&specs);
+    let dense_cuda = gpusim::dense_plan(shape, Pipe::CudaFp32, &specs, &cal).latency(&specs);
+    let tiles = gpusim::tw_uniform_tiles(shape, sparsity, g);
+    let tw =
+        gpusim::tw_latency(shape, &tiles, g, Pipe::TensorFp16, TwStrategy::FusedCto, &specs, &cal);
+    let tvw_tiles = gpusim::tw_uniform_tiles(shape, (1.0 - 2.0 * (1.0 - sparsity)).max(0.0), g);
+    let tvw = gpusim::tvw_latency(shape, &tvw_tiles, g, &specs, &cal);
+    let vw = gpusim::vw24_plan(shape, false, &specs, &cal).latency(&specs);
+    let ew = gpusim::ew_plan(shape, sparsity, &specs, &cal).latency(&specs);
+    println!("GEMM {m}x{k}x{n} @ sparsity {sparsity} (G={g}), simulated on {}:", specs.name);
+    println!("  dense  TC    {:.3} ms   (1.00x)", dense_tc * 1e3);
+    println!("  TW     TC    {:.3} ms   ({:.2}x)", tw * 1e3, dense_tc / tw);
+    println!("  TVW    STC   {:.3} ms   ({:.2}x)", tvw * 1e3, dense_tc / tvw);
+    println!("  VW-4   STC   {:.3} ms   ({:.2}x)", vw * 1e3, dense_tc / vw);
+    println!("  dense  CUDA  {:.3} ms   (1.00x vs CUDA)", dense_cuda * 1e3);
+    println!("  EW     CUDA  {:.3} ms   ({:.2}x vs CUDA)", ew * 1e3, dense_cuda / ew);
+    0
+}
+
+fn cmd_simulate_model(args: &[String]) -> i32 {
+    use tilewise::gpusim::{dense_plan, report, tw_latency, tw_uniform_tiles};
+    use tilewise::models;
+    let name = flag(args, "--model").unwrap_or_else(|| "bert".into());
+    let sparsity: f64 = flag(args, "--sparsity").and_then(|v| v.parse().ok()).unwrap_or(0.75);
+    let g: usize = flag(args, "--g").and_then(|v| v.parse().ok()).unwrap_or(128);
+    let workload = match name.as_str() {
+        "vgg16" => models::vgg16(),
+        "resnet18" => models::resnet18(),
+        "resnet50" => models::resnet50(),
+        "nmt" => models::nmt(128),
+        _ => models::bert_base(8, 128),
+    };
+    let specs = gpusim::a100();
+    let cal = Calibration::default();
+    println!(
+        "{} per-layer breakdown @ TW-{g} {:.0}% sparsity (simulated {}):",
+        workload.name, sparsity * 100.0, specs.name
+    );
+    println!(
+        "{:<16}{:>22}{:>12}{:>12}{:>10}{:>12}{:>10}",
+        "layer", "shape(MxKxN)xcount", "dense(us)", "tw(us)", "speedup", "bound", "occup"
+    );
+    let mut dense_total = 0.0;
+    let mut tw_total = 0.0;
+    for layer in &workload.layers {
+        let d_kernel = dense_plan(layer.shape, Pipe::TensorFp16, &specs, &cal);
+        let d = d_kernel.latency(&specs);
+        let r = report(&d_kernel, &specs);
+        let t = if layer.prunable {
+            let tiles = tw_uniform_tiles(layer.shape, sparsity, g);
+            tw_latency(layer.shape, &tiles, g, Pipe::TensorFp16, TwStrategy::FusedCto, &specs, &cal)
+        } else {
+            d
+        };
+        dense_total += d * layer.count as f64;
+        tw_total += t * layer.count as f64;
+        println!(
+            "{:<16}{:>22}{:>12.1}{:>12.1}{:>9.2}x{:>12}{:>9.2}",
+            layer.name,
+            format!("{}x{}x{} x{}", layer.shape.m, layer.shape.k, layer.shape.n, layer.count),
+            d * 1e6,
+            t * 1e6,
+            d / t,
+            r.bound.label(),
+            r.occupancy
+        );
+    }
+    println!(
+        "total: dense {:.1}us -> TW {:.1}us = {:.2}x model speedup",
+        dense_total * 1e6,
+        tw_total * 1e6,
+        dense_total / tw_total
+    );
+    0
+}

@@ -1,0 +1,190 @@
+//! Model zoo: the per-layer GEMM workloads of the paper's five benchmark
+//! networks (§VI-A), with convolutions lowered to GEMM via img2col
+//! (`M = H_out*W_out`, `K = C_in*k_h*k_w`, `N = C_out`).
+//!
+//! These shape lists drive the `gpusim` latency figures (Fig. 10/11): a
+//! model's latency under a pattern is the sum over its prunable GEMMs of
+//! the pattern's simulated kernel latency, plus the dense layers kept
+//! as-is (e.g. first conv layers, embedding-adjacent GEMMs).
+
+use crate::gpusim::GemmShape;
+
+/// One GEMM-shaped layer (possibly repeated `count` times).
+#[derive(Clone, Debug)]
+pub struct GemmLayer {
+    pub name: String,
+    pub shape: GemmShape,
+    pub count: usize,
+    /// Whether the pruner touches this layer (first convs are kept dense,
+    /// the paper's ResNet-50 observation in §VI-C).
+    pub prunable: bool,
+}
+
+/// A benchmark network as a GEMM workload.
+#[derive(Clone, Debug)]
+pub struct ModelWorkload {
+    pub name: &'static str,
+    /// Accuracy metric label for reports ("top-5", "BLEU", "acc", "F1").
+    pub metric: &'static str,
+    pub layers: Vec<GemmLayer>,
+}
+
+impl ModelWorkload {
+    pub fn total_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.shape.flops() * l.count as f64).sum()
+    }
+
+    pub fn prunable_layers(&self) -> impl Iterator<Item = &GemmLayer> {
+        self.layers.iter().filter(|l| l.prunable)
+    }
+}
+
+fn conv(name: &str, hw: usize, cin: usize, k: usize, cout: usize, count: usize, prunable: bool) -> GemmLayer {
+    GemmLayer {
+        name: name.to_string(),
+        shape: GemmShape::new(hw * hw, cin * k * k, cout),
+        count,
+        prunable,
+    }
+}
+
+fn fc(name: &str, m: usize, k: usize, n: usize, count: usize) -> GemmLayer {
+    GemmLayer { name: name.to_string(), shape: GemmShape::new(m, k, n), count, prunable: true }
+}
+
+/// BERT-base (12 layers, d=768, ffn=3072) at batch 8 x seq 128.
+pub fn bert_base(batch: usize, seq: usize) -> ModelWorkload {
+    let m = batch * seq;
+    let layers = vec![
+        fc("qkv", m, 768, 2304, 12),
+        fc("attn_out", m, 768, 768, 12),
+        fc("ffn1", m, 768, 3072, 12),
+        fc("ffn2", m, 3072, 768, 12),
+    ];
+    ModelWorkload { name: "BERT-base", metric: "acc", layers }
+}
+
+/// GNMT-style NMT: 2-layer LSTM encoder + decoder, hidden 512, batch 128.
+/// Each LSTM step's four gates form one (batch, 2*hidden, 4*hidden) GEMM;
+/// we count one unrolled step per token over a 32-token sentence.
+pub fn nmt(batch: usize) -> ModelWorkload {
+    let steps = 32;
+    let layers = vec![
+        fc("enc_l1_gates", batch, 1024, 2048, steps),
+        fc("enc_l2_gates", batch, 1024, 2048, steps),
+        fc("dec_l1_gates", batch, 1024, 2048, steps),
+        fc("dec_l2_gates", batch, 1024, 2048, steps),
+        fc("attention", batch, 512, 512, steps),
+        fc("softmax_proj", batch, 512, 4096, steps),
+    ];
+    ModelWorkload { name: "NMT", metric: "BLEU", layers }
+}
+
+/// VGG16 at 224x224 (13 convs + 3 FC).
+pub fn vgg16() -> ModelWorkload {
+    let layers = vec![
+        conv("conv1_1", 224, 3, 3, 64, 1, false), // first conv kept dense
+        conv("conv1_2", 224, 64, 3, 64, 1, true),
+        conv("conv2_1", 112, 64, 3, 128, 1, true),
+        conv("conv2_2", 112, 128, 3, 128, 1, true),
+        conv("conv3_1", 56, 128, 3, 256, 1, true),
+        conv("conv3_2", 56, 256, 3, 256, 2, true),
+        conv("conv4_1", 28, 256, 3, 512, 1, true),
+        conv("conv4_2", 28, 512, 3, 512, 2, true),
+        conv("conv5", 14, 512, 3, 512, 3, true),
+        fc("fc6", 1, 25088, 4096, 1),
+        fc("fc7", 1, 4096, 4096, 1),
+        fc("fc8", 1, 4096, 1000, 1),
+    ];
+    ModelWorkload { name: "VGG16", metric: "top-5", layers }
+}
+
+/// ResNet-18 at 224x224 (basic blocks).
+pub fn resnet18() -> ModelWorkload {
+    let layers = vec![
+        conv("conv1", 112, 3, 7, 64, 1, false),
+        conv("layer1", 56, 64, 3, 64, 4, true),
+        conv("layer2_ds", 28, 64, 3, 128, 1, true),
+        conv("layer2", 28, 128, 3, 128, 3, true),
+        conv("layer3_ds", 14, 128, 3, 256, 1, true),
+        conv("layer3", 14, 256, 3, 256, 3, true),
+        conv("layer4_ds", 7, 256, 3, 512, 1, true),
+        conv("layer4", 7, 512, 3, 512, 3, true),
+        fc("fc", 1, 512, 1000, 1),
+    ];
+    ModelWorkload { name: "ResNet-18", metric: "top-5", layers }
+}
+
+/// ResNet-50 at 224x224 (bottleneck blocks, 1x1/3x3/1x1).
+pub fn resnet50() -> ModelWorkload {
+    let mut layers = vec![conv("conv1", 112, 3, 7, 64, 1, false)];
+    // (stage, hw, cin_mid, blocks)
+    let stages = [(1usize, 56usize, 64usize, 3usize), (2, 28, 128, 4), (3, 14, 256, 6), (4, 7, 512, 3)];
+    for (s, hw, mid, blocks) in stages {
+        let cout = mid * 4;
+        layers.push(conv(&format!("s{s}_1x1a"), hw, cout.min(mid * 2), 1, mid, blocks, true));
+        layers.push(conv(&format!("s{s}_3x3"), hw, mid, 3, mid, blocks, true));
+        layers.push(conv(&format!("s{s}_1x1b"), hw, mid, 1, cout, blocks, true));
+    }
+    layers.push(fc("fc", 1, 2048, 1000, 1));
+    ModelWorkload { name: "ResNet-50", metric: "top-5", layers }
+}
+
+/// The full evaluation zoo in the paper's Fig. 8/10/11 order.
+pub fn zoo() -> Vec<ModelWorkload> {
+    vec![vgg16(), resnet18(), resnet50(), nmt(128), bert_base(8, 128)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_five_models() {
+        let z = zoo();
+        assert_eq!(z.len(), 5);
+        let names: Vec<_> = z.iter().map(|m| m.name).collect();
+        assert_eq!(names, ["VGG16", "ResNet-18", "ResNet-50", "NMT", "BERT-base"]);
+    }
+
+    #[test]
+    fn bert_flops_dominated_by_ffn() {
+        let b = bert_base(8, 128);
+        let ffn: f64 = b
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("ffn"))
+            .map(|l| l.shape.flops() * l.count as f64)
+            .sum();
+        assert!(ffn / b.total_flops() > 0.5);
+    }
+
+    #[test]
+    fn first_convs_not_prunable() {
+        for m in [vgg16(), resnet18(), resnet50()] {
+            assert!(!m.layers[0].prunable, "{}", m.name);
+            assert!(m.prunable_layers().count() >= 5, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn cnn_gemms_smaller_than_bert() {
+        // the paper's §VI-D observation: CNN GEMM shapes are smaller
+        let bert_max = bert_base(8, 128)
+            .layers
+            .iter()
+            .map(|l| l.shape.flops())
+            .fold(0.0, f64::max);
+        let r50_max = resnet50().layers.iter().map(|l| l.shape.flops()).fold(0.0, f64::max);
+        assert!(r50_max < bert_max);
+    }
+
+    #[test]
+    fn img2col_shapes() {
+        let v = vgg16();
+        let c12 = &v.layers[1];
+        assert_eq!(c12.shape.m, 224 * 224);
+        assert_eq!(c12.shape.k, 64 * 9);
+        assert_eq!(c12.shape.n, 64);
+    }
+}

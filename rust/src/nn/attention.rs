@@ -1,0 +1,147 @@
+//! Scaled-dot-product multi-head attention (the BERT workload's core):
+//! QKV projection + per-head softmax(QK^T/sqrt(d))V + output projection,
+//! with the two weight GEMMs pluggable so pruned kernels drop in — the
+//! Rust twin of `python/compile/model.py`'s attention block.
+
+use crate::tensor::Matrix;
+
+/// Forward pass for one attention block over `(seq, d_model)` activations.
+///
+/// `w_qkv` is `(d_model, 3*d_model)`; `w_out` is `(d_model, d_model)`;
+/// `gemm` is invoked for both weight multiplications.
+pub fn attention_forward<F>(
+    x: &Matrix,
+    w_qkv: &Matrix,
+    w_out: &Matrix,
+    n_heads: usize,
+    gemm: F,
+) -> Matrix
+where
+    F: Fn(&Matrix, &Matrix) -> Matrix,
+{
+    let (s, d) = (x.rows, x.cols);
+    assert_eq!(w_qkv.rows, d);
+    assert_eq!(w_qkv.cols, 3 * d);
+    assert_eq!(d % n_heads, 0);
+    let dh = d / n_heads;
+
+    let qkv = gemm(x, w_qkv); // (s, 3d)
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = Matrix::zeros(s, d);
+    for h in 0..n_heads {
+        // per-head slices: q at [h*dh, (h+1)*dh), k at d + ..., v at 2d + ...
+        let q0 = h * dh;
+        let k0 = d + h * dh;
+        let v0 = 2 * d + h * dh;
+        // scores = softmax(q k^T * scale), (s, s)
+        let mut scores = vec![0.0f32; s * s];
+        for i in 0..s {
+            let qi = &qkv.row(i)[q0..q0 + dh];
+            for j in 0..s {
+                let kj = &qkv.row(j)[k0..k0 + dh];
+                scores[i * s + j] =
+                    qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+        }
+        for i in 0..s {
+            let row = &mut scores[i * s..(i + 1) * s];
+            let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+            let mut z = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                z += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= z;
+            }
+        }
+        // ctx_head = scores @ v_head
+        for i in 0..s {
+            let out = &mut ctx.row_mut(i)[h * dh..(h + 1) * dh];
+            for j in 0..s {
+                let w = scores[i * s + j];
+                let vj = &qkv.row(j)[v0..v0 + dh];
+                for (o, vv) in out.iter_mut().zip(vj) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    gemm(&ctx, w_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul;
+    use crate::gemm::tw_matmul;
+    use crate::sparse::{prune_tw, TwPlan};
+    use crate::util::Rng;
+
+    #[test]
+    fn output_shape_and_finite() {
+        let mut rng = Rng::new(30);
+        let (s, d) = (12, 32);
+        let x = Matrix::randn(s, d, &mut rng);
+        let wqkv = Matrix::randn(d, 3 * d, &mut rng);
+        let wout = Matrix::randn(d, d, &mut rng);
+        let y = attention_forward(&x, &wqkv, &wout, 4, |a, b| matmul(a, b));
+        assert_eq!((y.rows, y.cols), (s, d));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn softmax_rows_are_convex_combinations() {
+        // uniform V => context equals V regardless of scores
+        let mut rng = Rng::new(31);
+        let (s, d) = (6, 16);
+        let x = Matrix::randn(s, d, &mut rng);
+        let mut wqkv = Matrix::zeros(d, 3 * d);
+        // V projection = identity block, Q/K zero => uniform attention
+        for i in 0..d {
+            *wqkv.at_mut(i, 2 * d + i) = 1.0;
+        }
+        let mut wout = Matrix::zeros(d, d);
+        for i in 0..d {
+            *wout.at_mut(i, i) = 1.0;
+        }
+        let y = attention_forward(&x, &wqkv, &wout, 4, |a, b| matmul(a, b));
+        // uniform attention over V=x: each output row = mean of x rows
+        let mut mean = vec![0.0f32; d];
+        for i in 0..s {
+            for (m, v) in mean.iter_mut().zip(x.row(i)) {
+                *m += v / s as f32;
+            }
+        }
+        for i in 0..s {
+            for j in 0..d {
+                assert!((y.at(i, j) - mean[j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn tw_pruned_attention_matches_masked() {
+        let mut rng = Rng::new(32);
+        let (s, d) = (8, 32);
+        let x = Matrix::randn(s, d, &mut rng);
+        let wqkv = Matrix::randn(d, 3 * d, &mut rng);
+        let wout = Matrix::randn(d, d, &mut rng);
+        let tw_qkv = prune_tw(&wqkv, 0.5, 8, None);
+        let tw_out = prune_tw(&wout, 0.5, 8, None);
+        let plan_qkv = TwPlan::encode(&wqkv, &tw_qkv);
+        let plan_out = TwPlan::encode(&wout, &tw_out);
+        let mq = tw_qkv.mask().apply(&wqkv);
+        let mo = tw_out.mask().apply(&wout);
+
+        let via_tw = attention_forward(&x, &wqkv, &wout, 4, |a, b| {
+            if b.cols == 3 * d {
+                tw_matmul(a, &plan_qkv)
+            } else {
+                tw_matmul(a, &plan_out)
+            }
+        });
+        let via_masked = attention_forward(&x, &mq, &mo, 4, |a, b| matmul(a, b));
+        assert!(via_tw.max_abs_diff(&via_masked) < 1e-3);
+    }
+}

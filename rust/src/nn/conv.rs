@@ -1,0 +1,254 @@
+//! img2col convolution lowering (paper §II-A: "the convolutional layer
+//! can be converted to GEMM through the img2col transformation").
+//!
+//! `im2col` flattens each receptive field into a row of the activation
+//! matrix A `(H_out*W_out, C_in*kh*kw)`; the filter bank flattens into
+//! B `(C_in*kh*kw, C_out)` — exactly the (K, N) weight orientation the
+//! pruning patterns operate on, so a TW-pruned conv is just a TW-pruned
+//! B matrix fed to the condensed GEMM.
+
+use crate::gemm::matmul;
+use crate::tensor::Matrix;
+
+/// Convolution hyper-parameters (square kernel, same stride both dims).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dSpec {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dSpec {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kernel) / self.stride + 1,
+            (w + 2 * self.pad - self.kernel) / self.stride + 1,
+        )
+    }
+
+    /// GEMM K dimension of the lowered convolution.
+    pub fn gemm_k(&self) -> usize {
+        self.c_in * self.kernel * self.kernel
+    }
+}
+
+/// NCHW single-image tensor (channels x height x width), row-major.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Image {
+        Image { c, h, w, data: vec![0.0; c * h * w] }
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut f32 {
+        &mut self.data[(c * self.h + y) * self.w + x]
+    }
+}
+
+/// Lower an image to the im2col activation matrix A
+/// `(H_out*W_out, C_in*kh*kw)`; out-of-bounds (padding) taps read 0.
+pub fn im2col(img: &Image, spec: &Conv2dSpec) -> Matrix {
+    assert_eq!(img.c, spec.c_in);
+    let (ho, wo) = spec.out_hw(img.h, img.w);
+    let kk = spec.kernel;
+    let mut a = Matrix::zeros(ho * wo, spec.gemm_k());
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = oy * wo + ox;
+            let out = a.row_mut(row);
+            let mut col = 0usize;
+            for c in 0..img.c {
+                for ky in 0..kk {
+                    for kx in 0..kk {
+                        let iy = oy * spec.stride + ky;
+                        let ix = ox * spec.stride + kx;
+                        // padded coordinates: shift by pad, check bounds
+                        let v = if iy >= spec.pad
+                            && ix >= spec.pad
+                            && iy - spec.pad < img.h
+                            && ix - spec.pad < img.w
+                        {
+                            img.at(c, iy - spec.pad, ix - spec.pad)
+                        } else {
+                            0.0
+                        };
+                        out[col] = v;
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+    a
+}
+
+/// Flatten a filter bank `[c_out][c_in][kh][kw]` (as a flat slice) into
+/// the GEMM B matrix `(C_in*kh*kw, C_out)`.
+pub fn filters_to_matrix(filters: &[f32], spec: &Conv2dSpec) -> Matrix {
+    let k = spec.gemm_k();
+    assert_eq!(filters.len(), spec.c_out * k);
+    let mut b = Matrix::zeros(k, spec.c_out);
+    for co in 0..spec.c_out {
+        for i in 0..k {
+            *b.at_mut(i, co) = filters[co * k + i];
+        }
+    }
+    b
+}
+
+/// Direct (sliding-window) convolution — the correctness oracle.
+pub fn conv2d_direct(img: &Image, filters: &[f32], spec: &Conv2dSpec) -> Image {
+    let (ho, wo) = spec.out_hw(img.h, img.w);
+    let kk = spec.kernel;
+    let k = spec.gemm_k();
+    let mut out = Image::zeros(spec.c_out, ho, wo);
+    for co in 0..spec.c_out {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0.0f32;
+                let mut idx = 0usize;
+                for c in 0..img.c {
+                    for ky in 0..kk {
+                        for kx in 0..kk {
+                            let iy = oy * spec.stride + ky;
+                            let ix = ox * spec.stride + kx;
+                            if iy >= spec.pad
+                                && ix >= spec.pad
+                                && iy - spec.pad < img.h
+                                && ix - spec.pad < img.w
+                            {
+                                acc += img.at(c, iy - spec.pad, ix - spec.pad)
+                                    * filters[co * k + idx];
+                            }
+                            idx += 1;
+                        }
+                    }
+                }
+                *out.at_mut(co, oy, ox) = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Convolution via im2col + GEMM (the accelerator path).  Any pruned GEMM
+/// kernel can replace `matmul` here — `conv2d_with` takes the GEMM as a
+/// closure for exactly that.
+pub fn conv2d(img: &Image, filters: &[f32], spec: &Conv2dSpec) -> Image {
+    conv2d_with(img, filters, spec, |a, b| matmul(a, b))
+}
+
+pub fn conv2d_with<F>(img: &Image, filters: &[f32], spec: &Conv2dSpec, gemm: F) -> Image
+where
+    F: Fn(&Matrix, &Matrix) -> Matrix,
+{
+    let (ho, wo) = spec.out_hw(img.h, img.w);
+    let a = im2col(img, spec);
+    let b = filters_to_matrix(filters, spec);
+    let c = gemm(&a, &b);
+    // (ho*wo, c_out) -> NCHW
+    let mut out = Image::zeros(spec.c_out, ho, wo);
+    for row in 0..ho * wo {
+        for co in 0..spec.c_out {
+            out.data[(co * ho + row / wo) * wo + row % wo] = c.at(row, co);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::tw_matmul;
+    use crate::sparse::{prune_tw, TwPlan};
+    use crate::util::Rng;
+
+    fn rand_image(c: usize, h: usize, w: usize, seed: u64) -> Image {
+        let mut rng = Rng::new(seed);
+        let mut img = Image::zeros(c, h, w);
+        for v in &mut img.data {
+            *v = rng.normal_f32();
+        }
+        img
+    }
+
+    fn rand_filters(spec: &Conv2dSpec, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..spec.c_out * spec.gemm_k()).map(|_| rng.normal_f32() * 0.2).collect()
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct() {
+        for (spec, h, w) in [
+            (Conv2dSpec { c_in: 3, c_out: 8, kernel: 3, stride: 1, pad: 1 }, 8, 8),
+            (Conv2dSpec { c_in: 4, c_out: 6, kernel: 3, stride: 2, pad: 0 }, 9, 11),
+            (Conv2dSpec { c_in: 2, c_out: 4, kernel: 1, stride: 1, pad: 0 }, 5, 5),
+            (Conv2dSpec { c_in: 3, c_out: 5, kernel: 5, stride: 1, pad: 2 }, 7, 7),
+        ] {
+            let img = rand_image(spec.c_in, h, w, 10);
+            let f = rand_filters(&spec, 11);
+            let direct = conv2d_direct(&img, &f, &spec);
+            let gemm = conv2d(&img, &f, &spec);
+            let diff = direct
+                .data
+                .iter()
+                .zip(&gemm.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-3, "k={} s={} p={}: {diff}", spec.kernel, spec.stride, spec.pad);
+        }
+    }
+
+    #[test]
+    fn output_shape() {
+        let spec = Conv2dSpec { c_in: 3, c_out: 8, kernel: 3, stride: 2, pad: 1 };
+        assert_eq!(spec.out_hw(224, 224), (112, 112));
+        assert_eq!(spec.gemm_k(), 27);
+    }
+
+    #[test]
+    fn tw_pruned_convolution() {
+        // the paper's actual use: prune the flattened filter matrix with TW
+        // and run the conv through the condensed GEMM
+        let spec = Conv2dSpec { c_in: 8, c_out: 16, kernel: 3, stride: 1, pad: 1 };
+        let img = rand_image(8, 10, 10, 12);
+        let f = rand_filters(&spec, 13);
+        let b = filters_to_matrix(&f, &spec);
+        let tw = prune_tw(&b, 0.5, 8, None);
+        let plan = TwPlan::encode(&b, &tw);
+        let masked_b = tw.mask().apply(&b);
+
+        let via_tw = conv2d_with(&img, &f, &spec, |a, _| tw_matmul(a, &plan));
+        let via_masked = conv2d_with(&img, &f, &spec, |a, _| matmul(a, &masked_b));
+        let diff = via_tw
+            .data
+            .iter()
+            .zip(&via_masked.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-3, "{diff}");
+    }
+
+    #[test]
+    fn vgg_first_block_shapes_match_zoo() {
+        // the zoo's conv entries must agree with the real lowering
+        let spec = Conv2dSpec { c_in: 64, c_out: 64, kernel: 3, stride: 1, pad: 1 };
+        let (ho, wo) = spec.out_hw(224, 224);
+        assert_eq!(ho * wo, 224 * 224); // matches models::vgg16 conv1_2 M
+        assert_eq!(spec.gemm_k(), 64 * 9); // matches its K
+    }
+}

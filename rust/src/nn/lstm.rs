@@ -1,0 +1,133 @@
+//! LSTM cell (the NMT workload's compute): the four gates form one
+//! `(batch, 2*hidden) x (2*hidden, 4*hidden)` GEMM per step — the matrix
+//! the paper prunes for the NMT rows of Fig. 8/10/11.
+
+use crate::gemm::matmul;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Gate weight matrix in the GEMM orientation: rows = input ++ hidden
+/// (K = 2H), cols = [i | f | g | o] gates (N = 4H).
+pub struct LstmCell {
+    pub hidden: usize,
+    pub w: Matrix,
+    pub bias: Vec<f32>,
+}
+
+/// Recurrent state (h, c), each `(batch, hidden)`.
+#[derive(Clone)]
+pub struct LstmState {
+    pub h: Matrix,
+    pub c: Matrix,
+}
+
+impl LstmState {
+    pub fn zeros(batch: usize, hidden: usize) -> LstmState {
+        LstmState { h: Matrix::zeros(batch, hidden), c: Matrix::zeros(batch, hidden) }
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl LstmCell {
+    pub fn init(hidden: usize, rng: &mut Rng) -> LstmCell {
+        LstmCell {
+            hidden,
+            w: Matrix::randn(2 * hidden, 4 * hidden, rng),
+            bias: vec![0.0; 4 * hidden],
+        }
+    }
+
+    /// One step with a custom GEMM (so pruned kernels can be dropped in).
+    pub fn step_with<F>(&self, x: &Matrix, state: &LstmState, gemm: F) -> LstmState
+    where
+        F: Fn(&Matrix, &Matrix) -> Matrix,
+    {
+        let batch = x.rows;
+        let hid = self.hidden;
+        assert_eq!(x.cols, hid, "input width must equal hidden for this cell");
+        // concat [x | h] -> (batch, 2H)
+        let mut xh = Matrix::zeros(batch, 2 * hid);
+        for i in 0..batch {
+            xh.row_mut(i)[..hid].copy_from_slice(x.row(i));
+            xh.row_mut(i)[hid..].copy_from_slice(state.h.row(i));
+        }
+        let gates = gemm(&xh, &self.w); // (batch, 4H)
+        let mut next = LstmState::zeros(batch, hid);
+        for i in 0..batch {
+            let g = gates.row(i);
+            for j in 0..hid {
+                let ig = sigmoid(g[j] + self.bias[j]);
+                let fg = sigmoid(g[hid + j] + self.bias[hid + j] + 1.0); // forget bias 1
+                let cand = (g[2 * hid + j] + self.bias[2 * hid + j]).tanh();
+                let og = sigmoid(g[3 * hid + j] + self.bias[3 * hid + j]);
+                let c = fg * state.c.at(i, j) + ig * cand;
+                *next.c.at_mut(i, j) = c;
+                *next.h.at_mut(i, j) = og * c.tanh();
+            }
+        }
+        next
+    }
+
+    pub fn step(&self, x: &Matrix, state: &LstmState) -> LstmState {
+        self.step_with(x, state, |a, b| matmul(a, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::tw_matmul;
+    use crate::sparse::{prune_tw, TwPlan};
+
+    #[test]
+    fn state_stays_bounded() {
+        let mut rng = Rng::new(20);
+        let cell = LstmCell::init(16, &mut rng);
+        let mut state = LstmState::zeros(4, 16);
+        for _ in 0..50 {
+            let x = Matrix::randn(4, 16, &mut rng);
+            state = cell.step(&x, &state);
+        }
+        // h = o * tanh(c) is in (-1, 1)
+        assert!(state.h.data.iter().all(|v| v.abs() < 1.0 && v.is_finite()));
+        assert!(state.c.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_input_zero_state_is_deterministic() {
+        let mut rng = Rng::new(21);
+        let cell = LstmCell::init(8, &mut rng);
+        let x = Matrix::zeros(2, 8);
+        let s1 = cell.step(&x, &LstmState::zeros(2, 8));
+        let s2 = cell.step(&x, &LstmState::zeros(2, 8));
+        assert_eq!(s1.h, s2.h);
+        assert_eq!(s1.c, s2.c);
+    }
+
+    #[test]
+    fn tw_pruned_cell_matches_masked_dense() {
+        let mut rng = Rng::new(22);
+        let cell = LstmCell::init(16, &mut rng);
+        let tw = prune_tw(&cell.w, 0.5, 8, None);
+        let plan = TwPlan::encode(&cell.w, &tw);
+        let masked = tw.mask().apply(&cell.w);
+        let x = Matrix::randn(4, 16, &mut rng);
+        let state = LstmState::zeros(4, 16);
+        let via_tw = cell.step_with(&x, &state, |a, _| tw_matmul(a, &plan));
+        let via_masked = cell.step_with(&x, &state, |a, _| matmul(a, &masked));
+        assert!(via_tw.h.max_abs_diff(&via_masked.h) < 1e-4);
+        assert!(via_tw.c.max_abs_diff(&via_masked.c) < 1e-4);
+    }
+
+    #[test]
+    fn gate_gemm_shape_matches_zoo() {
+        // models::nmt lists (batch, 1024, 2048) for hidden=512
+        let mut rng = Rng::new(23);
+        let cell = LstmCell::init(512, &mut rng);
+        assert_eq!(cell.w.rows, 1024);
+        assert_eq!(cell.w.cols, 2048);
+    }
+}

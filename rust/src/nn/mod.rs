@@ -1,0 +1,13 @@
+//! Neural-network substrate: the layer types the paper's model zoo is
+//! built from, implemented so the GEMM workloads are *executable*, not
+//! just shape lists — img2col convolution lowering (§II-A), an LSTM cell
+//! (NMT), and scaled-dot-product attention (BERT), each routed through
+//! the library's GEMM kernels so any sparsity pattern can be dropped in.
+
+pub mod attention;
+pub mod conv;
+pub mod lstm;
+
+pub use attention::attention_forward;
+pub use conv::{conv2d, im2col, Conv2dSpec};
+pub use lstm::{LstmCell, LstmState};

@@ -1,0 +1,188 @@
+//! The multi-stage pruning driver (Algorithm 1) and the global cross-layer
+//! sparsity-budget allocator (paper §IV "Global Weight Pruning").
+
+use crate::sparse::{Mask, Pattern};
+use crate::tensor::Matrix;
+use crate::util::argsort_desc_by;
+
+/// One prune→fine-tune stage record.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub target_sparsity: f64,
+    pub achieved_sparsity: f64,
+}
+
+/// Multi-stage schedule: raise sparsity by `step` per stage until `target`
+/// (Algorithm 1).  `fine_tune` is invoked after every stage with the masked
+/// weights and may adjust surviving values (the accuracy-recovery step).
+pub struct MultiStagePruner {
+    pub pattern: Pattern,
+    pub target: f64,
+    pub step: f64,
+}
+
+impl MultiStagePruner {
+    pub fn new(pattern: Pattern, target: f64, step: f64) -> Self {
+        assert!(step > 0.0 && target >= 0.0 && target < 1.0);
+        Self { pattern, target, step }
+    }
+
+    /// Run the schedule on one weight matrix.  Returns the final weights,
+    /// final mask, and per-stage reports.
+    pub fn run<F>(&self, w: &Matrix, mut fine_tune: F) -> (Matrix, Mask, Vec<StageReport>)
+    where
+        F: FnMut(&mut Matrix, &Mask),
+    {
+        let mut w = w.clone();
+        let mut mask = Mask::all(w.rows, w.cols);
+        let mut reports = Vec::new();
+        let mut s_t = 0.0f64;
+        while s_t < self.target - 1e-9 {
+            s_t = (s_t + self.step).min(self.target);
+            // TVW cannot express sparsity < 0.5; ramp through TW until then
+            let eff = match self.pattern {
+                Pattern::Tvw { g, .. } if s_t < 0.5 => Pattern::Tw { g },
+                p => p,
+            };
+            mask = eff.prune(&w, s_t);
+            w = mask.apply(&w);
+            fine_tune(&mut w, &mask);
+            w = mask.apply(&w); // fine-tune must not resurrect pruned weights
+            reports.push(StageReport { target_sparsity: s_t, achieved_sparsity: mask.sparsity() });
+        }
+        (w, mask, reports)
+    }
+}
+
+/// Global cross-layer budget allocation: rank all layers' pruning units by
+/// importance in one pool, so layers with redundant weights absorb more of
+/// the budget (paper §IV).  Works at column granularity, which is the
+/// pattern-agnostic unit shared by TW-C of all layers.
+///
+/// Returns per-layer sparsity targets whose weighted mean equals `target`.
+pub fn allocate_global_budget(layers: &[&Matrix], target: f64) -> Vec<f64> {
+    // score every column of every layer, normalised per layer to make
+    // magnitudes comparable (different layers have different scales)
+    struct Unit {
+        layer: usize,
+        score: f64,
+        elems: usize,
+    }
+    let mut units: Vec<Unit> = Vec::new();
+    for (li, w) in layers.iter().enumerate() {
+        let mut col_scores: Vec<f64> = (0..w.cols)
+            .map(|c| (0..w.rows).map(|r| w.at(r, c).abs() as f64).sum::<f64>())
+            .collect();
+        let mean = col_scores.iter().sum::<f64>() / col_scores.len().max(1) as f64;
+        for s in &mut col_scores {
+            *s /= mean.max(1e-12);
+        }
+        for s in col_scores {
+            units.push(Unit { layer: li, score: s, elems: w.rows });
+        }
+    }
+    let total_elems: usize = units.iter().map(|u| u.elems).sum();
+    let budget = (target * total_elems as f64) as usize;
+    // prune lowest-scoring units first until the budget is consumed
+    let order = argsort_desc_by(units.len(), |i| -units[i].score);
+    let mut pruned_per_layer = vec![0usize; layers.len()];
+    let mut pruned = 0usize;
+    for &i in &order {
+        if pruned >= budget {
+            break;
+        }
+        pruned += units[i].elems;
+        pruned_per_layer[units[i].layer] += units[i].elems;
+    }
+    layers
+        .iter()
+        .enumerate()
+        .map(|(li, w)| {
+            let total = w.rows * w.cols;
+            // cap so no layer is fully destroyed (the ResNet-50 lesson from
+            // the paper's §VI-C: leaving small layers lightly pruned helps)
+            (pruned_per_layer[li] as f64 / total as f64).min(0.98)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn multi_stage_reaches_target() {
+        let w = Matrix::randn(64, 64, &mut Rng::new(60));
+        let pruner = MultiStagePruner::new(Pattern::Tw { g: 16 }, 0.75, 0.25);
+        let (_, mask, reports) = pruner.run(&w, |_, _| {});
+        assert_eq!(reports.len(), 3);
+        assert!((mask.sparsity() - 0.75).abs() < 0.05);
+    }
+
+    #[test]
+    fn stages_monotone() {
+        let w = Matrix::randn(64, 64, &mut Rng::new(61));
+        let pruner = MultiStagePruner::new(Pattern::Ew, 0.9, 0.3);
+        let (_, _, reports) = pruner.run(&w, |_, _| {});
+        for win in reports.windows(2) {
+            assert!(win[1].achieved_sparsity >= win[0].achieved_sparsity - 1e-9);
+        }
+    }
+
+    #[test]
+    fn fine_tune_cannot_resurrect() {
+        let w = Matrix::randn(32, 32, &mut Rng::new(62));
+        let pruner = MultiStagePruner::new(Pattern::Ew, 0.5, 0.5);
+        let (wf, mask, _) = pruner.run(&w, |w, _| {
+            for v in &mut w.data {
+                *v += 1.0; // adversarial fine-tune writing into pruned slots
+            }
+        });
+        for (v, k) in wf.data.iter().zip(&mask.keep) {
+            if !*k {
+                assert_eq!(*v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tvw_ramp_through_tw() {
+        let w = Matrix::randn(64, 64, &mut Rng::new(63));
+        let pruner = MultiStagePruner::new(Pattern::Tvw { g: 16, m: 4 }, 0.75, 0.25);
+        let (_, mask, reports) = pruner.run(&w, |_, _| {});
+        assert_eq!(reports.len(), 3);
+        assert!((mask.sparsity() - 0.75).abs() < 0.05);
+    }
+
+    #[test]
+    fn global_budget_prefers_redundant_layers() {
+        let mut rng = Rng::new(64);
+        let important = Matrix::randn(64, 64, &mut rng); // unit scale
+        let mut redundant = Matrix::randn(64, 64, &mut rng);
+        // make half of redundant's columns tiny -> clearly prunable
+        for r in 0..64 {
+            for c in 0..32 {
+                *redundant.at_mut(r, c) *= 0.01;
+            }
+        }
+        let targets = allocate_global_budget(&[&important, &redundant], 0.25);
+        assert!(
+            targets[1] > targets[0],
+            "redundant layer should absorb more budget: {targets:?}"
+        );
+        // weighted mean ~ target
+        let mean = (targets[0] + targets[1]) / 2.0;
+        assert!((mean - 0.25).abs() < 0.1, "{mean}");
+    }
+
+    #[test]
+    fn global_budget_extremes() {
+        let w1 = Matrix::randn(32, 32, &mut Rng::new(65));
+        let w2 = Matrix::randn(32, 32, &mut Rng::new(66));
+        let t0 = allocate_global_budget(&[&w1, &w2], 0.0);
+        assert!(t0.iter().all(|&t| t == 0.0));
+        let t9 = allocate_global_budget(&[&w1, &w2], 0.9);
+        assert!(t9.iter().all(|&t| t > 0.5));
+    }
+}

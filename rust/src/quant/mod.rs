@@ -1,0 +1,209 @@
+//! Int8 quantization substrate (paper §VI-B/§VI-D compares Int8-Dense and
+//! Int8-Sparse against the pruning patterns).
+//!
+//! Symmetric per-tensor quantization: `q = clamp(round(x / scale), -127,
+//! 127)` with `scale = max|x| / 127`, plus an Int8 GEMM with i32
+//! accumulation and float dequantization — the arithmetic the tensor
+//! core's Int8 path performs.  The paper's survey claim ("Int8 exhibits
+//! almost no accuracy loss") is validated on the accuracy proxy.
+
+use crate::tensor::Matrix;
+
+/// A symmetric per-tensor Int8 quantized matrix.
+#[derive(Clone, Debug)]
+pub struct QuantMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+    pub scale: f32,
+}
+
+impl QuantMatrix {
+    /// Quantize with scale = max|x| / 127 (symmetric, zero-point 0).
+    pub fn quantize(x: &Matrix) -> QuantMatrix {
+        let amax = x.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        let data = x
+            .data
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        QuantMatrix { rows: x.rows, cols: x.cols, data, scale }
+    }
+
+    pub fn dequantize(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|&q| q as f32 * self.scale).collect(),
+        )
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i8 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Worst-case element quantization error bound: scale / 2.
+    pub fn error_bound(&self) -> f32 {
+        self.scale * 0.5
+    }
+}
+
+/// Int8 GEMM with i32 accumulation, dequantized to f32 on output — the
+/// tensor-core Int8 data path.
+pub fn int8_matmul(a: &QuantMatrix, b: &QuantMatrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    let out_scale = a.scale * b.scale;
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = c.row_mut(i);
+        let mut acc = vec![0i32; n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            let aik = aik as i32;
+            for (av, bv) in acc.iter_mut().zip(brow) {
+                *av += aik * *bv as i32;
+            }
+        }
+        for (cv, av) in crow.iter_mut().zip(&acc) {
+            *cv = *av as f32 * out_scale;
+        }
+    }
+    c
+}
+
+/// Int8 + 2:4 sparse GEMM (the "Int8-Sparse" configuration): B is
+/// 2:4-compressed Int8 values + positions.
+#[derive(Clone, Debug)]
+pub struct QuantVw24 {
+    pub k: usize,
+    pub n: usize,
+    pub vals: Vec<i8>,
+    pub sel: Vec<u8>,
+    pub scale: f32,
+}
+
+impl QuantVw24 {
+    /// Quantize then 2:4-compress along K (keep top-2 magnitudes/group).
+    pub fn from_dense(w: &Matrix) -> QuantVw24 {
+        assert_eq!(w.rows % 4, 0);
+        let q = QuantMatrix::quantize(w);
+        let (k, n) = (w.rows, w.cols);
+        let khalf = k / 2;
+        let mut vals = vec![0i8; khalf * n];
+        let mut sel = vec![0u8; khalf * n];
+        for c in 0..n {
+            for grp in 0..k / 4 {
+                let mut idx: Vec<usize> = (0..4).collect();
+                idx.sort_by_key(|&i| std::cmp::Reverse((q.at(grp * 4 + i, c) as i32).abs()));
+                let mut keep = [idx[0], idx[1]];
+                keep.sort_unstable();
+                for (slot, &pos) in keep.iter().enumerate() {
+                    vals[(grp * 2 + slot) * n + c] = q.at(grp * 4 + pos, c);
+                    sel[(grp * 2 + slot) * n + c] = pos as u8;
+                }
+            }
+        }
+        QuantVw24 { k, n, vals, sel, scale: q.scale }
+    }
+}
+
+/// C = A_q * B_q24 with i32 accumulation (sparse-tensor-core Int8 path).
+pub fn int8_vw24_matmul(a: &QuantMatrix, b: &QuantVw24) -> Matrix {
+    assert_eq!(a.cols, b.k);
+    let (m, n) = (a.rows, b.n);
+    let khalf = b.k / 2;
+    let mut c = Matrix::zeros(m, n);
+    let out_scale = a.scale * b.scale;
+    for i in 0..m {
+        let arow = &a.data[i * a.cols..(i + 1) * a.cols];
+        let mut acc = vec![0i32; n];
+        for ii in 0..khalf {
+            let grp_base = (ii / 2) * 4;
+            let vrow = &b.vals[ii * n..(ii + 1) * n];
+            let srow = &b.sel[ii * n..(ii + 1) * n];
+            for j in 0..n {
+                let r = grp_base + srow[j] as usize;
+                acc[j] += arow[r] as i32 * vrow[j] as i32;
+            }
+        }
+        for (cv, av) in c.row_mut(i).iter_mut().zip(&acc) {
+            *cv = *av as f32 * out_scale;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_naive;
+    use crate::util::Rng;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(32, 32, &mut rng);
+        let q = QuantMatrix::quantize(&x);
+        let back = q.dequantize();
+        let err = x.max_abs_diff(&back);
+        assert!(err <= q.error_bound() + 1e-6, "err {err} > bound {}", q.error_bound());
+    }
+
+    #[test]
+    fn int8_matmul_close_to_fp32() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(24, 48, &mut rng);
+        let b = Matrix::randn(48, 32, &mut rng);
+        let c_fp = matmul_naive(&a, &b);
+        let c_q = int8_matmul(&QuantMatrix::quantize(&a), &QuantMatrix::quantize(&b));
+        // relative Frobenius error small (the "almost no accuracy loss" claim)
+        let rel = c_q.dist(&c_fp) / c_fp.dist(&Matrix::zeros(24, 32)).max(1e-9);
+        assert!(rel < 0.03, "relative error {rel}");
+    }
+
+    #[test]
+    fn int8_vw24_matches_dequantized_sparse() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(16, 32, &mut rng);
+        let w = Matrix::randn(32, 24, &mut rng);
+        let aq = QuantMatrix::quantize(&a);
+        let wq24 = QuantVw24::from_dense(&w);
+        let got = int8_vw24_matmul(&aq, &wq24);
+        // reference: dequantize the kept values and run fp GEMM
+        let khalf = wq24.k / 2;
+        let mut wd = Matrix::zeros(wq24.k, wq24.n);
+        for c in 0..wq24.n {
+            for ii in 0..khalf {
+                let r = (ii / 2) * 4 + wq24.sel[ii * wq24.n + c] as usize;
+                *wd.at_mut(r, c) = wq24.vals[ii * wq24.n + c] as f32 * wq24.scale;
+            }
+        }
+        let want = matmul_naive(&aq.dequantize(), &wd);
+        assert!(got.max_abs_diff(&want) < 1e-3, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn zero_matrix_quantizes() {
+        let z = Matrix::zeros(4, 4);
+        let q = QuantMatrix::quantize(&z);
+        assert!(q.data.iter().all(|&v| v == 0));
+        assert_eq!(q.dequantize(), z);
+    }
+
+    #[test]
+    fn storage_is_quarter_of_fp32() {
+        // Int8 value storage = 1 byte/elem vs 4 for f32
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(64, 64, &mut rng);
+        let q = QuantMatrix::quantize(&x);
+        assert_eq!(q.data.len(), x.data.len());
+        assert_eq!(std::mem::size_of_val(&q.data[..]) * 4, std::mem::size_of_val(&x.data[..]));
+    }
+}

@@ -1,0 +1,262 @@
+//! Artifact bundle loader: `bundle.json` (tensor index) + `bundle.bin`
+//! (raw little-endian blob) + `meta.json` (executable index), produced by
+//! `python/compile/aot.py`.  See `python/compile/bundle.py` for the format.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+
+/// Tensor datatype in the bundle (matches the Python writer's set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub(crate) fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported bundle dtype {other:?}"),
+        }
+    }
+}
+
+/// One tensor's index entry.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// The loaded tensor bundle.
+pub struct Bundle {
+    entries: HashMap<String, TensorEntry>,
+    blob: Vec<u8>,
+}
+
+impl Bundle {
+    pub fn load(dir: &Path) -> Result<Bundle> {
+        let index_text = std::fs::read_to_string(dir.join("bundle.json"))
+            .with_context(|| format!("reading {}/bundle.json", dir.display()))?;
+        let index = Json::parse(&index_text).map_err(|e| anyhow!("bundle.json: {e}"))?;
+        let blob_name = index
+            .get("blob")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("bundle.json missing 'blob'"))?;
+        let blob = std::fs::read(dir.join(blob_name))?;
+        let mut entries = HashMap::new();
+        for t in index
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("bundle.json missing 'tensors'"))?
+        {
+            let name = t.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("tensor name"))?;
+            let entry = TensorEntry {
+                name: name.to_string(),
+                dtype: Dtype::parse(
+                    t.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("dtype"))?,
+                )?,
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: t.get("offset").and_then(Json::as_usize).ok_or_else(|| anyhow!("offset"))?,
+                nbytes: t.get("nbytes").and_then(Json::as_usize).ok_or_else(|| anyhow!("nbytes"))?,
+            };
+            if entry.offset + entry.nbytes > blob.len() {
+                bail!("tensor {name} extends past blob end");
+            }
+            entries.insert(name.to_string(), entry);
+        }
+        Ok(Bundle { entries, blob })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.entries.get(name).ok_or_else(|| anyhow!("bundle tensor {name:?} not found"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    /// Copy a tensor out as f32 (its native type must be f32).
+    pub fn f32_data(&self, name: &str) -> Result<Vec<f32>> {
+        let e = self.entry(name)?;
+        if e.dtype != Dtype::F32 {
+            bail!("tensor {name} is not f32");
+        }
+        Ok(self.blob[e.offset..e.offset + e.nbytes]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn i32_data(&self, name: &str) -> Result<Vec<i32>> {
+        let e = self.entry(name)?;
+        if e.dtype != Dtype::I32 {
+            bail!("tensor {name} is not i32");
+        }
+        Ok(self.blob[e.offset..e.offset + e.nbytes]
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// Executable description from `meta.json`.
+#[derive(Clone, Debug)]
+pub struct ExecutableMeta {
+    pub name: String,
+    pub hlo_file: String,
+    pub kind: String,
+    pub activation_shape: Vec<usize>,
+    pub args: Vec<String>,
+    pub output_shape: Vec<usize>,
+    /// Multi-input executables (e.g. the train step's (x, y)): shape+dtype
+    /// per dynamic input, in argument order.  Empty = single f32 activation.
+    pub inputs: Vec<(Vec<usize>, Dtype)>,
+    /// Tuple-output executables: one shape per element.  Empty = single
+    /// output of `output_shape`.
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub executables: Vec<ExecutableMeta>,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Meta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json", dir.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let spec = v.get("spec").ok_or_else(|| anyhow!("meta.json missing spec"))?;
+        let mut executables = Vec::new();
+        for (name, e) in v
+            .get("executables")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("meta.json missing executables"))?
+        {
+            executables.push(ExecutableMeta {
+                name: name.clone(),
+                hlo_file: e.get("hlo").and_then(Json::as_str).unwrap_or_default().to_string(),
+                kind: e.get("kind").and_then(Json::as_str).unwrap_or("model").to_string(),
+                activation_shape: e
+                    .at(&["activation", "shape"])
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().map(|x| x.as_usize().unwrap_or(0)).collect())
+                    .unwrap_or_default(),
+                args: e
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+                output_shape: e
+                    .get("output_shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().map(|x| x.as_usize().unwrap_or(0)).collect())
+                    .unwrap_or_default(),
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|i| {
+                                let shape: Vec<usize> = i
+                                    .get("shape")?
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|x| x.as_usize().unwrap_or(0))
+                                    .collect();
+                                let dtype =
+                                    Dtype::parse(i.get("dtype")?.as_str()?).ok()?;
+                                Some((shape, dtype))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                output_shapes: e
+                    .get("output_shapes")
+                    .and_then(Json::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|s| {
+                                s.as_arr()
+                                    .map(|a| {
+                                        a.iter().map(|x| x.as_usize().unwrap_or(0)).collect()
+                                    })
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            });
+        }
+        executables.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Meta {
+            batch: v.get("batch").and_then(Json::as_usize).unwrap_or(1),
+            seq: v.get("seq").and_then(Json::as_usize).unwrap_or(1),
+            d_model: spec.get("d_model").and_then(Json::as_usize).unwrap_or(0),
+            executables,
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableMeta> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("executable {name:?} not in meta.json"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_real_bundle() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let bundle = Bundle::load(&dir).unwrap();
+        let meta = Meta::load(&dir).unwrap();
+        assert!(meta.executables.len() >= 7);
+        for e in &meta.executables {
+            for arg in &e.args {
+                let t = bundle.entry(arg).unwrap();
+                match t.dtype {
+                    Dtype::F32 => assert!(!bundle.f32_data(arg).unwrap().is_empty()),
+                    Dtype::I32 => assert!(!bundle.i32_data(arg).unwrap().is_empty()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let Some(dir) = artifacts_dir() else { return };
+        let bundle = Bundle::load(&dir).unwrap();
+        assert!(bundle.entry("no/such/tensor").is_err());
+    }
+}

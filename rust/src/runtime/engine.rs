@@ -1,0 +1,477 @@
+//! PJRT execution engine: compile HLO-text artifacts once, stage every
+//! static argument (weights, condensed tiles, CTO tables) as device
+//! buffers once, then serve activations through `execute_b` — zero Python,
+//! zero re-staging on the request path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::bundle::{Bundle, Dtype, ExecutableMeta, Meta};
+
+/// The PJRT client plus everything loaded from one artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub meta: Meta,
+    models: Vec<LoadedExecutable>,
+}
+
+/// One compiled executable with its static arguments pre-staged on device.
+pub struct LoadedExecutable {
+    pub name: String,
+    pub activation_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Multi-input spec (train step etc.); empty = single f32 activation.
+    pub inputs: Vec<(Vec<usize>, Dtype)>,
+    /// Tuple-output shapes; empty = single output.
+    pub output_shapes: Vec<Vec<usize>>,
+    exe: xla::PjRtLoadedExecutable,
+    static_buffers: Vec<xla::PjRtBuffer>,
+}
+
+/// A dynamic input value for multi-input executables.
+pub enum InputData<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Engine {
+    /// Load every executable listed in `meta.json` under `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let meta = Meta::load(dir)?;
+        let bundle = Bundle::load(dir)?;
+        let mut models = Vec::new();
+        for em in &meta.executables {
+            models.push(Self::load_one(&client, dir, em, &bundle)?);
+        }
+        Ok(Engine { client, meta, models })
+    }
+
+    /// Load a single named executable (faster startup for examples).
+    pub fn load_only(dir: &Path, names: &[&str]) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let meta = Meta::load(dir)?;
+        let bundle = Bundle::load(dir)?;
+        let mut models = Vec::new();
+        for name in names {
+            let em = meta.executable(name)?.clone();
+            models.push(Self::load_one(&client, dir, &em, &bundle)?);
+        }
+        Ok(Engine { client, meta, models })
+    }
+
+    fn load_one(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        em: &ExecutableMeta,
+        bundle: &Bundle,
+    ) -> Result<LoadedExecutable> {
+        let hlo_path = dir.join(&em.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", em.name))?;
+        // stage static args on device once
+        let mut static_buffers = Vec::with_capacity(em.args.len());
+        for arg in &em.args {
+            let entry = bundle.entry(arg)?;
+            let buf = match entry.dtype {
+                Dtype::F32 => {
+                    let data = bundle.f32_data(arg)?;
+                    client
+                        .buffer_from_host_buffer(&data, &entry.shape, None)
+                        .map_err(|e| anyhow!("staging {arg}: {e:?}"))?
+                }
+                Dtype::I32 => {
+                    let data = bundle.i32_data(arg)?;
+                    client
+                        .buffer_from_host_buffer(&data, &entry.shape, None)
+                        .map_err(|e| anyhow!("staging {arg}: {e:?}"))?
+                }
+            };
+            static_buffers.push(buf);
+        }
+        Ok(LoadedExecutable {
+            name: em.name.clone(),
+            activation_shape: em.activation_shape.clone(),
+            output_shape: em.output_shape.clone(),
+            inputs: em.inputs.clone(),
+            output_shapes: em.output_shapes.clone(),
+            exe,
+            static_buffers,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&LoadedExecutable> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("executable {name:?} not loaded"))
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+
+    /// Run one executable on an activation tensor (row-major f32 matching
+    /// the executable's activation shape).  Returns the flat f32 output.
+    pub fn run(&self, model: &LoadedExecutable, activation: &[f32]) -> Result<Vec<f32>> {
+        let expect: usize = model.activation_shape.iter().product();
+        if activation.len() != expect {
+            bail!(
+                "activation has {} elements, executable {} expects {:?}",
+                activation.len(),
+                model.name,
+                model.activation_shape
+            );
+        }
+        let act = self
+            .client
+            .buffer_from_host_buffer(activation, &model.activation_shape, None)
+            .map_err(|e| anyhow!("staging activation: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + model.static_buffers.len());
+        args.push(&act);
+        args.extend(model.static_buffers.iter());
+        let result = model
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", model.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = literal.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e:?}")).and_then(|v| {
+            let want: usize = model.output_shape.iter().product();
+            if v.len() != want {
+                bail!("output has {} elements, expected {:?}", v.len(), model.output_shape);
+            }
+            Ok(v)
+        })
+    }
+
+    /// Convenience: run by name.
+    pub fn run_named(&self, name: &str, activation: &[f32]) -> Result<Vec<f32>> {
+        let m = self.model(name)?;
+        self.run(m, activation)
+    }
+
+    /// Run a multi-input, tuple-output executable (e.g. the train step):
+    /// `dynamic` inputs precede the pre-staged static arguments; the
+    /// output tuple is returned as flat f32 vectors per element.
+    pub fn run_multi(
+        &self,
+        model: &LoadedExecutable,
+        dynamic: &[InputData<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if model.inputs.len() != dynamic.len() {
+            bail!(
+                "executable {} takes {} dynamic inputs, got {}",
+                model.name,
+                model.inputs.len(),
+                dynamic.len()
+            );
+        }
+        let mut input_bufs = Vec::with_capacity(dynamic.len());
+        for (d, (shape, dtype)) in dynamic.iter().zip(&model.inputs) {
+            let want: usize = shape.iter().product();
+            let buf = match (d, dtype) {
+                (InputData::F32(v), Dtype::F32) => {
+                    if v.len() != want {
+                        bail!("input length {} != shape {:?}", v.len(), shape);
+                    }
+                    self.client.buffer_from_host_buffer(v, shape, None)
+                }
+                (InputData::I32(v), Dtype::I32) => {
+                    if v.len() != want {
+                        bail!("input length {} != shape {:?}", v.len(), shape);
+                    }
+                    self.client.buffer_from_host_buffer(v, shape, None)
+                }
+                _ => bail!("input dtype mismatch for {}", model.name),
+            }
+            .map_err(|e| anyhow!("staging input: {e:?}"))?;
+            input_bufs.push(buf);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(input_bufs.len() + model.static_buffers.len());
+        args.extend(input_bufs.iter());
+        args.extend(model.static_buffers.iter());
+        let result = model
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", model.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output: {e:?}"))?;
+        let parts = literal.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if !model.output_shapes.is_empty() && parts.len() != model.output_shapes.len() {
+            bail!(
+                "executable {} returned {} outputs, expected {}",
+                model.name,
+                parts.len(),
+                model.output_shapes.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// One fine-tuning iteration: run the train-step executable with
+    /// caller-held parameters (overriding the pre-staged initial ones).
+    /// Parameter shapes come from the executable's tuple-output spec
+    /// (output 0 is the loss; outputs 1.. are the updated parameters).
+    pub fn run_train_iteration(
+        &self,
+        model: &LoadedExecutable,
+        x: &[f32],
+        y: &[i32],
+        params: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        if model.output_shapes.len() != params.len() + 1 {
+            bail!(
+                "executable {} has {} params, got {}",
+                model.name,
+                model.output_shapes.len().saturating_sub(1),
+                params.len()
+            );
+        }
+        let x_buf = self
+            .client
+            .buffer_from_host_buffer(x, &model.inputs[0].0, None)
+            .map_err(|e| anyhow!("staging x: {e:?}"))?;
+        let y_buf = self
+            .client
+            .buffer_from_host_buffer(y, &model.inputs[1].0, None)
+            .map_err(|e| anyhow!("staging y: {e:?}"))?;
+        let mut param_bufs = Vec::with_capacity(params.len());
+        for (p, shape) in params.iter().zip(&model.output_shapes[1..]) {
+            let shape: &[usize] = if shape.is_empty() { &[1] } else { shape };
+            let buf = self
+                .client
+                .buffer_from_host_buffer(p, shape, None)
+                .map_err(|e| anyhow!("staging param: {e:?}"))?;
+            param_bufs.push(buf);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + param_bufs.len());
+        args.push(&x_buf);
+        args.push(&y_buf);
+        args.extend(param_bufs.iter());
+        let result = model
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", model.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output: {e:?}"))?;
+        let parts = literal.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then_some(dir)
+    }
+
+    /// The core AOT round-trip check: the Rust-loaded gemm_dense executable
+    /// must reproduce A @ W for the bundled W.
+    #[test]
+    fn gemm_dense_numerics() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load_only(&dir, &["gemm_dense"]).unwrap();
+        let bundle = Bundle::load(&dir).unwrap();
+        let m = engine.model("gemm_dense").unwrap();
+        let (rows, k) = (m.activation_shape[0], m.activation_shape[1]);
+        let n = m.output_shape[1];
+        let w = bundle.f32_data("gemm_dense/w").unwrap();
+
+        let mut rng = crate::util::Rng::new(5);
+        let a: Vec<f32> = (0..rows * k).map(|_| rng.normal_f32()).collect();
+        let out = engine.run(m, &a).unwrap();
+
+        // reference on the CPU
+        let am = crate::tensor::Matrix::from_vec(rows, k, a);
+        let wm = crate::tensor::Matrix::from_vec(k, n, w);
+        let want = crate::gemm::matmul(&am, &wm);
+        let got = crate::tensor::Matrix::from_vec(rows, n, out);
+        assert!(
+            got.max_abs_diff(&want) < 1e-2,
+            "PJRT vs CPU mismatch: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    /// TW / TVW executables must agree with the CPU CTO kernels fed the
+    /// same bundled plan tensors — the cross-layer consistency check.
+    #[test]
+    fn gemm_tw_numerics() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load_only(&dir, &["gemm_tw"]).unwrap();
+        let bundle = Bundle::load(&dir).unwrap();
+        let m = engine.model("gemm_tw").unwrap();
+        let (rows, k) = (m.activation_shape[0], m.activation_shape[1]);
+        let n = m.output_shape[1];
+
+        let b_cond = bundle.f32_data("gemm_tw/b_cond").unwrap();
+        let row_idx = bundle.i32_data("gemm_tw/row_idx").unwrap();
+        let col_idx = bundle.i32_data("gemm_tw/col_idx").unwrap();
+        let e = bundle.entry("gemm_tw/b_cond").unwrap();
+        let (tiles, kmax, g) = (e.shape[0], e.shape[1], e.shape[2]);
+        let row_len: Vec<i32> = (0..tiles)
+            .map(|t| {
+                // padding rows have zero values; recover kt as last row with data
+                let mut kt = 0;
+                for i in 0..kmax {
+                    if (0..g).any(|j| b_cond[(t * kmax + i) * g + j] != 0.0) {
+                        kt = i + 1;
+                    }
+                }
+                kt as i32
+            })
+            .collect();
+        let plan = crate::sparse::TwPlan {
+            b_cond,
+            row_idx,
+            row_len,
+            col_idx,
+            tiles,
+            kmax,
+            g,
+            k,
+            n,
+        };
+
+        let mut rng = crate::util::Rng::new(6);
+        let a: Vec<f32> = (0..rows * k).map(|_| rng.normal_f32()).collect();
+        let out = engine.run(m, &a).unwrap();
+        let am = crate::tensor::Matrix::from_vec(rows, k, a);
+        let want = crate::gemm::tw_matmul(&am, &plan);
+        let got = crate::tensor::Matrix::from_vec(rows, n, out);
+        assert!(got.max_abs_diff(&want) < 1e-2, "{}", got.max_abs_diff(&want));
+    }
+
+    /// gemm_tew artifact: TW part + COO remainder must equal the CPU TEW
+    /// composition fed the same bundled tensors.
+    #[test]
+    fn gemm_tew_numerics() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load_only(&dir, &["gemm_tew"]).unwrap();
+        let bundle = Bundle::load(&dir).unwrap();
+        let m = engine.model("gemm_tew").unwrap();
+        let (rows, k) = (m.activation_shape[0], m.activation_shape[1]);
+        let n = m.output_shape[1];
+
+        let mut rng = crate::util::Rng::new(13);
+        let a: Vec<f32> = (0..rows * k).map(|_| rng.normal_f32()).collect();
+        let out = engine.run(m, &a).unwrap();
+
+        // CPU reference: decode TW plan to the masked dense weight, add the
+        // COO remainder, run the dense oracle
+        let b_cond = bundle.f32_data("gemm_tew/b_cond").unwrap();
+        let row_idx = bundle.i32_data("gemm_tew/row_idx").unwrap();
+        let col_idx = bundle.i32_data("gemm_tew/col_idx").unwrap();
+        let e = bundle.entry("gemm_tew/b_cond").unwrap();
+        let (tiles, kmax, g) = (e.shape[0], e.shape[1], e.shape[2]);
+        let row_len: Vec<i32> = (0..tiles)
+            .map(|t| {
+                let mut kt = 0;
+                for i in 0..kmax {
+                    if (0..g).any(|j| b_cond[(t * kmax + i) * g + j] != 0.0) {
+                        kt = i + 1;
+                    }
+                }
+                kt as i32
+            })
+            .collect();
+        let plan = crate::sparse::TwPlan {
+            b_cond, row_idx, row_len, col_idx, tiles, kmax, g, k, n,
+        };
+        let mut w = plan.decode();
+        let r_vals = bundle.f32_data("gemm_tew/r_vals").unwrap();
+        let r_rows = bundle.i32_data("gemm_tew/r_rows").unwrap();
+        let r_cols = bundle.i32_data("gemm_tew/r_cols").unwrap();
+        for ((v, r), c) in r_vals.iter().zip(&r_rows).zip(&r_cols) {
+            if (*c as usize) < n {
+                *w.at_mut(*r as usize, *c as usize) = *v;
+            }
+        }
+        let am = crate::tensor::Matrix::from_vec(rows, k, a);
+        let want = crate::gemm::matmul(&am, &w);
+        let got = crate::tensor::Matrix::from_vec(rows, n, out);
+        assert!(got.max_abs_diff(&want) < 1e-2, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn model_dense_runs_and_is_finite() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load_only(&dir, &["model_dense"]).unwrap();
+        let m = engine.model("model_dense").unwrap();
+        let len: usize = m.activation_shape.iter().product();
+        let mut rng = crate::util::Rng::new(7);
+        let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let out = engine.run(m, &x).unwrap();
+        assert_eq!(out.len(), m.output_shape.iter().product::<usize>());
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    /// The train-step artifact must reduce loss when iterated from Rust —
+    /// the full AOT fine-tune path (DESIGN.md: Algorithm 1's FineTune hook
+    /// executed via PJRT with zero Python).
+    #[test]
+    fn train_step_reduces_loss() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load_only(&dir, &["train_dense"]).unwrap();
+        let m = engine.model("train_dense").unwrap();
+        assert_eq!(m.inputs.len(), 2);
+        let (x_shape, _) = &m.inputs[0];
+        let (y_shape, _) = &m.inputs[1];
+        let xlen: usize = x_shape.iter().product();
+        let batch = y_shape[0];
+        let mut rng = crate::util::Rng::new(9);
+        let x: Vec<f32> = (0..xlen).map(|_| rng.normal_f32()).collect();
+        let y: Vec<i32> = (0..batch).map(|i| (i % 4) as i32).collect();
+
+        // step 0 uses the pre-staged initial params
+        let mut outs = engine
+            .run_multi(m, &[InputData::F32(&x), InputData::I32(&y)])
+            .unwrap();
+        let loss0 = outs[0][0];
+        // iterate: feed updated params back as dynamic... params are static
+        // buffers, so re-run through run_multi_with_params below
+        for _ in 0..8 {
+            let params: Vec<&[f32]> = outs[1..].iter().map(|v| v.as_slice()).collect();
+            outs = engine.run_train_iteration(m, &x, &y, &params).unwrap();
+        }
+        let loss_n = outs[0][0];
+        assert!(
+            loss_n < loss0,
+            "loss did not decrease: {loss0} -> {loss_n}"
+        );
+    }
+
+    #[test]
+    fn wrong_activation_size_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load_only(&dir, &["gemm_dense"]).unwrap();
+        let m = engine.model("gemm_dense").unwrap();
+        assert!(engine.run(m, &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime: PJRT engine + artifact bundle loading.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute_b` with pre-staged weight buffers; HLO
+//! *text* is the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md for why not serialized protos).
+
+pub mod bundle;
+pub mod engine;
+
+pub use bundle::{Bundle, Dtype, ExecutableMeta, Meta, TensorEntry};
+pub use engine::{Engine, InputData, LoadedExecutable};

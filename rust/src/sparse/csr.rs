@@ -1,0 +1,146 @@
+//! Compressed sparse row / column formats — the EW (cuSparse-style) and
+//! TEW-remainder storage substrate.
+
+use crate::sparse::Mask;
+use crate::tensor::Matrix;
+
+/// Compressed sparse row.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Length `rows + 1`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, treating exact zeros as absent.
+    pub fn from_dense(w: &Matrix) -> Csr {
+        let mut row_ptr = Vec::with_capacity(w.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let v = w.at(r, c);
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows: w.rows, cols: w.cols, row_ptr, col_idx, vals }
+    }
+
+    /// Build from a weight matrix + keep-mask (pruned entries absent even
+    /// if their value is coincidentally zero).
+    pub fn from_masked(w: &Matrix, mask: &Mask) -> Csr {
+        Csr::from_dense(&mask.apply(w))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                *m.at_mut(r, self.col_idx[i] as usize) = self.vals[i];
+            }
+        }
+        m
+    }
+
+    /// Storage footprint in bytes (vals f32 + col idx u32 + row ptr u32).
+    pub fn storage_bytes(&self) -> usize {
+        self.vals.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+}
+
+/// Compressed sparse column (the paper stores the TEW remainder as CSC).
+#[derive(Clone, Debug)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    /// Length `cols + 1`.
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csc {
+    pub fn from_dense(w: &Matrix) -> Csc {
+        let mut col_ptr = Vec::with_capacity(w.cols + 1);
+        let mut row_idx = Vec::new();
+        let mut vals = Vec::new();
+        col_ptr.push(0);
+        for c in 0..w.cols {
+            for r in 0..w.rows {
+                let v = w.at(r, c);
+                if v != 0.0 {
+                    row_idx.push(r as u32);
+                    vals.push(v);
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        Csc { rows: w.rows, cols: w.cols, col_ptr, row_idx, vals }
+    }
+
+    pub fn from_masked(w: &Matrix, mask: &Mask) -> Csc {
+        Csc::from_dense(&mask.apply(w))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            for i in self.col_ptr[c]..self.col_ptr[c + 1] {
+                *m.at_mut(self.row_idx[i] as usize, c) = self.vals[i];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune_ew;
+    use crate::util::Rng;
+
+    #[test]
+    fn csr_roundtrip() {
+        let mut rng = Rng::new(31);
+        let w = Matrix::randn(20, 30, &mut rng);
+        let mask = prune_ew(&w, 0.7, None);
+        let csr = Csr::from_masked(&w, &mask);
+        assert_eq!(csr.nnz(), mask.count_kept());
+        assert_eq!(csr.to_dense().max_abs_diff(&mask.apply(&w)), 0.0);
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let mut rng = Rng::new(32);
+        let w = Matrix::randn(20, 30, &mut rng);
+        let mask = prune_ew(&w, 0.9, None);
+        let csc = Csc::from_masked(&w, &mask);
+        assert_eq!(csc.nnz(), mask.count_kept());
+        assert_eq!(csc.to_dense().max_abs_diff(&mask.apply(&w)), 0.0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let w = Matrix::zeros(5, 5);
+        let csr = Csr::from_dense(&w);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), w);
+    }
+}

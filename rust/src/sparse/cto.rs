@@ -1,0 +1,341 @@
+//! Compressed-Tile-Offset (CTO) execution plans — Rust twin of
+//! `python/compile/plans.py` (paper §V "Tile Fusion and Compressed Tile
+//! Offset").
+//!
+//! A `TwPlan` stores each condensed tile's values plus two offset tables:
+//! `row_idx` (which original rows of B / columns of A each condensed row
+//! corresponds to — `CTO_k` in the paper's Listing 1) and `col_idx`
+//! (which original output columns each condensed column scatters to —
+//! `CTO_n`).  Padding rows index 0 against zeroed values; padding columns
+//! carry the sentinel `n` and are dropped by the scatter.
+
+use crate::sparse::TwStructure;
+use crate::tensor::Matrix;
+use crate::util::round_up;
+
+/// Padded CTO arrays for one TW-pruned weight matrix.
+#[derive(Clone, Debug)]
+pub struct TwPlan {
+    /// Condensed tile values, `(tiles, kmax, g)` flattened row-major.
+    pub b_cond: Vec<f32>,
+    /// Original row index per condensed row, `(tiles, kmax)`.
+    pub row_idx: Vec<i32>,
+    /// Valid rows per tile, `(tiles,)`.
+    pub row_len: Vec<i32>,
+    /// Original column index per condensed column, `(tiles, g)`;
+    /// sentinel == `n` marks padding.
+    pub col_idx: Vec<i32>,
+    pub tiles: usize,
+    pub kmax: usize,
+    pub g: usize,
+    /// Original K (reduction length).
+    pub k: usize,
+    /// Original N (output width).
+    pub n: usize,
+}
+
+impl TwPlan {
+    /// Encode a TW structure over weight matrix `w`.
+    pub fn encode(w: &Matrix, tw: &TwStructure) -> TwPlan {
+        Self::encode_with_kmax_multiple(w, tw, 8)
+    }
+
+    pub fn encode_with_kmax_multiple(w: &Matrix, tw: &TwStructure, mult: usize) -> TwPlan {
+        let (k, n) = tw.shape;
+        let g = tw.g;
+        let tiles = tw.num_tiles();
+        let kmax = round_up(
+            tw.tile_rows.iter().map(Vec::len).max().unwrap_or(1).max(1),
+            mult,
+        );
+        let mut b_cond = vec![0.0f32; tiles * kmax * g];
+        let mut row_idx = vec![0i32; tiles * kmax];
+        let mut row_len = vec![0i32; tiles];
+        let mut col_idx = vec![n as i32; tiles * g];
+        for t in 0..tiles {
+            let rows = &tw.tile_rows[t];
+            let cols = tw.tile_cols(t);
+            row_len[t] = rows.len() as i32;
+            for (i, &r) in rows.iter().enumerate() {
+                row_idx[t * kmax + i] = r as i32;
+                for (j, &c) in cols.iter().enumerate() {
+                    b_cond[(t * kmax + i) * g + j] = w.at(r, c);
+                }
+            }
+            for (j, &c) in cols.iter().enumerate() {
+                col_idx[t * g + j] = c as i32;
+            }
+        }
+        TwPlan { b_cond, row_idx, row_len, col_idx, tiles, kmax, g, k, n }
+    }
+
+    /// Expand back to the dense masked weight matrix (tests, debugging).
+    pub fn decode(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.k, self.n);
+        for t in 0..self.tiles {
+            let kt = self.row_len[t] as usize;
+            for i in 0..kt {
+                let r = self.row_idx[t * self.kmax + i] as usize;
+                for j in 0..self.g {
+                    let c = self.col_idx[t * self.g + j];
+                    if (c as usize) < self.n {
+                        *w.at_mut(r, c as usize) = self.b_cond[(t * self.kmax + i) * self.g + j];
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// MACs*2 executed by the condensed GEMM for `m` activation rows.
+    pub fn flops(&self, m: usize) -> usize {
+        2 * m * self.g * self.row_len.iter().map(|&x| x as usize).sum::<usize>()
+    }
+
+    pub fn dense_flops(&self, m: usize) -> usize {
+        2 * m * self.k * self.n
+    }
+
+    /// Bytes of the condensed representation (values + offset tables).
+    pub fn storage_bytes(&self) -> usize {
+        self.b_cond.len() * 4 + self.row_idx.len() * 4 + self.col_idx.len() * 4 + self.row_len.len() * 4
+    }
+}
+
+/// TW plan whose condensed tiles are additionally 2:4-compressed along K —
+/// the TVW storage format (values + in-group positions, the sparse tensor
+/// core metadata word).
+#[derive(Clone, Debug)]
+pub struct TvwPlan {
+    /// Kept values, `(tiles, kmax/2, g)`.
+    pub b_vals: Vec<f32>,
+    /// In-group position (0..3) of each kept value, `(tiles, kmax/2, g)`.
+    pub b_sel: Vec<i32>,
+    pub row_idx: Vec<i32>,
+    pub row_len: Vec<i32>,
+    pub col_idx: Vec<i32>,
+    pub tiles: usize,
+    pub kmax: usize,
+    pub g: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl TvwPlan {
+    /// Encode from the TW structure + final TVW keep-mask (which keeps at
+    /// most 2 of every 4 condensed rows per column).
+    pub fn encode(w: &Matrix, tw: &TwStructure, mask: &crate::sparse::Mask) -> TvwPlan {
+        let wm = mask.apply(w);
+        let base = TwPlan::encode_with_kmax_multiple(&wm, tw, 8);
+        let (tiles, kmax, g) = (base.tiles, base.kmax, base.g);
+        assert_eq!(kmax % 4, 0);
+        let khalf = kmax / 2;
+        let mut b_vals = vec![0.0f32; tiles * khalf * g];
+        let mut b_sel = vec![0i32; tiles * khalf * g];
+        for t in 0..tiles {
+            for grp in 0..kmax / 4 {
+                for j in 0..g {
+                    // top-2 magnitudes of the 4-row group, positions ascending
+                    let mut v: Vec<(usize, f32)> = (0..4)
+                        .map(|i| (i, base.b_cond[(t * kmax + grp * 4 + i) * g + j]))
+                        .collect();
+                    v.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+                    let mut sel = [v[0].0, v[1].0];
+                    sel.sort_unstable();
+                    for (slot, &pos) in sel.iter().enumerate() {
+                        let out = (t * khalf + grp * 2 + slot) * g + j;
+                        b_sel[out] = pos as i32;
+                        b_vals[out] = base.b_cond[(t * kmax + grp * 4 + pos) * g + j];
+                    }
+                }
+            }
+        }
+        TvwPlan {
+            b_vals,
+            b_sel,
+            row_idx: base.row_idx,
+            row_len: base.row_len,
+            col_idx: base.col_idx,
+            tiles,
+            kmax,
+            g,
+            k: base.k,
+            n: base.n,
+        }
+    }
+
+    /// Expand back to the dense masked weight matrix.
+    pub fn decode(&self) -> Matrix {
+        let khalf = self.kmax / 2;
+        let mut b_cond = vec![0.0f32; self.tiles * self.kmax * self.g];
+        for t in 0..self.tiles {
+            for i in 0..khalf {
+                let grp_base = (i / 2) * 4;
+                for j in 0..self.g {
+                    let pos = self.b_sel[(t * khalf + i) * self.g + j] as usize;
+                    b_cond[(t * self.kmax + grp_base + pos) * self.g + j] =
+                        self.b_vals[(t * khalf + i) * self.g + j];
+                }
+            }
+        }
+        let base = TwPlan {
+            b_cond,
+            row_idx: self.row_idx.clone(),
+            row_len: self.row_len.clone(),
+            col_idx: self.col_idx.clone(),
+            tiles: self.tiles,
+            kmax: self.kmax,
+            g: self.g,
+            k: self.k,
+            n: self.n,
+        };
+        base.decode()
+    }
+
+    /// The sparse tensor core executes only the kept half of each vector.
+    pub fn flops(&self, m: usize) -> usize {
+        m * self.g * self.row_len.iter().map(|&x| x as usize).sum::<usize>()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        // values f32 + 2-bit metadata per value (packed, as on hardware)
+        self.b_vals.len() * 4
+            + self.b_vals.len() / 4
+            + self.row_idx.len() * 4
+            + self.col_idx.len() * 4
+    }
+}
+
+/// Plain 2:4 compression of a full matrix along K (Ampere sparse tensor
+/// core storage: values + 2-bit metadata).
+#[derive(Clone, Debug)]
+pub struct Vw24Plan {
+    /// `(k/2, n)` kept values.
+    pub b_vals: Vec<f32>,
+    /// `(k/2, n)` in-group positions (0..3).
+    pub b_sel: Vec<i32>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Vw24Plan {
+    /// Compress a 2:4-masked matrix; `mask` must keep exactly 2 of every 4
+    /// consecutive elements along K.
+    pub fn encode(w: &Matrix, mask: &crate::sparse::Mask) -> Result<Vw24Plan, String> {
+        let (k, n) = (w.rows, w.cols);
+        if k % 4 != 0 {
+            return Err(format!("K={k} not a multiple of 4"));
+        }
+        let khalf = k / 2;
+        let mut b_vals = vec![0.0f32; khalf * n];
+        let mut b_sel = vec![0i32; khalf * n];
+        for c in 0..n {
+            for grp in 0..k / 4 {
+                let kept: Vec<usize> = (0..4).filter(|&i| mask.at(grp * 4 + i, c)).collect();
+                if kept.len() != 2 {
+                    return Err(format!("group ({grp},{c}) keeps {} != 2", kept.len()));
+                }
+                for (slot, &pos) in kept.iter().enumerate() {
+                    b_sel[(grp * 2 + slot) * n + c] = pos as i32;
+                    b_vals[(grp * 2 + slot) * n + c] = w.at(grp * 4 + pos, c);
+                }
+            }
+        }
+        Ok(Vw24Plan { b_vals, b_sel, k, n })
+    }
+
+    pub fn decode(&self) -> Matrix {
+        let khalf = self.k / 2;
+        let mut w = Matrix::zeros(self.k, self.n);
+        for c in 0..self.n {
+            for i in 0..khalf {
+                let r = (i / 2) * 4 + self.b_sel[i * self.n + c] as usize;
+                *w.at_mut(r, c) = self.b_vals[i * self.n + c];
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{prune_tvw, prune_tw, prune_vw};
+    use crate::util::Rng;
+
+    fn mat(r: usize, c: usize, seed: u64) -> Matrix {
+        Matrix::randn(r, c, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn tw_plan_roundtrip() {
+        let w = mat(96, 80, 21);
+        let tw = prune_tw(&w, 0.6, 16, None);
+        let plan = TwPlan::encode(&w, &tw);
+        let decoded = plan.decode();
+        let masked = tw.mask().apply(&w);
+        assert_eq!(decoded.max_abs_diff(&masked), 0.0);
+    }
+
+    #[test]
+    fn tw_plan_padding_invariants() {
+        let w = mat(64, 48, 22);
+        let tw = prune_tw(&w, 0.5, 16, None);
+        let p = TwPlan::encode(&w, &tw);
+        assert_eq!(p.kmax % 8, 0);
+        for t in 0..p.tiles {
+            let kt = p.row_len[t] as usize;
+            for i in kt..p.kmax {
+                for j in 0..p.g {
+                    assert_eq!(p.b_cond[(t * p.kmax + i) * p.g + j], 0.0);
+                }
+                assert!((p.row_idx[t * p.kmax + i] as usize) < p.k);
+            }
+        }
+    }
+
+    #[test]
+    fn tvw_plan_roundtrip() {
+        let w = mat(96, 80, 23);
+        let (tw, mask) = prune_tvw(&w, 0.7, 16);
+        let plan = TvwPlan::encode(&w, &tw, &mask);
+        let decoded = plan.decode();
+        let masked = mask.apply(&w);
+        assert_eq!(decoded.max_abs_diff(&masked), 0.0);
+    }
+
+    #[test]
+    fn vw24_plan_roundtrip() {
+        let w = mat(64, 48, 24);
+        let mask = prune_vw(&w, 0.5, 4);
+        let plan = Vw24Plan::encode(&w, &mask).unwrap();
+        assert_eq!(plan.decode().max_abs_diff(&mask.apply(&w)), 0.0);
+    }
+
+    #[test]
+    fn vw24_rejects_bad_mask() {
+        let w = mat(8, 4, 25);
+        let mask = crate::sparse::Mask::all(8, 4);
+        assert!(Vw24Plan::encode(&w, &mask).is_err());
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let w = mat(64, 64, 26);
+        let tw = prune_tw(&w, 0.75, 16, None);
+        let p = TwPlan::encode(&w, &tw);
+        assert!(p.flops(32) < p.dense_flops(32));
+        let (tw2, mask) = prune_tvw(&w, 0.75, 16);
+        let q = TvwPlan::encode(&w, &tw2, &mask);
+        let base = TwPlan::encode(&w, &tw2);
+        assert_eq!(q.flops(32) * 2, base.flops(32));
+    }
+
+    #[test]
+    fn storage_shrinks_with_sparsity() {
+        let w = mat(256, 256, 27);
+        let lo = TwPlan::encode(&w, &prune_tw(&w, 0.25, 32, None));
+        let hi = TwPlan::encode(&w, &prune_tw(&w, 0.9, 32, None));
+        assert!(hi.storage_bytes() < lo.storage_bytes());
+    }
+}

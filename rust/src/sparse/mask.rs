@@ -1,0 +1,115 @@
+//! Boolean keep-masks over weight matrices.
+
+/// Dense boolean keep-mask (true = weight survives) with matrix geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub keep: Vec<bool>,
+}
+
+impl Mask {
+    pub fn all(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, keep: vec![true; rows * cols] }
+    }
+
+    pub fn none(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, keep: vec![false; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> bool {
+        self.keep[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.keep[r * self.cols + c] = v;
+    }
+
+    pub fn count_kept(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count()
+    }
+
+    /// Fraction of weights removed.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.count_kept() as f64 / self.keep.len() as f64
+    }
+
+    /// Element-wise OR (used by TEW = TW mask | remedy mask).
+    pub fn or(&self, other: &Mask) -> Mask {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mask {
+            rows: self.rows,
+            cols: self.cols,
+            keep: self.keep.iter().zip(&other.keep).map(|(a, b)| *a || *b).collect(),
+        }
+    }
+
+    /// Element-wise AND (used by TVW = TW mask & 2:4 mask).
+    pub fn and(&self, other: &Mask) -> Mask {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mask {
+            rows: self.rows,
+            cols: self.cols,
+            keep: self.keep.iter().zip(&other.keep).map(|(a, b)| *a && *b).collect(),
+        }
+    }
+
+    /// True where both masks disagree on no kept element of `self`
+    /// (i.e. self ⊆ other).
+    pub fn subset_of(&self, other: &Mask) -> bool {
+        self.keep.iter().zip(&other.keep).all(|(a, b)| !*a || *b)
+    }
+
+    /// Apply to a weight matrix: zero every pruned element.
+    pub fn apply(&self, w: &crate::tensor::Matrix) -> crate::tensor::Matrix {
+        assert_eq!((self.rows, self.cols), (w.rows, w.cols));
+        let data = w
+            .data
+            .iter()
+            .zip(&self.keep)
+            .map(|(x, k)| if *k { *x } else { 0.0 })
+            .collect();
+        crate::tensor::Matrix::from_vec(w.rows, w.cols, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn sparsity_accounting() {
+        let mut m = Mask::all(4, 4);
+        m.set(0, 0, false);
+        m.set(1, 1, false);
+        assert_eq!(m.count_kept(), 14);
+        assert!((m.sparsity() - 2.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn or_and_subset() {
+        let mut a = Mask::none(2, 2);
+        a.set(0, 0, true);
+        let mut b = Mask::none(2, 2);
+        b.set(1, 1, true);
+        let u = a.or(&b);
+        assert_eq!(u.count_kept(), 2);
+        assert!(a.subset_of(&u));
+        assert_eq!(a.and(&b).count_kept(), 0);
+    }
+
+    #[test]
+    fn apply_zeroes_pruned() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(3, 3, &mut rng);
+        let mut m = Mask::all(3, 3);
+        m.set(2, 2, false);
+        let wm = m.apply(&w);
+        assert_eq!(wm.at(2, 2), 0.0);
+        assert_eq!(wm.at(0, 0), w.at(0, 0));
+    }
+}

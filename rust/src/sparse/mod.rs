@@ -1,0 +1,101 @@
+//! Sparsity-pattern substrate: masks, the six pruning patterns of the
+//! paper's Fig. 2 (EW / VW / BW / TW / TEW / TVW), CTO execution plans,
+//! CSR/CSC formats, and distribution statistics.
+
+mod cto;
+mod csr;
+mod mask;
+mod pattern;
+mod stats;
+mod tw;
+
+pub use cto::{TvwPlan, TwPlan, Vw24Plan};
+pub use csr::{Csc, Csr};
+pub use mask::Mask;
+pub use pattern::{importance_element, prune_bw, prune_ew, prune_vw};
+pub use stats::{mask_stats, render_heatmap, MaskStats};
+pub use tw::{prune_tew, prune_tvw, prune_tw, TwStructure};
+
+/// The six sparsity patterns evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    /// Element-wise (unstructured).
+    Ew,
+    /// Vector-wise n:m along K; `m` is the vector length (4 => 2:4, 16 => n:16).
+    Vw { m: usize },
+    /// Block-wise GxG.
+    Bw { g: usize },
+    /// Tile-wise with granularity G.
+    Tw { g: usize },
+    /// TW overlaid with an EW remedy fraction (delta in the paper).
+    Tew { g: usize, delta_pct: u8 },
+    /// TW fused with 2:4 VW (TVW-4) or n:16 (TVW-16).
+    Tvw { g: usize, m: usize },
+}
+
+impl Pattern {
+    /// Label in the paper's "XX-YY" convention (e.g. `TW-64`, `VW-4`).
+    pub fn label(&self) -> String {
+        match self {
+            Pattern::Ew => "EW".to_string(),
+            Pattern::Vw { m } => format!("VW-{m}"),
+            Pattern::Bw { g } => format!("BW-{g}"),
+            Pattern::Tw { g } => format!("TW-{g}"),
+            Pattern::Tew { g, delta_pct } => format!("TEW-{g}@{delta_pct}%"),
+            Pattern::Tvw { g, m } => format!("TVW-{m}(G={g})"),
+        }
+    }
+
+    /// Prune a weight matrix to this pattern at the given sparsity; returns
+    /// the keep-mask (losing TW structure — use the specific functions when
+    /// the CTO plan is needed).
+    pub fn prune(&self, w: &crate::tensor::Matrix, sparsity: f64) -> Mask {
+        match self {
+            Pattern::Ew => prune_ew(w, sparsity, None),
+            Pattern::Vw { m } => prune_vw(w, sparsity, *m),
+            Pattern::Bw { g } => prune_bw(w, sparsity, *g),
+            Pattern::Tw { g } => prune_tw(w, sparsity, *g, None).mask(),
+            Pattern::Tew { g, delta_pct } => {
+                let (tw, remedy) = prune_tew(w, sparsity, *delta_pct as f64 / 100.0, *g);
+                tw.mask().or(&remedy)
+            }
+            Pattern::Tvw { g, .. } => prune_tvw(w, sparsity.max(0.5), *g).1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn labels_match_paper_convention() {
+        assert_eq!(Pattern::Tw { g: 64 }.label(), "TW-64");
+        assert_eq!(Pattern::Vw { m: 4 }.label(), "VW-4");
+        assert_eq!(Pattern::Bw { g: 16 }.label(), "BW-16");
+    }
+
+    #[test]
+    fn all_patterns_prune_to_roughly_target() {
+        let w = Matrix::randn(128, 128, &mut Rng::new(50));
+        for p in [
+            Pattern::Ew,
+            Pattern::Vw { m: 4 },
+            Pattern::Bw { g: 16 },
+            Pattern::Tw { g: 32 },
+            Pattern::Tew { g: 32, delta_pct: 5 },
+            Pattern::Tvw { g: 32, m: 4 },
+        ] {
+            let s = 0.5;
+            let m = p.prune(&w, s);
+            assert!(
+                (m.sparsity() - s).abs() < 0.05,
+                "{}: {}",
+                p.label(),
+                m.sparsity()
+            );
+        }
+    }
+}

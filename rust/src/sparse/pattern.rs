@@ -1,0 +1,184 @@
+//! Algorithm 2: element-wise, vector-wise (n:m), and block-wise pruning.
+//!
+//! Exact twins of `python/compile/pruning.py` — rank-based selection,
+//! density-normalised ragged blocks — so cross-language golden tests hold.
+
+use crate::sparse::Mask;
+use crate::tensor::Matrix;
+use crate::util::argsort_desc_by;
+
+/// Per-element importance score: |w| (magnitude) or |w * grad| (first-order
+/// Taylor, Molchanov et al.) when a gradient is supplied.
+pub fn importance_element(w: &Matrix, grad: Option<&Matrix>) -> Vec<f64> {
+    match grad {
+        None => w.data.iter().map(|x| x.abs() as f64).collect(),
+        Some(g) => {
+            assert_eq!((w.rows, w.cols), (g.rows, g.cols));
+            w.data.iter().zip(&g.data).map(|(x, gx)| (x * gx).abs() as f64).collect()
+        }
+    }
+}
+
+fn keep_topk(scores: &[f64], keep: usize) -> Vec<bool> {
+    let keep = keep.min(scores.len());
+    let order = argsort_desc_by(scores.len(), |i| scores[i]);
+    let mut mask = vec![false; scores.len()];
+    for &i in order.iter().take(keep) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// Element-wise pruning: keep the global top `(1 - sparsity)` fraction.
+pub fn prune_ew(w: &Matrix, sparsity: f64, grad: Option<&Matrix>) -> Mask {
+    let scores = importance_element(w, grad);
+    let keep = ((1.0 - sparsity) * w.data.len() as f64).round() as usize;
+    Mask { rows: w.rows, cols: w.cols, keep: keep_topk(&scores, keep) }
+}
+
+/// Vector-wise n:m pruning along K (rows): each group of `m` consecutive
+/// elements in a column keeps its top `round((1-s)*m)` by magnitude.
+/// `w.rows` must be divisible by `m`.  `(m=4, s=0.5)` is Ampere 2:4.
+pub fn prune_vw(w: &Matrix, sparsity: f64, m: usize) -> Mask {
+    assert_eq!(w.rows % m, 0, "K={} not divisible by m={}", w.rows, m);
+    let keep_per_vec = ((1.0 - sparsity) * m as f64).round() as usize;
+    let mut mask = Mask::none(w.rows, w.cols);
+    for c in 0..w.cols {
+        for g in 0..w.rows / m {
+            let base = g * m;
+            let order = argsort_desc_by(m, |i| w.at(base + i, c).abs() as f64);
+            for &i in order.iter().take(keep_per_vec) {
+                mask.set(base + i, c, true);
+            }
+        }
+    }
+    mask
+}
+
+/// Block-wise pruning with GxG blocks and a global threshold over block
+/// importance densities (sum |w| / valid area — ragged edges compete fairly).
+pub fn prune_bw(w: &Matrix, sparsity: f64, g: usize) -> Mask {
+    let bk = w.rows.div_ceil(g);
+    let bn = w.cols.div_ceil(g);
+    let nblocks = bk * bn;
+    let mut density = vec![0.0f64; nblocks];
+    for bi in 0..bk {
+        for bj in 0..bn {
+            let r0 = bi * g;
+            let c0 = bj * g;
+            let r1 = (r0 + g).min(w.rows);
+            let c1 = (c0 + g).min(w.cols);
+            let mut sum = 0.0f64;
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    sum += w.at(r, c).abs() as f64;
+                }
+            }
+            let area = ((r1 - r0) * (c1 - c0)).max(1) as f64;
+            density[bi * bn + bj] = sum / area;
+        }
+    }
+    let keep = ((1.0 - sparsity) * nblocks as f64).round() as usize;
+    let bmask = keep_topk(&density, keep);
+    let mut mask = Mask::none(w.rows, w.cols);
+    for bi in 0..bk {
+        for bj in 0..bn {
+            if bmask[bi * bn + bj] {
+                for r in bi * g..((bi + 1) * g).min(w.rows) {
+                    for c in bj * g..((bj + 1) * g).min(w.cols) {
+                        mask.set(r, c, true);
+                    }
+                }
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mat(r: usize, c: usize, seed: u64) -> Matrix {
+        Matrix::randn(r, c, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn ew_hits_target_and_keeps_largest() {
+        let w = mat(32, 32, 1);
+        let m = prune_ew(&w, 0.5, None);
+        assert!((m.sparsity() - 0.5).abs() < 0.01);
+        let kept_min = w
+            .data
+            .iter()
+            .zip(&m.keep)
+            .filter(|(_, k)| **k)
+            .map(|(x, _)| x.abs())
+            .fold(f32::MAX, f32::min);
+        let pruned_max = w
+            .data
+            .iter()
+            .zip(&m.keep)
+            .filter(|(_, k)| !**k)
+            .map(|(x, _)| x.abs())
+            .fold(0.0, f32::max);
+        assert!(kept_min >= pruned_max);
+    }
+
+    #[test]
+    fn vw_24_is_balanced() {
+        let w = mat(64, 48, 2);
+        let m = prune_vw(&w, 0.5, 4);
+        for c in 0..48 {
+            for g in 0..16 {
+                let cnt = (0..4).filter(|i| m.at(g * 4 + i, c)).count();
+                assert_eq!(cnt, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn vw_416() {
+        let w = mat(64, 8, 3);
+        let m = prune_vw(&w, 0.75, 16);
+        for c in 0..8 {
+            for g in 0..4 {
+                let cnt = (0..16).filter(|i| m.at(g * 16 + i, c)).count();
+                assert_eq!(cnt, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn bw_is_block_structured() {
+        let w = mat(64, 64, 4);
+        let m = prune_bw(&w, 0.5, 16);
+        for bi in 0..4 {
+            for bj in 0..4 {
+                let cnt = (0..16)
+                    .flat_map(|r| (0..16).map(move |c| (r, c)))
+                    .filter(|&(r, c)| m.at(bi * 16 + r, bj * 16 + c))
+                    .count();
+                assert!(cnt == 0 || cnt == 256);
+            }
+        }
+        assert!((m.sparsity() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn bw_ragged_edges_reasonable() {
+        let w = mat(70, 50, 5);
+        let m = prune_bw(&w, 0.5, 16);
+        assert!(m.sparsity() > 0.3 && m.sparsity() < 0.7, "{}", m.sparsity());
+    }
+
+    #[test]
+    fn taylor_score_changes_selection() {
+        let w = mat(16, 16, 6);
+        let g = mat(16, 16, 7);
+        let m1 = prune_ew(&w, 0.5, None);
+        let m2 = prune_ew(&w, 0.5, Some(&g));
+        assert_ne!(m1, m2);
+    }
+}

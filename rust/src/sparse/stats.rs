@@ -1,0 +1,130 @@
+//! Sparsity-distribution statistics (paper Fig. 9: how "irregular" and how
+//! "unevenly distributed" each pattern's surviving weights are).
+
+use crate::sparse::Mask;
+
+/// Summary statistics of a keep-mask's spatial distribution.
+#[derive(Clone, Debug)]
+pub struct MaskStats {
+    pub sparsity: f64,
+    /// Per-block kept-fraction variance over a `block x block` partition —
+    /// the paper's "uneven distribution" axis: EW/TW high, VW ~0.
+    pub block_variance: f64,
+    /// Fraction of adjacent (horizontal) kept/pruned transitions — a proxy
+    /// for irregularity: EW high, BW low.
+    pub irregularity: f64,
+    /// Kept fraction of each block row/column band (for heatmap rendering).
+    pub block_density: Vec<f64>,
+    pub blocks_per_row: usize,
+}
+
+/// Compute distribution statistics over a `block`-sized partition.
+pub fn mask_stats(mask: &Mask, block: usize) -> MaskStats {
+    let bk = mask.rows.div_ceil(block);
+    let bn = mask.cols.div_ceil(block);
+    let mut density = vec![0.0f64; bk * bn];
+    for bi in 0..bk {
+        for bj in 0..bn {
+            let r1 = ((bi + 1) * block).min(mask.rows);
+            let c1 = ((bj + 1) * block).min(mask.cols);
+            let mut kept = 0usize;
+            let mut area = 0usize;
+            for r in bi * block..r1 {
+                for c in bj * block..c1 {
+                    kept += mask.at(r, c) as usize;
+                    area += 1;
+                }
+            }
+            density[bi * bn + bj] = kept as f64 / area.max(1) as f64;
+        }
+    }
+    let mean = density.iter().sum::<f64>() / density.len() as f64;
+    let var = density.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / density.len() as f64;
+
+    let mut transitions = 0usize;
+    let mut pairs = 0usize;
+    for r in 0..mask.rows {
+        for c in 1..mask.cols {
+            transitions += (mask.at(r, c) != mask.at(r, c - 1)) as usize;
+            pairs += 1;
+        }
+    }
+    MaskStats {
+        sparsity: mask.sparsity(),
+        block_variance: var,
+        irregularity: transitions as f64 / pairs.max(1) as f64,
+        block_density: density,
+        blocks_per_row: bn,
+    }
+}
+
+/// Render a mask as a text heatmap (one char per block): ' ' empty .. '#'
+/// fully kept — the Fig. 9 visualisation.
+pub fn render_heatmap(mask: &Mask, block: usize) -> String {
+    let stats = mask_stats(mask, block);
+    let ramp = [' ', '.', ':', '-', '=', '+', '*', '#'];
+    let bn = stats.blocks_per_row;
+    let mut out = String::new();
+    for (i, d) in stats.block_density.iter().enumerate() {
+        let lvl = ((d * (ramp.len() - 1) as f64).round() as usize).min(ramp.len() - 1);
+        out.push(ramp[lvl]);
+        if (i + 1) % bn == 0 {
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{prune_bw, prune_ew, prune_tw, prune_vw};
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    fn w128() -> Matrix {
+        Matrix::randn(128, 128, &mut Rng::new(40))
+    }
+
+    #[test]
+    fn vw_has_zero_block_variance() {
+        let w = w128();
+        let m = prune_vw(&w, 0.5, 4);
+        let s = mask_stats(&m, 16);
+        // every 4-vector keeps exactly 2 -> every block is exactly 50% dense
+        assert!(s.block_variance < 1e-6, "{}", s.block_variance);
+    }
+
+    #[test]
+    fn ew_more_irregular_than_bw() {
+        let w = w128();
+        let ew = mask_stats(&prune_ew(&w, 0.75, None), 16);
+        let bw = mask_stats(&prune_bw(&w, 0.75, 16), 16);
+        assert!(ew.irregularity > bw.irregularity);
+    }
+
+    #[test]
+    fn tw_adapts_to_uneven_distribution() {
+        // bias the magnitudes: left half of the matrix is "important"
+        let mut w = w128();
+        for r in 0..128 {
+            for c in 0..64 {
+                *w.at_mut(r, c) *= 4.0;
+            }
+        }
+        let tw = prune_tw(&w, 0.75, 32, None);
+        let s = mask_stats(&tw.mask(), 16);
+        let vw = mask_stats(&prune_vw(&w, 0.75, 4), 16);
+        // TW concentrates survivors on the important half; VW cannot
+        assert!(s.block_variance > vw.block_variance);
+    }
+
+    #[test]
+    fn heatmap_shape() {
+        let w = w128();
+        let m = prune_ew(&w, 0.5, None);
+        let hm = render_heatmap(&m, 16);
+        assert_eq!(hm.lines().count(), 8);
+        assert!(hm.lines().all(|l| l.chars().count() == 8));
+    }
+}

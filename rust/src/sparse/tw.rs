@@ -1,0 +1,302 @@
+//! Algorithm 3: tile-wise (TW), tile-element-wise (TEW), and
+//! tile-vector-wise (TVW) pruning.
+//!
+//! Mirrors `python/compile/pruning.py` exactly (rank-based selection,
+//! importance-density ranking for ragged segments, per-tile min-one-row
+//! invariant) so the two implementations can be golden-tested against each
+//! other through JSON fixtures.
+
+use crate::sparse::Mask;
+use crate::tensor::Matrix;
+use crate::util::argsort_desc_by;
+
+/// Structural description of a TW-pruned matrix: the surviving columns
+/// (TW-C) and, per width-G condensed tile, the surviving rows (TW-R).
+#[derive(Clone, Debug)]
+pub struct TwStructure {
+    /// Sorted original column indices that survived TW-C.
+    pub kept_cols: Vec<usize>,
+    /// Per condensed tile: sorted original row indices that survived TW-R.
+    pub tile_rows: Vec<Vec<usize>>,
+    /// Tile granularity G.
+    pub g: usize,
+    /// Original (K, N).
+    pub shape: (usize, usize),
+}
+
+impl TwStructure {
+    pub fn num_tiles(&self) -> usize {
+        self.tile_rows.len()
+    }
+
+    /// Original column indices covered by condensed tile `t`.
+    pub fn tile_cols(&self, t: usize) -> &[usize] {
+        let lo = t * self.g;
+        let hi = ((t + 1) * self.g).min(self.kept_cols.len());
+        &self.kept_cols[lo..hi]
+    }
+
+    /// Expand to a keep-mask in original (K, N) coordinates.
+    pub fn mask(&self) -> Mask {
+        let (k, n) = self.shape;
+        let mut m = Mask::none(k, n);
+        for t in 0..self.num_tiles() {
+            for &r in &self.tile_rows[t] {
+                for &c in self.tile_cols(t) {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Fraction of weights removed.
+    pub fn sparsity(&self) -> f64 {
+        let (k, n) = self.shape;
+        let kept: usize = (0..self.num_tiles())
+            .map(|t| self.tile_rows[t].len() * self.tile_cols(t).len())
+            .sum();
+        1.0 - kept as f64 / (k * n) as f64
+    }
+}
+
+/// Tile-wise pruning (Alg. 3 `TW`).
+///
+/// Stage 1 (TW-C) scores whole columns and keeps the global top
+/// `1 - s_c`; stage 2 (TW-R) re-tiles the condensed matrix into width-`g`
+/// tiles and keeps (1,G) row segments globally by importance *density*
+/// until the element budget `(1 - s_r) * K * Nk` is met.  Per-stage split
+/// is the paper's `s = 1 - sqrt(1 - s_t)` unless `col_sparsity` overrides.
+pub fn prune_tw(w: &Matrix, sparsity: f64, g: usize, col_sparsity: Option<f64>) -> TwStructure {
+    let (k, n) = (w.rows, w.cols);
+    let (s_c, s_r) = match col_sparsity {
+        None => {
+            let s = 1.0 - (1.0 - sparsity).max(0.0).sqrt();
+            (s, s)
+        }
+        Some(s_c) => {
+            let s_r = (1.0 - (1.0 - sparsity) / (1.0 - s_c).max(1e-12)).clamp(0.0, 1.0);
+            (s_c, s_r)
+        }
+    };
+
+    // --- TW-C: global column pruning ---
+    let col_scores: Vec<f64> = (0..n)
+        .map(|c| (0..k).map(|r| w.at(r, c).abs() as f64).sum())
+        .collect();
+    let keep_c = (((1.0 - s_c) * n as f64).round() as usize).max(1);
+    let order = argsort_desc_by(n, |i| col_scores[i]);
+    let mut kept_cols: Vec<usize> = order[..keep_c].to_vec();
+    kept_cols.sort_unstable();
+    let nk = kept_cols.len();
+
+    // --- TW-R: per-tile row pruning, global density ranking ---
+    let num_tiles = nk.div_ceil(g);
+    let widths: Vec<usize> = (0..num_tiles).map(|t| g.min(nk - t * g)).collect();
+    // seg[(r, t)] = sum |w[r, cols_of_tile_t]|
+    let mut seg = vec![0.0f64; k * num_tiles];
+    for t in 0..num_tiles {
+        for (j, &c) in kept_cols[t * g..(t * g + widths[t])].iter().enumerate() {
+            let _ = j;
+            for r in 0..k {
+                seg[r * num_tiles + t] += w.at(r, c).abs() as f64;
+            }
+        }
+    }
+    let target_kept = ((1.0 - s_r) * (k * nk) as f64).round() as usize;
+    let order = argsort_desc_by(k * num_tiles, |i| seg[i] / widths[i % num_tiles] as f64);
+    // keep the longest prefix whose cumulative element count stays within
+    // the budget (== numpy's searchsorted(csum, target, side="right") in
+    // the Python twin — keep exact parity for the golden tests)
+    let mut kept_elems = 0usize;
+    let mut n_keep = 0usize;
+    for &i in &order {
+        let w_i = widths[i % num_tiles];
+        if kept_elems + w_i > target_kept {
+            break;
+        }
+        kept_elems += w_i;
+        n_keep += 1;
+    }
+    n_keep = n_keep.max(num_tiles);
+    let mut seg_mask = vec![false; k * num_tiles];
+    for &i in order.iter().take(n_keep) {
+        seg_mask[i] = true;
+    }
+    // per-tile min-one-row invariant
+    for t in 0..num_tiles {
+        if !(0..k).any(|r| seg_mask[r * num_tiles + t]) {
+            let best = argsort_desc_by(k, |r| seg[r * num_tiles + t])[0];
+            seg_mask[best * num_tiles + t] = true;
+        }
+    }
+    let tile_rows: Vec<Vec<usize>> = (0..num_tiles)
+        .map(|t| (0..k).filter(|&r| seg_mask[r * num_tiles + t]).collect())
+        .collect();
+
+    TwStructure { kept_cols, tile_rows, g, shape: (k, n) }
+}
+
+/// Tile-element-wise pruning (Alg. 3 `TEW`): TW at `sparsity + delta`,
+/// then remedy the top-`delta` fraction of importance among TW-pruned
+/// elements.  Returns the TW structure and the remedy keep-mask.
+pub fn prune_tew(w: &Matrix, sparsity: f64, delta: f64, g: usize) -> (TwStructure, Mask) {
+    let s = (sparsity + delta).min(0.995);
+    let tw = prune_tw(w, s, g, None);
+    let tw_mask = tw.mask();
+    let mut scores = crate::sparse::importance_element(w, None);
+    for (i, k) in tw_mask.keep.iter().enumerate() {
+        if *k {
+            scores[i] = 0.0;
+        }
+    }
+    let remedy_count = (delta * w.data.len() as f64).round() as usize;
+    let order = argsort_desc_by(scores.len(), |i| scores[i]);
+    let mut remedy = Mask::none(w.rows, w.cols);
+    for &i in order.iter().take(remedy_count) {
+        if !tw_mask.keep[i] {
+            remedy.keep[i] = true;
+        }
+    }
+    (tw, remedy)
+}
+
+/// Tile-vector-wise pruning (Alg. 3 `TVW`): TW at `1 - 2*(1 - s_t)`, then
+/// fixed 2:4 along the condensed K dimension inside every tile.  Returns
+/// the TW structure and the final keep-mask.  Requires `sparsity >= 0.5`.
+pub fn prune_tvw(w: &Matrix, sparsity: f64, g: usize) -> (TwStructure, Mask) {
+    assert!(sparsity >= 0.5 - 1e-9, "TVW sparsity must be >= 0.5 (2:4 floor)");
+    let s_tw = 1.0 - 2.0 * (1.0 - sparsity);
+    let tw = prune_tw(w, s_tw, g, None);
+    let mut mask = Mask::none(w.rows, w.cols);
+    for t in 0..tw.num_tiles() {
+        let rows = &tw.tile_rows[t];
+        let cols = tw.tile_cols(t);
+        // condensed sub-matrix (Kt x width), zero-padded to a multiple of 4
+        for (j, &c) in cols.iter().enumerate() {
+            let _ = j;
+            let kt = rows.len();
+            let groups = kt.div_ceil(4);
+            for grp in 0..groups {
+                // keep the top-2 magnitudes of this 4-row group
+                let lo = grp * 4;
+                let len = 4.min(kt - lo);
+                let order = argsort_desc_by(len, |i| w.at(rows[lo + i], c).abs() as f64);
+                for &i in order.iter().take(2.min(len)) {
+                    mask.set(rows[lo + i], c, true);
+                }
+            }
+        }
+    }
+    (tw, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mat(r: usize, c: usize, seed: u64) -> Matrix {
+        Matrix::randn(r, c, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn tw_hits_target_sparsity() {
+        for &(k, n, g, s) in
+            &[(96usize, 80usize, 16usize, 0.6), (256, 256, 64, 0.75), (128, 100, 32, 0.5)]
+        {
+            let w = mat(k, n, 11);
+            let tw = prune_tw(&w, s, g, None);
+            assert!((tw.sparsity() - s).abs() < 0.03, "{k}x{n} g={g} s={s}: {}", tw.sparsity());
+        }
+    }
+
+    #[test]
+    fn tw_mask_is_tile_structured() {
+        let w = mat(64, 64, 12);
+        let tw = prune_tw(&w, 0.5, 16, None);
+        let m = tw.mask();
+        for t in 0..tw.num_tiles() {
+            let cols = tw.tile_cols(t);
+            // each tile: mask = rows_on × cols (outer product structure)
+            for &c in cols {
+                for r in 0..64 {
+                    let expected = tw.tile_rows[t].contains(&r);
+                    assert_eq!(m.at(r, c), expected);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tw_every_tile_nonempty() {
+        let w = mat(64, 64, 13);
+        let tw = prune_tw(&w, 0.95, 16, None);
+        assert!(tw.tile_rows.iter().all(|r| !r.is_empty()));
+    }
+
+    #[test]
+    fn tew_remedy_disjoint_and_sized() {
+        let w = mat(96, 96, 14);
+        let (tw, remedy) = prune_tew(&w, 0.7, 0.05, 16);
+        let twm = tw.mask();
+        assert!(!remedy.keep.iter().zip(&twm.keep).any(|(r, t)| *r && *t));
+        assert!((remedy.keep.iter().filter(|&&x| x).count() as f64 / (96.0 * 96.0) - 0.05).abs() < 0.01);
+        let fin = twm.or(&remedy);
+        assert!((fin.sparsity() - 0.7).abs() < 0.03, "{}", fin.sparsity());
+    }
+
+    #[test]
+    fn tvw_is_24_inside_tiles() {
+        let w = mat(128, 128, 15);
+        let (tw, mask) = prune_tvw(&w, 0.75, 32);
+        for t in 0..tw.num_tiles() {
+            let rows = &tw.tile_rows[t];
+            for &c in tw.tile_cols(t) {
+                for grp in 0..rows.len().div_ceil(4) {
+                    let len = 4.min(rows.len() - grp * 4);
+                    let cnt = (0..len).filter(|&i| mask.at(rows[grp * 4 + i], c)).count();
+                    assert!(cnt <= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tvw_target_sparsity() {
+        let w = mat(256, 256, 16);
+        for &s in &[0.5, 0.625, 0.75, 0.875] {
+            let (_, mask) = prune_tvw(&w, s, 64);
+            assert!((mask.sparsity() - s).abs() < 0.02, "s={s}: {}", mask.sparsity());
+        }
+    }
+
+    #[test]
+    fn tvw_mask_subset_of_tw() {
+        let w = mat(64, 64, 17);
+        let (tw, mask) = prune_tvw(&w, 0.75, 16);
+        assert!(mask.subset_of(&tw.mask()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn tvw_below_half_panics() {
+        let w = mat(16, 16, 18);
+        prune_tvw(&w, 0.3, 4);
+    }
+
+    #[test]
+    fn g_equals_n_is_global_structural() {
+        let w = mat(32, 32, 19);
+        let tw = prune_tw(&w, 0.5, 32, None);
+        assert_eq!(tw.num_tiles(), 1);
+    }
+
+    #[test]
+    fn prune_vw_composes_with_tw_for_reference() {
+        // sanity: standalone 2:4 has exactly 50% sparsity
+        let w = mat(64, 64, 20);
+        let m = crate::sparse::prune_vw(&w, 0.5, 4);
+        assert!((m.sparsity() - 0.5).abs() < 1e-9);
+    }
+}

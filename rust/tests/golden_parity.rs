@@ -1,0 +1,111 @@
+//! Cross-language golden parity: the Rust pruners must reproduce the
+//! Python implementation's pattern decisions exactly (same weights in →
+//! same masks out).  The fixture is written by `python/compile/golden.py`
+//! during `make artifacts`.
+
+use tilewise::json::Json;
+use tilewise::sparse::{prune_bw, prune_ew, prune_tew, prune_tvw, prune_tw, prune_vw, Mask};
+use tilewise::tensor::Matrix;
+
+fn fixture() -> Option<(Json, Matrix, usize)> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Json::parse(&text).ok()?;
+    let k = v.get("k")?.as_usize()?;
+    let n = v.get("n")?.as_usize()?;
+    let g = v.get("g")?.as_usize()?;
+    let w: Vec<f32> = v.get("w")?.as_arr()?.iter().map(|x| x.as_f64().unwrap() as f32).collect();
+    Some((v.clone(), Matrix::from_vec(k, n, w), g))
+}
+
+fn golden_mask(v: &Json, case: &str, rows: usize, cols: usize) -> Mask {
+    let bits = v.at(&["cases", case]).unwrap().as_arr().unwrap();
+    Mask { rows, cols, keep: bits.iter().map(|b| b.as_f64().unwrap() != 0.0).collect() }
+}
+
+fn check(case: &str, got: &Mask, v: &Json) {
+    let want = golden_mask(v, case, got.rows, got.cols);
+    let diff = got.keep.iter().zip(&want.keep).filter(|(a, b)| a != b).count();
+    assert_eq!(
+        diff, 0,
+        "{case}: {diff}/{} cells differ from the Python fixture",
+        got.keep.len()
+    );
+}
+
+#[test]
+fn ew_parity() {
+    let Some((v, w, _)) = fixture() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    check("ew_50", &prune_ew(&w, 0.5, None), &v);
+}
+
+#[test]
+fn vw_parity() {
+    let Some((v, w, _)) = fixture() else { return };
+    check("vw4_50", &prune_vw(&w, 0.5, 4), &v);
+}
+
+#[test]
+fn bw_parity() {
+    let Some((v, w, _)) = fixture() else { return };
+    check("bw8_50", &prune_bw(&w, 0.5, 8), &v);
+}
+
+#[test]
+fn tw_parity() {
+    let Some((v, w, g)) = fixture() else { return };
+    check("tw_60", &prune_tw(&w, 0.6, g, None).mask(), &v);
+}
+
+#[test]
+fn tw_plan_structure_parity() {
+    let Some((v, w, g)) = fixture() else { return };
+    let plan = tilewise::sparse::TwPlan::encode(&w, &prune_tw(&w, 0.6, g, None));
+    let p = v.get("tw_plan").unwrap();
+    assert_eq!(plan.tiles, p.get("tiles").unwrap().as_usize().unwrap());
+    assert_eq!(plan.kmax, p.get("kmax").unwrap().as_usize().unwrap());
+    let row_len: Vec<i32> = p
+        .get("row_len")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(plan.row_len, row_len);
+    let col_idx: Vec<i32> = p
+        .get("col_idx")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(plan.col_idx, col_idx);
+    let row_idx: Vec<i32> = p
+        .get("row_idx")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(plan.row_idx, row_idx);
+}
+
+#[test]
+fn tew_parity() {
+    let Some((v, w, g)) = fixture() else { return };
+    let (tw, remedy) = prune_tew(&w, 0.6, 0.05, g);
+    check("tew_60_5", &tw.mask().or(&remedy), &v);
+}
+
+#[test]
+fn tvw_parity() {
+    let Some((v, w, g)) = fixture() else { return };
+    let (_, mask) = prune_tvw(&w, 0.75, g);
+    check("tvw_75", &mask, &v);
+}

@@ -1,0 +1,202 @@
+//! Property-based tests over randomized shapes/sparsities (hand-rolled
+//! generator loop; the offline registry has no proptest).  Each property
+//! runs against `CASES` random configurations.
+
+use tilewise::gemm::{
+    block_spmm, csr_spmm, matmul_naive, tw_matmul, tw_matmul_parallel, tvw_matmul, vw24_matmul,
+};
+use tilewise::gemm::BlockSparse;
+use tilewise::sparse::{
+    prune_bw, prune_ew, prune_tew, prune_tvw, prune_tw, prune_vw, Csr, TvwPlan, TwPlan, Vw24Plan,
+};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+const CASES: usize = 40;
+
+struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed) }
+    }
+    fn dim(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+    fn dim_mult(&mut self, mult: usize, max_mults: usize) -> usize {
+        (1 + self.rng.below(max_mults)) * mult
+    }
+    fn sparsity(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+    fn matrix(&mut self, r: usize, c: usize) -> Matrix {
+        Matrix::randn(r, c, &mut self.rng)
+    }
+}
+
+#[test]
+fn prop_tw_plan_roundtrip() {
+    let mut g = Gen::new(100);
+    for case in 0..CASES {
+        let (k, n) = (g.dim(8, 96), g.dim(4, 96));
+        let gran = [4usize, 8, 16, 32][g.rng.below(4)];
+        let s = g.sparsity(0.0, 0.95);
+        let w = g.matrix(k, n);
+        let tw = prune_tw(&w, s, gran, None);
+        let plan = TwPlan::encode(&w, &tw);
+        let masked = tw.mask().apply(&w);
+        assert_eq!(
+            plan.decode().max_abs_diff(&masked),
+            0.0,
+            "case {case}: k={k} n={n} g={gran} s={s}"
+        );
+    }
+}
+
+#[test]
+fn prop_tw_kernel_matches_oracle() {
+    let mut g = Gen::new(200);
+    for case in 0..CASES {
+        let (m, k, n) = (g.dim(1, 48), g.dim(8, 64), g.dim(4, 64));
+        let gran = [4usize, 8, 16][g.rng.below(3)];
+        let s = g.sparsity(0.0, 0.9);
+        let a = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        let tw = prune_tw(&w, s, gran, None);
+        let plan = TwPlan::encode(&w, &tw);
+        let want = matmul_naive(&a, &tw.mask().apply(&w));
+        let got = tw_matmul(&a, &plan);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "case {case}: m={m} k={k} n={n} g={gran} s={s}: {}",
+            got.max_abs_diff(&want)
+        );
+        let got_par = tw_matmul_parallel(&a, &plan, 3);
+        assert!(got_par.max_abs_diff(&want) < 1e-3, "parallel case {case}");
+    }
+}
+
+#[test]
+fn prop_vw24_kernel_matches_oracle() {
+    let mut g = Gen::new(300);
+    for case in 0..CASES {
+        let (m, k, n) = (g.dim(1, 40), g.dim_mult(4, 16), g.dim(1, 48));
+        let a = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        let mask = prune_vw(&w, 0.5, 4);
+        let plan = Vw24Plan::encode(&w, &mask).unwrap();
+        let want = matmul_naive(&a, &mask.apply(&w));
+        assert!(
+            vw24_matmul(&a, &plan).max_abs_diff(&want) < 1e-3,
+            "case {case}: m={m} k={k} n={n}"
+        );
+    }
+}
+
+#[test]
+fn prop_tvw_kernel_matches_oracle() {
+    let mut g = Gen::new(400);
+    for case in 0..CASES {
+        let (m, k, n) = (g.dim(1, 40), g.dim_mult(8, 10), g.dim(4, 64));
+        let gran = [4usize, 8, 16][g.rng.below(3)];
+        let s = g.sparsity(0.5, 0.95);
+        let a = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        let (tw, mask) = prune_tvw(&w, s, gran);
+        let plan = TvwPlan::encode(&w, &tw, &mask);
+        let want = matmul_naive(&a, &mask.apply(&w));
+        let got = tvw_matmul(&a, &plan);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "case {case}: m={m} k={k} n={n} g={gran} s={s}: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn prop_spmm_matches_oracle() {
+    let mut g = Gen::new(500);
+    for case in 0..CASES {
+        let (m, k, n) = (g.dim(1, 40), g.dim(4, 64), g.dim(4, 64));
+        let s = g.sparsity(0.1, 0.99);
+        let a = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        let mask = prune_ew(&w, s, None);
+        let csr = Csr::from_masked(&w, &mask);
+        let want = matmul_naive(&a, &mask.apply(&w));
+        assert!(csr_spmm(&a, &csr).max_abs_diff(&want) < 1e-3, "case {case}");
+    }
+}
+
+#[test]
+fn prop_block_spmm_matches_oracle() {
+    let mut g = Gen::new(600);
+    for case in 0..CASES {
+        let gran = [4usize, 8, 16][g.rng.below(3)];
+        let (m, kb, nb) = (g.dim(1, 32), g.dim(1, 6), g.dim(1, 6));
+        let (k, n) = (kb * gran, nb * gran);
+        let s = g.sparsity(0.0, 0.95);
+        let a = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        let mask = prune_bw(&w, s, gran);
+        let bs = BlockSparse::from_masked(&w, &mask, gran);
+        let want = matmul_naive(&a, &mask.apply(&w));
+        assert!(block_spmm(&a, &bs).max_abs_diff(&want) < 1e-3, "case {case}");
+    }
+}
+
+#[test]
+fn prop_sparsity_targets_hit() {
+    let mut g = Gen::new(700);
+    for _ in 0..CASES {
+        let (k, n) = (g.dim(32, 128), g.dim(32, 128));
+        let w = g.matrix(k, n);
+        let s = g.sparsity(0.1, 0.9);
+        let ew = prune_ew(&w, s, None);
+        assert!((ew.sparsity() - s).abs() < 0.02, "EW {} vs {s}", ew.sparsity());
+        let tw = prune_tw(&w, s, 16, None);
+        assert!((tw.sparsity() - s).abs() < 0.08, "TW {} vs {s}", tw.sparsity());
+    }
+}
+
+#[test]
+fn prop_tew_masks_disjoint_and_sized() {
+    let mut g = Gen::new(800);
+    for _ in 0..CASES {
+        let (k, n) = (g.dim(24, 96), g.dim(24, 96));
+        let w = g.matrix(k, n);
+        let s = g.sparsity(0.3, 0.85);
+        let delta = g.sparsity(0.01, 0.10);
+        let (tw, remedy) = prune_tew(&w, s, delta, 8);
+        let twm = tw.mask();
+        assert!(!remedy.keep.iter().zip(&twm.keep).any(|(r, t)| *r && *t));
+        let fin = twm.or(&remedy);
+        assert!((fin.sparsity() - s).abs() < 0.1, "{} vs {s}", fin.sparsity());
+    }
+}
+
+#[test]
+fn prop_tvw_is_24_and_subset() {
+    let mut g = Gen::new(900);
+    for _ in 0..CASES {
+        let (k, n) = (g.dim(24, 96), g.dim(24, 96));
+        let w = g.matrix(k, n);
+        let s = g.sparsity(0.5, 0.95);
+        let (tw, mask) = prune_tvw(&w, s, 8);
+        assert!(mask.subset_of(&tw.mask()));
+        // every 4-condensed-row group keeps at most 2 per column
+        for t in 0..tw.num_tiles() {
+            let rows = &tw.tile_rows[t];
+            for &c in tw.tile_cols(t) {
+                for grp in 0..rows.len().div_ceil(4) {
+                    let len = 4.min(rows.len() - grp * 4);
+                    let kept = (0..len).filter(|&i| mask.at(rows[grp * 4 + i], c)).count();
+                    assert!(kept <= 2);
+                }
+            }
+        }
+    }
+}
