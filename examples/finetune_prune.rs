@@ -14,9 +14,9 @@ use tilewise::sparse::prune_tw;
 use tilewise::tensor::Matrix;
 use tilewise::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tilewise::error::Result<()> {
     let dir = std::path::Path::new("artifacts");
-    anyhow::ensure!(dir.join("meta.json").exists(), "run `make artifacts` first");
+    tilewise::ensure!(dir.join("meta.json").exists(), "run `make artifacts` first");
     let engine = Engine::load_only(dir, &["train_dense"])?;
     let model = engine.model("train_dense")?;
 

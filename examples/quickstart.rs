@@ -15,7 +15,7 @@ use tilewise::sparse::{prune_tw, TwPlan};
 use tilewise::tensor::Matrix;
 use tilewise::util::{Rng, Stopwatch};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tilewise::error::Result<()> {
     // --- 1. prune ---------------------------------------------------------
     let mut rng = Rng::new(42);
     let (m, k, n, g, sparsity) = (256usize, 512usize, 512usize, 64usize, 0.75);

@@ -17,12 +17,12 @@ fn run_load(
     variant: &str,
     requests: usize,
     rate_rps: f64,
-) -> anyhow::Result<()> {
+) -> tilewise::error::Result<()> {
     let cfg = ServerConfig {
         batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(3) },
         policy: Policy::Fixed(variant.to_string()),
         variants: vec![variant.to_string()],
-        max_queue: 0,
+        ..ServerConfig::default()
     };
     let handle = start(dir, cfg)?;
     let len = handle.seq * handle.d_model;
@@ -53,12 +53,12 @@ fn run_load(
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tilewise::error::Result<()> {
     let dir = std::path::PathBuf::from(
         std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
     );
     if !dir.join("meta.json").exists() {
-        anyhow::bail!("artifacts not found at {} — run `make artifacts` first", dir.display());
+        tilewise::bail!("artifacts not found at {} — run `make artifacts` first", dir.display());
     }
     let requests = 96;
     let rate = 60.0;

@@ -53,7 +53,7 @@ fn main() {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(100) },
             policy: Policy::Fixed(variant.into()),
             variants: vec![variant.into()],
-            max_queue: 0,
+            ..ServerConfig::default()
         };
         let handle = start(dir, cfg).expect("server start");
         let len = handle.seq * handle.d_model;

@@ -1,0 +1,326 @@
+//! Persistent plan cache: the tuner's output, serialized via `crate::json`
+//! so a tuning run survives process restarts and the serving stack can
+//! load it at startup.
+//!
+//! Schema (see `docs/autotune.md`): a `schema_version` header (the
+//! invalidation rule — a loader that sees any other version discards the
+//! file), a flat `entries` list keyed by `(M, K, N, pattern, sparsity,
+//! nthreads)`, and a `models` map of per-workload serving recommendations.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::space::{Candidate, KernelVariant};
+use crate::error::{Context, Result};
+use crate::gemm::TileConfig;
+use crate::gpusim::GemmShape;
+use crate::json::{arr, num, obj, s, Json};
+use crate::{anyhow, bail};
+
+/// Bump on any incompatible change to the cache layout or to the meaning
+/// of tuned parameters; stale caches are discarded wholesale on load.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Cache key: one GEMM problem as tuned.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlanKey {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Pattern family label (`DENSE` / `TW` / `TVW` / `VW-4`).
+    pub pattern: String,
+    /// Sparsity in basis points (7500 = 75%), keeping the key integral.
+    pub sparsity_bp: u32,
+    /// Thread budget the tuning ran under.
+    pub nthreads: usize,
+}
+
+impl PlanKey {
+    pub fn new(shape: GemmShape, pattern: &str, sparsity: f64, nthreads: usize) -> PlanKey {
+        PlanKey {
+            m: shape.m,
+            k: shape.k,
+            n: shape.n,
+            pattern: pattern.to_string(),
+            sparsity_bp: (sparsity * 10_000.0).round().clamp(0.0, 10_000.0) as u32,
+            nthreads,
+        }
+    }
+
+    /// Stable string id used as the map key.
+    pub fn id(&self) -> String {
+        format!(
+            "{}x{}x{}|{}|s{}|t{}",
+            self.m, self.k, self.n, self.pattern, self.sparsity_bp, self.nthreads
+        )
+    }
+}
+
+/// One tuned decision: the winning candidate plus its evidence.
+#[derive(Clone, Debug)]
+pub struct TunedEntry {
+    pub key: PlanKey,
+    /// Winning kernel variant (`KernelVariant::label()`).
+    pub variant: String,
+    pub bm: usize,
+    pub bk: usize,
+    pub g: usize,
+    pub threads: usize,
+    /// Trimmed-mean measured latency of the winner, microseconds.
+    pub measured_us: f64,
+    /// gpusim pre-filter estimate for the winner, microseconds.
+    pub model_us: f64,
+    /// Measured latency of the family's historical default config,
+    /// microseconds (the speedup baseline).
+    pub default_us: f64,
+}
+
+impl TunedEntry {
+    pub fn speedup(&self) -> f64 {
+        if self.measured_us > 0.0 {
+            self.default_us / self.measured_us
+        } else {
+            1.0
+        }
+    }
+
+    /// Reconstruct the winning candidate (for re-execution).
+    pub fn candidate(&self) -> Option<Candidate> {
+        Some(Candidate {
+            variant: KernelVariant::from_label(&self.variant)?,
+            tile: TileConfig::new(self.bm, self.bk),
+            g: self.g,
+            threads: self.threads,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("m", num(self.key.m as f64)),
+            ("k", num(self.key.k as f64)),
+            ("n", num(self.key.n as f64)),
+            ("pattern", s(&self.key.pattern)),
+            ("sparsity_bp", num(self.key.sparsity_bp as f64)),
+            ("nthreads", num(self.key.nthreads as f64)),
+            ("variant", s(&self.variant)),
+            ("bm", num(self.bm as f64)),
+            ("bk", num(self.bk as f64)),
+            ("g", num(self.g as f64)),
+            ("threads", num(self.threads as f64)),
+            ("measured_us", num(self.measured_us)),
+            ("model_us", num(self.model_us)),
+            ("default_us", num(self.default_us)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<TunedEntry> {
+        let field = |name: &str| -> Result<f64> {
+            v.get(name).and_then(Json::as_f64).context(format!("entry missing {name:?}"))
+        };
+        let key = PlanKey {
+            m: field("m")? as usize,
+            k: field("k")? as usize,
+            n: field("n")? as usize,
+            pattern: v
+                .get("pattern")
+                .and_then(Json::as_str)
+                .context("entry missing \"pattern\"")?
+                .to_string(),
+            sparsity_bp: field("sparsity_bp")? as u32,
+            nthreads: field("nthreads")? as usize,
+        };
+        Ok(TunedEntry {
+            key,
+            variant: v
+                .get("variant")
+                .and_then(Json::as_str)
+                .context("entry missing \"variant\"")?
+                .to_string(),
+            bm: field("bm")? as usize,
+            bk: field("bk")? as usize,
+            g: field("g")? as usize,
+            threads: field("threads")? as usize,
+            measured_us: field("measured_us")?,
+            model_us: field("model_us")?,
+            default_us: field("default_us")?,
+        })
+    }
+}
+
+/// The persistent cache.
+#[derive(Clone, Debug, Default)]
+pub struct PlanCache {
+    entries: BTreeMap<String, TunedEntry>,
+    /// Per-workload serving recommendation: model name → executable
+    /// variant ("model_dense" / "model_tw" / "model_tvw").
+    models: BTreeMap<String, String>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn insert(&mut self, entry: TunedEntry) {
+        self.entries.insert(entry.key.id(), entry);
+    }
+
+    pub fn get(&self, key: &PlanKey) -> Option<&TunedEntry> {
+        self.entries.get(&key.id())
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &TunedEntry> {
+        self.entries.values()
+    }
+
+    pub fn set_model_variant(&mut self, model: &str, variant: &str) {
+        self.models.insert(model.to_string(), variant.to_string());
+    }
+
+    /// The tuned serving recommendation for a model-zoo entry.
+    pub fn model_variant(&self, model: &str) -> Option<&str> {
+        self.models.get(model).map(String::as_str)
+    }
+
+    pub fn model_names(&self) -> impl Iterator<Item = &String> {
+        self.models.keys()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema_version", num(SCHEMA_VERSION as f64)),
+            ("entries", arr(self.entries.values().map(TunedEntry::to_json).collect())),
+            (
+                "models",
+                Json::Obj(
+                    self.models.iter().map(|(k, v)| (k.clone(), s(v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlanCache> {
+        let version = v
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .context("plan cache missing \"schema_version\"")? as u64;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "plan cache schema_version {version} != supported {SCHEMA_VERSION}; \
+                 re-run `tilewise autotune` to regenerate"
+            );
+        }
+        let mut cache = PlanCache::new();
+        for e in v.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            cache.insert(TunedEntry::from_json(e)?);
+        }
+        if let Some(models) = v.get("models").and_then(Json::as_obj) {
+            for (name, variant) in models {
+                if let Some(variant) = variant.as_str() {
+                    cache.set_model_variant(name, variant);
+                }
+            }
+        }
+        Ok(cache)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing plan cache {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PlanCache> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan cache {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        PlanCache::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::space::PatternFamily;
+
+    fn entry(m: usize, pattern: &str) -> TunedEntry {
+        TunedEntry {
+            key: PlanKey::new(GemmShape::new(m, 768, 3072), pattern, 0.75, 1),
+            variant: "tw-fused".into(),
+            bm: 64,
+            bk: 64,
+            g: 32,
+            threads: 1,
+            measured_us: 100.0,
+            model_us: 80.0,
+            default_us: 150.0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let mut cache = PlanCache::new();
+        cache.insert(entry(256, "TW"));
+        cache.insert(entry(256, "TVW"));
+        cache.set_model_variant("bert", "model_tw");
+        let text = cache.to_json().to_string();
+        let back = PlanCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.model_variant("bert"), Some("model_tw"));
+        let key = PlanKey::new(GemmShape::new(256, 768, 3072), "TW", 0.75, 1);
+        let e = back.get(&key).expect("entry survives");
+        assert_eq!(e.g, 32);
+        assert_eq!(e.variant, "tw-fused");
+        assert!((e.speedup() - 1.5).abs() < 1e-9);
+        let cand = e.candidate().unwrap();
+        assert_eq!(cand.variant.family(), PatternFamily::Tw);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut cache = PlanCache::new();
+        cache.insert(entry(64, "TW"));
+        let text = cache
+            .to_json()
+            .to_string()
+            .replace("\"schema_version\":1", "\"schema_version\":99");
+        assert!(text.contains("99"), "fixture edit failed");
+        let v = Json::parse(&text).unwrap();
+        assert!(PlanCache::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let dir = std::env::temp_dir().join(format!("tilewise_cache_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let mut cache = PlanCache::new();
+        cache.insert(entry(128, "TW"));
+        cache.set_model_variant("bert", "model_tw");
+        cache.save(&path).unwrap();
+        let back = PlanCache::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.model_variant("bert"), Some("model_tw"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(PlanCache::load(Path::new("/no/such/plan/cache.json")).is_err());
+    }
+
+    #[test]
+    fn key_basis_points_are_stable() {
+        let k1 = PlanKey::new(GemmShape::new(1, 2, 3), "TW", 0.75, 2);
+        let k2 = PlanKey::new(GemmShape::new(1, 2, 3), "TW", 0.7500001, 2);
+        assert_eq!(k1.id(), k2.id());
+    }
+}

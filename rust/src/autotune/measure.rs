@@ -1,0 +1,277 @@
+//! Wall-clock microbenchmark harness: warmup + time-budgeted sampling with
+//! a trimmed mean, plus the operand factory that turns a (shape, sparsity)
+//! tuning problem into real pruned matrices and condensed plans.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::space::{Candidate, KernelVariant};
+use crate::gemm::{
+    matmul_parallel, matmul_tiled, tvw_matmul_with, tw_matmul_parallel, tw_matmul_with,
+    vw24_matmul_with,
+};
+use crate::gpusim::GemmShape;
+use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use crate::tensor::Matrix;
+use crate::util::{Rng, Stopwatch};
+
+/// Sampling policy for one measurement.
+#[derive(Clone, Debug)]
+pub struct MeasureOpts {
+    /// Unrecorded runs before sampling starts.
+    pub warmup: usize,
+    /// Always collect at least this many samples.
+    pub min_iters: usize,
+    /// Never collect more than this many.
+    pub max_iters: usize,
+    /// Stop sampling once this much wall-clock has been spent.
+    pub budget_secs: f64,
+    /// Fraction trimmed from *each* end before averaging (outlier guard).
+    pub trim_frac: f64,
+}
+
+impl Default for MeasureOpts {
+    fn default() -> Self {
+        MeasureOpts {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget_secs: 0.12,
+            trim_frac: 0.2,
+        }
+    }
+}
+
+impl MeasureOpts {
+    /// A faster profile for benches / CI-adjacent runs.
+    pub fn quick() -> MeasureOpts {
+        MeasureOpts { warmup: 1, min_iters: 2, max_iters: 20, budget_secs: 0.05, trim_frac: 0.25 }
+    }
+}
+
+/// One measurement result.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Trimmed-mean latency, seconds.
+    pub mean_secs: f64,
+    /// Fastest observed sample, seconds.
+    pub min_secs: f64,
+    /// Samples taken (after warmup).
+    pub iters: usize,
+}
+
+/// Run `f` under the sampling policy and summarise.
+pub fn measure<F: FnMut()>(mut f: F, opts: &MeasureOpts) -> Measurement {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let clock = Stopwatch::start();
+    while samples.len() < opts.min_iters.max(1)
+        || (clock.secs() < opts.budget_secs && samples.len() < opts.max_iters.max(1))
+    {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.secs());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = samples.len();
+    let trim = ((n as f64) * opts.trim_frac.clamp(0.0, 0.49)).floor() as usize;
+    let kept = &samples[trim..n - trim];
+    let mean = kept.iter().sum::<f64>() / kept.len().max(1) as f64;
+    Measurement { mean_secs: mean, min_secs: samples[0], iters: n }
+}
+
+/// Operands shared by every candidate of one (shape, sparsity) tuning run:
+/// the activation and weight matrices plus lazily-encoded condensed plans,
+/// cached per granularity so re-measuring a G costs nothing extra.
+pub struct BenchData {
+    pub shape: GemmShape,
+    pub sparsity: f64,
+    pub a: Matrix,
+    pub w: Matrix,
+    tw_plans: HashMap<usize, Rc<TwPlan>>,
+    tvw_plans: HashMap<usize, Rc<TvwPlan>>,
+    vw_plan: Option<Option<Rc<Vw24Plan>>>,
+}
+
+impl BenchData {
+    pub fn new(shape: GemmShape, sparsity: f64, seed: u64) -> BenchData {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::randn(shape.m, shape.k, &mut rng);
+        let w = Matrix::randn(shape.k, shape.n, &mut rng);
+        BenchData {
+            shape,
+            sparsity,
+            a,
+            w,
+            tw_plans: HashMap::new(),
+            tvw_plans: HashMap::new(),
+            vw_plan: None,
+        }
+    }
+
+    /// Condensed TW plan at granularity `g` (encoded once, then cached).
+    pub fn tw_plan(&mut self, g: usize) -> Rc<TwPlan> {
+        let (w, sparsity) = (&self.w, self.sparsity);
+        self.tw_plans
+            .entry(g)
+            .or_insert_with(|| {
+                let tw = prune_tw(w, sparsity, g, None);
+                Rc::new(TwPlan::encode(w, &tw))
+            })
+            .clone()
+    }
+
+    /// Condensed TVW plan at granularity `g` (TVW needs >= 50% sparsity
+    /// for the 2:4 leg, matching `Pattern::prune`).
+    pub fn tvw_plan(&mut self, g: usize) -> Rc<TvwPlan> {
+        let (w, sparsity) = (&self.w, self.sparsity.max(0.5));
+        self.tvw_plans
+            .entry(g)
+            .or_insert_with(|| {
+                let (tw, mask) = prune_tvw(w, sparsity, g);
+                Rc::new(TvwPlan::encode(w, &tw, &mask))
+            })
+            .clone()
+    }
+
+    /// 2:4 plan (fixed 50% sparsity); `None` when K is not 4-aligned.
+    pub fn vw24_plan(&mut self) -> Option<Rc<Vw24Plan>> {
+        if self.vw_plan.is_none() {
+            let built = if self.shape.k % 4 == 0 {
+                let mask = prune_vw(&self.w, 0.5, 4);
+                Vw24Plan::encode(&self.w, &mask).ok().map(Rc::new)
+            } else {
+                None
+            };
+            self.vw_plan = Some(built);
+        }
+        self.vw_plan.clone().unwrap()
+    }
+}
+
+/// Measure one candidate end-to-end on `data`'s operands.  Returns `None`
+/// when the candidate cannot run on this problem (e.g. 2:4 with K % 4 != 0).
+pub fn bench_candidate(
+    data: &mut BenchData,
+    cand: &Candidate,
+    opts: &MeasureOpts,
+) -> Option<Measurement> {
+    let tile = cand.tile;
+    match cand.variant {
+        KernelVariant::DenseBlocked => {
+            let (a, w) = (&data.a, &data.w);
+            Some(measure(
+                || {
+                    std::hint::black_box(matmul_tiled(a, w, &tile));
+                },
+                opts,
+            ))
+        }
+        KernelVariant::DenseParallel => {
+            let (a, w) = (&data.a, &data.w);
+            let t = cand.threads.max(1);
+            Some(measure(
+                || {
+                    std::hint::black_box(matmul_parallel(a, w, t));
+                },
+                opts,
+            ))
+        }
+        KernelVariant::TwFused => {
+            let plan = data.tw_plan(cand.g.max(1));
+            let a = &data.a;
+            Some(measure(
+                || {
+                    std::hint::black_box(tw_matmul_with(a, &plan, &tile));
+                },
+                opts,
+            ))
+        }
+        KernelVariant::TwParallel => {
+            let plan = data.tw_plan(cand.g.max(1));
+            let a = &data.a;
+            let t = cand.threads.max(1);
+            Some(measure(
+                || {
+                    std::hint::black_box(tw_matmul_parallel(a, &plan, t));
+                },
+                opts,
+            ))
+        }
+        KernelVariant::TvwFused => {
+            let plan = data.tvw_plan(cand.g.max(1));
+            let a = &data.a;
+            Some(measure(
+                || {
+                    std::hint::black_box(tvw_matmul_with(a, &plan, &tile));
+                },
+                opts,
+            ))
+        }
+        KernelVariant::Vw24 => {
+            let plan = data.vw24_plan()?;
+            let a = &data.a;
+            Some(measure(
+                || {
+                    std::hint::black_box(vw24_matmul_with(a, &plan, &tile));
+                },
+                opts,
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::space::PatternFamily;
+
+    #[test]
+    fn measure_counts_and_orders() {
+        let mut calls = 0usize;
+        let opts = MeasureOpts { warmup: 2, min_iters: 3, max_iters: 5, budget_secs: 0.0, trim_frac: 0.2 };
+        let m = measure(
+            || {
+                calls += 1;
+                std::hint::black_box((0..500).sum::<usize>());
+            },
+            &opts,
+        );
+        assert_eq!(m.iters, 3);
+        assert_eq!(calls, 2 + 3);
+        assert!(m.min_secs <= m.mean_secs * 1.0001);
+        assert!(m.mean_secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_data_caches_plans() {
+        let mut data = BenchData::new(GemmShape::new(16, 64, 48), 0.75, 7);
+        let p1 = data.tw_plan(16);
+        let p2 = data.tw_plan(16);
+        assert!(Rc::ptr_eq(&p1, &p2));
+        assert_eq!(p1.g, 16);
+        assert!(data.vw24_plan().is_some());
+    }
+
+    #[test]
+    fn every_family_default_is_measurable() {
+        let mut data = BenchData::new(GemmShape::new(8, 32, 32), 0.5, 9);
+        let opts = MeasureOpts { warmup: 0, min_iters: 1, max_iters: 1, budget_secs: 0.0, trim_frac: 0.0 };
+        for family in
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24]
+        {
+            let cand = Candidate::default_for(family);
+            assert!(bench_candidate(&mut data, &cand, &opts).is_some(), "{family:?}");
+        }
+    }
+
+    #[test]
+    fn vw24_unalignable_k_is_rejected() {
+        let mut data = BenchData::new(GemmShape::new(8, 30, 32), 0.5, 10);
+        let cand = Candidate::default_for(PatternFamily::Vw24);
+        let opts = MeasureOpts::quick();
+        assert!(bench_candidate(&mut data, &cand, &opts).is_none());
+    }
+}

@@ -1,0 +1,36 @@
+//! Empirical kernel autotuner + persistent plan cache.
+//!
+//! The paper's speedups hinge on picking the right tile shape and
+//! execution strategy per GEMM: tile-wise sparsity lives or dies by the
+//! tile granularity chosen at the global-memory level, and TVW adds a
+//! register-level 2:4 dimension on top.  This layer searches the
+//! (kernel variant × tile shape × pattern granularity × thread count)
+//! space for each GEMM workload and persists the winners:
+//!
+//! - [`space`] — candidate enumeration over [`crate::gemm::TileConfig`],
+//!   TW granularity G, kernel variant, and thread count
+//! - [`model`] — `gpusim`-analytical pre-filter that prunes the candidate
+//!   set before anything is timed
+//! - [`measure`] — wall-clock microbenchmark harness (warmup + trimmed
+//!   mean) over real pruned operands
+//! - [`cache`] — persistent plan cache keyed by
+//!   `(M, K, N, pattern, sparsity, nthreads)`, serialized via [`crate::json`]
+//! - [`tuner`] — the search driver: enumerate → pre-filter → measure →
+//!   cache, per layer shape and per model workload
+//!
+//! The serving stack consumes the output: `coordinator::Server` loads a
+//! tuned [`PlanCache`] at startup and `Policy::Tuned` routes requests to
+//! the variant the tuner recommended (see `docs/autotune.md` for the
+//! cache schema and invalidation rule).
+
+pub mod cache;
+pub mod measure;
+pub mod model;
+pub mod space;
+pub mod tuner;
+
+pub use cache::{PlanCache, PlanKey, TunedEntry, SCHEMA_VERSION};
+pub use measure::{bench_candidate, measure, BenchData, MeasureOpts, Measurement};
+pub use model::{analytical_cost, prefilter};
+pub use space::{Candidate, KernelVariant, PatternFamily, SearchSpace};
+pub use tuner::{ShapeResult, Tuner, TunerOpts};

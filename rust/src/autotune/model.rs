@@ -1,0 +1,123 @@
+//! Analytical pre-filter: rank candidates with the `gpusim` cost model
+//! before anything is measured.
+//!
+//! The plan builders in `gpusim::plans` already price every pattern
+//! family's execution strategy (tiled kernels, CTO tables, 2:4 metadata
+//! traffic, launch/tile overheads), so the tuner reuses them as a cheap
+//! oracle: candidates whose modeled latency is far off the modeled best
+//! are dropped without spending wall-clock on them.  CPU cache-blocking
+//! (`bm`/`bk`) has no gpusim analogue, so candidates differing only in
+//! those axes share a score — the filter prunes across (variant × G) and
+//! measurement decides the rest.
+
+use super::space::{Candidate, KernelVariant};
+use crate::gpusim::{
+    dense_plan, tvw_latency, tw_latency, tw_uniform_tiles, vw24_plan, Calibration, GemmShape,
+    GpuSpecs, Pipe, TwStrategy,
+};
+
+/// Modeled latency (seconds) of one candidate on `specs`.
+pub fn analytical_cost(
+    shape: GemmShape,
+    sparsity: f64,
+    cand: &Candidate,
+    specs: &GpuSpecs,
+    cal: &Calibration,
+) -> f64 {
+    match cand.variant {
+        KernelVariant::DenseBlocked | KernelVariant::DenseParallel => {
+            dense_plan(shape, Pipe::TensorFp16, specs, cal).latency(specs)
+        }
+        KernelVariant::TwFused | KernelVariant::TwParallel => {
+            let g = cand.g.max(1);
+            let tiles = tw_uniform_tiles(shape, sparsity, g);
+            tw_latency(shape, &tiles, g, Pipe::TensorFp16, TwStrategy::FusedCto, specs, cal)
+        }
+        KernelVariant::TvwFused => {
+            let g = cand.g.max(1);
+            // iso-sparsity split: TVW reaches `sparsity` as TW x 2:4
+            let s_tw = (1.0 - 2.0 * (1.0 - sparsity)).max(0.0);
+            let tiles = tw_uniform_tiles(shape, s_tw, g);
+            tvw_latency(shape, &tiles, g, specs, cal)
+        }
+        KernelVariant::Vw24 => vw24_plan(shape, false, specs, cal).latency(specs),
+    }
+}
+
+/// Keep the candidates worth measuring: modeled cost within `slack`× of
+/// the modeled best, capped at `max_keep` (cheapest first).  Never empty.
+pub fn prefilter(
+    cands: &[Candidate],
+    shape: GemmShape,
+    sparsity: f64,
+    slack: f64,
+    max_keep: usize,
+    specs: &GpuSpecs,
+    cal: &Calibration,
+) -> Vec<(Candidate, f64)> {
+    let mut scored: Vec<(Candidate, f64)> = cands
+        .iter()
+        .map(|c| (*c, analytical_cost(shape, sparsity, c, specs, cal)))
+        .collect();
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+    if scored.is_empty() {
+        return scored;
+    }
+    let best = scored[0].1;
+    let cutoff = best * slack.max(1.0);
+    let mut kept: Vec<(Candidate, f64)> =
+        scored.into_iter().filter(|(_, cost)| *cost <= cutoff).collect();
+    kept.truncate(max_keep.max(1));
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::space::{PatternFamily, SearchSpace};
+    use crate::gpusim::a100;
+
+    #[test]
+    fn tw_model_prefers_reasonable_granularity() {
+        // at 75% sparsity on a large shape the model must rank TW well
+        // under dense (the paper's headline), so a mixed candidate list
+        // filters dense-ish losers out
+        let specs = a100();
+        let cal = Calibration::default();
+        let shape = GemmShape::new(1024, 3072, 768);
+        let tw = Candidate {
+            variant: KernelVariant::TwFused,
+            tile: crate::gemm::TileConfig::tw_default(),
+            g: 64,
+            threads: 1,
+        };
+        let dense = Candidate::default_for(PatternFamily::Dense);
+        let c_tw = analytical_cost(shape, 0.75, &tw, &specs, &cal);
+        let c_dense = analytical_cost(shape, 0.75, &dense, &specs, &cal);
+        assert!(c_tw < c_dense, "tw {c_tw} dense {c_dense}");
+    }
+
+    #[test]
+    fn prefilter_caps_and_orders() {
+        let specs = a100();
+        let cal = Calibration::default();
+        let shape = GemmShape::new(256, 512, 512);
+        let cands = SearchSpace::default().candidates(shape, PatternFamily::Tw);
+        let kept = prefilter(&cands, shape, 0.75, 4.0, 5, &specs, &cal);
+        assert!(!kept.is_empty());
+        assert!(kept.len() <= 5);
+        for w in kept.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn prefilter_never_empty_even_with_tight_slack() {
+        let specs = a100();
+        let cal = Calibration::default();
+        let shape = GemmShape::new(64, 64, 64);
+        let cands = SearchSpace::default().candidates(shape, PatternFamily::Tvw);
+        let kept = prefilter(&cands, shape, 0.8, 1.0, 3, &specs, &cal);
+        assert!(!kept.is_empty());
+    }
+}

@@ -1,0 +1,350 @@
+//! Candidate enumeration: the discrete search space the tuner walks.
+//!
+//! A candidate is one executable strategy for a GEMM: which CPU kernel
+//! runs it, its cache-blocking [`TileConfig`], the TW tile granularity G
+//! (for condensed-plan kernels, where G is chosen at *encode* time), and
+//! the worker thread count.
+
+use crate::gemm::TileConfig;
+use crate::gpusim::GemmShape;
+
+/// What the tuner optimises: the dense baseline or one sparsity-pattern
+/// execution family.  (The pattern's G is a *search axis*, not part of
+/// the family — `TW` covers TW-8 … TW-128.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PatternFamily {
+    Dense,
+    Tw,
+    Tvw,
+    Vw24,
+}
+
+impl PatternFamily {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PatternFamily::Dense => "DENSE",
+            PatternFamily::Tw => "TW",
+            PatternFamily::Tvw => "TVW",
+            PatternFamily::Vw24 => "VW-4",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<PatternFamily> {
+        Some(match s {
+            "DENSE" => PatternFamily::Dense,
+            "TW" => PatternFamily::Tw,
+            "TVW" => PatternFamily::Tvw,
+            "VW-4" => PatternFamily::Vw24,
+            _ => return None,
+        })
+    }
+
+    /// The serving-stack executable this family maps to (`meta.json`
+    /// naming); `None` when no compiled variant exists for it.
+    pub fn serving_variant(&self) -> Option<&'static str> {
+        match self {
+            PatternFamily::Dense => Some("model_dense"),
+            PatternFamily::Tw => Some("model_tw"),
+            PatternFamily::Tvw => Some("model_tvw"),
+            PatternFamily::Vw24 => None,
+        }
+    }
+}
+
+/// Which CPU kernel executes the GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelVariant {
+    /// `gemm::matmul_tiled` — cache-blocked dense.
+    DenseBlocked,
+    /// `gemm::matmul_parallel` — row-banded multi-threaded dense.
+    DenseParallel,
+    /// `gemm::tw_matmul_with` — single fused pass over all CTO tiles.
+    TwFused,
+    /// `gemm::tw_matmul_parallel` — tile-parallel CTO kernel.
+    TwParallel,
+    /// `gemm::tvw_matmul_with` — fused TW + 2:4 kernel.
+    TvwFused,
+    /// `gemm::vw24_matmul_with` — plain 2:4 kernel.
+    Vw24,
+}
+
+impl KernelVariant {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelVariant::DenseBlocked => "dense",
+            KernelVariant::DenseParallel => "dense-par",
+            KernelVariant::TwFused => "tw-fused",
+            KernelVariant::TwParallel => "tw-par",
+            KernelVariant::TvwFused => "tvw",
+            KernelVariant::Vw24 => "vw24",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<KernelVariant> {
+        Some(match s {
+            "dense" => KernelVariant::DenseBlocked,
+            "dense-par" => KernelVariant::DenseParallel,
+            "tw-fused" => KernelVariant::TwFused,
+            "tw-par" => KernelVariant::TwParallel,
+            "tvw" => KernelVariant::TvwFused,
+            "vw24" => KernelVariant::Vw24,
+            _ => return None,
+        })
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        matches!(self, KernelVariant::DenseParallel | KernelVariant::TwParallel)
+    }
+
+    pub fn family(&self) -> PatternFamily {
+        match self {
+            KernelVariant::DenseBlocked | KernelVariant::DenseParallel => PatternFamily::Dense,
+            KernelVariant::TwFused | KernelVariant::TwParallel => PatternFamily::Tw,
+            KernelVariant::TvwFused => PatternFamily::Tvw,
+            KernelVariant::Vw24 => PatternFamily::Vw24,
+        }
+    }
+}
+
+/// One point in the search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    pub variant: KernelVariant,
+    pub tile: TileConfig,
+    /// TW tile granularity G (plan-encode axis; ignored by dense / VW-4).
+    pub g: usize,
+    /// Worker threads (1 for serial variants).
+    pub threads: usize,
+}
+
+impl Candidate {
+    pub fn label(&self) -> String {
+        format!(
+            "{}[bm{},bk{},g{},t{}]",
+            self.variant.label(),
+            self.tile.bm,
+            self.tile.bk,
+            self.g,
+            self.threads
+        )
+    }
+
+    /// The repo's historical hard-coded configuration for a family —
+    /// what every call site used before the autotuner existed.
+    pub fn default_for(family: PatternFamily) -> Candidate {
+        match family {
+            PatternFamily::Dense => Candidate {
+                variant: KernelVariant::DenseBlocked,
+                tile: TileConfig::dense_default(),
+                g: 0,
+                threads: 1,
+            },
+            PatternFamily::Tw => Candidate {
+                variant: KernelVariant::TwFused,
+                tile: TileConfig::tw_default(),
+                g: 64,
+                threads: 1,
+            },
+            PatternFamily::Tvw => Candidate {
+                variant: KernelVariant::TvwFused,
+                tile: TileConfig::tvw_default(),
+                g: 64,
+                threads: 1,
+            },
+            PatternFamily::Vw24 => Candidate {
+                variant: KernelVariant::Vw24,
+                tile: TileConfig::vw_default(),
+                g: 0,
+                threads: 1,
+            },
+        }
+    }
+}
+
+/// Enumeration bounds for the candidate axes.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Row-block extents.
+    pub bms: Vec<usize>,
+    /// Reduction-block extents (dense kernel only).
+    pub bks: Vec<usize>,
+    /// TW tile granularities.
+    pub gs: Vec<usize>,
+    /// Thread counts (always includes 1).
+    pub threads: Vec<usize>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace {
+            bms: vec![16, 32, 64, 128],
+            bks: vec![32, 64, 128],
+            gs: vec![16, 32, 64, 128],
+            threads: vec![1],
+        }
+    }
+}
+
+impl SearchSpace {
+    /// Extend the thread axis up to `max_threads` (1 stays in the set so
+    /// serial execution is always a candidate).
+    pub fn with_threads(mut self, max_threads: usize) -> SearchSpace {
+        let mut ts = vec![1];
+        if max_threads >= 2 {
+            ts.push(2);
+        }
+        if max_threads > 2 {
+            ts.push(max_threads);
+        }
+        ts.dedup();
+        self.threads = ts;
+        self
+    }
+
+    /// All candidates for executing `shape` under `family`, clipped to the
+    /// problem (row blocks beyond M and granularities beyond N are
+    /// redundant).  Never empty: the family default is always included.
+    pub fn candidates(&self, shape: GemmShape, family: PatternFamily) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        let bms: Vec<usize> =
+            dedup_clipped(&self.bms, shape.m.max(1)).into_iter().collect();
+        let gs: Vec<usize> = dedup_clipped(&self.gs, shape.n.max(1)).into_iter().collect();
+        match family {
+            PatternFamily::Dense => {
+                for &bm in &bms {
+                    for &bk in &dedup_clipped(&self.bks, shape.k.max(1)) {
+                        out.push(Candidate {
+                            variant: KernelVariant::DenseBlocked,
+                            tile: TileConfig::new(bm, bk),
+                            g: 0,
+                            threads: 1,
+                        });
+                    }
+                }
+                for &t in &self.threads {
+                    if t > 1 {
+                        out.push(Candidate {
+                            variant: KernelVariant::DenseParallel,
+                            tile: TileConfig::dense_default(),
+                            g: 0,
+                            threads: t,
+                        });
+                    }
+                }
+            }
+            PatternFamily::Tw => {
+                for &g in &gs {
+                    for &bm in &bms {
+                        out.push(Candidate {
+                            variant: KernelVariant::TwFused,
+                            tile: TileConfig::new(bm, 64),
+                            g,
+                            threads: 1,
+                        });
+                    }
+                    for &t in &self.threads {
+                        if t > 1 {
+                            out.push(Candidate {
+                                variant: KernelVariant::TwParallel,
+                                tile: TileConfig::tw_default(),
+                                g,
+                                threads: t,
+                            });
+                        }
+                    }
+                }
+            }
+            PatternFamily::Tvw => {
+                for &g in &gs {
+                    for &bm in &bms {
+                        out.push(Candidate {
+                            variant: KernelVariant::TvwFused,
+                            tile: TileConfig::new(bm, 64),
+                            g,
+                            threads: 1,
+                        });
+                    }
+                }
+            }
+            PatternFamily::Vw24 => {
+                for &bm in &bms {
+                    out.push(Candidate {
+                        variant: KernelVariant::Vw24,
+                        tile: TileConfig::new(bm, 64),
+                        g: 0,
+                        threads: 1,
+                    });
+                }
+            }
+        }
+        let default = Candidate::default_for(family);
+        if !out.contains(&default) {
+            out.push(default);
+        }
+        out
+    }
+}
+
+/// Clip values to `max`, keep them sorted and unique.
+fn dedup_clipped(vals: &[usize], max: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = vals.iter().map(|&x| x.max(1).min(max)).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for v in [
+            KernelVariant::DenseBlocked,
+            KernelVariant::DenseParallel,
+            KernelVariant::TwFused,
+            KernelVariant::TwParallel,
+            KernelVariant::TvwFused,
+            KernelVariant::Vw24,
+        ] {
+            assert_eq!(KernelVariant::from_label(v.label()), Some(v));
+        }
+        for f in
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24]
+        {
+            assert_eq!(PatternFamily::from_label(f.label()), Some(f));
+        }
+    }
+
+    #[test]
+    fn enumeration_contains_default_and_clips() {
+        let shape = GemmShape::new(8, 512, 24);
+        for family in
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24]
+        {
+            let cands = SearchSpace::default().candidates(shape, family);
+            assert!(!cands.is_empty(), "{family:?}");
+            assert!(cands.contains(&Candidate::default_for(family)), "{family:?}");
+            for c in &cands {
+                assert_eq!(c.variant.family(), family);
+            }
+        }
+        // clipped: no TW granularity beyond N for enumerated candidates
+        let tw = SearchSpace::default().candidates(shape, PatternFamily::Tw);
+        assert!(tw
+            .iter()
+            .filter(|c| **c != Candidate::default_for(PatternFamily::Tw))
+            .all(|c| c.g <= 24));
+    }
+
+    #[test]
+    fn thread_axis_spawns_parallel_variants() {
+        let shape = GemmShape::new(256, 256, 256);
+        let space = SearchSpace::default().with_threads(8);
+        let tw = space.candidates(shape, PatternFamily::Tw);
+        assert!(tw.iter().any(|c| c.variant == KernelVariant::TwParallel && c.threads == 8));
+        assert!(tw.iter().any(|c| c.threads == 1));
+        let dense = space.candidates(shape, PatternFamily::Dense);
+        assert!(dense.iter().any(|c| c.variant == KernelVariant::DenseParallel));
+    }
+}

@@ -1,0 +1,269 @@
+//! The search driver: enumerate → analytically pre-filter → measure →
+//! persist, per GEMM shape and per model-zoo workload.
+
+use std::collections::BTreeSet;
+
+use super::cache::{PlanCache, PlanKey, TunedEntry};
+use super::measure::{bench_candidate, BenchData, MeasureOpts};
+use super::model::prefilter;
+use super::space::{Candidate, PatternFamily, SearchSpace};
+use crate::gpusim::{a100, Calibration, GemmShape, GpuSpecs};
+use crate::models::ModelWorkload;
+
+/// Tuning policy.
+#[derive(Clone, Debug)]
+pub struct TunerOpts {
+    /// Target sparsity the pattern families are tuned at.
+    pub sparsity: f64,
+    /// Candidate axes.
+    pub space: SearchSpace,
+    /// Sampling policy per measured candidate.
+    pub measure: MeasureOpts,
+    /// Analytical pre-filter: keep candidates within `slack`x of the
+    /// modeled best.
+    pub slack: f64,
+    /// Pre-filter cap: at most this many candidates are measured per
+    /// (shape, family).
+    pub max_measured: usize,
+    /// Cap the activation row count during measurement (GEMM cost is
+    /// linear in M, so tuning at a reduced M transfers; `None` = full M).
+    pub m_cap: Option<usize>,
+    /// Thread budget (the cache key's `nthreads`); > 1 adds parallel
+    /// kernel variants to the space.
+    pub nthreads: usize,
+    /// Operand seed (deterministic tuning inputs).
+    pub seed: u64,
+}
+
+impl Default for TunerOpts {
+    fn default() -> Self {
+        TunerOpts {
+            sparsity: 0.75,
+            space: SearchSpace::default(),
+            measure: MeasureOpts::default(),
+            slack: 4.0,
+            max_measured: 8,
+            m_cap: Some(256),
+            nthreads: 1,
+            seed: 0xA107,
+        }
+    }
+}
+
+/// Outcome of tuning one (shape, family).
+#[derive(Clone, Debug)]
+pub struct ShapeResult {
+    pub entry: TunedEntry,
+    pub candidates_enumerated: usize,
+    pub candidates_measured: usize,
+}
+
+/// The tuner: owns the cost-model substrate and the tuning policy.
+pub struct Tuner {
+    pub specs: GpuSpecs,
+    pub cal: Calibration,
+    pub opts: TunerOpts,
+}
+
+impl Tuner {
+    pub fn new(opts: TunerOpts) -> Tuner {
+        Tuner { specs: a100(), cal: Calibration::default(), opts }
+    }
+
+    fn capped(&self, shape: GemmShape) -> GemmShape {
+        match self.opts.m_cap {
+            Some(cap) if shape.m > cap.max(1) => GemmShape::new(cap.max(1), shape.k, shape.n),
+            _ => shape,
+        }
+    }
+
+    /// Tune one GEMM under one pattern family.  Returns `None` only when
+    /// nothing in the family can execute the shape (e.g. 2:4 on K%4 != 0).
+    pub fn tune_gemm(&self, shape: GemmShape, family: PatternFamily) -> Option<ShapeResult> {
+        let shape = self.capped(shape);
+        let sparsity = if family == PatternFamily::Dense { 0.0 } else { self.opts.sparsity };
+        let space = self.opts.space.clone().with_threads(self.opts.nthreads);
+        let cands = space.candidates(shape, family);
+        let enumerated = cands.len();
+        let kept = prefilter(
+            &cands,
+            shape,
+            sparsity,
+            self.opts.slack,
+            self.opts.max_measured,
+            &self.specs,
+            &self.cal,
+        );
+
+        let mut data = BenchData::new(shape, sparsity, self.opts.seed);
+
+        // the historical default is always measured: it is the speedup
+        // baseline and a safety net against a mis-modeled filter
+        let default_cand = Candidate::default_for(family);
+        let default_meas = bench_candidate(&mut data, &default_cand, &self.opts.measure)?;
+        let default_model = super::model::analytical_cost(
+            shape,
+            sparsity,
+            &default_cand,
+            &self.specs,
+            &self.cal,
+        );
+
+        let mut best: (Candidate, f64, f64) =
+            (default_cand, default_meas.mean_secs, default_model);
+        let mut measured = 1usize;
+        for (cand, model_cost) in &kept {
+            if *cand == default_cand {
+                continue; // already timed
+            }
+            let Some(meas) = bench_candidate(&mut data, cand, &self.opts.measure) else {
+                continue;
+            };
+            measured += 1;
+            if meas.mean_secs < best.1 {
+                best = (*cand, meas.mean_secs, *model_cost);
+            }
+        }
+
+        let (win, win_secs, win_model) = best;
+        let entry = TunedEntry {
+            key: PlanKey::new(shape, family.label(), sparsity, self.opts.nthreads),
+            variant: win.variant.label().to_string(),
+            bm: win.tile.bm,
+            bk: win.tile.bk,
+            g: win.g,
+            threads: win.threads,
+            measured_us: win_secs * 1e6,
+            model_us: win_model * 1e6,
+            default_us: default_meas.mean_secs * 1e6,
+        };
+        Some(ShapeResult { entry, candidates_enumerated: enumerated, candidates_measured: measured })
+    }
+
+    /// Tune every distinct prunable GEMM shape of a workload under
+    /// `families`, insert the winners into a fresh [`PlanCache`], and
+    /// derive the workload-level serving recommendation (lowest summed
+    /// tuned latency across the shapes, weighted by layer repetition).
+    pub fn tune_workload(
+        &self,
+        workload: &ModelWorkload,
+        model_key: &str,
+        families: &[PatternFamily],
+    ) -> (PlanCache, Vec<ShapeResult>) {
+        let mut cache = PlanCache::new();
+        let mut results = Vec::new();
+
+        // distinct prunable shapes with their total repetition counts
+        let mut shapes: BTreeSet<(usize, usize, usize)> = BTreeSet::new();
+        for layer in workload.prunable_layers() {
+            shapes.insert((layer.shape.m, layer.shape.k, layer.shape.n));
+        }
+        let weight = |m: usize, k: usize, n: usize| -> f64 {
+            workload
+                .prunable_layers()
+                .filter(|l| (l.shape.m, l.shape.k, l.shape.n) == (m, k, n))
+                .map(|l| l.count as f64)
+                .sum()
+        };
+
+        // per-family summed tuned latency over the workload
+        let mut family_totals: Vec<(PatternFamily, f64)> = Vec::new();
+        for &family in families {
+            let mut total = 0.0f64;
+            let mut complete = true;
+            for &(m, k, n) in &shapes {
+                let shape = GemmShape::new(m, k, n);
+                match self.tune_gemm(shape, family) {
+                    Some(res) => {
+                        total += res.entry.measured_us * weight(m, k, n);
+                        cache.insert(res.entry.clone());
+                        results.push(res);
+                    }
+                    None => complete = false,
+                }
+            }
+            if complete && family.serving_variant().is_some() {
+                family_totals.push((family, total));
+            }
+        }
+
+        if let Some((best_family, _)) = family_totals
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+        {
+            if let Some(variant) = best_family.serving_variant() {
+                cache.set_model_variant(model_key, variant);
+            }
+        }
+        (cache, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> TunerOpts {
+        TunerOpts {
+            measure: MeasureOpts { warmup: 0, min_iters: 1, max_iters: 1, budget_secs: 0.0, trim_frac: 0.0 },
+            max_measured: 3,
+            m_cap: Some(16),
+            space: SearchSpace {
+                bms: vec![16, 32],
+                bks: vec![64],
+                gs: vec![16, 32],
+                threads: vec![1],
+            },
+            ..TunerOpts::default()
+        }
+    }
+
+    #[test]
+    fn tune_gemm_beats_or_matches_default() {
+        let tuner = Tuner::new(quick_opts());
+        let res = tuner.tune_gemm(GemmShape::new(64, 96, 80), PatternFamily::Tw).unwrap();
+        assert_eq!(res.entry.key.pattern, "TW");
+        assert!(res.entry.measured_us <= res.entry.default_us * 1.000001,
+                "winner {} vs default {}", res.entry.measured_us, res.entry.default_us);
+        assert!(res.candidates_measured >= 1);
+        assert!(res.candidates_enumerated >= res.candidates_measured);
+        assert!(res.entry.candidate().is_some());
+    }
+
+    #[test]
+    fn tune_workload_fills_cache_and_recommends() {
+        use crate::models::GemmLayer;
+        let tuner = Tuner::new(quick_opts());
+        let layer = |name: &str, m: usize, k: usize, n: usize, count: usize, prunable: bool| {
+            GemmLayer { name: name.into(), shape: GemmShape::new(m, k, n), count, prunable }
+        };
+        let tiny = ModelWorkload {
+            name: "tiny",
+            metric: "acc",
+            layers: vec![
+                layer("l0", 16, 64, 64, 1, false),
+                layer("l1", 16, 64, 96, 2, true),
+                layer("l2", 16, 96, 64, 1, true),
+            ],
+        };
+        let (cache, results) =
+            tuner.tune_workload(&tiny, "tiny", &[PatternFamily::Dense, PatternFamily::Tw]);
+        // 2 distinct prunable shapes x 2 families
+        assert_eq!(results.len(), 4);
+        assert_eq!(cache.len(), 4);
+        let rec = cache.model_variant("tiny").expect("recommendation set");
+        assert!(rec == "model_dense" || rec == "model_tw", "{rec}");
+        // every entry is resolvable back to an executable candidate
+        for e in cache.entries() {
+            assert!(e.candidate().is_some());
+            assert!(e.measured_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn m_cap_applies() {
+        let tuner = Tuner::new(TunerOpts { m_cap: Some(8), ..quick_opts() });
+        let res = tuner.tune_gemm(GemmShape::new(4096, 64, 64), PatternFamily::Dense).unwrap();
+        assert_eq!(res.entry.key.m, 8);
+    }
+}

@@ -1,7 +1,10 @@
 //! Serving metrics: per-variant latency samples + counters, with
-//! percentile snapshots for the e2e report.
+//! percentile snapshots for the e2e report.  Backpressure sheds are
+//! counted here too, so one snapshot shows latency percentiles *and*
+//! how much load the server refused to take.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -21,6 +24,9 @@ struct Inner {
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Requests shed by backpressure (outside the mutex: the shed path is
+    /// the hot rejection path and must not contend with the executor).
+    sheds: AtomicU64,
 }
 
 /// Snapshot of one variant's serving statistics.
@@ -33,6 +39,17 @@ pub struct VariantStats {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_batch: f64,
+}
+
+/// Whole-server snapshot: per-variant percentiles plus the global
+/// counters (completions, backpressure sheds, throughput).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub variants: Vec<VariantStats>,
+    pub completed: u64,
+    /// Requests refused by backpressure (`ServerHandle::try_submit`).
+    pub sheds: u64,
+    pub throughput_rps: f64,
 }
 
 impl Metrics {
@@ -48,6 +65,15 @@ impl Metrics {
 
     pub fn completed(&self) -> u64 {
         self.inner.lock().unwrap().completed
+    }
+
+    /// Count one backpressure shed (lock-free).
+    pub fn record_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
     }
 
     /// Requests per second since the first recorded completion.
@@ -78,6 +104,17 @@ impl Metrics {
         out.sort_by(|a, b| a.variant.cmp(&b.variant));
         out
     }
+
+    /// Per-variant percentiles plus global counters in one view — the
+    /// shape the serve CLI and e2e reports print.
+    pub fn full_snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            variants: self.snapshot(),
+            completed: self.completed(),
+            sheds: self.sheds(),
+            throughput_rps: self.throughput(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +144,23 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.len(), 2);
         assert_eq!(m.completed(), 2);
+    }
+
+    #[test]
+    fn sheds_surface_in_full_snapshot() {
+        let m = Metrics::default();
+        for i in 1..=10 {
+            m.record("model_tw", i as f64 / 1000.0, 2);
+        }
+        for _ in 0..3 {
+            m.record_shed();
+        }
+        let snap = m.full_snapshot();
+        assert_eq!(snap.sheds, 3);
+        assert_eq!(snap.completed, 10);
+        assert_eq!(snap.variants.len(), 1);
+        // sheds sit alongside the latency percentiles in one view
+        assert!(snap.variants[0].p95_ms > snap.variants[0].p50_ms);
+        assert_eq!(m.sheds(), 3);
     }
 }

@@ -10,7 +10,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{collect_batch, pack_batch, BatcherConfig};
-pub use metrics::{Metrics, VariantStats};
+pub use metrics::{Metrics, MetricsSnapshot, VariantStats};
 pub use request::{Request, Response};
 pub use router::{Policy, Router};
 pub use server::{start, ServerConfig, ServerHandle};

@@ -7,6 +7,7 @@
 //! pressure (the paper's motivation: sparse models buy latency headroom).
 
 use super::request::Request;
+use crate::autotune::PlanCache;
 
 #[derive(Clone, Debug)]
 pub enum Policy {
@@ -16,6 +17,31 @@ pub enum Policy {
     RoundRobin(Vec<String>),
     /// Dense until queue depth exceeds the threshold, then sparse.
     Adaptive { dense: String, sparse: String, queue_threshold: usize },
+    /// Serve whatever the autotuner's plan cache recommends for `model`
+    /// (`cache.model_variant(model)`), or `fallback` when the cache has no
+    /// recommendation.  Resolved once at server startup via [`Policy::resolve`].
+    Tuned { model: String, fallback: String },
+}
+
+impl Policy {
+    /// Collapse a `Tuned` policy to the concrete `Fixed` variant the plan
+    /// cache recommends; every other policy passes through unchanged.
+    pub fn resolve(self, cache: Option<&PlanCache>) -> Policy {
+        match self {
+            Policy::Tuned { model, fallback } => match cache.and_then(|c| c.model_variant(&model)) {
+                Some(variant) => Policy::Fixed(variant.to_string()),
+                None => {
+                    eprintln!(
+                        "[router] no tuned recommendation for {model:?} \
+                         (cache {}); serving fallback {fallback:?}",
+                        if cache.is_some() { "loaded" } else { "absent" }
+                    );
+                    Policy::Fixed(fallback)
+                }
+            },
+            other => other,
+        }
+    }
 }
 
 pub struct Router {
@@ -48,6 +74,8 @@ impl Router {
                     dense.clone()
                 }
             }
+            // an unresolved Tuned policy behaves like its fallback
+            Policy::Tuned { fallback, .. } => fallback.clone(),
         }
     }
 }
@@ -98,5 +126,30 @@ mod tests {
     fn explicit_preference_wins() {
         let mut r = Router::new(Policy::Fixed("model_dense".into()));
         assert_eq!(r.route(&[req(None), req(Some("model_tvw"))], 0), "model_tvw");
+    }
+
+    #[test]
+    fn tuned_policy_resolves_against_cache() {
+        let mut cache = PlanCache::new();
+        cache.set_model_variant("bert", "model_tw");
+        let tuned = Policy::Tuned { model: "bert".into(), fallback: "model_dense".into() };
+        match tuned.clone().resolve(Some(&cache)) {
+            Policy::Fixed(v) => assert_eq!(v, "model_tw"),
+            other => panic!("expected Fixed, got {other:?}"),
+        }
+        // no cache -> fallback; unknown model -> fallback
+        match tuned.clone().resolve(None) {
+            Policy::Fixed(v) => assert_eq!(v, "model_dense"),
+            other => panic!("expected Fixed, got {other:?}"),
+        }
+        let other_model =
+            Policy::Tuned { model: "vgg16".into(), fallback: "model_dense".into() };
+        match other_model.resolve(Some(&cache)) {
+            Policy::Fixed(v) => assert_eq!(v, "model_dense"),
+            other => panic!("expected Fixed, got {other:?}"),
+        }
+        // unresolved Tuned routes to its fallback
+        let mut r = Router::new(tuned);
+        assert_eq!(r.route(&[req(None)], 0), "model_dense");
     }
 }

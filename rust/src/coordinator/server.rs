@@ -5,17 +5,17 @@
 //! artifacts`; this loop is allocation-light and lock-free on the hot path
 //! (one channel recv, one buffer staging, one execute).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
-
-use anyhow::Result;
 
 use super::batcher::{collect_batch, pack_batch, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::router::{Policy, Router};
+use crate::autotune::PlanCache;
+use crate::error::Result;
 use crate::runtime::Engine;
 
 #[derive(Clone, Debug)]
@@ -27,6 +27,10 @@ pub struct ServerConfig {
     /// Backpressure: submissions beyond this queue depth are shed
     /// immediately instead of growing the tail (0 = unbounded).
     pub max_queue: usize,
+    /// Autotuner plan cache (`tilewise autotune --out ...`) loaded at
+    /// startup; `Policy::Tuned` resolves its serving variant from it.
+    /// An unreadable or stale cache degrades to no cache with a warning.
+    pub plan_cache: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -36,6 +40,7 @@ impl Default for ServerConfig {
             policy: Policy::Fixed("model_tw".into()),
             variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
             max_queue: 0,
+            plan_cache: None,
         }
     }
 }
@@ -44,11 +49,12 @@ impl Default for ServerConfig {
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
     pub metrics: Arc<Metrics>,
+    /// The tuned plan cache the server loaded at startup, if any.
+    pub plan_cache: Option<Arc<PlanCache>>,
     next_id: AtomicU64,
     queue_depth: Arc<AtomicUsize>,
     join: Option<std::thread::JoinHandle<()>>,
     max_queue: usize,
-    shed: AtomicU64,
     pub seq: usize,
     pub d_model: usize,
     pub batch: usize,
@@ -56,9 +62,10 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Number of requests shed by backpressure so far.
+    /// Number of requests shed by backpressure so far (also visible in
+    /// `Metrics::full_snapshot`).
     pub fn shed_count(&self) -> u64 {
-        self.shed.load(Ordering::Relaxed)
+        self.metrics.sheds()
     }
 
     /// Submit with backpressure: sheds (returns None) when the queue is
@@ -69,7 +76,7 @@ impl ServerHandle {
         variant: Option<String>,
     ) -> Option<mpsc::Receiver<Response>> {
         if self.max_queue > 0 && self.queue_depth.load(Ordering::Relaxed) >= self.max_queue {
-            self.shed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.record_shed();
             return None;
         }
         Some(self.submit(activation, variant))
@@ -125,10 +132,22 @@ pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<ServerHandle> {
     let queue_depth = Arc::new(AtomicUsize::new(0));
     let (init_tx, init_rx) = mpsc::channel::<Result<(usize, usize, usize, usize)>>();
 
+    // tuned plan cache: loaded once at startup; Policy::Tuned resolves
+    // against it before the executor thread spins up
+    let plan_cache: Option<Arc<PlanCache>> = cfg.plan_cache.as_ref().and_then(|path| {
+        match PlanCache::load(path) {
+            Ok(c) => Some(Arc::new(c)),
+            Err(e) => {
+                eprintln!("[server] plan cache {}: {e} (serving untuned)", path.display());
+                None
+            }
+        }
+    });
+    let policy = cfg.policy.clone().resolve(plan_cache.as_deref());
+
     let metrics2 = metrics.clone();
     let queue_depth2 = queue_depth.clone();
     let batcher_cfg = cfg.batcher.clone();
-    let policy = cfg.policy.clone();
     let variants = cfg.variants.clone();
     let dir = artifact_dir.to_path_buf();
     let join = std::thread::Builder::new()
@@ -193,11 +212,11 @@ pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<ServerHandle> {
     Ok(ServerHandle {
         tx,
         metrics,
+        plan_cache,
         next_id: AtomicU64::new(0),
         queue_depth,
         join: Some(join),
         max_queue: cfg.max_queue,
-        shed: AtomicU64::new(0),
         seq,
         d_model,
         batch,

@@ -4,21 +4,27 @@
 //! `matmul_naive` is the textbook triple loop kept for correctness
 //! cross-checks and as the "before" point of the §Perf log.
 
+use super::TileConfig;
 use crate::tensor::Matrix;
+
+/// Blocked C = A * B with the default (historical) 64x64 blocking.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_tiled(a, b, &TileConfig::dense_default())
+}
 
 /// Blocked C = A * B.  Loop order (i, k, j) with row-major operands makes
 /// the inner j-loop a contiguous FMA stream the compiler vectorizes.
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+/// Block extents come from `cfg` (the autotuner's dense search axes).
+pub fn matmul_tiled(a: &Matrix, b: &Matrix, cfg: &TileConfig) -> Matrix {
     assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Matrix::zeros(m, n);
-    // block sizes tuned for ~32 KiB L1: a-block 64x64 f32 = 16 KiB
-    const BM: usize = 64;
-    const BK: usize = 64;
-    for i0 in (0..m).step_by(BM) {
-        let i1 = (i0 + BM).min(m);
-        for k0 in (0..k).step_by(BK) {
-            let k1 = (k0 + BK).min(k);
+    let bm = cfg.bm();
+    let bk = cfg.bk();
+    for i0 in (0..m).step_by(bm) {
+        let i1 = (i0 + bm).min(m);
+        for k0 in (0..k).step_by(bk) {
+            let k1 = (k0 + bk).min(k);
             for i in i0..i1 {
                 let arow = &a.data[i * k..(i + 1) * k];
                 let crow = &mut c.data[i * n..(i + 1) * n];
@@ -125,6 +131,18 @@ mod tests {
         let c1 = matmul(&a, &b);
         let c2 = matmul_parallel(&a, &b, 4);
         assert!(c1.max_abs_diff(&c2) < 1e-3);
+    }
+
+    #[test]
+    fn tiled_matches_naive_across_configs() {
+        let mut rng = Rng::new(73);
+        let a = Matrix::randn(37, 53, &mut rng);
+        let b = Matrix::randn(53, 29, &mut rng);
+        let want = matmul_naive(&a, &b);
+        for &(bm, bk) in &[(1usize, 1usize), (8, 16), (17, 31), (64, 64), (128, 256), (0, 0)] {
+            let got = matmul_tiled(&a, &b, &TileConfig::new(bm, bk));
+            assert!(got.max_abs_diff(&want) < 1e-3, "bm={bm} bk={bk}");
+        }
     }
 
     #[test]

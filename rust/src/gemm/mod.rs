@@ -2,13 +2,79 @@
 //! ablation variants, the 2:4 / TVW kernels, and the CSR / block-sparse
 //! baselines.  These are the §Perf-profiled hot paths; the GPU-side cost
 //! analysis lives in `gpusim`.
+//!
+//! Every hot path takes a [`TileConfig`] describing its cache-blocking —
+//! the `*_with` entry points — with the historical hard-coded tile sizes
+//! preserved as defaults behind the original names.  The `autotune` layer
+//! searches over these configs empirically.
 
 pub mod dense;
 pub mod spmm;
 pub mod tw;
 pub mod vw;
 
-pub use dense::{matmul, matmul_naive, matmul_parallel};
+pub use dense::{matmul, matmul_naive, matmul_parallel, matmul_tiled};
 pub use spmm::{block_spmm, csr_spmm, BlockSparse};
-pub use tw::{tw_matmul, tw_matmul_into, tw_matmul_masked, tw_matmul_parallel, tw_matmul_per_tile};
-pub use vw::{tvw_matmul, vw24_matmul};
+pub use tw::{
+    tw_matmul, tw_matmul_into, tw_matmul_into_with, tw_matmul_masked, tw_matmul_parallel,
+    tw_matmul_per_tile, tw_matmul_with,
+};
+pub use vw::{tvw_matmul, tvw_matmul_with, vw24_matmul, vw24_matmul_with};
+
+/// Cache-blocking parameters of a CPU kernel — the register/L1-level "tile
+/// shape" the autotuner searches (the GPU-side analogue is the threadblock
+/// tile in `gpusim::plans`).
+///
+/// Not every kernel consumes every field: the dense kernel blocks over
+/// (`bm`, `bk`); the TW fused-CTO and TVW kernels block activation rows by
+/// `bm` only (their reduction extent is fixed by the condensed plan).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileConfig {
+    /// Row-block (M) extent.
+    pub bm: usize,
+    /// Reduction-block (K) extent.
+    pub bk: usize,
+}
+
+impl TileConfig {
+    pub const fn new(bm: usize, bk: usize) -> TileConfig {
+        TileConfig { bm, bk }
+    }
+
+    /// The crate's historical hard-coded dense blocking (64 x 64, tuned
+    /// for ~32 KiB L1).
+    pub const fn dense_default() -> TileConfig {
+        TileConfig::new(64, 64)
+    }
+
+    /// The historical hard-coded TW fused-CTO row block (32).
+    pub const fn tw_default() -> TileConfig {
+        TileConfig::new(32, 64)
+    }
+
+    /// The historical 2:4 (VW) behaviour: one activation row at a time.
+    pub const fn vw_default() -> TileConfig {
+        TileConfig::new(1, 64)
+    }
+
+    /// The historical TVW behaviour: tile-outer, one pass over all rows
+    /// per tile (`bm` larger than any activation batch in the zoo).
+    pub const fn tvw_default() -> TileConfig {
+        TileConfig::new(1 << 20, 64)
+    }
+
+    /// Degenerate configs (zero extents) clamp to 1 rather than panic.
+    pub fn bm(&self) -> usize {
+        self.bm.max(1)
+    }
+
+    pub fn bk(&self) -> usize {
+        self.bk.max(1)
+    }
+}
+
+impl Default for TileConfig {
+    fn default() -> TileConfig {
+        TileConfig::dense_default()
+    }
+}

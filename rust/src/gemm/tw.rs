@@ -9,6 +9,7 @@
 //!   3. `tw_matmul`          — single fused pass over all tiles driven by
 //!      the CTO offset tables (the paper's final CTO kernel).
 
+use super::TileConfig;
 use crate::sparse::{Mask, TwPlan};
 use crate::tensor::Matrix;
 
@@ -61,22 +62,34 @@ pub fn tw_matmul_per_tile(a: &Matrix, plan: &TwPlan) -> Matrix {
 }
 
 /// The fused-CTO kernel: a single pass over all tiles with a blocked inner
-/// GEMM over the gathered operands.  This is the §Perf-optimized hot path.
+/// GEMM over the gathered operands.  This is the §Perf-optimized hot path,
+/// at the historical hard-coded row block (32).
 pub fn tw_matmul(a: &Matrix, plan: &TwPlan) -> Matrix {
+    tw_matmul_with(a, plan, &TileConfig::tw_default())
+}
+
+/// Fused-CTO kernel with an explicit tile config (`cfg.bm` = activation
+/// row block; the reduction extent is fixed by the condensed plan).
+pub fn tw_matmul_with(a: &Matrix, plan: &TwPlan, cfg: &TileConfig) -> Matrix {
     let m = a.rows;
     let mut c = Matrix::zeros(m, plan.n);
-    tw_matmul_into(a, plan, &mut c);
+    tw_matmul_into_with(a, plan, &mut c, cfg);
     c
 }
 
 /// In-place variant (the serving loop reuses the output allocation).
 pub fn tw_matmul_into(a: &Matrix, plan: &TwPlan, c: &mut Matrix) {
+    tw_matmul_into_with(a, plan, c, &TileConfig::tw_default());
+}
+
+/// In-place fused-CTO kernel with an explicit tile config.
+pub fn tw_matmul_into_with(a: &Matrix, plan: &TwPlan, c: &mut Matrix, cfg: &TileConfig) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let m = a.rows;
-    const BM: usize = 32;
-    let mut a_gather = vec![0.0f32; BM * plan.kmax];
-    let mut c_tile = vec![0.0f32; BM * plan.g];
+    let bm = cfg.bm();
+    let mut a_gather = vec![0.0f32; bm * plan.kmax];
+    let mut c_tile = vec![0.0f32; bm * plan.g];
     for t in 0..plan.tiles {
         let kt = plan.row_len[t] as usize;
         let width = (0..plan.g)
@@ -86,8 +99,8 @@ pub fn tw_matmul_into(a: &Matrix, plan: &TwPlan, c: &mut Matrix) {
             continue;
         }
         let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
-        for i0 in (0..m).step_by(BM) {
-            let bm = BM.min(m - i0);
+        for i0 in (0..m).step_by(bm) {
+            let bm = bm.min(m - i0);
             // CTO gather of A columns into a compact (bm x kt) block
             for i in 0..bm {
                 let arow = a.row(i0 + i);
@@ -231,6 +244,16 @@ mod tests {
             ("parallel", &par),
         ] {
             assert!(got.max_abs_diff(&oracle) < 1e-3, "{name}");
+        }
+    }
+
+    #[test]
+    fn tile_configs_agree_with_default() {
+        let (a, _, _, plan) = setup(40, 96, 80, 0.6, 16, 85);
+        let want = tw_matmul(&a, &plan);
+        for &bm in &[1usize, 7, 16, 33, 64, 128, 0] {
+            let got = tw_matmul_with(&a, &plan, &TileConfig::new(bm, 64));
+            assert!(got.max_abs_diff(&want) < 1e-4, "bm={bm}");
         }
     }
 

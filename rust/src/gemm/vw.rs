@@ -1,8 +1,15 @@
 //! 2:4 vector-wise sparse GEMM (sparse-tensor-core emulation) and the TVW
 //! fused kernel on the CPU.
 
+use super::TileConfig;
 use crate::sparse::{TvwPlan, Vw24Plan};
 use crate::tensor::Matrix;
+
+/// C = A * B with B stored 2:4-compressed along K, one activation row at a
+/// time (the historical behaviour; see [`vw24_matmul_with`]).
+pub fn vw24_matmul(a: &Matrix, plan: &Vw24Plan) -> Matrix {
+    vw24_matmul_with(a, plan, &TileConfig::vw_default())
+}
 
 /// C = A * B with B stored 2:4-compressed along K.  Walks only the kept
 /// half of the operands — the arithmetic saving the sparse tensor core
@@ -13,87 +20,111 @@ use crate::tensor::Matrix;
 /// metadata, and fusing the group's two compressed rows into one pass —
 /// halving metadata-loop overhead and removing the strided A re-reads of
 /// the naive per-compressed-row loop (2.0x on the 256x512x512 bench).
-pub fn vw24_matmul(a: &Matrix, plan: &Vw24Plan) -> Matrix {
+///
+/// `cfg.bm` blocks activation rows so one compressed B group is reused
+/// across the whole row block before moving on (B-operand L1/L2 reuse);
+/// `bm = 1` reproduces the historical row-at-a-time order exactly.
+pub fn vw24_matmul_with(a: &Matrix, plan: &Vw24Plan, cfg: &TileConfig) -> Matrix {
     assert_eq!(a.cols, plan.k);
     let (m, n) = (a.rows, plan.n);
     let groups = plan.k / 4;
+    let bm = cfg.bm();
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
+    for i0 in (0..m).step_by(bm) {
+        let i1 = (i0 + bm).min(m);
         for g in 0..groups {
-            // the four candidate A operands of this group, in registers
-            let a4 = [arow[g * 4], arow[g * 4 + 1], arow[g * 4 + 2], arow[g * 4 + 3]];
-            if a4 == [0.0; 4] {
-                continue;
-            }
             let v0 = &plan.b_vals[(g * 2) * n..(g * 2 + 1) * n];
             let s0 = &plan.b_sel[(g * 2) * n..(g * 2 + 1) * n];
             let v1 = &plan.b_vals[(g * 2 + 1) * n..(g * 2 + 2) * n];
             let s1 = &plan.b_sel[(g * 2 + 1) * n..(g * 2 + 2) * n];
-            for j in 0..n {
-                crow[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+            for i in i0..i1 {
+                let arow = a.row(i);
+                // the four candidate A operands of this group, in registers
+                let a4 = [arow[g * 4], arow[g * 4 + 1], arow[g * 4 + 2], arow[g * 4 + 3]];
+                if a4 == [0.0; 4] {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+                }
             }
         }
     }
     c
 }
 
+/// TVW fused kernel at the historical tile-outer blocking (one pass over
+/// all activation rows per tile).
+pub fn tvw_matmul(a: &Matrix, plan: &TvwPlan) -> Matrix {
+    tvw_matmul_with(a, plan, &TileConfig::tvw_default())
+}
+
 /// TVW fused kernel: CTO gather (global-memory level) + 2:4 metadata
 /// expansion (register level) per condensed tile.
-pub fn tvw_matmul(a: &Matrix, plan: &TvwPlan) -> Matrix {
+///
+/// `cfg.bm` blocks activation rows *outside* the tile loop: each row block
+/// streams the whole condensed plan before the next block, trading
+/// condensed-B re-reads for A/C residency (tiles own disjoint output
+/// columns, so block order cannot change any output element's value).
+/// `bm >= m` reproduces the historical tile-outer single pass.
+pub fn tvw_matmul_with(a: &Matrix, plan: &TvwPlan, cfg: &TileConfig) -> Matrix {
     let m = a.rows;
     let khalf = plan.kmax / 2;
+    let bm = cfg.bm();
     let mut c = Matrix::zeros(m, plan.n);
     let mut a_gather = vec![0.0f32; plan.kmax];
-    for t in 0..plan.tiles {
-        let kt = plan.row_len[t] as usize;
-        let width = (0..plan.g)
-            .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < plan.n)
-            .count();
-        if kt == 0 || width == 0 {
-            continue;
-        }
-        let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
-        // only groups whose base is inside the valid kt range can carry
-        // nonzeros (encode zero-pads beyond kt)
-        let groups_max = kt.div_ceil(4).min(plan.kmax / 4);
-        // §Perf: accumulate into a compact c_tile and scatter once per row —
-        // the inner loop then writes a contiguous stream the compiler can
-        // vectorize, instead of CTO-scattered stores per element.
-        let mut c_tile = vec![0.0f32; width];
-        for i in 0..m {
-            let arow = a.row(i);
-            for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
-                *d = arow[r as usize];
+    // §Perf: accumulate into a compact c_tile and scatter once per row —
+    // the inner loop then writes a contiguous stream the compiler can
+    // vectorize, instead of CTO-scattered stores per element.
+    let mut c_tile = vec![0.0f32; plan.g];
+    for i0 in (0..m).step_by(bm) {
+        let i1 = (i0 + bm).min(m);
+        for t in 0..plan.tiles {
+            let kt = plan.row_len[t] as usize;
+            let width = (0..plan.g)
+                .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < plan.n)
+                .count();
+            if kt == 0 || width == 0 {
+                continue;
             }
-            for x in a_gather[kt..plan.kmax].iter_mut() {
-                *x = 0.0;
-            }
-            c_tile.fill(0.0);
-            for g in 0..groups_max {
-                let a4 = [
-                    a_gather[g * 4],
-                    a_gather[g * 4 + 1],
-                    a_gather[g * 4 + 2],
-                    a_gather[g * 4 + 3],
-                ];
-                if a4 == [0.0; 4] {
-                    continue;
+            let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+            // only groups whose base is inside the valid kt range can carry
+            // nonzeros (encode zero-pads beyond kt)
+            let groups_max = kt.div_ceil(4).min(plan.kmax / 4);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
+                    *d = arow[r as usize];
                 }
-                let base0 = (t * khalf + g * 2) * plan.g;
-                let base1 = (t * khalf + g * 2 + 1) * plan.g;
-                let v0 = &plan.b_vals[base0..base0 + width];
-                let s0 = &plan.b_sel[base0..base0 + width];
-                let v1 = &plan.b_vals[base1..base1 + width];
-                let s1 = &plan.b_sel[base1..base1 + width];
+                for x in a_gather[kt..plan.kmax].iter_mut() {
+                    *x = 0.0;
+                }
+                c_tile[..width].fill(0.0);
+                for g in 0..groups_max {
+                    let a4 = [
+                        a_gather[g * 4],
+                        a_gather[g * 4 + 1],
+                        a_gather[g * 4 + 2],
+                        a_gather[g * 4 + 3],
+                    ];
+                    if a4 == [0.0; 4] {
+                        continue;
+                    }
+                    let base0 = (t * khalf + g * 2) * plan.g;
+                    let base1 = (t * khalf + g * 2 + 1) * plan.g;
+                    let v0 = &plan.b_vals[base0..base0 + width];
+                    let s0 = &plan.b_sel[base0..base0 + width];
+                    let v1 = &plan.b_vals[base1..base1 + width];
+                    let s1 = &plan.b_sel[base1..base1 + width];
+                    for j in 0..width {
+                        c_tile[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+                    }
+                }
+                let crow = c.row_mut(i);
                 for j in 0..width {
-                    c_tile[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+                    crow[plan.col_idx[t * plan.g + j] as usize] += c_tile[j];
                 }
-            }
-            let crow = c.row_mut(i);
-            for j in 0..width {
-                crow[plan.col_idx[t * plan.g + j] as usize] += c_tile[j];
             }
         }
     }
@@ -129,6 +160,24 @@ mod tests {
             let want = matmul_naive(&a, &mask.apply(&w));
             let got = tvw_matmul(&a, &plan);
             assert!(got.max_abs_diff(&want) < 1e-3, "s={s}: {}", got.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn tile_configs_agree_with_default() {
+        let mut rng = Rng::new(93);
+        let a = Matrix::randn(37, 64, &mut rng);
+        let w = Matrix::randn(64, 48, &mut rng);
+        let (tw, tvmask) = prune_tvw(&w, 0.75, 16);
+        let tvplan = TvwPlan::encode(&w, &tw, &tvmask);
+        let want_tvw = tvw_matmul(&a, &tvplan);
+        let mask24 = prune_vw(&w, 0.5, 4);
+        let vplan = Vw24Plan::encode(&w, &mask24).unwrap();
+        let want_vw = vw24_matmul(&a, &vplan);
+        for &bm in &[1usize, 7, 16, 64, 128, 0] {
+            let cfg = TileConfig::new(bm, 64);
+            assert!(tvw_matmul_with(&a, &tvplan, &cfg).max_abs_diff(&want_tvw) < 1e-4, "tvw bm={bm}");
+            assert!(vw24_matmul_with(&a, &vplan, &cfg).max_abs_diff(&want_vw) < 1e-4, "vw bm={bm}");
         }
     }
 

@@ -10,16 +10,24 @@
 //! Layer map (see DESIGN.md):
 //! - [`sparse`] — the six sparsity patterns, CTO plans, CSR/CSC, stats
 //! - [`pruner`] — Algorithm 1 multi-stage schedule + global budget
-//! - [`gemm`] — CPU GEMM hot paths (dense, TW fused-CTO, 2:4, TVW, SpMM)
+//! - [`gemm`] — CPU GEMM hot paths (dense, TW fused-CTO, 2:4, TVW, SpMM),
+//!   parameterised by [`gemm::TileConfig`] cache-blocking
 //! - [`gpusim`] — A100-class analytical latency simulator
+//! - [`autotune`] — empirical kernel autotuner: candidate space, gpusim
+//!   pre-filter, wall-clock measurement, persistent plan cache
 //! - [`models`] — model zoo: per-layer GEMM workloads (BERT, VGG, ResNet, NMT)
 //! - [`accuracy`] — trainable proxy + calibrated surrogate accuracy models
 //! - [`runtime`] — PJRT engine: load HLO-text artifacts, execute
-//! - [`coordinator`] — serving layer: router, dynamic batcher, metrics
+//!   (stubbed unless the `pjrt` feature supplies the `xla` crate)
+//! - [`coordinator`] — serving layer: router, dynamic batcher, metrics,
+//!   tuned-plan routing
 //! - [`figures`] — regeneration harnesses for every paper figure
+//! - [`error`] — in-tree `anyhow`-subset error type (offline registry)
 
 pub mod accuracy;
+pub mod autotune;
 pub mod coordinator;
+pub mod error;
 pub mod figures;
 pub mod gemm;
 pub mod gpusim;

@@ -3,6 +3,7 @@
 //!
 //! Subcommands (hand-rolled parser; the offline registry has no clap):
 //!   serve             run the serving stack with a synthetic open-loop client
+//!   autotune          tune a model zoo entry's GEMMs, write the plan cache
 //!   figure <id|all>   regenerate a paper figure (fig6a..fig11, headline)
 //!   inspect-patterns  print the Fig. 9 mask heatmaps + statistics
 //!   prune             run the multi-stage pruner on a synthetic matrix
@@ -10,9 +11,11 @@
 
 use std::path::PathBuf;
 
+use tilewise::autotune::{MeasureOpts, PatternFamily, Tuner, TunerOpts};
 use tilewise::coordinator::{start, BatcherConfig, Policy, ServerConfig};
 use tilewise::figures::{fig10, fig6, fig7, fig8, fig9, headline};
 use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
+use tilewise::models::{self, ModelWorkload};
 use tilewise::sparse::Pattern;
 use tilewise::tensor::Matrix;
 use tilewise::util::Rng;
@@ -21,6 +24,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args[1..]),
+        Some("autotune") => cmd_autotune(&args[1..]),
         Some("figure") => cmd_figure(&args[1..]),
         Some("inspect-patterns") => cmd_inspect(),
         Some("prune") => cmd_prune(&args[1..]),
@@ -31,7 +35,10 @@ fn main() {
                 "usage: tilewise <command>\n\
                  \n\
                  commands:\n\
-                 \x20 serve [--artifacts DIR] [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive]\n\
+                 \x20 serve [--artifacts DIR] [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
+                 \x20       [--plan-cache FILE] [--model NAME]\n\
+                 \x20 autotune [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--out FILE]\n\
+                 \x20          [--threads T] [--m-cap M] [--budget-ms MS] [--quick]\n\
                  \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
                  \x20 inspect-patterns\n\
                  \x20 prune [--pattern ew|vw|bw|tw|tew|tvw] [--sparsity S] [--g G]\n\
@@ -44,6 +51,84 @@ fn main() {
     std::process::exit(code);
 }
 
+fn workload_by_name(name: &str) -> Option<ModelWorkload> {
+    Some(match name {
+        "vgg16" => models::vgg16(),
+        "resnet18" => models::resnet18(),
+        "resnet50" => models::resnet50(),
+        "nmt" => models::nmt(128),
+        "bert" => models::bert_base(8, 128),
+        _ => return None,
+    })
+}
+
+fn cmd_autotune(args: &[String]) -> i32 {
+    let model = flag(args, "--model").unwrap_or_else(|| "bert".into());
+    let sparsity: f64 = flag(args, "--sparsity").and_then(|v| v.parse().ok()).unwrap_or(0.75);
+    let out = PathBuf::from(flag(args, "--out").unwrap_or_else(|| "plans.json".into()));
+    let threads: usize = flag(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    });
+    let m_cap: usize = flag(args, "--m-cap").and_then(|v| v.parse().ok()).unwrap_or(256);
+    let quick = args.iter().any(|a| a == "--quick");
+
+    let Some(workload) = workload_by_name(&model) else {
+        eprintln!("unknown model {model:?} (expected vgg16|resnet18|resnet50|nmt|bert)");
+        return 2;
+    };
+    let mut opts = TunerOpts {
+        sparsity,
+        nthreads: threads,
+        m_cap: Some(m_cap),
+        ..TunerOpts::default()
+    };
+    opts.measure = if quick { MeasureOpts::quick() } else { MeasureOpts::default() };
+    if let Some(ms) = flag(args, "--budget-ms").and_then(|v| v.parse::<f64>().ok()) {
+        opts.measure.budget_secs = ms / 1e3;
+    }
+    let tuner = Tuner::new(opts);
+
+    println!(
+        "autotuning {} ({} prunable layers) @ {:.0}% sparsity, {threads} thread(s), m-cap {m_cap}",
+        workload.name,
+        workload.prunable_layers().count(),
+        sparsity * 100.0
+    );
+    let families = [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw];
+    let (cache, results) = tuner.tune_workload(&workload, &model, &families);
+
+    println!(
+        "{:<22}{:>8}{:>14}{:>12}{:>12}{:>9}   {}",
+        "shape(MxKxN)", "family", "default(us)", "tuned(us)", "model(us)", "speedup", "winner"
+    );
+    for r in &results {
+        let e = &r.entry;
+        println!(
+            "{:<22}{:>8}{:>14.1}{:>12.1}{:>12.1}{:>8.2}x   {}",
+            format!("{}x{}x{}", e.key.m, e.key.k, e.key.n),
+            e.key.pattern,
+            e.default_us,
+            e.measured_us,
+            e.model_us,
+            e.speedup(),
+            e.candidate().map(|c| c.label()).unwrap_or_default(),
+        );
+    }
+    if let Some(variant) = cache.model_variant(&model) {
+        println!("serving recommendation for {model:?}: {variant}");
+    }
+    match cache.save(&out) {
+        Ok(()) => {
+            println!("wrote {} tuned entries to {}", cache.len(), out.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to write plan cache: {e}");
+            1
+        }
+    }
+}
+
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
@@ -52,6 +137,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let dir = PathBuf::from(flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
     let requests: usize = flag(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
     let rate: f64 = flag(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(50.0);
+    let plan_cache = flag(args, "--plan-cache").map(PathBuf::from);
     let policy = match flag(args, "--policy").as_deref() {
         Some("dense") => Policy::Fixed("model_dense".into()),
         Some("tvw") => Policy::Fixed("model_tvw".into()),
@@ -65,6 +151,10 @@ fn cmd_serve(args: &[String]) -> i32 {
             sparse: "model_tvw".into(),
             queue_threshold: 8,
         },
+        Some("tuned") => Policy::Tuned {
+            model: flag(args, "--model").unwrap_or_else(|| "bert".into()),
+            fallback: "model_dense".into(),
+        },
         _ => Policy::Fixed("model_tw".into()),
     };
     let cfg = ServerConfig {
@@ -72,6 +162,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         policy,
         variants: ServerConfig::default().variants,
         max_queue: 0,
+        plan_cache,
     };
     let handle = match start(&dir, cfg) {
         Ok(h) => h,
@@ -98,11 +189,15 @@ fn cmd_serve(args: &[String]) -> i32 {
             ok += 1;
         }
     }
+    let snap = handle.metrics.full_snapshot();
     println!(
-        "completed {ok}/{requests} requests, throughput {:.1} req/s",
-        handle.metrics.throughput()
+        "completed {ok}/{requests} requests, {} shed, throughput {:.1} req/s",
+        snap.sheds, snap.throughput_rps
     );
-    for s in handle.metrics.snapshot() {
+    if let Some(cache) = &handle.plan_cache {
+        println!("  plan cache: {} tuned entries loaded", cache.len());
+    }
+    for s in &snap.variants {
         println!(
             "  {:<12} n={:<5} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms batch={:.1}",
             s.variant, s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms, s.mean_batch

@@ -5,9 +5,9 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{Context, Result};
 use crate::json::Json;
+use crate::{anyhow, bail};
 
 /// Tensor datatype in the bundle (matches the Python writer's set).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

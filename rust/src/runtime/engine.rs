@@ -2,14 +2,25 @@
 //! static argument (weights, condensed tiles, CTO tables) as device
 //! buffers once, then serve activations through `execute_b` — zero Python,
 //! zero re-staging on the request path.
+//!
+//! The real engine needs the external `xla` crate and is gated behind the
+//! `pjrt` cargo feature; without it a std-only stub with the identical
+//! public surface takes its place, failing at load time so every
+//! artifact-dependent caller degrades to its "artifacts missing" path.
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use crate::error::Result;
+#[cfg(feature = "pjrt")]
+use crate::{anyhow, bail};
 
+#[cfg(feature = "pjrt")]
 use super::bundle::{Bundle, Dtype, ExecutableMeta, Meta};
 
 /// The PJRT client plus everything loaded from one artifact directory.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     pub meta: Meta,
@@ -17,6 +28,7 @@ pub struct Engine {
 }
 
 /// One compiled executable with its static arguments pre-staged on device.
+#[cfg(feature = "pjrt")]
 pub struct LoadedExecutable {
     pub name: String,
     pub activation_shape: Vec<usize>,
@@ -35,6 +47,88 @@ pub enum InputData<'a> {
     I32(&'a [i32]),
 }
 
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    //! API-identical stand-in used when the `xla` crate is unavailable.
+    //! Loading always fails with a diagnostic; nothing else is reachable.
+
+    use std::path::Path;
+
+    use super::super::bundle::{Dtype, Meta};
+    use super::InputData;
+    use crate::error::Result;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` feature \
+         (the `xla` crate is not in the offline registry); CPU kernels in `gemm` and the \
+         gpusim latency model remain fully functional";
+
+    /// Stub engine (see module docs).
+    pub struct Engine {
+        pub meta: Meta,
+        models: Vec<LoadedExecutable>,
+    }
+
+    /// Stub executable description (never constructed).
+    pub struct LoadedExecutable {
+        pub name: String,
+        pub activation_shape: Vec<usize>,
+        pub output_shape: Vec<usize>,
+        pub inputs: Vec<(Vec<usize>, Dtype)>,
+        pub output_shapes: Vec<Vec<usize>>,
+    }
+
+    impl Engine {
+        pub fn load(_dir: &Path) -> Result<Engine> {
+            Err(crate::anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn load_only(_dir: &Path, _names: &[&str]) -> Result<Engine> {
+            Err(crate::anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn model(&self, name: &str) -> Result<&LoadedExecutable> {
+            self.models
+                .iter()
+                .find(|m| m.name == name)
+                .ok_or_else(|| crate::anyhow!("executable {name:?} not loaded"))
+        }
+
+        pub fn model_names(&self) -> Vec<&str> {
+            self.models.iter().map(|m| m.name.as_str()).collect()
+        }
+
+        pub fn run(&self, _model: &LoadedExecutable, _activation: &[f32]) -> Result<Vec<f32>> {
+            Err(crate::anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn run_named(&self, _name: &str, _activation: &[f32]) -> Result<Vec<f32>> {
+            Err(crate::anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn run_multi(
+            &self,
+            _model: &LoadedExecutable,
+            _dynamic: &[InputData<'_>],
+        ) -> Result<Vec<Vec<f32>>> {
+            Err(crate::anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn run_train_iteration(
+            &self,
+            _model: &LoadedExecutable,
+            _x: &[f32],
+            _y: &[i32],
+            _params: &[&[f32]],
+        ) -> Result<Vec<Vec<f32>>> {
+            Err(crate::anyhow!("{UNAVAILABLE}"))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, LoadedExecutable};
+
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load every executable listed in `meta.json` under `dir`.
     pub fn load(dir: &Path) -> Result<Engine> {
@@ -279,7 +373,7 @@ impl Engine {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,125 @@
+//! Property sweep: every tuned kernel — dense, TW, TVW, 2:4 — must match
+//! the naive dense reference within 1e-4 across randomized shapes, tile
+//! configs, and sparsity ratios.  This is the safety contract behind the
+//! autotuner: any candidate it measures computes the same function.
+
+use tilewise::gemm::{
+    matmul_naive, matmul_tiled, tvw_matmul_with, tw_matmul_with, vw24_matmul_with, TileConfig,
+};
+use tilewise::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+const TOL: f32 = 1e-4;
+
+#[test]
+fn tuned_kernels_match_naive_reference() {
+    let mut rng = Rng::new(0x7153);
+    let sparsities = [0.3, 0.5, 0.75, 0.9];
+    let gs = [4usize, 8, 16, 32, 64];
+    for iter in 0..24 {
+        let m = 1 + rng.below(48);
+        let k = 4 * (1 + rng.below(24)); // 4-aligned so 2:4 always applies
+        let n = 1 + rng.below(80);
+        let s = sparsities[rng.below(sparsities.len())];
+        let g = gs[rng.below(gs.len())];
+        let cfg = TileConfig::new(1 + rng.below(70), 1 + rng.below(70));
+        let ctx = format!(
+            "iter={iter} m={m} k={k} n={n} s={s} g={g} bm={} bk={}",
+            cfg.bm, cfg.bk
+        );
+
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+
+        // dense: tuned blocking vs textbook loop
+        let want_dense = matmul_naive(&a, &w);
+        let got_dense = matmul_tiled(&a, &w, &cfg);
+        assert!(
+            got_dense.max_abs_diff(&want_dense) < TOL,
+            "dense {ctx}: {}",
+            got_dense.max_abs_diff(&want_dense)
+        );
+
+        // TW: tuned fused-CTO kernel vs mask oracle
+        let tw = prune_tw(&w, s, g, None);
+        let plan = TwPlan::encode(&w, &tw);
+        let want_tw = matmul_naive(&a, &tw.mask().apply(&w));
+        let got_tw = tw_matmul_with(&a, &plan, &cfg);
+        assert!(
+            got_tw.max_abs_diff(&want_tw) < TOL,
+            "tw {ctx}: {}",
+            got_tw.max_abs_diff(&want_tw)
+        );
+
+        // TVW: tuned fused kernel vs mask oracle (2:4 leg needs s >= 0.5)
+        let s_tvw = s.max(0.5);
+        let (tws, mask) = prune_tvw(&w, s_tvw, g);
+        let tvplan = TvwPlan::encode(&w, &tws, &mask);
+        let want_tvw = matmul_naive(&a, &mask.apply(&w));
+        let got_tvw = tvw_matmul_with(&a, &tvplan, &cfg);
+        assert!(
+            got_tvw.max_abs_diff(&want_tvw) < TOL,
+            "tvw {ctx}: {}",
+            got_tvw.max_abs_diff(&want_tvw)
+        );
+
+        // 2:4: tuned row blocking vs mask oracle
+        let mask24 = prune_vw(&w, 0.5, 4);
+        let vplan = Vw24Plan::encode(&w, &mask24).expect("2:4 encodable");
+        let want_vw = matmul_naive(&a, &mask24.apply(&w));
+        let got_vw = vw24_matmul_with(&a, &vplan, &cfg);
+        assert!(
+            got_vw.max_abs_diff(&want_vw) < TOL,
+            "vw24 {ctx}: {}",
+            got_vw.max_abs_diff(&want_vw)
+        );
+    }
+}
+
+/// The tuner's end product must survive a disk round-trip and still
+/// describe runnable candidates (the serving stack depends on this).
+#[test]
+fn tuned_cache_roundtrip_reexecutes() {
+    use tilewise::autotune::{
+        bench_candidate, BenchData, MeasureOpts, PatternFamily, PlanCache, SearchSpace, Tuner,
+        TunerOpts,
+    };
+    use tilewise::gpusim::GemmShape;
+
+    let opts = TunerOpts {
+        measure: MeasureOpts { warmup: 0, min_iters: 1, max_iters: 1, budget_secs: 0.0, trim_frac: 0.0 },
+        space: SearchSpace { bms: vec![16, 32], bks: vec![64], gs: vec![16], threads: vec![1] },
+        max_measured: 2,
+        m_cap: Some(16),
+        ..TunerOpts::default()
+    };
+    let tuner = Tuner::new(opts);
+    let shape = GemmShape::new(32, 64, 64);
+    let res = tuner.tune_gemm(shape, PatternFamily::Tw).expect("tw tunable");
+
+    let mut cache = PlanCache::new();
+    cache.insert(res.entry.clone());
+    let dir = std::env::temp_dir().join(format!("tilewise_props_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.json");
+    cache.save(&path).unwrap();
+
+    let loaded = PlanCache::load(&path).unwrap();
+    assert_eq!(loaded.len(), 1);
+    let entry = loaded.get(&res.entry.key).expect("key survives");
+    let cand = entry.candidate().expect("candidate reconstructs");
+    // the reloaded candidate still executes on fresh operands
+    let mut data = BenchData::new(
+        GemmShape::new(entry.key.m, entry.key.k, entry.key.n),
+        0.75,
+        1,
+    );
+    let meas = bench_candidate(
+        &mut data,
+        &cand,
+        &MeasureOpts { warmup: 0, min_iters: 1, max_iters: 1, budget_secs: 0.0, trim_frac: 0.0 },
+    );
+    assert!(meas.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
