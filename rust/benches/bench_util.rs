@@ -5,6 +5,7 @@ use std::time::Instant;
 
 /// Run `f` until `min_runs` samples and `min_secs` have elapsed; report
 /// median and median-absolute-deviation in microseconds.
+#[allow(dead_code)] // not every bench binary uses both helpers
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
     // warmup
     for _ in 0..2 {
@@ -32,6 +33,7 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
 }
 
 /// Section header for bench output.
+#[allow(dead_code)] // not every bench binary uses both helpers
 pub fn section(title: &str) {
     println!("\n### {title}");
 }

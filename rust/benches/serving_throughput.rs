@@ -1,0 +1,157 @@
+//! Bench: serving throughput vs worker count on the native backend —
+//! requests/sec for BERT-base FFN shapes (d_model 768, d_ff 3072), dense
+//! vs TW vs TVW, over 1/2/4/8 workers.  Emits `BENCH_serving.json`: the
+//! start of the repo's serving-performance trajectory.
+//!
+//!   cargo bench --bench serving_throughput [-- --requests N]
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bench_util::section;
+use tilewise::coordinator::{start_with_backend, BatcherConfig, Policy, ServerConfig};
+use tilewise::exec::{Backend, NativeBackend, NativeModelSpec};
+use tilewise::json::{arr, num, obj, s};
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const VARIANTS: [&str; 3] = ["model_dense", "model_tw", "model_tvw"];
+
+struct Cell {
+    variant: &'static str,
+    workers: usize,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn run_cell(
+    backend: &Arc<dyn Backend>,
+    variant: &'static str,
+    workers: usize,
+    requests: usize,
+) -> Cell {
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        policy: Policy::Fixed(variant.into()),
+        workers,
+        ..ServerConfig::default()
+    };
+    let handle = start_with_backend(backend.clone(), cfg).expect("native server start");
+    let len = handle.seq * handle.d_model;
+    let x = vec![0.1f32; len];
+
+    // warmup: one full batch through every worker's scratch path
+    for rx in (0..workers * 8).map(|_| handle.submit(x.clone(), None)).collect::<Vec<_>>() {
+        let _ = rx.recv();
+    }
+    // closed-loop burst: saturate the queue, measure drain rate
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests).map(|_| handle.submit(x.clone(), None)).collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(ok, requests, "all requests must be served");
+    let snap = handle.metrics.full_snapshot();
+    let stats = snap.variants.iter().find(|v| v.variant == variant).expect("variant stats");
+    Cell { variant, workers, rps: ok as f64 / wall, p50_ms: stats.p50_ms, p99_ms: stats.p99_ms }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48);
+
+    // BERT-base FFN widths; seq trimmed so one forward stays sub-second
+    let spec = NativeModelSpec::bert_base(8, 8).with_variants(&VARIANTS);
+    section(&format!(
+        "native serving throughput, BERT-base FFN shapes ({}x{}, batch {}, seq {}, {} requests/cell)",
+        spec.d_model, spec.d_ff, spec.batch, spec.seq, requests
+    ));
+    let t_pack = Instant::now();
+    let backend: Arc<dyn Backend> =
+        Arc::new(NativeBackend::new(spec.clone(), None).expect("pack native model"));
+    println!("packed dense/TW/TVW plans once in {:.2}s\n", t_pack.elapsed().as_secs_f64());
+
+    println!(
+        "{:<14}{:>9}{:>12}{:>12}{:>12}{:>10}",
+        "variant", "workers", "req/s", "p50(ms)", "p99(ms)", "scaling"
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut scaling = Vec::new();
+    for variant in VARIANTS {
+        let mut base_rps = 0.0f64;
+        for &workers in &WORKER_COUNTS {
+            let cell = run_cell(&backend, variant, workers, requests);
+            if workers == 1 {
+                base_rps = cell.rps;
+            }
+            let scale = if base_rps > 0.0 { cell.rps / base_rps } else { 1.0 };
+            println!(
+                "{:<14}{:>9}{:>12.1}{:>12.2}{:>12.2}{:>9.2}x",
+                cell.variant, cell.workers, cell.rps, cell.p50_ms, cell.p99_ms, scale
+            );
+            cells.push(cell);
+        }
+        let max_rps = cells
+            .iter()
+            .filter(|c| c.variant == variant)
+            .map(|c| c.rps)
+            .fold(0.0f64, f64::max);
+        let final_scale = if base_rps > 0.0 { max_rps / base_rps } else { 1.0 };
+        scaling.push((variant, final_scale));
+        println!();
+    }
+
+    for (variant, scale) in &scaling {
+        println!("{variant}: best throughput {scale:.2}x over 1 worker");
+    }
+    if scaling.iter().all(|(_, s)| *s < 1.2) {
+        println!("warning: no variant scaled >=1.2x with workers on this host");
+    }
+
+    let doc = obj(vec![
+        ("bench", s("serving_throughput")),
+        ("backend", s("native")),
+        ("d_model", num(spec.d_model as f64)),
+        ("d_ff", num(spec.d_ff as f64)),
+        ("batch", num(spec.batch as f64)),
+        ("seq", num(spec.seq as f64)),
+        ("sparsity", num(spec.sparsity)),
+        ("requests_per_cell", num(requests as f64)),
+        (
+            "cells",
+            arr(cells
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("variant", s(c.variant)),
+                        ("workers", num(c.workers as f64)),
+                        ("rps", num(c.rps)),
+                        ("p50_ms", num(c.p50_ms)),
+                        ("p99_ms", num(c.p99_ms)),
+                    ])
+                })
+                .collect()),
+        ),
+        (
+            "scaling_vs_one_worker",
+            obj(scaling.iter().map(|(v, sc)| (*v, num(*sc))).collect()),
+        ),
+    ]);
+    let out = "BENCH_serving.json";
+    match std::fs::write(out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("writing {out}: {e}"),
+    }
+}

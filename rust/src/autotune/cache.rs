@@ -181,6 +181,50 @@ impl PlanCache {
         self.entries.values()
     }
 
+    /// Tuned cache-blocking for one GEMM problem, if the cache holds a
+    /// winner under this exact key (shape × pattern family label ×
+    /// sparsity × thread budget).
+    pub fn tile_config(
+        &self,
+        shape: GemmShape,
+        pattern: &str,
+        sparsity: f64,
+        nthreads: usize,
+    ) -> Option<TileConfig> {
+        self.get(&PlanKey::new(shape, pattern, sparsity, nthreads))
+            .map(|e| TileConfig::new(e.bm, e.bk))
+    }
+
+    /// Serving-time resolution: the best tuned tile config for a GEMM
+    /// whose exact key may not be in the cache.  (K, N, pattern) must
+    /// match exactly — those determine the operand layout — while tile
+    /// decisions transfer across the batch dimension M (GEMM cost is
+    /// linear in M; the tuner itself caps M when tuning) and across
+    /// nearby sparsities (the tuner keys DENSE at sparsity 0 regardless
+    /// of the workload's pruning target).  Prefers the entry nearest in
+    /// sparsity, then nearest in M, then the smallest thread budget.
+    /// The native serving backend resolves every packed layer's
+    /// [`TileConfig`] through this at load time.
+    pub fn lookup_tile_config(
+        &self,
+        shape: GemmShape,
+        pattern: &str,
+        sparsity: f64,
+    ) -> Option<TileConfig> {
+        let want_bp = (sparsity * 10_000.0).round().clamp(0.0, 10_000.0) as i64;
+        self.entries
+            .values()
+            .filter(|e| e.key.k == shape.k && e.key.n == shape.n && e.key.pattern == pattern)
+            .min_by_key(|e| {
+                (
+                    (e.key.sparsity_bp as i64 - want_bp).abs(),
+                    (e.key.m as i64 - shape.m as i64).abs(),
+                    e.key.nthreads,
+                )
+            })
+            .map(|e| TileConfig::new(e.bm, e.bk))
+    }
+
     pub fn set_model_variant(&mut self, model: &str, variant: &str) {
         self.models.insert(model.to_string(), variant.to_string());
     }
@@ -315,6 +359,45 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(PlanCache::load(Path::new("/no/such/plan/cache.json")).is_err());
+    }
+
+    #[test]
+    fn tile_config_resolves_or_misses() {
+        let mut cache = PlanCache::new();
+        cache.insert(entry(256, "TW"));
+        let shape = GemmShape::new(256, 768, 3072);
+        assert_eq!(cache.tile_config(shape, "TW", 0.75, 1), Some(TileConfig::new(64, 64)));
+        assert_eq!(cache.tile_config(shape, "TVW", 0.75, 1), None);
+        assert_eq!(cache.tile_config(GemmShape::new(1, 2, 3), "TW", 0.75, 1), None);
+    }
+
+    #[test]
+    fn lookup_transfers_across_m_sparsity_and_threads() {
+        let mut cache = PlanCache::new();
+        // DENSE keyed at sparsity 0 (the tuner's convention) and capped M
+        let mut dense = entry(256, "DENSE");
+        dense.key.sparsity_bp = 0;
+        dense.key.nthreads = 8;
+        dense.bm = 128;
+        cache.insert(dense);
+        cache.insert(entry(256, "TW"));
+        // serving shape: larger M, pruned-workload sparsity, serial worker
+        let serving = GemmShape::new(1024, 768, 3072);
+        assert_eq!(
+            cache.lookup_tile_config(serving, "DENSE", 0.75),
+            Some(TileConfig::new(128, 64))
+        );
+        assert_eq!(cache.lookup_tile_config(serving, "TW", 0.75), Some(TileConfig::new(64, 64)));
+        // (K, N, pattern) must match exactly
+        assert_eq!(cache.lookup_tile_config(GemmShape::new(1024, 768, 3073), "TW", 0.75), None);
+        assert_eq!(cache.lookup_tile_config(serving, "TVW", 0.75), None);
+        // nearest sparsity wins when several entries share (K, N, pattern)
+        let mut near = entry(256, "TW");
+        near.key.sparsity_bp = 9000;
+        near.bm = 16;
+        cache.insert(near);
+        assert_eq!(cache.lookup_tile_config(serving, "TW", 0.88), Some(TileConfig::new(16, 64)));
+        assert_eq!(cache.lookup_tile_config(serving, "TW", 0.75), Some(TileConfig::new(64, 64)));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! serving trade-off (throughput from batching vs p99 from waiting).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::request::Request;
@@ -43,6 +44,22 @@ pub fn collect_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<
         }
     }
     Some(batch)
+}
+
+/// Multi-worker variant: the worker pool shares one request channel, so
+/// the receiver lives behind a mutex.  The lock is held for the *whole*
+/// collection — batches stay contiguous (no interleaved stealing mid-
+/// batch), and exactly one worker blocks in `recv` while the others
+/// execute; on release the next idle worker takes over collection.  That
+/// is the pipeline: collect(worker A) overlaps execute(workers B..).
+/// Returns `None` on a closed channel or a poisoned lock (a worker
+/// panicked mid-collect) so the caller can exit its loop.
+pub fn collect_batch_shared(
+    rx: &Mutex<Receiver<Request>>,
+    cfg: &BatcherConfig,
+) -> Option<Vec<Request>> {
+    let guard = rx.lock().ok()?;
+    collect_batch(&guard, cfg)
 }
 
 /// Pack per-request activations into one padded batch tensor.
@@ -109,6 +126,23 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Request>();
         drop(tx);
         assert!(collect_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+
+    #[test]
+    fn shared_receiver_collects_and_closes() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Mutex::new(rx);
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, resp_rx) = req(i, 4);
+            keep.push(resp_rx);
+            tx.send(r).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let batch = collect_batch_shared(&rx, &cfg).unwrap();
+        assert_eq!(batch.len(), 3);
+        drop(tx);
+        assert!(collect_batch_shared(&rx, &cfg).is_none());
     }
 
     #[test]

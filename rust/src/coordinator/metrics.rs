@@ -16,17 +16,22 @@ struct Inner {
     latency: HashMap<String, Vec<f64>>,
     /// Per-variant batch-size samples.
     batch_sizes: HashMap<String, Vec<f64>>,
+    /// Completions per worker (index = worker id), grown on demand.
+    worker_completed: Vec<u64>,
     completed: u64,
     started_at: Option<Instant>,
 }
 
-/// Thread-safe metrics sink shared between the executor and clients.
+/// Thread-safe metrics sink shared between the worker pool and clients.
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
     /// Requests shed by backpressure (outside the mutex: the shed path is
-    /// the hot rejection path and must not contend with the executor).
+    /// the hot rejection path and must not contend with the executors).
     sheds: AtomicU64,
+    /// Execute invocations that failed (one per failed batch; every
+    /// request in that batch got an error `Response`).
+    errors: AtomicU64,
 }
 
 /// Snapshot of one variant's serving statistics.
@@ -42,29 +47,65 @@ pub struct VariantStats {
 }
 
 /// Whole-server snapshot: per-variant percentiles plus the global
-/// counters (completions, backpressure sheds, throughput).
+/// counters (completions, backpressure sheds, errors, throughput) and the
+/// per-worker completion split.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub variants: Vec<VariantStats>,
     pub completed: u64,
     /// Requests refused by backpressure (`ServerHandle::try_submit`).
     pub sheds: u64,
+    /// Failed execute invocations (clients got an error `Response`).
+    pub errors: u64,
+    /// Completions per worker (index = worker id).
+    pub per_worker: Vec<u64>,
     pub throughput_rps: f64,
 }
 
 impl Metrics {
-    pub fn record(&self, variant: &str, latency_secs: f64, batch_size: usize) {
+    /// Pre-size the per-worker counters to the pool size, so idle workers
+    /// show up as explicit zeros in snapshots (an idle/stuck worker must
+    /// be distinguishable from a nonexistent one).
+    pub fn reserve_workers(&self, workers: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.worker_completed.len() < workers {
+            inner.worker_completed.resize(workers, 0);
+        }
+    }
+
+    /// Record one completed request served by `worker`.
+    pub fn record_for_worker(
+        &self,
+        variant: &str,
+        latency_secs: f64,
+        batch_size: usize,
+        worker: usize,
+    ) {
         let mut inner = self.inner.lock().unwrap();
         if inner.started_at.is_none() {
             inner.started_at = Some(Instant::now());
         }
         inner.latency.entry(variant.to_string()).or_default().push(latency_secs);
         inner.batch_sizes.entry(variant.to_string()).or_default().push(batch_size as f64);
+        if inner.worker_completed.len() <= worker {
+            inner.worker_completed.resize(worker + 1, 0);
+        }
+        inner.worker_completed[worker] += 1;
         inner.completed += 1;
+    }
+
+    /// Single-executor convenience (worker 0).
+    pub fn record(&self, variant: &str, latency_secs: f64, batch_size: usize) {
+        self.record_for_worker(variant, latency_secs, batch_size, 0);
     }
 
     pub fn completed(&self) -> u64 {
         self.inner.lock().unwrap().completed
+    }
+
+    /// Completions per worker (index = worker id).
+    pub fn per_worker(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().worker_completed.clone()
     }
 
     /// Count one backpressure shed (lock-free).
@@ -74,6 +115,15 @@ impl Metrics {
 
     pub fn sheds(&self) -> u64 {
         self.sheds.load(Ordering::Relaxed)
+    }
+
+    /// Count one failed execute invocation (lock-free).
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
     }
 
     /// Requests per second since the first recorded completion.
@@ -112,6 +162,8 @@ impl Metrics {
             variants: self.snapshot(),
             completed: self.completed(),
             sheds: self.sheds(),
+            errors: self.errors(),
+            per_worker: self.per_worker(),
             throughput_rps: self.throughput(),
         }
     }
@@ -162,5 +214,40 @@ mod tests {
         // sheds sit alongside the latency percentiles in one view
         assert!(snap.variants[0].p95_ms > snap.variants[0].p50_ms);
         assert_eq!(m.sheds(), 3);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn per_worker_counts_fold_into_snapshot() {
+        let m = Metrics::default();
+        m.record_for_worker("model_tw", 0.001, 2, 0);
+        m.record_for_worker("model_tw", 0.001, 2, 2);
+        m.record_for_worker("model_dense", 0.002, 1, 2);
+        let snap = m.full_snapshot();
+        assert_eq!(snap.per_worker, vec![1, 0, 2]);
+        assert_eq!(snap.per_worker.iter().sum::<u64>(), snap.completed);
+    }
+
+    #[test]
+    fn reserved_workers_show_as_zeros() {
+        let m = Metrics::default();
+        m.reserve_workers(4);
+        assert_eq!(m.per_worker(), vec![0, 0, 0, 0]);
+        m.record_for_worker("model_tw", 0.001, 1, 1);
+        assert_eq!(m.per_worker(), vec![0, 1, 0, 0]);
+        m.reserve_workers(2); // never shrinks
+        assert_eq!(m.per_worker().len(), 4);
+    }
+
+    #[test]
+    fn errors_surface_in_full_snapshot() {
+        let m = Metrics::default();
+        m.record("model_tw", 0.001, 1);
+        m.record_error();
+        m.record_error();
+        let snap = m.full_snapshot();
+        assert_eq!(snap.errors, 2);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(m.errors(), 2);
     }
 }

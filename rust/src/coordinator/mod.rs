@@ -1,7 +1,8 @@
-//! Layer-3 serving coordinator: request router, dynamic batcher,
-//! executable registry, metrics — the deployment wrapper that turns the
-//! AOT artifacts into a service (vLLM-router-shaped, scaled to this
-//! paper's inference-acceleration setting).
+//! Layer-3 serving coordinator: request router, dynamic batcher, worker
+//! pool, metrics — the deployment wrapper that turns an execution backend
+//! ([`crate::exec`]: PJRT artifacts or the native CPU kernels) into a
+//! service (vLLM-router-shaped, scaled to this paper's
+//! inference-acceleration setting).
 
 pub mod batcher;
 pub mod metrics;
@@ -9,8 +10,8 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{collect_batch, pack_batch, BatcherConfig};
+pub use batcher::{collect_batch, collect_batch_shared, pack_batch, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot, VariantStats};
 pub use request::{Request, Response};
 pub use router::{Policy, Router};
-pub use server::{start, ServerConfig, ServerHandle};
+pub use server::{start, start_with_backend, ServerConfig, ServerHandle};

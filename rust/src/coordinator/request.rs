@@ -20,6 +20,7 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// Per-request logits; empty when `error` is set.
     pub logits: Vec<f32>,
     /// Which executable served this request.
     pub variant: String,
@@ -27,12 +28,21 @@ pub struct Response {
     pub queue_secs: f64,
     /// Executable invocation time (shared by the whole batch), seconds.
     pub execute_secs: f64,
-    /// How many real requests shared the batch.
+    /// How many real requests shared the batch (the coalesced size, not
+    /// this request's position in it).
     pub batch_size: usize,
+    /// Set when the execute failed: the whole batch gets an explicit
+    /// error response instead of a silently dropped channel.
+    pub error: Option<String>,
 }
 
 impl Response {
     pub fn total_secs(&self) -> f64 {
         self.queue_secs + self.execute_secs
+    }
+
+    /// True when the request was served (no execute error).
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
     }
 }

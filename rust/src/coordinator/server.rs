@@ -1,22 +1,28 @@
-//! The serving loop: an executor thread owning the PJRT engine, fed by a
-//! request channel through the dynamic batcher and the router.
+//! The serving loop: a pool of worker threads sharing one request channel
+//! through the dynamic batcher and the router, each worker owning its own
+//! backend-loaded model.
 //!
-//! Python never appears here — artifacts were compiled once by `make
-//! artifacts`; this loop is allocation-light and lock-free on the hot path
-//! (one channel recv, one buffer staging, one execute).
+//! The hot path stays allocation-light and contention-light: one shared-
+//! channel batch collection (exactly one worker blocks in `recv` while the
+//! others execute — that lock *is* the pipeline), one buffer staging, one
+//! execute.  Which kernels run is the backend's business
+//! ([`crate::exec::Backend`]): the PJRT artifact engine, or the native
+//! in-process backend that packs weights once and runs the paper's
+//! TW/TVW/2:4 CPU kernels with no artifacts at all.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
-use super::batcher::{collect_batch, pack_batch, BatcherConfig};
+use super::batcher::{collect_batch_shared, pack_batch, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::router::{Policy, Router};
+use crate::anyhow;
 use crate::autotune::PlanCache;
 use crate::error::Result;
-use crate::runtime::Engine;
+use crate::exec::{Backend, ModelDims, PjrtBackend};
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -31,6 +37,9 @@ pub struct ServerConfig {
     /// startup; `Policy::Tuned` resolves its serving variant from it.
     /// An unreadable or stale cache degrades to no cache with a warning.
     pub plan_cache: Option<PathBuf>,
+    /// Worker threads sharing the request channel.  Each owns one model
+    /// instance loaded from the backend (clamped to >= 1).
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -41,6 +50,7 @@ impl Default for ServerConfig {
             variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
             max_queue: 0,
             plan_cache: None,
+            workers: 1,
         }
     }
 }
@@ -53,8 +63,10 @@ pub struct ServerHandle {
     pub plan_cache: Option<Arc<PlanCache>>,
     next_id: AtomicU64,
     queue_depth: Arc<AtomicUsize>,
-    join: Option<std::thread::JoinHandle<()>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
     max_queue: usize,
+    /// How many workers the pool runs.
+    pub workers: usize,
     pub seq: usize,
     pub d_model: usize,
     pub batch: usize,
@@ -83,7 +95,11 @@ impl ServerHandle {
     }
 
     /// Submit one sequence's activations; returns the response receiver.
-    pub fn submit(&self, activation: Vec<f32>, variant: Option<String>) -> mpsc::Receiver<Response> {
+    pub fn submit(
+        &self,
+        activation: Vec<f32>,
+        variant: Option<String>,
+    ) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -105,35 +121,47 @@ impl ServerHandle {
         Ok(rx.recv()?)
     }
 
-    /// Graceful shutdown: close the request channel and join the executor.
+    /// Graceful shutdown: close the request channel and join the workers.
     /// (Equivalent to dropping the handle; provided for explicitness.)
     pub fn shutdown(self) {}
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        // Closing tx ends collect_batch -> executor exits.
+        // Closing tx ends collect_batch on every worker -> pool drains.
         let (dead_tx, _) = mpsc::channel();
         self.tx = dead_tx;
-        if let Some(j) = self.join.take() {
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
 }
 
-/// Start the serving stack over an artifact directory.
-///
-/// The PJRT engine is not `Send` (it wraps `Rc` handles), so it is created
-/// *inside* the executor thread; startup results are handed back over a
-/// one-shot channel.
+/// Start the serving stack over an artifact directory (the PJRT backend —
+/// kept as the historical entry point; degrades at startup when the
+/// `pjrt` feature or the artifacts are missing).
 pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<ServerHandle> {
+    let backend = Arc::new(PjrtBackend::new(artifact_dir, &cfg.variants));
+    start_with_backend(backend, cfg)
+}
+
+/// Start the serving stack over any execution backend.
+///
+/// Spawns `cfg.workers` threads; each calls `backend.load()` from inside
+/// its own thread (models need not be `Send` — the PJRT engine wraps `Rc`
+/// handles) and reports startup over a one-shot channel.  Any worker
+/// failing to load tears the pool down and surfaces the first error.
+pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Result<ServerHandle> {
     let (tx, rx) = mpsc::channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
     let metrics = Arc::new(Metrics::default());
     let queue_depth = Arc::new(AtomicUsize::new(0));
-    let (init_tx, init_rx) = mpsc::channel::<Result<(usize, usize, usize, usize)>>();
+    let workers = cfg.workers.max(1);
+    metrics.reserve_workers(workers);
+    let (init_tx, init_rx) = mpsc::channel::<Result<ModelDims>>();
 
     // tuned plan cache: loaded once at startup; Policy::Tuned resolves
-    // against it before the executor thread spins up
+    // against it before the pool spins up
     let plan_cache: Option<Arc<PlanCache>> = cfg.plan_cache.as_ref().and_then(|path| {
         match PlanCache::load(path) {
             Ok(c) => Some(Arc::new(c)),
@@ -145,88 +173,268 @@ pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<ServerHandle> {
     });
     let policy = cfg.policy.clone().resolve(plan_cache.as_deref());
 
-    let metrics2 = metrics.clone();
-    let queue_depth2 = queue_depth.clone();
-    let batcher_cfg = cfg.batcher.clone();
-    let variants = cfg.variants.clone();
-    let dir = artifact_dir.to_path_buf();
-    let join = std::thread::Builder::new()
-        .name("tilewise-executor".into())
-        .spawn(move || {
-            let variant_refs: Vec<&str> = variants.iter().map(String::as_str).collect();
-            let engine = match Engine::load_only(&dir, &variant_refs) {
-                Ok(e) => e,
-                Err(e) => {
-                    let _ = init_tx.send(Err(e));
-                    return;
-                }
-            };
-            let (batch, n_classes) = match engine.model(&variants[0]) {
-                Ok(m) => (m.output_shape[0], m.output_shape[1]),
-                Err(e) => {
-                    let _ = init_tx.send(Err(e));
-                    return;
-                }
-            };
-            let (seq, d_model) = (engine.meta.seq, engine.meta.d_model);
-            let per_request_len = seq * d_model;
-            let _ = init_tx.send(Ok((batch, n_classes, seq, d_model)));
-            // never collect more requests than the executable batch holds —
-            // overflow requests would silently get no response
-            let mut batcher_cfg = batcher_cfg;
-            batcher_cfg.max_batch = batcher_cfg.max_batch.min(batch).max(1);
-            let mut router = Router::new(policy);
-            while let Some(batch_reqs) = collect_batch(&rx, &batcher_cfg) {
-                let depth = queue_depth2.load(Ordering::Relaxed).saturating_sub(batch_reqs.len());
-                let variant = router.route(&batch_reqs, depth);
-                let packed = pack_batch(&batch_reqs, batch, per_request_len);
-                let t0 = Instant::now();
-                let result = engine.run_named(&variant, &packed);
-                let exec_secs = t0.elapsed().as_secs_f64();
-                queue_depth2.fetch_sub(batch_reqs.len().min(batch), Ordering::Relaxed);
-                match result {
-                    Ok(logits) => {
-                        for (i, req) in batch_reqs.into_iter().enumerate().take(batch) {
-                            let queue_secs =
-                                (t0 - req.submitted).as_secs_f64().max(0.0);
-                            metrics2.record(&variant, queue_secs + exec_secs, i + 1);
-                            let _ = req.respond_to.send(Response {
-                                id: req.id,
-                                logits: logits[i * n_classes..(i + 1) * n_classes].to_vec(),
-                                variant: variant.clone(),
-                                queue_secs,
-                                execute_secs: exec_secs,
-                                batch_size: i + 1,
-                            });
+    let mut joins = Vec::with_capacity(workers);
+    for wid in 0..workers {
+        let rx = rx.clone();
+        let metrics2 = metrics.clone();
+        let queue_depth2 = queue_depth.clone();
+        let batcher_cfg = cfg.batcher.clone();
+        let backend = backend.clone();
+        let policy = policy.clone();
+        let init_tx = init_tx.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("tilewise-worker-{wid}"))
+                .spawn(move || {
+                    let mut model = match backend.load() {
+                        Ok(m) => m,
+                        Err(e) => {
+                            let _ = init_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    let dims = model.dims();
+                    let _ = init_tx.send(Ok(dims));
+                    let per_request_len = dims.per_request_len();
+                    let n_classes = dims.n_classes;
+                    // never collect more requests than the model batch
+                    // holds — overflow requests would get no response
+                    let mut batcher_cfg = batcher_cfg;
+                    batcher_cfg.max_batch = batcher_cfg.max_batch.min(dims.batch).max(1);
+                    // per-worker router: RoundRobin/Adaptive state is local
+                    // to each worker (resolved policies are deterministic)
+                    let mut router = Router::new(policy);
+                    while let Some(batch_reqs) = collect_batch_shared(&rx, &batcher_cfg) {
+                        // the true coalesced size every response reports
+                        let real = batch_reqs.len().min(dims.batch);
+                        let depth = queue_depth2
+                            .load(Ordering::Relaxed)
+                            .saturating_sub(batch_reqs.len());
+                        let variant = router.route(&batch_reqs, depth);
+                        let packed = pack_batch(&batch_reqs, dims.batch, per_request_len);
+                        let t0 = Instant::now();
+                        let result = model.run(&variant, &packed);
+                        let exec_secs = t0.elapsed().as_secs_f64();
+                        queue_depth2.fetch_sub(batch_reqs.len(), Ordering::Relaxed);
+                        match result {
+                            Ok(logits) => {
+                                for (i, req) in
+                                    batch_reqs.into_iter().enumerate().take(dims.batch)
+                                {
+                                    let queue_secs =
+                                        (t0 - req.submitted).as_secs_f64().max(0.0);
+                                    metrics2.record_for_worker(
+                                        &variant,
+                                        queue_secs + exec_secs,
+                                        real,
+                                        wid,
+                                    );
+                                    let _ = req.respond_to.send(Response {
+                                        id: req.id,
+                                        logits: logits[i * n_classes..(i + 1) * n_classes]
+                                            .to_vec(),
+                                        variant: variant.clone(),
+                                        queue_secs,
+                                        execute_secs: exec_secs,
+                                        batch_size: real,
+                                        error: None,
+                                    });
+                                }
+                            }
+                            Err(e) => {
+                                // failures are counted and reported, never
+                                // silently dropped
+                                metrics2.record_error();
+                                let msg = format!("execute {variant}: {e}");
+                                eprintln!("[server] worker {wid}: {msg}");
+                                for req in batch_reqs.into_iter().take(dims.batch) {
+                                    let queue_secs =
+                                        (t0 - req.submitted).as_secs_f64().max(0.0);
+                                    let _ = req.respond_to.send(Response {
+                                        id: req.id,
+                                        logits: Vec::new(),
+                                        variant: variant.clone(),
+                                        queue_secs,
+                                        execute_secs: exec_secs,
+                                        batch_size: real,
+                                        error: Some(msg.clone()),
+                                    });
+                                }
+                            }
                         }
                     }
-                    Err(e) => {
-                        eprintln!("[server] execute failed: {e:#}");
-                        // responses dropped: clients see a closed channel
-                    }
-                }
-            }
-        })?;
+                })?,
+        );
+    }
+    drop(init_tx);
 
-    let (batch, n_classes, seq, d_model) = init_rx.recv()??;
+    // wait for every worker's load result; fail fast on the first error
+    let mut dims: Option<ModelDims> = None;
+    let mut first_err: Option<crate::error::Error> = None;
+    for _ in 0..workers {
+        match init_rx.recv() {
+            Ok(Ok(d)) => dims = Some(d),
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err =
+                    first_err.or_else(|| Some(anyhow!("worker exited before reporting startup")))
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        drop(tx); // disconnect the channel so loaded workers exit
+        for j in joins {
+            let _ = j.join();
+        }
+        return Err(e);
+    }
+    let dims = dims.ok_or_else(|| anyhow!("no worker reported model dims"))?;
+
     Ok(ServerHandle {
         tx,
         metrics,
         plan_cache,
         next_id: AtomicU64::new(0),
         queue_depth,
-        join: Some(join),
+        joins,
         max_queue: cfg.max_queue,
-        seq,
-        d_model,
-        batch,
-        n_classes,
+        workers,
+        seq: dims.seq,
+        d_model: dims.d_model,
+        batch: dims.batch,
+        n_classes: dims.n_classes,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::{NativeBackend, NativeModelSpec};
+
+    fn native_backend() -> Arc<NativeBackend> {
+        Arc::new(NativeBackend::new(NativeModelSpec::default(), None).expect("pack native model"))
+    }
+
+    fn start_native(cfg: ServerConfig) -> ServerHandle {
+        start_with_backend(native_backend(), cfg).expect("native server start")
+    }
+
+    // ---- native-backend serving tests: run unconditionally in CI (no
+    // ---- artifacts, no `pjrt` feature needed)
+
+    #[test]
+    fn native_serve_roundtrip_all_variants() {
+        let handle = start_native(ServerConfig::default());
+        let len = handle.seq * handle.d_model;
+        let mut rng = crate::util::Rng::new(8);
+        for variant in ["model_dense", "model_tw", "model_tvw"] {
+            let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let resp = handle.infer(x, Some(variant.into())).unwrap();
+            assert!(resp.is_ok(), "{variant}: {:?}", resp.error);
+            assert_eq!(resp.variant, variant);
+            assert_eq!(resp.logits.len(), handle.n_classes);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(handle.metrics.completed(), 3);
+        assert_eq!(handle.metrics.errors(), 0);
+    }
+
+    #[test]
+    fn native_backpressure_sheds_over_limit() {
+        let cfg = ServerConfig { max_queue: 2, ..Default::default() };
+        let handle = start_native(cfg);
+        let len = handle.seq * handle.d_model;
+        let mut kept = Vec::new();
+        let mut shed = 0;
+        for _ in 0..64 {
+            match handle.try_submit(vec![0.1; len], None) {
+                Some(rx) => kept.push(rx),
+                None => shed += 1,
+            }
+        }
+        assert!(shed > 0, "expected some sheds with max_queue=2");
+        assert_eq!(handle.shed_count(), shed);
+        for rx in kept {
+            let _ = rx.recv();
+        }
+    }
+
+    #[test]
+    fn native_batching_coalesces_concurrent_requests() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(250),
+            },
+            ..Default::default()
+        };
+        let handle = start_native(cfg);
+        let len = handle.seq * handle.d_model;
+        let rxs: Vec<_> = (0..4).map(|_| handle.submit(vec![0.1; len], None)).collect();
+        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        // all four shared one invocation, and each response reports the
+        // true coalesced size (not its position index)
+        let max_batch_seen = resps.iter().map(|r| r.batch_size).max().unwrap();
+        assert_eq!(max_batch_seen, 4, "expected one coalesced batch of 4");
+        assert!(resps.iter().all(|r| r.batch_size == 4));
+    }
+
+    #[test]
+    fn native_worker_pool_serves_and_folds_worker_stats() {
+        let cfg = ServerConfig { workers: 4, ..Default::default() };
+        let handle = start_native(cfg);
+        assert_eq!(handle.workers, 4);
+        let len = handle.seq * handle.d_model;
+        let rxs: Vec<_> = (0..32).map(|_| handle.submit(vec![0.2; len], None)).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok());
+            assert_eq!(resp.logits.len(), handle.n_classes);
+        }
+        let snap = handle.metrics.full_snapshot();
+        assert_eq!(snap.completed, 32);
+        assert_eq!(snap.per_worker.iter().sum::<u64>(), 32);
+        // idle workers appear as explicit zeros, one slot per pool member
+        assert_eq!(snap.per_worker.len(), 4);
+    }
+
+    #[test]
+    fn execute_failure_sends_error_response_and_counts() {
+        let handle = start_native(ServerConfig::default());
+        let len = handle.seq * handle.d_model;
+        let resp = handle.infer(vec![0.0; len], Some("model_bogus".into())).unwrap();
+        assert!(!resp.is_ok());
+        assert!(resp.error.as_deref().unwrap().contains("model_bogus"));
+        assert!(resp.logits.is_empty());
+        assert_eq!(handle.metrics.errors(), 1);
+        assert_eq!(handle.metrics.completed(), 0);
+        // the server keeps serving after a failed batch
+        let ok = handle.infer(vec![0.0; len], Some("model_tw".into())).unwrap();
+        assert!(ok.is_ok());
+        assert_eq!(handle.metrics.full_snapshot().errors, 1);
+    }
+
+    /// Parity across backends: the native backend serves finite logits of
+    /// the advertised shape for every variant; the pjrt backend on the
+    /// same config degrades cleanly at startup when its artifacts (or the
+    /// `pjrt` feature) are missing, rather than panicking or hanging.
+    #[test]
+    fn native_and_pjrt_backends_parity_and_degradation() {
+        let handle = start_native(ServerConfig::default());
+        let len = handle.seq * handle.d_model;
+        let mut shapes = Vec::new();
+        for variant in ["model_dense", "model_tw", "model_tvw"] {
+            let resp = handle.infer(vec![0.3; len], Some(variant.into())).unwrap();
+            assert!(resp.logits.iter().all(|v| v.is_finite()), "{variant}");
+            shapes.push(resp.logits.len());
+        }
+        assert!(shapes.iter().all(|&s| s == handle.n_classes), "variants agree on shape");
+        let missing = Path::new("/no/such/artifact/dir");
+        assert!(start(missing, ServerConfig::default()).is_err());
+    }
+
+    // ---- artifact-gated tests: exercise the PJRT path when `make
+    // ---- artifacts` ran (and the `pjrt` feature supplies the engine)
 
     fn artifacts_dir() -> Option<std::path::PathBuf> {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -284,8 +492,13 @@ mod tests {
         let len = handle.seq * handle.d_model;
         let rxs: Vec<_> = (0..4).map(|_| handle.submit(vec![0.1; len], None)).collect();
         let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
-        // all four should have shared one executable invocation
+        // all four should have shared one executable invocation, and each
+        // response reports the true coalesced size
         let max_batch_seen = resps.iter().map(|r| r.batch_size).max().unwrap();
-        assert!(max_batch_seen >= 4, "batch {max_batch_seen}");
+        assert!(max_batch_seen >= 2, "batch {max_batch_seen}");
+        assert!(
+            resps.iter().filter(|r| r.batch_size == max_batch_seen).count() >= max_batch_seen,
+            "batch_size must be the coalesced size shared by the whole batch"
+        );
     }
 }

@@ -1,0 +1,87 @@
+//! Backend-agnostic execution layer: the seam between the serving
+//! coordinator and whatever actually runs a forward pass.
+//!
+//! The coordinator used to be hard-wired to the PJRT [`crate::runtime::Engine`],
+//! which is a stub unless the `pjrt` feature (and the external `xla` crate)
+//! is present — so the serving stack could never run without an artifacts
+//! directory.  This layer splits "how a batch is executed" from "how
+//! requests are batched and routed":
+//!
+//! - [`Backend`] — a factory the server holds by `Arc<dyn Backend>`; it is
+//!   `Send + Sync` and cheap to share across worker threads.
+//! - [`PreparedModel`] — one worker's loaded model instance.  Created by
+//!   [`Backend::load`] *inside* the worker thread (the PJRT engine wraps
+//!   `Rc` handles and is not `Send`), so it carries no `Send` bound and may
+//!   own per-thread scratch buffers for an allocation-free hot loop.
+//! - [`PjrtBackend`] — the original artifact path, adapting
+//!   [`crate::runtime::Engine`]; degrades exactly as before when the
+//!   feature or the artifacts are missing.
+//! - [`NativeBackend`] — in-process execution through the real CPU kernels
+//!   in [`crate::gemm`]: weights are pruned and packed once at load time
+//!   into [`crate::sparse::TwPlan`] / [`crate::sparse::TvwPlan`] /
+//!   [`crate::sparse::Vw24Plan`] condensed forms, per-layer
+//!   [`crate::gemm::TileConfig`]s are resolved from the autotune
+//!   [`crate::autotune::PlanCache`], and every request batch runs the
+//!   paper's TW/TVW/2:4 kernels for real — no artifacts, no Python, no
+//!   feature gate.
+//!
+//! See `docs/DESIGN.md` §5 for how the worker pool consumes this trait.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::{NativeBackend, NativeModelSpec};
+pub use pjrt::PjrtBackend;
+
+use crate::error::Result;
+
+/// Fixed batch geometry of a prepared model — the serving analogue of the
+/// AOT `meta.json` header (shapes are static; the batcher pads to `batch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    /// Fixed executable batch size (requests per invocation, padded).
+    pub batch: usize,
+    /// Sequence length of one request's activations.
+    pub seq: usize,
+    /// Model width; one request carries `seq * d_model` floats.
+    pub d_model: usize,
+    /// Logits per request.
+    pub n_classes: usize,
+}
+
+impl ModelDims {
+    /// Floats one request contributes to the packed batch tensor.
+    pub fn per_request_len(&self) -> usize {
+        self.seq * self.d_model
+    }
+}
+
+/// A source of executable models.  The server shares one backend across
+/// its worker pool; each worker calls [`Backend::load`] once, from its own
+/// thread, and owns the returned [`PreparedModel`] for its lifetime.
+pub trait Backend: Send + Sync {
+    /// Short label for logs and the serve CLI ("pjrt" / "native").
+    fn name(&self) -> &'static str;
+
+    /// Prepare one model instance for the calling thread.  Heavyweight
+    /// one-time work (weight packing, artifact compilation) belongs in the
+    /// backend's constructor so N workers don't repeat it; `load` should
+    /// only materialise per-thread state.
+    fn load(&self) -> Result<Box<dyn PreparedModel>>;
+}
+
+/// One worker's loaded model: executes padded batches by variant name.
+/// Not `Send` by design — see [`Backend::load`].
+pub trait PreparedModel {
+    fn dims(&self) -> ModelDims;
+
+    /// Variant names this model can serve ("model_dense" / "model_tw" /
+    /// "model_tvw" / ...), matching the router's vocabulary.
+    fn variants(&self) -> Vec<String>;
+
+    /// Execute one padded batch: `packed` is the flat
+    /// `(batch, seq * d_model)` tensor from `coordinator::pack_batch`;
+    /// the result is the flat `(batch, n_classes)` logits.  `&mut self`
+    /// lets implementations reuse scratch buffers across invocations.
+    fn run(&mut self, variant: &str, packed: &[f32]) -> Result<Vec<f32>>;
+}

@@ -1,0 +1,529 @@
+//! Native in-process backend: the serving path that runs the paper's
+//! kernels for real, with zero external dependencies.
+//!
+//! At construction the backend builds a small residual-MLP classifier
+//! (transformer-encoder shaped: per-block `d_model -> d_ff -> d_model`
+//! GEMMs plus a dense head, the FFN pair that dominates BERT FLOPs), then
+//! packs every prunable layer **once** into each serving variant's
+//! kernel-ready form:
+//!
+//! - `model_dense` — raw row-major weights, run by `gemm::matmul_tiled_into`
+//! - `model_tw`    — TW-pruned, `sparse::TwPlan` condensed tiles, run by
+//!   the fused-CTO `gemm::tw_matmul_into_with`
+//! - `model_tvw`   — TVW-pruned, `sparse::TvwPlan` (CTO + 2:4 metadata),
+//!   run by `gemm::tvw_matmul_into_with`
+//! - `model_vw24`  — plain 2:4 along K, `sparse::Vw24Plan`, run by
+//!   `gemm::vw24_matmul_into_with`
+//!
+//! Per-GEMM [`TileConfig`]s are resolved from the autotune [`PlanCache`]
+//! when one is supplied (the `(M, K, N, pattern, sparsity, threads=1)` key
+//! the tuner writes), falling back to each family's historical default.
+//! The packed plans live behind an `Arc`, so a pool of N workers shares
+//! one copy of the weights; only the per-worker scratch matrices are
+//! duplicated, and the request hot loop performs no allocation beyond the
+//! response vector.
+
+use std::sync::Arc;
+
+use super::{Backend, ModelDims, PreparedModel};
+use crate::autotune::{PatternFamily, PlanCache};
+use crate::error::Result;
+use crate::gemm::{
+    matmul_tiled_into, tvw_matmul_into_with, tw_matmul_into_with, vw24_matmul_into_with,
+    TileConfig,
+};
+use crate::gpusim::GemmShape;
+use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use crate::{anyhow, bail, ensure};
+
+/// Shape + pruning recipe of the native model.  Weights are generated
+/// deterministically from `seed`, so every backend constructed from the
+/// same spec serves identical logits.
+#[derive(Clone, Debug)]
+pub struct NativeModelSpec {
+    pub seq: usize,
+    pub d_model: usize,
+    /// FFN hidden width (the `d_model -> d_ff -> d_model` block pair).
+    pub d_ff: usize,
+    pub n_classes: usize,
+    /// Residual FFN blocks stacked before the classifier head.
+    pub n_layers: usize,
+    /// Fixed serving batch (requests per invocation, padded).
+    pub batch: usize,
+    /// Target sparsity for the TW / TVW variants (TVW floors at 0.5).
+    pub sparsity: f64,
+    /// TW tile granularity G.
+    pub g: usize,
+    pub seed: u64,
+    /// Which variants to pack (packing TW/TVW plans for large layers is
+    /// the expensive part of construction; benches prune this list).
+    pub variants: Vec<String>,
+}
+
+pub const NATIVE_VARIANTS: [&str; 4] = ["model_dense", "model_tw", "model_tvw", "model_vw24"];
+
+impl Default for NativeModelSpec {
+    /// A deliberately small "BERT-nano" so the native serving tests run in
+    /// milliseconds: 2 blocks of 64 -> 128 -> 64 over 16-token requests.
+    fn default() -> Self {
+        NativeModelSpec {
+            seq: 16,
+            d_model: 64,
+            d_ff: 128,
+            n_classes: 8,
+            n_layers: 2,
+            batch: 8,
+            sparsity: 0.75,
+            g: 16,
+            seed: 42,
+            variants: NATIVE_VARIANTS.iter().map(|v| v.to_string()).collect(),
+        }
+    }
+}
+
+impl NativeModelSpec {
+    /// BERT-base FFN geometry (the paper's dominant GEMMs), with the
+    /// widths taken from the `models` zoo so the bench and the simulator
+    /// agree on what "BERT-base shapes" means.  `seq` stays a parameter:
+    /// serving latency is linear in tokens and benches trim it.
+    pub fn bert_base(batch: usize, seq: usize) -> NativeModelSpec {
+        let bert = crate::models::bert_base(batch, seq);
+        let ffn1 = bert
+            .layers
+            .iter()
+            .find(|l| l.name == "ffn1")
+            .expect("bert_base workload has an ffn1 layer");
+        NativeModelSpec {
+            seq,
+            d_model: ffn1.shape.k,
+            d_ff: ffn1.shape.n,
+            n_classes: 2,
+            n_layers: 1,
+            batch,
+            sparsity: 0.75,
+            g: 64,
+            seed: 42,
+            ..NativeModelSpec::default()
+        }
+    }
+
+    /// Restrict which variants get packed.
+    pub fn with_variants(mut self, variants: &[&str]) -> NativeModelSpec {
+        self.variants = variants.iter().map(|v| v.to_string()).collect();
+        self
+    }
+}
+
+/// One packed GEMM operand plus its resolved cache-blocking.
+struct PackedGemm {
+    pack: Pack,
+    cfg: TileConfig,
+}
+
+enum Pack {
+    Dense(Matrix),
+    Tw(TwPlan),
+    Tvw(TvwPlan),
+    Vw24(Vw24Plan),
+}
+
+/// One residual block: `up` (d_model -> d_ff), `down` (d_ff -> d_model).
+struct Block {
+    up: PackedGemm,
+    down: PackedGemm,
+}
+
+/// One serving variant's fully packed network.
+struct VariantNet {
+    name: String,
+    blocks: Vec<Block>,
+    /// Classifier head (d_model -> n_classes), dense in every variant —
+    /// the paper's "keep the small accuracy-critical layers dense" rule.
+    head: PackedGemm,
+}
+
+/// The shared, immutable packed model (weights + plans + tile configs).
+pub struct NativeBackend {
+    dims: ModelDims,
+    nets: Arc<Vec<VariantNet>>,
+}
+
+fn tile_for(
+    cache: Option<&PlanCache>,
+    shape: GemmShape,
+    family: PatternFamily,
+    sparsity: f64,
+    fallback: TileConfig,
+) -> TileConfig {
+    // serving-time lookup: exact on (K, N, pattern), nearest on the rest —
+    // the tuner keys DENSE at sparsity 0, caps M, and records its own
+    // thread budget, so an exact-key probe would almost never hit
+    cache
+        .and_then(|c| c.lookup_tile_config(shape, family.label(), sparsity))
+        .unwrap_or(fallback)
+}
+
+impl NativeBackend {
+    /// Build and pack the model.  `plan_cache` is the autotuner's output
+    /// (`tilewise autotune --out plans.json`); absent, every kernel runs
+    /// at its historical default tile config.
+    pub fn new(spec: NativeModelSpec, plan_cache: Option<Arc<PlanCache>>) -> Result<NativeBackend> {
+        ensure!(
+            spec.seq > 0 && spec.d_model > 0 && spec.d_ff > 0 && spec.n_classes > 0,
+            "native model spec has a zero dimension: {spec:?}"
+        );
+        ensure!(spec.n_layers > 0 && spec.batch > 0, "native model needs n_layers/batch >= 1");
+        ensure!(!spec.variants.is_empty(), "native model spec packs no variants");
+        let wants_24 = spec
+            .variants
+            .iter()
+            .any(|v| v == "model_tvw" || v == "model_vw24");
+        ensure!(
+            !wants_24 || (spec.d_model % 4 == 0 && spec.d_ff % 4 == 0),
+            "2:4 variants need d_model and d_ff to be multiples of 4 (got {} / {})",
+            spec.d_model,
+            spec.d_ff
+        );
+
+        // Base weights, shared by every variant before pruning.
+        let mut rng = Rng::new(spec.seed);
+        let base: Vec<(Matrix, Matrix)> = (0..spec.n_layers)
+            .map(|_| {
+                (
+                    Matrix::randn(spec.d_model, spec.d_ff, &mut rng),
+                    Matrix::randn(spec.d_ff, spec.d_model, &mut rng),
+                )
+            })
+            .collect();
+        let head_w = Matrix::randn(spec.d_model, spec.n_classes, &mut rng);
+
+        let tokens = spec.batch * spec.seq;
+        let up_shape = GemmShape::new(tokens, spec.d_model, spec.d_ff);
+        let down_shape = GemmShape::new(tokens, spec.d_ff, spec.d_model);
+        let head_shape = GemmShape::new(spec.batch, spec.d_model, spec.n_classes);
+        let cache = plan_cache.as_deref();
+
+        let mut nets = Vec::with_capacity(spec.variants.len());
+        for name in &spec.variants {
+            let pack = |w: &Matrix, shape: GemmShape| -> Result<PackedGemm> {
+                Ok(match name.as_str() {
+                    "model_dense" => PackedGemm {
+                        pack: Pack::Dense(w.clone()),
+                        cfg: tile_for(
+                            cache,
+                            shape,
+                            PatternFamily::Dense,
+                            spec.sparsity,
+                            TileConfig::dense_default(),
+                        ),
+                    },
+                    "model_tw" => {
+                        let tw = prune_tw(w, spec.sparsity, spec.g, None);
+                        PackedGemm {
+                            pack: Pack::Tw(TwPlan::encode(w, &tw)),
+                            cfg: tile_for(
+                                cache,
+                                shape,
+                                PatternFamily::Tw,
+                                spec.sparsity,
+                                TileConfig::tw_default(),
+                            ),
+                        }
+                    }
+                    "model_tvw" => {
+                        let s = spec.sparsity.max(0.5);
+                        let (tw, mask) = prune_tvw(w, s, spec.g);
+                        PackedGemm {
+                            pack: Pack::Tvw(TvwPlan::encode(w, &tw, &mask)),
+                            cfg: tile_for(
+                                cache,
+                                shape,
+                                PatternFamily::Tvw,
+                                s,
+                                TileConfig::tvw_default(),
+                            ),
+                        }
+                    }
+                    "model_vw24" => {
+                        let mask = prune_vw(w, 0.5, 4);
+                        let plan = Vw24Plan::encode(w, &mask)
+                            .map_err(|e| anyhow!("packing 2:4 plan: {e}"))?;
+                        PackedGemm {
+                            pack: Pack::Vw24(plan),
+                            cfg: tile_for(
+                                cache,
+                                shape,
+                                PatternFamily::Vw24,
+                                0.5,
+                                TileConfig::vw_default(),
+                            ),
+                        }
+                    }
+                    other => {
+                        bail!("unknown native variant {other:?} (expected {NATIVE_VARIANTS:?})")
+                    }
+                })
+            };
+            let mut blocks = Vec::with_capacity(spec.n_layers);
+            for (w1, w2) in &base {
+                blocks.push(Block { up: pack(w1, up_shape)?, down: pack(w2, down_shape)? });
+            }
+            // the head stays dense regardless of variant
+            let head = PackedGemm {
+                pack: Pack::Dense(head_w.clone()),
+                cfg: tile_for(
+                    cache,
+                    head_shape,
+                    PatternFamily::Dense,
+                    spec.sparsity,
+                    TileConfig::dense_default(),
+                ),
+            };
+            nets.push(VariantNet { name: name.clone(), blocks, head });
+        }
+
+        Ok(NativeBackend {
+            dims: ModelDims {
+                batch: spec.batch,
+                seq: spec.seq,
+                d_model: spec.d_model,
+                n_classes: spec.n_classes,
+            },
+            nets: Arc::new(nets),
+        })
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self) -> Result<Box<dyn PreparedModel>> {
+        let tokens = self.dims.batch * self.dims.seq;
+        let (d_model, d_ff) = {
+            // every net shares the base geometry; read it off the scratch
+            // requirements of the first block (head-only nets have d_ff 0)
+            let d_ff = self.nets.first().and_then(|n| n.blocks.first()).map_or(0, |b| {
+                match &b.up.pack {
+                    Pack::Dense(w) => w.cols,
+                    Pack::Tw(p) => p.n,
+                    Pack::Tvw(p) => p.n,
+                    Pack::Vw24(p) => p.n,
+                }
+            });
+            (self.dims.d_model, d_ff)
+        };
+        Ok(Box::new(NativeModel {
+            dims: self.dims,
+            nets: self.nets.clone(),
+            x: Matrix::zeros(tokens, d_model),
+            h: Matrix::zeros(tokens, d_ff.max(1)),
+            t: Matrix::zeros(tokens, d_model),
+            pooled: Matrix::zeros(self.dims.batch, d_model),
+            logits: Matrix::zeros(self.dims.batch, self.dims.n_classes),
+        }))
+    }
+}
+
+/// Per-worker model instance: shared packed weights + private scratch.
+struct NativeModel {
+    dims: ModelDims,
+    nets: Arc<Vec<VariantNet>>,
+    x: Matrix,
+    h: Matrix,
+    t: Matrix,
+    pooled: Matrix,
+    logits: Matrix,
+}
+
+/// Dispatch one packed GEMM into `c` (fully overwritten).
+fn gemm_into(a: &Matrix, g: &PackedGemm, c: &mut Matrix) {
+    match &g.pack {
+        Pack::Dense(w) => matmul_tiled_into(a, w, c, &g.cfg),
+        Pack::Tw(p) => {
+            // the TW scatter only writes kept output columns; clear the rest
+            c.data.fill(0.0);
+            tw_matmul_into_with(a, p, c, &g.cfg);
+        }
+        Pack::Tvw(p) => tvw_matmul_into_with(a, p, c, &g.cfg),
+        Pack::Vw24(p) => vw24_matmul_into_with(a, p, c, &g.cfg),
+    }
+}
+
+impl PreparedModel for NativeModel {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.nets.iter().map(|n| n.name.clone()).collect()
+    }
+
+    fn run(&mut self, variant: &str, packed: &[f32]) -> Result<Vec<f32>> {
+        let nets = self.nets.clone();
+        let net = nets
+            .iter()
+            .find(|n| n.name == variant)
+            .ok_or_else(|| anyhow!("variant {variant:?} not packed in the native backend"))?;
+        let want = self.dims.batch * self.dims.per_request_len();
+        ensure!(
+            packed.len() == want,
+            "packed batch has {} floats, native model expects {want}",
+            packed.len()
+        );
+        self.x.data.copy_from_slice(packed);
+        for block in &net.blocks {
+            gemm_into(&self.x, &block.up, &mut self.h);
+            for v in &mut self.h.data {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            gemm_into(&self.h, &block.down, &mut self.t);
+            // residual keeps activations O(1) through the stack
+            for (xv, tv) in self.x.data.iter_mut().zip(&self.t.data) {
+                *xv += tv;
+            }
+        }
+        // mean-pool each request's seq tokens, then the dense head
+        let (batch, seq) = (self.dims.batch, self.dims.seq);
+        let inv = 1.0 / seq as f32;
+        for b in 0..batch {
+            let dst = self.pooled.row_mut(b);
+            dst.fill(0.0);
+            for s_i in 0..seq {
+                for (dv, sv) in dst.iter_mut().zip(self.x.row(b * seq + s_i)) {
+                    *dv += sv;
+                }
+            }
+            for dv in dst.iter_mut() {
+                *dv *= inv;
+            }
+        }
+        gemm_into(&self.pooled, &net.head, &mut self.logits);
+        Ok(self.logits.data.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{PlanKey, TunedEntry};
+
+    fn tiny_spec() -> NativeModelSpec {
+        NativeModelSpec {
+            seq: 4,
+            d_model: 16,
+            d_ff: 32,
+            n_classes: 4,
+            batch: 2,
+            g: 8,
+            ..NativeModelSpec::default()
+        }
+    }
+
+    #[test]
+    fn all_variants_run_and_are_finite() {
+        let backend = NativeBackend::new(tiny_spec(), None).unwrap();
+        let mut model = backend.load().unwrap();
+        let dims = model.dims();
+        let packed = vec![0.25f32; dims.batch * dims.per_request_len()];
+        for variant in NATIVE_VARIANTS {
+            let logits = model.run(variant, &packed).unwrap();
+            assert_eq!(logits.len(), dims.batch * dims.n_classes, "{variant}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{variant}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_backend_instances() {
+        let a = NativeBackend::new(tiny_spec(), None).unwrap();
+        let b = NativeBackend::new(tiny_spec(), None).unwrap();
+        let mut ma = a.load().unwrap();
+        let mut mb = b.load().unwrap();
+        let dims = ma.dims();
+        let packed: Vec<f32> = (0..dims.batch * dims.per_request_len())
+            .map(|i| (i % 7) as f32 * 0.1 - 0.3)
+            .collect();
+        for variant in ["model_dense", "model_tw", "model_tvw"] {
+            assert_eq!(ma.run(variant, &packed).unwrap(), mb.run(variant, &packed).unwrap());
+        }
+    }
+
+    #[test]
+    fn sparse_variants_diverge_from_dense() {
+        // pruning must actually change the computation
+        let backend = NativeBackend::new(tiny_spec(), None).unwrap();
+        let mut model = backend.load().unwrap();
+        let dims = model.dims();
+        let packed: Vec<f32> = (0..dims.batch * dims.per_request_len())
+            .map(|i| ((i * 13 % 11) as f32 - 5.0) * 0.1)
+            .collect();
+        let dense = model.run("model_dense", &packed).unwrap();
+        let tw = model.run("model_tw", &packed).unwrap();
+        assert!(dense.iter().zip(&tw).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn unknown_variant_is_an_error() {
+        let backend = NativeBackend::new(tiny_spec(), None).unwrap();
+        let mut model = backend.load().unwrap();
+        let dims = model.dims();
+        let packed = vec![0.0f32; dims.batch * dims.per_request_len()];
+        assert!(model.run("model_bogus", &packed).is_err());
+        assert!(model.run("model_dense", &packed[1..]).is_err());
+    }
+
+    #[test]
+    fn plan_cache_overrides_tile_config() {
+        // a cache entry for the up-GEMM shape must be resolved; wrong tile
+        // configs cannot change the numerics, so check via tile_config()
+        let spec = tiny_spec();
+        let tokens = spec.batch * spec.seq;
+        let shape = GemmShape::new(tokens, spec.d_model, spec.d_ff);
+        let mut cache = PlanCache::new();
+        cache.insert(TunedEntry {
+            key: PlanKey::new(shape, "TW", spec.sparsity, 1),
+            variant: "tw-fused".into(),
+            bm: 7,
+            bk: 64,
+            g: 8,
+            threads: 1,
+            measured_us: 1.0,
+            model_us: 1.0,
+            default_us: 2.0,
+        });
+        assert_eq!(
+            cache.tile_config(shape, "TW", spec.sparsity, 1),
+            Some(TileConfig::new(7, 64))
+        );
+        let cache = Arc::new(cache);
+        let with = NativeBackend::new(spec.clone(), Some(cache)).unwrap();
+        let without = NativeBackend::new(spec, None).unwrap();
+        let mut ma = with.load().unwrap();
+        let mut mb = without.load().unwrap();
+        let dims = ma.dims();
+        let packed = vec![0.5f32; dims.batch * dims.per_request_len()];
+        // tile config is perf-only: tuned and default execution agree
+        let a = ma.run("model_tw", &packed).unwrap();
+        let b = mb.run("model_tw", &packed).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bert_base_spec_matches_model_zoo() {
+        let spec = NativeModelSpec::bert_base(4, 8);
+        assert_eq!(spec.d_model, 768);
+        assert_eq!(spec.d_ff, 3072);
+        assert_eq!(spec.batch, 4);
+    }
+}

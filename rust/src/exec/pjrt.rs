@@ -1,0 +1,87 @@
+//! PJRT backend: adapts the AOT-artifact [`crate::runtime::Engine`] to the
+//! [`Backend`] trait.  The engine is created inside [`Backend::load`] —
+//! i.e. inside each worker thread — because PJRT handles wrap `Rc` and are
+//! not `Send`.  Without the `pjrt` feature the engine is the std-only stub
+//! whose `load_only` always fails, so a server started on this backend
+//! degrades at startup exactly as the pre-`exec` code did.
+
+use std::path::{Path, PathBuf};
+
+use super::{Backend, ModelDims, PreparedModel};
+use crate::ensure;
+use crate::error::Result;
+use crate::runtime::Engine;
+
+/// Artifact directory + the executable names to load per worker.
+pub struct PjrtBackend {
+    dir: PathBuf,
+    variants: Vec<String>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: &Path, variants: &[String]) -> PjrtBackend {
+        PjrtBackend { dir: artifact_dir.to_path_buf(), variants: variants.to_vec() }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&self) -> Result<Box<dyn PreparedModel>> {
+        ensure!(!self.variants.is_empty(), "pjrt backend needs at least one variant to load");
+        let refs: Vec<&str> = self.variants.iter().map(String::as_str).collect();
+        let engine = Engine::load_only(&self.dir, &refs)?;
+        let m = engine.model(&self.variants[0])?;
+        ensure!(
+            m.output_shape.len() >= 2,
+            "executable {} output shape {:?} is not (batch, classes)",
+            self.variants[0],
+            m.output_shape
+        );
+        let dims = ModelDims {
+            batch: m.output_shape[0],
+            n_classes: m.output_shape[1],
+            seq: engine.meta.seq,
+            d_model: engine.meta.d_model,
+        };
+        Ok(Box::new(PjrtModel { engine, dims, variants: self.variants.clone() }))
+    }
+}
+
+struct PjrtModel {
+    engine: Engine,
+    dims: ModelDims,
+    variants: Vec<String>,
+}
+
+impl PreparedModel for PjrtModel {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.variants.clone()
+    }
+
+    fn run(&mut self, variant: &str, packed: &[f32]) -> Result<Vec<f32>> {
+        self.engine.run_named(variant, packed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Without the `pjrt` feature (or without artifacts) the backend must
+    /// fail cleanly at load — the stub degradation path the serving tests
+    /// rely on.
+    #[test]
+    fn missing_artifacts_fail_at_load() {
+        let backend =
+            PjrtBackend::new(Path::new("/no/such/artifacts"), &["model_dense".to_string()]);
+        assert_eq!(backend.name(), "pjrt");
+        assert!(backend.load().is_err());
+    }
+}

@@ -16,9 +16,19 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// the inner j-loop a contiguous FMA stream the compiler vectorizes.
 /// Block extents come from `cfg` (the autotuner's dense search axes).
 pub fn matmul_tiled(a: &Matrix, b: &Matrix, cfg: &TileConfig) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_tiled_into(a, b, &mut c, cfg);
+    c
+}
+
+/// In-place blocked GEMM: `c` is fully overwritten (zeroed, then
+/// accumulated into).  The serving hot loop reuses the output allocation.
+pub fn matmul_tiled_into(a: &Matrix, b: &Matrix, c: &mut Matrix, cfg: &TileConfig) {
     assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
+    c.data.fill(0.0);
     let bm = cfg.bm();
     let bk = cfg.bk();
     for i0 in (0..m).step_by(bm) {
@@ -50,7 +60,6 @@ pub fn matmul_tiled(a: &Matrix, b: &Matrix, cfg: &TileConfig) -> Matrix {
             }
         }
     }
-    c
 }
 
 /// Textbook triple loop (correctness oracle).
@@ -143,6 +152,20 @@ mod tests {
             let got = matmul_tiled(&a, &b, &TileConfig::new(bm, bk));
             assert!(got.max_abs_diff(&want) < 1e-3, "bm={bm} bk={bk}");
         }
+    }
+
+    #[test]
+    fn into_variant_fully_overwrites() {
+        let mut rng = Rng::new(74);
+        let a = Matrix::randn(9, 12, &mut rng);
+        let b = Matrix::randn(12, 7, &mut rng);
+        let want = matmul_naive(&a, &b);
+        let mut c = Matrix::zeros(9, 7);
+        for v in &mut c.data {
+            *v = 1e9; // stale output must not leak through
+        }
+        matmul_tiled_into(&a, &b, &mut c, &TileConfig::new(4, 5));
+        assert!(c.max_abs_diff(&want) < 1e-3);
     }
 
     #[test]

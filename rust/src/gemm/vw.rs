@@ -25,11 +25,22 @@ pub fn vw24_matmul(a: &Matrix, plan: &Vw24Plan) -> Matrix {
 /// across the whole row block before moving on (B-operand L1/L2 reuse);
 /// `bm = 1` reproduces the historical row-at-a-time order exactly.
 pub fn vw24_matmul_with(a: &Matrix, plan: &Vw24Plan, cfg: &TileConfig) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, plan.n);
+    vw24_matmul_into_with(a, plan, &mut c, cfg);
+    c
+}
+
+/// In-place 2:4 kernel: `c` is fully overwritten (zeroed, then accumulated
+/// group by group).  The serving hot loop reuses the output allocation —
+/// the same idiom as [`crate::gemm::tw_matmul_into_with`].
+pub fn vw24_matmul_into_with(a: &Matrix, plan: &Vw24Plan, c: &mut Matrix, cfg: &TileConfig) {
     assert_eq!(a.cols, plan.k);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
     let (m, n) = (a.rows, plan.n);
     let groups = plan.k / 4;
     let bm = cfg.bm();
-    let mut c = Matrix::zeros(m, n);
+    c.data.fill(0.0);
     for i0 in (0..m).step_by(bm) {
         let i1 = (i0 + bm).min(m);
         for g in 0..groups {
@@ -51,7 +62,6 @@ pub fn vw24_matmul_with(a: &Matrix, plan: &Vw24Plan, cfg: &TileConfig) -> Matrix
             }
         }
     }
-    c
 }
 
 /// TVW fused kernel at the historical tile-outer blocking (one pass over
@@ -69,10 +79,21 @@ pub fn tvw_matmul(a: &Matrix, plan: &TvwPlan) -> Matrix {
 /// columns, so block order cannot change any output element's value).
 /// `bm >= m` reproduces the historical tile-outer single pass.
 pub fn tvw_matmul_with(a: &Matrix, plan: &TvwPlan, cfg: &TileConfig) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, plan.n);
+    tvw_matmul_into_with(a, plan, &mut c, cfg);
+    c
+}
+
+/// In-place TVW fused kernel: `c` is fully overwritten (zeroed, then
+/// tile-accumulated).  Scratch (`a_gather`, `c_tile`) stays internal and
+/// small; the large output allocation is the caller's to reuse.
+pub fn tvw_matmul_into_with(a: &Matrix, plan: &TvwPlan, c: &mut Matrix, cfg: &TileConfig) {
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
     let m = a.rows;
     let khalf = plan.kmax / 2;
     let bm = cfg.bm();
-    let mut c = Matrix::zeros(m, plan.n);
+    c.data.fill(0.0);
     let mut a_gather = vec![0.0f32; plan.kmax];
     // §Perf: accumulate into a compact c_tile and scatter once per row —
     // the inner loop then writes a contiguous stream the compiler can
@@ -128,7 +149,6 @@ pub fn tvw_matmul_with(a: &Matrix, plan: &TvwPlan, cfg: &TileConfig) -> Matrix {
             }
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -179,6 +199,31 @@ mod tests {
             assert!(tvw_matmul_with(&a, &tvplan, &cfg).max_abs_diff(&want_tvw) < 1e-4, "tvw bm={bm}");
             assert!(vw24_matmul_with(&a, &vplan, &cfg).max_abs_diff(&want_vw) < 1e-4, "vw bm={bm}");
         }
+    }
+
+    #[test]
+    fn into_variants_fully_overwrite() {
+        let mut rng = Rng::new(94);
+        let a = Matrix::randn(13, 64, &mut rng);
+        let w = Matrix::randn(64, 48, &mut rng);
+        let (tw, tvmask) = prune_tvw(&w, 0.75, 16);
+        let tvplan = TvwPlan::encode(&w, &tw, &tvmask);
+        let mask24 = prune_vw(&w, 0.5, 4);
+        let vplan = Vw24Plan::encode(&w, &mask24).unwrap();
+        let cfg = TileConfig::new(8, 64);
+        let want_tvw = tvw_matmul_with(&a, &tvplan, &cfg);
+        let want_vw = vw24_matmul_with(&a, &vplan, &cfg);
+        let mut c = Matrix::zeros(13, 48);
+        for v in &mut c.data {
+            *v = 1e9; // stale output must not leak through
+        }
+        tvw_matmul_into_with(&a, &tvplan, &mut c, &cfg);
+        assert!(c.max_abs_diff(&want_tvw) < 1e-4);
+        for v in &mut c.data {
+            *v = -1e9;
+        }
+        vw24_matmul_into_with(&a, &vplan, &mut c, &cfg);
+        assert!(c.max_abs_diff(&want_vw) < 1e-4);
     }
 
     #[test]

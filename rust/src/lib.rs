@@ -19,8 +19,11 @@
 //! - [`accuracy`] — trainable proxy + calibrated surrogate accuracy models
 //! - [`runtime`] — PJRT engine: load HLO-text artifacts, execute
 //!   (stubbed unless the `pjrt` feature supplies the `xla` crate)
-//! - [`coordinator`] — serving layer: router, dynamic batcher, metrics,
-//!   tuned-plan routing
+//! - [`exec`] — backend-agnostic execution layer: the `Backend` /
+//!   `PreparedModel` seam, with the PJRT adapter and the native backend
+//!   that packs weights into CTO/2:4 plans and runs the CPU kernels
+//! - [`coordinator`] — serving layer: router, dynamic batcher, worker
+//!   pool, metrics, tuned-plan routing
 //! - [`figures`] — regeneration harnesses for every paper figure
 //! - [`error`] — in-tree `anyhow`-subset error type (offline registry)
 
@@ -28,6 +31,7 @@ pub mod accuracy;
 pub mod autotune;
 pub mod coordinator;
 pub mod error;
+pub mod exec;
 pub mod figures;
 pub mod gemm;
 pub mod gpusim;

@@ -10,9 +10,11 @@
 //!   simulate          one-off gpusim query (shape x pattern x sparsity)
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
-use tilewise::autotune::{MeasureOpts, PatternFamily, Tuner, TunerOpts};
-use tilewise::coordinator::{start, BatcherConfig, Policy, ServerConfig};
+use tilewise::autotune::{MeasureOpts, PatternFamily, PlanCache, Tuner, TunerOpts};
+use tilewise::coordinator::{start, start_with_backend, BatcherConfig, Policy, ServerConfig};
+use tilewise::exec::{NativeBackend, NativeModelSpec};
 use tilewise::figures::{fig10, fig6, fig7, fig8, fig9, headline};
 use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
 use tilewise::models::{self, ModelWorkload};
@@ -35,8 +37,8 @@ fn main() {
                 "usage: tilewise <command>\n\
                  \n\
                  commands:\n\
-                 \x20 serve [--artifacts DIR] [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
-                 \x20       [--plan-cache FILE] [--model NAME]\n\
+                 \x20 serve [--backend pjrt|native] [--workers N] [--artifacts DIR] [--requests N] [--rate RPS]\n\
+                 \x20       [--policy dense|tw|tvw|rr|adaptive|tuned] [--plan-cache FILE] [--model NAME]\n\
                  \x20 autotune [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--out FILE]\n\
                  \x20          [--threads T] [--m-cap M] [--budget-ms MS] [--quick]\n\
                  \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
@@ -135,6 +137,8 @@ fn flag(args: &[String], name: &str) -> Option<String> {
 
 fn cmd_serve(args: &[String]) -> i32 {
     let dir = PathBuf::from(flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+    let backend_name = flag(args, "--backend").unwrap_or_else(|| "pjrt".into());
+    let workers: usize = flag(args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(1);
     let requests: usize = flag(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
     let rate: f64 = flag(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(50.0);
     let plan_cache = flag(args, "--plan-cache").map(PathBuf::from);
@@ -155,16 +159,62 @@ fn cmd_serve(args: &[String]) -> i32 {
             model: flag(args, "--model").unwrap_or_else(|| "bert".into()),
             fallback: "model_dense".into(),
         },
+        // no explicit policy: the native backend round-robins so one run
+        // exercises dense/TW/TVW end-to-end; pjrt keeps the TW default
+        None if backend_name == "native" => Policy::RoundRobin(vec![
+            "model_dense".into(),
+            "model_tw".into(),
+            "model_tvw".into(),
+        ]),
         _ => Policy::Fixed("model_tw".into()),
     };
-    let cfg = ServerConfig {
+    let mut cfg = ServerConfig {
         batcher: BatcherConfig::default(),
         policy,
         variants: ServerConfig::default().variants,
         max_queue: 0,
-        plan_cache,
+        plan_cache: plan_cache.clone(),
+        workers,
     };
-    let handle = match start(&dir, cfg) {
+    let mut native_cache: Option<Arc<PlanCache>> = None;
+    let started = match backend_name.as_str() {
+        "pjrt" => start(&dir, cfg),
+        "native" => {
+            // load the plan cache once: the native backend resolves
+            // per-layer tile configs from it AND the router resolves
+            // Policy::Tuned against it (so clear cfg.plan_cache — the
+            // server must not parse the same file a second time)
+            let cache = plan_cache.as_ref().and_then(|p| match PlanCache::load(p) {
+                Ok(c) => Some(Arc::new(c)),
+                Err(e) => {
+                    eprintln!("[serve] plan cache {}: {e} (serving untuned)", p.display());
+                    None
+                }
+            });
+            cfg.policy = cfg.policy.clone().resolve(cache.as_deref());
+            cfg.plan_cache = None;
+            native_cache = cache.clone();
+            // --model picks the packed geometry; "bert" serves the
+            // BERT-base FFN widths the autotuner tunes (M = batch*seq =
+            // 256 matches the tuner's default m-cap), anything else the
+            // fast nano default
+            let spec = match flag(args, "--model").as_deref() {
+                Some("bert") => NativeModelSpec::bert_base(8, 32),
+                None | Some("nano") => NativeModelSpec::default(),
+                Some(other) => {
+                    eprintln!("[serve] unknown native model {other:?}; serving nano default");
+                    NativeModelSpec::default()
+                }
+            };
+            NativeBackend::new(spec, cache)
+                .and_then(|b| start_with_backend(Arc::new(b), cfg))
+        }
+        other => {
+            eprintln!("unknown backend {other:?} (expected pjrt|native)");
+            return 2;
+        }
+    };
+    let handle = match started {
         Ok(h) => h,
         Err(e) => {
             eprintln!("failed to start server: {e:#}");
@@ -172,8 +222,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     println!(
-        "serving: batch={} seq={} d_model={} classes={}",
-        handle.batch, handle.seq, handle.d_model, handle.n_classes
+        "serving[{backend_name}]: workers={} batch={} seq={} d_model={} classes={}",
+        handle.workers, handle.batch, handle.seq, handle.d_model, handle.n_classes
     );
     let len = handle.seq * handle.d_model;
     let mut rng = Rng::new(123);
@@ -184,17 +234,24 @@ fn cmd_serve(args: &[String]) -> i32 {
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
     }
     let mut ok = 0;
+    let mut failed = 0;
     for rx in pending {
-        if rx.recv().is_ok() {
-            ok += 1;
+        match rx.recv() {
+            Ok(resp) if resp.is_ok() => ok += 1,
+            Ok(_) => failed += 1,
+            Err(_) => {}
         }
     }
     let snap = handle.metrics.full_snapshot();
     println!(
-        "completed {ok}/{requests} requests, {} shed, throughput {:.1} req/s",
-        snap.sheds, snap.throughput_rps
+        "completed {ok}/{requests} requests ({failed} errored, {} shed, {} execute failures), throughput {:.1} req/s",
+        snap.sheds, snap.errors, snap.throughput_rps
     );
-    if let Some(cache) = &handle.plan_cache {
+    if handle.workers > 1 {
+        let split: Vec<String> = snap.per_worker.iter().map(|c| c.to_string()).collect();
+        println!("  per-worker completions: [{}]", split.join(", "));
+    }
+    if let Some(cache) = handle.plan_cache.as_ref().or(native_cache.as_ref()) {
         println!("  plan cache: {} tuned entries loaded", cache.len());
     }
     for s in &snap.variants {

@@ -7,6 +7,11 @@
 //! `pjrt` cargo feature; without it a std-only stub with the identical
 //! public surface takes its place, failing at load time so every
 //! artifact-dependent caller degrades to its "artifacts missing" path.
+//!
+//! The serving stack no longer calls this engine directly: it reaches it
+//! through `exec::PjrtBackend`, one implementation of the backend-agnostic
+//! `exec::Backend` trait (DESIGN.md §5); `exec::NativeBackend` is the
+//! artifact-free alternative that runs the CPU kernels in-process.
 
 #[cfg(feature = "pjrt")]
 use std::path::Path;
