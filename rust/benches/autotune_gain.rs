@@ -9,7 +9,7 @@ mod bench_util;
 
 use std::collections::BTreeSet;
 
-use bench_util::section;
+use bench_util::{quick_mode, section};
 use tilewise::autotune::{MeasureOpts, PatternFamily, SearchSpace, Tuner, TunerOpts};
 use tilewise::gpusim::GemmShape;
 use tilewise::json::{arr, num, obj, s};
@@ -21,12 +21,16 @@ fn main() {
     // tuning-time M cap: GEMM cost is linear in M, so tile decisions made
     // at M=256 transfer to the serving batch (M=1024) at a fraction of
     // the tuning cost
-    let m_cap = 256usize;
+    let m_cap = if quick_mode() { 64usize } else { 256 };
     let opts = TunerOpts {
         sparsity: 0.75,
         nthreads: threads,
         m_cap: Some(m_cap),
-        measure: MeasureOpts { warmup: 1, min_iters: 3, max_iters: 30, budget_secs: 0.15, trim_frac: 0.2 },
+        measure: if quick_mode() {
+            MeasureOpts::quick()
+        } else {
+            MeasureOpts { warmup: 1, min_iters: 3, max_iters: 30, budget_secs: 0.15, trim_frac: 0.2 }
+        },
         space: SearchSpace::default(),
         ..TunerOpts::default()
     };
@@ -37,6 +41,12 @@ fn main() {
     for layer in bert.prunable_layers() {
         shapes.insert((layer.shape.m, layer.shape.k, layer.shape.n));
     }
+    // quick profile: the two FFN shapes (the FLOP-dominant GEMMs) only
+    let shapes: Vec<(usize, usize, usize)> = if quick_mode() {
+        shapes.into_iter().rev().take(2).collect()
+    } else {
+        shapes.into_iter().collect()
+    };
 
     section(&format!(
         "TW autotune gain on BERT-base layer shapes (75% sparsity, m-cap {m_cap}, {threads} threads)"

@@ -1,11 +1,31 @@
 //! Shared measurement harness for the benches (the offline registry has no
-//! criterion; this provides warmup + median-of-N timing with MAD spread).
+//! criterion; this provides warmup + median-of-N timing with MAD spread),
+//! plus the CI-wide quick-mode switch.
 
 use std::time::Instant;
 
+/// Shared quick-mode switch honored by every bench: set
+/// `PALLAS_BENCH_QUICK=1` (any value but `0`/empty) to trim sampling and
+/// per-bench workloads to a CI-sized profile that finishes in minutes.
+#[allow(dead_code)] // not every bench binary uses every helper
+pub fn quick_mode() -> bool {
+    std::env::var("PALLAS_BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// `full` normally, `quick` under `PALLAS_BENCH_QUICK` — the one-liner
+/// benches use to scale request counts / shape lists / thread grids.
+#[allow(dead_code)]
+pub fn scaled(full: usize, quick: usize) -> usize {
+    if quick_mode() {
+        quick
+    } else {
+        full
+    }
+}
+
 /// Run `f` until `min_runs` samples and `min_secs` have elapsed; report
 /// median and median-absolute-deviation in microseconds.
-#[allow(dead_code)] // not every bench binary uses both helpers
+#[allow(dead_code)]
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
     // warmup
     for _ in 0..2 {
@@ -13,13 +33,17 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
     }
     let mut samples = Vec::new();
     let start = Instant::now();
-    let min_runs = 5;
-    let min_secs = 0.25;
+    // quick mode cuts the floor, not the method: still median-of-N
+    let (min_runs, min_secs, cap) = if quick_mode() {
+        (3, 0.03, 25)
+    } else {
+        (5, 0.25, 200)
+    };
     while samples.len() < min_runs || start.elapsed().as_secs_f64() < min_secs {
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e6);
-        if samples.len() >= 200 {
+        if samples.len() >= cap {
             break;
         }
     }

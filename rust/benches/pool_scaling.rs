@@ -1,0 +1,305 @@
+//! Bench: the persistent pool runtime vs per-call thread spawning, and
+//! thread scaling of the previously-serial TVW / 2:4 kernels — the
+//! evidence that moving every parallel kernel onto `tilewise::pool`
+//! pays at serving-sized M (batch <= 32), where per-call spawn+join used
+//! to rival the kernel itself.  Emits `BENCH_pool.json`.
+//!
+//!   cargo bench --bench pool_scaling            # full profile
+//!   PALLAS_BENCH_QUICK=1 cargo bench --bench pool_scaling   # CI profile
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, quick_mode, section};
+use tilewise::gemm::{
+    tvw_matmul_parallel_into, tw_matmul_parallel_into, vw24_matmul_parallel_into, TileConfig,
+};
+use tilewise::json::{arr, num, obj, s, Json};
+use tilewise::pool::{split_range, SendPtr, ThreadPool};
+use tilewise::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+/// The pre-pool execution model, kept as the bench baseline: identical
+/// tile partition to `tw_matmul_parallel_into`, but fresh `thread::scope`
+/// threads spawned on every call — the cost the pool runtime eliminated.
+fn tw_matmul_spawn(a: &Matrix, plan: &TwPlan, c: &mut Matrix, threads: usize) {
+    let eff = threads.min(plan.tiles).max(1);
+    let (m, n) = (a.rows, plan.n);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for chunk in 0..eff {
+            let c_ptr = &c_ptr;
+            scope.spawn(move || {
+                let (t0, t1) = split_range(plan.tiles, eff, chunk);
+                let mut a_gather = vec![0.0f32; plan.kmax];
+                for t in t0..t1 {
+                    let kt = plan.row_len[t] as usize;
+                    let width = (0..plan.g)
+                        .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < n)
+                        .count();
+                    if kt == 0 || width == 0 {
+                        continue;
+                    }
+                    let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+                    for i in 0..m {
+                        let arow = a.row(i);
+                        for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
+                            *d = arow[r as usize];
+                        }
+                        for j in 0..width {
+                            let mut acc = 0.0f32;
+                            for ii in 0..kt {
+                                let b = plan.b_cond[(t * plan.kmax + ii) * plan.g + j];
+                                acc += a_gather[ii] * b;
+                            }
+                            let cj = plan.col_idx[t * plan.g + j] as usize;
+                            // SAFETY: tiles own disjoint output columns
+                            unsafe { *c_ptr.0.add(i * n + cj) = acc };
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Spawn-per-call TVW baseline (the parallel path TVW never had): same
+/// tile partition as `tvw_matmul_parallel_into`, scope threads per call.
+fn tvw_matmul_spawn(a: &Matrix, plan: &TvwPlan, c: &mut Matrix, threads: usize) {
+    let eff = threads.min(plan.tiles).max(1);
+    let (m, n) = (a.rows, plan.n);
+    let khalf = plan.kmax / 2;
+    c.data.fill(0.0);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for chunk in 0..eff {
+            let c_ptr = &c_ptr;
+            scope.spawn(move || {
+                let (t0, t1) = split_range(plan.tiles, eff, chunk);
+                let mut a_gather = vec![0.0f32; plan.kmax];
+                let mut c_tile = vec![0.0f32; plan.g];
+                for t in t0..t1 {
+                    let kt = plan.row_len[t] as usize;
+                    let width = (0..plan.g)
+                        .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < n)
+                        .count();
+                    if kt == 0 || width == 0 {
+                        continue;
+                    }
+                    let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+                    let groups_max = kt.div_ceil(4).min(plan.kmax / 4);
+                    for i in 0..m {
+                        let arow = a.row(i);
+                        for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
+                            *d = arow[r as usize];
+                        }
+                        for x in a_gather[kt..plan.kmax].iter_mut() {
+                            *x = 0.0;
+                        }
+                        c_tile[..width].fill(0.0);
+                        for g in 0..groups_max {
+                            let a4 = [
+                                a_gather[g * 4],
+                                a_gather[g * 4 + 1],
+                                a_gather[g * 4 + 2],
+                                a_gather[g * 4 + 3],
+                            ];
+                            if a4 == [0.0; 4] {
+                                continue;
+                            }
+                            let base0 = (t * khalf + g * 2) * plan.g;
+                            let base1 = (t * khalf + g * 2 + 1) * plan.g;
+                            let v0 = &plan.b_vals[base0..base0 + width];
+                            let s0 = &plan.b_sel[base0..base0 + width];
+                            let v1 = &plan.b_vals[base1..base1 + width];
+                            let s1 = &plan.b_sel[base1..base1 + width];
+                            for j in 0..width {
+                                let (x0, x1) = (a4[s0[j] as usize], a4[s1[j] as usize]);
+                                c_tile[j] += x0 * v0[j] + x1 * v1[j];
+                            }
+                        }
+                        for j in 0..width {
+                            let cj = plan.col_idx[t * plan.g + j] as usize;
+                            // SAFETY: tiles own disjoint output columns
+                            unsafe { *c_ptr.0.add(i * n + cj) = c_tile[j] };
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+struct VsRow {
+    kernel: &'static str,
+    m: usize,
+    threads: usize,
+    spawn_us: f64,
+    pool_us: f64,
+}
+
+struct ScaleRow {
+    kernel: &'static str,
+    threads: usize,
+    us: f64,
+    scale: f64,
+}
+
+fn main() {
+    let quick = quick_mode();
+    // BERT-base FFN widths in the full profile; shrunk pack in quick mode
+    let (k, n) = if quick {
+        (512usize, 1024usize)
+    } else {
+        (768, 3072)
+    };
+    let (g, sparsity) = (64usize, 0.75f64);
+    let vs_threads = 4usize;
+    let ms: Vec<usize> = if quick { vec![8] } else { vec![8, 32] };
+    let grid: Vec<usize> = if quick {
+        vec![1, 2, 4]
+    } else {
+        vec![1, 2, 4, 8]
+    };
+    let m_scale = 32usize; // serving-sized batch
+
+    let tw_cfg = TileConfig::tw_default();
+    let tvw_cfg = TileConfig::tvw_default();
+    let vw_cfg = TileConfig::vw_default();
+
+    let mut rng = Rng::new(0xBEEF);
+    let w = Matrix::randn(k, n, &mut rng);
+    let tw = prune_tw(&w, sparsity, g, None);
+    let tw_plan = TwPlan::encode(&w, &tw);
+    let (tvw_tw, tvw_mask) = prune_tvw(&w, sparsity, g);
+    let tvw_plan = TvwPlan::encode(&w, &tvw_tw, &tvw_mask);
+    let vw_mask = prune_vw(&w, 0.5, 4);
+    let vw_plan = Vw24Plan::encode(&w, &vw_mask).expect("K is 4-aligned");
+
+    section(&format!(
+        "per-call spawn vs persistent pool, {k}x{n} @ {:.0}% (G={g}, {vs_threads} threads)",
+        sparsity * 100.0
+    ));
+    let pool = ThreadPool::new(vs_threads);
+    let mut vs_rows: Vec<VsRow> = Vec::new();
+    for &m in &ms {
+        let a = Matrix::randn(m, k, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        let spawn_us = bench(&format!("tw  spawn-per-call   m={m}"), || {
+            tw_matmul_spawn(&a, &tw_plan, &mut c, vs_threads);
+        });
+        let pool_us = bench(&format!("tw  pooled           m={m}"), || {
+            tw_matmul_parallel_into(&a, &tw_plan, &mut c, &tw_cfg, vs_threads, &pool);
+        });
+        vs_rows.push(VsRow { kernel: "tw", m, threads: vs_threads, spawn_us, pool_us });
+        let spawn_us = bench(&format!("tvw spawn-per-call   m={m}"), || {
+            tvw_matmul_spawn(&a, &tvw_plan, &mut c, vs_threads);
+        });
+        let pool_us = bench(&format!("tvw pooled           m={m}"), || {
+            tvw_matmul_parallel_into(&a, &tvw_plan, &mut c, &tvw_cfg, vs_threads, &pool);
+        });
+        vs_rows.push(VsRow { kernel: "tvw", m, threads: vs_threads, spawn_us, pool_us });
+    }
+    for r in &vs_rows {
+        println!(
+            "{:<4} m={:<4} spawn {:>9.1}us  pool {:>9.1}us  -> {:.2}x",
+            r.kernel,
+            r.m,
+            r.spawn_us,
+            r.pool_us,
+            r.spawn_us / r.pool_us.max(1e-9)
+        );
+    }
+
+    section(&format!("thread scaling on the pool, m={m_scale} (previously-serial TVW / 2:4)"));
+    let mut scale_rows: Vec<ScaleRow> = Vec::new();
+    let a = Matrix::randn(m_scale, k, &mut rng);
+    let mut c = Matrix::zeros(m_scale, n);
+    let mut base: std::collections::HashMap<&'static str, f64> = std::collections::HashMap::new();
+    for &t in &grid {
+        let pool_t = ThreadPool::new(t);
+        let tw_us = bench(&format!("tw   t={t}"), || {
+            tw_matmul_parallel_into(&a, &tw_plan, &mut c, &tw_cfg, t, &pool_t);
+        });
+        let tvw_us = bench(&format!("tvw  t={t}"), || {
+            tvw_matmul_parallel_into(&a, &tvw_plan, &mut c, &tvw_cfg, t, &pool_t);
+        });
+        let vw_us = bench(&format!("vw24 t={t}"), || {
+            vw24_matmul_parallel_into(&a, &vw_plan, &mut c, &vw_cfg, t, &pool_t);
+        });
+        for (kernel, us) in [("tw", tw_us), ("tvw", tvw_us), ("vw24", vw_us)] {
+            let b = *base.entry(kernel).or_insert(us);
+            scale_rows.push(ScaleRow { kernel, threads: t, us, scale: b / us.max(1e-9) });
+        }
+    }
+    for kernel in ["tw", "tvw", "vw24"] {
+        let best = scale_rows
+            .iter()
+            .filter(|r| r.kernel == kernel)
+            .map(|r| r.scale)
+            .fold(0.0f64, f64::max);
+        println!("{kernel}: best scaling {best:.2}x over 1 thread");
+    }
+
+    // acceptance signals (also recorded in the JSON)
+    let pool_beats_spawn = vs_rows.iter().all(|r| r.pool_us < r.spawn_us);
+    if !pool_beats_spawn {
+        println!("warning: pooled kernels did not beat the spawn baseline on this host");
+    }
+    let tvw_best = scale_rows
+        .iter()
+        .filter(|r| r.kernel == "tvw")
+        .map(|r| r.scale)
+        .fold(0.0f64, f64::max);
+    if tvw_best < 1.1 {
+        println!("warning: TVW scaled < 1.1x with threads on this host");
+    }
+
+    let doc = obj(vec![
+        ("bench", s("pool_scaling")),
+        ("quick", Json::Bool(quick)),
+        ("k", num(k as f64)),
+        ("n", num(n as f64)),
+        ("g", num(g as f64)),
+        ("sparsity", num(sparsity)),
+        ("m_scaling", num(m_scale as f64)),
+        ("pool_beats_spawn", Json::Bool(pool_beats_spawn)),
+        ("tvw_best_scaling", num(tvw_best)),
+        (
+            "spawn_vs_pool",
+            arr(vs_rows
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("kernel", s(r.kernel)),
+                        ("m", num(r.m as f64)),
+                        ("threads", num(r.threads as f64)),
+                        ("spawn_us", num(r.spawn_us)),
+                        ("pool_us", num(r.pool_us)),
+                        ("speedup", num(r.spawn_us / r.pool_us.max(1e-9))),
+                    ])
+                })
+                .collect()),
+        ),
+        (
+            "scaling",
+            arr(scale_rows
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("kernel", s(r.kernel)),
+                        ("threads", num(r.threads as f64)),
+                        ("us", num(r.us)),
+                        ("scale_vs_serial", num(r.scale)),
+                    ])
+                })
+                .collect()),
+        ),
+    ]);
+    let out = "BENCH_pool.json";
+    match std::fs::write(out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("writing {out}: {e}"),
+    }
+}

@@ -11,7 +11,7 @@ mod bench_util;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use bench_util::section;
+use bench_util::{scaled, section};
 use tilewise::coordinator::{start_with_backend, BatcherConfig, Policy, ServerConfig};
 use tilewise::exec::{Backend, NativeBackend, NativeModelSpec};
 use tilewise::json::{arr, num, obj, s};
@@ -22,6 +22,7 @@ const VARIANTS: [&str; 3] = ["model_dense", "model_tw", "model_tvw"];
 struct Cell {
     variant: &'static str,
     workers: usize,
+    intra: usize,
     rps: f64,
     p50_ms: f64,
     p99_ms: f64,
@@ -31,12 +32,14 @@ fn run_cell(
     backend: &Arc<dyn Backend>,
     variant: &'static str,
     workers: usize,
+    intra: usize,
     requests: usize,
 ) -> Cell {
     let cfg = ServerConfig {
         batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
         policy: Policy::Fixed(variant.into()),
         workers,
+        intra_threads: intra,
         ..ServerConfig::default()
     };
     let handle = start_with_backend(backend.clone(), cfg).expect("native server start");
@@ -60,17 +63,25 @@ fn run_cell(
     assert_eq!(ok, requests, "all requests must be served");
     let snap = handle.metrics.full_snapshot();
     let stats = snap.variants.iter().find(|v| v.variant == variant).expect("variant stats");
-    Cell { variant, workers, rps: ok as f64 / wall, p50_ms: stats.p50_ms, p99_ms: stats.p99_ms }
+    Cell {
+        variant,
+        workers,
+        intra,
+        rps: ok as f64 / wall,
+        p50_ms: stats.p50_ms,
+        p99_ms: stats.p99_ms,
+    }
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
+    // PALLAS_BENCH_QUICK trims the closed-loop burst to a CI-sized run
     let requests: usize = args
         .iter()
         .position(|a| a == "--requests")
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
-        .unwrap_or(48);
+        .unwrap_or_else(|| scaled(48, 16));
 
     // BERT-base FFN widths; seq trimmed so one forward stays sub-second
     let spec = NativeModelSpec::bert_base(8, 8).with_variants(&VARIANTS);
@@ -84,22 +95,27 @@ fn main() {
     println!("packed dense/TW/TVW plans once in {:.2}s\n", t_pack.elapsed().as_secs_f64());
 
     println!(
-        "{:<14}{:>9}{:>12}{:>12}{:>12}{:>10}",
-        "variant", "workers", "req/s", "p50(ms)", "p99(ms)", "scaling"
+        "{:<14}{:>9}{:>7}{:>12}{:>12}{:>12}{:>10}",
+        "variant", "workers", "intra", "req/s", "p50(ms)", "p99(ms)", "scaling"
     );
+    let worker_counts: Vec<usize> = if bench_util::quick_mode() {
+        vec![1, 4]
+    } else {
+        WORKER_COUNTS.to_vec()
+    };
     let mut cells: Vec<Cell> = Vec::new();
     let mut scaling = Vec::new();
     for variant in VARIANTS {
         let mut base_rps = 0.0f64;
-        for &workers in &WORKER_COUNTS {
-            let cell = run_cell(&backend, variant, workers, requests);
+        for &workers in &worker_counts {
+            let cell = run_cell(&backend, variant, workers, 1, requests);
             if workers == 1 {
                 base_rps = cell.rps;
             }
             let scale = if base_rps > 0.0 { cell.rps / base_rps } else { 1.0 };
             println!(
-                "{:<14}{:>9}{:>12.1}{:>12.2}{:>12.2}{:>9.2}x",
-                cell.variant, cell.workers, cell.rps, cell.p50_ms, cell.p99_ms, scale
+                "{:<14}{:>9}{:>7}{:>12.1}{:>12.2}{:>12.2}{:>9.2}x",
+                cell.variant, cell.workers, cell.intra, cell.rps, cell.p50_ms, cell.p99_ms, scale
             );
             cells.push(cell);
         }
@@ -112,6 +128,24 @@ fn main() {
         scaling.push((variant, final_scale));
         println!();
     }
+
+    // two-level split: same total thread budget divided between
+    // inter-request workers and the shared intra-op kernel pool
+    section("two-level parallelism: workers x intra-threads (TW variant)");
+    let splits: [(usize, usize); 3] = if bench_util::quick_mode() {
+        [(1, 2), (2, 1), (2, 2)]
+    } else {
+        [(1, 4), (2, 2), (4, 1)]
+    };
+    for &(workers, intra) in &splits {
+        let cell = run_cell(&backend, "model_tw", workers, intra, requests);
+        println!(
+            "{:<14}{:>9}{:>7}{:>12.1}{:>12.2}{:>12.2}",
+            cell.variant, cell.workers, cell.intra, cell.rps, cell.p50_ms, cell.p99_ms
+        );
+        cells.push(cell);
+    }
+    println!();
 
     for (variant, scale) in &scaling {
         println!("{variant}: best throughput {scale:.2}x over 1 worker");
@@ -137,6 +171,7 @@ fn main() {
                     obj(vec![
                         ("variant", s(c.variant)),
                         ("workers", num(c.workers as f64)),
+                        ("intra_threads", num(c.intra as f64)),
                         ("rps", num(c.rps)),
                         ("p50_ms", num(c.p50_ms)),
                         ("p99_ms", num(c.p99_ms)),

@@ -1,14 +1,22 @@
 //! Wall-clock microbenchmark harness: warmup + time-budgeted sampling with
 //! a trimmed mean, plus the operand factory that turns a (shape, sparsity)
 //! tuning problem into real pruned matrices and condensed plans.
+//!
+//! Parallel candidates are measured on the persistent [`crate::pool`]
+//! runtime (the same pool the serving stack's kernels claim chunks from),
+//! so a tuned `threads` axis reflects pool-dispatch reality rather than
+//! per-call spawn costs.  Candidates whose kernel would silently fall
+//! back to serial at the measured shape are rejected outright — the cache
+//! must never credit phantom parallelism.
 
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use super::space::{Candidate, KernelVariant};
 use crate::gemm::{
-    matmul_parallel, matmul_tiled, tvw_matmul_with, tw_matmul_parallel, tw_matmul_with,
-    vw24_matmul_with,
+    effective_parallel_threads, matmul_parallel, matmul_tiled, tvw_effective_parallel_threads,
+    tvw_matmul_parallel_into, tvw_matmul_with, tw_effective_parallel_threads, tw_matmul_parallel,
+    tw_matmul_with, vw24_effective_parallel_threads, vw24_matmul_parallel_into, vw24_matmul_with,
 };
 use crate::gpusim::GemmShape;
 use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
@@ -172,6 +180,14 @@ pub fn bench_candidate(
         KernelVariant::DenseParallel => {
             let (a, w) = (&data.a, &data.w);
             let t = cand.threads.max(1);
+            // phantom-parallelism guard: a candidate whose kernel would
+            // run fewer threads than requested (serial fallback OR clamp)
+            // must not be measured — the cache would credit `threads` the
+            // kernel never used.  Each guard calls the kernel's own
+            // effective-threads helper, the single source of truth.
+            if t > 1 && effective_parallel_threads(data.shape.m, t) != t {
+                return None;
+            }
             Some(measure(
                 || {
                     std::hint::black_box(matmul_parallel(a, w, t));
@@ -193,6 +209,9 @@ pub fn bench_candidate(
             let plan = data.tw_plan(cand.g.max(1));
             let a = &data.a;
             let t = cand.threads.max(1);
+            if t > 1 && tw_effective_parallel_threads(plan.tiles, t) != t {
+                return None; // phantom-parallelism guard (see DenseParallel)
+            }
             Some(measure(
                 || {
                     std::hint::black_box(tw_matmul_parallel(a, &plan, t));
@@ -210,12 +229,47 @@ pub fn bench_candidate(
                 opts,
             ))
         }
+        KernelVariant::TvwParallel => {
+            let plan = data.tvw_plan(cand.g.max(1));
+            let a = &data.a;
+            let t = cand.threads.max(1);
+            if t > 1 && tvw_effective_parallel_threads(plan.tiles, t) != t {
+                return None; // phantom-parallelism guard (see DenseParallel)
+            }
+            // measured on the same persistent pool the serving stack uses,
+            // with the output allocation reused across samples (the
+            // serving hot-loop idiom)
+            let mut c = Matrix::zeros(a.rows, plan.n);
+            Some(measure(
+                || {
+                    tvw_matmul_parallel_into(a, &plan, &mut c, &tile, t, crate::pool::global());
+                    std::hint::black_box(&c);
+                },
+                opts,
+            ))
+        }
         KernelVariant::Vw24 => {
             let plan = data.vw24_plan()?;
             let a = &data.a;
             Some(measure(
                 || {
                     std::hint::black_box(vw24_matmul_with(a, &plan, &tile));
+                },
+                opts,
+            ))
+        }
+        KernelVariant::Vw24Parallel => {
+            let plan = data.vw24_plan()?;
+            let a = &data.a;
+            let t = cand.threads.max(1);
+            if t > 1 && vw24_effective_parallel_threads(plan.n, t) != t {
+                return None; // phantom-parallelism guard (see DenseParallel)
+            }
+            let mut c = Matrix::zeros(a.rows, plan.n);
+            Some(measure(
+                || {
+                    vw24_matmul_parallel_into(a, &plan, &mut c, &tile, t, crate::pool::global());
+                    std::hint::black_box(&c);
                 },
                 opts,
             ))
@@ -265,6 +319,39 @@ mod tests {
             let cand = Candidate::default_for(family);
             assert!(bench_candidate(&mut data, &cand, &opts).is_some(), "{family:?}");
         }
+    }
+
+    #[test]
+    fn phantom_parallel_candidates_are_rejected() {
+        use crate::gemm::TileConfig;
+        // M = 8 is far below the 8-rows-per-band floor for 4 threads: the
+        // kernel would run serial, so the candidate must not be measured
+        let mut data = BenchData::new(GemmShape::new(8, 64, 48), 0.75, 11);
+        let opts = MeasureOpts::quick();
+        let dense_par = Candidate {
+            variant: KernelVariant::DenseParallel,
+            tile: TileConfig::dense_default(),
+            g: 0,
+            threads: 4,
+        };
+        assert!(bench_candidate(&mut data, &dense_par, &opts).is_none());
+        // a genuinely parallelisable TVW plan (several condensed tiles)
+        // stays measurable at the same tiny M
+        let tvw_par = Candidate {
+            variant: KernelVariant::TvwParallel,
+            tile: TileConfig::tvw_default(),
+            g: 16,
+            threads: 2,
+        };
+        assert!(bench_candidate(&mut data, &tvw_par, &opts).is_some());
+        // column-parallel 2:4 needs >= 16 columns per thread
+        let vw_par = Candidate {
+            variant: KernelVariant::Vw24Parallel,
+            tile: TileConfig::vw_default(),
+            g: 0,
+            threads: 32,
+        };
+        assert!(bench_candidate(&mut data, &vw_par, &opts).is_none());
     }
 
     #[test]

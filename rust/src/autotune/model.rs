@@ -33,14 +33,16 @@ pub fn analytical_cost(
             let tiles = tw_uniform_tiles(shape, sparsity, g);
             tw_latency(shape, &tiles, g, Pipe::TensorFp16, TwStrategy::FusedCto, specs, cal)
         }
-        KernelVariant::TvwFused => {
+        KernelVariant::TvwFused | KernelVariant::TvwParallel => {
             let g = cand.g.max(1);
             // iso-sparsity split: TVW reaches `sparsity` as TW x 2:4
             let s_tw = (1.0 - 2.0 * (1.0 - sparsity)).max(0.0);
             let tiles = tw_uniform_tiles(shape, s_tw, g);
             tvw_latency(shape, &tiles, g, specs, cal)
         }
-        KernelVariant::Vw24 => vw24_plan(shape, false, specs, cal).latency(specs),
+        KernelVariant::Vw24 | KernelVariant::Vw24Parallel => {
+            vw24_plan(shape, false, specs, cal).latency(specs)
+        }
     }
 }
 

@@ -64,8 +64,12 @@ pub enum KernelVariant {
     TwParallel,
     /// `gemm::tvw_matmul_with` — fused TW + 2:4 kernel.
     TvwFused,
+    /// `gemm::tvw_matmul_parallel_into` — tile-parallel TVW kernel.
+    TvwParallel,
     /// `gemm::vw24_matmul_with` — plain 2:4 kernel.
     Vw24,
+    /// `gemm::vw24_matmul_parallel_into` — column-parallel 2:4 kernel.
+    Vw24Parallel,
 }
 
 impl KernelVariant {
@@ -76,7 +80,9 @@ impl KernelVariant {
             KernelVariant::TwFused => "tw-fused",
             KernelVariant::TwParallel => "tw-par",
             KernelVariant::TvwFused => "tvw",
+            KernelVariant::TvwParallel => "tvw-par",
             KernelVariant::Vw24 => "vw24",
+            KernelVariant::Vw24Parallel => "vw24-par",
         }
     }
 
@@ -87,21 +93,29 @@ impl KernelVariant {
             "tw-fused" => KernelVariant::TwFused,
             "tw-par" => KernelVariant::TwParallel,
             "tvw" => KernelVariant::TvwFused,
+            "tvw-par" => KernelVariant::TvwParallel,
             "vw24" => KernelVariant::Vw24,
+            "vw24-par" => KernelVariant::Vw24Parallel,
             _ => return None,
         })
     }
 
     pub fn is_parallel(&self) -> bool {
-        matches!(self, KernelVariant::DenseParallel | KernelVariant::TwParallel)
+        matches!(
+            self,
+            KernelVariant::DenseParallel
+                | KernelVariant::TwParallel
+                | KernelVariant::TvwParallel
+                | KernelVariant::Vw24Parallel
+        )
     }
 
     pub fn family(&self) -> PatternFamily {
         match self {
             KernelVariant::DenseBlocked | KernelVariant::DenseParallel => PatternFamily::Dense,
             KernelVariant::TwFused | KernelVariant::TwParallel => PatternFamily::Tw,
-            KernelVariant::TvwFused => PatternFamily::Tvw,
-            KernelVariant::Vw24 => PatternFamily::Vw24,
+            KernelVariant::TvwFused | KernelVariant::TvwParallel => PatternFamily::Tvw,
+            KernelVariant::Vw24 | KernelVariant::Vw24Parallel => PatternFamily::Vw24,
         }
     }
 }
@@ -264,6 +278,16 @@ impl SearchSpace {
                             threads: 1,
                         });
                     }
+                    for &t in &self.threads {
+                        if t > 1 {
+                            out.push(Candidate {
+                                variant: KernelVariant::TvwParallel,
+                                tile: TileConfig::tvw_default(),
+                                g,
+                                threads: t,
+                            });
+                        }
+                    }
                 }
             }
             PatternFamily::Vw24 => {
@@ -274,6 +298,16 @@ impl SearchSpace {
                         g: 0,
                         threads: 1,
                     });
+                }
+                for &t in &self.threads {
+                    if t > 1 {
+                        out.push(Candidate {
+                            variant: KernelVariant::Vw24Parallel,
+                            tile: TileConfig::vw_default(),
+                            g: 0,
+                            threads: t,
+                        });
+                    }
                 }
             }
         }
@@ -305,7 +339,9 @@ mod tests {
             KernelVariant::TwFused,
             KernelVariant::TwParallel,
             KernelVariant::TvwFused,
+            KernelVariant::TvwParallel,
             KernelVariant::Vw24,
+            KernelVariant::Vw24Parallel,
         ] {
             assert_eq!(KernelVariant::from_label(v.label()), Some(v));
         }
@@ -346,5 +382,10 @@ mod tests {
         assert!(tw.iter().any(|c| c.threads == 1));
         let dense = space.candidates(shape, PatternFamily::Dense);
         assert!(dense.iter().any(|c| c.variant == KernelVariant::DenseParallel));
+        // the paper's headline patterns get parallel candidates too
+        let tvw = space.candidates(shape, PatternFamily::Tvw);
+        assert!(tvw.iter().any(|c| c.variant == KernelVariant::TvwParallel && c.threads == 8));
+        let vw = space.candidates(shape, PatternFamily::Vw24);
+        assert!(vw.iter().any(|c| c.variant == KernelVariant::Vw24Parallel && c.threads == 8));
     }
 }

@@ -40,6 +40,14 @@ pub struct ServerConfig {
     /// Worker threads sharing the request channel.  Each owns one model
     /// instance loaded from the backend (clamped to >= 1).
     pub workers: usize,
+    /// Intra-op kernel parallelism: lanes of ONE pool shared by every
+    /// worker's GEMM kernels (`crate::pool`), composing with the
+    /// inter-request `workers` pool.  Each submitting worker is itself a
+    /// lane of its own job, so concurrent kernel threads are bounded by
+    /// `workers + intra_threads - 1`; size that sum near the core count
+    /// (DESIGN.md §5).  `<= 1` keeps the kernels serial (the historical
+    /// behaviour).
+    pub intra_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -51,6 +59,7 @@ impl Default for ServerConfig {
             max_queue: 0,
             plan_cache: None,
             workers: 1,
+            intra_threads: 1,
         }
     }
 }
@@ -173,6 +182,14 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
     });
     let policy = cfg.policy.clone().resolve(plan_cache.as_deref());
 
+    // one intra-op kernel pool shared across the whole worker pool:
+    // concurrent kernel threads stay bounded by workers + intra_threads-1
+    // (each submitter is a lane of its own job; the pool adds
+    // intra_threads-1 shared helpers) no matter how deep the queue gets
+    // (two-level model, DESIGN.md §5)
+    let intra: Option<Arc<crate::pool::ThreadPool>> = (cfg.intra_threads > 1)
+        .then(|| Arc::new(crate::pool::ThreadPool::new(cfg.intra_threads)));
+
     let mut joins = Vec::with_capacity(workers);
     for wid in 0..workers {
         let rx = rx.clone();
@@ -182,11 +199,12 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
         let backend = backend.clone();
         let policy = policy.clone();
         let init_tx = init_tx.clone();
+        let intra = intra.clone();
         joins.push(
             std::thread::Builder::new()
                 .name(format!("tilewise-worker-{wid}"))
                 .spawn(move || {
-                    let mut model = match backend.load() {
+                    let mut model = match backend.load_with_intra(intra) {
                         Ok(m) => m,
                         Err(e) => {
                             let _ = init_tx.send(Err(e));
@@ -396,6 +414,33 @@ mod tests {
         assert_eq!(snap.per_worker.iter().sum::<u64>(), 32);
         // idle workers appear as explicit zeros, one slot per pool member
         assert_eq!(snap.per_worker.len(), 4);
+    }
+
+    #[test]
+    fn native_two_level_pool_serves_and_matches_serial() {
+        // workers x intra_threads: every worker's kernels claim chunks
+        // from one shared intra-op pool; logits must match a fully serial
+        // server on the same deterministic model
+        let cfg = ServerConfig { workers: 2, intra_threads: 2, ..Default::default() };
+        let pooled = start_native(cfg);
+        let serial = start_native(ServerConfig::default());
+        let len = pooled.seq * pooled.d_model;
+        let x: Vec<f32> = (0..len).map(|i| ((i % 19) as f32 - 9.0) * 0.02).collect();
+        for variant in ["model_dense", "model_tw", "model_tvw"] {
+            let rp = pooled.infer(x.clone(), Some(variant.into())).unwrap();
+            let rs = serial.infer(x.clone(), Some(variant.into())).unwrap();
+            assert!(rp.is_ok(), "{variant}: {:?}", rp.error);
+            assert_eq!(rp.logits.len(), rs.logits.len());
+            for (a, b) in rp.logits.iter().zip(&rs.logits) {
+                assert!((a - b).abs() < 1e-3, "{variant}: {a} vs {b}");
+            }
+        }
+        // sustained load over the shared intra pool
+        let rxs: Vec<_> = (0..24).map(|_| pooled.submit(x.clone(), None)).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert_eq!(pooled.metrics.errors(), 0);
     }
 
     #[test]

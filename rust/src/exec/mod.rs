@@ -33,7 +33,10 @@ pub mod pjrt;
 pub use native::{NativeBackend, NativeModelSpec};
 pub use pjrt::PjrtBackend;
 
+use std::sync::Arc;
+
 use crate::error::Result;
+use crate::pool::ThreadPool;
 
 /// Fixed batch geometry of a prepared model — the serving analogue of the
 /// AOT `meta.json` header (shapes are static; the batcher pads to `batch`).
@@ -68,6 +71,17 @@ pub trait Backend: Send + Sync {
     /// backend's constructor so N workers don't repeat it; `load` should
     /// only materialise per-thread state.
     fn load(&self) -> Result<Box<dyn PreparedModel>>;
+
+    /// Like [`Backend::load`], but hands the instance a shared intra-op
+    /// thread pool: per-GEMM work (row bands, condensed tiles, column
+    /// blocks) is claimed from `intra` while inter-request parallelism
+    /// stays with the coordinator's worker pool — the two-level model of
+    /// `docs/DESIGN.md` §5.  Backends without intra-op support (PJRT owns
+    /// its own runtime) ignore the pool.
+    fn load_with_intra(&self, intra: Option<Arc<ThreadPool>>) -> Result<Box<dyn PreparedModel>> {
+        let _ = intra;
+        self.load()
+    }
 }
 
 /// One worker's loaded model: executes padded batches by variant name.

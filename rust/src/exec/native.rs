@@ -29,10 +29,12 @@ use super::{Backend, ModelDims, PreparedModel};
 use crate::autotune::{PatternFamily, PlanCache};
 use crate::error::Result;
 use crate::gemm::{
-    matmul_tiled_into, tvw_matmul_into_with, tw_matmul_into_with, vw24_matmul_into_with,
-    TileConfig,
+    matmul_parallel_into, matmul_tiled_into, tvw_matmul_into_with, tvw_matmul_parallel_into,
+    tw_matmul_into_with, tw_matmul_parallel_into, vw24_matmul_into_with,
+    vw24_matmul_parallel_into, TileConfig,
 };
 use crate::gpusim::GemmShape;
+use crate::pool::ThreadPool;
 use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
 use crate::tensor::Matrix;
 use crate::util::Rng;
@@ -300,12 +302,10 @@ impl NativeBackend {
     }
 }
 
-impl Backend for NativeBackend {
-    fn name(&self) -> &'static str {
-        "native"
-    }
-
-    fn load(&self) -> Result<Box<dyn PreparedModel>> {
+impl NativeBackend {
+    /// Build one per-worker model instance; `intra` is the shared intra-op
+    /// kernel pool (None = serial kernels at their tuned/default configs).
+    fn load_native(&self, intra: Option<Arc<ThreadPool>>) -> NativeModel {
         let tokens = self.dims.batch * self.dims.seq;
         let (d_model, d_ff) = {
             // every net shares the base geometry; read it off the scratch
@@ -320,15 +320,30 @@ impl Backend for NativeBackend {
             });
             (self.dims.d_model, d_ff)
         };
-        Ok(Box::new(NativeModel {
+        NativeModel {
             dims: self.dims,
             nets: self.nets.clone(),
+            intra,
             x: Matrix::zeros(tokens, d_model),
             h: Matrix::zeros(tokens, d_ff.max(1)),
             t: Matrix::zeros(tokens, d_model),
             pooled: Matrix::zeros(self.dims.batch, d_model),
             logits: Matrix::zeros(self.dims.batch, self.dims.n_classes),
-        }))
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self) -> Result<Box<dyn PreparedModel>> {
+        Ok(Box::new(self.load_native(None)))
+    }
+
+    fn load_with_intra(&self, intra: Option<Arc<ThreadPool>>) -> Result<Box<dyn PreparedModel>> {
+        Ok(Box::new(self.load_native(intra)))
     }
 }
 
@@ -336,6 +351,10 @@ impl Backend for NativeBackend {
 struct NativeModel {
     dims: ModelDims,
     nets: Arc<Vec<VariantNet>>,
+    /// Shared intra-op kernel pool ([`Backend::load_with_intra`]); the
+    /// parallel kernel paths claim disjoint output chunks from it.  None:
+    /// serial kernels at their tuned/default tile configs.
+    intra: Option<Arc<ThreadPool>>,
     x: Matrix,
     h: Matrix,
     t: Matrix,
@@ -343,17 +362,45 @@ struct NativeModel {
     logits: Matrix,
 }
 
-/// Dispatch one packed GEMM into `c` (fully overwritten).
-fn gemm_into(a: &Matrix, g: &PackedGemm, c: &mut Matrix) {
+/// Dispatch one packed GEMM into `c` (fully overwritten).  With an
+/// intra-op pool, each kernel family runs its pool-parallel path —
+/// row bands (dense), condensed-tile ranges (TW/TVW), column blocks
+/// (2:4) — and each falls back to the serial tuned-config kernel when
+/// the problem is too small to split (the kernels report the fallback;
+/// here the dispatch simply trusts their effective-threads logic).
+fn gemm_into(a: &Matrix, g: &PackedGemm, c: &mut Matrix, intra: Option<&ThreadPool>) {
+    let threads = intra.map_or(1, ThreadPool::threads);
     match &g.pack {
-        Pack::Dense(w) => matmul_tiled_into(a, w, c, &g.cfg),
+        Pack::Dense(w) => {
+            if let Some(pool) = intra.filter(|_| threads > 1) {
+                matmul_parallel_into(a, w, c, &g.cfg, threads, pool);
+            } else {
+                matmul_tiled_into(a, w, c, &g.cfg);
+            }
+        }
         Pack::Tw(p) => {
             // the TW scatter only writes kept output columns; clear the rest
             c.data.fill(0.0);
-            tw_matmul_into_with(a, p, c, &g.cfg);
+            if let Some(pool) = intra.filter(|_| threads > 1) {
+                tw_matmul_parallel_into(a, p, c, &g.cfg, threads, pool);
+            } else {
+                tw_matmul_into_with(a, p, c, &g.cfg);
+            }
         }
-        Pack::Tvw(p) => tvw_matmul_into_with(a, p, c, &g.cfg),
-        Pack::Vw24(p) => vw24_matmul_into_with(a, p, c, &g.cfg),
+        Pack::Tvw(p) => {
+            if let Some(pool) = intra.filter(|_| threads > 1) {
+                tvw_matmul_parallel_into(a, p, c, &g.cfg, threads, pool);
+            } else {
+                tvw_matmul_into_with(a, p, c, &g.cfg);
+            }
+        }
+        Pack::Vw24(p) => {
+            if let Some(pool) = intra.filter(|_| threads > 1) {
+                vw24_matmul_parallel_into(a, p, c, &g.cfg, threads, pool);
+            } else {
+                vw24_matmul_into_with(a, p, c, &g.cfg);
+            }
+        }
     }
 }
 
@@ -379,14 +426,15 @@ impl PreparedModel for NativeModel {
             packed.len()
         );
         self.x.data.copy_from_slice(packed);
+        let intra = self.intra.as_deref();
         for block in &net.blocks {
-            gemm_into(&self.x, &block.up, &mut self.h);
+            gemm_into(&self.x, &block.up, &mut self.h, intra);
             for v in &mut self.h.data {
                 if *v < 0.0 {
                     *v = 0.0;
                 }
             }
-            gemm_into(&self.h, &block.down, &mut self.t);
+            gemm_into(&self.h, &block.down, &mut self.t, intra);
             // residual keeps activations O(1) through the stack
             for (xv, tv) in self.x.data.iter_mut().zip(&self.t.data) {
                 *xv += tv;
@@ -407,7 +455,7 @@ impl PreparedModel for NativeModel {
                 *dv *= inv;
             }
         }
-        gemm_into(&self.pooled, &net.head, &mut self.logits);
+        gemm_into(&self.pooled, &net.head, &mut self.logits, intra);
         Ok(self.logits.data.clone())
     }
 }
@@ -516,6 +564,28 @@ mod tests {
         let b = mb.run("model_tw", &packed).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn intra_pool_matches_serial_logits() {
+        // the pooled kernel paths are a scheduling change, not a numeric
+        // one: every variant must agree with the serial instance
+        let backend = NativeBackend::new(tiny_spec(), None).unwrap();
+        let mut serial = backend.load().unwrap();
+        let pool = Arc::new(crate::pool::ThreadPool::new(4));
+        let mut pooled = backend.load_with_intra(Some(pool)).unwrap();
+        let dims = serial.dims();
+        let packed: Vec<f32> = (0..dims.batch * dims.per_request_len())
+            .map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.05)
+            .collect();
+        for variant in NATIVE_VARIANTS {
+            let a = serial.run(variant, &packed).unwrap();
+            let b = pooled.run(variant, &packed).unwrap();
+            assert_eq!(a.len(), b.len(), "{variant}");
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3, "{variant}: {x} vs {y}");
+            }
         }
     }
 

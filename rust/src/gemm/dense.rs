@@ -5,6 +5,7 @@
 //! cross-checks and as the "before" point of the §Perf log.
 
 use super::TileConfig;
+use crate::pool::{self, ThreadPool};
 use crate::tensor::Matrix;
 
 /// Blocked C = A * B with the default (historical) 64x64 blocking.
@@ -79,40 +80,71 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Multi-threaded blocked GEMM: row bands across `threads` std threads.
-pub fn matmul_parallel(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
-    assert_eq!(a.cols, b.rows);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+/// The thread count the row-banded parallel kernel will actually use for
+/// `m` activation rows: bands thinner than 8 rows cost more in chunk
+/// bookkeeping than they recover, so small-M problems run serial.  This
+/// used to be a silent fallback buried in `matmul_parallel`; exposing the
+/// decision lets the autotuner (and metrics) stop crediting phantom
+/// parallelism to configs that degrade to serial at their measured M.
+pub fn effective_parallel_threads(m: usize, threads: usize) -> usize {
     if threads <= 1 || m < threads * 8 {
-        return matmul(a, b);
+        1
+    } else {
+        threads
     }
-    let mut c = Matrix::zeros(m, n);
-    let band = m.div_ceil(threads);
+}
+
+/// Multi-threaded blocked GEMM: row bands on the global persistent pool
+/// (historical signature; see [`matmul_parallel_into`]).
+pub fn matmul_parallel(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_parallel_into(a, b, &mut c, &TileConfig::dense_default(), threads, pool::global());
+    c
+}
+
+/// In-place multi-threaded GEMM: row bands across `threads` chunks claimed
+/// from `pool` (no per-call thread spawns).  `c` is fully overwritten.
+/// Returns the *effective* thread count — 1 when the problem fell back to
+/// the serial blocked kernel (which then honours `cfg`).
+pub fn matmul_parallel_into(
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+) -> usize {
+    assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let eff = effective_parallel_threads(m, threads);
+    if eff == 1 {
+        matmul_tiled_into(a, b, c, cfg);
+        return 1;
+    }
+    let band = m.div_ceil(eff);
     let a_data = &a.data;
     let b_data = &b.data;
-    let chunks: Vec<&mut [f32]> = c.data.chunks_mut(band * n).collect();
-    std::thread::scope(|scope| {
-        for (t, chunk) in chunks.into_iter().enumerate() {
-            let i0 = t * band;
-            scope.spawn(move || {
-                let rows = chunk.len() / n;
-                for i in 0..rows {
-                    let arow = &a_data[(i0 + i) * k..(i0 + i + 1) * k];
-                    let crow = &mut chunk[i * n..(i + 1) * n];
-                    for (kk, &aik) in arow.iter().enumerate() {
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &b_data[kk * n..(kk + 1) * n];
-                        for (cv, bv) in crow.iter_mut().zip(brow) {
-                            *cv += aik * bv;
-                        }
-                    }
+    pool.for_each_chunk_mut(&mut c.data, band * n, |t, chunk| {
+        chunk.fill(0.0);
+        let i0 = t * band;
+        let rows = chunk.len() / n;
+        for i in 0..rows {
+            let arow = &a_data[(i0 + i) * k..(i0 + i + 1) * k];
+            let crow = &mut chunk[i * n..(i + 1) * n];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
                 }
-            });
+                let brow = &b_data[kk * n..(kk + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
         }
     });
-    c
+    eff
 }
 
 #[cfg(test)]
@@ -166,6 +198,31 @@ mod tests {
         }
         matmul_tiled_into(&a, &b, &mut c, &TileConfig::new(4, 5));
         assert!(c.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn parallel_into_reports_effective_threads() {
+        let mut rng = Rng::new(75);
+        let pool = crate::pool::ThreadPool::new(4);
+        let cfg = TileConfig::dense_default();
+        // small M: silent-serial no more — the fallback is reported
+        let a = Matrix::randn(8, 16, &mut rng);
+        let b = Matrix::randn(16, 12, &mut rng);
+        let mut c = Matrix::zeros(8, 12);
+        assert_eq!(matmul_parallel_into(&a, &b, &mut c, &cfg, 4, &pool), 1);
+        assert!(c.max_abs_diff(&matmul_naive(&a, &b)) < 1e-3);
+        // large M: genuinely parallel, and stale output is overwritten
+        let a = Matrix::randn(64, 32, &mut rng);
+        let b = Matrix::randn(32, 24, &mut rng);
+        let mut c = Matrix::zeros(64, 24);
+        for v in &mut c.data {
+            *v = 1e9;
+        }
+        assert_eq!(matmul_parallel_into(&a, &b, &mut c, &cfg, 4, &pool), 4);
+        assert!(c.max_abs_diff(&matmul_naive(&a, &b)) < 1e-3);
+        assert_eq!(effective_parallel_threads(64, 4), 4);
+        assert_eq!(effective_parallel_threads(31, 4), 1);
+        assert_eq!(effective_parallel_threads(1000, 1), 1);
     }
 
     #[test]

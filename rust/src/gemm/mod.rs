@@ -13,15 +13,20 @@ pub mod spmm;
 pub mod tw;
 pub mod vw;
 
-pub use dense::{matmul, matmul_naive, matmul_parallel, matmul_tiled, matmul_tiled_into};
+pub use dense::{
+    effective_parallel_threads, matmul, matmul_naive, matmul_parallel, matmul_parallel_into,
+    matmul_tiled, matmul_tiled_into,
+};
 pub use spmm::{block_spmm, csr_spmm, BlockSparse};
 pub use tw::{
-    tw_matmul, tw_matmul_into, tw_matmul_into_with, tw_matmul_masked, tw_matmul_parallel,
-    tw_matmul_per_tile, tw_matmul_with,
+    tw_effective_parallel_threads, tw_matmul, tw_matmul_into, tw_matmul_into_with,
+    tw_matmul_masked, tw_matmul_parallel, tw_matmul_parallel_into, tw_matmul_per_tile,
+    tw_matmul_with,
 };
 pub use vw::{
-    tvw_matmul, tvw_matmul_into_with, tvw_matmul_with, vw24_matmul, vw24_matmul_into_with,
-    vw24_matmul_with,
+    tvw_effective_parallel_threads, tvw_matmul, tvw_matmul_into_with, tvw_matmul_parallel_into,
+    tvw_matmul_with, vw24_effective_parallel_threads, vw24_matmul, vw24_matmul_into_with,
+    vw24_matmul_parallel_into, vw24_matmul_with,
 };
 
 /// Cache-blocking parameters of a CPU kernel — the register/L1-level "tile

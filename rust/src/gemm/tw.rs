@@ -10,6 +10,7 @@
 //!      the CTO offset tables (the paper's final CTO kernel).
 
 use super::TileConfig;
+use crate::pool::{self, split_range, SendPtr, ThreadPool};
 use crate::sparse::{Mask, TwPlan};
 use crate::tensor::Matrix;
 
@@ -149,61 +150,83 @@ pub fn tw_matmul_into_with(a: &Matrix, plan: &TwPlan, c: &mut Matrix, cfg: &Tile
     }
 }
 
-/// Multi-threaded fused kernel: tiles are independent (they write disjoint
-/// output columns), so they parallelise across threads without locks.
-pub fn tw_matmul_parallel(a: &Matrix, plan: &TwPlan, threads: usize) -> Matrix {
-    let m = a.rows;
-    if threads <= 1 || plan.tiles < 2 {
-        return tw_matmul(a, plan);
+/// The thread count the tile-parallel kernel will actually use for a plan
+/// with `tiles` condensed tiles (tiles are the unit of parallelism, so a
+/// 1-tile plan runs serial regardless of budget).  Exposed so the
+/// autotuner can skip candidates that silently degrade to serial.
+pub fn tw_effective_parallel_threads(tiles: usize, threads: usize) -> usize {
+    if threads <= 1 || tiles < 2 {
+        1
+    } else {
+        threads.min(tiles)
     }
-    let mut c = Matrix::zeros(m, plan.n);
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let c_ptr = SendPtr(c.data.as_mut_ptr());
-    let n = plan.n;
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(plan.tiles) {
-            let next = &next;
-            let c_ptr = &c_ptr;
-            scope.spawn(move || {
-                let mut a_gather = vec![0.0f32; plan.kmax];
-                loop {
-                    let t = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if t >= plan.tiles {
-                        break;
-                    }
-                    let kt = plan.row_len[t] as usize;
-                    let width = (0..plan.g)
-                        .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < n)
-                        .count();
-                    if kt == 0 || width == 0 {
-                        continue;
-                    }
-                    let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
-                    for i in 0..m {
-                        let arow = a.row(i);
-                        for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
-                            *d = arow[r as usize];
-                        }
-                        for j in 0..width {
-                            let mut acc = 0.0f32;
-                            for ii in 0..kt {
-                                acc += a_gather[ii] * plan.b_cond[(t * plan.kmax + ii) * plan.g + j];
-                            }
-                            let cj = plan.col_idx[t * plan.g + j] as usize;
-                            // SAFETY: tiles own disjoint output columns
-                            unsafe { *c_ptr.0.add(i * n + cj) = acc };
-                        }
-                    }
-                }
-            });
-        }
-    });
+}
+
+/// Multi-threaded fused kernel on the global persistent pool (historical
+/// signature; see [`tw_matmul_parallel_into`]).
+pub fn tw_matmul_parallel(a: &Matrix, plan: &TwPlan, threads: usize) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, plan.n);
+    tw_matmul_parallel_into(a, plan, &mut c, &TileConfig::tw_default(), threads, pool::global());
     c
 }
 
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+/// In-place tile-parallel fused kernel: condensed tiles write disjoint
+/// output columns, so contiguous tile ranges are claimed from `pool`
+/// lock-free with no per-call thread spawns.  Like
+/// [`tw_matmul_into_with`], only *kept* output columns are written — the
+/// caller zeroes `c` if pruned columns may hold stale data.  Returns the
+/// effective thread count; on the serial fallback (1) the kernel honours
+/// the caller's tuned `cfg`.
+pub fn tw_matmul_parallel_into(
+    a: &Matrix,
+    plan: &TwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+) -> usize {
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
+    let eff = tw_effective_parallel_threads(plan.tiles, threads);
+    if eff == 1 {
+        tw_matmul_into_with(a, plan, c, cfg);
+        return 1;
+    }
+    let m = a.rows;
+    let n = plan.n;
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    pool.parallel_for(eff, |chunk| {
+        let (t0, t1) = split_range(plan.tiles, eff, chunk);
+        let mut a_gather = vec![0.0f32; plan.kmax];
+        for t in t0..t1 {
+            let kt = plan.row_len[t] as usize;
+            let width = (0..plan.g)
+                .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < n)
+                .count();
+            if kt == 0 || width == 0 {
+                continue;
+            }
+            let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+            for i in 0..m {
+                let arow = a.row(i);
+                for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
+                    *d = arow[r as usize];
+                }
+                for j in 0..width {
+                    let mut acc = 0.0f32;
+                    for ii in 0..kt {
+                        acc += a_gather[ii] * plan.b_cond[(t * plan.kmax + ii) * plan.g + j];
+                    }
+                    let cj = plan.col_idx[t * plan.g + j] as usize;
+                    // SAFETY: tiles own disjoint output columns, and tile
+                    // ranges are disjoint across chunks
+                    unsafe { *c_ptr.0.add(i * n + cj) = acc };
+                }
+            }
+        }
+    });
+    eff
+}
 
 #[cfg(test)]
 mod tests {

@@ -2,6 +2,7 @@
 //! fused kernel on the CPU.
 
 use super::TileConfig;
+use crate::pool::{split_range, SendPtr, ThreadPool};
 use crate::sparse::{TvwPlan, Vw24Plan};
 use crate::tensor::Matrix;
 
@@ -149,6 +150,173 @@ pub fn tvw_matmul_into_with(a: &Matrix, plan: &TvwPlan, c: &mut Matrix, cfg: &Ti
             }
         }
     }
+}
+
+/// The thread count the column-parallel 2:4 kernel will actually use for
+/// an output `n` columns wide: blocks narrower than 16 columns give up
+/// vectorization for nothing, so narrow problems run serial.  The single
+/// source of truth for the kernel and the autotuner's phantom-parallelism
+/// guard.
+pub fn vw24_effective_parallel_threads(n: usize, threads: usize) -> usize {
+    if threads <= 1 || n < threads * 16 {
+        1
+    } else {
+        threads
+    }
+}
+
+/// The thread count the tile-parallel TVW kernel will actually use for a
+/// plan with `tiles` condensed tiles (the unit of parallelism — twin of
+/// [`crate::gemm::tw_effective_parallel_threads`]).
+pub fn tvw_effective_parallel_threads(tiles: usize, threads: usize) -> usize {
+    if threads <= 1 || tiles < 2 {
+        1
+    } else {
+        threads.min(tiles)
+    }
+}
+
+/// In-place multi-threaded 2:4 kernel: the output is partitioned into
+/// disjoint *column blocks* (each claimed from `pool`), because at
+/// serving-sized M (batch ≤ 32) the column dimension is the only axis
+/// wide enough to feed many threads.  Every block walks all compressed
+/// K-groups over its own column range, so blocks never overlap a write.
+/// `c` is fully overwritten.  Returns the effective thread count; on the
+/// serial fallback (1) the kernel honours the caller's tuned `cfg`.
+pub fn vw24_matmul_parallel_into(
+    a: &Matrix,
+    plan: &Vw24Plan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+) -> usize {
+    assert_eq!(a.cols, plan.k);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
+    let (m, n) = (a.rows, plan.n);
+    let eff = vw24_effective_parallel_threads(n, threads);
+    if eff == 1 {
+        vw24_matmul_into_with(a, plan, c, cfg);
+        return 1;
+    }
+    let groups = plan.k / 4;
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    pool.parallel_for(eff, |chunk| {
+        let (j0, j1) = split_range(n, eff, chunk);
+        if j0 >= j1 {
+            return;
+        }
+        let width = j1 - j0;
+        for i in 0..m {
+            // SAFETY: column ranges are disjoint across chunks
+            let crow = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n + j0), width) };
+            crow.fill(0.0);
+        }
+        for g in 0..groups {
+            let v0 = &plan.b_vals[(g * 2) * n + j0..(g * 2) * n + j1];
+            let s0 = &plan.b_sel[(g * 2) * n + j0..(g * 2) * n + j1];
+            let v1 = &plan.b_vals[(g * 2 + 1) * n + j0..(g * 2 + 1) * n + j1];
+            let s1 = &plan.b_sel[(g * 2 + 1) * n + j0..(g * 2 + 1) * n + j1];
+            for i in 0..m {
+                let arow = a.row(i);
+                let a4 = [arow[g * 4], arow[g * 4 + 1], arow[g * 4 + 2], arow[g * 4 + 3]];
+                if a4 == [0.0; 4] {
+                    continue;
+                }
+                // SAFETY: as above — this chunk owns columns j0..j1
+                let crow =
+                    unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n + j0), width) };
+                for j in 0..width {
+                    crow[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+                }
+            }
+        }
+    });
+    eff
+}
+
+/// In-place tile-parallel TVW fused kernel: like the TW twin
+/// ([`crate::gemm::tw_matmul_parallel_into`]), condensed tiles own
+/// disjoint output columns, so contiguous tile ranges are claimed from
+/// `pool` lock-free.  `c` is fully overwritten (pruned columns zeroed).
+/// Returns the effective thread count; on the serial fallback (1) the
+/// kernel honours the caller's tuned `cfg`.
+pub fn tvw_matmul_parallel_into(
+    a: &Matrix,
+    plan: &TvwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+) -> usize {
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
+    let eff = tvw_effective_parallel_threads(plan.tiles, threads);
+    if eff == 1 {
+        tvw_matmul_into_with(a, plan, c, cfg);
+        return 1;
+    }
+    let m = a.rows;
+    let n = plan.n;
+    let khalf = plan.kmax / 2;
+    c.data.fill(0.0);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    pool.parallel_for(eff, |chunk| {
+        let (t0, t1) = split_range(plan.tiles, eff, chunk);
+        let mut a_gather = vec![0.0f32; plan.kmax];
+        let mut c_tile = vec![0.0f32; plan.g];
+        for t in t0..t1 {
+            let kt = plan.row_len[t] as usize;
+            let width = (0..plan.g)
+                .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < n)
+                .count();
+            if kt == 0 || width == 0 {
+                continue;
+            }
+            let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+            let groups_max = kt.div_ceil(4).min(plan.kmax / 4);
+            for i in 0..m {
+                let arow = a.row(i);
+                for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
+                    *d = arow[r as usize];
+                }
+                for x in a_gather[kt..plan.kmax].iter_mut() {
+                    *x = 0.0;
+                }
+                c_tile[..width].fill(0.0);
+                for g in 0..groups_max {
+                    let a4 = [
+                        a_gather[g * 4],
+                        a_gather[g * 4 + 1],
+                        a_gather[g * 4 + 2],
+                        a_gather[g * 4 + 3],
+                    ];
+                    if a4 == [0.0; 4] {
+                        continue;
+                    }
+                    let base0 = (t * khalf + g * 2) * plan.g;
+                    let base1 = (t * khalf + g * 2 + 1) * plan.g;
+                    let v0 = &plan.b_vals[base0..base0 + width];
+                    let s0 = &plan.b_sel[base0..base0 + width];
+                    let v1 = &plan.b_vals[base1..base1 + width];
+                    let s1 = &plan.b_sel[base1..base1 + width];
+                    for j in 0..width {
+                        c_tile[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+                    }
+                }
+                for j in 0..width {
+                    let cj = plan.col_idx[t * plan.g + j] as usize;
+                    // SAFETY: tiles own disjoint output columns, and tile
+                    // ranges are disjoint across chunks; each (row, tile)
+                    // pair is visited exactly once, so assignment over the
+                    // pre-zeroed output equals the serial accumulate
+                    unsafe { *c_ptr.0.add(i * n + cj) = c_tile[j] };
+                }
+            }
+        }
+    });
+    eff
 }
 
 #[cfg(test)]

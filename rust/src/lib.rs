@@ -12,6 +12,9 @@
 //! - [`pruner`] — Algorithm 1 multi-stage schedule + global budget
 //! - [`gemm`] — CPU GEMM hot paths (dense, TW fused-CTO, 2:4, TVW, SpMM),
 //!   parameterised by [`gemm::TileConfig`] cache-blocking
+//! - [`pool`] — persistent work-chunking thread pool: every parallel
+//!   kernel path runs on it (no per-call thread spawns); serving workers
+//!   share an intra-op instance, benches/autotune use the global one
 //! - [`gpusim`] — A100-class analytical latency simulator
 //! - [`autotune`] — empirical kernel autotuner: candidate space, gpusim
 //!   pre-filter, wall-clock measurement, persistent plan cache
@@ -38,6 +41,7 @@ pub mod gpusim;
 pub mod json;
 pub mod models;
 pub mod nn;
+pub mod pool;
 pub mod pruner;
 pub mod quant;
 pub mod runtime;

@@ -37,8 +37,9 @@ fn main() {
                 "usage: tilewise <command>\n\
                  \n\
                  commands:\n\
-                 \x20 serve [--backend pjrt|native] [--workers N] [--artifacts DIR] [--requests N] [--rate RPS]\n\
-                 \x20       [--policy dense|tw|tvw|rr|adaptive|tuned] [--plan-cache FILE] [--model NAME]\n\
+                 \x20 serve [--backend pjrt|native] [--workers N] [--intra-threads N] [--artifacts DIR]\n\
+                 \x20       [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
+                 \x20       [--plan-cache FILE] [--model NAME]\n\
                  \x20 autotune [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--out FILE]\n\
                  \x20          [--threads T] [--m-cap M] [--budget-ms MS] [--quick]\n\
                  \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
@@ -139,6 +140,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     let dir = PathBuf::from(flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
     let backend_name = flag(args, "--backend").unwrap_or_else(|| "pjrt".into());
     let workers: usize = flag(args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(1);
+    // intra-op kernel lanes of the shared pool (DESIGN.md §5): default
+    // serial; size workers + intra_threads - 1 near the core count
+    let intra_threads: usize =
+        flag(args, "--intra-threads").and_then(|v| v.parse().ok()).unwrap_or(1);
     let requests: usize = flag(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
     let rate: f64 = flag(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(50.0);
     let plan_cache = flag(args, "--plan-cache").map(PathBuf::from);
@@ -175,6 +180,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         max_queue: 0,
         plan_cache: plan_cache.clone(),
         workers,
+        intra_threads,
     };
     let mut native_cache: Option<Arc<PlanCache>> = None;
     let started = match backend_name.as_str() {
@@ -222,7 +228,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     println!(
-        "serving[{backend_name}]: workers={} batch={} seq={} d_model={} classes={}",
+        "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={}",
         handle.workers, handle.batch, handle.seq, handle.d_model, handle.n_classes
     );
     let len = handle.seq * handle.d_model;

@@ -1,0 +1,385 @@
+//! Persistent work-chunking thread pool — the kernel-level parallel
+//! runtime every multi-threaded GEMM path runs on.
+//!
+//! Before this module existed each parallel kernel call spawned fresh
+//! `std::thread::scope` threads, a fixed per-call cost (tens of
+//! microseconds for an 8-way spawn+join) the serving hot loop paid on
+//! every request even though the kernels themselves finish in comparable
+//! time at serving-sized M.  The pool amortises that cost: workers are
+//! spawned once, park on a condvar, and claim *chunks* of submitted jobs
+//! through an atomic cursor — the CPU analogue of the paper's insight
+//! that condensed tiles are independently schedulable units.
+//!
+//! Design points:
+//!
+//! - **Scoped, blocking submission.** [`ThreadPool::parallel_for`] does
+//!   not return until every chunk has run, so tasks may borrow the
+//!   caller's stack (operands, output slices) without `'static` bounds —
+//!   the same contract as `std::thread::scope`, minus the spawn cost.
+//! - **The caller is a lane.** A pool configured for `t` threads spawns
+//!   `t - 1` workers; the submitting thread claims chunks alongside them.
+//!   `ThreadPool::new(1)` therefore spawns nothing and `parallel_for`
+//!   degrades to a plain serial loop — no pool, no overhead.
+//! - **Work-claiming, not work-splitting.** Chunks are claimed via
+//!   `fetch_add`, so an oversubscribed pool (more chunks than lanes, or
+//!   several jobs queued by concurrent serving workers) drains in claim
+//!   order without any rebalancing logic.
+//! - **Panic containment.** A panicking task poisons nothing: the worker
+//!   catches the unwind, the job completes, and the *submitting* thread
+//!   re-panics after the last chunk finishes.  Pool workers survive and
+//!   keep serving subsequent jobs.
+//!
+//! Kernels parallelise over **disjoint output ranges** (row bands for
+//! dense, condensed-tile ranges for TW/TVW, column blocks for 2:4), so
+//! chunk tasks never overlap a write; [`SendPtr`] is the shared escape
+//! hatch for the column-strided cases where `chunks_mut` cannot express
+//! the partition.
+//!
+//! See `docs/DESIGN.md` §5 for how this pool composes with the serving
+//! coordinator's inter-request worker pool.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One submitted `parallel_for`: a type-erased task plus claim/completion
+/// state.  The submitting thread keeps the closure alive until `pending`
+/// reaches zero, which is what makes the `'static` erasure sound.
+struct Job {
+    /// Pointer to the submitting caller's closure with its lifetime
+    /// erased.  A raw pointer (not a reference) on purpose: the Job can
+    /// outlive the closure inside worker-held `Arc`s, and it is only
+    /// *dereferenced* for successfully claimed chunks — which cannot
+    /// happen after the submitting call returned.
+    task: *const (dyn Fn(usize) + Sync),
+    n_chunks: usize,
+    /// Claim cursor: `fetch_add` hands out chunk indices.
+    next: AtomicUsize,
+    /// Chunks not yet finished; the job is complete at zero.
+    pending: AtomicUsize,
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `task` targets a `Sync` closure kept alive by the submitting
+// thread until `pending` reaches zero (see [`ThreadPool::parallel_for`]);
+// every other field is a thread-safe primitive.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n_chunks
+    }
+
+    /// Claim and run chunks until none remain to claim.  Returns once this
+    /// thread can contribute nothing further (other lanes may still be
+    /// finishing their claimed chunks).
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_chunks {
+                return;
+            }
+            // SAFETY: chunk `i` was claimed, so the submitting thread is
+            // still blocked in `parallel_for` and the closure is alive.
+            let task = unsafe { &*self.task };
+            if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Queue {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+}
+
+/// The persistent pool.  Sized once; shared freely (`Arc<ThreadPool>`)
+/// across serving workers, the autotuner, and benches.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    threads: usize,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// A pool presenting `threads` lanes of parallelism: `threads - 1`
+    /// pinned workers plus the submitting caller.  `new(1)` (and `new(0)`)
+    /// spawn nothing and run everything inline.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let joins = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("tilewise-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, threads, joins }
+    }
+
+    /// The lane count this pool was configured for (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(0..n_chunks)` across the pool and the calling thread;
+    /// returns only after every chunk has finished.  Chunks must write
+    /// disjoint data.  If any chunk panics, the panic is re-raised *here*
+    /// after the job completes; the pool itself survives.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n_chunks: usize, task: F) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.joins.is_empty() || n_chunks == 1 {
+            for i in 0..n_chunks {
+                task(i);
+            }
+            return;
+        }
+        let task: &(dyn Fn(usize) + Sync) = &task;
+        // SAFETY (lifetime erasure): this function blocks until `pending`
+        // hits zero, so the closure outlives every dereference; workers
+        // never dereference the pointer once all chunks are claimed.
+        let task: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let job = Arc::new(Job {
+            task,
+            n_chunks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_chunks),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        self.shared.queue.lock().unwrap().jobs.push_back(job.clone());
+        self.shared.work_cv.notify_all();
+        // the submitting thread is a full lane
+        job.work();
+        let mut done = job.done.lock().unwrap();
+        while !*done {
+            done = job.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("a task submitted to the thread pool panicked");
+        }
+    }
+
+    /// Split `data` into disjoint `chunk_len`-element chunks and run
+    /// `task(chunk_index, chunk)` across the pool — the safe row-band
+    /// idiom (a row-major matrix with `chunk_len = band_rows * cols`).
+    pub fn for_each_chunk_mut<T, F>(&self, data: &mut [T], chunk_len: usize, task: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        let total = data.len();
+        let n_chunks = total.div_ceil(chunk_len);
+        let base = SendPtr(data.as_mut_ptr());
+        self.parallel_for(n_chunks, |i| {
+            let lo = i * chunk_len;
+            let len = chunk_len.min(total - lo);
+            // SAFETY: chunks are disjoint by construction and `data`'s
+            // borrow is held across the blocking parallel_for call.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), len) };
+            task(i, chunk);
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // drop fully-claimed jobs; their completion is tracked by
+                // `pending`, not by queue residency
+                q.jobs.retain(|j| !j.exhausted());
+                if q.shutdown {
+                    return;
+                }
+                if let Some(j) = q.jobs.front() {
+                    break j.clone();
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        job.work();
+    }
+}
+
+/// The process-wide pool, lazily sized to the host's available
+/// parallelism.  The serial-signature kernel wrappers
+/// (`gemm::matmul_parallel`, `gemm::tw_matmul_parallel`) and the
+/// autotuner's measurement harness run here, so tuned `threads` axes
+/// reflect the same runtime the serving stack uses.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        ThreadPool::new(std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1))
+    })
+}
+
+/// Contiguous range of `n` items owned by chunk `i` of `chunks`:
+/// `[i * ceil(n / chunks), min((i + 1) * ceil(n / chunks), n))`.
+/// Tail chunks may be empty when `chunks` does not divide `n`.
+pub fn split_range(n: usize, chunks: usize, i: usize) -> (usize, usize) {
+    let per = n.div_ceil(chunks.max(1));
+    let lo = (i * per).min(n);
+    let hi = ((i + 1) * per).min(n);
+    (lo, hi)
+}
+
+/// `Send + Sync` raw-pointer wrapper for kernels whose disjoint output
+/// partition is column-strided (TW/TVW tile scatter, 2:4 column blocks)
+/// and therefore inexpressible as `chunks_mut`.  Safety is the caller's:
+/// tasks must write disjoint elements only.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn reuse_across_calls_accumulates() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.parallel_for(16, |i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * (0..16).sum::<usize>());
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(8, |i| {
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 36);
+    }
+
+    #[test]
+    fn panicking_task_is_contained_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(16, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must surface at the submitting thread");
+        // workers survive: the pool still completes fresh jobs
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(16, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..16).sum::<usize>());
+    }
+
+    #[test]
+    fn for_each_chunk_mut_partitions_disjointly() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u32; 103]; // deliberately not chunk-aligned
+        pool.for_each_chunk_mut(&mut data, 10, |ci, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + ci as u32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, 1 + (i / 10) as u32, "element {i}");
+        }
+    }
+
+    #[test]
+    fn split_range_covers_and_never_overlaps() {
+        for &(n, chunks) in &[(10usize, 3usize), (7, 7), (5, 8), (0, 4), (64, 4)] {
+            let mut covered = 0usize;
+            let mut prev_hi = 0usize;
+            for i in 0..chunks {
+                let (lo, hi) = split_range(n, chunks, i);
+                assert!(lo >= prev_hi, "n={n} chunks={chunks} i={i}");
+                assert!(hi <= n);
+                covered += hi - lo;
+                prev_hi = prev_hi.max(hi);
+            }
+            assert_eq!(covered, n, "n={n} chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn oversubscription_more_chunks_than_lanes() {
+        let pool = ThreadPool::new(2);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(256, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..256).sum::<usize>());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let p1 = global();
+        let p2 = global();
+        assert!(std::ptr::eq(p1, p2));
+        assert!(p1.threads() >= 1);
+        let sum = AtomicUsize::new(0);
+        p1.parallel_for(32, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..32).sum::<usize>());
+    }
+}

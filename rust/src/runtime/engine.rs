@@ -13,6 +13,13 @@
 //! `exec::Backend` trait (DESIGN.md §5); `exec::NativeBackend` is the
 //! artifact-free alternative that runs the CPU kernels in-process.
 
+// The engine compiles against the in-tree `xla_stub` (API-shaped, fails
+// at load) so `--features pjrt` type-checks offline and this file cannot
+// bit-rot.  With the real `xla` crate in [dependencies], delete this
+// import to link against it instead.
+#[cfg(feature = "pjrt")]
+use crate::runtime::xla_stub as xla;
+
 #[cfg(feature = "pjrt")]
 use std::path::Path;
 

@@ -7,6 +7,8 @@
 
 pub mod bundle;
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub(crate) mod xla_stub;
 
 pub use bundle::{Bundle, Dtype, ExecutableMeta, Meta, TensorEntry};
 pub use engine::{Engine, InputData, LoadedExecutable};

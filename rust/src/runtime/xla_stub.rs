@@ -1,0 +1,102 @@
+//! Offline stand-in for the external `xla` crate, just wide enough for
+//! `runtime::engine` to **type-check** under `--features pjrt` with no
+//! registry access.
+//!
+//! The real PJRT engine code in `engine.rs` used to bit-rot silently: the
+//! `pjrt` feature could never be built offline (it needs the `xla` crate),
+//! so nothing compiled that half of the file.  This module restores the
+//! compile coverage: every entry point the engine calls exists here with
+//! the same shape, and the two fallible constructors
+//! ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) fail at
+//! runtime — so the engine's degradation path ("fails at load, callers
+//! fall back to the native backend") is identical to the featureless
+//! stub, while the full engine source stays live under the type checker.
+//!
+//! Swapping in the real runtime is a two-line change: add the `xla` crate
+//! under `[dependencies]` and delete the `use crate::runtime::xla_stub as
+//! xla;` import in `engine.rs`.
+
+use std::fmt;
+
+/// Error type matching the engine's `{e:?}` formatting of xla errors.
+pub struct XlaError(&'static str);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+const UNAVAILABLE: &str = "xla stub: the external `xla` crate is not in the offline registry; \
+     the PJRT engine fails at load and callers degrade to the native backend";
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(UNAVAILABLE))
+}
+
+pub struct PjRtClient(());
+pub struct PjRtBuffer(());
+pub struct PjRtLoadedExecutable(());
+pub struct HloModuleProto(());
+pub struct XlaComputation(());
+pub struct Literal(());
+
+impl PjRtClient {
+    /// Always fails: the stub has no runtime behind it.  Everything below
+    /// is unreachable in practice (no client ⇒ no buffers/executables)
+    /// but keeps the engine's call sites type-checked.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, XlaError> {
+        unavailable()
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+impl Literal {
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}

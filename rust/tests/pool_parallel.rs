@@ -1,0 +1,211 @@
+//! Integration tests for the persistent pool runtime and the pooled
+//! parallel kernel paths: pool reuse / containment / oversubscription,
+//! and parity of every `*_parallel_into` kernel against its serial
+//! oracle at 1e-4 across odd shapes and thread counts.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use tilewise::gemm::{
+    matmul_naive, matmul_parallel_into, tvw_matmul_parallel_into, tvw_matmul_with,
+    tw_matmul_parallel_into, tw_matmul_with, vw24_matmul_parallel_into, vw24_matmul_with,
+    TileConfig,
+};
+use tilewise::pool::ThreadPool;
+use tilewise::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+// ---- pool runtime behaviour ----
+
+#[test]
+fn pool_is_reused_across_many_calls() {
+    let pool = ThreadPool::new(4);
+    let counter = AtomicUsize::new(0);
+    for round in 0..100 {
+        pool.parallel_for(8, |i| {
+            counter.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 36);
+    }
+}
+
+#[test]
+fn panic_in_task_is_contained() {
+    let pool = ThreadPool::new(3);
+    for _ in 0..5 {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(12, |i| {
+                if i % 5 == 2 {
+                    panic!("task failure");
+                }
+            });
+        }));
+        assert!(r.is_err());
+    }
+    // all workers survived every panicking job
+    let ok = AtomicUsize::new(0);
+    pool.parallel_for(12, |_| {
+        ok.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(ok.load(Ordering::Relaxed), 12);
+}
+
+#[test]
+fn oversubscribed_pools_and_jobs_complete() {
+    // more lanes than the host has cores, and more chunks than lanes
+    let pool = ThreadPool::new(32);
+    let sum = AtomicUsize::new(0);
+    pool.parallel_for(500, |i| {
+        sum.fetch_add(i, Ordering::Relaxed);
+    });
+    assert_eq!(sum.load(Ordering::Relaxed), (0..500).sum::<usize>());
+    // tiny pool, many concurrent submissions from scope threads
+    let small = ThreadPool::new(2);
+    let total = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let small = &small;
+            let total = &total;
+            scope.spawn(move || {
+                for _ in 0..10 {
+                    small.parallel_for(16, |_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 16);
+}
+
+// ---- parallel-kernel parity vs serial oracles ----
+
+const ODD_SHAPES: [(usize, usize, usize); 4] =
+    [(1, 64, 48), (7, 96, 80), (13, 64, 112), (37, 128, 96)];
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+#[test]
+fn dense_parallel_into_matches_naive() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(0xD0);
+    for &(m, k, n) in &[(16usize, 33usize, 29usize), (64, 96, 80), (37, 53, 41)] {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let want = matmul_naive(&a, &b);
+        for &t in &THREADS {
+            let mut c = Matrix::zeros(m, n);
+            for v in &mut c.data {
+                *v = 1e9; // stale output must be overwritten
+            }
+            let eff = matmul_parallel_into(&a, &b, &mut c, &TileConfig::new(16, 32), t, &pool);
+            assert!(eff >= 1 && eff <= t.max(1));
+            assert!(c.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn tw_parallel_into_matches_serial_oracle() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(0xD1);
+    for &(m, k, n) in &ODD_SHAPES {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        let tw = prune_tw(&w, 0.6, 16, None);
+        let plan = TwPlan::encode(&w, &tw);
+        let want = tw_matmul_with(&a, &plan, &TileConfig::tw_default());
+        for &t in &THREADS {
+            let mut c = Matrix::zeros(m, n);
+            tw_matmul_parallel_into(&a, &plan, &mut c, &TileConfig::tw_default(), t, &pool);
+            assert!(c.max_abs_diff(&want) < 1e-4, "{m}x{k}x{n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn tvw_parallel_into_matches_serial_oracle() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(0xD2);
+    for &(m, k, n) in &ODD_SHAPES {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        for &s in &[0.5, 0.75, 0.875] {
+            let (tw, mask) = prune_tvw(&w, s, 16);
+            let plan = TvwPlan::encode(&w, &tw, &mask);
+            let want = tvw_matmul_with(&a, &plan, &TileConfig::tvw_default());
+            for &t in &THREADS {
+                let mut c = Matrix::zeros(m, n);
+                for v in &mut c.data {
+                    *v = -1e9; // pruned columns must come back zeroed
+                }
+                let cfg = TileConfig::tvw_default();
+                let eff = tvw_matmul_parallel_into(&a, &plan, &mut c, &cfg, t, &pool);
+                assert!(eff >= 1);
+                assert!(c.max_abs_diff(&want) < 1e-4, "{m}x{k}x{n} s={s} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn vw24_parallel_into_matches_serial_oracle() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(0xD3);
+    for &(m, k, n) in &ODD_SHAPES {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        let mask = prune_vw(&w, 0.5, 4);
+        let plan = Vw24Plan::encode(&w, &mask).expect("4-aligned K");
+        let want = vw24_matmul_with(&a, &plan, &TileConfig::vw_default());
+        for &t in &THREADS {
+            let mut c = Matrix::zeros(m, n);
+            for v in &mut c.data {
+                *v = 1e9;
+            }
+            let cfg = TileConfig::vw_default();
+            let eff = vw24_matmul_parallel_into(&a, &plan, &mut c, &cfg, t, &pool);
+            assert!(eff >= 1);
+            assert!(c.max_abs_diff(&want) < 1e-4, "{m}x{k}x{n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn parallel_kernels_share_one_pool_concurrently() {
+    // several "serving workers" hammer one shared intra-op pool with
+    // different kernel families at once — the two-level serving shape
+    let pool = ThreadPool::new(3);
+    let mut rng = Rng::new(0xD4);
+    let (m, k, n) = (24usize, 64usize, 96usize);
+    let a = Matrix::randn(m, k, &mut rng);
+    let w = Matrix::randn(k, n, &mut rng);
+    let tw = prune_tw(&w, 0.6, 16, None);
+    let tw_plan = TwPlan::encode(&w, &tw);
+    let (tvw_tw, tvw_mask) = prune_tvw(&w, 0.75, 16);
+    let tvw_plan = TvwPlan::encode(&w, &tvw_tw, &tvw_mask);
+    let want_tw = tw_matmul_with(&a, &tw_plan, &TileConfig::tw_default());
+    let want_tvw = tvw_matmul_with(&a, &tvw_plan, &TileConfig::tvw_default());
+    std::thread::scope(|scope| {
+        for worker in 0..4 {
+            let (pool, a) = (&pool, &a);
+            let (tw_plan, tvw_plan) = (&tw_plan, &tvw_plan);
+            let (want_tw, want_tvw) = (&want_tw, &want_tvw);
+            scope.spawn(move || {
+                let mut c = Matrix::zeros(m, n);
+                for round in 0..8 {
+                    if (worker + round) % 2 == 0 {
+                        let cfg = TileConfig::tw_default();
+                        tw_matmul_parallel_into(a, tw_plan, &mut c, &cfg, 3, pool);
+                        assert!(c.max_abs_diff(want_tw) < 1e-4);
+                        c.data.fill(0.0);
+                    } else {
+                        let cfg = TileConfig::tvw_default();
+                        tvw_matmul_parallel_into(a, tvw_plan, &mut c, &cfg, 3, pool);
+                        assert!(c.max_abs_diff(want_tvw) < 1e-4);
+                    }
+                }
+            });
+        }
+    });
+}
