@@ -6,9 +6,11 @@
 //!
 //! With an artifact directory (`make artifacts` + `--features pjrt`) the
 //! PJRT engine executes the AOT executables; without one the example
-//! degrades to the native backend, which packs TW/TVW/2:4 plans at load
-//! and runs the paper's CPU kernels in-process — so this example works on
-//! a bare checkout.
+//! degrades to the native backend, which compiles the residual-MLP spec
+//! into a layer graph (DESIGN.md §6), packs TW/TVW/2:4 plans at load, and
+//! runs the paper's CPU kernels in-process — so this example works on a
+//! bare checkout.  `examples/serve_zoo.rs` does the same for the real
+//! zoo models (BERT / VGG / NMT).
 //!
 //!   cargo run --release --example serve_transformer [artifact_dir]
 

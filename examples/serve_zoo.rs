@@ -1,0 +1,85 @@
+//! Serve the model zoo through the layer-graph IR (DESIGN.md §6).
+//!
+//! Compiles each zoo model — BERT encoder, VGG conv chain, NMT stacked
+//! LSTM — into per-variant graph programs (weights pruned and packed once
+//! into dense / TW fused-CTO / TVW forms), then drives the full serving
+//! stack (router + dynamic batcher + worker pool) against every variant
+//! and reports per-variant latency percentiles.
+//!
+//!   cargo run --release --example serve_zoo [bert|vgg|nmt]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tilewise::coordinator::{start_with_backend, BatcherConfig, Policy, ServerConfig};
+use tilewise::exec::{Backend, ZooBackend, ZooSpec};
+use tilewise::util::Rng;
+
+fn main() -> tilewise::error::Result<()> {
+    let only = std::env::args().nth(1);
+    let models: Vec<&str> = match only.as_deref() {
+        Some(m) => vec![match m {
+            "bert" => "bert",
+            "vgg" => "vgg",
+            "nmt" => "nmt",
+            other => {
+                eprintln!("unknown zoo model {other:?} (expected bert|vgg|nmt)");
+                std::process::exit(2);
+            }
+        }],
+        None => vec!["bert", "vgg", "nmt"],
+    };
+    let variants = ["model_dense", "model_tw", "model_tvw"];
+    let requests = 32;
+
+    for model in models {
+        let spec = ZooSpec::for_model(model)?;
+        println!(
+            "== {model}: compiling {} variant graphs (sparsity {:.0}%, G={}) ==",
+            variants.len(),
+            spec.sparsity * 100.0,
+            spec.g
+        );
+        let t0 = std::time::Instant::now();
+        let backend: Arc<dyn Backend> = Arc::new(ZooBackend::new(spec, None)?);
+        println!("packed in {:.2}s", t0.elapsed().as_secs_f64());
+
+        for variant in variants {
+            let cfg = ServerConfig {
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+                policy: Policy::Fixed(variant.into()),
+                workers: 2,
+                ..ServerConfig::default()
+            };
+            let handle = start_with_backend(backend.clone(), cfg)?;
+            let len = handle.seq * handle.d_model;
+            let mut rng = Rng::new(7);
+            let pending: Vec<_> = (0..requests)
+                .map(|_| {
+                    let x: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.3).collect();
+                    handle.submit(x, None)
+                })
+                .collect();
+            let mut ok = 0;
+            for rx in pending {
+                if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+                    ok += 1;
+                }
+            }
+            for s in handle.metrics.snapshot() {
+                println!(
+                    "  {:<12} n={:<3} ok={ok:<3} mean={:>7.2}ms p50={:>7.2}ms p99={:>7.2}ms batch={:.1}",
+                    s.variant, s.count, s.mean_ms, s.p50_ms, s.p99_ms, s.mean_batch
+                );
+            }
+        }
+        println!();
+    }
+    println!(
+        "note: every model above ran end-to-end through the compiled layer\n\
+         graph — img2col, attention, LSTM steps, and all GEMMs through the\n\
+         packed TW/TVW kernels — with zero per-request allocations in graph\n\
+         execution (the workspace arena is reused across requests)."
+    );
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! Bench: end-to-end forward latency of every servable zoo model through
+//! the layer-graph IR, per sparsity pattern, dense-normalized like the
+//! paper's Fig. 10 — plus the buffered-attention micro-benchmark (the
+//! `attention_into` workspace path vs the historical per-head-allocating
+//! implementation).  Emits `BENCH_models.json`.
+//!
+//!   cargo bench --bench model_forward
+//!   PALLAS_BENCH_QUICK=1 cargo bench --bench model_forward   # CI profile
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, quick_mode, section};
+use tilewise::exec::{Backend, PreparedModel, ZooBackend, ZooSpec};
+use tilewise::gemm::matmul;
+use tilewise::json::{arr, num, obj, s};
+use tilewise::nn::{attention_forward, attention_forward_unbuffered};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+const VARIANTS: [&str; 4] = ["model_dense", "model_tw", "model_tvw", "model_vw24"];
+
+fn bench_spec(model: &str) -> ZooSpec {
+    let mut spec = ZooSpec::for_model(model).expect("zoo model");
+    if quick_mode() {
+        match model {
+            "bert" => {
+                spec.batch = 1;
+                spec.seq = 16;
+                spec.width = 256;
+                spec.n_layers = 1;
+            }
+            "vgg" => {
+                spec.width_div = 4;
+                spec.fc_dim = 256;
+            }
+            _ => {
+                spec.batch = 8;
+                spec.width = 128;
+                spec.seq = 4;
+            }
+        }
+    } else {
+        match model {
+            "bert" => {
+                spec.batch = 2;
+                spec.seq = 32;
+                spec.width = 512;
+                spec.heads = 8;
+                spec.n_layers = 1;
+            }
+            "vgg" => {
+                spec.width_div = 2;
+                spec.fc_dim = 512;
+            }
+            _ => {
+                spec.batch = 32;
+                spec.width = 256;
+                spec.seq = 8;
+            }
+        }
+    }
+    spec.with_variants(&VARIANTS)
+}
+
+struct PatternCell {
+    variant: &'static str,
+    us: f64,
+    speedup: f64,
+}
+
+fn main() {
+    let mut model_docs = Vec::new();
+    let mut bert_tw_speedup = 0.0f64;
+
+    for model in ["bert", "vgg", "nmt"] {
+        let spec = bench_spec(model);
+        section(&format!(
+            "{model} end-to-end forward (batch {}, seq {}, width {}, sparsity {:.0}%, G={})",
+            spec.batch,
+            spec.seq,
+            spec.width,
+            spec.sparsity * 100.0,
+            spec.g
+        ));
+        let t0 = std::time::Instant::now();
+        let backend = ZooBackend::new(spec.clone(), None).expect("compile zoo graphs");
+        let mut prepared = backend.load().expect("load graph model");
+        let pack_secs = t0.elapsed().as_secs_f64();
+        println!("compiled + packed {} variants in {pack_secs:.2}s", VARIANTS.len());
+        let dims = backend.dims();
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> =
+            (0..dims.batch * dims.per_request_len()).map(|_| rng.normal_f32() * 0.3).collect();
+
+        let mut cells: Vec<PatternCell> = Vec::new();
+        let mut dense_us = 0.0f64;
+        for variant in VARIANTS {
+            let us = bench(&format!("{model} {variant}"), || {
+                let out = prepared.run(variant, &x).expect("forward");
+                assert!(out[0].is_finite());
+            });
+            if variant == "model_dense" {
+                dense_us = us;
+            }
+            let speedup = if us > 0.0 { dense_us / us } else { 1.0 };
+            cells.push(PatternCell { variant, us, speedup });
+        }
+        println!("dense-normalized speedups (Fig. 10 shape):");
+        for c in &cells {
+            println!("  {:<14} {:>10.1} us   {:>6.2}x", c.variant, c.us, c.speedup);
+            if model == "bert" && c.variant == "model_tw" {
+                bert_tw_speedup = c.speedup;
+            }
+        }
+        model_docs.push(obj(vec![
+            ("model", s(model)),
+            ("batch", num(dims.batch as f64)),
+            ("seq", num(dims.seq as f64)),
+            ("d_model", num(dims.d_model as f64)),
+            ("n_classes", num(dims.n_classes as f64)),
+            ("sparsity", num(spec.sparsity)),
+            ("g", num(spec.g as f64)),
+            (
+                "patterns",
+                arr(cells
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("variant", s(c.variant)),
+                            ("us", num(c.us)),
+                            ("speedup_vs_dense", num(c.speedup)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]));
+    }
+    if bert_tw_speedup < 1.0 {
+        println!(
+            "warning: BERT TW end-to-end speedup {bert_tw_speedup:.2}x < 1 on this host \
+             (gather/scatter overhead exceeded the FLOP saving at these dims)"
+        );
+    }
+
+    // satellite: the buffered attention core vs the historical per-head
+    // allocating implementation (scores realloc + strided V walks)
+    let (seq, d, heads) = if quick_mode() { (32, 128, 4) } else { (64, 256, 8) };
+    section(&format!("attention core: buffered workspace vs unbuffered baseline ({seq}x{d}, {heads} heads)"));
+    let mut rng = Rng::new(12);
+    let x = Matrix::randn(seq, d, &mut rng);
+    let wqkv = Matrix::randn(d, 3 * d, &mut rng);
+    let wout = Matrix::randn(d, d, &mut rng);
+    let unbuffered_us = bench("attention unbuffered (legacy)", || {
+        let y = attention_forward_unbuffered(&x, &wqkv, &wout, heads, |a, b| matmul(a, b));
+        assert!(y.at(0, 0).is_finite());
+    });
+    let buffered_us = bench("attention buffered (_into path)", || {
+        let y = attention_forward(&x, &wqkv, &wout, heads, |a, b| matmul(a, b));
+        assert!(y.at(0, 0).is_finite());
+    });
+    let attn_speedup = if buffered_us > 0.0 { unbuffered_us / buffered_us } else { 1.0 };
+    println!("buffered attention speedup: {attn_speedup:.2}x");
+
+    let doc = obj(vec![
+        ("bench", s("model_forward")),
+        ("backend", s("graph-zoo")),
+        ("quick", num(if quick_mode() { 1.0 } else { 0.0 })),
+        ("models", arr(model_docs)),
+        (
+            "attention",
+            obj(vec![
+                ("seq", num(seq as f64)),
+                ("d_model", num(d as f64)),
+                ("heads", num(heads as f64)),
+                ("unbuffered_us", num(unbuffered_us)),
+                ("buffered_us", num(buffered_us)),
+                ("speedup", num(attn_speedup)),
+            ]),
+        ),
+    ]);
+    let out = "BENCH_models.json";
+    match std::fs::write(out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("writing {out}: {e}"),
+    }
+}

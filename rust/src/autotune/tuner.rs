@@ -232,10 +232,16 @@ mod tests {
 
     #[test]
     fn tune_workload_fills_cache_and_recommends() {
-        use crate::models::GemmLayer;
+        use crate::models::{GemmLayer, LayerKind};
         let tuner = Tuner::new(quick_opts());
         let layer = |name: &str, m: usize, k: usize, n: usize, count: usize, prunable: bool| {
-            GemmLayer { name: name.into(), shape: GemmShape::new(m, k, n), count, prunable }
+            GemmLayer {
+                name: name.into(),
+                shape: GemmShape::new(m, k, n),
+                count,
+                prunable,
+                kind: LayerKind::Fc,
+            }
         };
         let tiny = ModelWorkload {
             name: "tiny",

@@ -444,6 +444,34 @@ mod tests {
     }
 
     #[test]
+    fn graph_zoo_backend_serves_through_the_pool() {
+        // the whole zoo goes through the same coordinator seam: a tiny
+        // graph-compiled BERT encoder served by a 2-worker pool with a
+        // shared intra-op kernel pool
+        use crate::exec::{ZooBackend, ZooSpec};
+        let mut spec = ZooSpec::for_model("bert").unwrap();
+        spec.batch = 2;
+        spec.seq = 4;
+        spec.width = 16;
+        spec.n_layers = 1;
+        spec.n_classes = 4;
+        spec.g = 8;
+        let backend = Arc::new(ZooBackend::new(spec, None).unwrap());
+        let cfg = ServerConfig { workers: 2, intra_threads: 2, ..Default::default() };
+        let handle = start_with_backend(backend, cfg).expect("zoo server start");
+        assert_eq!(handle.n_classes, 4);
+        let len = handle.seq * handle.d_model;
+        let x: Vec<f32> = (0..len).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        for variant in ["model_dense", "model_tw", "model_tvw"] {
+            let resp = handle.infer(x.clone(), Some(variant.into())).unwrap();
+            assert!(resp.is_ok(), "{variant}: {:?}", resp.error);
+            assert_eq!(resp.logits.len(), handle.n_classes);
+            assert!(resp.logits.iter().all(|v| v.is_finite()), "{variant}");
+        }
+        assert_eq!(handle.metrics.errors(), 0);
+    }
+
+    #[test]
     fn execute_failure_sends_error_response_and_counts() {
         let handle = start_native(ServerConfig::default());
         let len = handle.seq * handle.d_model;

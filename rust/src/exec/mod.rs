@@ -17,21 +17,27 @@
 //!   [`crate::runtime::Engine`]; degrades exactly as before when the
 //!   feature or the artifacts are missing.
 //! - [`NativeBackend`] — in-process execution through the real CPU kernels
-//!   in [`crate::gemm`]: weights are pruned and packed once at load time
-//!   into [`crate::sparse::TwPlan`] / [`crate::sparse::TvwPlan`] /
-//!   [`crate::sparse::Vw24Plan`] condensed forms, per-layer
-//!   [`crate::gemm::TileConfig`]s are resolved from the autotune
-//!   [`crate::autotune::PlanCache`], and every request batch runs the
-//!   paper's TW/TVW/2:4 kernels for real — no artifacts, no Python, no
-//!   feature gate.
+//!   in [`crate::gemm`]: the residual-MLP surrogate compiled into a
+//!   [`crate::graph::GraphProgram`] whose weights are pruned and packed
+//!   once at load time into [`crate::sparse::TwPlan`] /
+//!   [`crate::sparse::TvwPlan`] / [`crate::sparse::Vw24Plan`] condensed
+//!   forms, per-layer [`crate::gemm::TileConfig`]s resolved from the
+//!   autotune [`crate::autotune::PlanCache`] — no artifacts, no Python,
+//!   no feature gate.
+//! - [`ZooBackend`] — any `models::` zoo workload (BERT encoder, VGG conv
+//!   chain, NMT stacked LSTM) compiled through `graph::compile` and
+//!   served the same way: per-layer packed sparse weights, workspace-
+//!   arena execution, shared intra-op pool.
 //!
-//! See `docs/DESIGN.md` §5 for how the worker pool consumes this trait.
+//! See `docs/DESIGN.md` §5 (worker pool) and §6 (layer-graph IR).
 
 pub mod native;
 pub mod pjrt;
+pub mod zoo;
 
-pub use native::{NativeBackend, NativeModelSpec};
+pub use native::{NativeBackend, NativeModelSpec, NATIVE_VARIANTS};
 pub use pjrt::PjrtBackend;
+pub use zoo::{ZooBackend, ZooSpec};
 
 use std::sync::Arc;
 

@@ -1,44 +1,39 @@
 //! Native in-process backend: the serving path that runs the paper's
 //! kernels for real, with zero external dependencies.
 //!
-//! At construction the backend builds a small residual-MLP classifier
-//! (transformer-encoder shaped: per-block `d_model -> d_ff -> d_model`
-//! GEMMs plus a dense head, the FFN pair that dominates BERT FLOPs), then
-//! packs every prunable layer **once** into each serving variant's
-//! kernel-ready form:
+//! Since the layer-graph IR landed (`docs/DESIGN.md` §6) this backend is
+//! a thin adapter: the residual-MLP classifier it has always served
+//! (transformer-encoder shaped per-block `d_model -> d_ff -> d_model`
+//! GEMMs plus a dense head — the FFN pair that dominates BERT FLOPs) is
+//! just another compiled [`crate::graph::GraphProgram`], built through
+//! [`crate::graph::GraphBuilder`] and executed by
+//! [`crate::graph::GraphModel`] like every zoo model.  Each serving
+//! variant packs every prunable layer **once** at construction:
 //!
-//! - `model_dense` — raw row-major weights, run by `gemm::matmul_tiled_into`
-//! - `model_tw`    — TW-pruned, `sparse::TwPlan` condensed tiles, run by
-//!   the fused-CTO `gemm::tw_matmul_into_with`
-//! - `model_tvw`   — TVW-pruned, `sparse::TvwPlan` (CTO + 2:4 metadata),
-//!   run by `gemm::tvw_matmul_into_with`
-//! - `model_vw24`  — plain 2:4 along K, `sparse::Vw24Plan`, run by
-//!   `gemm::vw24_matmul_into_with`
+//! - `model_dense` — raw row-major weights (`gemm::matmul_tiled_into`)
+//! - `model_tw`    — TW-pruned `sparse::TwPlan` condensed tiles
+//!   (fused-CTO `gemm::tw_matmul_into_scratch`)
+//! - `model_tvw`   — TVW-pruned `sparse::TvwPlan` (CTO + 2:4 metadata)
+//! - `model_vw24`  — plain 2:4 along K, `sparse::Vw24Plan`
 //!
-//! Per-GEMM [`TileConfig`]s are resolved from the autotune [`PlanCache`]
-//! when one is supplied (the `(M, K, N, pattern, sparsity, threads=1)` key
-//! the tuner writes), falling back to each family's historical default.
-//! The packed plans live behind an `Arc`, so a pool of N workers shares
-//! one copy of the weights; only the per-worker scratch matrices are
-//! duplicated, and the request hot loop performs no allocation beyond the
-//! response vector.
+//! Per-GEMM [`crate::gemm::TileConfig`]s are resolved from the autotune
+//! [`PlanCache`] when one is supplied.  The packed programs live behind
+//! an `Arc`, so a pool of N workers shares one copy of the weights; only
+//! the per-worker workspace arena is duplicated, and the request hot loop
+//! performs no allocation beyond the response vector.
 
 use std::sync::Arc;
 
 use super::{Backend, ModelDims, PreparedModel};
-use crate::autotune::{PatternFamily, PlanCache};
+use crate::autotune::PlanCache;
 use crate::error::Result;
-use crate::gemm::{
-    matmul_parallel_into, matmul_tiled_into, tvw_matmul_into_with, tvw_matmul_parallel_into,
-    tw_matmul_into_with, tw_matmul_parallel_into, vw24_matmul_into_with,
-    vw24_matmul_parallel_into, TileConfig,
+use crate::graph::{
+    Act, CompileOptions, GraphBuilder, GraphModel, GraphPattern, GraphProgram, Op, PackOptions,
 };
-use crate::gpusim::GemmShape;
 use crate::pool::ThreadPool;
-use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
 use crate::tensor::Matrix;
 use crate::util::Rng;
-use crate::{anyhow, bail, ensure};
+use crate::{bail, ensure};
 
 /// Shape + pruning recipe of the native model.  Weights are generated
 /// deterministically from `seed`, so every backend constructed from the
@@ -118,53 +113,69 @@ impl NativeModelSpec {
     }
 }
 
-/// One packed GEMM operand plus its resolved cache-blocking.
-struct PackedGemm {
-    pack: Pack,
-    cfg: TileConfig,
+/// Compile the residual-MLP spec into one variant's graph program — the
+/// same builder path `graph::compile` uses for the zoo models.
+fn residual_mlp_program(
+    spec: &NativeModelSpec,
+    variant: &str,
+    cache: Option<&Arc<PlanCache>>,
+) -> Result<GraphProgram> {
+    let Some(pattern) = GraphPattern::from_variant(variant) else {
+        bail!("unknown native variant {variant:?} (expected {NATIVE_VARIANTS:?})");
+    };
+    let tokens = spec.batch * spec.seq;
+    // one CompileOptions so packing resolution (pattern -> family,
+    // prunable:false dense rule, plan-cache tile lookup) stays the single
+    // implementation graph::compile uses for the zoo models
+    let opts = CompileOptions {
+        pattern,
+        pack: PackOptions { sparsity: spec.sparsity, g: spec.g },
+        seed: spec.seed,
+        plan_cache: cache.cloned(),
+        model_key: Some("residual-mlp".into()),
+        ..CompileOptions::default()
+    };
+    let mut rng = Rng::new(spec.seed);
+
+    let mut b = GraphBuilder::new();
+    let x = b.buffer(tokens, spec.d_model);
+    let h = b.buffer(tokens, spec.d_ff);
+    let t = b.buffer(tokens, spec.d_model);
+
+    for layer in 0..spec.n_layers {
+        let w_up = Matrix::randn(spec.d_model, spec.d_ff, &mut rng);
+        let w_down = Matrix::randn(spec.d_ff, spec.d_model, &mut rng);
+        let node = opts.pack_layer("residual-mlp", &format!("l{layer}.up"), &w_up, tokens, true)?;
+        b.gemm_into(x, node, h);
+        b.push(Op::BiasAct { buf: h, bias: None, act: Some(Act::Relu) });
+        let node =
+            opts.pack_layer("residual-mlp", &format!("l{layer}.down"), &w_down, tokens, true)?;
+        b.gemm_into(h, node, t);
+        // residual keeps activations O(1) through the stack
+        b.push(Op::Residual { src: t, dst: x });
+    }
+
+    let pooled = b.buffer(spec.batch, spec.d_model);
+    b.push(Op::MeanPool { input: x, out: pooled, seq: spec.seq });
+    // the head stays dense regardless of variant — the paper's "keep the
+    // small accuracy-critical layers dense" rule (prunable: false)
+    let w_head = Matrix::randn(spec.d_model, spec.n_classes, &mut rng);
+    let head = opts.pack_layer("residual-mlp", "head", &w_head, spec.batch, false)?;
+    let logits = b.gemm(pooled, head);
+
+    let dims = ModelDims {
+        batch: spec.batch,
+        seq: spec.seq,
+        d_model: spec.d_model,
+        n_classes: spec.n_classes,
+    };
+    Ok(b.finish("residual-mlp", variant, x, logits, dims))
 }
 
-enum Pack {
-    Dense(Matrix),
-    Tw(TwPlan),
-    Tvw(TvwPlan),
-    Vw24(Vw24Plan),
-}
-
-/// One residual block: `up` (d_model -> d_ff), `down` (d_ff -> d_model).
-struct Block {
-    up: PackedGemm,
-    down: PackedGemm,
-}
-
-/// One serving variant's fully packed network.
-struct VariantNet {
-    name: String,
-    blocks: Vec<Block>,
-    /// Classifier head (d_model -> n_classes), dense in every variant —
-    /// the paper's "keep the small accuracy-critical layers dense" rule.
-    head: PackedGemm,
-}
-
-/// The shared, immutable packed model (weights + plans + tile configs).
+/// The shared, immutable packed model (compiled variant programs).
 pub struct NativeBackend {
     dims: ModelDims,
-    nets: Arc<Vec<VariantNet>>,
-}
-
-fn tile_for(
-    cache: Option<&PlanCache>,
-    shape: GemmShape,
-    family: PatternFamily,
-    sparsity: f64,
-    fallback: TileConfig,
-) -> TileConfig {
-    // serving-time lookup: exact on (K, N, pattern), nearest on the rest —
-    // the tuner keys DENSE at sparsity 0, caps M, and records its own
-    // thread budget, so an exact-key probe would almost never hit
-    cache
-        .and_then(|c| c.lookup_tile_config(shape, family.label(), sparsity))
-        .unwrap_or(fallback)
+    programs: Arc<Vec<GraphProgram>>,
 }
 
 impl NativeBackend {
@@ -189,147 +200,22 @@ impl NativeBackend {
             spec.d_ff
         );
 
-        // Base weights, shared by every variant before pruning.
-        let mut rng = Rng::new(spec.seed);
-        let base: Vec<(Matrix, Matrix)> = (0..spec.n_layers)
-            .map(|_| {
-                (
-                    Matrix::randn(spec.d_model, spec.d_ff, &mut rng),
-                    Matrix::randn(spec.d_ff, spec.d_model, &mut rng),
-                )
-            })
-            .collect();
-        let head_w = Matrix::randn(spec.d_model, spec.n_classes, &mut rng);
-
-        let tokens = spec.batch * spec.seq;
-        let up_shape = GemmShape::new(tokens, spec.d_model, spec.d_ff);
-        let down_shape = GemmShape::new(tokens, spec.d_ff, spec.d_model);
-        let head_shape = GemmShape::new(spec.batch, spec.d_model, spec.n_classes);
-        let cache = plan_cache.as_deref();
-
-        let mut nets = Vec::with_capacity(spec.variants.len());
+        let mut programs = Vec::with_capacity(spec.variants.len());
         for name in &spec.variants {
-            let pack = |w: &Matrix, shape: GemmShape| -> Result<PackedGemm> {
-                Ok(match name.as_str() {
-                    "model_dense" => PackedGemm {
-                        pack: Pack::Dense(w.clone()),
-                        cfg: tile_for(
-                            cache,
-                            shape,
-                            PatternFamily::Dense,
-                            spec.sparsity,
-                            TileConfig::dense_default(),
-                        ),
-                    },
-                    "model_tw" => {
-                        let tw = prune_tw(w, spec.sparsity, spec.g, None);
-                        PackedGemm {
-                            pack: Pack::Tw(TwPlan::encode(w, &tw)),
-                            cfg: tile_for(
-                                cache,
-                                shape,
-                                PatternFamily::Tw,
-                                spec.sparsity,
-                                TileConfig::tw_default(),
-                            ),
-                        }
-                    }
-                    "model_tvw" => {
-                        let s = spec.sparsity.max(0.5);
-                        let (tw, mask) = prune_tvw(w, s, spec.g);
-                        PackedGemm {
-                            pack: Pack::Tvw(TvwPlan::encode(w, &tw, &mask)),
-                            cfg: tile_for(
-                                cache,
-                                shape,
-                                PatternFamily::Tvw,
-                                s,
-                                TileConfig::tvw_default(),
-                            ),
-                        }
-                    }
-                    "model_vw24" => {
-                        let mask = prune_vw(w, 0.5, 4);
-                        let plan = Vw24Plan::encode(w, &mask)
-                            .map_err(|e| anyhow!("packing 2:4 plan: {e}"))?;
-                        PackedGemm {
-                            pack: Pack::Vw24(plan),
-                            cfg: tile_for(
-                                cache,
-                                shape,
-                                PatternFamily::Vw24,
-                                0.5,
-                                TileConfig::vw_default(),
-                            ),
-                        }
-                    }
-                    other => {
-                        bail!("unknown native variant {other:?} (expected {NATIVE_VARIANTS:?})")
-                    }
-                })
-            };
-            let mut blocks = Vec::with_capacity(spec.n_layers);
-            for (w1, w2) in &base {
-                blocks.push(Block { up: pack(w1, up_shape)?, down: pack(w2, down_shape)? });
-            }
-            // the head stays dense regardless of variant
-            let head = PackedGemm {
-                pack: Pack::Dense(head_w.clone()),
-                cfg: tile_for(
-                    cache,
-                    head_shape,
-                    PatternFamily::Dense,
-                    spec.sparsity,
-                    TileConfig::dense_default(),
-                ),
-            };
-            nets.push(VariantNet { name: name.clone(), blocks, head });
+            programs.push(residual_mlp_program(&spec, name, plan_cache.as_ref())?);
         }
-
-        Ok(NativeBackend {
-            dims: ModelDims {
-                batch: spec.batch,
-                seq: spec.seq,
-                d_model: spec.d_model,
-                n_classes: spec.n_classes,
-            },
-            nets: Arc::new(nets),
-        })
+        let dims = programs[0].dims;
+        Ok(NativeBackend { dims, programs: Arc::new(programs) })
     }
 
     pub fn dims(&self) -> ModelDims {
         self.dims
     }
-}
 
-impl NativeBackend {
     /// Build one per-worker model instance; `intra` is the shared intra-op
     /// kernel pool (None = serial kernels at their tuned/default configs).
-    fn load_native(&self, intra: Option<Arc<ThreadPool>>) -> NativeModel {
-        let tokens = self.dims.batch * self.dims.seq;
-        let (d_model, d_ff) = {
-            // every net shares the base geometry; read it off the scratch
-            // requirements of the first block (head-only nets have d_ff 0)
-            let d_ff = self.nets.first().and_then(|n| n.blocks.first()).map_or(0, |b| {
-                match &b.up.pack {
-                    Pack::Dense(w) => w.cols,
-                    Pack::Tw(p) => p.n,
-                    Pack::Tvw(p) => p.n,
-                    Pack::Vw24(p) => p.n,
-                }
-            });
-            (self.dims.d_model, d_ff)
-        };
-        NativeModel {
-            dims: self.dims,
-            nets: self.nets.clone(),
-            intra,
-            x: Matrix::zeros(tokens, d_model),
-            h: Matrix::zeros(tokens, d_ff.max(1)),
-            t: Matrix::zeros(tokens, d_model),
-            pooled: Matrix::zeros(self.dims.batch, d_model),
-            logits: Matrix::zeros(self.dims.batch, self.dims.n_classes),
-        }
+    fn load_native(&self, intra: Option<Arc<ThreadPool>>) -> Result<GraphModel> {
+        GraphModel::new(self.programs.clone(), intra)
     }
 }
 
@@ -339,124 +225,11 @@ impl Backend for NativeBackend {
     }
 
     fn load(&self) -> Result<Box<dyn PreparedModel>> {
-        Ok(Box::new(self.load_native(None)))
+        Ok(Box::new(self.load_native(None)?))
     }
 
     fn load_with_intra(&self, intra: Option<Arc<ThreadPool>>) -> Result<Box<dyn PreparedModel>> {
-        Ok(Box::new(self.load_native(intra)))
-    }
-}
-
-/// Per-worker model instance: shared packed weights + private scratch.
-struct NativeModel {
-    dims: ModelDims,
-    nets: Arc<Vec<VariantNet>>,
-    /// Shared intra-op kernel pool ([`Backend::load_with_intra`]); the
-    /// parallel kernel paths claim disjoint output chunks from it.  None:
-    /// serial kernels at their tuned/default tile configs.
-    intra: Option<Arc<ThreadPool>>,
-    x: Matrix,
-    h: Matrix,
-    t: Matrix,
-    pooled: Matrix,
-    logits: Matrix,
-}
-
-/// Dispatch one packed GEMM into `c` (fully overwritten).  With an
-/// intra-op pool, each kernel family runs its pool-parallel path —
-/// row bands (dense), condensed-tile ranges (TW/TVW), column blocks
-/// (2:4) — and each falls back to the serial tuned-config kernel when
-/// the problem is too small to split (the kernels report the fallback;
-/// here the dispatch simply trusts their effective-threads logic).
-fn gemm_into(a: &Matrix, g: &PackedGemm, c: &mut Matrix, intra: Option<&ThreadPool>) {
-    let threads = intra.map_or(1, ThreadPool::threads);
-    match &g.pack {
-        Pack::Dense(w) => {
-            if let Some(pool) = intra.filter(|_| threads > 1) {
-                matmul_parallel_into(a, w, c, &g.cfg, threads, pool);
-            } else {
-                matmul_tiled_into(a, w, c, &g.cfg);
-            }
-        }
-        Pack::Tw(p) => {
-            // the TW scatter only writes kept output columns; clear the rest
-            c.data.fill(0.0);
-            if let Some(pool) = intra.filter(|_| threads > 1) {
-                tw_matmul_parallel_into(a, p, c, &g.cfg, threads, pool);
-            } else {
-                tw_matmul_into_with(a, p, c, &g.cfg);
-            }
-        }
-        Pack::Tvw(p) => {
-            if let Some(pool) = intra.filter(|_| threads > 1) {
-                tvw_matmul_parallel_into(a, p, c, &g.cfg, threads, pool);
-            } else {
-                tvw_matmul_into_with(a, p, c, &g.cfg);
-            }
-        }
-        Pack::Vw24(p) => {
-            if let Some(pool) = intra.filter(|_| threads > 1) {
-                vw24_matmul_parallel_into(a, p, c, &g.cfg, threads, pool);
-            } else {
-                vw24_matmul_into_with(a, p, c, &g.cfg);
-            }
-        }
-    }
-}
-
-impl PreparedModel for NativeModel {
-    fn dims(&self) -> ModelDims {
-        self.dims
-    }
-
-    fn variants(&self) -> Vec<String> {
-        self.nets.iter().map(|n| n.name.clone()).collect()
-    }
-
-    fn run(&mut self, variant: &str, packed: &[f32]) -> Result<Vec<f32>> {
-        let nets = self.nets.clone();
-        let net = nets
-            .iter()
-            .find(|n| n.name == variant)
-            .ok_or_else(|| anyhow!("variant {variant:?} not packed in the native backend"))?;
-        let want = self.dims.batch * self.dims.per_request_len();
-        ensure!(
-            packed.len() == want,
-            "packed batch has {} floats, native model expects {want}",
-            packed.len()
-        );
-        self.x.data.copy_from_slice(packed);
-        let intra = self.intra.as_deref();
-        for block in &net.blocks {
-            gemm_into(&self.x, &block.up, &mut self.h, intra);
-            for v in &mut self.h.data {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-            gemm_into(&self.h, &block.down, &mut self.t, intra);
-            // residual keeps activations O(1) through the stack
-            for (xv, tv) in self.x.data.iter_mut().zip(&self.t.data) {
-                *xv += tv;
-            }
-        }
-        // mean-pool each request's seq tokens, then the dense head
-        let (batch, seq) = (self.dims.batch, self.dims.seq);
-        let inv = 1.0 / seq as f32;
-        for b in 0..batch {
-            let dst = self.pooled.row_mut(b);
-            dst.fill(0.0);
-            for s_i in 0..seq {
-                for (dv, sv) in dst.iter_mut().zip(self.x.row(b * seq + s_i)) {
-                    *dv += sv;
-                }
-            }
-            for dv in dst.iter_mut() {
-                *dv *= inv;
-            }
-        }
-        gemm_into(&self.pooled, &net.head, &mut self.logits, intra);
-        Ok(self.logits.data.clone())
+        Ok(Box::new(self.load_native(intra)?))
     }
 }
 
@@ -464,6 +237,8 @@ impl PreparedModel for NativeModel {
 mod tests {
     use super::*;
     use crate::autotune::{PlanKey, TunedEntry};
+    use crate::gemm::TileConfig;
+    use crate::gpusim::GemmShape;
 
     fn tiny_spec() -> NativeModelSpec {
         NativeModelSpec {
@@ -553,8 +328,17 @@ mod tests {
             Some(TileConfig::new(7, 64))
         );
         let cache = Arc::new(cache);
-        let with = NativeBackend::new(spec.clone(), Some(cache)).unwrap();
+        let with = NativeBackend::new(spec.clone(), Some(cache.clone())).unwrap();
         let without = NativeBackend::new(spec, None).unwrap();
+        // the packed program must carry the tuned blocking
+        let tuned = with
+            .programs
+            .iter()
+            .find(|p| p.variant == "model_tw")
+            .and_then(|p| p.weights.iter().find(|w| w.name == "l0.up"))
+            .map(|w| w.cfg)
+            .expect("tuned up-GEMM node");
+        assert_eq!(tuned, TileConfig::new(7, 64));
         let mut ma = with.load().unwrap();
         let mut mb = without.load().unwrap();
         let dims = ma.dims();

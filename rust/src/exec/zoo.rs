@@ -1,0 +1,226 @@
+//! Zoo serving backend: any `models::` workload compiled into the
+//! layer-graph IR and served through the same `Backend`/`PreparedModel`
+//! seam as the PJRT and native backends — `serve --backend native
+//! --model bert|vgg|nmt` runs a *real* BERT encoder / VGG conv chain /
+//! stacked-LSTM NMT through the tuned TW/TVW/2:4 kernels, per-layer
+//! packed weights, and the shared intra-op thread pool.
+
+use std::sync::Arc;
+
+use super::{Backend, ModelDims, PreparedModel};
+use crate::autotune::PlanCache;
+use crate::error::Result;
+use crate::graph::{compile, CompileOptions, GraphModel, GraphPattern, GraphProgram, PackOptions};
+use crate::models::{self, ModelWorkload};
+use crate::pool::ThreadPool;
+use crate::{bail, ensure};
+
+/// Which zoo model to serve, at serving-sized dims.  The defaults keep a
+/// single batch in the low-hundreds-of-MFLOP range so a CPU worker turns
+/// requests around in tens of milliseconds; the paper-scale dims remain
+/// available through the `models::` constructors.
+#[derive(Clone, Debug)]
+pub struct ZooSpec {
+    /// "bert" | "vgg" | "nmt".
+    pub model: String,
+    /// Requests per invocation (transformer/LSTM; conv models serve 1).
+    pub batch: usize,
+    /// Transformer tokens per request / LSTM unroll steps.
+    pub seq: usize,
+    /// Transformer d_model (d_ff = 4x) / LSTM hidden width.
+    pub width: usize,
+    /// Transformer encoder blocks.
+    pub n_layers: usize,
+    /// Attention heads (must divide `width`).
+    pub heads: usize,
+    /// Transformer classifier width.
+    pub n_classes: usize,
+    /// VGG input resolution (multiple of 32) and channel divisor.
+    pub img: usize,
+    pub width_div: usize,
+    /// VGG FC width (replaces the 4096 pair at reduced scale).
+    pub fc_dim: usize,
+    pub sparsity: f64,
+    pub g: usize,
+    pub seed: u64,
+    /// Which variants to compile ("model_dense" / "model_tw" /
+    /// "model_tvw" / "model_vw24" / "model_auto").
+    pub variants: Vec<String>,
+}
+
+impl ZooSpec {
+    /// Serving defaults for one zoo model name.
+    pub fn for_model(model: &str) -> Result<ZooSpec> {
+        let base = ZooSpec {
+            model: model.to_string(),
+            batch: 4,
+            seq: 16,
+            width: 256,
+            n_layers: 2,
+            heads: 4,
+            n_classes: 8,
+            img: 32,
+            width_div: 4,
+            fc_dim: 256,
+            sparsity: 0.75,
+            g: 32,
+            seed: 42,
+            variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
+        };
+        Ok(match model {
+            "bert" => base,
+            "vgg" | "vgg16" => ZooSpec { model: "vgg".into(), batch: 1, ..base },
+            "nmt" => ZooSpec { batch: 8, seq: 8, width: 128, ..base },
+            other => bail!("unknown zoo model {other:?} (expected bert|vgg|nmt)"),
+        })
+    }
+
+    /// The name the autotune CLI tunes this model under — the plan-cache
+    /// key for recommendations and `Policy::Tuned` ("vgg" serves the
+    /// workload `autotune --model vgg16` tunes).
+    pub fn cache_key(&self) -> &str {
+        match self.model.as_str() {
+            "vgg" => "vgg16",
+            other => other,
+        }
+    }
+
+    pub fn with_variants(mut self, variants: &[&str]) -> ZooSpec {
+        self.variants = variants.iter().map(|v| v.to_string()).collect();
+        self
+    }
+
+    /// The scaled workload this spec compiles.
+    pub fn workload(&self) -> Result<ModelWorkload> {
+        Ok(match self.model.as_str() {
+            "bert" => models::bert_at(self.batch, self.seq, self.width, self.n_layers),
+            "vgg" => models::vgg16_scaled(self.img, self.width_div, self.fc_dim),
+            "nmt" => models::nmt_at(self.batch, self.width, self.seq),
+            other => bail!("unknown zoo model {other:?} (expected bert|vgg|nmt)"),
+        })
+    }
+
+    fn compile_options(&self, plan_cache: Option<Arc<PlanCache>>) -> CompileOptions {
+        CompileOptions {
+            pattern: GraphPattern::Dense, // per-variant override below
+            pack: PackOptions { sparsity: self.sparsity, g: self.g },
+            seq: self.seq,
+            heads: self.heads,
+            n_classes: self.n_classes,
+            seed: self.seed,
+            plan_cache,
+            // Auto-pattern lookups must use the name the autotune CLI
+            // tuned under ("bert", "vgg16"), not the workload display name
+            model_key: Some(self.cache_key().to_string()),
+        }
+    }
+}
+
+/// The shared compiled model: one graph program per serving variant,
+/// `Arc`-shared across the worker pool.
+pub struct ZooBackend {
+    dims: ModelDims,
+    programs: Arc<Vec<GraphProgram>>,
+}
+
+impl ZooBackend {
+    pub fn new(spec: ZooSpec, plan_cache: Option<Arc<PlanCache>>) -> Result<ZooBackend> {
+        ensure!(!spec.variants.is_empty(), "zoo spec compiles no variants");
+        let workload = spec.workload()?;
+        let opts = spec.compile_options(plan_cache);
+        let mut programs = Vec::with_capacity(spec.variants.len());
+        for name in &spec.variants {
+            let Some(pattern) = GraphPattern::from_variant(name) else {
+                bail!("unknown zoo variant {name:?}");
+            };
+            programs.push(compile(&workload, &opts.with_pattern(pattern))?);
+        }
+        let dims = programs[0].dims;
+        Ok(ZooBackend { dims, programs: Arc::new(programs) })
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    /// The compiled programs (benches build `GraphModel`s directly).
+    pub fn programs(&self) -> Arc<Vec<GraphProgram>> {
+        self.programs.clone()
+    }
+}
+
+impl Backend for ZooBackend {
+    fn name(&self) -> &'static str {
+        "graph-zoo"
+    }
+
+    fn load(&self) -> Result<Box<dyn PreparedModel>> {
+        Ok(Box::new(GraphModel::new(self.programs.clone(), None)?))
+    }
+
+    fn load_with_intra(&self, intra: Option<Arc<ThreadPool>>) -> Result<Box<dyn PreparedModel>> {
+        Ok(Box::new(GraphModel::new(self.programs.clone(), intra)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(model: &str) -> ZooSpec {
+        let mut spec = ZooSpec::for_model(model).unwrap();
+        spec.batch = spec.batch.min(2);
+        spec.seq = 4;
+        spec.width = 16;
+        spec.n_layers = 1;
+        spec.n_classes = 4;
+        spec.width_div = 16;
+        spec.fc_dim = 32;
+        spec.g = 8;
+        spec
+    }
+
+    #[test]
+    fn all_zoo_models_serve_all_variants() {
+        for model in ["bert", "vgg", "nmt"] {
+            let spec = tiny(model).with_variants(&["model_dense", "model_tw", "model_tvw"]);
+            let backend = ZooBackend::new(spec, None).unwrap();
+            let mut m = backend.load().unwrap();
+            let dims = m.dims();
+            let packed: Vec<f32> = (0..dims.batch * dims.per_request_len())
+                .map(|i| ((i % 9) as f32 - 4.0) * 0.1)
+                .collect();
+            for variant in ["model_dense", "model_tw", "model_tvw"] {
+                let logits = m.run(variant, &packed).unwrap();
+                assert_eq!(logits.len(), dims.batch * dims.n_classes, "{model}/{variant}");
+                assert!(logits.iter().all(|v| v.is_finite()), "{model}/{variant}");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_key_maps_to_autotune_names() {
+        // `autotune --model vgg16` writes its recommendation under
+        // "vgg16"; serving `--model vgg` (or "vgg16") must look it up there
+        assert_eq!(ZooSpec::for_model("vgg").unwrap().cache_key(), "vgg16");
+        assert_eq!(ZooSpec::for_model("vgg16").unwrap().cache_key(), "vgg16");
+        assert_eq!(ZooSpec::for_model("vgg16").unwrap().model, "vgg");
+        assert_eq!(ZooSpec::for_model("bert").unwrap().cache_key(), "bert");
+        assert_eq!(ZooSpec::for_model("nmt").unwrap().cache_key(), "nmt");
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        assert!(ZooSpec::for_model("resnet99").is_err());
+        let mut spec = tiny("bert");
+        spec.model = "alexnet".into();
+        assert!(ZooBackend::new(spec, None).is_err());
+    }
+
+    #[test]
+    fn conv_models_serve_batch_one() {
+        let backend = ZooBackend::new(tiny("vgg"), None).unwrap();
+        assert_eq!(backend.dims().batch, 1);
+        assert_eq!(backend.dims().per_request_len(), 3 * 32 * 32);
+    }
+}

@@ -19,15 +19,50 @@ pub use dense::{
 };
 pub use spmm::{block_spmm, csr_spmm, BlockSparse};
 pub use tw::{
-    tw_effective_parallel_threads, tw_matmul, tw_matmul_into, tw_matmul_into_with,
-    tw_matmul_masked, tw_matmul_parallel, tw_matmul_parallel_into, tw_matmul_per_tile,
-    tw_matmul_with,
+    tw_effective_parallel_threads, tw_matmul, tw_matmul_into, tw_matmul_into_scratch,
+    tw_matmul_into_with, tw_matmul_masked, tw_matmul_parallel, tw_matmul_parallel_into,
+    tw_matmul_per_tile, tw_matmul_with,
 };
 pub use vw::{
-    tvw_effective_parallel_threads, tvw_matmul, tvw_matmul_into_with, tvw_matmul_parallel_into,
-    tvw_matmul_with, vw24_effective_parallel_threads, vw24_matmul, vw24_matmul_into_with,
-    vw24_matmul_parallel_into, vw24_matmul_with,
+    tvw_effective_parallel_threads, tvw_matmul, tvw_matmul_into_scratch, tvw_matmul_into_with,
+    tvw_matmul_parallel_into, tvw_matmul_with, vw24_effective_parallel_threads, vw24_matmul,
+    vw24_matmul_into_with, vw24_matmul_parallel_into, vw24_matmul_with,
 };
+
+/// Reusable internal scratch for the condensed-kernel hot paths (the CTO
+/// gather block and the compact output tile).  The serial TW/TVW `_into`
+/// kernels need a small gather/accumulate staging area; the historical
+/// entry points allocate it per call, which is fine for one-shot GEMMs but
+/// shows up as per-request heap traffic in the serving loop.  The graph
+/// executor owns one `GemmScratch` per model workspace, sized once at
+/// graph-compile time, and lends it to every `*_into_scratch` call — the
+/// steady-state request path then performs zero kernel-side allocations.
+#[derive(Default)]
+pub struct GemmScratch {
+    pub(crate) a: Vec<f32>,
+    pub(crate) c: Vec<f32>,
+}
+
+impl GemmScratch {
+    pub fn new() -> GemmScratch {
+        GemmScratch::default()
+    }
+
+    /// Pre-sized scratch (graph compile computes the per-model maxima).
+    pub fn with_capacity(a_len: usize, c_len: usize) -> GemmScratch {
+        GemmScratch { a: vec![0.0; a_len], c: vec![0.0; c_len] }
+    }
+
+    /// Grow (never shrink) to at least the requested staging sizes.
+    pub(crate) fn ensure(&mut self, a_len: usize, c_len: usize) {
+        if self.a.len() < a_len {
+            self.a.resize(a_len, 0.0);
+        }
+        if self.c.len() < c_len {
+            self.c.resize(c_len, 0.0);
+        }
+    }
+}
 
 /// Cache-blocking parameters of a CPU kernel — the register/L1-level "tile
 /// shape" the autotuner searches (the GPU-side analogue is the threadblock

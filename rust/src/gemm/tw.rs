@@ -83,14 +83,30 @@ pub fn tw_matmul_into(a: &Matrix, plan: &TwPlan, c: &mut Matrix) {
     tw_matmul_into_with(a, plan, c, &TileConfig::tw_default());
 }
 
-/// In-place fused-CTO kernel with an explicit tile config.
+/// In-place fused-CTO kernel with an explicit tile config.  Allocates its
+/// gather/accumulate staging per call; the serving hot loop uses
+/// [`tw_matmul_into_scratch`] instead.
 pub fn tw_matmul_into_with(a: &Matrix, plan: &TwPlan, c: &mut Matrix, cfg: &TileConfig) {
+    tw_matmul_into_scratch(a, plan, c, cfg, &mut crate::gemm::GemmScratch::new());
+}
+
+/// In-place fused-CTO kernel reusing a caller-owned [`crate::gemm::GemmScratch`]
+/// for the CTO gather block (`bm x kmax`) and the compact output tile
+/// (`bm x g`) — zero allocations once the scratch has grown to the
+/// model's largest plan.
+pub fn tw_matmul_into_scratch(
+    a: &Matrix,
+    plan: &TwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut crate::gemm::GemmScratch,
+) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let m = a.rows;
     let bm = cfg.bm();
-    let mut a_gather = vec![0.0f32; bm * plan.kmax];
-    let mut c_tile = vec![0.0f32; bm * plan.g];
+    scratch.ensure(bm * plan.kmax, bm * plan.g);
+    let (a_gather, c_tile) = (&mut scratch.a, &mut scratch.c);
     for t in 0..plan.tiles {
         let kt = plan.row_len[t] as usize;
         let width = (0..plan.g)
@@ -299,6 +315,21 @@ mod tests {
         let (a, w, tw, plan) = setup(8, 64, 64, 0.95, 16, 83);
         let want = matmul_naive(&a, &tw.mask().apply(&w));
         assert!(tw_matmul(&a, &plan).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn scratch_variant_matches_and_is_reusable() {
+        // one undersized scratch across differently-shaped plans: results
+        // must match the allocating kernel exactly
+        let mut scratch = crate::gemm::GemmScratch::new();
+        for (seed, (m, k, n, g)) in [(86u64, (24usize, 64usize, 48usize, 16usize)), (87, (40, 96, 80, 8))] {
+            let (a, _, _, plan) = setup(m, k, n, 0.6, g, seed);
+            let cfg = TileConfig::new(16, 64);
+            let want = tw_matmul_with(&a, &plan, &cfg);
+            let mut c = Matrix::zeros(m, n);
+            tw_matmul_into_scratch(&a, &plan, &mut c, &cfg, &mut scratch);
+            assert!(c.max_abs_diff(&want) < 1e-6, "{m}x{k}x{n}");
+        }
     }
 
     #[test]

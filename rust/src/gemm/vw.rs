@@ -86,20 +86,34 @@ pub fn tvw_matmul_with(a: &Matrix, plan: &TvwPlan, cfg: &TileConfig) -> Matrix {
 }
 
 /// In-place TVW fused kernel: `c` is fully overwritten (zeroed, then
-/// tile-accumulated).  Scratch (`a_gather`, `c_tile`) stays internal and
-/// small; the large output allocation is the caller's to reuse.
+/// tile-accumulated).  Allocates its small gather/accumulate staging per
+/// call; the serving hot loop uses [`tvw_matmul_into_scratch`] instead.
 pub fn tvw_matmul_into_with(a: &Matrix, plan: &TvwPlan, c: &mut Matrix, cfg: &TileConfig) {
+    tvw_matmul_into_scratch(a, plan, c, cfg, &mut crate::gemm::GemmScratch::new());
+}
+
+/// In-place TVW fused kernel reusing a caller-owned
+/// [`crate::gemm::GemmScratch`] for the CTO gather row (`kmax`) and the
+/// compact output tile (`g`) — zero allocations once the scratch has
+/// grown to the model's largest plan.
+pub fn tvw_matmul_into_scratch(
+    a: &Matrix,
+    plan: &TvwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut crate::gemm::GemmScratch,
+) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let m = a.rows;
     let khalf = plan.kmax / 2;
     let bm = cfg.bm();
     c.data.fill(0.0);
-    let mut a_gather = vec![0.0f32; plan.kmax];
+    scratch.ensure(plan.kmax, plan.g);
     // §Perf: accumulate into a compact c_tile and scatter once per row —
     // the inner loop then writes a contiguous stream the compiler can
     // vectorize, instead of CTO-scattered stores per element.
-    let mut c_tile = vec![0.0f32; plan.g];
+    let (a_gather, c_tile) = (&mut scratch.a, &mut scratch.c);
     for i0 in (0..m).step_by(bm) {
         let i1 = (i0 + bm).min(m);
         for t in 0..plan.tiles {
@@ -392,6 +406,25 @@ mod tests {
         }
         vw24_matmul_into_with(&a, &vplan, &mut c, &cfg);
         assert!(c.max_abs_diff(&want_vw) < 1e-4);
+    }
+
+    #[test]
+    fn scratch_variant_matches_and_is_reusable() {
+        // one undersized scratch across differently-shaped plans: results
+        // must match the allocating kernels exactly
+        let mut rng = Rng::new(95);
+        let mut scratch = crate::gemm::GemmScratch::new();
+        for (k, n, g) in [(64usize, 48usize, 16usize), (96, 80, 8), (32, 32, 32)] {
+            let a = Matrix::randn(11, k, &mut rng);
+            let w = Matrix::randn(k, n, &mut rng);
+            let (tw, mask) = prune_tvw(&w, 0.75, g);
+            let plan = TvwPlan::encode(&w, &tw, &mask);
+            let cfg = TileConfig::new(8, 64);
+            let want = tvw_matmul_with(&a, &plan, &cfg);
+            let mut c = Matrix::zeros(11, n);
+            tvw_matmul_into_scratch(&a, &plan, &mut c, &cfg, &mut scratch);
+            assert!(c.max_abs_diff(&want) < 1e-6, "{k}x{n} g={g}");
+        }
     }
 
     #[test]

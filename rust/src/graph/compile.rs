@@ -1,0 +1,483 @@
+//! `models::ModelWorkload` -> executable [`GraphProgram`].
+//!
+//! The zoo's workloads are shape lists with operator provenance
+//! (`models::LayerKind`); compilation reconstructs the network around
+//! them:
+//!
+//! - **transformer** (layers `qkv`/`attn_out`/`ffn1`/`ffn2`): encoder
+//!   blocks of QKV GEMM -> multi-head attention -> output projection ->
+//!   residual + layer-norm -> FFN (bias+ReLU) -> residual + layer-norm,
+//!   then mean-pool + dense classifier head;
+//! - **conv chain** (any `LayerKind::Conv` layer): img2col -> GEMM ->
+//!   bias+ReLU per conv, 2x2 average pools inserted wherever the listed
+//!   spatial extents halve, then the conv->FC seam (global-pool or
+//!   flatten, inferred from the first FC's K) and the FC stack.
+//!   Residual skip connections are *not* modelled (ResNet-50's bottleneck
+//!   widths don't chain sequentially and are rejected with an error);
+//! - **LSTM** (layers named `*_gates`): the gate layers form a stacked
+//!   recurrence unrolled over the workload's step count, sharing one
+//!   `[x|h]` concat + gate buffer across all steps and cells, followed by
+//!   the non-gate FC tail (attention fc, softmax projection).
+//!
+//! Weights are generated deterministically from `CompileOptions::seed`,
+//! then each **prunable** layer is pruned and packed into the variant's
+//! pattern (`prunable: false` layers — first convs, classifier heads —
+//! always stay dense) with its `TileConfig` resolved from the autotune
+//! plan cache.  See `docs/DESIGN.md` §6.
+
+use std::sync::Arc;
+
+use crate::autotune::{PatternFamily, PlanCache};
+use crate::error::{Context, Result};
+use crate::exec::ModelDims;
+use crate::gpusim::GemmShape;
+use crate::models::{GemmLayer, LayerKind, ModelWorkload};
+use crate::nn::Conv2dSpec;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use crate::{bail, ensure};
+
+use super::ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
+use super::pack::{pack_weight, GemmNode, GraphPattern, PackOptions};
+
+/// How to compile a workload into one serving variant.
+#[derive(Clone)]
+pub struct CompileOptions {
+    /// Pattern every prunable layer is packed with (`Auto` = per-layer
+    /// selection from the plan cache).
+    pub pattern: GraphPattern,
+    pub pack: PackOptions,
+    /// Transformer sequence length per request (`M = batch * seq` must
+    /// match the workload's listed M).  Ignored by conv/LSTM workloads.
+    pub seq: usize,
+    /// Transformer attention heads (must divide d_model).
+    pub heads: usize,
+    /// Transformer classifier width (conv/LSTM take theirs from the
+    /// workload's final layer).
+    pub n_classes: usize,
+    /// Deterministic weight seed: every backend compiled from the same
+    /// workload + seed serves identical logits.
+    pub seed: u64,
+    pub plan_cache: Option<Arc<PlanCache>>,
+    /// Plan-cache model key for `Auto` pattern resolution — the name the
+    /// autotune CLI tuned under (`autotune --model bert` stores its
+    /// recommendation as "bert", not the workload's display name).
+    /// Defaults to the workload's display name when unset.
+    pub model_key: Option<String>,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            pattern: GraphPattern::Dense,
+            pack: PackOptions::default(),
+            seq: 16,
+            heads: 4,
+            n_classes: 8,
+            seed: 42,
+            plan_cache: None,
+            model_key: None,
+        }
+    }
+}
+
+impl CompileOptions {
+    /// Same options, different pattern — the per-variant loop backends use.
+    pub fn with_pattern(&self, pattern: GraphPattern) -> CompileOptions {
+        CompileOptions { pattern, ..self.clone() }
+    }
+
+    fn family_for(&self, model: &str, prunable: bool, shape: GemmShape) -> PatternFamily {
+        if prunable {
+            self.pattern.family_for_layer(model, shape, self.plan_cache.as_ref())
+        } else {
+            PatternFamily::Dense
+        }
+    }
+
+    /// Resolve a layer's pattern family (`prunable: false` forces dense)
+    /// and pack it — the single packing path shared by every compiled
+    /// topology, including the native backend's residual-MLP spec.
+    pub(crate) fn pack_layer(
+        &self,
+        model: &str,
+        name: &str,
+        w: &Matrix,
+        m_hint: usize,
+        prunable: bool,
+    ) -> Result<GemmNode> {
+        let shape = GemmShape::new(m_hint, w.rows, w.cols);
+        let family = self.family_for(model, prunable, shape);
+        pack_weight(name, w, m_hint, family, &self.pack, self.plan_cache.as_deref())
+    }
+}
+
+/// Compile one workload into one variant's executable graph.
+pub fn compile(workload: &ModelWorkload, opts: &CompileOptions) -> Result<GraphProgram> {
+    let has_conv = workload.layers.iter().any(|l| matches!(l.kind, LayerKind::Conv(_)));
+    let has_gates = workload.layers.iter().any(|l| l.name.ends_with("_gates"));
+    let has_qkv = workload.layers.iter().any(|l| l.name == "qkv");
+    ensure!(!workload.layers.is_empty(), "workload {} has no layers", workload.name);
+    if has_conv {
+        compile_conv(workload, opts)
+    } else if has_gates {
+        compile_lstm(workload, opts)
+    } else if has_qkv {
+        compile_transformer(workload, opts)
+    } else {
+        bail!(
+            "workload {} has no compilable structure (expected conv layers, *_gates layers, \
+             or a qkv/ffn transformer block)",
+            workload.name
+        );
+    }
+}
+
+fn small_bias(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * 0.05).collect()
+}
+
+// ---------------------------------------------------------------- BERT --
+
+fn compile_transformer(workload: &ModelWorkload, opts: &CompileOptions) -> Result<GraphProgram> {
+    let get = |name: &str| -> Result<&GemmLayer> {
+        workload
+            .layers
+            .iter()
+            .find(|l| l.name == name)
+            .with_context(|| {
+                format!("transformer workload {} missing layer {name:?}", workload.name)
+            })
+    };
+    let model_key = opts.model_key.as_deref().unwrap_or(workload.name);
+    let (qkv, attn_out, ffn1, ffn2) = (get("qkv")?, get("attn_out")?, get("ffn1")?, get("ffn2")?);
+    let d = qkv.shape.k;
+    let m = qkv.shape.m;
+    let d_ff = ffn1.shape.n;
+    let n_layers = qkv.count.max(1);
+    ensure!(qkv.shape.n == 3 * d, "qkv must project to 3*d_model");
+    ensure!(attn_out.shape.k == d && attn_out.shape.n == d, "attn_out must be (d, d)");
+    ensure!(ffn1.shape.k == d && ffn2.shape.k == d_ff && ffn2.shape.n == d, "ffn pair shapes");
+    for l in [attn_out, ffn1, ffn2] {
+        ensure!(l.shape.m == m && l.count == qkv.count, "transformer layers must agree on M/count");
+    }
+    let seq = opts.seq.max(1);
+    ensure!(m % seq == 0, "M={m} not divisible by seq={seq}");
+    let batch = m / seq;
+    let heads = opts.heads.max(1);
+    ensure!(d % heads == 0, "d_model {d} not divisible by heads {heads}");
+    ensure!(opts.n_classes > 0, "transformer head needs n_classes >= 1");
+
+    let mut rng = Rng::new(opts.seed);
+    let mut b = GraphBuilder::new();
+    let x = b.buffer(m, d);
+    let qkvb = b.buffer(m, 3 * d);
+    let ctx = b.buffer(m, d);
+    let t = b.buffer(m, d);
+    let h = b.buffer(m, d_ff);
+    let scores = b.buffer(seq, seq);
+    let qh = b.buffer(seq, d / heads);
+    let kh = b.buffer(seq, d / heads);
+    let vh = b.buffer(seq, d / heads);
+
+    for layer in 0..n_layers {
+        let w_qkv = Matrix::randn(d, 3 * d, &mut rng);
+        let w_out = Matrix::randn(d, d, &mut rng);
+        let w_up = Matrix::randn(d, d_ff, &mut rng);
+        let w_down = Matrix::randn(d_ff, d, &mut rng);
+        let ffn_bias = small_bias(d_ff, &mut rng);
+
+        let node =
+            opts.pack_layer(model_key, &format!("l{layer}.qkv"), &w_qkv, m, qkv.prunable)?;
+        b.gemm_into(x, node, qkvb);
+        b.push(Op::Attention { qkv: qkvb, out: ctx, heads, seq, scores, qh, kh, vh });
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.attn_out"),
+            &w_out,
+            m,
+            attn_out.prunable,
+        )?;
+        b.gemm_into(ctx, node, t);
+        b.push(Op::Residual { src: t, dst: x });
+        b.push(Op::LayerNorm { buf: x });
+        let node =
+            opts.pack_layer(model_key, &format!("l{layer}.ffn1"), &w_up, m, ffn1.prunable)?;
+        b.gemm_into(x, node, h);
+        let bias = b.add_bias(ffn_bias);
+        b.push(Op::BiasAct { buf: h, bias: Some(bias), act: Some(Act::Relu) });
+        let node =
+            opts.pack_layer(model_key, &format!("l{layer}.ffn2"), &w_down, m, ffn2.prunable)?;
+        b.gemm_into(h, node, t);
+        b.push(Op::Residual { src: t, dst: x });
+        b.push(Op::LayerNorm { buf: x });
+    }
+
+    let pooled = b.buffer(batch, d);
+    b.push(Op::MeanPool { input: x, out: pooled, seq });
+    // the classifier head stays dense in every variant — the paper's
+    // "keep the small accuracy-critical layers dense" rule
+    let w_head = Matrix::randn(d, opts.n_classes, &mut rng);
+    let head = opts.pack_layer(model_key, "head", &w_head, batch, false)?;
+    let logits = b.gemm(pooled, head);
+
+    let dims = ModelDims { batch, seq, d_model: d, n_classes: opts.n_classes };
+    Ok(b.finish(workload.name, opts.pattern.variant_name(), x, logits, dims))
+}
+
+// ----------------------------------------------------------- VGG / CNN --
+
+fn compile_conv(workload: &ModelWorkload, opts: &CompileOptions) -> Result<GraphProgram> {
+    let convs: Vec<&GemmLayer> =
+        workload.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv(_))).collect();
+    let fcs: Vec<&GemmLayer> =
+        workload.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc)).collect();
+    ensure!(!convs.is_empty(), "conv workload {} lists no conv layers", workload.name);
+    ensure!(!fcs.is_empty(), "conv workload {} needs an FC classifier tail", workload.name);
+
+    let model_key = opts.model_key.as_deref().unwrap_or(workload.name);
+    let first = match convs[0].kind {
+        LayerKind::Conv(meta) => meta,
+        LayerKind::Fc => unreachable!(),
+    };
+    let (hw0, c0) = (first.in_hw, first.c_in);
+
+    // Arena recycler: conv chains are deep (13+ GEMMs in VGG) and each
+    // layer's im2col matrix is large, so dead buffers are reused for later
+    // same-shaped allocations instead of growing the workspace with depth.
+    // Execution is sequential and every op fully overwrites its output, so
+    // a buffer is recyclable the moment its last reader has been pushed.
+    struct BufPool {
+        free: std::collections::HashMap<(usize, usize), Vec<BufId>>,
+    }
+    impl BufPool {
+        fn grab(&mut self, b: &mut GraphBuilder, rows: usize, cols: usize) -> BufId {
+            if let Some(id) = self.free.get_mut(&(rows, cols)).and_then(Vec::pop) {
+                return id;
+            }
+            b.buffer(rows, cols)
+        }
+        fn release(&mut self, b: &GraphBuilder, id: BufId) {
+            self.free.entry(b.shape(id)).or_default().push(id);
+        }
+    }
+    let mut arena = BufPool { free: std::collections::HashMap::new() };
+
+    let mut rng = Rng::new(opts.seed);
+    let mut b = GraphBuilder::new();
+    let input = b.buffer(1, c0 * hw0 * hw0);
+    let mut cur = input;
+    let mut cur_hw = hw0;
+    let mut cur_c = c0;
+    let mut from_chw = true;
+
+    for l in convs {
+        let LayerKind::Conv(meta) = l.kind else { unreachable!() };
+        if l.count > 1 {
+            ensure!(
+                meta.stride == 1 && meta.c_in == meta.c_out,
+                "conv layer {} repeats {}x but does not chain (stride/width)",
+                l.name,
+                l.count
+            );
+        }
+        for rep in 0..l.count {
+            let c_in = if rep == 0 { meta.c_in } else { meta.c_out };
+            ensure!(
+                c_in == cur_c,
+                "conv chain breaks at {}: needs {} input channels, previous layer produced {} \
+                 (non-sequential topologies are not compilable)",
+                l.name,
+                c_in,
+                cur_c
+            );
+            // spatial transition: the zoo halves resolution between blocks
+            if rep == 0 && meta.in_hw * 2 == cur_hw {
+                ensure!(cur_hw % 2 == 0 && !from_chw, "pool transition at {}", l.name);
+                let pooled = arena.grab(&mut b, (cur_hw / 2) * (cur_hw / 2), cur_c);
+                b.push(Op::AvgPool2 { input: cur, out: pooled, hw: cur_hw });
+                arena.release(&b, cur);
+                cur = pooled;
+                cur_hw /= 2;
+            } else if rep == 0 {
+                ensure!(
+                    meta.in_hw == cur_hw,
+                    "conv chain breaks at {}: needs {}x{} input, previous produced {}x{}",
+                    l.name,
+                    meta.in_hw,
+                    meta.in_hw,
+                    cur_hw,
+                    cur_hw
+                );
+            }
+            let spec = Conv2dSpec {
+                c_in,
+                c_out: meta.c_out,
+                kernel: meta.kernel,
+                stride: meta.stride,
+                pad: meta.pad,
+            };
+            let (out_hw, _) = spec.out_hw(cur_hw, cur_hw);
+            let a = arena.grab(&mut b, out_hw * out_hw, spec.gemm_k());
+            b.push(Op::Im2col { input: cur, out: a, spec, in_hw: cur_hw, from_chw });
+            // `cur` is dead once lowered (the program input is kept out of
+            // the recycler: run() writes it fresh before every execute)
+            if cur != input {
+                arena.release(&b, cur);
+            }
+            let w = Matrix::randn(spec.gemm_k(), spec.c_out, &mut rng);
+            let name = if l.count > 1 { format!("{}.{rep}", l.name) } else { l.name.clone() };
+            let node = opts.pack_layer(model_key, &name, &w, out_hw * out_hw, l.prunable)?;
+            let y = arena.grab(&mut b, out_hw * out_hw, node.n);
+            b.gemm_into(a, node, y);
+            arena.release(&b, a);
+            let bias = b.add_bias(small_bias(spec.c_out, &mut rng));
+            b.push(Op::BiasAct { buf: y, bias: Some(bias), act: Some(Act::Relu) });
+            cur = y;
+            cur_hw = out_hw;
+            cur_c = spec.c_out;
+            from_chw = false;
+        }
+    }
+
+    // conv -> FC seam, inferred from the first FC's reduction width
+    let k0 = fcs[0].shape.k;
+    let hw2 = cur_hw * cur_hw;
+    let mut cur_fc = if k0 == cur_c {
+        // global average pool (the ResNet head)
+        let gp = b.buffer(1, cur_c);
+        b.push(Op::GlobalAvgPool { input: cur, out: gp });
+        gp
+    } else if k0 == cur_c * hw2 {
+        let fl = b.buffer(1, cur_c * hw2);
+        b.push(Op::Flatten { input: cur, out: fl });
+        fl
+    } else if cur_hw % 2 == 0 && k0 == cur_c * (cur_hw / 2) * (cur_hw / 2) {
+        // one final 2x2 pool before flattening (the VGG conv5 -> fc6 seam)
+        let pooled = b.buffer((cur_hw / 2) * (cur_hw / 2), cur_c);
+        b.push(Op::AvgPool2 { input: cur, out: pooled, hw: cur_hw });
+        let fl = b.buffer(1, cur_c * (cur_hw / 2) * (cur_hw / 2));
+        b.push(Op::Flatten { input: pooled, out: fl });
+        fl
+    } else {
+        bail!(
+            "conv->FC seam of {}: fc K={k0} matches neither {} (global pool), {} (flatten), \
+             nor a pooled flatten",
+            workload.name,
+            cur_c,
+            cur_c * hw2
+        );
+    };
+
+    for (i, l) in fcs.iter().enumerate() {
+        ensure!(l.count == 1, "FC layer {} repeats in a conv net", l.name);
+        let w = Matrix::randn(l.shape.k, l.shape.n, &mut rng);
+        let node = opts.pack_layer(model_key, &l.name, &w, 1, l.prunable)?;
+        let out = b.gemm(cur_fc, node);
+        if i + 1 < fcs.len() {
+            let bias = b.add_bias(small_bias(l.shape.n, &mut rng));
+            b.push(Op::BiasAct { buf: out, bias: Some(bias), act: Some(Act::Relu) });
+        }
+        cur_fc = out;
+    }
+
+    let dims = ModelDims {
+        batch: 1,
+        seq: 1,
+        d_model: c0 * hw0 * hw0,
+        n_classes: fcs.last().map(|l| l.shape.n).unwrap_or(1),
+    };
+    Ok(b.finish(workload.name, opts.pattern.variant_name(), input, cur_fc, dims))
+}
+
+// ------------------------------------------------------------ NMT/LSTM --
+
+fn compile_lstm(workload: &ModelWorkload, opts: &CompileOptions) -> Result<GraphProgram> {
+    let gates: Vec<&GemmLayer> =
+        workload.layers.iter().filter(|l| l.name.ends_with("_gates")).collect();
+    let tail: Vec<&GemmLayer> =
+        workload.layers.iter().filter(|l| !l.name.ends_with("_gates")).collect();
+    ensure!(!gates.is_empty(), "LSTM workload {} lists no *_gates layers", workload.name);
+    ensure!(!tail.is_empty(), "LSTM workload {} needs an FC tail", workload.name);
+
+    let model_key = opts.model_key.as_deref().unwrap_or(workload.name);
+    let hidden = gates[0].shape.k / 2;
+    let batch = gates[0].shape.m;
+    let steps = gates[0].count.max(1);
+    ensure!(hidden > 0, "LSTM hidden width must be positive");
+    for g in &gates {
+        ensure!(
+            g.shape.k == 2 * hidden && g.shape.n == 4 * hidden,
+            "gate layer {} must be (2H, 4H)",
+            g.name
+        );
+        ensure!(
+            g.shape.m == batch && g.count == gates[0].count,
+            "gate layers must agree on M/steps"
+        );
+    }
+
+    let mut rng = Rng::new(opts.seed);
+    let mut b = GraphBuilder::new();
+    let input = b.buffer(batch, steps * hidden);
+    let xh = b.buffer(batch, 2 * hidden);
+    let gbuf = b.buffer(batch, 4 * hidden);
+
+    struct Cell {
+        h: BufId,
+        c: BufId,
+        w: usize,
+        bias: usize,
+    }
+    let mut cells = Vec::with_capacity(gates.len());
+    for g in &gates {
+        let h = b.buffer(batch, hidden);
+        let c = b.buffer(batch, hidden);
+        let w = Matrix::randn(2 * hidden, 4 * hidden, &mut rng);
+        let node = opts.pack_layer(model_key, &g.name, &w, batch, g.prunable)?;
+        let w = b.add_weight(node);
+        let bias = b.add_bias(small_bias(4 * hidden, &mut rng));
+        b.push(Op::Zero { buf: h });
+        b.push(Op::Zero { buf: c });
+        cells.push(Cell { h, c, w, bias });
+    }
+
+    for step in 0..steps {
+        for (idx, cell) in cells.iter().enumerate() {
+            let src = if idx == 0 { input } else { cells[idx - 1].h };
+            b.push(Op::LstmStep {
+                input: src,
+                step,
+                w: cell.w,
+                bias: cell.bias,
+                h: cell.h,
+                c: cell.c,
+                xh,
+                gates: gbuf,
+                hidden,
+            });
+        }
+    }
+
+    // FC tail over the final hidden state.  A tail layer's `count` is the
+    // workload's *per-step cost accounting* (the simulator bills GNMT's
+    // attention/projection once per decoded token); the serving graph
+    // deliberately applies each tail GEMM once, to the final state — so a
+    // compiled `models::nmt()` executes `softmax_proj` once even though
+    // the shape list counts it 32 times for Fig. 10 latency totals.
+    let mut cur = cells.last().map(|c| c.h).unwrap();
+    for (i, l) in tail.iter().enumerate() {
+        ensure!(l.shape.m == batch, "tail layer {} must run at batch M", l.name);
+        let w = Matrix::randn(l.shape.k, l.shape.n, &mut rng);
+        let node = opts.pack_layer(model_key, &l.name, &w, batch, l.prunable)?;
+        let out = b.gemm(cur, node);
+        if i + 1 < tail.len() {
+            b.push(Op::BiasAct { buf: out, bias: None, act: Some(Act::Tanh) });
+        }
+        cur = out;
+    }
+
+    let n_classes = tail.last().map(|l| l.shape.n).unwrap_or(hidden);
+    let dims = ModelDims { batch, seq: steps, d_model: hidden, n_classes };
+    Ok(b.finish(workload.name, opts.pattern.variant_name(), input, cur, dims))
+}

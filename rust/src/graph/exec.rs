@@ -1,0 +1,382 @@
+//! The graph executor: runs a [`GraphProgram`] over a per-worker
+//! [`Workspace`] with **zero steady-state heap allocations** — every
+//! activation, attention score, LSTM concat, and kernel staging area
+//! lives in the arena sized at compile time.  Multi-buffer ops briefly
+//! take their mutated buffers out of the arena (an O(1) pointer swap
+//! with an empty matrix, no allocation) to satisfy the borrow checker.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::exec::{ModelDims, PreparedModel};
+use crate::gemm::{
+    effective_parallel_threads, matmul_parallel_into, matmul_tiled_into,
+    tvw_effective_parallel_threads, tvw_matmul_into_scratch, tvw_matmul_parallel_into,
+    tw_effective_parallel_threads, tw_matmul_into_scratch, tw_matmul_parallel_into,
+    vw24_effective_parallel_threads, vw24_matmul_into_with, vw24_matmul_parallel_into, GemmScratch,
+};
+use crate::nn::{attention_into, im2col_into, lstm_gate_update, AttnScratch, ImgSrc};
+use crate::pool::ThreadPool;
+use crate::tensor::Matrix;
+use crate::{anyhow, ensure};
+
+use super::ir::{Act, BufId, GraphProgram, Op};
+use super::pack::{GemmNode, PackedWeight};
+
+/// One worker's mutable execution state: the buffer arena plus the
+/// serial-kernel staging scratch.  Built once per worker from the
+/// program's compile-time shape table.
+pub struct Workspace {
+    bufs: Vec<Matrix>,
+    scratch: GemmScratch,
+}
+
+impl Workspace {
+    pub fn for_program(p: &GraphProgram) -> Workspace {
+        Workspace {
+            bufs: p.buf_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+            scratch: GemmScratch::with_capacity(p.scratch_a, p.scratch_c),
+        }
+    }
+
+    pub fn buf(&self, id: BufId) -> &Matrix {
+        &self.bufs[id.0]
+    }
+
+    pub fn buf_mut(&mut self, id: BufId) -> &mut Matrix {
+        &mut self.bufs[id.0]
+    }
+}
+
+/// Take a buffer out of the arena for mutation (restored by [`put`]);
+/// the placeholder is an empty matrix, so no allocation happens.
+fn take(bufs: &mut [Matrix], id: BufId) -> Matrix {
+    std::mem::replace(&mut bufs[id.0], Matrix::zeros(0, 0))
+}
+
+fn put(bufs: &mut [Matrix], id: BufId, m: Matrix) {
+    bufs[id.0] = m;
+}
+
+/// Dispatch one packed GEMM into `c` (fully overwritten).  With an
+/// intra-op pool each family runs its pool-parallel path — row bands
+/// (dense), condensed-tile ranges (TW/TVW), column blocks (2:4).  The
+/// small-problem fallback is decided *here* via the published
+/// `*_effective_parallel_threads` helpers (not inside the parallel entry
+/// points, whose fallback would allocate fresh kernel scratch), so every
+/// serial TW/TVW execution stages through the workspace's [`GemmScratch`]
+/// and the request loop stays allocation-free even with `intra_threads > 1`
+/// on problems too small to split.
+pub fn run_gemm(
+    a: &Matrix,
+    node: &GemmNode,
+    c: &mut Matrix,
+    intra: Option<&ThreadPool>,
+    scratch: &mut GemmScratch,
+) {
+    let threads = intra.map_or(1, ThreadPool::threads);
+    let cfg = &node.cfg;
+    match &node.weight {
+        PackedWeight::Dense(w) => {
+            let eff = effective_parallel_threads(a.rows, threads);
+            if let Some(pool) = intra.filter(|_| eff > 1) {
+                matmul_parallel_into(a, w, c, cfg, threads, pool);
+            } else {
+                matmul_tiled_into(a, w, c, cfg);
+            }
+        }
+        PackedWeight::Tw(p) => {
+            // the TW scatter only writes kept output columns; clear the rest
+            c.data.fill(0.0);
+            let eff = tw_effective_parallel_threads(p.tiles, threads);
+            if let Some(pool) = intra.filter(|_| eff > 1) {
+                tw_matmul_parallel_into(a, p, c, cfg, threads, pool);
+            } else {
+                tw_matmul_into_scratch(a, p, c, cfg, scratch);
+            }
+        }
+        PackedWeight::Tvw(p) => {
+            let eff = tvw_effective_parallel_threads(p.tiles, threads);
+            if let Some(pool) = intra.filter(|_| eff > 1) {
+                tvw_matmul_parallel_into(a, p, c, cfg, threads, pool);
+            } else {
+                tvw_matmul_into_scratch(a, p, c, cfg, scratch);
+            }
+        }
+        PackedWeight::Vw24(p) => {
+            let eff = vw24_effective_parallel_threads(p.n, threads);
+            if let Some(pool) = intra.filter(|_| eff > 1) {
+                vw24_matmul_parallel_into(a, p, c, cfg, threads, pool);
+            } else {
+                vw24_matmul_into_with(a, p, c, cfg);
+            }
+        }
+    }
+}
+
+/// Execute every op of `p` in order over `ws`.  The caller writes the
+/// packed request batch into `ws.buf_mut(p.input)` beforehand and reads
+/// the logits from `ws.buf(p.output)` afterwards.
+pub fn execute(p: &GraphProgram, ws: &mut Workspace, intra: Option<&ThreadPool>) {
+    assert_eq!(ws.bufs.len(), p.buf_shapes.len(), "workspace built for a different program");
+    let Workspace { bufs, scratch } = ws;
+    for op in &p.ops {
+        match op {
+            Op::Gemm { input, w, out } => {
+                let mut c = take(bufs, *out);
+                run_gemm(&bufs[input.0], &p.weights[*w], &mut c, intra, scratch);
+                put(bufs, *out, c);
+            }
+            Op::BiasAct { buf, bias, act } => {
+                let m = &mut bufs[buf.0];
+                if let Some(bi) = bias {
+                    let b = p.biases[*bi].as_slice();
+                    let cols = m.cols;
+                    for row in m.data.chunks_mut(cols) {
+                        for (v, bv) in row.iter_mut().zip(b) {
+                            *v += bv;
+                        }
+                    }
+                }
+                match act {
+                    Some(Act::Relu) => {
+                        for v in &mut m.data {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    Some(Act::Tanh) => {
+                        for v in &mut m.data {
+                            *v = v.tanh();
+                        }
+                    }
+                    None => {}
+                }
+            }
+            Op::Attention { qkv, out, heads, seq, scores, qh, kh, vh } => {
+                let mut ctx = take(bufs, *out);
+                let mut sc = AttnScratch {
+                    scores: take(bufs, *scores),
+                    qh: take(bufs, *qh),
+                    kh: take(bufs, *kh),
+                    vh: take(bufs, *vh),
+                };
+                {
+                    let qkvb = &bufs[qkv.0];
+                    let batch = qkvb.rows / seq;
+                    for b in 0..batch {
+                        attention_into(qkvb, &mut ctx, b * seq, *seq, *heads, &mut sc);
+                    }
+                }
+                put(bufs, *out, ctx);
+                put(bufs, *scores, sc.scores);
+                put(bufs, *qh, sc.qh);
+                put(bufs, *kh, sc.kh);
+                put(bufs, *vh, sc.vh);
+            }
+            Op::Im2col { input, out, spec, in_hw, from_chw } => {
+                let mut a = take(bufs, *out);
+                {
+                    let src_m = &bufs[input.0];
+                    let src = if *from_chw {
+                        ImgSrc::Chw { data: &src_m.data, c: spec.c_in, h: *in_hw, w: *in_hw }
+                    } else {
+                        ImgSrc::HwC { m: src_m, h: *in_hw, w: *in_hw }
+                    };
+                    im2col_into(&src, spec, &mut a);
+                }
+                put(bufs, *out, a);
+            }
+            Op::AvgPool2 { input, out, hw } => {
+                let mut o = take(bufs, *out);
+                {
+                    let src = &bufs[input.0];
+                    let (hw, ho) = (*hw, *hw / 2);
+                    debug_assert_eq!(src.rows, hw * hw);
+                    debug_assert_eq!(o.rows, ho * ho);
+                    for oy in 0..ho {
+                        for ox in 0..ho {
+                            let p00 = src.row((2 * oy) * hw + 2 * ox);
+                            let p01 = src.row((2 * oy) * hw + 2 * ox + 1);
+                            let p10 = src.row((2 * oy + 1) * hw + 2 * ox);
+                            let p11 = src.row((2 * oy + 1) * hw + 2 * ox + 1);
+                            let orow = o.row_mut(oy * ho + ox);
+                            for (j, ov) in orow.iter_mut().enumerate() {
+                                *ov = 0.25 * (p00[j] + p01[j] + p10[j] + p11[j]);
+                            }
+                        }
+                    }
+                }
+                put(bufs, *out, o);
+            }
+            Op::GlobalAvgPool { input, out } => {
+                let mut o = take(bufs, *out);
+                {
+                    let src = &bufs[input.0];
+                    let dst = o.row_mut(0);
+                    dst.fill(0.0);
+                    for r in 0..src.rows {
+                        for (dv, sv) in dst.iter_mut().zip(src.row(r)) {
+                            *dv += sv;
+                        }
+                    }
+                    let inv = 1.0 / src.rows as f32;
+                    for dv in dst.iter_mut() {
+                        *dv *= inv;
+                    }
+                }
+                put(bufs, *out, o);
+            }
+            Op::Flatten { input, out } => {
+                let mut o = take(bufs, *out);
+                {
+                    let src = &bufs[input.0];
+                    let (pixels, chans) = (src.rows, src.cols);
+                    let dst = o.row_mut(0);
+                    debug_assert_eq!(dst.len(), pixels * chans);
+                    for pix in 0..pixels {
+                        for (ch, v) in src.row(pix).iter().enumerate() {
+                            dst[ch * pixels + pix] = *v;
+                        }
+                    }
+                }
+                put(bufs, *out, o);
+            }
+            Op::LstmStep { input, step, w, bias, h, c, xh, gates, hidden } => {
+                let hid = *hidden;
+                let mut xhb = take(bufs, *xh);
+                let mut gb = take(bufs, *gates);
+                let mut hb = take(bufs, *h);
+                let mut cb = take(bufs, *c);
+                {
+                    let inp = &bufs[input.0];
+                    for i in 0..xhb.rows {
+                        let src = inp.row(i);
+                        // packed (batch, seq*H) input reads the step slice;
+                        // a stacked cell's (batch, H) hidden state reads whole
+                        let x_t =
+                            if inp.cols == hid { src } else { &src[step * hid..(step + 1) * hid] };
+                        let row = xhb.row_mut(i);
+                        row[..hid].copy_from_slice(x_t);
+                        row[hid..].copy_from_slice(hb.row(i));
+                    }
+                    run_gemm(&xhb, &p.weights[*w], &mut gb, intra, scratch);
+                    lstm_gate_update(&gb, &p.biases[*bias], hid, &mut hb, &mut cb);
+                }
+                put(bufs, *xh, xhb);
+                put(bufs, *gates, gb);
+                put(bufs, *h, hb);
+                put(bufs, *c, cb);
+            }
+            Op::Residual { src, dst } => {
+                let mut d = take(bufs, *dst);
+                for (dv, sv) in d.data.iter_mut().zip(&bufs[src.0].data) {
+                    *dv += sv;
+                }
+                put(bufs, *dst, d);
+            }
+            Op::LayerNorm { buf } => {
+                let m = &mut bufs[buf.0];
+                let cols = m.cols;
+                let inv_n = 1.0 / cols as f32;
+                for row in m.data.chunks_mut(cols) {
+                    let mean = row.iter().sum::<f32>() * inv_n;
+                    let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() * inv_n;
+                    let inv_std = 1.0 / (var + 1e-5).sqrt();
+                    for v in row.iter_mut() {
+                        *v = (*v - mean) * inv_std;
+                    }
+                }
+            }
+            Op::MeanPool { input, out, seq } => {
+                let mut o = take(bufs, *out);
+                {
+                    let src = &bufs[input.0];
+                    let inv = 1.0 / *seq as f32;
+                    for b in 0..o.rows {
+                        let dst = o.row_mut(b);
+                        dst.fill(0.0);
+                        for s_i in 0..*seq {
+                            for (dv, sv) in dst.iter_mut().zip(src.row(b * seq + s_i)) {
+                                *dv += sv;
+                            }
+                        }
+                        for dv in dst.iter_mut() {
+                            *dv *= inv;
+                        }
+                    }
+                }
+                put(bufs, *out, o);
+            }
+            Op::Zero { buf } => {
+                bufs[buf.0].data.fill(0.0);
+            }
+        }
+    }
+}
+
+/// One worker's executable model: a set of compiled variant programs
+/// sharing one arena layout (patterns change the packed weights, never
+/// the buffer shapes), plus that worker's private [`Workspace`].
+pub struct GraphModel {
+    programs: Arc<Vec<GraphProgram>>,
+    ws: Workspace,
+    /// Shared intra-op kernel pool; `None` = serial kernels at their
+    /// tuned/default tile configs.
+    intra: Option<Arc<ThreadPool>>,
+}
+
+impl GraphModel {
+    pub fn new(
+        programs: Arc<Vec<GraphProgram>>,
+        intra: Option<Arc<ThreadPool>>,
+    ) -> Result<GraphModel> {
+        ensure!(!programs.is_empty(), "graph model needs at least one compiled variant");
+        let first = &programs[0];
+        let (mut sa, mut sc) = (first.scratch_a, first.scratch_c);
+        for p in programs.iter().skip(1) {
+            ensure!(
+                p.buf_shapes == first.buf_shapes && p.dims == first.dims,
+                "graph variants must share one arena layout ({} vs {})",
+                p.variant,
+                first.variant
+            );
+            sa = sa.max(p.scratch_a);
+            sc = sc.max(p.scratch_c);
+        }
+        let mut ws = Workspace::for_program(first);
+        ws.scratch = GemmScratch::with_capacity(sa, sc);
+        Ok(GraphModel { programs, ws, intra })
+    }
+}
+
+impl PreparedModel for GraphModel {
+    fn dims(&self) -> ModelDims {
+        self.programs[0].dims
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.programs.iter().map(|p| p.variant.clone()).collect()
+    }
+
+    fn run(&mut self, variant: &str, packed: &[f32]) -> Result<Vec<f32>> {
+        let programs = self.programs.clone();
+        let p = programs
+            .iter()
+            .find(|p| p.variant == variant)
+            .ok_or_else(|| anyhow!("variant {variant:?} not compiled in this graph model"))?;
+        let want = p.dims.batch * p.dims.per_request_len();
+        ensure!(
+            packed.len() == want,
+            "packed batch has {} floats, model {} expects {want}",
+            packed.len(),
+            p.model
+        );
+        let input = self.ws.buf_mut(p.input);
+        debug_assert_eq!(input.data.len(), packed.len(), "input buffer matches request layout");
+        input.data.copy_from_slice(packed);
+        execute(p, &mut self.ws, self.intra.as_deref());
+        Ok(self.ws.buf(p.output).data.clone())
+    }
+}

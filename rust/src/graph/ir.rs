@@ -1,0 +1,227 @@
+//! The execution IR: a compiled model is a flat op list over a fixed set
+//! of workspace buffers (the arena) plus a table of packed GEMM weights.
+//!
+//! Buffers are identified by [`BufId`] and their shapes are fixed at
+//! compile time — the executor never allocates.  Ops reference weights
+//! and biases by index into the program's tables, so a program is a pure
+//! description: the mutable state (the arena + kernel scratch) lives in
+//! `graph::Workspace`, one per serving worker, while the program itself
+//! sits behind an `Arc` shared by the whole worker pool.
+
+use crate::exec::ModelDims;
+use crate::nn::Conv2dSpec;
+
+use super::pack::GemmNode;
+
+/// Index of one workspace buffer (a row-major matrix in the arena).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufId(pub usize);
+
+/// Elementwise activation of a [`Op::BiasAct`] node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+}
+
+/// One executable node.  Every referenced buffer is distinct per op (the
+/// executor temporarily takes mutated buffers out of the arena).
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// `out = bufs[input] @ weights[w]` — the packed-kernel dispatch
+    /// (dense / TW fused-CTO / TVW / 2:4, serial or pool-parallel).
+    Gemm { input: BufId, w: usize, out: BufId },
+    /// In-place `buf = act(buf + bias)`; either part optional.
+    BiasAct { buf: BufId, bias: Option<usize>, act: Option<Act> },
+    /// Multi-head self-attention over each `seq`-row window of the fused
+    /// QKV projection (`(batch*seq, 3d)`), writing context `(batch*seq, d)`.
+    /// `scores`/`qh`/`kh`/`vh` are the arena-resident scratch buffers the
+    /// `nn::attention_into` core reuses across every head and window.
+    Attention {
+        qkv: BufId,
+        out: BufId,
+        heads: usize,
+        seq: usize,
+        scores: BufId,
+        qh: BufId,
+        kh: BufId,
+        vh: BufId,
+    },
+    /// img2col lowering of one image into the GEMM activation matrix.
+    /// `from_chw`: the input buffer is a flat CHW image (the network
+    /// input); otherwise it is a previous conv GEMM's `(h*w, c)` output.
+    Im2col { input: BufId, out: BufId, spec: Conv2dSpec, in_hw: usize, from_chw: bool },
+    /// 2x2 average pool (stride 2) on an `(hw*hw, c)` activation.
+    AvgPool2 { input: BufId, out: BufId, hw: usize },
+    /// Global average pool: `(hw*hw, c)` -> `(1, c)`.
+    GlobalAvgPool { input: BufId, out: BufId },
+    /// `(hw*hw, c)` -> `(1, c*hw*hw)` in CHW order (conv -> FC seam).
+    Flatten { input: BufId, out: BufId },
+    /// One LSTM step: concat `[x_t | h]` into `xh`, gate GEMM through
+    /// `weights[w]` into `gates`, then the shared `nn::lstm_gate_update`
+    /// over `(h, c)`.  `x_t` comes from `input`: read directly when the
+    /// buffer is `(batch, hidden)` (a stacked cell's hidden state), or
+    /// sliced at `step` when it is the packed `(batch, seq*hidden)` input.
+    LstmStep {
+        input: BufId,
+        step: usize,
+        w: usize,
+        bias: usize,
+        h: BufId,
+        c: BufId,
+        xh: BufId,
+        gates: BufId,
+        hidden: usize,
+    },
+    /// `dst += src` (the transformer residual).
+    Residual { src: BufId, dst: BufId },
+    /// In-place per-row layer normalisation (no learned affine).
+    LayerNorm { buf: BufId },
+    /// Mean over each `seq`-row window: `(batch*seq, d)` -> `(batch, d)`.
+    MeanPool { input: BufId, out: BufId, seq: usize },
+    /// `buf = 0` (recurrent-state reset at the start of a request).
+    Zero { buf: BufId },
+}
+
+/// A compiled, immutable, executable model: ops + packed weights + buffer
+/// shapes.  Shared via `Arc` across serving workers; all mutable state
+/// lives in `graph::Workspace`.
+pub struct GraphProgram {
+    /// Workload name ("BERT-base", "VGG16", ... or "residual-mlp").
+    pub model: String,
+    /// Serving-variant name ("model_dense" / "model_tw" / ...).
+    pub variant: String,
+    pub ops: Vec<Op>,
+    pub weights: Vec<GemmNode>,
+    pub biases: Vec<Vec<f32>>,
+    /// `(rows, cols)` of every arena buffer.
+    pub buf_shapes: Vec<(usize, usize)>,
+    /// Where the packed request batch is written before execution.
+    pub input: BufId,
+    /// Where the logits are read after execution.
+    pub output: BufId,
+    pub dims: ModelDims,
+    /// Kernel scratch maxima over all weights (`GemmScratch` sizing).
+    pub scratch_a: usize,
+    pub scratch_c: usize,
+}
+
+impl GraphProgram {
+    /// The masked-dense twin: identical topology and buffer layout, every
+    /// packed weight decoded back to its masked-dense matrix — the parity
+    /// oracle `rust/tests/graph_parity.rs` checks kernels against.
+    pub fn to_dense_oracle(&self) -> GraphProgram {
+        GraphProgram {
+            model: self.model.clone(),
+            variant: format!("{}_oracle", self.variant),
+            ops: self.ops.clone(),
+            weights: self.weights.iter().map(GemmNode::to_dense_oracle).collect(),
+            biases: self.biases.clone(),
+            buf_shapes: self.buf_shapes.clone(),
+            input: self.input,
+            output: self.output,
+            dims: self.dims,
+            scratch_a: 0,
+            scratch_c: 0,
+        }
+    }
+
+    /// Arena footprint in floats (reporting / workspace sizing sanity).
+    pub fn arena_floats(&self) -> usize {
+        self.buf_shapes.iter().map(|(r, c)| r * c).sum()
+    }
+}
+
+/// Incremental program constructor used by `graph::compile` and by
+/// backends that define bespoke topologies (the native residual-MLP).
+#[derive(Default)]
+pub struct GraphBuilder {
+    pub(crate) ops: Vec<Op>,
+    pub(crate) weights: Vec<GemmNode>,
+    pub(crate) biases: Vec<Vec<f32>>,
+    pub(crate) buf_shapes: Vec<(usize, usize)>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> GraphBuilder {
+        GraphBuilder::default()
+    }
+
+    /// Reserve one arena buffer.
+    pub fn buffer(&mut self, rows: usize, cols: usize) -> BufId {
+        assert!(rows > 0 && cols > 0, "zero-sized graph buffer");
+        self.buf_shapes.push((rows, cols));
+        BufId(self.buf_shapes.len() - 1)
+    }
+
+    pub fn shape(&self, id: BufId) -> (usize, usize) {
+        self.buf_shapes[id.0]
+    }
+
+    pub fn push(&mut self, op: Op) {
+        self.ops.push(op);
+    }
+
+    /// Register a packed weight; returns its table index.
+    pub fn add_weight(&mut self, node: GemmNode) -> usize {
+        self.weights.push(node);
+        self.weights.len() - 1
+    }
+
+    /// Register a bias vector; returns its table index.
+    pub fn add_bias(&mut self, bias: Vec<f32>) -> usize {
+        self.biases.push(bias);
+        self.biases.len() - 1
+    }
+
+    /// Append a GEMM op: allocates the `(input.rows, node.n)` output
+    /// buffer, validates the reduction width, returns the output id.
+    pub fn gemm(&mut self, input: BufId, node: GemmNode) -> BufId {
+        let (rows, cols) = self.shape(input);
+        assert_eq!(cols, node.k, "GEMM {}: input width {} != K {}", node.name, cols, node.k);
+        let out = self.buffer(rows, node.n);
+        let w = self.add_weight(node);
+        self.push(Op::Gemm { input, w, out });
+        out
+    }
+
+    /// Like [`GraphBuilder::gemm`] but writing into an existing buffer
+    /// (shape-checked) — lets topologies reuse ping-pong buffers.
+    pub fn gemm_into(&mut self, input: BufId, node: GemmNode, out: BufId) {
+        let (rows, cols) = self.shape(input);
+        assert_eq!(cols, node.k, "GEMM {}: input width {} != K {}", node.name, cols, node.k);
+        assert_eq!(self.shape(out), (rows, node.n), "GEMM {}: output buffer shape", node.name);
+        let w = self.add_weight(node);
+        self.push(Op::Gemm { input, w, out });
+    }
+
+    /// Seal the program; computes the kernel-scratch maxima.
+    pub fn finish(
+        self,
+        model: &str,
+        variant: &str,
+        input: BufId,
+        output: BufId,
+        dims: ModelDims,
+    ) -> GraphProgram {
+        let (mut sa, mut sc) = (0usize, 0usize);
+        for w in &self.weights {
+            let (a, c) = w.scratch_needs();
+            sa = sa.max(a);
+            sc = sc.max(c);
+        }
+        GraphProgram {
+            model: model.to_string(),
+            variant: variant.to_string(),
+            ops: self.ops,
+            weights: self.weights,
+            biases: self.biases,
+            buf_shapes: self.buf_shapes,
+            input,
+            output,
+            dims,
+            scratch_a: sa,
+            scratch_c: sc,
+        }
+    }
+}

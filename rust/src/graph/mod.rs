@@ -1,0 +1,178 @@
+//! Layer-graph execution IR: the seam that makes the whole model zoo
+//! servable through the sparse GEMM kernels (`docs/DESIGN.md` §6).
+//!
+//! The paper measures its speedups on *whole networks* — BERT
+//! attention+FFN stacks, VGG convs lowered via img2col, NMT LSTM gates —
+//! with tile-wise/TVW sparsity applied per layer.  This module is the
+//! executable counterpart: a small IR
+//! ([`Op`]: `Gemm`/`BiasAct`/`Attention`/`Im2col`/`LstmStep`/`Residual`/
+//! `LayerNorm` plus pooling/plumbing ops) where each GEMM node carries a
+//! [`PackedWeight`] (Dense / TW fused-CTO / TVW / 2:4 — packed **once**
+//! at load) and a [`crate::gemm::TileConfig`] resolved from the autotune
+//! plan cache, executed allocation-free over a per-worker [`Workspace`]
+//! arena sized at compile time.
+//!
+//! Pipeline:
+//!
+//! ```text
+//! models::ModelWorkload ──compile──▶ GraphProgram (ops + packed weights)
+//!                                         │  Arc-shared across workers
+//!                      Workspace (arena) ──┤  one per worker
+//!                                     GraphModel::run(variant, batch)
+//! ```
+//!
+//! [`compile`] reconstructs the network topology from the workload's
+//! layer kinds (transformer / conv chain / stacked LSTM), prunes and
+//! packs every `prunable` layer into the variant's pattern ([`GraphPattern`],
+//! including per-layer `Auto` selection from the plan cache), and keeps
+//! `prunable: false` layers dense.  The serving backends (`exec::native`,
+//! `exec::zoo`) are thin adapters over [`GraphModel`].
+
+pub mod compile;
+pub mod exec;
+pub mod ir;
+pub mod pack;
+
+pub use compile::{compile, CompileOptions};
+pub use exec::{execute, run_gemm, GraphModel, Workspace};
+pub use ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
+pub use pack::{pack_weight, resolve_tile, GemmNode, GraphPattern, PackOptions, PackedWeight};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::PreparedModel;
+    use crate::models;
+    use std::sync::Arc;
+
+    fn run_once(p: GraphProgram, x: &[f32]) -> Vec<f32> {
+        let mut model = GraphModel::new(Arc::new(vec![p]), None).unwrap();
+        let variant = model.variants()[0].clone();
+        model.run(&variant, x).unwrap()
+    }
+
+    #[test]
+    fn transformer_compiles_and_runs() {
+        let wl = models::bert_at(2, 4, 16, 1);
+        let opts = CompileOptions {
+            seq: 4,
+            heads: 4,
+            n_classes: 4,
+            pack: PackOptions { sparsity: 0.75, g: 8 },
+            ..CompileOptions::default()
+        };
+        let patterns =
+            [GraphPattern::Dense, GraphPattern::Tw, GraphPattern::Tvw, GraphPattern::Vw24];
+        for pattern in patterns {
+            let p = compile(&wl, &opts.with_pattern(pattern)).unwrap();
+            assert_eq!(p.dims.batch, 2);
+            assert_eq!(p.dims.per_request_len(), 4 * 16);
+            let x: Vec<f32> = (0..2 * 4 * 16).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+            let logits = run_once(p, &x);
+            assert_eq!(logits.len(), 2 * 4, "{pattern:?}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{pattern:?}");
+        }
+    }
+
+    #[test]
+    fn conv_net_compiles_and_runs() {
+        let wl = models::vgg16_scaled(32, 16, 32);
+        let p = compile(&wl, &CompileOptions::default()).unwrap();
+        assert_eq!(p.dims.batch, 1);
+        assert_eq!(p.dims.per_request_len(), 3 * 32 * 32);
+        assert_eq!(p.dims.n_classes, 1000);
+        let x: Vec<f32> = (0..3 * 32 * 32).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+        let logits = run_once(p, &x);
+        assert_eq!(logits.len(), 1000);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn resnet18_compiles_as_plain_chain_and_resnet50_rejects() {
+        // ResNet-18's listed shapes chain sequentially (skip connections
+        // are not modelled); ResNet-50's bottleneck widths do not, and
+        // compile must say so instead of silently mis-wiring
+        let opts = CompileOptions::default();
+        assert!(compile(&models::resnet18(), &opts).is_ok());
+        let err = compile(&models::resnet50(), &opts).unwrap_err().to_string();
+        assert!(err.contains("chain"), "{err}");
+    }
+
+    #[test]
+    fn lstm_compiles_and_runs_with_state_reset() {
+        let wl = models::nmt_at(2, 8, 3);
+        let p = compile(&wl, &CompileOptions::default()).unwrap();
+        assert_eq!(p.dims.batch, 2);
+        assert_eq!((p.dims.seq, p.dims.d_model), (3, 8));
+        assert_eq!(p.dims.n_classes, 64);
+        let x: Vec<f32> = (0..2 * 3 * 8).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+        let mut model = GraphModel::new(Arc::new(vec![p]), None).unwrap();
+        let a = model.run("model_dense", &x).unwrap();
+        // recurrent state must be reset per request: a second identical
+        // request returns identical logits
+        let b = model.run("model_dense", &x).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn variants_share_one_arena_layout() {
+        let wl = models::bert_at(1, 4, 16, 1);
+        let opts = CompileOptions { seq: 4, n_classes: 4, ..CompileOptions::default() };
+        let programs: Vec<GraphProgram> = [GraphPattern::Dense, GraphPattern::Tw, GraphPattern::Tvw]
+            .iter()
+            .map(|p| compile(&wl, &opts.with_pattern(*p)).unwrap())
+            .collect();
+        assert!(programs.windows(2).all(|w| w[0].buf_shapes == w[1].buf_shapes));
+        let model = GraphModel::new(Arc::new(programs), None).unwrap();
+        assert_eq!(model.variants(), ["model_dense", "model_tw", "model_tvw"]);
+    }
+
+    #[test]
+    fn auto_pattern_resolves_recommendation_under_the_cli_model_key() {
+        // the tuner stores its recommendation under the CLI name ("bert"),
+        // not the workload display name ("BERT-base"); Auto must find it
+        use crate::autotune::{PatternFamily, PlanCache};
+        let wl = models::bert_at(1, 4, 16, 1);
+        let mut cache = PlanCache::new();
+        cache.set_model_variant("bert", "model_tvw");
+        let opts = CompileOptions {
+            seq: 4,
+            n_classes: 4,
+            pack: PackOptions { sparsity: 0.75, g: 8 },
+            plan_cache: Some(Arc::new(cache)),
+            model_key: Some("bert".into()),
+            ..CompileOptions::default()
+        };
+        let p = compile(&wl, &opts.with_pattern(GraphPattern::Auto)).unwrap();
+        let ffn1 = p.weights.iter().find(|w| w.name == "l0.ffn1").expect("ffn1 packed");
+        assert_eq!(ffn1.weight.family(), PatternFamily::Tvw);
+        // the dense head ignores the recommendation
+        let head = p.weights.iter().find(|w| w.name == "head").unwrap();
+        assert_eq!(head.weight.family(), PatternFamily::Dense);
+    }
+
+    #[test]
+    fn conv_arena_recycles_dead_buffers() {
+        // a deep conv chain's arena must be bounded by the live set, not
+        // the depth: vgg's 13 conv instances share recycled im2col and
+        // activation buffers wherever shapes repeat
+        let wl = models::vgg16_scaled(32, 16, 32);
+        let p = compile(&wl, &CompileOptions::default()).unwrap();
+        let gemms =
+            p.ops.iter().filter(|op| matches!(op, Op::Gemm { .. })).count();
+        // without recycling every conv GEMM owns a private (a, y) pair on
+        // top of input/seam/fc buffers; recycled, the arena is strictly
+        // smaller than that worst case
+        assert!(p.buf_shapes.len() < 2 * gemms + 2, "arena {} for {gemms} GEMMs", p.buf_shapes.len());
+    }
+
+    #[test]
+    fn unknown_topology_is_an_error() {
+        let mut wl = models::bert_at(1, 2, 8, 1);
+        for l in &mut wl.layers {
+            l.name = format!("x_{}", l.name);
+        }
+        assert!(compile(&wl, &CompileOptions::default()).is_err());
+    }
+}

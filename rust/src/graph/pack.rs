@@ -1,0 +1,342 @@
+//! Weight packing: one GEMM operand pruned and encoded into its
+//! kernel-ready form, with its cache-blocking resolved from the autotune
+//! plan cache — done **once** at graph-compile time, never on the request
+//! path.
+
+use std::sync::Arc;
+
+use crate::autotune::{PatternFamily, PlanCache};
+use crate::error::Result;
+use crate::gemm::TileConfig;
+use crate::gpusim::GemmShape;
+use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use crate::tensor::Matrix;
+use crate::{anyhow, bail};
+
+/// A GEMM weight operand packed into one serving variant's kernel-ready
+/// form (the per-layer analogue of the paper's offline compilation step).
+#[derive(Clone)]
+pub enum PackedWeight {
+    /// Raw row-major weights, run by `gemm::matmul_tiled_into`.
+    Dense(Matrix),
+    /// TW-pruned condensed tiles + CTO offset tables, run by the fused-CTO
+    /// `gemm::tw_matmul_into_scratch`.
+    Tw(TwPlan),
+    /// TVW-pruned (CTO + 2:4 metadata), run by `gemm::tvw_matmul_into_scratch`.
+    Tvw(TvwPlan),
+    /// Plain 2:4 along K, run by `gemm::vw24_matmul_into_with`.
+    Vw24(Vw24Plan),
+}
+
+impl PackedWeight {
+    pub fn family(&self) -> PatternFamily {
+        match self {
+            PackedWeight::Dense(_) => PatternFamily::Dense,
+            PackedWeight::Tw(_) => PatternFamily::Tw,
+            PackedWeight::Tvw(_) => PatternFamily::Tvw,
+            PackedWeight::Vw24(_) => PatternFamily::Vw24,
+        }
+    }
+
+    /// `(K, N)` of the GEMM this operand serves.
+    pub fn kn(&self) -> (usize, usize) {
+        match self {
+            PackedWeight::Dense(w) => (w.rows, w.cols),
+            PackedWeight::Tw(p) => (p.k, p.n),
+            PackedWeight::Tvw(p) => (p.k, p.n),
+            PackedWeight::Vw24(p) => (p.k, p.n),
+        }
+    }
+
+    /// Expand back to the masked-dense weight matrix (the parity oracle).
+    pub fn decode(&self) -> Matrix {
+        match self {
+            PackedWeight::Dense(w) => w.clone(),
+            PackedWeight::Tw(p) => p.decode(),
+            PackedWeight::Tvw(p) => p.decode(),
+            PackedWeight::Vw24(p) => p.decode(),
+        }
+    }
+}
+
+/// One GEMM node of the graph: the packed operand plus its resolved
+/// cache-blocking.  Ops reference nodes by index into the program's
+/// weight table.
+#[derive(Clone)]
+pub struct GemmNode {
+    pub name: String,
+    pub weight: PackedWeight,
+    pub cfg: TileConfig,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmNode {
+    /// The masked-dense twin of this node (same tile config), used to
+    /// build the naive parity oracle of a compiled graph.
+    pub fn to_dense_oracle(&self) -> GemmNode {
+        GemmNode {
+            name: self.name.clone(),
+            weight: PackedWeight::Dense(self.weight.decode()),
+            cfg: TileConfig::dense_default(),
+            k: self.k,
+            n: self.n,
+        }
+    }
+
+    /// Serial-kernel scratch this node needs: `(a_gather, c_tile)` staging
+    /// lengths (see [`crate::gemm::GemmScratch`]); dense and 2:4 kernels
+    /// stage nothing.
+    pub fn scratch_needs(&self) -> (usize, usize) {
+        match &self.weight {
+            PackedWeight::Dense(_) | PackedWeight::Vw24(_) => (0, 0),
+            PackedWeight::Tw(p) => (self.cfg.bm() * p.kmax, self.cfg.bm() * p.g),
+            PackedWeight::Tvw(p) => (p.kmax, p.g),
+        }
+    }
+}
+
+/// Pruning parameters shared by every packed layer of one graph.
+#[derive(Clone, Copy, Debug)]
+pub struct PackOptions {
+    /// Target sparsity for TW / TVW (TVW floors at 0.5).
+    pub sparsity: f64,
+    /// TW tile granularity G (clamped to the layer's N).
+    pub g: usize,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        PackOptions { sparsity: 0.75, g: 32 }
+    }
+}
+
+/// Resolve a layer's tile config: serving-time nearest-match lookup in the
+/// plan cache (exact on `(K, N, pattern)`, nearest on M/sparsity/threads —
+/// the tuner keys DENSE at sparsity 0 and caps M, so exact probes would
+/// miss), falling back to the family's historical default.
+pub fn resolve_tile(
+    cache: Option<&PlanCache>,
+    shape: GemmShape,
+    family: PatternFamily,
+    sparsity: f64,
+) -> TileConfig {
+    let fallback = match family {
+        PatternFamily::Dense => TileConfig::dense_default(),
+        PatternFamily::Tw => TileConfig::tw_default(),
+        PatternFamily::Tvw => TileConfig::tvw_default(),
+        PatternFamily::Vw24 => TileConfig::vw_default(),
+    };
+    cache
+        .and_then(|c| c.lookup_tile_config(shape, family.label(), sparsity))
+        .unwrap_or(fallback)
+}
+
+/// Prune + encode one weight matrix into `family`'s kernel-ready form and
+/// resolve its tile config.  `m_hint` is the activation row count the
+/// layer serves (the M the cache lookup transfers across).  A 2:4 request
+/// on a K not divisible by 4 degrades to Dense — the same "keep
+/// hardware-incompatible layers dense" rule the paper applies to
+/// accuracy-critical layers.
+pub fn pack_weight(
+    name: &str,
+    w: &Matrix,
+    m_hint: usize,
+    family: PatternFamily,
+    opts: &PackOptions,
+    cache: Option<&PlanCache>,
+) -> Result<GemmNode> {
+    let (k, n) = (w.rows, w.cols);
+    if k == 0 || n == 0 {
+        bail!("layer {name:?} has a zero-dimension weight ({k}x{n})");
+    }
+    let shape = GemmShape::new(m_hint, k, n);
+    let g = opts.g.clamp(1, n);
+    let (weight, family, sparsity) = match family {
+        PatternFamily::Dense => {
+            (PackedWeight::Dense(w.clone()), PatternFamily::Dense, opts.sparsity)
+        }
+        PatternFamily::Tw => {
+            let tw = prune_tw(w, opts.sparsity, g, None);
+            (PackedWeight::Tw(TwPlan::encode(w, &tw)), PatternFamily::Tw, opts.sparsity)
+        }
+        PatternFamily::Tvw => {
+            let s = opts.sparsity.max(0.5);
+            let (tw, mask) = prune_tvw(w, s, g);
+            (PackedWeight::Tvw(TvwPlan::encode(w, &tw, &mask)), PatternFamily::Tvw, s)
+        }
+        PatternFamily::Vw24 => {
+            if k % 4 != 0 {
+                // hardware-incompatible layer: serve it dense
+                (PackedWeight::Dense(w.clone()), PatternFamily::Dense, opts.sparsity)
+            } else {
+                let mask = prune_vw(w, 0.5, 4);
+                let plan = Vw24Plan::encode(w, &mask)
+                    .map_err(|e| anyhow!("packing 2:4 plan for {name:?}: {e}"))?;
+                (PackedWeight::Vw24(plan), PatternFamily::Vw24, 0.5)
+            }
+        }
+    };
+    let cfg = resolve_tile(cache, shape, family, sparsity);
+    Ok(GemmNode { name: name.to_string(), weight, cfg, k, n })
+}
+
+/// Which pattern a compiled graph variant packs its prunable layers with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphPattern {
+    Dense,
+    Tw,
+    Tvw,
+    Vw24,
+    /// Per-layer selection from the autotune plan cache (see
+    /// `docs/DESIGN.md` §6 for the resolution order).
+    Auto,
+}
+
+impl GraphPattern {
+    /// The serving-variant name this pattern maps to (the router's
+    /// vocabulary).
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            GraphPattern::Dense => "model_dense",
+            GraphPattern::Tw => "model_tw",
+            GraphPattern::Tvw => "model_tvw",
+            GraphPattern::Vw24 => "model_vw24",
+            GraphPattern::Auto => "model_auto",
+        }
+    }
+
+    pub fn from_variant(name: &str) -> Option<GraphPattern> {
+        Some(match name {
+            "model_dense" => GraphPattern::Dense,
+            "model_tw" => GraphPattern::Tw,
+            "model_tvw" => GraphPattern::Tvw,
+            "model_vw24" => GraphPattern::Vw24,
+            "model_auto" => GraphPattern::Auto,
+            _ => return None,
+        })
+    }
+
+    /// The concrete family for one prunable layer.  Fixed patterns map
+    /// 1:1; `Auto` resolves through the plan cache: (1) the tuner's
+    /// per-workload serving recommendation, (2) the best measured tuned
+    /// entry at the layer's exact `(K, N)`, (3) TW at the compile
+    /// sparsity (the paper's default serving pattern).
+    pub fn family_for_layer(
+        &self,
+        model: &str,
+        shape: GemmShape,
+        cache: Option<&Arc<PlanCache>>,
+    ) -> PatternFamily {
+        match self {
+            GraphPattern::Dense => PatternFamily::Dense,
+            GraphPattern::Tw => PatternFamily::Tw,
+            GraphPattern::Tvw => PatternFamily::Tvw,
+            GraphPattern::Vw24 => PatternFamily::Vw24,
+            GraphPattern::Auto => {
+                let Some(cache) = cache else { return PatternFamily::Tw };
+                if let Some(fam) = cache
+                    .model_variant(model)
+                    .and_then(GraphPattern::from_variant)
+                    .and_then(|p| match p {
+                        GraphPattern::Dense => Some(PatternFamily::Dense),
+                        GraphPattern::Tw => Some(PatternFamily::Tw),
+                        GraphPattern::Tvw => Some(PatternFamily::Tvw),
+                        GraphPattern::Vw24 => Some(PatternFamily::Vw24),
+                        GraphPattern::Auto => None,
+                    })
+                {
+                    return fam;
+                }
+                cache
+                    .entries()
+                    .filter(|e| e.key.k == shape.k && e.key.n == shape.n)
+                    .min_by(|a, b| a.measured_us.total_cmp(&b.measured_us))
+                    .and_then(|e| PatternFamily::from_label(&e.key.pattern))
+                    .unwrap_or(PatternFamily::Tw)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{PlanKey, TunedEntry};
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_families_roundtrip_through_decode() {
+        let mut rng = Rng::new(40);
+        let w = Matrix::randn(32, 48, &mut rng);
+        let opts = PackOptions { sparsity: 0.75, g: 16 };
+        let families =
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24];
+        for fam in families {
+            let node = pack_weight("l", &w, 8, fam, &opts, None).unwrap();
+            assert_eq!(node.weight.family(), fam, "{fam:?}");
+            assert_eq!(node.weight.kn(), (32, 48));
+            let dec = node.weight.decode();
+            assert_eq!((dec.rows, dec.cols), (32, 48));
+            if fam == PatternFamily::Dense {
+                assert_eq!(dec, w);
+            } else {
+                // pruning must actually remove weight
+                let zeros = dec.data.iter().filter(|v| **v == 0.0).count();
+                assert!(zeros > w.data.len() / 4, "{fam:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn vw24_on_bad_k_degrades_to_dense() {
+        let mut rng = Rng::new(41);
+        let w = Matrix::randn(27, 16, &mut rng); // K = 27, not 2:4-compatible
+        let node =
+            pack_weight("c1", &w, 4, PatternFamily::Vw24, &PackOptions::default(), None).unwrap();
+        assert_eq!(node.weight.family(), PatternFamily::Dense);
+    }
+
+    #[test]
+    fn auto_resolves_recommendation_then_best_entry() {
+        let shape = GemmShape::new(64, 96, 128);
+        let mut cache = PlanCache::new();
+        cache.insert(TunedEntry {
+            key: PlanKey::new(shape, "TVW", 0.75, 1),
+            variant: "tvw".into(),
+            bm: 8,
+            bk: 64,
+            g: 16,
+            threads: 1,
+            measured_us: 10.0,
+            model_us: 9.0,
+            default_us: 20.0,
+        });
+        cache.insert(TunedEntry {
+            key: PlanKey::new(shape, "DENSE", 0.0, 1),
+            variant: "dense".into(),
+            bm: 64,
+            bk: 64,
+            g: 0,
+            threads: 1,
+            measured_us: 30.0,
+            model_us: 28.0,
+            default_us: 30.0,
+        });
+        let cache = Arc::new(cache);
+        // best measured entry at (K, N) wins when no recommendation is set
+        assert_eq!(
+            GraphPattern::Auto.family_for_layer("bert", shape, Some(&cache)),
+            PatternFamily::Tvw
+        );
+        // an explicit per-workload recommendation takes precedence
+        let mut with_rec = (*cache).clone();
+        with_rec.set_model_variant("bert", "model_tw");
+        assert_eq!(
+            GraphPattern::Auto.family_for_layer("bert", shape, Some(&Arc::new(with_rec))),
+            PatternFamily::Tw
+        );
+        // no cache: the paper's default serving pattern
+        assert_eq!(GraphPattern::Auto.family_for_layer("bert", shape, None), PatternFamily::Tw);
+    }
+}

@@ -18,13 +18,19 @@
 //! - [`gpusim`] — A100-class analytical latency simulator
 //! - [`autotune`] — empirical kernel autotuner: candidate space, gpusim
 //!   pre-filter, wall-clock measurement, persistent plan cache
-//! - [`models`] — model zoo: per-layer GEMM workloads (BERT, VGG, ResNet, NMT)
+//! - [`models`] — model zoo: per-layer GEMM workloads (BERT, VGG, ResNet,
+//!   NMT), each layer carrying its operator provenance (`LayerKind`)
+//! - [`nn`] — executable operators (attention, img2col conv, LSTM cell)
+//!   with workspace-buffered `_into` cores + closure-based shims
+//! - [`graph`] — layer-graph execution IR (DESIGN.md §6): compile a zoo
+//!   workload into an op list over packed per-layer weights
+//!   (dense/TW/TVW/2:4) and run it allocation-free over a workspace arena
 //! - [`accuracy`] — trainable proxy + calibrated surrogate accuracy models
 //! - [`runtime`] — PJRT engine: load HLO-text artifacts, execute
 //!   (stubbed unless the `pjrt` feature supplies the `xla` crate)
 //! - [`exec`] — backend-agnostic execution layer: the `Backend` /
-//!   `PreparedModel` seam, with the PJRT adapter and the native backend
-//!   that packs weights into CTO/2:4 plans and runs the CPU kernels
+//!   `PreparedModel` seam, with the PJRT adapter and the graph-compiled
+//!   native/zoo backends that run the CPU kernels in-process
 //! - [`coordinator`] — serving layer: router, dynamic batcher, worker
 //!   pool, metrics, tuned-plan routing
 //! - [`figures`] — regeneration harnesses for every paper figure
@@ -37,6 +43,7 @@ pub mod error;
 pub mod exec;
 pub mod figures;
 pub mod gemm;
+pub mod graph;
 pub mod gpusim;
 pub mod json;
 pub mod models;

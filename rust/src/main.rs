@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use tilewise::autotune::{MeasureOpts, PatternFamily, PlanCache, Tuner, TunerOpts};
 use tilewise::coordinator::{start, start_with_backend, BatcherConfig, Policy, ServerConfig};
-use tilewise::exec::{NativeBackend, NativeModelSpec};
+use tilewise::exec::{Backend, NativeBackend, NativeModelSpec, ZooBackend, ZooSpec};
 use tilewise::figures::{fig10, fig6, fig7, fig8, fig9, headline};
 use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
 use tilewise::models::{self, ModelWorkload};
@@ -39,7 +39,9 @@ fn main() {
                  commands:\n\
                  \x20 serve [--backend pjrt|native] [--workers N] [--intra-threads N] [--artifacts DIR]\n\
                  \x20       [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
-                 \x20       [--plan-cache FILE] [--model NAME]\n\
+                 \x20       [--plan-cache FILE] [--model bert|vgg|nmt|nano|bert-ffn]\n\
+                 \x20       (bert/vgg/nmt serve the graph-compiled zoo model; nano the\n\
+                 \x20        residual-MLP surrogate; bert-ffn the BERT-base FFN widths)\n\
                  \x20 autotune [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--out FILE]\n\
                  \x20          [--threads T] [--m-cap M] [--budget-ms MS] [--quick]\n\
                  \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
@@ -161,7 +163,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             queue_threshold: 8,
         },
         Some("tuned") => Policy::Tuned {
-            model: flag(args, "--model").unwrap_or_else(|| "bert".into()),
+            // the cache keys recommendations under the autotune CLI's
+            // model names; `serve --model vgg` maps to the tuned "vgg16"
+            model: match flag(args, "--model").as_deref() {
+                Some("vgg") => "vgg16".into(),
+                Some(m) => m.into(),
+                None => "bert".into(),
+            },
             fallback: "model_dense".into(),
         },
         // no explicit policy: the native backend round-robins so one run
@@ -200,20 +208,30 @@ fn cmd_serve(args: &[String]) -> i32 {
             cfg.policy = cfg.policy.clone().resolve(cache.as_deref());
             cfg.plan_cache = None;
             native_cache = cache.clone();
-            // --model picks the packed geometry; "bert" serves the
-            // BERT-base FFN widths the autotuner tunes (M = batch*seq =
-            // 256 matches the tuner's default m-cap), anything else the
-            // fast nano default
-            let spec = match flag(args, "--model").as_deref() {
-                Some("bert") => NativeModelSpec::bert_base(8, 32),
-                None | Some("nano") => NativeModelSpec::default(),
-                Some(other) => {
-                    eprintln!("[serve] unknown native model {other:?}; serving nano default");
-                    NativeModelSpec::default()
-                }
-            };
-            NativeBackend::new(spec, cache)
-                .and_then(|b| start_with_backend(Arc::new(b), cfg))
+            // --model picks what gets compiled: "bert"/"vgg"/"nmt" build
+            // the zoo model through the layer-graph IR (per-layer packed
+            // sparse weights, workspace-arena execution); "bert-ffn"
+            // keeps the BERT-base FFN widths the autotuner tunes
+            // (M = batch*seq = 256 matches the tuner's default m-cap);
+            // "nano"/default the fast residual-MLP surrogate
+            let backend: tilewise::error::Result<Arc<dyn Backend>> =
+                match flag(args, "--model").as_deref() {
+                    Some(m @ ("bert" | "vgg" | "vgg16" | "nmt")) => ZooSpec::for_model(m)
+                        .and_then(|s| ZooBackend::new(s, cache))
+                        .map(|b| Arc::new(b) as Arc<dyn Backend>),
+                    Some("bert-ffn") => {
+                        NativeBackend::new(NativeModelSpec::bert_base(8, 32), cache)
+                            .map(|b| Arc::new(b) as Arc<dyn Backend>)
+                    }
+                    None | Some("nano") => NativeBackend::new(NativeModelSpec::default(), cache)
+                        .map(|b| Arc::new(b) as Arc<dyn Backend>),
+                    Some(other) => {
+                        eprintln!("[serve] unknown native model {other:?}; serving nano default");
+                        NativeBackend::new(NativeModelSpec::default(), cache)
+                            .map(|b| Arc::new(b) as Arc<dyn Backend>)
+                    }
+                };
+            backend.and_then(|b| start_with_backend(b, cfg))
         }
         other => {
             eprintln!("unknown backend {other:?} (expected pjrt|native)");

@@ -2,12 +2,64 @@
 //! networks (§VI-A), with convolutions lowered to GEMM via img2col
 //! (`M = H_out*W_out`, `K = C_in*k_h*k_w`, `N = C_out`).
 //!
-//! These shape lists drive the `gpusim` latency figures (Fig. 10/11): a
-//! model's latency under a pattern is the sum over its prunable GEMMs of
-//! the pattern's simulated kernel latency, plus the dense layers kept
-//! as-is (e.g. first conv layers, embedding-adjacent GEMMs).
+//! These shape lists drive two consumers:
+//!
+//! - the `gpusim` latency figures (Fig. 10/11): a model's latency under a
+//!   pattern is the sum over its prunable GEMMs of the pattern's simulated
+//!   kernel latency, plus the dense layers kept as-is (e.g. first conv
+//!   layers, embedding-adjacent GEMMs);
+//! - the `graph` execution IR: `graph::compile` turns a workload into an
+//!   *executable* layer graph, which is why each layer now records its
+//!   [`LayerKind`] — an FC layer is just its GEMM, while a conv layer
+//!   carries the [`ConvMeta`] needed to reconstruct the img2col lowering
+//!   (`nn::Conv2dSpec`) the shape was derived from.
+//!
+//! The classic constructors (`bert_base`, `vgg16`, `nmt`, ...) keep the
+//! paper's evaluation dims; the `_at`/`_scaled` variants produce the same
+//! topology at reduced dims so tests and CPU-serving runs stay fast.
 
 use crate::gpusim::GemmShape;
+use crate::nn::Conv2dSpec;
+
+/// How a GEMM-shaped layer maps back onto a network operator.
+#[derive(Clone, Copy, Debug)]
+pub enum LayerKind {
+    /// A plain fully-connected GEMM (also LSTM gate stacks and attention
+    /// projections — anything whose activations are already a matrix).
+    Fc,
+    /// A convolution lowered via img2col; the metadata reconstructs the
+    /// lowering (`M = out_hw^2`, `K = c_in*k^2`, `N = c_out`).
+    Conv(ConvMeta),
+}
+
+/// img2col lowering parameters of one conv layer.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvMeta {
+    /// Input spatial extent (square images).
+    pub in_hw: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvMeta {
+    pub fn spec(&self) -> Conv2dSpec {
+        Conv2dSpec {
+            c_in: self.c_in,
+            c_out: self.c_out,
+            kernel: self.kernel,
+            stride: self.stride,
+            pad: self.pad,
+        }
+    }
+
+    /// Output spatial extent of the lowering.
+    pub fn out_hw(&self) -> usize {
+        self.spec().out_hw(self.in_hw, self.in_hw).0
+    }
+}
 
 /// One GEMM-shaped layer (possibly repeated `count` times).
 #[derive(Clone, Debug)]
@@ -18,6 +70,8 @@ pub struct GemmLayer {
     /// Whether the pruner touches this layer (first convs are kept dense,
     /// the paper's ResNet-50 observation in §VI-C).
     pub prunable: bool,
+    /// Operator provenance of the GEMM shape (FC vs lowered conv).
+    pub kind: LayerKind,
 }
 
 /// A benchmark network as a GEMM workload.
@@ -39,76 +93,136 @@ impl ModelWorkload {
     }
 }
 
+/// Stride-1 "same" convolution entry (`pad = k/2`, spatial size preserved).
 fn conv(name: &str, hw: usize, cin: usize, k: usize, cout: usize, count: usize, prunable: bool) -> GemmLayer {
+    conv_s(name, hw, cin, k, cout, count, prunable, 1)
+}
+
+/// Convolution entry at an arbitrary stride; `hw` is the *output* spatial
+/// extent and the input extent is `hw * stride` (the zoo's downsampling
+/// convs halve resolution with `pad = k/2`).
+#[allow(clippy::too_many_arguments)]
+fn conv_s(
+    name: &str,
+    hw: usize,
+    cin: usize,
+    k: usize,
+    cout: usize,
+    count: usize,
+    prunable: bool,
+    stride: usize,
+) -> GemmLayer {
+    let meta =
+        ConvMeta { in_hw: hw * stride, c_in: cin, c_out: cout, kernel: k, stride, pad: k / 2 };
+    debug_assert_eq!(meta.out_hw(), hw, "{name}: conv meta disagrees with listed hw");
     GemmLayer {
         name: name.to_string(),
         shape: GemmShape::new(hw * hw, cin * k * k, cout),
         count,
         prunable,
+        kind: LayerKind::Conv(meta),
     }
 }
 
 fn fc(name: &str, m: usize, k: usize, n: usize, count: usize) -> GemmLayer {
-    GemmLayer { name: name.to_string(), shape: GemmShape::new(m, k, n), count, prunable: true }
+    GemmLayer {
+        name: name.to_string(),
+        shape: GemmShape::new(m, k, n),
+        count,
+        prunable: true,
+        kind: LayerKind::Fc,
+    }
 }
 
-/// BERT-base (12 layers, d=768, ffn=3072) at batch 8 x seq 128.
-pub fn bert_base(batch: usize, seq: usize) -> ModelWorkload {
+/// BERT-style encoder at arbitrary width/depth: `d_ff = 4*d`, `qkv` fused
+/// to `3*d`.  `bert_base(8, 128)` is `bert_at(8, 128, 768, 12)`.
+pub fn bert_at(batch: usize, seq: usize, d_model: usize, n_layers: usize) -> ModelWorkload {
     let m = batch * seq;
+    let d = d_model;
     let layers = vec![
-        fc("qkv", m, 768, 2304, 12),
-        fc("attn_out", m, 768, 768, 12),
-        fc("ffn1", m, 768, 3072, 12),
-        fc("ffn2", m, 3072, 768, 12),
+        fc("qkv", m, d, 3 * d, n_layers),
+        fc("attn_out", m, d, d, n_layers),
+        fc("ffn1", m, d, 4 * d, n_layers),
+        fc("ffn2", m, 4 * d, d, n_layers),
     ];
     ModelWorkload { name: "BERT-base", metric: "acc", layers }
 }
 
-/// GNMT-style NMT: 2-layer LSTM encoder + decoder, hidden 512, batch 128.
-/// Each LSTM step's four gates form one (batch, 2*hidden, 4*hidden) GEMM;
-/// we count one unrolled step per token over a 32-token sentence.
-pub fn nmt(batch: usize) -> ModelWorkload {
-    let steps = 32;
+/// BERT-base (12 layers, d=768, ffn=3072) at batch 8 x seq 128.
+pub fn bert_base(batch: usize, seq: usize) -> ModelWorkload {
+    bert_at(batch, seq, 768, 12)
+}
+
+/// GNMT-style NMT at arbitrary hidden width / unroll depth: 2-layer LSTM
+/// encoder + decoder (each step's four gates are one
+/// `(batch, 2H, 4H)` GEMM), an attention FC, and an `8H`-wide projection.
+/// `nmt(128)` is `nmt_at(128, 512, 32)`.
+pub fn nmt_at(batch: usize, hidden: usize, steps: usize) -> ModelWorkload {
+    let h = hidden;
     let layers = vec![
-        fc("enc_l1_gates", batch, 1024, 2048, steps),
-        fc("enc_l2_gates", batch, 1024, 2048, steps),
-        fc("dec_l1_gates", batch, 1024, 2048, steps),
-        fc("dec_l2_gates", batch, 1024, 2048, steps),
-        fc("attention", batch, 512, 512, steps),
-        fc("softmax_proj", batch, 512, 4096, steps),
+        fc("enc_l1_gates", batch, 2 * h, 4 * h, steps),
+        fc("enc_l2_gates", batch, 2 * h, 4 * h, steps),
+        fc("dec_l1_gates", batch, 2 * h, 4 * h, steps),
+        fc("dec_l2_gates", batch, 2 * h, 4 * h, steps),
+        fc("attention", batch, h, h, steps),
+        fc("softmax_proj", batch, h, 8 * h, 1),
     ];
     ModelWorkload { name: "NMT", metric: "BLEU", layers }
 }
 
-/// VGG16 at 224x224 (13 convs + 3 FC).
-pub fn vgg16() -> ModelWorkload {
+/// GNMT-style NMT: 2-layer LSTM encoder + decoder, hidden 512, batch 128,
+/// one unrolled step per token over a 32-token sentence.
+pub fn nmt(batch: usize) -> ModelWorkload {
+    let mut w = nmt_at(batch, 512, 32);
+    // the paper's workload counts the projection once per step
+    for l in &mut w.layers {
+        if l.name == "softmax_proj" {
+            l.count = 32;
+        }
+    }
+    w
+}
+
+/// VGG16 topology at a reduced scale: `img` is the input resolution
+/// (must be a positive multiple of 32), `width_div` divides every channel
+/// width after the 3-channel input, and `fc_dim` replaces the 4096-wide
+/// FC pair.  `vgg16()` is `vgg16_scaled(224, 1, 4096)`.
+pub fn vgg16_scaled(img: usize, width_div: usize, fc_dim: usize) -> ModelWorkload {
+    assert!(img >= 32 && img % 32 == 0, "vgg16 needs img as a positive multiple of 32");
+    let w = |c: usize| (c / width_div).max(1);
+    let s = img;
     let layers = vec![
-        conv("conv1_1", 224, 3, 3, 64, 1, false), // first conv kept dense
-        conv("conv1_2", 224, 64, 3, 64, 1, true),
-        conv("conv2_1", 112, 64, 3, 128, 1, true),
-        conv("conv2_2", 112, 128, 3, 128, 1, true),
-        conv("conv3_1", 56, 128, 3, 256, 1, true),
-        conv("conv3_2", 56, 256, 3, 256, 2, true),
-        conv("conv4_1", 28, 256, 3, 512, 1, true),
-        conv("conv4_2", 28, 512, 3, 512, 2, true),
-        conv("conv5", 14, 512, 3, 512, 3, true),
-        fc("fc6", 1, 25088, 4096, 1),
-        fc("fc7", 1, 4096, 4096, 1),
-        fc("fc8", 1, 4096, 1000, 1),
+        conv("conv1_1", s, 3, 3, w(64), 1, false), // first conv kept dense
+        conv("conv1_2", s, w(64), 3, w(64), 1, true),
+        conv("conv2_1", s / 2, w(64), 3, w(128), 1, true),
+        conv("conv2_2", s / 2, w(128), 3, w(128), 1, true),
+        conv("conv3_1", s / 4, w(128), 3, w(256), 1, true),
+        conv("conv3_2", s / 4, w(256), 3, w(256), 2, true),
+        conv("conv4_1", s / 8, w(256), 3, w(512), 1, true),
+        conv("conv4_2", s / 8, w(512), 3, w(512), 2, true),
+        conv("conv5", s / 16, w(512), 3, w(512), 3, true),
+        fc("fc6", 1, w(512) * (s / 32) * (s / 32), fc_dim, 1),
+        fc("fc7", 1, fc_dim, fc_dim, 1),
+        fc("fc8", 1, fc_dim, 1000, 1),
     ];
     ModelWorkload { name: "VGG16", metric: "top-5", layers }
+}
+
+/// VGG16 at 224x224 (13 convs + 3 FC).
+pub fn vgg16() -> ModelWorkload {
+    vgg16_scaled(224, 1, 4096)
 }
 
 /// ResNet-18 at 224x224 (basic blocks).
 pub fn resnet18() -> ModelWorkload {
     let layers = vec![
-        conv("conv1", 112, 3, 7, 64, 1, false),
+        conv_s("conv1", 112, 3, 7, 64, 1, false, 2),
         conv("layer1", 56, 64, 3, 64, 4, true),
-        conv("layer2_ds", 28, 64, 3, 128, 1, true),
+        conv_s("layer2_ds", 28, 64, 3, 128, 1, true, 2),
         conv("layer2", 28, 128, 3, 128, 3, true),
-        conv("layer3_ds", 14, 128, 3, 256, 1, true),
+        conv_s("layer3_ds", 14, 128, 3, 256, 1, true, 2),
         conv("layer3", 14, 256, 3, 256, 3, true),
-        conv("layer4_ds", 7, 256, 3, 512, 1, true),
+        conv_s("layer4_ds", 7, 256, 3, 512, 1, true, 2),
         conv("layer4", 7, 512, 3, 512, 3, true),
         fc("fc", 1, 512, 1000, 1),
     ];
@@ -117,7 +231,7 @@ pub fn resnet18() -> ModelWorkload {
 
 /// ResNet-50 at 224x224 (bottleneck blocks, 1x1/3x3/1x1).
 pub fn resnet50() -> ModelWorkload {
-    let mut layers = vec![conv("conv1", 112, 3, 7, 64, 1, false)];
+    let mut layers = vec![conv_s("conv1", 112, 3, 7, 64, 1, false, 2)];
     // (stage, hw, cin_mid, blocks)
     let stages = [(1usize, 56usize, 64usize, 3usize), (2, 28, 128, 4), (3, 14, 256, 6), (4, 7, 512, 3)];
     for (s, hw, mid, blocks) in stages {
@@ -186,5 +300,39 @@ mod tests {
         assert_eq!(c12.shape.m, 224 * 224);
         assert_eq!(c12.shape.k, 64 * 9);
         assert_eq!(c12.shape.n, 64);
+    }
+
+    #[test]
+    fn conv_meta_reconstructs_listed_shapes() {
+        // every conv layer's metadata must regenerate its GEMM shape —
+        // the contract graph::compile relies on
+        for m in zoo() {
+            for l in &m.layers {
+                if let LayerKind::Conv(meta) = l.kind {
+                    let hw = meta.out_hw();
+                    assert_eq!(hw * hw, l.shape.m, "{}/{}", m.name, l.name);
+                    assert_eq!(meta.spec().gemm_k(), l.shape.k, "{}/{}", m.name, l.name);
+                    assert_eq!(meta.c_out, l.shape.n, "{}/{}", m.name, l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_constructors_match_paper_dims() {
+        // the parameterised constructors at paper dims equal the classics
+        let a = bert_at(8, 128, 768, 12);
+        let b = bert_base(8, 128);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!((x.shape.m, x.shape.k, x.shape.n), (y.shape.m, y.shape.k, y.shape.n));
+        }
+        let n = nmt(128);
+        let gates = n.layers.iter().find(|l| l.name == "enc_l1_gates").unwrap();
+        assert_eq!((gates.shape.k, gates.shape.n), (1024, 2048));
+        let v = vgg16_scaled(32, 4, 256);
+        let fc6 = v.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.shape.k, 128); // (512/4) * (32/32)^2
+        assert_eq!(fc6.shape.n, 256);
     }
 }

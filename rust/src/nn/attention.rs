@@ -2,14 +2,139 @@
 //! QKV projection + per-head softmax(QK^T/sqrt(d))V + output projection,
 //! with the two weight GEMMs pluggable so pruned kernels drop in — the
 //! Rust twin of `python/compile/model.py`'s attention block.
+//!
+//! The hot path is [`attention_into`], the workspace-buffered core the
+//! graph executor calls: one `(s, s)` scores buffer and one contiguous
+//! `(s, dh)` staging buffer per Q/K/V head are reused across *all* heads
+//! of *all* calls (the historical implementation reallocated the scores
+//! buffer per head and walked V through strided `qkv.row(j)` reads —
+//! `benches/model_forward.rs` quantifies the win).  The closure-based
+//! [`attention_forward`] remains as a thin back-compat shim.
 
 use crate::tensor::Matrix;
+
+/// Reusable scratch for the buffered attention core: the `(s, s)` scores
+/// matrix plus contiguous per-head Q/K/V staging `(s, dh)`.  Allocated
+/// once (per graph workspace / per call site) and lent to every head.
+pub struct AttnScratch {
+    pub scores: Matrix,
+    pub qh: Matrix,
+    pub kh: Matrix,
+    pub vh: Matrix,
+}
+
+impl AttnScratch {
+    pub fn new(seq: usize, head_dim: usize) -> AttnScratch {
+        AttnScratch {
+            scores: Matrix::zeros(seq, seq),
+            qh: Matrix::zeros(seq, head_dim),
+            kh: Matrix::zeros(seq, head_dim),
+            vh: Matrix::zeros(seq, head_dim),
+        }
+    }
+}
+
+/// Buffered multi-head attention core over one sequence window.
+///
+/// Reads the fused QKV projection rows `row0 .. row0+seq` of `qkv`
+/// (`(tokens, 3d)`, head layout `[Q | K | V]` along columns) and writes
+/// the same rows of `ctx` (`(tokens, d)`).  Allocation-free: all
+/// intermediates live in `scratch`, which must have been built with this
+/// `seq` and `d / n_heads`.
+pub fn attention_into(
+    qkv: &Matrix,
+    ctx: &mut Matrix,
+    row0: usize,
+    seq: usize,
+    n_heads: usize,
+    scratch: &mut AttnScratch,
+) {
+    let d = ctx.cols;
+    assert_eq!(qkv.cols, 3 * d, "qkv projection must be 3*d_model wide");
+    assert_eq!(qkv.rows, ctx.rows);
+    assert!(row0 + seq <= qkv.rows);
+    assert_eq!(d % n_heads, 0);
+    let dh = d / n_heads;
+    assert_eq!((scratch.scores.rows, scratch.scores.cols), (seq, seq), "scratch sized for seq");
+    assert_eq!((scratch.qh.rows, scratch.qh.cols), (seq, dh), "scratch sized for head_dim");
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    for h in 0..n_heads {
+        // per-head column windows: q at [h*dh, ..), k at d + ..., v at 2d + ...
+        let (q0, k0, v0) = (h * dh, d + h * dh, 2 * d + h * dh);
+        // stage Q/K/V heads contiguously: the score and context loops then
+        // stream dense rows instead of striding through qkv
+        for i in 0..seq {
+            let src = qkv.row(row0 + i);
+            scratch.qh.row_mut(i).copy_from_slice(&src[q0..q0 + dh]);
+            scratch.kh.row_mut(i).copy_from_slice(&src[k0..k0 + dh]);
+            scratch.vh.row_mut(i).copy_from_slice(&src[v0..v0 + dh]);
+        }
+        // scores = softmax(q k^T * scale), (seq, seq)
+        for i in 0..seq {
+            let qi = scratch.qh.row(i);
+            let row = scratch.scores.row_mut(i);
+            for (j, sv) in row.iter_mut().enumerate() {
+                let kj = scratch.kh.row(j);
+                *sv = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+            let mut z = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                z += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= z;
+            }
+        }
+        // ctx_head = scores @ v_head (contiguous accumulate)
+        for i in 0..seq {
+            let out = &mut ctx.row_mut(row0 + i)[h * dh..(h + 1) * dh];
+            out.fill(0.0);
+            for j in 0..seq {
+                let w = scratch.scores.at(i, j);
+                for (o, vv) in out.iter_mut().zip(scratch.vh.row(j)) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+}
 
 /// Forward pass for one attention block over `(seq, d_model)` activations.
 ///
 /// `w_qkv` is `(d_model, 3*d_model)`; `w_out` is `(d_model, d_model)`;
-/// `gemm` is invoked for both weight multiplications.
+/// `gemm` is invoked for both weight multiplications.  Back-compat shim
+/// over [`attention_into`] (scratch allocated per call here; the graph
+/// path keeps it in the model workspace).
 pub fn attention_forward<F>(
+    x: &Matrix,
+    w_qkv: &Matrix,
+    w_out: &Matrix,
+    n_heads: usize,
+    gemm: F,
+) -> Matrix
+where
+    F: Fn(&Matrix, &Matrix) -> Matrix,
+{
+    let (s, d) = (x.rows, x.cols);
+    assert_eq!(w_qkv.rows, d);
+    assert_eq!(w_qkv.cols, 3 * d);
+    assert_eq!(d % n_heads, 0);
+    let qkv = gemm(x, w_qkv); // (s, 3d)
+    let mut ctx = Matrix::zeros(s, d);
+    let mut scratch = AttnScratch::new(s, d / n_heads);
+    attention_into(&qkv, &mut ctx, 0, s, n_heads, &mut scratch);
+    gemm(&ctx, w_out)
+}
+
+/// The historical per-head-allocating implementation, kept as the
+/// correctness oracle for [`attention_into`] and as the baseline
+/// `benches/model_forward.rs` measures the buffered path against:
+/// it reallocates the `(s, s)` scores buffer on every head and reads
+/// K/V through strided `qkv.row(j)` slices.
+pub fn attention_forward_unbuffered<F>(
     x: &Matrix,
     w_qkv: &Matrix,
     w_out: &Matrix,
@@ -29,11 +154,9 @@ where
     let scale = 1.0 / (dh as f32).sqrt();
     let mut ctx = Matrix::zeros(s, d);
     for h in 0..n_heads {
-        // per-head slices: q at [h*dh, (h+1)*dh), k at d + ..., v at 2d + ...
         let q0 = h * dh;
         let k0 = d + h * dh;
         let v0 = 2 * d + h * dh;
-        // scores = softmax(q k^T * scale), (s, s)
         let mut scores = vec![0.0f32; s * s];
         for i in 0..s {
             let qi = &qkv.row(i)[q0..q0 + dh];
@@ -55,7 +178,6 @@ where
                 *v /= z;
             }
         }
-        // ctx_head = scores @ v_head
         for i in 0..s {
             let out = &mut ctx.row_mut(i)[h * dh..(h + 1) * dh];
             for j in 0..s {
@@ -88,6 +210,48 @@ mod tests {
         let y = attention_forward(&x, &wqkv, &wout, 4, |a, b| matmul(a, b));
         assert_eq!((y.rows, y.cols), (s, d));
         assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn buffered_matches_unbuffered_oracle() {
+        // the workspace path is a memory-layout change, not a numeric one
+        let mut rng = Rng::new(33);
+        for (s, d, heads) in [(8, 32, 4), (12, 48, 4), (5, 16, 2), (1, 8, 2)] {
+            let x = Matrix::randn(s, d, &mut rng);
+            let wqkv = Matrix::randn(d, 3 * d, &mut rng);
+            let wout = Matrix::randn(d, d, &mut rng);
+            let a = attention_forward(&x, &wqkv, &wout, heads, |a, b| matmul(a, b));
+            let b = attention_forward_unbuffered(&x, &wqkv, &wout, heads, |a, b| matmul(a, b));
+            assert!(a.max_abs_diff(&b) < 1e-5, "s={s} d={d}: {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_windows() {
+        // the graph path: one scratch serves every (batch, head) window
+        let mut rng = Rng::new(34);
+        let (batch, s, d) = (3, 6, 16);
+        let qkv = Matrix::randn(batch * s, 3 * d, &mut rng);
+        let mut ctx = Matrix::zeros(batch * s, d);
+        let mut scratch = AttnScratch::new(s, d / 4);
+        for b in 0..batch {
+            attention_into(&qkv, &mut ctx, b * s, s, 4, &mut scratch);
+        }
+        // each window must equal an isolated single-window run
+        for b in 0..batch {
+            let mut one = Matrix::zeros(s, 3 * d);
+            for i in 0..s {
+                one.row_mut(i).copy_from_slice(qkv.row(b * s + i));
+            }
+            let mut ctx1 = Matrix::zeros(s, d);
+            let mut sc = AttnScratch::new(s, d / 4);
+            attention_into(&one, &mut ctx1, 0, s, 4, &mut sc);
+            for i in 0..s {
+                for (x, y) in ctx.row(b * s + i).iter().zip(ctx1.row(i)) {
+                    assert!((x - y).abs() < 1e-6, "window {b}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -59,19 +59,55 @@ impl Image {
     }
 }
 
-/// Lower an image to the im2col activation matrix A
-/// `(H_out*W_out, C_in*kh*kw)`; out-of-bounds (padding) taps read 0.
-pub fn im2col(img: &Image, spec: &Conv2dSpec) -> Matrix {
-    assert_eq!(img.c, spec.c_in);
-    let (ho, wo) = spec.out_hw(img.h, img.w);
+/// Layout of the activation an im2col lowering reads from.  The graph
+/// executor lowers conv chains without materialising `Image`s: the network
+/// input arrives as a flat CHW slice and every intermediate conv output is
+/// already the previous GEMM's `(H*W, C)` matrix.
+pub enum ImgSrc<'a> {
+    /// NCHW flat slice of length `c * h * w` (the network-input layout).
+    Chw { data: &'a [f32], c: usize, h: usize, w: usize },
+    /// A previous conv GEMM's output: rows = pixels (`h*w`), cols = channels.
+    HwC { m: &'a Matrix, h: usize, w: usize },
+}
+
+impl ImgSrc<'_> {
+    fn dims(&self) -> (usize, usize, usize) {
+        match self {
+            ImgSrc::Chw { c, h, w, data } => {
+                assert_eq!(data.len(), c * h * w, "CHW slice length");
+                (*c, *h, *w)
+            }
+            ImgSrc::HwC { m, h, w } => {
+                assert_eq!(m.rows, h * w, "HwC rows must be h*w");
+                (m.cols, *h, *w)
+            }
+        }
+    }
+
+    #[inline]
+    fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        match self {
+            ImgSrc::Chw { data, h, w, .. } => data[(c * h + y) * w + x],
+            ImgSrc::HwC { m, w, .. } => m.at(y * w + x, c),
+        }
+    }
+}
+
+/// Allocation-free im2col lowering into a caller-owned
+/// `(H_out*W_out, C_in*kh*kw)` matrix; out-of-bounds (padding) taps
+/// write 0.  [`im2col`] is the allocating shim over this.
+pub fn im2col_into(src: &ImgSrc, spec: &Conv2dSpec, a: &mut Matrix) {
+    let (c_in, h, w) = src.dims();
+    assert_eq!(c_in, spec.c_in);
+    let (ho, wo) = spec.out_hw(h, w);
+    assert_eq!((a.rows, a.cols), (ho * wo, spec.gemm_k()), "im2col output shape");
     let kk = spec.kernel;
-    let mut a = Matrix::zeros(ho * wo, spec.gemm_k());
     for oy in 0..ho {
         for ox in 0..wo {
             let row = oy * wo + ox;
             let out = a.row_mut(row);
             let mut col = 0usize;
-            for c in 0..img.c {
+            for c in 0..c_in {
                 for ky in 0..kk {
                     for kx in 0..kk {
                         let iy = oy * spec.stride + ky;
@@ -79,10 +115,10 @@ pub fn im2col(img: &Image, spec: &Conv2dSpec) -> Matrix {
                         // padded coordinates: shift by pad, check bounds
                         let v = if iy >= spec.pad
                             && ix >= spec.pad
-                            && iy - spec.pad < img.h
-                            && ix - spec.pad < img.w
+                            && iy - spec.pad < h
+                            && ix - spec.pad < w
                         {
-                            img.at(c, iy - spec.pad, ix - spec.pad)
+                            src.at(c, iy - spec.pad, ix - spec.pad)
                         } else {
                             0.0
                         };
@@ -93,6 +129,19 @@ pub fn im2col(img: &Image, spec: &Conv2dSpec) -> Matrix {
             }
         }
     }
+}
+
+/// Lower an image to the im2col activation matrix A
+/// `(H_out*W_out, C_in*kh*kw)`; out-of-bounds (padding) taps read 0.
+pub fn im2col(img: &Image, spec: &Conv2dSpec) -> Matrix {
+    assert_eq!(img.c, spec.c_in);
+    let (ho, wo) = spec.out_hw(img.h, img.w);
+    let mut a = Matrix::zeros(ho * wo, spec.gemm_k());
+    im2col_into(
+        &ImgSrc::Chw { data: &img.data, c: img.c, h: img.h, w: img.w },
+        spec,
+        &mut a,
+    );
     a
 }
 
@@ -211,6 +260,25 @@ mod tests {
                 .fold(0.0f32, f32::max);
             assert!(diff < 1e-3, "k={} s={} p={}: {diff}", spec.kernel, spec.stride, spec.pad);
         }
+    }
+
+    #[test]
+    fn im2col_hwc_layout_matches_chw() {
+        // the graph path feeds a previous GEMM's (hw, c) output straight
+        // into the next im2col; both layouts must lower identically
+        let spec = Conv2dSpec { c_in: 4, c_out: 6, kernel: 3, stride: 1, pad: 1 };
+        let img = rand_image(4, 6, 6, 14);
+        let via_chw = im2col(&img, &spec);
+        // repack CHW -> (hw, c)
+        let mut hwc = Matrix::zeros(36, 4);
+        for c in 0..4 {
+            for p in 0..36 {
+                *hwc.at_mut(p, c) = img.data[c * 36 + p];
+            }
+        }
+        let mut via_hwc = Matrix::zeros(36, spec.gemm_k());
+        im2col_into(&ImgSrc::HwC { m: &hwc, h: 6, w: 6 }, &spec, &mut via_hwc);
+        assert_eq!(via_chw, via_hwc);
     }
 
     #[test]

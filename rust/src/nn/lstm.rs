@@ -1,6 +1,14 @@
 //! LSTM cell (the NMT workload's compute): the four gates form one
 //! `(batch, 2*hidden) x (2*hidden, 4*hidden)` GEMM per step — the matrix
 //! the paper prunes for the NMT rows of Fig. 8/10/11.
+//!
+//! The hot path is [`LstmCell::step_into`]: the `[x | h]` concat and the
+//! gate pre-activations live in a caller-owned [`LstmScratch`] reused
+//! across *every* step of the unroll (the historical [`LstmCell::step_with`]
+//! rebuilt the concat matrix and the output state from scratch each step;
+//! it remains as a thin shim).  The gate nonlinearity itself is exposed as
+//! [`lstm_gate_update`] so the graph executor can run packed-weight gate
+//! GEMMs and share the exact same update rule.
 
 use crate::gemm::matmul;
 use crate::tensor::Matrix;
@@ -27,8 +35,57 @@ impl LstmState {
     }
 }
 
+/// Reusable per-unroll scratch: the `[x | h]` concat `(batch, 2H)` and the
+/// gate pre-activations `(batch, 4H)`.
+pub struct LstmScratch {
+    pub xh: Matrix,
+    pub gates: Matrix,
+}
+
+impl LstmScratch {
+    pub fn new(batch: usize, hidden: usize) -> LstmScratch {
+        LstmScratch {
+            xh: Matrix::zeros(batch, 2 * hidden),
+            gates: Matrix::zeros(batch, 4 * hidden),
+        }
+    }
+}
+
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
+}
+
+/// The LSTM gate nonlinearity + state update, in place over `(h, c)`.
+///
+/// `gates` is the `(batch, 4H)` pre-activation GEMM output in
+/// `[i | f | g | o]` order; `bias` is its `4H` bias vector (the forget
+/// gate gets the customary +1 on top).  Shared by [`LstmCell::step_into`]
+/// and the graph executor's `LstmStep` op.
+pub fn lstm_gate_update(
+    gates: &Matrix,
+    bias: &[f32],
+    hidden: usize,
+    h: &mut Matrix,
+    c: &mut Matrix,
+) {
+    let batch = gates.rows;
+    let hid = hidden;
+    assert_eq!(gates.cols, 4 * hid);
+    assert_eq!(bias.len(), 4 * hid);
+    assert_eq!((h.rows, h.cols), (batch, hid));
+    assert_eq!((c.rows, c.cols), (batch, hid));
+    for i in 0..batch {
+        let g = gates.row(i);
+        for j in 0..hid {
+            let ig = sigmoid(g[j] + bias[j]);
+            let fg = sigmoid(g[hid + j] + bias[hid + j] + 1.0); // forget bias 1
+            let cand = (g[2 * hid + j] + bias[2 * hid + j]).tanh();
+            let og = sigmoid(g[3 * hid + j] + bias[3 * hid + j]);
+            let cv = fg * c.at(i, j) + ig * cand;
+            *c.at_mut(i, j) = cv;
+            *h.at_mut(i, j) = og * cv.tanh();
+        }
+    }
 }
 
 impl LstmCell {
@@ -40,34 +97,40 @@ impl LstmCell {
         }
     }
 
-    /// One step with a custom GEMM (so pruned kernels can be dropped in).
-    pub fn step_with<F>(&self, x: &Matrix, state: &LstmState, gemm: F) -> LstmState
+    /// One step, allocation-free: concat `[x | h]` into `ws.xh`, run
+    /// `gemm(xh, gates)` (an in-place GEMM writing `ws.gates`), then update
+    /// `state` in place.  `ws` is reused across the whole unroll.
+    pub fn step_into<F>(&self, x: &Matrix, state: &mut LstmState, ws: &mut LstmScratch, gemm: F)
     where
-        F: Fn(&Matrix, &Matrix) -> Matrix,
+        F: FnOnce(&Matrix, &mut Matrix),
     {
         let batch = x.rows;
         let hid = self.hidden;
         assert_eq!(x.cols, hid, "input width must equal hidden for this cell");
-        // concat [x | h] -> (batch, 2H)
-        let mut xh = Matrix::zeros(batch, 2 * hid);
+        assert_eq!((ws.xh.rows, ws.xh.cols), (batch, 2 * hid), "scratch sized for batch/hidden");
         for i in 0..batch {
-            xh.row_mut(i)[..hid].copy_from_slice(x.row(i));
-            xh.row_mut(i)[hid..].copy_from_slice(state.h.row(i));
+            let row = ws.xh.row_mut(i);
+            row[..hid].copy_from_slice(x.row(i));
+            row[hid..].copy_from_slice(state.h.row(i));
         }
-        let gates = gemm(&xh, &self.w); // (batch, 4H)
-        let mut next = LstmState::zeros(batch, hid);
-        for i in 0..batch {
-            let g = gates.row(i);
-            for j in 0..hid {
-                let ig = sigmoid(g[j] + self.bias[j]);
-                let fg = sigmoid(g[hid + j] + self.bias[hid + j] + 1.0); // forget bias 1
-                let cand = (g[2 * hid + j] + self.bias[2 * hid + j]).tanh();
-                let og = sigmoid(g[3 * hid + j] + self.bias[3 * hid + j]);
-                let c = fg * state.c.at(i, j) + ig * cand;
-                *next.c.at_mut(i, j) = c;
-                *next.h.at_mut(i, j) = og * c.tanh();
-            }
-        }
+        gemm(&ws.xh, &mut ws.gates);
+        lstm_gate_update(&ws.gates, &self.bias, hid, &mut state.h, &mut state.c);
+    }
+
+    /// One step with a custom GEMM (so pruned kernels can be dropped in).
+    /// Back-compat shim over [`LstmCell::step_into`]: allocates a fresh
+    /// scratch and next-state per call.
+    pub fn step_with<F>(&self, x: &Matrix, state: &LstmState, gemm: F) -> LstmState
+    where
+        F: Fn(&Matrix, &Matrix) -> Matrix,
+    {
+        let mut next = state.clone();
+        let mut ws = LstmScratch::new(x.rows, self.hidden);
+        self.step_into(x, &mut next, &mut ws, |xh, gates| {
+            let out = gemm(xh, &self.w);
+            assert_eq!((out.rows, out.cols), (gates.rows, gates.cols), "gate GEMM shape");
+            *gates = out;
+        });
         next
     }
 
@@ -105,6 +168,28 @@ mod tests {
         let s2 = cell.step(&x, &LstmState::zeros(2, 8));
         assert_eq!(s1.h, s2.h);
         assert_eq!(s1.c, s2.c);
+    }
+
+    #[test]
+    fn step_into_reuses_scratch_and_matches_step() {
+        // the workspace path across a whole unroll equals the per-step
+        // allocating shim exactly
+        let mut rng = Rng::new(24);
+        let cell = LstmCell::init(12, &mut rng);
+        let xs: Vec<Matrix> = (0..6).map(|_| Matrix::randn(3, 12, &mut rng)).collect();
+        let mut via_shim = LstmState::zeros(3, 12);
+        for x in &xs {
+            via_shim = cell.step(x, &via_shim);
+        }
+        let mut via_ws = LstmState::zeros(3, 12);
+        let mut ws = LstmScratch::new(3, 12);
+        for x in &xs {
+            cell.step_into(x, &mut via_ws, &mut ws, |xh, gates| {
+                crate::gemm::matmul_tiled_into(xh, &cell.w, gates, &Default::default());
+            });
+        }
+        assert!(via_shim.h.max_abs_diff(&via_ws.h) < 1e-5);
+        assert!(via_shim.c.max_abs_diff(&via_ws.c) < 1e-5);
     }
 
     #[test]

@@ -3,11 +3,16 @@
 //! just shape lists — img2col convolution lowering (§II-A), an LSTM cell
 //! (NMT), and scaled-dot-product attention (BERT), each routed through
 //! the library's GEMM kernels so any sparsity pattern can be dropped in.
+//!
+//! Every operator has two entry points: a workspace-buffered `_into` core
+//! (`attention_into`, `LstmCell::step_into`, `im2col_into`) that the
+//! `graph` executor calls allocation-free, and the original closure-based
+//! wrapper kept as a thin back-compat shim.
 
 pub mod attention;
 pub mod conv;
 pub mod lstm;
 
-pub use attention::attention_forward;
-pub use conv::{conv2d, im2col, Conv2dSpec};
-pub use lstm::{LstmCell, LstmState};
+pub use attention::{attention_forward, attention_forward_unbuffered, attention_into, AttnScratch};
+pub use conv::{conv2d, im2col, im2col_into, Conv2dSpec, ImgSrc};
+pub use lstm::{lstm_gate_update, LstmCell, LstmScratch, LstmState};

@@ -1,0 +1,179 @@
+//! End-to-end parity of the layer-graph IR: every compiled zoo model
+//! (BERT / VGG / NMT at small dims) under dense / TW / TVW / 2:4 must
+//! match its masked-dense oracle — the identical topology with every
+//! packed weight decoded back to its masked-dense matrix — at 1e-4,
+//! both serial and with an intra-op pool (`intra_threads > 1`).
+//!
+//! Plus the zoo/nn consistency check: every `models::` conv layer's
+//! listed GEMM shape must agree with the `nn::Conv2dSpec` lowering its
+//! metadata describes.
+
+use std::sync::Arc;
+
+use tilewise::exec::PreparedModel;
+use tilewise::graph::{compile, CompileOptions, GraphModel, GraphPattern, PackOptions};
+use tilewise::models::{self, LayerKind, ModelWorkload};
+use tilewise::pool::ThreadPool;
+
+const PATTERNS: [GraphPattern; 4] =
+    [GraphPattern::Dense, GraphPattern::Tw, GraphPattern::Tvw, GraphPattern::Vw24];
+
+fn small_opts() -> CompileOptions {
+    CompileOptions {
+        seq: 4,
+        heads: 4,
+        n_classes: 4,
+        pack: PackOptions { sparsity: 0.75, g: 8 },
+        seed: 7,
+        ..CompileOptions::default()
+    }
+}
+
+fn deterministic_input(len: usize) -> Vec<f32> {
+    (0..len).map(|i| ((i * 17 % 23) as f32 - 11.0) * 0.05).collect()
+}
+
+/// Compile `workload` under `pattern`, run it and its masked-dense oracle
+/// (serial and pooled), and require 1e-4 agreement everywhere.
+fn check_parity(workload: &ModelWorkload, pattern: GraphPattern, pool: &Arc<ThreadPool>) {
+    let label = format!("{}/{:?}", workload.name, pattern);
+    let opts = small_opts().with_pattern(pattern);
+    let program = compile(workload, &opts).unwrap_or_else(|e| panic!("{label}: compile: {e}"));
+    let oracle = program.to_dense_oracle();
+    let dims = program.dims;
+    let x = deterministic_input(dims.batch * dims.per_request_len());
+
+    let variant = program.variant.clone();
+    let oracle_variant = oracle.variant.clone();
+    let mut serial = GraphModel::new(Arc::new(vec![program]), None).unwrap();
+    let mut oracle_model = GraphModel::new(Arc::new(vec![oracle]), None).unwrap();
+    let want = oracle_model.run(&oracle_variant, &x).unwrap();
+    let got = serial.run(&variant, &x).unwrap();
+    assert_eq!(got.len(), want.len(), "{label}");
+    assert!(want.iter().all(|v| v.is_finite()), "{label}: oracle non-finite");
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4, "{label}: serial logit {i}: {a} vs oracle {b}");
+    }
+
+    // the pooled kernel paths are a scheduling change, not a numeric one
+    let opts2 = small_opts().with_pattern(pattern);
+    let program2 = compile(workload, &opts2).unwrap();
+    let mut pooled = GraphModel::new(Arc::new(vec![program2]), Some(pool.clone())).unwrap();
+    let got_pooled = pooled.run(&variant, &x).unwrap();
+    for (i, (a, b)) in got_pooled.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4, "{label}: pooled logit {i}: {a} vs oracle {b}");
+    }
+    // results are reproducible across invocations (state reset, workspace
+    // reuse): a second run returns bit-identical logits
+    let again = serial.run(&variant, &x).unwrap();
+    assert_eq!(got, again, "{label}: second run differs");
+}
+
+#[test]
+fn bert_matches_masked_dense_oracle_all_patterns() {
+    let workload = models::bert_at(2, 4, 16, 2);
+    let pool = Arc::new(ThreadPool::new(3));
+    for pattern in PATTERNS {
+        check_parity(&workload, pattern, &pool);
+    }
+}
+
+#[test]
+fn vgg_matches_masked_dense_oracle_all_patterns() {
+    let workload = models::vgg16_scaled(32, 16, 32);
+    let pool = Arc::new(ThreadPool::new(3));
+    for pattern in PATTERNS {
+        check_parity(&workload, pattern, &pool);
+    }
+}
+
+#[test]
+fn nmt_matches_masked_dense_oracle_all_patterns() {
+    let workload = models::nmt_at(2, 8, 3);
+    let pool = Arc::new(ThreadPool::new(3));
+    for pattern in PATTERNS {
+        check_parity(&workload, pattern, &pool);
+    }
+}
+
+#[test]
+fn residual_mlp_native_backend_matches_oracle() {
+    // the native backend's surrogate is "just another compiled spec":
+    // its TW variant must track a masked-dense recomputation through the
+    // same graph machinery (covered structurally in exec::native tests;
+    // here we check the packed program decodes to finite dense weights)
+    use tilewise::exec::{Backend, NativeBackend, NativeModelSpec};
+    let spec = NativeModelSpec {
+        seq: 4,
+        d_model: 16,
+        d_ff: 32,
+        n_classes: 4,
+        batch: 2,
+        g: 8,
+        ..NativeModelSpec::default()
+    };
+    let backend = NativeBackend::new(spec, None).unwrap();
+    let mut model = backend.load().unwrap();
+    let dims = model.dims();
+    let x = deterministic_input(dims.batch * dims.per_request_len());
+    for variant in ["model_dense", "model_tw", "model_tvw", "model_vw24"] {
+        let logits = model.run(variant, &x).unwrap();
+        assert_eq!(logits.len(), dims.batch * dims.n_classes, "{variant}");
+        assert!(logits.iter().all(|v| v.is_finite()), "{variant}");
+    }
+}
+
+#[test]
+fn zoo_conv_shapes_agree_with_nn_lowering() {
+    // models:: conv entries vs nn::Conv2dSpec: K = gemm_k(), M = out_hw^2,
+    // N = c_out — for every conv layer of every zoo workload
+    let mut checked = 0usize;
+    for workload in models::zoo() {
+        for layer in &workload.layers {
+            if let LayerKind::Conv(meta) = layer.kind {
+                let spec = meta.spec();
+                assert_eq!(
+                    spec.gemm_k(),
+                    layer.shape.k,
+                    "{}/{}: K disagrees with Conv2dSpec::gemm_k()",
+                    workload.name,
+                    layer.name
+                );
+                let (ho, wo) = spec.out_hw(meta.in_hw, meta.in_hw);
+                assert_eq!(
+                    ho * wo,
+                    layer.shape.m,
+                    "{}/{}: M disagrees with Conv2dSpec output dims",
+                    workload.name,
+                    layer.name
+                );
+                assert_eq!(spec.c_out, layer.shape.n, "{}/{}", workload.name, layer.name);
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 20, "expected to check all zoo conv layers, got {checked}");
+}
+
+#[test]
+fn scaled_zoo_constructors_compile_for_every_servable_model() {
+    // the three servable workloads compile under every fixed pattern at
+    // serving-sized dims (what `serve --model ...` actually builds)
+    use tilewise::exec::{ZooBackend, ZooSpec};
+    for model in ["bert", "vgg", "nmt"] {
+        let mut spec = ZooSpec::for_model(model).unwrap();
+        // shrink to test-sized dims
+        spec.batch = spec.batch.min(2);
+        spec.seq = 4;
+        spec.width = 16;
+        spec.n_layers = 1;
+        spec.n_classes = 4;
+        spec.width_div = 16;
+        spec.fc_dim = 32;
+        spec.g = 8;
+        let spec = spec.with_variants(&["model_dense", "model_tw", "model_tvw", "model_vw24"]);
+        let backend = ZooBackend::new(spec, None).unwrap_or_else(|e| panic!("{model}: {e}"));
+        let dims = backend.dims();
+        assert!(dims.batch >= 1 && dims.n_classes >= 1, "{model}");
+    }
+}
