@@ -53,7 +53,11 @@ fn drive(handle: &ServerHandle, requests: usize, rate_rps: f64) {
 
 fn variant_cfg(variant: &str, workers: usize) -> ServerConfig {
     ServerConfig {
-        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(3) },
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(3),
+            ..BatcherConfig::default()
+        },
         policy: Policy::Fixed(variant.to_string()),
         variants: vec![variant.to_string()],
         workers,

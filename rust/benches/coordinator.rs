@@ -50,7 +50,11 @@ fn main() {
     section("end-to-end: closed-loop single-request latency per variant");
     for variant in ["model_dense", "model_tw", "model_tvw"] {
         let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(100) },
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+                ..BatcherConfig::default()
+            },
             policy: Policy::Fixed(variant.into()),
             variants: vec![variant.into()],
             ..ServerConfig::default()

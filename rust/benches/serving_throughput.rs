@@ -1,7 +1,10 @@
 //! Bench: serving throughput vs worker count on the native backend —
 //! requests/sec for BERT-base FFN shapes (d_model 768, d_ff 3072), dense
-//! vs TW vs TVW, over 1/2/4/8 workers.  Emits `BENCH_serving.json`: the
-//! start of the repo's serving-performance trajectory.
+//! vs TW vs TVW, over 1/2/4/8 workers — plus the partial-load sweep:
+//! open-loop arrival at 25/50/100% of measured capacity, padded-batch
+//! execution vs dynamic effective-batch (`ServerConfig::dynamic_batch`
+//! + the low-latency batcher), req/s, p99 and mean occupancy per cell.
+//! Emits `BENCH_serving.json` (`cells` + `load_sweep`).
 //!
 //!   cargo bench --bench serving_throughput [-- --requests N]
 
@@ -15,6 +18,7 @@ use bench_util::{scaled, section};
 use tilewise::coordinator::{start_with_backend, BatcherConfig, Policy, ServerConfig};
 use tilewise::exec::{Backend, NativeBackend, NativeModelSpec};
 use tilewise::json::{arr, num, obj, s};
+use tilewise::util::percentile;
 
 const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
 const VARIANTS: [&str; 3] = ["model_dense", "model_tw", "model_tvw"];
@@ -36,7 +40,11 @@ fn run_cell(
     requests: usize,
 ) -> Cell {
     let cfg = ServerConfig {
-        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..BatcherConfig::default()
+        },
         policy: Policy::Fixed(variant.into()),
         workers,
         intra_threads: intra,
@@ -70,6 +78,86 @@ fn run_cell(
         rps: ok as f64 / wall,
         p50_ms: stats.p50_ms,
         p99_ms: stats.p99_ms,
+    }
+}
+
+struct SweepCell {
+    load_pct: usize,
+    mode: &'static str,
+    offered_rps: f64,
+    rps: f64,
+    p99_ms: f64,
+    mean_occupancy: f64,
+}
+
+/// Open-loop injection at a fixed offered rate: requests are submitted on
+/// a wall-clock schedule (never gated on responses), then the cell's
+/// req/s is completions over the full makespan — a server that falls
+/// behind the offered rate pays for its backlog in the measurement.
+fn run_sweep_cell(
+    backend: &Arc<dyn Backend>,
+    load_pct: usize,
+    dynamic: bool,
+    offered_rps: f64,
+    requests: usize,
+) -> SweepCell {
+    let cfg = ServerConfig {
+        // dynamic mode pairs variable-M execution with the low-latency
+        // batcher; padded keeps the historical size+deadline batcher
+        batcher: if dynamic {
+            BatcherConfig::low_latency(8)
+        } else {
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
+            }
+        },
+        policy: Policy::Fixed("model_tw".into()),
+        workers: 1,
+        dynamic_batch: dynamic,
+        ..ServerConfig::default()
+    };
+    let handle = start_with_backend(backend.clone(), cfg).expect("sweep server start");
+    let len = handle.seq * handle.d_model;
+    let x = vec![0.1f32; len];
+    // warmup one full batch through the worker's scratch path
+    for rx in (0..8).map(|_| handle.submit(x.clone(), None)).collect::<Vec<_>>() {
+        let _ = rx.recv();
+    }
+    let interval = Duration::from_secs_f64(1.0 / offered_rps.max(1e-9));
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let target = interval.mul_f64(i as f64);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        rxs.push(handle.submit(x.clone(), None));
+    }
+    // p99/occupancy come from the measured responses themselves (not the
+    // server metrics, which also hold the warmup burst's samples)
+    let mut ok = 0usize;
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+    let mut occ_sum = 0.0f64;
+    for rx in rxs {
+        if let Ok(r) = rx.recv() {
+            if r.is_ok() {
+                ok += 1;
+                lat_ms.push(r.total_secs() * 1e3);
+                occ_sum += r.batch_size as f64 / 8.0;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(ok, requests, "all sweep requests must be served");
+    SweepCell {
+        load_pct,
+        mode: if dynamic { "dynamic" } else { "padded" },
+        offered_rps,
+        rps: ok as f64 / wall,
+        p99_ms: percentile(&mut lat_ms, 0.99),
+        mean_occupancy: occ_sum / ok.max(1) as f64,
     }
 }
 
@@ -154,6 +242,53 @@ fn main() {
         println!("warning: no variant scaled >=1.2x with workers on this host");
     }
 
+    // ---- partial-load sweep: padded vs dynamic effective-batch --------
+    // capacity = the closed-loop full-batch rate of one padded worker;
+    // offered arrival rates are fractions of it.  At partial load the
+    // padded server pays full-B compute for mostly-empty batches, the
+    // dynamic server pays for real rows only.
+    section("load sweep: offered rate vs padded/dynamic (TW, 1 worker)");
+    let capacity = run_cell(&backend, "model_tw", 1, 1, requests).rps;
+    println!("measured closed-loop capacity: {capacity:.1} req/s\n");
+    println!(
+        "{:<8}{:<9}{:>13}{:>12}{:>12}{:>8}",
+        "load", "mode", "offered", "req/s", "p99(ms)", "occ"
+    );
+    let loads: &[usize] = if bench_util::quick_mode() {
+        &[25, 50]
+    } else {
+        &[25, 50, 100]
+    };
+    let mut sweep: Vec<SweepCell> = Vec::new();
+    for &load_pct in loads {
+        let offered = capacity * load_pct as f64 / 100.0;
+        for dynamic in [false, true] {
+            let cell = run_sweep_cell(&backend, load_pct, dynamic, offered, requests);
+            println!(
+                "{:<8}{:<9}{:>13.1}{:>12.1}{:>12.2}{:>7.0}%",
+                format!("{load_pct}%"),
+                cell.mode,
+                cell.offered_rps,
+                cell.rps,
+                cell.p99_ms,
+                cell.mean_occupancy * 100.0
+            );
+            sweep.push(cell);
+        }
+    }
+    for &load_pct in loads {
+        let padded = sweep.iter().find(|c| c.load_pct == load_pct && c.mode == "padded");
+        let dynamic = sweep.iter().find(|c| c.load_pct == load_pct && c.mode == "dynamic");
+        if let (Some(p), Some(d)) = (padded, dynamic) {
+            println!(
+                "load {load_pct}%: dynamic {:.2}x padded req/s, p99 {:.2}x lower",
+                d.rps / p.rps.max(1e-9),
+                p.p99_ms / d.p99_ms.max(1e-9)
+            );
+        }
+    }
+    println!();
+
     let doc = obj(vec![
         ("bench", s("serving_throughput")),
         ("backend", s("native")),
@@ -182,6 +317,23 @@ fn main() {
         (
             "scaling_vs_one_worker",
             obj(scaling.iter().map(|(v, sc)| (*v, num(*sc))).collect()),
+        ),
+        ("capacity_rps", num(capacity)),
+        (
+            "load_sweep",
+            arr(sweep
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("load_pct", num(c.load_pct as f64)),
+                        ("mode", s(c.mode)),
+                        ("offered_rps", num(c.offered_rps)),
+                        ("rps", num(c.rps)),
+                        ("p99_ms", num(c.p99_ms)),
+                        ("mean_occupancy", num(c.mean_occupancy)),
+                    ])
+                })
+                .collect()),
         ),
     ]);
     let out = "BENCH_serving.json";

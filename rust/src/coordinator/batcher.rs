@@ -1,9 +1,13 @@
 //! Dynamic batcher: size- and deadline-bounded request coalescing.
 //!
-//! The executable has a fixed batch dimension B (AOT shapes are static),
-//! so the batcher's job is to fill as much of B as possible without
-//! letting the head request wait longer than `max_wait` — the classic
-//! serving trade-off (throughput from batching vs p99 from waiting).
+//! The executable batch dimension B is an upper bound; the batcher's job
+//! is to fill as much of B as possible without letting the head request
+//! wait longer than `max_wait` — the classic serving trade-off
+//! (throughput from batching vs p99 from waiting).  With a dynamic-batch
+//! backend the real coalesced count flows through to execution (compute
+//! proportional to real rows); `eager` additionally skips the
+//! co-batching wait entirely when the queue is already drained — the
+//! low-latency mode for partial-load serving.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Mutex;
@@ -13,25 +17,52 @@ use super::request::Request;
 
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
-    /// Fixed executable batch size (pad with zeros beyond real requests).
+    /// Maximum executable batch size.
     pub max_batch: usize,
     /// Longest the head-of-line request may wait for co-batching.
     pub max_wait: Duration,
+    /// Low-latency mode: dispatch immediately at partial fill when the
+    /// queue is empty instead of waiting out `max_wait`.  Whatever is
+    /// already queued still coalesces (the non-blocking drain below), so
+    /// under saturation batches stay full; only the *speculative* wait
+    /// for requests that have not arrived yet is skipped.  Pairs with
+    /// `ServerConfig::dynamic_batch`: a partial batch then also costs
+    /// partial compute.
+    pub eager: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+        Self { max_batch: 8, max_wait: Duration::from_millis(2), eager: false }
+    }
+}
+
+impl BatcherConfig {
+    /// The low-latency preset: same size bound, no speculative waiting.
+    pub fn low_latency(max_batch: usize) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::ZERO, eager: true }
     }
 }
 
 /// Collect the next batch from `rx`.  Blocks for the first request (or
-/// returns `None` if the channel closed), then drains until the batch is
-/// full or the head request's deadline expires.
+/// returns `None` if the channel closed), drains whatever is already
+/// queued without blocking, then — unless `cfg.eager` — keeps waiting
+/// until the batch is full or the head request's deadline expires.
 pub fn collect_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<Request>> {
     let first = rx.recv().ok()?;
     let deadline = Instant::now() + cfg.max_wait;
     let mut batch = vec![first];
+    // non-blocking drain of the backlog: everything already queued joins
+    // this batch regardless of mode
+    while batch.len() < cfg.max_batch {
+        match rx.try_recv() {
+            Ok(req) => batch.push(req),
+            Err(_) => break,
+        }
+    }
+    if cfg.eager {
+        return Some(batch);
+    }
     while batch.len() < cfg.max_batch {
         let now = Instant::now();
         if now >= deadline {
@@ -62,8 +93,10 @@ pub fn collect_batch_shared(
     collect_batch(&guard, cfg)
 }
 
-/// Pack per-request activations into one padded batch tensor.
-/// Returns the flat `(B, per_request_len)` tensor; missing slots are zero.
+/// Pack per-request activations into one batch tensor of `max_batch`
+/// slots; missing slots are zero.  The padded path passes the model's
+/// full B here; the dynamic path passes the real coalesced count, so the
+/// tensor holds exactly the live rows and no padding is materialised.
 pub fn pack_batch(batch: &[Request], max_batch: usize, per_request_len: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; max_batch * per_request_len];
     for (i, req) in batch.iter().enumerate().take(max_batch) {
@@ -102,7 +135,7 @@ mod tests {
             keep.push(resp_rx);
             tx.send(r).unwrap();
         }
-        let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) };
+        let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50), eager: false };
         let batch = collect_batch(&rx, &cfg).unwrap();
         assert_eq!(batch.len(), 3);
         let batch2 = collect_batch(&rx, &cfg).unwrap();
@@ -114,7 +147,7 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Request>();
         let (r, _resp) = req(1, 4);
         tx.send(r).unwrap();
-        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10), eager: false };
         let start = Instant::now();
         let batch = collect_batch(&rx, &cfg).unwrap();
         assert_eq!(batch.len(), 1);
@@ -138,11 +171,47 @@ mod tests {
             keep.push(resp_rx);
             tx.send(r).unwrap();
         }
-        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5), eager: false };
         let batch = collect_batch_shared(&rx, &cfg).unwrap();
         assert_eq!(batch.len(), 3);
         drop(tx);
         assert!(collect_batch_shared(&rx, &cfg).is_none());
+    }
+
+    #[test]
+    fn eager_dispatches_partial_without_waiting() {
+        // empty queue after the head request: eager mode returns at once
+        // instead of sleeping out a long max_wait
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (r, _resp) = req(1, 4);
+        tx.send(r).unwrap();
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(250), eager: true };
+        let start = Instant::now();
+        let batch = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            start.elapsed() < Duration::from_millis(100),
+            "eager collect must not wait out max_wait"
+        );
+    }
+
+    #[test]
+    fn eager_still_coalesces_queued_backlog() {
+        // everything already in the queue joins the batch even in eager
+        // mode — low latency never costs already-available coalescing
+        let (tx, rx) = mpsc::channel::<Request>();
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, resp_rx) = req(i, 4);
+            keep.push(resp_rx);
+            tx.send(r).unwrap();
+        }
+        let cfg = BatcherConfig::low_latency(4);
+        assert!(cfg.eager);
+        let batch = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(batch.len(), 4, "size bound still applies");
+        let batch2 = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(batch2.len(), 1);
     }
 
     #[test]

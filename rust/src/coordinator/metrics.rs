@@ -16,9 +16,19 @@ struct Inner {
     latency: HashMap<String, Vec<f64>>,
     /// Per-variant batch-size samples.
     batch_sizes: HashMap<String, Vec<f64>>,
+    /// Per-variant batch-occupancy samples (`real / B`, one per executed
+    /// batch — not per request, so mean occupancy is not skewed toward
+    /// full batches).
+    occupancy: HashMap<String, Vec<f64>>,
     /// Completions per worker (index = worker id), grown on demand.
     worker_completed: Vec<u64>,
     completed: u64,
+    /// Executed batch invocations (the denominator of the occupancy
+    /// counters).
+    batches: u64,
+    /// Padding rows whose compute dynamic-M execution skipped (`B - real`
+    /// summed over dynamic batches; 0 under padded execution).
+    padded_rows_avoided: u64,
     started_at: Option<Instant>,
 }
 
@@ -44,6 +54,10 @@ pub struct VariantStats {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_batch: f64,
+    /// Mean batch occupancy (`real / B`) over this variant's executed
+    /// batches — 1.0 means every invocation ran full; lower means
+    /// dynamic-M serving skipped padding compute (or, padded, wasted it).
+    pub mean_occupancy: f64,
 }
 
 /// Whole-server snapshot: per-variant percentiles plus the global
@@ -60,6 +74,12 @@ pub struct MetricsSnapshot {
     /// Completions per worker (index = worker id).
     pub per_worker: Vec<u64>,
     pub throughput_rps: f64,
+    /// Executed batch invocations across all variants.
+    pub batches: u64,
+    /// Padding rows dynamic-M execution never computed (`B - real` summed
+    /// over dynamic batches) — the observable win of effective-batch
+    /// serving; stays 0 under padded execution.
+    pub padded_rows_avoided: u64,
 }
 
 impl Metrics {
@@ -97,6 +117,27 @@ impl Metrics {
     /// Single-executor convenience (worker 0).
     pub fn record(&self, variant: &str, latency_secs: f64, batch_size: usize) {
         self.record_for_worker(variant, latency_secs, batch_size, 0);
+    }
+
+    /// Record one executed batch invocation: occupancy sample
+    /// (`real / capacity`) for `variant`, plus the padded-rows-avoided
+    /// counter when the batch ran on the dynamic effective-batch path.
+    pub fn record_batch(&self, variant: &str, real: usize, capacity: usize, dynamic: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let occ = real as f64 / capacity.max(1) as f64;
+        inner.occupancy.entry(variant.to_string()).or_default().push(occ);
+        inner.batches += 1;
+        if dynamic {
+            inner.padded_rows_avoided += capacity.saturating_sub(real) as u64;
+        }
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.inner.lock().unwrap().batches
+    }
+
+    pub fn padded_rows_avoided(&self) -> u64 {
+        self.inner.lock().unwrap().padded_rows_avoided
     }
 
     pub fn completed(&self) -> u64 {
@@ -141,6 +182,7 @@ impl Metrics {
         for (variant, lats) in &inner.latency {
             let mut ms: Vec<f64> = lats.iter().map(|s| s * 1e3).collect();
             let batches = inner.batch_sizes.get(variant).cloned().unwrap_or_default();
+            let occ = inner.occupancy.get(variant).cloned().unwrap_or_default();
             out.push(VariantStats {
                 variant: variant.clone(),
                 count: ms.len(),
@@ -149,6 +191,7 @@ impl Metrics {
                 p95_ms: percentile(&mut ms, 0.95),
                 p99_ms: percentile(&mut ms, 0.99),
                 mean_batch: mean(&batches),
+                mean_occupancy: mean(&occ),
             });
         }
         out.sort_by(|a, b| a.variant.cmp(&b.variant));
@@ -165,6 +208,8 @@ impl Metrics {
             errors: self.errors(),
             per_worker: self.per_worker(),
             throughput_rps: self.throughput(),
+            batches: self.batches(),
+            padded_rows_avoided: self.padded_rows_avoided(),
         }
     }
 }
@@ -237,6 +282,31 @@ mod tests {
         assert_eq!(m.per_worker(), vec![0, 1, 0, 0]);
         m.reserve_workers(2); // never shrinks
         assert_eq!(m.per_worker().len(), 4);
+    }
+
+    #[test]
+    fn occupancy_and_padded_rows_avoided_surface() {
+        let m = Metrics::default();
+        // two dynamic batches at half and full occupancy of B=8
+        m.record_batch("model_tw", 4, 8, true);
+        m.record_batch("model_tw", 8, 8, true);
+        // one padded batch: occupancy recorded, no rows-avoided credit
+        m.record_batch("model_dense", 2, 8, false);
+        m.record("model_tw", 0.001, 4);
+        m.record("model_dense", 0.002, 2);
+        let snap = m.full_snapshot();
+        assert_eq!(snap.batches, 3);
+        assert_eq!(snap.padded_rows_avoided, 4);
+        let tw = snap.variants.iter().find(|v| v.variant == "model_tw").unwrap();
+        assert!((tw.mean_occupancy - 0.75).abs() < 1e-9, "{}", tw.mean_occupancy);
+        let dense = snap.variants.iter().find(|v| v.variant == "model_dense").unwrap();
+        assert!((dense.mean_occupancy - 0.25).abs() < 1e-9);
+        // occupancy is per batch, not per request: a variant with no
+        // record_batch samples reports 0 rather than a skewed mean
+        m.record("model_tvw", 0.001, 8);
+        let snap2 = m.full_snapshot();
+        let tvw = snap2.variants.iter().find(|v| v.variant == "model_tvw").unwrap();
+        assert_eq!(tvw.mean_occupancy, 0.0);
     }
 
     #[test]

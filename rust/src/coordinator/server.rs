@@ -48,6 +48,17 @@ pub struct ServerConfig {
     /// (DESIGN.md §5).  `<= 1` keeps the kernels serial (the historical
     /// behaviour).
     pub intra_threads: usize,
+    /// Dynamic effective-batch execution (DESIGN.md §7): pack and run
+    /// only the real coalesced requests (`PreparedModel::run_batch`)
+    /// instead of zero-padding to the model's full batch.  Numerically
+    /// identical on every backend — models that don't advertise
+    /// `supports_dynamic_batch` (the static-shape PJRT artifacts) keep
+    /// the historical full-B pack + `run` — and strictly cheaper on
+    /// dynamic ones (graph/native), where a half-full batch costs half
+    /// the compute.  `false` restores the historical padded path
+    /// everywhere (the A/B baseline `benches/serving_throughput.rs`
+    /// measures against).
+    pub dynamic_batch: bool,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +71,7 @@ impl Default for ServerConfig {
             plan_cache: None,
             workers: 1,
             intra_threads: 1,
+            dynamic_batch: true,
         }
     }
 }
@@ -104,19 +116,41 @@ impl ServerHandle {
     }
 
     /// Submit one sequence's activations; returns the response receiver.
+    ///
+    /// An activation longer than the model's per-request capacity
+    /// (`seq * d_model`) is rejected here with an explicit error
+    /// [`Response`] (counted in `Metrics::errors`) — it could never be
+    /// served, and letting it reach `pack_batch` used to panic the
+    /// worker thread mid-batch.  Shorter activations remain accepted and
+    /// zero-padded, as ever.
     pub fn submit(
         &self,
         activation: Vec<f32>,
         variant: Option<String>,
     ) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            activation,
-            variant,
-            submitted: Instant::now(),
-            respond_to: tx,
-        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let per_request_len = self.seq * self.d_model;
+        if activation.len() > per_request_len {
+            self.metrics.record_error();
+            let _ = tx.send(Response {
+                id,
+                logits: Vec::new(),
+                variant: variant.unwrap_or_default(),
+                queue_secs: 0.0,
+                execute_secs: 0.0,
+                batch_size: 0,
+                error: Some(format!(
+                    "activation has {} floats, exceeding the model's per-request \
+                     capacity {per_request_len} (seq {} x d_model {})",
+                    activation.len(),
+                    self.seq,
+                    self.d_model
+                )),
+            });
+            return rx;
+        }
+        let req = Request { id, activation, variant, submitted: Instant::now(), respond_to: tx };
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
         // a closed channel means the server already shut down; the caller
         // sees it as a dropped response channel
@@ -191,6 +225,7 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
         .then(|| Arc::new(crate::pool::ThreadPool::new(cfg.intra_threads)));
 
     let mut joins = Vec::with_capacity(workers);
+    let dynamic_batch = cfg.dynamic_batch;
     for wid in 0..workers {
         let rx = rx.clone();
         let metrics2 = metrics.clone();
@@ -213,6 +248,10 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
                     };
                     let dims = model.dims();
                     let _ = init_tx.send(Ok(dims));
+                    // static-shape models (PJRT) would only re-pad a
+                    // partial pack internally — give them the single
+                    // full-B pack instead (same numerics, one allocation)
+                    let dynamic_batch = dynamic_batch && model.supports_dynamic_batch();
                     let per_request_len = dims.per_request_len();
                     let n_classes = dims.n_classes;
                     // never collect more requests than the model batch
@@ -229,13 +268,24 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
                             .load(Ordering::Relaxed)
                             .saturating_sub(batch_reqs.len());
                         let variant = router.route(&batch_reqs, depth);
-                        let packed = pack_batch(&batch_reqs, dims.batch, per_request_len);
-                        let t0 = Instant::now();
-                        let result = model.run(&variant, &packed);
+                        // dynamic effective batch: pack and execute only
+                        // the real coalesced rows — the padded path packs
+                        // (and computes) the full B as it always did
+                        let t0;
+                        let result = if dynamic_batch {
+                            let packed = pack_batch(&batch_reqs, real, per_request_len);
+                            t0 = Instant::now();
+                            model.run_batch(&variant, &packed, real)
+                        } else {
+                            let packed = pack_batch(&batch_reqs, dims.batch, per_request_len);
+                            t0 = Instant::now();
+                            model.run(&variant, &packed)
+                        };
                         let exec_secs = t0.elapsed().as_secs_f64();
                         queue_depth2.fetch_sub(batch_reqs.len(), Ordering::Relaxed);
                         match result {
                             Ok(logits) => {
+                                metrics2.record_batch(&variant, real, dims.batch, dynamic_batch);
                                 for (i, req) in
                                     batch_reqs.into_iter().enumerate().take(dims.batch)
                                 {
@@ -383,6 +433,7 @@ mod tests {
             batcher: BatcherConfig {
                 max_batch: 8,
                 max_wait: std::time::Duration::from_millis(250),
+                ..BatcherConfig::default()
             },
             ..Default::default()
         };
@@ -472,6 +523,67 @@ mod tests {
     }
 
     #[test]
+    fn oversized_activation_rejected_at_submit_not_worker_panic() {
+        // regression: an activation longer than seq*d_model used to blow
+        // up pack_batch's copy_from_slice inside a worker thread; now the
+        // submit path rejects it with an explicit error Response
+        let handle = start_native(ServerConfig::default());
+        let len = handle.seq * handle.d_model;
+        let resp = handle.infer(vec![0.1; len + 1], None).unwrap();
+        assert!(!resp.is_ok());
+        assert!(
+            resp.error.as_deref().unwrap().contains("per-request capacity"),
+            "{:?}",
+            resp.error
+        );
+        assert!(resp.logits.is_empty());
+        assert_eq!(handle.metrics.errors(), 1);
+        // try_submit validates through the same path
+        let resp2 = handle
+            .try_submit(vec![0.1; 2 * len], None)
+            .expect("length rejection is not a shed")
+            .recv()
+            .unwrap();
+        assert!(!resp2.is_ok());
+        assert_eq!(handle.metrics.errors(), 2);
+        assert_eq!(handle.metrics.completed(), 0);
+        // the worker pool survived: a valid request still round-trips
+        let ok = handle.infer(vec![0.1; len], Some("model_tw".into())).unwrap();
+        assert!(ok.is_ok());
+        assert_eq!(handle.metrics.completed(), 1);
+    }
+
+    #[test]
+    fn dynamic_partial_batch_matches_padded_logits() {
+        // a single request (effective batch 1 inside a batch-8 model)
+        // must produce identical logits on the dynamic and padded paths
+        let dynamic = start_native(ServerConfig::default());
+        let padded = start_native(ServerConfig { dynamic_batch: false, ..Default::default() });
+        let len = dynamic.seq * dynamic.d_model;
+        let x: Vec<f32> = (0..len).map(|i| ((i % 23) as f32 - 11.0) * 0.04).collect();
+        for variant in ["model_dense", "model_tw", "model_tvw"] {
+            let rd = dynamic.infer(x.clone(), Some(variant.into())).unwrap();
+            let rp = padded.infer(x.clone(), Some(variant.into())).unwrap();
+            assert!(rd.is_ok() && rp.is_ok(), "{variant}");
+            assert_eq!(rd.logits.len(), rp.logits.len(), "{variant}");
+            for (a, b) in rd.logits.iter().zip(&rp.logits) {
+                assert!((a - b).abs() < 1e-4, "{variant}: {a} vs {b}");
+            }
+        }
+        // occupancy telemetry: 3 singleton batches on a batch-8 model
+        let snap = dynamic.metrics.full_snapshot();
+        assert_eq!(snap.batches, 3);
+        assert_eq!(snap.padded_rows_avoided, 3 * (dynamic.batch as u64 - 1));
+        for v in &snap.variants {
+            assert!((v.mean_occupancy - 1.0 / dynamic.batch as f64).abs() < 1e-9, "{v:?}");
+        }
+        // the padded server records occupancy but avoids nothing
+        let psnap = padded.metrics.full_snapshot();
+        assert_eq!(psnap.padded_rows_avoided, 0);
+        assert_eq!(psnap.batches, 3);
+    }
+
+    #[test]
     fn execute_failure_sends_error_response_and_counts() {
         let handle = start_native(ServerConfig::default());
         let len = handle.seq * handle.d_model;
@@ -558,7 +670,11 @@ mod tests {
     fn batching_coalesces_concurrent_requests() {
         let Some(dir) = artifacts_dir() else { return };
         let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(50) },
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(50),
+                ..BatcherConfig::default()
+            },
             ..Default::default()
         };
         let handle = start(&dir, cfg).unwrap();

@@ -41,14 +41,19 @@ pub use zoo::{ZooBackend, ZooSpec};
 
 use std::sync::Arc;
 
+use crate::ensure;
 use crate::error::Result;
 use crate::pool::ThreadPool;
 
-/// Fixed batch geometry of a prepared model — the serving analogue of the
-/// AOT `meta.json` header (shapes are static; the batcher pads to `batch`).
+/// Batch geometry of a prepared model — the serving analogue of the AOT
+/// `meta.json` header.  `batch` is the **maximum** executable batch: the
+/// workspace/artifact is sized for it at load time, and a dynamic-batch
+/// invocation ([`PreparedModel::run_batch`]) executes any real batch
+/// `m_eff <= batch` over the same prepared state.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelDims {
-    /// Fixed executable batch size (requests per invocation, padded).
+    /// Maximum executable batch size (requests per invocation; the
+    /// compile-time B the workspace is sized for).
     pub batch: usize,
     /// Sequence length of one request's activations.
     pub seq: usize,
@@ -62,6 +67,12 @@ impl ModelDims {
     /// Floats one request contributes to the packed batch tensor.
     pub fn per_request_len(&self) -> usize {
         self.seq * self.d_model
+    }
+
+    /// Packed-tensor length for `m_eff` real requests (the dynamic-batch
+    /// input contract of [`PreparedModel::run_batch`]).
+    pub fn packed_len(&self, m_eff: usize) -> usize {
+        m_eff * self.per_request_len()
     }
 }
 
@@ -90,8 +101,10 @@ pub trait Backend: Send + Sync {
     }
 }
 
-/// One worker's loaded model: executes padded batches by variant name.
-/// Not `Send` by design — see [`Backend::load`].
+/// One worker's loaded model: executes batches by variant name — the
+/// full padded batch ([`PreparedModel::run`]) or the dynamic effective
+/// batch ([`PreparedModel::run_batch`]).  Not `Send` by design — see
+/// [`Backend::load`].
 pub trait PreparedModel {
     fn dims(&self) -> ModelDims;
 
@@ -99,9 +112,56 @@ pub trait PreparedModel {
     /// "model_tvw" / ...), matching the router's vocabulary.
     fn variants(&self) -> Vec<String>;
 
-    /// Execute one padded batch: `packed` is the flat
+    /// Execute one full padded batch: `packed` is the flat
     /// `(batch, seq * d_model)` tensor from `coordinator::pack_batch`;
     /// the result is the flat `(batch, n_classes)` logits.  `&mut self`
     /// lets implementations reuse scratch buffers across invocations.
     fn run(&mut self, variant: &str, packed: &[f32]) -> Result<Vec<f32>>;
+
+    /// Execute the **effective batch**: `packed` holds exactly `m_eff`
+    /// real requests (`m_eff * seq * d_model` floats, `1 <= m_eff <=
+    /// dims().batch`) and the result is their `m_eff * n_classes` logits.
+    ///
+    /// `m_eff` is *advisory*: backends whose shapes are truly static (the
+    /// PJRT AOT artifacts) keep padded semantics behind this same API —
+    /// the default implementation zero-pads the prefix back to the full
+    /// batch, runs [`PreparedModel::run`], and trims the logits, which is
+    /// numerically identical to what the coordinator always did.  Dynamic
+    /// backends ([`crate::graph::GraphModel`]) override it to run compute
+    /// proportional to the real rows, and advertise that via
+    /// [`PreparedModel::supports_dynamic_batch`] so the coordinator can
+    /// skip the pack-then-repad detour on static backends.
+    fn run_batch(&mut self, variant: &str, packed: &[f32], m_eff: usize) -> Result<Vec<f32>> {
+        let dims = self.dims();
+        ensure!(
+            m_eff >= 1 && m_eff <= dims.batch,
+            "effective batch {m_eff} outside 1..={}",
+            dims.batch
+        );
+        ensure!(
+            packed.len() == dims.packed_len(m_eff),
+            "packed batch has {} floats, expected {} for {m_eff} request(s)",
+            packed.len(),
+            dims.packed_len(m_eff)
+        );
+        let mut logits = if m_eff == dims.batch {
+            self.run(variant, packed)?
+        } else {
+            let mut padded = vec![0.0f32; dims.packed_len(dims.batch)];
+            padded[..packed.len()].copy_from_slice(packed);
+            self.run(variant, &padded)?
+        };
+        logits.truncate(m_eff * dims.n_classes);
+        Ok(logits)
+    }
+
+    /// Whether [`PreparedModel::run_batch`] actually saves compute at
+    /// partial batches.  `false` (the default, inherited by static-shape
+    /// backends like PJRT) tells the coordinator to pack the full padded
+    /// batch and call [`PreparedModel::run`] directly — same numerics,
+    /// one allocation instead of the default `run_batch`'s pack-then-repad
+    /// pair.  Dynamic backends override this to `true`.
+    fn supports_dynamic_batch(&self) -> bool {
+        false
+    }
 }

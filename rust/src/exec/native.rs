@@ -141,26 +141,47 @@ fn residual_mlp_program(
     let x = b.buffer(tokens, spec.d_model);
     let h = b.buffer(tokens, spec.d_ff);
     let t = b.buffer(tokens, spec.d_model);
+    // token-resident buffers shrink with the effective batch (seq rows per
+    // request); per-bucket tile plans probe the cache at each bucket's M
+    for id in [x, h, t] {
+        b.scale_by_batch(id, spec.seq);
+    }
+    let head_buckets = crate::graph::batch_buckets(spec.batch);
+    let token_buckets: Vec<usize> = head_buckets.iter().map(|&bb| bb * spec.seq).collect();
 
     for layer in 0..spec.n_layers {
         let w_up = Matrix::randn(spec.d_model, spec.d_ff, &mut rng);
         let w_down = Matrix::randn(spec.d_ff, spec.d_model, &mut rng);
-        let node = opts.pack_layer("residual-mlp", &format!("l{layer}.up"), &w_up, tokens, true)?;
+        let node = opts.pack_layer(
+            "residual-mlp",
+            &format!("l{layer}.up"),
+            &w_up,
+            tokens,
+            &token_buckets,
+            true,
+        )?;
         b.gemm_into(x, node, h);
         b.push(Op::BiasAct { buf: h, bias: None, act: Some(Act::Relu) });
-        let node =
-            opts.pack_layer("residual-mlp", &format!("l{layer}.down"), &w_down, tokens, true)?;
+        let node = opts.pack_layer(
+            "residual-mlp",
+            &format!("l{layer}.down"),
+            &w_down,
+            tokens,
+            &token_buckets,
+            true,
+        )?;
         b.gemm_into(h, node, t);
         // residual keeps activations O(1) through the stack
         b.push(Op::Residual { src: t, dst: x });
     }
 
     let pooled = b.buffer(spec.batch, spec.d_model);
+    b.scale_by_batch(pooled, 1);
     b.push(Op::MeanPool { input: x, out: pooled, seq: spec.seq });
     // the head stays dense regardless of variant — the paper's "keep the
     // small accuracy-critical layers dense" rule (prunable: false)
     let w_head = Matrix::randn(spec.d_model, spec.n_classes, &mut rng);
-    let head = opts.pack_layer("residual-mlp", "head", &w_head, spec.batch, false)?;
+    let head = opts.pack_layer("residual-mlp", "head", &w_head, spec.batch, &head_buckets, false)?;
     let logits = b.gemm(pooled, head);
 
     let dims = ModelDims {
@@ -371,6 +392,36 @@ mod tests {
                 assert!((x - y).abs() < 1e-3, "{variant}: {x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn run_batch_prefix_matches_dedicated_small_batch() {
+        // dynamic-M serving: m_eff real requests executed inside the
+        // batch-B workspace must match a backend compiled at batch m_eff
+        // (same seed -> identical weights), and a later full-batch run
+        // through the same workspace must still be correct
+        let big = NativeBackend::new(NativeModelSpec { batch: 4, ..tiny_spec() }, None).unwrap();
+        let small = NativeBackend::new(NativeModelSpec { batch: 2, ..tiny_spec() }, None).unwrap();
+        let mut mb = big.load().unwrap();
+        let mut ms = small.load().unwrap();
+        let prl = mb.dims().per_request_len();
+        let full: Vec<f32> = (0..4 * prl).map(|i| ((i * 5 % 17) as f32 - 8.0) * 0.07).collect();
+        for variant in NATIVE_VARIANTS {
+            let want_full = mb.run(variant, &full).unwrap();
+            let got = mb.run_batch(variant, &full[..2 * prl], 2).unwrap();
+            let want = ms.run(variant, &full[..2 * prl]).unwrap();
+            assert_eq!(got.len(), want.len(), "{variant}");
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{variant}: {a} vs {b}");
+            }
+            // the workspace regrows to the full batch with no state leak
+            let again = mb.run(variant, &full).unwrap();
+            assert_eq!(want_full, again, "{variant}: full batch after shrink");
+        }
+        // contract violations are errors, not panics
+        assert!(mb.run_batch("model_dense", &full[..prl], 0).is_err());
+        assert!(mb.run_batch("model_dense", &full[..prl], 5).is_err());
+        assert!(mb.run_batch("model_dense", &full[..prl + 1], 1).is_err());
     }
 
     #[test]

@@ -50,6 +50,13 @@ impl Backend for PjrtBackend {
     }
 }
 
+/// PJRT shapes are ahead-of-time static, so this model keeps **padded
+/// semantics** behind the dynamic-batch API: it deliberately inherits the
+/// default [`PreparedModel::run_batch`], which treats `m_eff` as advisory
+/// — it zero-pads the real-request prefix back to the artifact's fixed
+/// batch, executes the full batch, and trims the logits.  Numerically
+/// identical to the pre-dynamic coordinator; the compute saving of
+/// variable M is a native/graph-backend property.
 struct PjrtModel {
     engine: Engine,
     dims: ModelDims,

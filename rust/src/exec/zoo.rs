@@ -218,6 +218,34 @@ mod tests {
     }
 
     #[test]
+    fn zoo_run_batch_matches_full_batch_prefix_semantics() {
+        // the dynamic path must serve every zoo topology: a partial batch
+        // through the batch-B workspace returns one logit row per real
+        // request, matching a dedicated batch-m_eff compilation
+        for model in ["bert", "nmt"] {
+            let mut spec = tiny(model);
+            spec.batch = 4;
+            let backend = ZooBackend::new(spec.clone(), None).unwrap();
+            let mut m = backend.load().unwrap();
+            let dims = m.dims();
+            let prl = dims.per_request_len();
+            let x: Vec<f32> = (0..4 * prl).map(|i| ((i * 3 % 11) as f32 - 5.0) * 0.08).collect();
+            let mut small_spec = spec.clone();
+            small_spec.batch = 2;
+            let small = ZooBackend::new(small_spec, None).unwrap();
+            let mut sm = small.load().unwrap();
+            for variant in ["model_dense", "model_tw", "model_tvw"] {
+                let got = m.run_batch(variant, &x[..2 * prl], 2).unwrap();
+                let want = sm.run(variant, &x[..2 * prl]).unwrap();
+                assert_eq!(got.len(), 2 * dims.n_classes, "{model}/{variant}");
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4, "{model}/{variant}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn conv_models_serve_batch_one() {
         let backend = ZooBackend::new(tiny("vgg"), None).unwrap();
         assert_eq!(backend.dims().batch, 1);

@@ -98,18 +98,38 @@ impl CompileOptions {
     /// Resolve a layer's pattern family (`prunable: false` forces dense)
     /// and pack it — the single packing path shared by every compiled
     /// topology, including the native backend's residual-MLP spec.
+    /// `m_buckets` lists the per-bucket M values to pre-resolve for
+    /// dynamic effective-batch dispatch (empty for batch-independent
+    /// layers — conv GEMMs run the same M regardless of load).
     pub(crate) fn pack_layer(
         &self,
         model: &str,
         name: &str,
         w: &Matrix,
         m_hint: usize,
+        m_buckets: &[usize],
         prunable: bool,
     ) -> Result<GemmNode> {
         let shape = GemmShape::new(m_hint, w.rows, w.cols);
         let family = self.family_for(model, prunable, shape);
-        pack_weight(name, w, m_hint, family, &self.pack, self.plan_cache.as_deref())
+        pack_weight(name, w, m_hint, m_buckets, family, &self.pack, self.plan_cache.as_deref())
     }
+}
+
+/// The power-of-two effective-batch buckets of a batch-`b` model:
+/// `1, 2, 4, …` up to and including `b` itself (the full batch is always
+/// a bucket even when it is not a power of two).  These are the M grid
+/// the plan cache is probed on at pack time and the grid `GemmNode::
+/// cfg_for_m` covers at dispatch.
+pub fn batch_buckets(b: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut m = 1usize;
+    while m < b {
+        out.push(m);
+        m *= 2;
+    }
+    out.push(b.max(1));
+    out
 }
 
 /// Compile one workload into one variant's executable graph.
@@ -175,10 +195,20 @@ fn compile_transformer(workload: &ModelWorkload, opts: &CompileOptions) -> Resul
     let ctx = b.buffer(m, d);
     let t = b.buffer(m, d);
     let h = b.buffer(m, d_ff);
+    // token-resident activations carry `seq` rows per request; the
+    // attention scratch below is per-window and batch-independent
+    for id in [x, qkvb, ctx, t, h] {
+        b.scale_by_batch(id, seq);
+    }
     let scores = b.buffer(seq, seq);
     let qh = b.buffer(seq, d / heads);
     let kh = b.buffer(seq, d / heads);
     let vh = b.buffer(seq, d / heads);
+
+    // per-bucket GEMM M values: encoder GEMMs run seq rows per request,
+    // the classifier head one row per request
+    let token_buckets: Vec<usize> = batch_buckets(batch).iter().map(|&bb| bb * seq).collect();
+    let head_buckets = batch_buckets(batch);
 
     for layer in 0..n_layers {
         let w_qkv = Matrix::randn(d, 3 * d, &mut rng);
@@ -187,8 +217,14 @@ fn compile_transformer(workload: &ModelWorkload, opts: &CompileOptions) -> Resul
         let w_down = Matrix::randn(d_ff, d, &mut rng);
         let ffn_bias = small_bias(d_ff, &mut rng);
 
-        let node =
-            opts.pack_layer(model_key, &format!("l{layer}.qkv"), &w_qkv, m, qkv.prunable)?;
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.qkv"),
+            &w_qkv,
+            m,
+            &token_buckets,
+            qkv.prunable,
+        )?;
         b.gemm_into(x, node, qkvb);
         b.push(Op::Attention { qkv: qkvb, out: ctx, heads, seq, scores, qh, kh, vh });
         let node = opts.pack_layer(
@@ -196,29 +232,43 @@ fn compile_transformer(workload: &ModelWorkload, opts: &CompileOptions) -> Resul
             &format!("l{layer}.attn_out"),
             &w_out,
             m,
+            &token_buckets,
             attn_out.prunable,
         )?;
         b.gemm_into(ctx, node, t);
         b.push(Op::Residual { src: t, dst: x });
         b.push(Op::LayerNorm { buf: x });
-        let node =
-            opts.pack_layer(model_key, &format!("l{layer}.ffn1"), &w_up, m, ffn1.prunable)?;
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.ffn1"),
+            &w_up,
+            m,
+            &token_buckets,
+            ffn1.prunable,
+        )?;
         b.gemm_into(x, node, h);
         let bias = b.add_bias(ffn_bias);
         b.push(Op::BiasAct { buf: h, bias: Some(bias), act: Some(Act::Relu) });
-        let node =
-            opts.pack_layer(model_key, &format!("l{layer}.ffn2"), &w_down, m, ffn2.prunable)?;
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.ffn2"),
+            &w_down,
+            m,
+            &token_buckets,
+            ffn2.prunable,
+        )?;
         b.gemm_into(h, node, t);
         b.push(Op::Residual { src: t, dst: x });
         b.push(Op::LayerNorm { buf: x });
     }
 
     let pooled = b.buffer(batch, d);
+    b.scale_by_batch(pooled, 1);
     b.push(Op::MeanPool { input: x, out: pooled, seq });
     // the classifier head stays dense in every variant — the paper's
     // "keep the small accuracy-critical layers dense" rule
     let w_head = Matrix::randn(d, opts.n_classes, &mut rng);
-    let head = opts.pack_layer(model_key, "head", &w_head, batch, false)?;
+    let head = opts.pack_layer(model_key, "head", &w_head, batch, &head_buckets, false)?;
     let logits = b.gemm(pooled, head);
 
     let dims = ModelDims { batch, seq, d_model: d, n_classes: opts.n_classes };
@@ -327,7 +377,9 @@ fn compile_conv(workload: &ModelWorkload, opts: &CompileOptions) -> Result<Graph
             }
             let w = Matrix::randn(spec.gemm_k(), spec.c_out, &mut rng);
             let name = if l.count > 1 { format!("{}.{rep}", l.name) } else { l.name.clone() };
-            let node = opts.pack_layer(model_key, &name, &w, out_hw * out_hw, l.prunable)?;
+            // conv GEMMs run a fixed M (out_hw^2 pixels of one image, batch
+            // 1) regardless of load — no effective-batch buckets
+            let node = opts.pack_layer(model_key, &name, &w, out_hw * out_hw, &[], l.prunable)?;
             let y = arena.grab(&mut b, out_hw * out_hw, node.n);
             b.gemm_into(a, node, y);
             arena.release(&b, a);
@@ -372,7 +424,7 @@ fn compile_conv(workload: &ModelWorkload, opts: &CompileOptions) -> Result<Graph
     for (i, l) in fcs.iter().enumerate() {
         ensure!(l.count == 1, "FC layer {} repeats in a conv net", l.name);
         let w = Matrix::randn(l.shape.k, l.shape.n, &mut rng);
-        let node = opts.pack_layer(model_key, &l.name, &w, 1, l.prunable)?;
+        let node = opts.pack_layer(model_key, &l.name, &w, 1, &[], l.prunable)?;
         let out = b.gemm(cur_fc, node);
         if i + 1 < fcs.len() {
             let bias = b.add_bias(small_bias(l.shape.n, &mut rng));
@@ -422,6 +474,11 @@ fn compile_lstm(workload: &ModelWorkload, opts: &CompileOptions) -> Result<Graph
     let input = b.buffer(batch, steps * hidden);
     let xh = b.buffer(batch, 2 * hidden);
     let gbuf = b.buffer(batch, 4 * hidden);
+    // every recurrent buffer carries one row per request
+    for id in [input, xh, gbuf] {
+        b.scale_by_batch(id, 1);
+    }
+    let buckets = batch_buckets(batch);
 
     struct Cell {
         h: BufId,
@@ -433,8 +490,10 @@ fn compile_lstm(workload: &ModelWorkload, opts: &CompileOptions) -> Result<Graph
     for g in &gates {
         let h = b.buffer(batch, hidden);
         let c = b.buffer(batch, hidden);
+        b.scale_by_batch(h, 1);
+        b.scale_by_batch(c, 1);
         let w = Matrix::randn(2 * hidden, 4 * hidden, &mut rng);
-        let node = opts.pack_layer(model_key, &g.name, &w, batch, g.prunable)?;
+        let node = opts.pack_layer(model_key, &g.name, &w, batch, &buckets, g.prunable)?;
         let w = b.add_weight(node);
         let bias = b.add_bias(small_bias(4 * hidden, &mut rng));
         b.push(Op::Zero { buf: h });
@@ -469,7 +528,7 @@ fn compile_lstm(workload: &ModelWorkload, opts: &CompileOptions) -> Result<Graph
     for (i, l) in tail.iter().enumerate() {
         ensure!(l.shape.m == batch, "tail layer {} must run at batch M", l.name);
         let w = Matrix::randn(l.shape.k, l.shape.n, &mut rng);
-        let node = opts.pack_layer(model_key, &l.name, &w, batch, l.prunable)?;
+        let node = opts.pack_layer(model_key, &l.name, &w, batch, &buckets, l.prunable)?;
         let out = b.gemm(cur, node);
         if i + 1 < tail.len() {
             b.push(Op::BiasAct { buf: out, bias: None, act: Some(Act::Tanh) });

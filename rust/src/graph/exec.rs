@@ -46,6 +46,28 @@ impl Workspace {
     pub fn buf_mut(&mut self, id: BufId) -> &mut Matrix {
         &mut self.bufs[id.0]
     }
+
+    /// Resize every batch-scaled buffer to `m_eff` requests — the
+    /// variable-M entry of the dynamic-batch contract (`docs/DESIGN.md`
+    /// §7).  Row-major leading-batch layout makes the live rows a
+    /// contiguous prefix, so shrinking is a `Vec::truncate` and growing
+    /// back re-fills within the capacity reserved at the compile-time
+    /// batch: **no allocation either way**, and every downstream op reads
+    /// its row count straight from the buffer (`Matrix::rows`), so the
+    /// whole op list — GEMM row prefixes, the per-window attention loop,
+    /// LSTM step rows, LayerNorm/pooling row counts — adapts without an
+    /// explicit per-op parameter.
+    pub fn set_effective_batch(&mut self, p: &GraphProgram, m_eff: usize) {
+        debug_assert!(m_eff >= 1 && m_eff <= p.dims.batch);
+        for (buf, rpr) in self.bufs.iter_mut().zip(&p.buf_rows_per_request) {
+            let Some(rpr) = rpr else { continue };
+            let rows = rpr * m_eff;
+            if buf.rows != rows {
+                buf.rows = rows;
+                buf.data.resize(rows * buf.cols, 0.0);
+            }
+        }
+    }
 }
 
 /// Take a buffer out of the arena for mutation (restored by [`put`]);
@@ -75,7 +97,10 @@ pub fn run_gemm(
     scratch: &mut GemmScratch,
 ) {
     let threads = intra.map_or(1, ThreadPool::threads);
-    let cfg = &node.cfg;
+    // dynamic-M dispatch: the bucket table resolved at pack time picks the
+    // blocking tuned for this effective row count (falling back to the
+    // compile default); `a.rows` already reflects the live batch prefix
+    let cfg = &node.cfg_for_m(a.rows);
     match &node.weight {
         PackedWeight::Dense(w) => {
             let eff = effective_parallel_threads(a.rows, threads);
@@ -114,9 +139,24 @@ pub fn run_gemm(
     }
 }
 
-/// Execute every op of `p` in order over `ws`.  The caller writes the
-/// packed request batch into `ws.buf_mut(p.input)` beforehand and reads
-/// the logits from `ws.buf(p.output)` afterwards.
+/// Variable-M execution: resize the batch-scaled buffers to `m_eff`
+/// requests, then run the op list.  The caller writes `m_eff` requests'
+/// activations into the (now `m_eff`-sized) `ws.buf_mut(p.input)` and
+/// reads `m_eff` requests' logits from `ws.buf(p.output)`.
+pub fn execute_batch(
+    p: &GraphProgram,
+    ws: &mut Workspace,
+    m_eff: usize,
+    intra: Option<&ThreadPool>,
+) {
+    ws.set_effective_batch(p, m_eff);
+    execute(p, ws, intra);
+}
+
+/// Execute every op of `p` in order over `ws` at the workspace's current
+/// (possibly batch-shrunk) buffer shapes.  The caller writes the packed
+/// request batch into `ws.buf_mut(p.input)` beforehand and reads the
+/// logits from `ws.buf(p.output)` afterwards.
 pub fn execute(p: &GraphProgram, ws: &mut Workspace, intra: Option<&ThreadPool>) {
     assert_eq!(ws.bufs.len(), p.buf_shapes.len(), "workspace built for a different program");
     let Workspace { bufs, scratch } = ws;
@@ -337,7 +377,9 @@ impl GraphModel {
         let (mut sa, mut sc) = (first.scratch_a, first.scratch_c);
         for p in programs.iter().skip(1) {
             ensure!(
-                p.buf_shapes == first.buf_shapes && p.dims == first.dims,
+                p.buf_shapes == first.buf_shapes
+                    && p.dims == first.dims
+                    && p.buf_rows_per_request == first.buf_rows_per_request,
                 "graph variants must share one arena layout ({} vs {})",
                 p.variant,
                 first.variant
@@ -348,6 +390,35 @@ impl GraphModel {
         let mut ws = Workspace::for_program(first);
         ws.scratch = GemmScratch::with_capacity(sa, sc);
         Ok(GraphModel { programs, ws, intra })
+    }
+
+    /// Shared variable-M execution: `packed` holds exactly `m_eff`
+    /// requests' activations; returns `m_eff` requests' logits.
+    fn run_inner(&mut self, variant: &str, packed: &[f32], m_eff: usize) -> Result<Vec<f32>> {
+        let programs = self.programs.clone();
+        let p = programs
+            .iter()
+            .find(|p| p.variant == variant)
+            .ok_or_else(|| anyhow!("variant {variant:?} not compiled in this graph model"))?;
+        ensure!(
+            m_eff >= 1 && m_eff <= p.dims.batch,
+            "effective batch {m_eff} outside 1..={} for model {}",
+            p.dims.batch,
+            p.model
+        );
+        let want = m_eff * p.dims.per_request_len();
+        ensure!(
+            packed.len() == want,
+            "packed batch has {} floats, model {} expects {want} for {m_eff} request(s)",
+            packed.len(),
+            p.model
+        );
+        self.ws.set_effective_batch(p, m_eff);
+        let input = self.ws.buf_mut(p.input);
+        debug_assert_eq!(input.data.len(), packed.len(), "input buffer matches request layout");
+        input.data.copy_from_slice(packed);
+        execute(p, &mut self.ws, self.intra.as_deref());
+        Ok(self.ws.buf(p.output).data.clone())
     }
 }
 
@@ -361,22 +432,17 @@ impl PreparedModel for GraphModel {
     }
 
     fn run(&mut self, variant: &str, packed: &[f32]) -> Result<Vec<f32>> {
-        let programs = self.programs.clone();
-        let p = programs
-            .iter()
-            .find(|p| p.variant == variant)
-            .ok_or_else(|| anyhow!("variant {variant:?} not compiled in this graph model"))?;
-        let want = p.dims.batch * p.dims.per_request_len();
-        ensure!(
-            packed.len() == want,
-            "packed batch has {} floats, model {} expects {want}",
-            packed.len(),
-            p.model
-        );
-        let input = self.ws.buf_mut(p.input);
-        debug_assert_eq!(input.data.len(), packed.len(), "input buffer matches request layout");
-        input.data.copy_from_slice(packed);
-        execute(p, &mut self.ws, self.intra.as_deref());
-        Ok(self.ws.buf(p.output).data.clone())
+        let batch = self.programs[0].dims.batch;
+        self.run_inner(variant, packed, batch)
+    }
+
+    /// True variable-M execution: compute runs over the `m_eff`-request
+    /// prefix only — no padding rows are packed, copied, or multiplied.
+    fn run_batch(&mut self, variant: &str, packed: &[f32], m_eff: usize) -> Result<Vec<f32>> {
+        self.run_inner(variant, packed, m_eff)
+    }
+
+    fn supports_dynamic_batch(&self) -> bool {
+        true
     }
 }

@@ -94,8 +94,16 @@ pub struct GraphProgram {
     pub ops: Vec<Op>,
     pub weights: Vec<GemmNode>,
     pub biases: Vec<Vec<f32>>,
-    /// `(rows, cols)` of every arena buffer.
+    /// `(rows, cols)` of every arena buffer at the full compile-time batch.
     pub buf_shapes: Vec<(usize, usize)>,
+    /// Per-buffer batch scaling: `Some(rpr)` marks a buffer whose row count
+    /// is `rpr` rows per request (so at effective batch `m_eff` it holds
+    /// `rpr * m_eff` live rows as a contiguous row-major prefix);
+    /// `None` is a batch-independent buffer (attention scratch, conv
+    /// activations — conv models serve batch 1).  The executor resizes the
+    /// `Some` buffers before a variable-M run (`Workspace::set_effective_batch`);
+    /// capacity stays at the full batch, so no allocation happens.
+    pub buf_rows_per_request: Vec<Option<usize>>,
     /// Where the packed request batch is written before execution.
     pub input: BufId,
     /// Where the logits are read after execution.
@@ -118,6 +126,7 @@ impl GraphProgram {
             weights: self.weights.iter().map(GemmNode::to_dense_oracle).collect(),
             biases: self.biases.clone(),
             buf_shapes: self.buf_shapes.clone(),
+            buf_rows_per_request: self.buf_rows_per_request.clone(),
             input: self.input,
             output: self.output,
             dims: self.dims,
@@ -140,6 +149,7 @@ pub struct GraphBuilder {
     pub(crate) weights: Vec<GemmNode>,
     pub(crate) biases: Vec<Vec<f32>>,
     pub(crate) buf_shapes: Vec<(usize, usize)>,
+    pub(crate) buf_rows_per_request: Vec<Option<usize>>,
 }
 
 impl GraphBuilder {
@@ -147,11 +157,27 @@ impl GraphBuilder {
         GraphBuilder::default()
     }
 
-    /// Reserve one arena buffer.
+    /// Reserve one arena buffer (batch-independent unless
+    /// [`GraphBuilder::scale_by_batch`] marks it afterwards).
     pub fn buffer(&mut self, rows: usize, cols: usize) -> BufId {
         assert!(rows > 0 && cols > 0, "zero-sized graph buffer");
         self.buf_shapes.push((rows, cols));
+        self.buf_rows_per_request.push(None);
         BufId(self.buf_shapes.len() - 1)
+    }
+
+    /// Mark `id` as batch-scaled: it holds `rows_per_request` rows per
+    /// real request, so at effective batch `m_eff` only the first
+    /// `rows_per_request * m_eff` rows are live (a contiguous row-major
+    /// prefix — the dynamic-M contract of `docs/DESIGN.md` §7).
+    pub fn scale_by_batch(&mut self, id: BufId, rows_per_request: usize) {
+        assert!(rows_per_request > 0, "batch-scaled buffer needs rows_per_request >= 1");
+        let (rows, _) = self.buf_shapes[id.0];
+        assert!(
+            rows % rows_per_request == 0,
+            "buffer rows {rows} not a multiple of rows_per_request {rows_per_request}"
+        );
+        self.buf_rows_per_request[id.0] = Some(rows_per_request);
     }
 
     pub fn shape(&self, id: BufId) -> (usize, usize) {
@@ -176,10 +202,15 @@ impl GraphBuilder {
 
     /// Append a GEMM op: allocates the `(input.rows, node.n)` output
     /// buffer, validates the reduction width, returns the output id.
+    /// A batch-scaled input propagates its scaling to the output (a GEMM
+    /// is row-wise, so the live-prefix contract carries through).
     pub fn gemm(&mut self, input: BufId, node: GemmNode) -> BufId {
         let (rows, cols) = self.shape(input);
         assert_eq!(cols, node.k, "GEMM {}: input width {} != K {}", node.name, cols, node.k);
         let out = self.buffer(rows, node.n);
+        if let Some(rpr) = self.buf_rows_per_request[input.0] {
+            self.scale_by_batch(out, rpr);
+        }
         let w = self.add_weight(node);
         self.push(Op::Gemm { input, w, out });
         out
@@ -217,6 +248,7 @@ impl GraphBuilder {
             weights: self.weights,
             biases: self.biases,
             buf_shapes: self.buf_shapes,
+            buf_rows_per_request: self.buf_rows_per_request,
             input,
             output,
             dims,

@@ -33,8 +33,8 @@ pub mod exec;
 pub mod ir;
 pub mod pack;
 
-pub use compile::{compile, CompileOptions};
-pub use exec::{execute, run_gemm, GraphModel, Workspace};
+pub use compile::{batch_buckets, compile, CompileOptions};
+pub use exec::{execute, execute_batch, run_gemm, GraphModel, Workspace};
 pub use ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
 pub use pack::{pack_weight, resolve_tile, GemmNode, GraphPattern, PackOptions, PackedWeight};
 

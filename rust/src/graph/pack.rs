@@ -66,7 +66,14 @@ impl PackedWeight {
 pub struct GemmNode {
     pub name: String,
     pub weight: PackedWeight,
+    /// Tile config resolved at the full compile-time M (the fallback when
+    /// no bucket applies).
     pub cfg: TileConfig,
+    /// Per-bucket tile plans for dynamic effective-batch dispatch: `(M,
+    /// config)` pairs resolved **once** at pack time from the plan cache,
+    /// one per power-of-two batch bucket (M ascending).  Empty when the
+    /// graph compiled without a cache — dispatch then always uses `cfg`.
+    pub bucket_cfgs: Vec<(usize, TileConfig)>,
     pub k: usize,
     pub n: usize,
 }
@@ -79,18 +86,39 @@ impl GemmNode {
             name: self.name.clone(),
             weight: PackedWeight::Dense(self.weight.decode()),
             cfg: TileConfig::dense_default(),
+            bucket_cfgs: Vec::new(),
             k: self.k,
             n: self.n,
         }
     }
 
+    /// The tile config to dispatch with at `m` activation rows: the
+    /// smallest pre-resolved bucket covering `m` (exact bucket when `m`
+    /// is itself a bucket M), else the largest bucket, else the node's
+    /// compile default — the resolution order of `docs/DESIGN.md` §7.
+    pub fn cfg_for_m(&self, m: usize) -> TileConfig {
+        self.bucket_cfgs
+            .iter()
+            .find(|(bm, _)| *bm >= m)
+            .or_else(|| self.bucket_cfgs.last())
+            .map(|(_, cfg)| *cfg)
+            .unwrap_or(self.cfg)
+    }
+
     /// Serial-kernel scratch this node needs: `(a_gather, c_tile)` staging
     /// lengths (see [`crate::gemm::GemmScratch`]); dense and 2:4 kernels
-    /// stage nothing.
+    /// stage nothing.  Sized over the compile config *and* every bucket
+    /// config, so variable-M dispatch never grows the scratch on the
+    /// request path.
     pub fn scratch_needs(&self) -> (usize, usize) {
+        let bm_max = self
+            .bucket_cfgs
+            .iter()
+            .map(|(_, cfg)| cfg.bm())
+            .fold(self.cfg.bm(), usize::max);
         match &self.weight {
             PackedWeight::Dense(_) | PackedWeight::Vw24(_) => (0, 0),
-            PackedWeight::Tw(p) => (self.cfg.bm() * p.kmax, self.cfg.bm() * p.g),
+            PackedWeight::Tw(p) => (bm_max * p.kmax, bm_max * p.g),
             PackedWeight::Tvw(p) => (p.kmax, p.g),
         }
     }
@@ -134,7 +162,10 @@ pub fn resolve_tile(
 
 /// Prune + encode one weight matrix into `family`'s kernel-ready form and
 /// resolve its tile config.  `m_hint` is the activation row count the
-/// layer serves (the M the cache lookup transfers across).  A 2:4 request
+/// layer serves at the full compile-time batch (the M the cache lookup
+/// transfers across); `m_buckets` lists the additional M values to
+/// pre-resolve for dynamic effective-batch dispatch (one per power-of-two
+/// batch bucket — empty for batch-independent layers).  A 2:4 request
 /// on a K not divisible by 4 degrades to Dense — the same "keep
 /// hardware-incompatible layers dense" rule the paper applies to
 /// accuracy-critical layers.
@@ -142,6 +173,7 @@ pub fn pack_weight(
     name: &str,
     w: &Matrix,
     m_hint: usize,
+    m_buckets: &[usize],
     family: PatternFamily,
     opts: &PackOptions,
     cache: Option<&PlanCache>,
@@ -178,7 +210,22 @@ pub fn pack_weight(
         }
     };
     let cfg = resolve_tile(cache, shape, family, sparsity);
-    Ok(GemmNode { name: name.to_string(), weight, cfg, k, n })
+    // per-bucket tile plans: probe the cache once per bucket M at pack
+    // time so dispatch is a table walk, never a cache lookup.  Without a
+    // cache every bucket would resolve to the family default == `cfg`, so
+    // the table is skipped entirely.
+    let bucket_cfgs = match cache {
+        Some(c) => {
+            let mut bs: Vec<usize> = m_buckets.to_vec();
+            bs.sort_unstable();
+            bs.dedup();
+            bs.into_iter()
+                .map(|mb| (mb, resolve_tile(Some(c), GemmShape::new(mb, k, n), family, sparsity)))
+                .collect()
+        }
+        None => Vec::new(),
+    };
+    Ok(GemmNode { name: name.to_string(), weight, cfg, bucket_cfgs, k, n })
 }
 
 /// Which pattern a compiled graph variant packs its prunable layers with.
@@ -273,7 +320,7 @@ mod tests {
         let families =
             [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24];
         for fam in families {
-            let node = pack_weight("l", &w, 8, fam, &opts, None).unwrap();
+            let node = pack_weight("l", &w, 8, &[], fam, &opts, None).unwrap();
             assert_eq!(node.weight.family(), fam, "{fam:?}");
             assert_eq!(node.weight.kn(), (32, 48));
             let dec = node.weight.decode();
@@ -293,8 +340,51 @@ mod tests {
         let mut rng = Rng::new(41);
         let w = Matrix::randn(27, 16, &mut rng); // K = 27, not 2:4-compatible
         let node =
-            pack_weight("c1", &w, 4, PatternFamily::Vw24, &PackOptions::default(), None).unwrap();
+            pack_weight("c1", &w, 4, &[], PatternFamily::Vw24, &PackOptions::default(), None)
+                .unwrap();
         assert_eq!(node.weight.family(), PatternFamily::Dense);
+    }
+
+    #[test]
+    fn bucket_configs_resolve_per_m_and_dispatch_covers() {
+        // two tuned entries at different M for one (K, N, TW): the packed
+        // node must carry one config per bucket and dispatch the covering
+        // bucket's config for any effective M
+        let (k, n) = (96, 128);
+        let mut cache = PlanCache::new();
+        for (m, bm) in [(4usize, 2usize), (64, 48)] {
+            cache.insert(TunedEntry {
+                key: PlanKey::new(GemmShape::new(m, k, n), "TW", 0.75, 1),
+                variant: "tw-fused".into(),
+                bm,
+                bk: 64,
+                g: 16,
+                threads: 1,
+                measured_us: 10.0,
+                model_us: 9.0,
+                default_us: 20.0,
+            });
+        }
+        let mut rng = Rng::new(42);
+        let w = Matrix::randn(k, n, &mut rng);
+        let opts = PackOptions { sparsity: 0.75, g: 16 };
+        let node =
+            pack_weight("l", &w, 64, &[4, 16, 64], PatternFamily::Tw, &opts, Some(&cache)).unwrap();
+        assert_eq!(node.bucket_cfgs.len(), 3);
+        // exact bucket M hits its tuned entry; in-between M takes the
+        // smallest covering bucket; beyond-largest falls to the last
+        assert_eq!(node.cfg_for_m(4), TileConfig::new(2, 64));
+        assert_eq!(node.cfg_for_m(3), TileConfig::new(2, 64));
+        assert_eq!(node.cfg_for_m(64), TileConfig::new(48, 64));
+        assert_eq!(node.cfg_for_m(17), TileConfig::new(48, 64));
+        assert_eq!(node.cfg_for_m(1000), TileConfig::new(48, 64));
+        // scratch is sized over every bucket config, not just the default
+        let (sa, _) = node.scratch_needs();
+        assert!(sa >= 48, "scratch must cover the largest bucket bm, got {sa}");
+        // no cache -> no bucket table, dispatch uses the compile default
+        let bare = pack_weight("l", &w, 64, &[4, 64], PatternFamily::Tw, &opts, None).unwrap();
+        assert!(bare.bucket_cfgs.is_empty());
+        assert_eq!(bare.cfg_for_m(4), bare.cfg);
     }
 
     #[test]

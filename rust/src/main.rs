@@ -40,8 +40,11 @@ fn main() {
                  \x20 serve [--backend pjrt|native] [--workers N] [--intra-threads N] [--artifacts DIR]\n\
                  \x20       [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
                  \x20       [--plan-cache FILE] [--model bert|vgg|nmt|nano|bert-ffn]\n\
+                 \x20       [--low-latency] [--padded]\n\
                  \x20       (bert/vgg/nmt serve the graph-compiled zoo model; nano the\n\
-                 \x20        residual-MLP surrogate; bert-ffn the BERT-base FFN widths)\n\
+                 \x20        residual-MLP surrogate; bert-ffn the BERT-base FFN widths;\n\
+                 \x20        --low-latency dispatches partial batches without waiting;\n\
+                 \x20        --padded disables dynamic effective-batch execution)\n\
                  \x20 autotune [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--out FILE]\n\
                  \x20          [--threads T] [--m-cap M] [--budget-ms MS] [--quick]\n\
                  \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
@@ -181,14 +184,25 @@ fn cmd_serve(args: &[String]) -> i32 {
         ]),
         _ => Policy::Fixed("model_tw".into()),
     };
+    // --low-latency: dispatch partial batches as soon as the queue is
+    // drained; --padded: keep the historical full-B zero-padded execution
+    // (dynamic effective-batch is the default)
+    let low_latency = args.iter().any(|a| a == "--low-latency");
+    let dynamic_batch = !args.iter().any(|a| a == "--padded");
+    let batcher = if low_latency {
+        BatcherConfig::low_latency(BatcherConfig::default().max_batch)
+    } else {
+        BatcherConfig::default()
+    };
     let mut cfg = ServerConfig {
-        batcher: BatcherConfig::default(),
+        batcher,
         policy,
         variants: ServerConfig::default().variants,
         max_queue: 0,
         plan_cache: plan_cache.clone(),
         workers,
         intra_threads,
+        dynamic_batch,
     };
     let mut native_cache: Option<Arc<PlanCache>> = None;
     let started = match backend_name.as_str() {
@@ -246,8 +260,14 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     println!(
-        "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={}",
-        handle.workers, handle.batch, handle.seq, handle.d_model, handle.n_classes
+        "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={} mode={}{}",
+        handle.workers,
+        handle.batch,
+        handle.seq,
+        handle.d_model,
+        handle.n_classes,
+        if dynamic_batch { "dynamic-m" } else { "padded" },
+        if low_latency { "+low-latency" } else { "" }
     );
     let len = handle.seq * handle.d_model;
     let mut rng = Rng::new(123);
@@ -278,10 +298,21 @@ fn cmd_serve(args: &[String]) -> i32 {
     if let Some(cache) = handle.plan_cache.as_ref().or(native_cache.as_ref()) {
         println!("  plan cache: {} tuned entries loaded", cache.len());
     }
+    println!(
+        "  batches executed: {} ({} padded rows avoided by dynamic-M)",
+        snap.batches, snap.padded_rows_avoided
+    );
     for s in &snap.variants {
         println!(
-            "  {:<12} n={:<5} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms batch={:.1}",
-            s.variant, s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms, s.mean_batch
+            "  {:<12} n={:<5} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms batch={:.1} occ={:.0}%",
+            s.variant,
+            s.count,
+            s.mean_ms,
+            s.p50_ms,
+            s.p95_ms,
+            s.p99_ms,
+            s.mean_batch,
+            s.mean_occupancy * 100.0
         );
     }
     0

@@ -96,6 +96,98 @@ fn nmt_matches_masked_dense_oracle_all_patterns() {
     }
 }
 
+/// Variable-batch parity: executing `m_eff` real rows inside a batch-`B`
+/// workspace must match a freshly compiled batch-`m_eff` model at 1e-4 —
+/// weights are deterministic in the seed and independent of the batch
+/// dimension, so a dedicated small-batch compilation is the exact oracle.
+/// Checked serial and on the intra-op pool for every pattern.
+fn check_variable_batch<F>(make: F, big_batch: usize, pool: &Arc<ThreadPool>)
+where
+    F: Fn(usize) -> ModelWorkload,
+{
+    let big_wl = make(big_batch);
+    let m_effs: Vec<usize> = {
+        let mut v = vec![1, (big_batch / 2).max(1), big_batch.saturating_sub(1).max(1)];
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for pattern in PATTERNS {
+        let label = format!("{}/{:?}", big_wl.name, pattern);
+        let opts = small_opts().with_pattern(pattern);
+        let program = compile(&big_wl, &opts).unwrap_or_else(|e| panic!("{label}: compile: {e}"));
+        let dims = program.dims;
+        assert_eq!(dims.batch, big_batch, "{label}: workload batch");
+        let variant = program.variant.clone();
+        let full = deterministic_input(dims.batch * dims.per_request_len());
+        let mut serial = GraphModel::new(Arc::new(vec![program]), None).unwrap();
+        let program2 = compile(&big_wl, &small_opts().with_pattern(pattern)).unwrap();
+        let mut pooled = GraphModel::new(Arc::new(vec![program2]), Some(pool.clone())).unwrap();
+
+        for &m_eff in &m_effs {
+            // the oracle: a dedicated batch-m_eff compilation (same seed)
+            let small_wl = make(m_eff);
+            let small = compile(&small_wl, &small_opts().with_pattern(pattern)).unwrap();
+            let mut small_model = GraphModel::new(Arc::new(vec![small]), None).unwrap();
+            let prefix = &full[..m_eff * dims.per_request_len()];
+            let want = small_model.run(&variant, prefix).unwrap();
+            assert_eq!(want.len(), m_eff * dims.n_classes, "{label} m_eff={m_eff}");
+
+            let got = serial.run_batch(&variant, prefix, m_eff).unwrap();
+            assert_eq!(got.len(), want.len(), "{label} m_eff={m_eff}");
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "{label} m_eff={m_eff}: serial logit {i}: {a} vs dedicated {b}"
+                );
+            }
+            let got_pooled = pooled.run_batch(&variant, prefix, m_eff).unwrap();
+            for (i, (a, b)) in got_pooled.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "{label} m_eff={m_eff}: pooled logit {i}: {a} vs dedicated {b}"
+                );
+            }
+        }
+        // after shrinking, the full batch still executes correctly over
+        // the regrown workspace
+        let full_again = serial.run(&variant, &full).unwrap();
+        assert_eq!(full_again.len(), dims.batch * dims.n_classes, "{label}");
+        assert!(full_again.iter().all(|v| v.is_finite()), "{label}");
+    }
+}
+
+#[test]
+fn bert_variable_batch_matches_dedicated_compilation() {
+    let pool = Arc::new(ThreadPool::new(3));
+    check_variable_batch(|b| models::bert_at(b, 4, 16, 2), 4, &pool);
+}
+
+#[test]
+fn nmt_variable_batch_matches_dedicated_compilation() {
+    let pool = Arc::new(ThreadPool::new(3));
+    check_variable_batch(|b| models::nmt_at(b, 8, 3), 4, &pool);
+}
+
+#[test]
+fn vgg_variable_batch_degenerates_to_batch_one() {
+    // conv workloads serve batch 1: the only legal m_eff is 1 and it must
+    // equal the plain run; larger m_eff is a clean error
+    let workload = models::vgg16_scaled(32, 16, 32);
+    for pattern in PATTERNS {
+        let program = compile(&workload, &small_opts().with_pattern(pattern)).unwrap();
+        let dims = program.dims;
+        assert_eq!(dims.batch, 1);
+        let variant = program.variant.clone();
+        let x = deterministic_input(dims.per_request_len());
+        let mut model = GraphModel::new(Arc::new(vec![program]), None).unwrap();
+        let full = model.run(&variant, &x).unwrap();
+        let via_batch = model.run_batch(&variant, &x, 1).unwrap();
+        assert_eq!(full, via_batch, "{pattern:?}");
+        assert!(model.run_batch(&variant, &x, 2).is_err(), "{pattern:?}");
+    }
+}
+
 #[test]
 fn residual_mlp_native_backend_matches_oracle() {
     // the native backend's surrogate is "just another compiled spec":
