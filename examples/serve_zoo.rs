@@ -67,7 +67,10 @@ fn main() -> tilewise::error::Result<()> {
             if dynamic_batch { "dynamic-M" } else { "padded" }
         );
         let t0 = Instant::now();
-        let backend: Arc<dyn Backend> = Arc::new(ZooBackend::new(spec, None)?);
+        let mut zoo = ZooBackend::new(spec, None)?;
+        // per-node graph profiling: shared by every worker's model instance
+        let tele = zoo.enable_telemetry();
+        let backend: Arc<dyn Backend> = Arc::new(zoo);
         println!("packed in {:.2}s", t0.elapsed().as_secs_f64());
 
         for variant in variants {
@@ -129,6 +132,31 @@ fn main() -> tilewise::error::Result<()> {
                     snap.padded_rows_avoided
                 );
             }
+            // where the end-to-end latency went: queue-wait -> batch
+            // assembly -> pack -> execute -> respond
+            for vs in snap.stages.iter().filter(|vs| vs.variant == variant) {
+                let cols: Vec<String> = vs
+                    .stages
+                    .iter()
+                    .map(|st| format!("{} {:.2}ms", st.stage, st.mean_ms))
+                    .collect();
+                println!("    stages: {}", cols.join(" | "));
+            }
+        }
+        // Fig. 10-style attribution: the slowest GEMM nodes per variant,
+        // accumulated over everything this model just served
+        for vp in tele.variants() {
+            let mut nodes: Vec<_> = vp.nodes.iter().filter(|n| n.calls() > 0).collect();
+            nodes.sort_by(|a, b| b.secs().total_cmp(&a.secs()));
+            if nodes.is_empty() {
+                continue;
+            }
+            let top: Vec<String> = nodes
+                .iter()
+                .take(3)
+                .map(|n| format!("{} {:.2}ms ({:.1} GFLOP/s)", n.name, n.secs() * 1e3, n.gflops()))
+                .collect();
+            println!("  slowest GEMM nodes [{}]: {}", vp.variant, top.join(", "));
         }
         println!();
     }

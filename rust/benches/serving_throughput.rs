@@ -289,6 +289,25 @@ fn main() {
     }
     println!();
 
+    // ---- telemetry overhead: per-node profiling on vs off -------------
+    // same TW serving cell against a backend with the graph profiler
+    // enabled; best-of-2 on both sides damps scheduler noise.  The stage
+    // tracer is on in both cells (it always is); the delta isolates the
+    // per-op/per-node attribution cost, budgeted at <= 10% in CI.
+    section("telemetry overhead: per-node profiling on vs off (TW, 1 worker)");
+    let mut on_native = NativeBackend::new(spec.clone().with_variants(&["model_tw"]), None)
+        .expect("pack profiled model");
+    let _tele = on_native.enable_telemetry();
+    let on_backend: Arc<dyn Backend> = Arc::new(on_native);
+    let off_rps = (0..2)
+        .map(|_| run_cell(&backend, "model_tw", 1, 1, requests).rps)
+        .fold(0.0f64, f64::max);
+    let on_rps = (0..2)
+        .map(|_| run_cell(&on_backend, "model_tw", 1, 1, requests).rps)
+        .fold(0.0f64, f64::max);
+    let overhead_pct = (off_rps / on_rps.max(1e-9) - 1.0) * 100.0;
+    println!("off {off_rps:.1} req/s, on {on_rps:.1} req/s -> overhead {overhead_pct:.1}%\n");
+
     let doc = obj(vec![
         ("bench", s("serving_throughput")),
         ("backend", s("native")),
@@ -334,6 +353,14 @@ fn main() {
                     ])
                 })
                 .collect()),
+        ),
+        (
+            "telemetry",
+            obj(vec![
+                ("off_rps", num(off_rps)),
+                ("on_rps", num(on_rps)),
+                ("overhead_pct", num(overhead_pct)),
+            ]),
         ),
     ]);
     let out = "BENCH_serving.json";

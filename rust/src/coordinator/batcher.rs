@@ -44,13 +44,29 @@ impl BatcherConfig {
     }
 }
 
+/// One collected batch with its assembly timestamps, the raw material of
+/// the queue/assembly stage spans: `first_recv` is taken right after the
+/// head request arrives (closing its queue-wait span) and `assembled`
+/// when the batch is handed to the worker (closing the assembly span).
+pub struct CollectedBatch {
+    pub requests: Vec<Request>,
+    pub first_recv: Instant,
+    pub assembled: Instant,
+}
+
 /// Collect the next batch from `rx`.  Blocks for the first request (or
 /// returns `None` if the channel closed), drains whatever is already
 /// queued without blocking, then — unless `cfg.eager` — keeps waiting
 /// until the batch is full or the head request's deadline expires.
 pub fn collect_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<Request>> {
+    collect_batch_traced(rx, cfg).map(|b| b.requests)
+}
+
+/// [`collect_batch`] with the stage-tracing timestamps attached.
+pub fn collect_batch_traced(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<CollectedBatch> {
     let first = rx.recv().ok()?;
-    let deadline = Instant::now() + cfg.max_wait;
+    let first_recv = Instant::now();
+    let deadline = first_recv + cfg.max_wait;
     let mut batch = vec![first];
     // non-blocking drain of the backlog: everything already queued joins
     // this batch regardless of mode
@@ -61,7 +77,7 @@ pub fn collect_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<
         }
     }
     if cfg.eager {
-        return Some(batch);
+        return Some(CollectedBatch { requests: batch, first_recv, assembled: Instant::now() });
     }
     while batch.len() < cfg.max_batch {
         let now = Instant::now();
@@ -74,7 +90,7 @@ pub fn collect_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Vec<
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(batch)
+    Some(CollectedBatch { requests: batch, first_recv, assembled: Instant::now() })
 }
 
 /// Multi-worker variant: the worker pool shares one request channel, so
@@ -89,8 +105,16 @@ pub fn collect_batch_shared(
     rx: &Mutex<Receiver<Request>>,
     cfg: &BatcherConfig,
 ) -> Option<Vec<Request>> {
+    collect_batch_shared_traced(rx, cfg).map(|b| b.requests)
+}
+
+/// [`collect_batch_shared`] with the stage-tracing timestamps attached.
+pub fn collect_batch_shared_traced(
+    rx: &Mutex<Receiver<Request>>,
+    cfg: &BatcherConfig,
+) -> Option<CollectedBatch> {
     let guard = rx.lock().ok()?;
-    collect_batch(&guard, cfg)
+    collect_batch_traced(&guard, cfg)
 }
 
 /// Pack per-request activations into one batch tensor of `max_batch`
@@ -212,6 +236,22 @@ mod tests {
         assert_eq!(batch.len(), 4, "size bound still applies");
         let batch2 = collect_batch(&rx, &cfg).unwrap();
         assert_eq!(batch2.len(), 1);
+    }
+
+    #[test]
+    fn traced_collection_timestamps_are_ordered() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let before = Instant::now();
+        let (r, _resp) = req(1, 4);
+        tx.send(r).unwrap();
+        let cfg = BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(5), eager: false };
+        let b = collect_batch_traced(&rx, &cfg).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        // submitted <= first_recv <= assembled: the stage spans derived
+        // from these never go negative
+        assert!(b.first_recv >= b.requests[0].submitted);
+        assert!(b.first_recv >= before);
+        assert!(b.assembled >= b.first_recv);
     }
 
     #[test]

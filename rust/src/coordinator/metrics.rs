@@ -1,47 +1,92 @@
-//! Serving metrics: per-variant latency samples + counters, with
+//! Serving metrics: per-variant latency histograms + counters, with
 //! percentile snapshots for the e2e report.  Backpressure sheds are
 //! counted here too, so one snapshot shows latency percentiles *and*
 //! how much load the server refused to take.
+//!
+//! Storage is bounded and the record path is lock-free: every latency,
+//! batch-size, occupancy, and stage-span sample lands in atomic
+//! counters ([`telemetry::Histogram`] buckets or scaled-integer sums),
+//! never in a growable sample vector.  The only locks left are a
+//! read-mostly variant map (write-locked once per *new* variant name)
+//! and a small clock/per-worker mutex — nothing is sorted under a lock
+//! at snapshot time anymore.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use crate::util::{mean, percentile};
+use crate::json::{arr, num, obj, s, Json};
+use crate::telemetry::{Histogram, RequestTrace, Stage, StageStats, TraceExemplar, TraceRing};
 
+/// Bounded per-variant meters: one latency histogram, one histogram per
+/// pipeline stage, and exact scaled-integer sums for the means the
+/// reports quote exactly (batch size, occupancy).
+struct VariantMeters {
+    latency: Histogram,
+    /// Sum of per-request batch sizes (mean = rows / latency count).
+    batch_rows: AtomicU64,
+    /// Occupancy samples: count + sum scaled by 1e9 (exact to 1e-9).
+    occ_count: AtomicU64,
+    occ_scaled: AtomicU64,
+    /// One histogram per [`Stage`], indexed by `Stage::index()`.
+    stages: [Histogram; 5],
+}
+
+impl VariantMeters {
+    fn new() -> VariantMeters {
+        VariantMeters {
+            latency: Histogram::new(),
+            batch_rows: AtomicU64::new(0),
+            occ_count: AtomicU64::new(0),
+            occ_scaled: AtomicU64::new(0),
+            stages: std::array::from_fn(|_| Histogram::new()),
+        }
+    }
+
+    fn mean_occupancy(&self) -> f64 {
+        let n = self.occ_count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.occ_scaled.load(Ordering::Relaxed) as f64 / (n as f64 * 1e9)
+        }
+    }
+}
+
+/// First/last completion instants plus the per-worker completion split —
+/// the only mutex-guarded metrics state, touched once per completion.
 #[derive(Default)]
-struct Inner {
-    /// Per-variant end-to-end latency samples (seconds).
-    latency: HashMap<String, Vec<f64>>,
-    /// Per-variant batch-size samples.
-    batch_sizes: HashMap<String, Vec<f64>>,
-    /// Per-variant batch-occupancy samples (`real / B`, one per executed
-    /// batch — not per request, so mean occupancy is not skewed toward
-    /// full batches).
-    occupancy: HashMap<String, Vec<f64>>,
+struct Clock {
+    first: Option<Instant>,
+    last: Option<Instant>,
     /// Completions per worker (index = worker id), grown on demand.
     worker_completed: Vec<u64>,
-    completed: u64,
-    /// Executed batch invocations (the denominator of the occupancy
-    /// counters).
-    batches: u64,
-    /// Padding rows whose compute dynamic-M execution skipped (`B - real`
-    /// summed over dynamic batches; 0 under padded execution).
-    padded_rows_avoided: u64,
-    started_at: Option<Instant>,
 }
 
 /// Thread-safe metrics sink shared between the worker pool and clients.
 #[derive(Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
-    /// Requests shed by backpressure (outside the mutex: the shed path is
-    /// the hot rejection path and must not contend with the executors).
+    /// Per-variant meters behind a read-mostly lock: the hot path takes
+    /// the read lock, clones an `Arc`, and records lock-free; the write
+    /// lock is taken once per previously-unseen variant name.
+    variants: RwLock<HashMap<String, Arc<VariantMeters>>>,
+    clock: Mutex<Clock>,
+    completed: AtomicU64,
+    /// Executed batch invocations (the denominator of the occupancy
+    /// counters).
+    batches: AtomicU64,
+    /// Padding rows whose compute dynamic-M execution skipped (`B - real`
+    /// summed over dynamic batches; 0 under padded execution).
+    padded_rows_avoided: AtomicU64,
+    /// Requests shed by backpressure (the shed path is the hot rejection
+    /// path and must not contend with the executors).
     sheds: AtomicU64,
     /// Execute invocations that failed (one per failed batch; every
     /// request in that batch got an error `Response`).
     errors: AtomicU64,
+    /// Slow-request exemplar ring (last N traces over the threshold).
+    slow: TraceRing,
 }
 
 /// Snapshot of one variant's serving statistics.
@@ -60,9 +105,18 @@ pub struct VariantStats {
     pub mean_occupancy: f64,
 }
 
+/// One variant's per-stage span aggregates.
+#[derive(Clone, Debug)]
+pub struct VariantStageStats {
+    pub variant: String,
+    /// In [`Stage::ALL`] order: queue, assembly, pack, execute, respond.
+    pub stages: Vec<StageStats>,
+}
+
 /// Whole-server snapshot: per-variant percentiles plus the global
-/// counters (completions, backpressure sheds, errors, throughput) and the
-/// per-worker completion split.
+/// counters (completions, backpressure sheds, errors, throughput), the
+/// per-worker completion split, per-stage span aggregates, and the
+/// retained slow-request exemplars.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub variants: Vec<VariantStats>,
@@ -80,16 +134,31 @@ pub struct MetricsSnapshot {
     /// over dynamic batches) — the observable win of effective-batch
     /// serving; stays 0 under padded execution.
     pub padded_rows_avoided: u64,
+    /// Per-variant stage breakdown (queue → assembly → pack → execute →
+    /// respond), present for variants served through the traced path.
+    pub stages: Vec<VariantStageStats>,
+    /// Slow-request exemplars retained by the trace ring, oldest first.
+    pub exemplars: Vec<TraceExemplar>,
 }
 
 impl Metrics {
+    /// Resolve (or create) one variant's meters; hot path is a read
+    /// lock + `Arc` clone.
+    fn meters(&self, variant: &str) -> Arc<VariantMeters> {
+        if let Some(m) = self.variants.read().unwrap().get(variant) {
+            return Arc::clone(m);
+        }
+        let mut map = self.variants.write().unwrap();
+        Arc::clone(map.entry(variant.to_string()).or_insert_with(|| Arc::new(VariantMeters::new())))
+    }
+
     /// Pre-size the per-worker counters to the pool size, so idle workers
     /// show up as explicit zeros in snapshots (an idle/stuck worker must
     /// be distinguishable from a nonexistent one).
     pub fn reserve_workers(&self, workers: usize) {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.worker_completed.len() < workers {
-            inner.worker_completed.resize(workers, 0);
+        let mut clock = self.clock.lock().unwrap();
+        if clock.worker_completed.len() < workers {
+            clock.worker_completed.resize(workers, 0);
         }
     }
 
@@ -101,17 +170,20 @@ impl Metrics {
         batch_size: usize,
         worker: usize,
     ) {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.started_at.is_none() {
-            inner.started_at = Some(Instant::now());
+        let m = self.meters(variant);
+        m.latency.record(latency_secs);
+        m.batch_rows.fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let mut clock = self.clock.lock().unwrap();
+        if clock.first.is_none() {
+            clock.first = Some(now);
         }
-        inner.latency.entry(variant.to_string()).or_default().push(latency_secs);
-        inner.batch_sizes.entry(variant.to_string()).or_default().push(batch_size as f64);
-        if inner.worker_completed.len() <= worker {
-            inner.worker_completed.resize(worker + 1, 0);
+        clock.last = Some(now);
+        if clock.worker_completed.len() <= worker {
+            clock.worker_completed.resize(worker + 1, 0);
         }
-        inner.worker_completed[worker] += 1;
-        inner.completed += 1;
+        clock.worker_completed[worker] += 1;
     }
 
     /// Single-executor convenience (worker 0).
@@ -119,34 +191,47 @@ impl Metrics {
         self.record_for_worker(variant, latency_secs, batch_size, 0);
     }
 
+    /// Record one request's stage decomposition: each span lands in the
+    /// variant's per-stage histogram and the whole trace is offered to
+    /// the slow-request exemplar ring.
+    pub fn record_trace(&self, variant: &str, trace: RequestTrace) {
+        let m = self.meters(variant);
+        for stage in Stage::ALL {
+            m.stages[stage.index()].record(trace.stage(stage));
+        }
+        self.slow.offer(variant, trace);
+    }
+
     /// Record one executed batch invocation: occupancy sample
     /// (`real / capacity`) for `variant`, plus the padded-rows-avoided
     /// counter when the batch ran on the dynamic effective-batch path.
     pub fn record_batch(&self, variant: &str, real: usize, capacity: usize, dynamic: bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let m = self.meters(variant);
         let occ = real as f64 / capacity.max(1) as f64;
-        inner.occupancy.entry(variant.to_string()).or_default().push(occ);
-        inner.batches += 1;
+        m.occ_count.fetch_add(1, Ordering::Relaxed);
+        m.occ_scaled.fetch_add((occ * 1e9).round() as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
         if dynamic {
-            inner.padded_rows_avoided += capacity.saturating_sub(real) as u64;
+            let avoided = capacity.saturating_sub(real) as u64;
+            self.padded_rows_avoided.fetch_add(avoided, Ordering::Relaxed);
         }
     }
 
     pub fn batches(&self) -> u64 {
-        self.inner.lock().unwrap().batches
+        self.batches.load(Ordering::Relaxed)
     }
 
     pub fn padded_rows_avoided(&self) -> u64 {
-        self.inner.lock().unwrap().padded_rows_avoided
+        self.padded_rows_avoided.load(Ordering::Relaxed)
     }
 
     pub fn completed(&self) -> u64 {
-        self.inner.lock().unwrap().completed
+        self.completed.load(Ordering::Relaxed)
     }
 
     /// Completions per worker (index = worker id).
     pub fn per_worker(&self) -> Vec<u64> {
-        self.inner.lock().unwrap().worker_completed.clone()
+        self.clock.lock().unwrap().worker_completed.clone()
     }
 
     /// Count one backpressure shed (lock-free).
@@ -167,32 +252,78 @@ impl Metrics {
         self.errors.load(Ordering::Relaxed)
     }
 
-    /// Requests per second since the first recorded completion.
+    /// Retune the slow-request exemplar threshold (seconds).
+    pub fn set_slow_threshold(&self, secs: f64) {
+        self.slow.set_threshold_secs(secs);
+    }
+
+    /// Slow-request exemplars retained so far, oldest first.
+    pub fn exemplars(&self) -> Vec<TraceExemplar> {
+        self.slow.exemplars()
+    }
+
+    /// Requests per second over the first→last completion window, so an
+    /// idle tail after load stops no longer dilutes the figure.  With
+    /// fewer than two spread-out completions there is no window yet and
+    /// the old elapsed-to-now behaviour applies.
     pub fn throughput(&self) -> f64 {
-        let inner = self.inner.lock().unwrap();
-        match inner.started_at {
-            Some(t0) => inner.completed as f64 / t0.elapsed().as_secs_f64().max(1e-9),
-            None => 0.0,
+        let completed = self.completed();
+        let clock = self.clock.lock().unwrap();
+        match (clock.first, clock.last) {
+            (Some(first), Some(last)) if last > first => {
+                completed as f64 / (last - first).as_secs_f64().max(1e-9)
+            }
+            (Some(first), _) => completed as f64 / first.elapsed().as_secs_f64().max(1e-9),
+            _ => 0.0,
         }
     }
 
     pub fn snapshot(&self) -> Vec<VariantStats> {
-        let inner = self.inner.lock().unwrap();
+        let map = self.variants.read().unwrap();
         let mut out = Vec::new();
-        for (variant, lats) in &inner.latency {
-            let mut ms: Vec<f64> = lats.iter().map(|s| s * 1e3).collect();
-            let batches = inner.batch_sizes.get(variant).cloned().unwrap_or_default();
-            let occ = inner.occupancy.get(variant).cloned().unwrap_or_default();
+        for (variant, m) in map.iter() {
+            let count = m.latency.count();
+            if count == 0 {
+                continue;
+            }
             out.push(VariantStats {
                 variant: variant.clone(),
-                count: ms.len(),
-                mean_ms: mean(&ms),
-                p50_ms: percentile(&mut ms, 0.50),
-                p95_ms: percentile(&mut ms, 0.95),
-                p99_ms: percentile(&mut ms, 0.99),
-                mean_batch: mean(&batches),
-                mean_occupancy: mean(&occ),
+                count: count as usize,
+                mean_ms: m.latency.mean_secs() * 1e3,
+                p50_ms: m.latency.percentile(0.50) * 1e3,
+                p95_ms: m.latency.percentile(0.95) * 1e3,
+                p99_ms: m.latency.percentile(0.99) * 1e3,
+                mean_batch: m.batch_rows.load(Ordering::Relaxed) as f64 / count as f64,
+                mean_occupancy: m.mean_occupancy(),
             });
+        }
+        out.sort_by(|a, b| a.variant.cmp(&b.variant));
+        out
+    }
+
+    /// Per-variant stage-span aggregates for variants served through the
+    /// traced path.
+    pub fn stage_stats(&self) -> Vec<VariantStageStats> {
+        let map = self.variants.read().unwrap();
+        let mut out = Vec::new();
+        for (variant, m) in map.iter() {
+            if m.stages.iter().all(|h| h.count() == 0) {
+                continue;
+            }
+            let stages = Stage::ALL
+                .iter()
+                .map(|&stage| {
+                    let h = &m.stages[stage.index()];
+                    StageStats {
+                        stage: stage.label(),
+                        count: h.count(),
+                        mean_ms: h.mean_secs() * 1e3,
+                        p50_ms: h.percentile(0.50) * 1e3,
+                        p95_ms: h.percentile(0.95) * 1e3,
+                    }
+                })
+                .collect();
+            out.push(VariantStageStats { variant: variant.clone(), stages });
         }
         out.sort_by(|a, b| a.variant.cmp(&b.variant));
         out
@@ -210,13 +341,86 @@ impl Metrics {
             throughput_rps: self.throughput(),
             batches: self.batches(),
             padded_rows_avoided: self.padded_rows_avoided(),
+            stages: self.stage_stats(),
+            exemplars: self.exemplars(),
         }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Serialize for `serve --telemetry-json` via the in-tree `json`
+    /// module (schema in `docs/DESIGN.md` §8).
+    pub fn to_json(&self) -> Json {
+        let variants: Vec<Json> = self
+            .variants
+            .iter()
+            .map(|v| {
+                obj(vec![
+                    ("variant", s(&v.variant)),
+                    ("count", num(v.count as f64)),
+                    ("mean_ms", num(v.mean_ms)),
+                    ("p50_ms", num(v.p50_ms)),
+                    ("p95_ms", num(v.p95_ms)),
+                    ("p99_ms", num(v.p99_ms)),
+                    ("mean_batch", num(v.mean_batch)),
+                    ("mean_occupancy", num(v.mean_occupancy)),
+                ])
+            })
+            .collect();
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|vs| {
+                let rows: Vec<Json> = vs
+                    .stages
+                    .iter()
+                    .map(|st| {
+                        obj(vec![
+                            ("stage", s(st.stage)),
+                            ("count", num(st.count as f64)),
+                            ("mean_ms", num(st.mean_ms)),
+                            ("p50_ms", num(st.p50_ms)),
+                            ("p95_ms", num(st.p95_ms)),
+                        ])
+                    })
+                    .collect();
+                obj(vec![("variant", s(&vs.variant)), ("stages", arr(rows))])
+            })
+            .collect();
+        let exemplars: Vec<Json> = self
+            .exemplars
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("variant", s(&e.variant)),
+                    ("total_ms", num(e.trace.total() * 1e3)),
+                    ("queue_ms", num(e.trace.queue * 1e3)),
+                    ("assembly_ms", num(e.trace.assembly * 1e3)),
+                    ("pack_ms", num(e.trace.pack * 1e3)),
+                    ("execute_ms", num(e.trace.execute * 1e3)),
+                    ("respond_ms", num(e.trace.respond * 1e3)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("completed", num(self.completed as f64)),
+            ("sheds", num(self.sheds as f64)),
+            ("errors", num(self.errors as f64)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("batches", num(self.batches as f64)),
+            ("padded_rows_avoided", num(self.padded_rows_avoided as f64)),
+            ("per_worker", arr(self.per_worker.iter().map(|&w| num(w as f64)).collect())),
+            ("variants", arr(variants)),
+            ("stages", arr(stages)),
+            ("slow_exemplars", arr(exemplars)),
+        ])
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn snapshot_percentiles() {
@@ -319,5 +523,75 @@ mod tests {
         assert_eq!(snap.errors, 2);
         assert_eq!(snap.completed, 1);
         assert_eq!(m.errors(), 2);
+    }
+
+    #[test]
+    fn throughput_uses_completion_window_not_idle_tail() {
+        let m = Metrics::default();
+        m.record("model_tw", 0.001, 1);
+        std::thread::sleep(Duration::from_millis(20));
+        m.record("model_tw", 0.001, 1);
+        let busy = m.throughput();
+        // 2 completions ~20ms apart: ~100 rps over the completion window
+        assert!(busy > 20.0, "window throughput {busy}");
+        std::thread::sleep(Duration::from_millis(120));
+        let idle = m.throughput();
+        // the idle tail must not dilute the figure (the old elapsed-to-now
+        // computation would report ~2/0.14s ≈ 14 rps here)
+        assert!((idle - busy).abs() < 1e-9, "idle tail changed throughput: {busy} -> {idle}");
+    }
+
+    #[test]
+    fn stage_spans_sum_to_end_to_end_latency() {
+        let m = Metrics::default();
+        let trace = RequestTrace {
+            queue: 0.004,
+            assembly: 0.001,
+            pack: 0.0005,
+            execute: 0.010,
+            respond: 0.0005,
+        };
+        m.record("model_tw", trace.total(), 4);
+        m.record_trace("model_tw", trace);
+        let snap = m.full_snapshot();
+        let vs = snap.stages.iter().find(|v| v.variant == "model_tw").expect("stage stats");
+        assert_eq!(vs.stages.len(), 5);
+        assert_eq!(vs.stages[0].stage, "queue");
+        // stage means are exact (nanosecond sums), so their sum reproduces
+        // the recorded end-to-end latency
+        let sum_ms: f64 = vs.stages.iter().map(|st| st.mean_ms).sum();
+        let total_ms = trace.total() * 1e3;
+        let drift = (sum_ms - total_ms).abs() / total_ms;
+        assert!(drift < 0.01, "stage sum {sum_ms} vs e2e {total_ms}");
+        // the variant latency percentile agrees with the trace total
+        // within bucket resolution
+        let v = snap.variants.iter().find(|v| v.variant == "model_tw").unwrap();
+        assert!((v.p50_ms - total_ms).abs() / total_ms < 0.05);
+    }
+
+    #[test]
+    fn slow_traces_surface_as_exemplars() {
+        let m = Metrics::default();
+        m.set_slow_threshold(0.005);
+        m.record_trace("model_tw", RequestTrace { execute: 0.001, ..Default::default() });
+        m.record_trace("model_tw", RequestTrace { execute: 0.050, ..Default::default() });
+        let snap = m.full_snapshot();
+        assert_eq!(snap.exemplars.len(), 1, "only the slow trace is retained");
+        assert_eq!(snap.exemplars[0].variant, "model_tw");
+        let json = snap.to_json().to_string();
+        assert!(json.contains("slow_exemplars"), "{json}");
+        assert!(json.contains("\"stages\""), "{json}");
+    }
+
+    #[test]
+    fn snapshot_of_variant_with_counters_but_no_latency_does_not_panic() {
+        // regression: util::percentile used to assert on empty input; a
+        // variant that only recorded batches (no completions yet) must
+        // snapshot cleanly and stay invisible in the variant list
+        let m = Metrics::default();
+        m.record_batch("model_tw", 4, 8, true);
+        let snap = m.full_snapshot();
+        assert!(snap.variants.is_empty());
+        assert_eq!(snap.batches, 1);
     }
 }

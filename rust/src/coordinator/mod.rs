@@ -10,8 +10,11 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{collect_batch, collect_batch_shared, pack_batch, BatcherConfig};
-pub use metrics::{Metrics, MetricsSnapshot, VariantStats};
+pub use batcher::{
+    collect_batch, collect_batch_shared, collect_batch_shared_traced, collect_batch_traced,
+    pack_batch, BatcherConfig, CollectedBatch,
+};
+pub use metrics::{Metrics, MetricsSnapshot, VariantStageStats, VariantStats};
 pub use request::{Request, Response};
 pub use router::{Policy, Router};
 pub use server::{start, start_with_backend, ServerConfig, ServerHandle};

@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
-use super::batcher::{collect_batch_shared, pack_batch, BatcherConfig};
+use super::batcher::{collect_batch_shared_traced, pack_batch, BatcherConfig, CollectedBatch};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::router::{Policy, Router};
@@ -23,6 +23,8 @@ use crate::anyhow;
 use crate::autotune::PlanCache;
 use crate::error::Result;
 use crate::exec::{Backend, ModelDims, PjrtBackend};
+use crate::pool::{LaneStats, ThreadPool};
+use crate::telemetry::RequestTrace;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -86,6 +88,9 @@ pub struct ServerHandle {
     queue_depth: Arc<AtomicUsize>,
     joins: Vec<std::thread::JoinHandle<()>>,
     max_queue: usize,
+    /// The shared intra-op kernel pool, kept for lane telemetry
+    /// (`None` when `intra_threads <= 1`).
+    intra: Option<Arc<ThreadPool>>,
     /// How many workers the pool runs.
     pub workers: usize,
     pub seq: usize,
@@ -99,6 +104,13 @@ impl ServerHandle {
     /// `Metrics::full_snapshot`).
     pub fn shed_count(&self) -> u64 {
         self.metrics.sheds()
+    }
+
+    /// Per-lane busy/idle split of the shared intra-op kernel pool, when
+    /// one exists (`intra_threads > 1`): lane 0 folds the submitting
+    /// serving workers together, lanes 1.. are the pinned pool workers.
+    pub fn intra_lane_stats(&self) -> Option<Vec<LaneStats>> {
+        self.intra.as_ref().map(|p| p.lane_stats())
     }
 
     /// Submit with backpressure: sheds (returns None) when the queue is
@@ -221,8 +233,8 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
     // (each submitter is a lane of its own job; the pool adds
     // intra_threads-1 shared helpers) no matter how deep the queue gets
     // (two-level model, DESIGN.md §5)
-    let intra: Option<Arc<crate::pool::ThreadPool>> = (cfg.intra_threads > 1)
-        .then(|| Arc::new(crate::pool::ThreadPool::new(cfg.intra_threads)));
+    let intra: Option<Arc<ThreadPool>> =
+        (cfg.intra_threads > 1).then(|| Arc::new(ThreadPool::new(cfg.intra_threads)));
 
     let mut joins = Vec::with_capacity(workers);
     let dynamic_batch = cfg.dynamic_batch;
@@ -261,7 +273,9 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
                     // per-worker router: RoundRobin/Adaptive state is local
                     // to each worker (resolved policies are deterministic)
                     let mut router = Router::new(policy);
-                    while let Some(batch_reqs) = collect_batch_shared(&rx, &batcher_cfg) {
+                    while let Some(CollectedBatch { requests: batch_reqs, first_recv, assembled }) =
+                        collect_batch_shared_traced(&rx, &batcher_cfg)
+                    {
                         // the true coalesced size every response reports
                         let real = batch_reqs.len().min(dims.batch);
                         let depth = queue_depth2
@@ -297,6 +311,7 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
                                         real,
                                         wid,
                                     );
+                                    let t_resp = Instant::now();
                                     let _ = req.respond_to.send(Response {
                                         id: req.id,
                                         logits: logits[i * n_classes..(i + 1) * n_classes]
@@ -307,6 +322,24 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
                                         batch_size: real,
                                         error: None,
                                     });
+                                    // stage decomposition: queue-wait ends
+                                    // at the head recv, assembly at batch
+                                    // handoff, pack at execute start;
+                                    // saturating math keeps requests that
+                                    // joined mid-assembly non-negative
+                                    let arrived = first_recv.max(req.submitted);
+                                    let trace = RequestTrace {
+                                        queue: first_recv
+                                            .saturating_duration_since(req.submitted)
+                                            .as_secs_f64(),
+                                        assembly: assembled
+                                            .saturating_duration_since(arrived)
+                                            .as_secs_f64(),
+                                        pack: t0.saturating_duration_since(assembled).as_secs_f64(),
+                                        execute: exec_secs,
+                                        respond: t_resp.elapsed().as_secs_f64(),
+                                    };
+                                    metrics2.record_trace(&variant, trace);
                                 }
                             }
                             Err(e) => {
@@ -366,6 +399,7 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
         queue_depth,
         joins,
         max_queue: cfg.max_queue,
+        intra,
         workers,
         seq: dims.seq,
         d_model: dims.d_model,
@@ -492,6 +526,41 @@ mod tests {
             assert!(rx.recv().unwrap().is_ok());
         }
         assert_eq!(pooled.metrics.errors(), 0);
+    }
+
+    #[test]
+    fn serving_records_stage_traces() {
+        let handle = start_native(ServerConfig::default());
+        let len = handle.seq * handle.d_model;
+        for _ in 0..4 {
+            let resp = handle.infer(vec![0.1; len], Some("model_tw".into())).unwrap();
+            assert!(resp.is_ok());
+        }
+        let snap = handle.metrics.full_snapshot();
+        let tw = snap.stages.iter().find(|s| s.variant == "model_tw").expect("traced variant");
+        // every stage histogram saw all four requests, and the dominant
+        // stages carry real time
+        for stage in &tw.stages {
+            assert_eq!(stage.count, 4, "{}", stage.stage);
+            assert!(stage.mean_ms >= 0.0 && stage.p95_ms >= stage.p50_ms * 0.5, "{stage:?}");
+        }
+        let execute = tw.stages.iter().find(|s| s.stage == "execute").unwrap();
+        assert!(execute.mean_ms > 0.0, "execute span must be non-trivial: {execute:?}");
+        // no intra pool configured -> no lane telemetry
+        assert!(handle.intra_lane_stats().is_none());
+    }
+
+    #[test]
+    fn intra_pool_lane_stats_surface_through_the_handle() {
+        let cfg = ServerConfig { intra_threads: 2, ..Default::default() };
+        let handle = start_native(cfg);
+        let len = handle.seq * handle.d_model;
+        for _ in 0..4 {
+            assert!(handle.infer(vec![0.2; len], Some("model_tw".into())).unwrap().is_ok());
+        }
+        let lanes = handle.intra_lane_stats().expect("intra pool exists");
+        assert_eq!(lanes.len(), 2);
+        assert!(lanes.iter().all(|l| l.busy_secs >= 0.0 && l.idle_secs >= 0.0), "{lanes:?}");
     }
 
     #[test]

@@ -197,6 +197,9 @@ fn residual_mlp_program(
 pub struct NativeBackend {
     dims: ModelDims,
     programs: Arc<Vec<GraphProgram>>,
+    /// Per-node/per-op profiling sink shared by every model instance this
+    /// backend loads; `None` (the default) keeps the hot path unprofiled.
+    telemetry: Option<Arc<crate::telemetry::Telemetry>>,
 }
 
 impl NativeBackend {
@@ -226,17 +229,26 @@ impl NativeBackend {
             programs.push(residual_mlp_program(&spec, name, plan_cache.as_ref())?);
         }
         let dims = programs[0].dims;
-        Ok(NativeBackend { dims, programs: Arc::new(programs) })
+        Ok(NativeBackend { dims, programs: Arc::new(programs), telemetry: None })
     }
 
     pub fn dims(&self) -> ModelDims {
         self.dims
     }
 
+    /// Turn on per-node/per-op profiling for every model instance this
+    /// backend loads from here on, returning the shared sink.  Call
+    /// before handing the backend to the server (i.e. before `Arc`-ing).
+    pub fn enable_telemetry(&mut self) -> Arc<crate::telemetry::Telemetry> {
+        let tele = Arc::new(crate::telemetry::Telemetry::new());
+        self.telemetry = Some(tele.clone());
+        tele
+    }
+
     /// Build one per-worker model instance; `intra` is the shared intra-op
     /// kernel pool (None = serial kernels at their tuned/default configs).
     fn load_native(&self, intra: Option<Arc<ThreadPool>>) -> Result<GraphModel> {
-        GraphModel::new(self.programs.clone(), intra)
+        GraphModel::with_telemetry(self.programs.clone(), intra, self.telemetry.clone())
     }
 }
 

@@ -121,6 +121,9 @@ impl ZooSpec {
 pub struct ZooBackend {
     dims: ModelDims,
     programs: Arc<Vec<GraphProgram>>,
+    /// Per-node/per-op profiling sink shared by every model instance this
+    /// backend loads; `None` (the default) keeps the hot path unprofiled.
+    telemetry: Option<Arc<crate::telemetry::Telemetry>>,
 }
 
 impl ZooBackend {
@@ -136,7 +139,7 @@ impl ZooBackend {
             programs.push(compile(&workload, &opts.with_pattern(pattern))?);
         }
         let dims = programs[0].dims;
-        Ok(ZooBackend { dims, programs: Arc::new(programs) })
+        Ok(ZooBackend { dims, programs: Arc::new(programs), telemetry: None })
     }
 
     pub fn dims(&self) -> ModelDims {
@@ -147,6 +150,19 @@ impl ZooBackend {
     pub fn programs(&self) -> Arc<Vec<GraphProgram>> {
         self.programs.clone()
     }
+
+    /// Turn on per-node/per-op profiling for every model instance this
+    /// backend loads from here on, returning the shared sink.  Call
+    /// before handing the backend to the server (i.e. before `Arc`-ing).
+    pub fn enable_telemetry(&mut self) -> Arc<crate::telemetry::Telemetry> {
+        let tele = Arc::new(crate::telemetry::Telemetry::new());
+        self.telemetry = Some(tele.clone());
+        tele
+    }
+
+    fn load_graph(&self, intra: Option<Arc<ThreadPool>>) -> Result<GraphModel> {
+        GraphModel::with_telemetry(self.programs.clone(), intra, self.telemetry.clone())
+    }
 }
 
 impl Backend for ZooBackend {
@@ -155,11 +171,11 @@ impl Backend for ZooBackend {
     }
 
     fn load(&self) -> Result<Box<dyn PreparedModel>> {
-        Ok(Box::new(GraphModel::new(self.programs.clone(), None)?))
+        Ok(Box::new(self.load_graph(None)?))
     }
 
     fn load_with_intra(&self, intra: Option<Arc<ThreadPool>>) -> Result<Box<dyn PreparedModel>> {
-        Ok(Box::new(GraphModel::new(self.programs.clone(), intra)?))
+        Ok(Box::new(self.load_graph(intra)?))
     }
 }
 
@@ -243,6 +259,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn enabled_telemetry_profiles_served_forwards() {
+        let mut backend = ZooBackend::new(tiny("bert"), None).unwrap();
+        let tele = backend.enable_telemetry();
+        let mut m = backend.load().unwrap();
+        let dims = m.dims();
+        let packed = vec![0.1f32; dims.batch * dims.per_request_len()];
+        m.run("model_tw", &packed).unwrap();
+        let prof = tele.variant("model_tw").expect("variant registered at load");
+        assert_eq!(prof.forwards(), 1);
+        assert!(prof.nodes.iter().any(|n| n.calls() > 0), "GEMM nodes attributed");
+        // sibling variants are registered but untouched until they serve
+        assert_eq!(tele.variant("model_dense").unwrap().forwards(), 0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! with an empty matrix, no allocation) to satisfy the borrow checker.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::error::Result;
 use crate::exec::{ModelDims, PreparedModel};
@@ -14,9 +15,11 @@ use crate::gemm::{
     tvw_effective_parallel_threads, tvw_matmul_into_scratch, tvw_matmul_parallel_into,
     tw_effective_parallel_threads, tw_matmul_into_scratch, tw_matmul_parallel_into,
     vw24_effective_parallel_threads, vw24_matmul_into_with, vw24_matmul_parallel_into, GemmScratch,
+    TileConfig,
 };
 use crate::nn::{attention_into, im2col_into, lstm_gate_update, AttnScratch, ImgSrc};
 use crate::pool::ThreadPool;
+use crate::telemetry::{OpKind, Telemetry, VariantProfile};
 use crate::tensor::Matrix;
 use crate::{anyhow, ensure};
 
@@ -80,6 +83,16 @@ fn put(bufs: &mut [Matrix], id: BufId, m: Matrix) {
     bufs[id.0] = m;
 }
 
+/// What [`run_gemm`] actually dispatched: the bucket-resolved tile
+/// config and the effective intra-op lane count (1 when the problem was
+/// too small to split or no pool was attached).  The profiler records
+/// this per node; callers that don't profile just drop it.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmDispatch {
+    pub cfg: TileConfig,
+    pub threads: usize,
+}
+
 /// Dispatch one packed GEMM into `c` (fully overwritten).  With an
 /// intra-op pool each family runs its pool-parallel path — row bands
 /// (dense), condensed-tile ranges (TW/TVW), column blocks (2:4).  The
@@ -95,19 +108,21 @@ pub fn run_gemm(
     c: &mut Matrix,
     intra: Option<&ThreadPool>,
     scratch: &mut GemmScratch,
-) {
+) -> GemmDispatch {
     let threads = intra.map_or(1, ThreadPool::threads);
     // dynamic-M dispatch: the bucket table resolved at pack time picks the
     // blocking tuned for this effective row count (falling back to the
     // compile default); `a.rows` already reflects the live batch prefix
-    let cfg = &node.cfg_for_m(a.rows);
-    match &node.weight {
+    let cfg = node.cfg_for_m(a.rows);
+    let used = match &node.weight {
         PackedWeight::Dense(w) => {
             let eff = effective_parallel_threads(a.rows, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                matmul_parallel_into(a, w, c, cfg, threads, pool);
+                matmul_parallel_into(a, w, c, &cfg, threads, pool);
+                eff
             } else {
-                matmul_tiled_into(a, w, c, cfg);
+                matmul_tiled_into(a, w, c, &cfg);
+                1
             }
         }
         PackedWeight::Tw(p) => {
@@ -115,28 +130,35 @@ pub fn run_gemm(
             c.data.fill(0.0);
             let eff = tw_effective_parallel_threads(p.tiles, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                tw_matmul_parallel_into(a, p, c, cfg, threads, pool);
+                tw_matmul_parallel_into(a, p, c, &cfg, threads, pool);
+                eff
             } else {
-                tw_matmul_into_scratch(a, p, c, cfg, scratch);
+                tw_matmul_into_scratch(a, p, c, &cfg, scratch);
+                1
             }
         }
         PackedWeight::Tvw(p) => {
             let eff = tvw_effective_parallel_threads(p.tiles, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                tvw_matmul_parallel_into(a, p, c, cfg, threads, pool);
+                tvw_matmul_parallel_into(a, p, c, &cfg, threads, pool);
+                eff
             } else {
-                tvw_matmul_into_scratch(a, p, c, cfg, scratch);
+                tvw_matmul_into_scratch(a, p, c, &cfg, scratch);
+                1
             }
         }
         PackedWeight::Vw24(p) => {
             let eff = vw24_effective_parallel_threads(p.n, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                vw24_matmul_parallel_into(a, p, c, cfg, threads, pool);
+                vw24_matmul_parallel_into(a, p, c, &cfg, threads, pool);
+                eff
             } else {
-                vw24_matmul_into_with(a, p, c, cfg);
+                vw24_matmul_into_with(a, p, c, &cfg);
+                1
             }
         }
-    }
+    };
+    GemmDispatch { cfg, threads: used }
 }
 
 /// Variable-M execution: resize the batch-scaled buffers to `m_eff`
@@ -158,13 +180,54 @@ pub fn execute_batch(
 /// request batch into `ws.buf_mut(p.input)` beforehand and reads the
 /// logits from `ws.buf(p.output)` afterwards.
 pub fn execute(p: &GraphProgram, ws: &mut Workspace, intra: Option<&ThreadPool>) {
+    execute_with(p, ws, intra, None);
+}
+
+/// Record one GEMM dispatch against its node profile.
+fn note_gemm(
+    pr: &VariantProfile,
+    node: &GemmNode,
+    w: usize,
+    m: usize,
+    started: Instant,
+    d: &GemmDispatch,
+) {
+    pr.nodes[w].record(
+        m,
+        started.elapsed().as_nanos() as u64,
+        node.flops(m),
+        d.cfg.bm(),
+        d.cfg.bk(),
+        d.threads,
+    );
+}
+
+/// [`execute`] with optional per-node profiling: when `prof` is `Some`,
+/// every op's wall time is attributed to its [`OpKind`] and every GEMM
+/// dispatch (including the LSTM gate GEMM) to its weight-table node —
+/// two `Instant` reads per op.  When `None`, each op pays one branch on
+/// the option and nothing else, so the disabled path stays at kernel
+/// speed.
+pub fn execute_with(
+    p: &GraphProgram,
+    ws: &mut Workspace,
+    intra: Option<&ThreadPool>,
+    prof: Option<&VariantProfile>,
+) {
     assert_eq!(ws.bufs.len(), p.buf_shapes.len(), "workspace built for a different program");
     let Workspace { bufs, scratch } = ws;
+    let t_fwd = prof.map(|_| Instant::now());
     for op in &p.ops {
+        let t_op = prof.map(|_| Instant::now());
         match op {
             Op::Gemm { input, w, out } => {
                 let mut c = take(bufs, *out);
-                run_gemm(&bufs[input.0], &p.weights[*w], &mut c, intra, scratch);
+                let m = bufs[input.0].rows;
+                let t = prof.map(|_| Instant::now());
+                let d = run_gemm(&bufs[input.0], &p.weights[*w], &mut c, intra, scratch);
+                if let (Some(pr), Some(t0)) = (prof, t) {
+                    note_gemm(pr, &p.weights[*w], *w, m, t0, &d);
+                }
                 put(bufs, *out, c);
             }
             Op::BiasAct { buf, bias, act } => {
@@ -301,7 +364,12 @@ pub fn execute(p: &GraphProgram, ws: &mut Workspace, intra: Option<&ThreadPool>)
                         row[..hid].copy_from_slice(x_t);
                         row[hid..].copy_from_slice(hb.row(i));
                     }
-                    run_gemm(&xhb, &p.weights[*w], &mut gb, intra, scratch);
+                    let m = xhb.rows;
+                    let t = prof.map(|_| Instant::now());
+                    let d = run_gemm(&xhb, &p.weights[*w], &mut gb, intra, scratch);
+                    if let (Some(pr), Some(t0)) = (prof, t) {
+                        note_gemm(pr, &p.weights[*w], *w, m, t0, &d);
+                    }
                     lstm_gate_update(&gb, &p.biases[*bias], hid, &mut hb, &mut cb);
                 }
                 put(bufs, *xh, xhb);
@@ -353,6 +421,12 @@ pub fn execute(p: &GraphProgram, ws: &mut Workspace, intra: Option<&ThreadPool>)
                 bufs[buf.0].data.fill(0.0);
             }
         }
+        if let (Some(pr), Some(t0)) = (prof, t_op) {
+            pr.record_op(OpKind::of(op), t0.elapsed().as_nanos() as u64);
+        }
+    }
+    if let (Some(pr), Some(t0)) = (prof, t_fwd) {
+        pr.record_forward(t0.elapsed().as_nanos() as u64);
     }
 }
 
@@ -365,12 +439,27 @@ pub struct GraphModel {
     /// Shared intra-op kernel pool; `None` = serial kernels at their
     /// tuned/default tile configs.
     intra: Option<Arc<ThreadPool>>,
+    /// Shared profiling handle; `None` keeps every timing site to one
+    /// branch per op.
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl GraphModel {
     pub fn new(
         programs: Arc<Vec<GraphProgram>>,
         intra: Option<Arc<ThreadPool>>,
+    ) -> Result<GraphModel> {
+        GraphModel::with_telemetry(programs, intra, None)
+    }
+
+    /// Like [`GraphModel::new`] but attaching a [`Telemetry`] handle:
+    /// the handle grows one [`VariantProfile`] per program (idempotent,
+    /// so workers sharing a handle share the counters) and every forward
+    /// records per-op and per-GEMM-node attribution into it.
+    pub fn with_telemetry(
+        programs: Arc<Vec<GraphProgram>>,
+        intra: Option<Arc<ThreadPool>>,
+        telemetry: Option<Arc<Telemetry>>,
     ) -> Result<GraphModel> {
         ensure!(!programs.is_empty(), "graph model needs at least one compiled variant");
         let first = &programs[0];
@@ -389,7 +478,10 @@ impl GraphModel {
         }
         let mut ws = Workspace::for_program(first);
         ws.scratch = GemmScratch::with_capacity(sa, sc);
-        Ok(GraphModel { programs, ws, intra })
+        if let Some(tele) = &telemetry {
+            tele.register_programs(&programs);
+        }
+        Ok(GraphModel { programs, ws, intra, telemetry })
     }
 
     /// Shared variable-M execution: `packed` holds exactly `m_eff`
@@ -417,7 +509,11 @@ impl GraphModel {
         let input = self.ws.buf_mut(p.input);
         debug_assert_eq!(input.data.len(), packed.len(), "input buffer matches request layout");
         input.data.copy_from_slice(packed);
-        execute(p, &mut self.ws, self.intra.as_deref());
+        // resolve the profile once per forward (an Arc clone behind a read
+        // lock), never per op; `None` when telemetry is off or the variant
+        // is unregistered
+        let prof = self.telemetry.as_ref().and_then(|t| t.variant(variant));
+        execute_with(p, &mut self.ws, self.intra.as_deref(), prof.as_deref());
         Ok(self.ws.buf(p.output).data.clone())
     }
 }
@@ -444,5 +540,84 @@ impl PreparedModel for GraphModel {
 
     fn supports_dynamic_batch(&self) -> bool {
         true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{compile, CompileOptions, GraphPattern, PackOptions};
+    use crate::models;
+
+    fn tiny_bert(pattern: GraphPattern) -> GraphProgram {
+        let wl = models::bert_at(2, 4, 16, 1);
+        let opts = CompileOptions {
+            seq: 4,
+            heads: 4,
+            n_classes: 4,
+            pack: PackOptions { sparsity: 0.75, g: 8 },
+            ..CompileOptions::default()
+        };
+        compile(&wl, &opts.with_pattern(pattern)).unwrap()
+    }
+
+    #[test]
+    fn profiled_forward_attributes_ops_and_nodes() {
+        let tele = Arc::new(Telemetry::new());
+        let p = tiny_bert(GraphPattern::Tw);
+        let mut model =
+            GraphModel::with_telemetry(Arc::new(vec![p]), None, Some(Arc::clone(&tele))).unwrap();
+        let x: Vec<f32> = (0..2 * 4 * 16).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+        model.run("model_tw", &x).unwrap();
+        model.run("model_tw", &x).unwrap();
+
+        let prof = tele.variant("model_tw").expect("variant registered at load");
+        assert_eq!(prof.forwards(), 2);
+        assert!(prof.op_calls(OpKind::Gemm) > 0, "transformer forwards hit GEMM ops");
+        assert!(prof.op_calls(OpKind::Attention) > 0);
+        let node_calls: u64 = prof.nodes.iter().map(|n| n.calls()).sum();
+        assert!(node_calls > 0, "per-node dispatches recorded");
+        for n in prof.nodes.iter().filter(|n| n.calls() > 0) {
+            let (m, bm, bk, threads) = n.last_dispatch();
+            assert!(m > 0, "{}: live rows recorded", n.name);
+            assert!(bm > 0 && bk > 0, "{}: dispatched tile config recorded", n.name);
+            assert_eq!(threads, 1, "{}: serial model reports one lane", n.name);
+            assert!(n.flops() > 0, "{}: FLOP accounting", n.name);
+        }
+        // op spans nest inside the forward span, so attributed time can
+        // never exceed it; on a micro model the inter-op timer gaps can
+        // eat a visible share, hence the relaxed floor (the 20% bound is
+        // enforced on real models by the `profile` subcommand)
+        let cov = prof.attributed_secs() / prof.forward_secs().max(1e-12);
+        assert!(cov > 0.3 && cov <= 1.0 + 1e-9, "attribution coverage {cov}");
+    }
+
+    #[test]
+    fn telemetry_does_not_change_logits() {
+        let x: Vec<f32> = (0..2 * 4 * 16).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+        let mut plain =
+            GraphModel::new(Arc::new(vec![tiny_bert(GraphPattern::Tvw)]), None).unwrap();
+        let tele = Arc::new(Telemetry::new());
+        let mut profiled = GraphModel::with_telemetry(
+            Arc::new(vec![tiny_bert(GraphPattern::Tvw)]),
+            None,
+            Some(tele),
+        )
+        .unwrap();
+        let a = plain.run("model_tvw", &x).unwrap();
+        let b = profiled.run("model_tvw", &x).unwrap();
+        assert_eq!(a, b, "profiling must be observation-only");
+    }
+
+    #[test]
+    fn run_gemm_reports_the_bucket_dispatch() {
+        let p = tiny_bert(GraphPattern::Dense);
+        let mut ws = Workspace::for_program(&p);
+        let node = &p.weights[0];
+        let a = Matrix::zeros(2, node.k);
+        let mut c = Matrix::zeros(2, node.n);
+        let d = run_gemm(&a, node, &mut c, None, &mut ws.scratch);
+        assert_eq!((d.cfg.bm(), d.cfg.bk()), (node.cfg_for_m(2).bm(), node.cfg_for_m(2).bk()));
+        assert_eq!(d.threads, 1, "no pool attached: one lane");
     }
 }

@@ -34,7 +34,7 @@ pub mod ir;
 pub mod pack;
 
 pub use compile::{batch_buckets, compile, CompileOptions};
-pub use exec::{execute, execute_batch, run_gemm, GraphModel, Workspace};
+pub use exec::{execute, execute_batch, execute_with, run_gemm, GemmDispatch, GraphModel, Workspace};
 pub use ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
 pub use pack::{pack_weight, resolve_tile, GemmNode, GraphPattern, PackOptions, PackedWeight};
 

@@ -105,6 +105,20 @@ impl GemmNode {
             .unwrap_or(self.cfg)
     }
 
+    /// Useful floating-point work one dispatch at `m` activation rows
+    /// performs — the numerator of the profiler's achieved-GFLOP/s.
+    /// Dense counts the full `2·m·k·n`; TW/TVW count only the surviving
+    /// condensed columns (the plans' own accounting); 2:4 is exactly half
+    /// dense by construction.
+    pub fn flops(&self, m: usize) -> u64 {
+        match &self.weight {
+            PackedWeight::Dense(_) => 2 * (m * self.k * self.n) as u64,
+            PackedWeight::Tw(p) => p.flops(m) as u64,
+            PackedWeight::Tvw(p) => p.flops(m) as u64,
+            PackedWeight::Vw24(_) => (m * self.k * self.n) as u64,
+        }
+    }
+
     /// Serial-kernel scratch this node needs: `(a_gather, c_tile)` staging
     /// lengths (see [`crate::gemm::GemmScratch`]); dense and 2:4 kernels
     /// stage nothing.  Sized over the compile config *and* every bucket

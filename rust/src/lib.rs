@@ -33,6 +33,10 @@
 //!   native/zoo backends that run the CPU kernels in-process
 //! - [`coordinator`] — serving layer: router, dynamic batcher, worker
 //!   pool, metrics, tuned-plan routing
+//! - [`telemetry`] — lock-free log-scale latency histograms,
+//!   request-stage tracing (queue → assembly → pack → execute →
+//!   respond) with slow-request exemplars, and per-GEMM-node graph
+//!   profiling for Fig. 10-style time attribution
 //! - [`figures`] — regeneration harnesses for every paper figure
 //! - [`error`] — in-tree `anyhow`-subset error type (offline registry)
 
@@ -53,5 +57,6 @@ pub mod pruner;
 pub mod quant;
 pub mod runtime;
 pub mod sparse;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;

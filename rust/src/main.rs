@@ -3,6 +3,7 @@
 //!
 //! Subcommands (hand-rolled parser; the offline registry has no clap):
 //!   serve             run the serving stack with a synthetic open-loop client
+//!   profile           per-GEMM-node attribution of the zoo models (Fig. 10 style)
 //!   autotune          tune a model zoo entry's GEMMs, write the plan cache
 //!   figure <id|all>   regenerate a paper figure (fig6a..fig11, headline)
 //!   inspect-patterns  print the Fig. 9 mask heatmaps + statistics
@@ -10,7 +11,9 @@
 //!   simulate          one-off gpusim query (shape x pattern x sparsity)
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use tilewise::autotune::{MeasureOpts, PatternFamily, PlanCache, Tuner, TunerOpts};
 use tilewise::coordinator::{start, start_with_backend, BatcherConfig, Policy, ServerConfig};
@@ -19,6 +22,7 @@ use tilewise::figures::{fig10, fig6, fig7, fig8, fig9, headline};
 use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
 use tilewise::models::{self, ModelWorkload};
 use tilewise::sparse::Pattern;
+use tilewise::telemetry::Telemetry;
 use tilewise::tensor::Matrix;
 use tilewise::util::Rng;
 
@@ -26,6 +30,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
         Some("autotune") => cmd_autotune(&args[1..]),
         Some("figure") => cmd_figure(&args[1..]),
         Some("inspect-patterns") => cmd_inspect(),
@@ -40,11 +45,15 @@ fn main() {
                  \x20 serve [--backend pjrt|native] [--workers N] [--intra-threads N] [--artifacts DIR]\n\
                  \x20       [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
                  \x20       [--plan-cache FILE] [--model bert|vgg|nmt|nano|bert-ffn]\n\
-                 \x20       [--low-latency] [--padded]\n\
+                 \x20       [--low-latency] [--padded] [--telemetry-json FILE]\n\
                  \x20       (bert/vgg/nmt serve the graph-compiled zoo model; nano the\n\
                  \x20        residual-MLP surrogate; bert-ffn the BERT-base FFN widths;\n\
                  \x20        --low-latency dispatches partial batches without waiting;\n\
-                 \x20        --padded disables dynamic effective-batch execution)\n\
+                 \x20        --padded disables dynamic effective-batch execution;\n\
+                 \x20        --telemetry-json dumps metrics + graph profile periodically)\n\
+                 \x20 profile [--model bert|vgg|nmt] [--runs N] [--intra-threads N] [--out FILE]\n\
+                 \x20         (per-GEMM-node time/FLOPs attribution across all variants;\n\
+                 \x20          default sweeps bert+vgg+nmt into BENCH_profile.json)\n\
                  \x20 autotune [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--out FILE]\n\
                  \x20          [--threads T] [--m-cap M] [--budget-ms MS] [--quick]\n\
                  \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
@@ -152,6 +161,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let requests: usize = flag(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
     let rate: f64 = flag(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(50.0);
     let plan_cache = flag(args, "--plan-cache").map(PathBuf::from);
+    let telemetry_json = flag(args, "--telemetry-json").map(PathBuf::from);
     let policy = match flag(args, "--policy").as_deref() {
         Some("dense") => Policy::Fixed("model_dense".into()),
         Some("tvw") => Policy::Fixed("model_tvw".into()),
@@ -205,6 +215,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         dynamic_batch,
     };
     let mut native_cache: Option<Arc<PlanCache>> = None;
+    // graph-level per-node profiling sink, populated when --telemetry-json
+    // is set and the backend executes through the graph IR
+    let mut graph_tele: Option<Arc<Telemetry>> = None;
+    let want_tele = telemetry_json.is_some();
     let started = match backend_name.as_str() {
         "pjrt" => start(&dir, cfg),
         "native" => {
@@ -232,17 +246,35 @@ fn cmd_serve(args: &[String]) -> i32 {
                 match flag(args, "--model").as_deref() {
                     Some(m @ ("bert" | "vgg" | "vgg16" | "nmt")) => ZooSpec::for_model(m)
                         .and_then(|s| ZooBackend::new(s, cache))
-                        .map(|b| Arc::new(b) as Arc<dyn Backend>),
+                        .map(|mut b| {
+                            if want_tele {
+                                graph_tele = Some(b.enable_telemetry());
+                            }
+                            Arc::new(b) as Arc<dyn Backend>
+                        }),
                     Some("bert-ffn") => {
-                        NativeBackend::new(NativeModelSpec::bert_base(8, 32), cache)
-                            .map(|b| Arc::new(b) as Arc<dyn Backend>)
+                        NativeBackend::new(NativeModelSpec::bert_base(8, 32), cache).map(|mut b| {
+                            if want_tele {
+                                graph_tele = Some(b.enable_telemetry());
+                            }
+                            Arc::new(b) as Arc<dyn Backend>
+                        })
                     }
                     None | Some("nano") => NativeBackend::new(NativeModelSpec::default(), cache)
-                        .map(|b| Arc::new(b) as Arc<dyn Backend>),
+                        .map(|mut b| {
+                            if want_tele {
+                                graph_tele = Some(b.enable_telemetry());
+                            }
+                            Arc::new(b) as Arc<dyn Backend>
+                        }),
                     Some(other) => {
                         eprintln!("[serve] unknown native model {other:?}; serving nano default");
-                        NativeBackend::new(NativeModelSpec::default(), cache)
-                            .map(|b| Arc::new(b) as Arc<dyn Backend>)
+                        NativeBackend::new(NativeModelSpec::default(), cache).map(|mut b| {
+                            if want_tele {
+                                graph_tele = Some(b.enable_telemetry());
+                            }
+                            Arc::new(b) as Arc<dyn Backend>
+                        })
                     }
                 };
             backend.and_then(|b| start_with_backend(b, cfg))
@@ -259,6 +291,20 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     };
+    // --telemetry-json: periodic background dumps while the client runs,
+    // plus one final dump after the last response
+    let stop = Arc::new(AtomicBool::new(false));
+    let dumper = telemetry_json.clone().map(|path| {
+        let metrics = handle.metrics.clone();
+        let tele = graph_tele.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                write_telemetry(&path, &metrics, tele.as_deref());
+            }
+        })
+    });
     println!(
         "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={} mode={}{}",
         handle.workers,
@@ -315,7 +361,152 @@ fn cmd_serve(args: &[String]) -> i32 {
             s.mean_occupancy * 100.0
         );
     }
+    // request-stage breakdown: where the end-to-end latency actually went
+    for vs in &snap.stages {
+        let cols: Vec<String> =
+            vs.stages.iter().map(|st| format!("{} {:.2}ms", st.stage, st.mean_ms)).collect();
+        println!("  stages[{}]: {}", vs.variant, cols.join(" | "));
+    }
+    if !snap.exemplars.is_empty() {
+        println!("  slow exemplars retained: {}", snap.exemplars.len());
+    }
+    if let Some(lanes) = handle.intra_lane_stats() {
+        let busy: Vec<String> = lanes.iter().map(|l| format!("{:.2}s", l.busy_secs)).collect();
+        println!("  intra-pool lane busy: [{}]", busy.join(", "));
+    }
+    stop.store(true, Ordering::Relaxed);
+    if let Some(j) = dumper {
+        let _ = j.join();
+    }
+    if let Some(path) = &telemetry_json {
+        write_telemetry(path, &handle.metrics, graph_tele.as_deref());
+        println!("  telemetry dumped to {}", path.display());
+    }
     0
+}
+
+/// One `--telemetry-json` dump: the full metrics snapshot (latency
+/// percentiles, stage spans, slow exemplars) plus the per-node graph
+/// profile when the backend carries one.
+fn write_telemetry(
+    path: &std::path::Path,
+    metrics: &tilewise::coordinator::Metrics,
+    tele: Option<&Telemetry>,
+) {
+    use tilewise::json::obj;
+    let mut fields = vec![("snapshot", metrics.full_snapshot().to_json())];
+    if let Some(t) = tele {
+        fields.push(("graph", t.report()));
+    }
+    if let Err(e) = std::fs::write(path, obj(fields).to_string()) {
+        eprintln!("[serve] telemetry dump {}: {e}", path.display());
+    }
+}
+
+/// `profile`: run every zoo model x variant under the graph profiler and
+/// emit Fig. 10-style per-node attribution (wall time, dispatched tile
+/// config, intra-op threads, GFLOP/s) plus an op-kind breakdown.
+fn cmd_profile(args: &[String]) -> i32 {
+    use tilewise::exec::PreparedModel as _;
+    use tilewise::json::{arr, num, obj, s, Json};
+    let models: Vec<String> = match flag(args, "--model") {
+        Some(m) => vec![m],
+        None => vec!["bert".into(), "vgg".into(), "nmt".into()],
+    };
+    let out = PathBuf::from(flag(args, "--out").unwrap_or_else(|| "BENCH_profile.json".into()));
+    let runs: usize = flag(args, "--runs").and_then(|v| v.parse().ok()).unwrap_or(3).max(1);
+    let intra: usize = flag(args, "--intra-threads").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let variants = ["model_dense", "model_tw", "model_tvw", "model_vw24"];
+    let mut model_jsons: Vec<Json> = Vec::new();
+    for model in &models {
+        let spec = match ZooSpec::for_model(model) {
+            Ok(sp) => sp.with_variants(&variants),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let mut backend = match ZooBackend::new(spec, None) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("compiling {model}: {e}");
+                return 1;
+            }
+        };
+        let tele = backend.enable_telemetry();
+        let pool = (intra > 1).then(|| Arc::new(tilewise::pool::ThreadPool::new(intra)));
+        let mut m = match backend.load_with_intra(pool) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("loading {model}: {e}");
+                return 1;
+            }
+        };
+        let dims = m.dims();
+        let x: Vec<f32> = (0..dims.batch * dims.per_request_len())
+            .map(|i| ((i % 13) as f32 - 6.0) * 0.05)
+            .collect();
+        // one warmup sweep (packs nothing, just warms caches), then the
+        // measured runs the attribution is taken from
+        for v in variants {
+            if let Err(e) = m.run(v, &x) {
+                eprintln!("{model}/{v}: {e}");
+                return 1;
+            }
+        }
+        tele.reset();
+        let t0 = Instant::now();
+        for _ in 0..runs {
+            for v in variants {
+                if let Err(e) = m.run(v, &x) {
+                    eprintln!("{model}/{v}: {e}");
+                    return 1;
+                }
+            }
+        }
+        let e2e = t0.elapsed().as_secs_f64();
+        println!("{model}: {runs} run(s) x {} variants in {:.1}ms", variants.len(), e2e * 1e3);
+        let mut variant_jsons: Vec<Json> = Vec::new();
+        for vp in tele.variants() {
+            let fwd = vp.forward_secs();
+            let coverage = if fwd > 0.0 { vp.attributed_secs() / fwd } else { 0.0 };
+            println!(
+                "  {:<12} forward {:>8.2}ms/run  attributed {:>5.1}%",
+                vp.variant,
+                fwd * 1e3 / vp.forwards().max(1) as f64,
+                coverage * 100.0
+            );
+            let mut nodes: Vec<_> = vp.nodes.iter().filter(|n| n.calls() > 0).collect();
+            nodes.sort_by(|a, b| b.secs().total_cmp(&a.secs()));
+            for n in nodes.iter().take(3) {
+                let (last_m, bm, bk, threads) = n.last_dispatch();
+                println!(
+                    "    {:<16} {:>8.2}ms  {:>7.2} GFLOP/s  m={last_m} bm={bm} bk={bk} t={threads}",
+                    n.name,
+                    n.secs() * 1e3,
+                    n.gflops()
+                );
+            }
+            variant_jsons.push(obj(vec![("coverage", num(coverage)), ("profile", vp.to_json())]));
+        }
+        model_jsons.push(obj(vec![("model", s(model)), ("variants", arr(variant_jsons))]));
+    }
+    let json = obj(vec![
+        ("bench", s("profile")),
+        ("runs", num(runs as f64)),
+        ("intra_threads", num(intra as f64)),
+        ("models", arr(model_jsons)),
+    ]);
+    match std::fs::write(&out, json.to_string()) {
+        Ok(()) => {
+            println!("wrote per-node profiles to {}", out.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("writing {}: {e}", out.display());
+            1
+        }
+    }
 }
 
 fn cmd_figure(args: &[String]) -> i32 {

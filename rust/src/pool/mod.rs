@@ -40,8 +40,9 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// One submitted `parallel_for`: a type-erased task plus claim/completion
 /// state.  The submitting thread keeps the closure alive until `pending`
@@ -105,6 +106,19 @@ struct Queue {
 struct Shared {
     queue: Mutex<Queue>,
     work_cv: Condvar,
+    /// Busy nanoseconds per lane: index 0 aggregates every submitting
+    /// caller (each `parallel_for` caller is a lane of its own job),
+    /// indices `1..threads` are the pinned workers.  Telemetry only —
+    /// written once per job per lane, never on the chunk hot path.
+    lane_busy: Vec<AtomicU64>,
+}
+
+/// Per-lane utilisation snapshot ([`ThreadPool::lane_stats`]): how much
+/// of the pool's lifetime each lane spent claiming chunks vs parked.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneStats {
+    pub busy_secs: f64,
+    pub idle_secs: f64,
 }
 
 /// The persistent pool.  Sized once; shared freely (`Arc<ThreadPool>`)
@@ -112,6 +126,7 @@ struct Shared {
 pub struct ThreadPool {
     shared: Arc<Shared>,
     threads: usize,
+    started: Instant,
     joins: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -124,22 +139,39 @@ impl ThreadPool {
         let shared = Arc::new(Shared {
             queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
             work_cv: Condvar::new(),
+            lane_busy: (0..threads).map(|_| AtomicU64::new(0)).collect(),
         });
         let joins = (1..threads)
             .map(|i| {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("tilewise-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawning pool worker")
             })
             .collect();
-        ThreadPool { shared, threads, joins }
+        ThreadPool { shared, threads, started: Instant::now(), joins }
     }
 
     /// The lane count this pool was configured for (>= 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Per-lane busy/idle split since the pool was built.  Lane 0 folds
+    /// every submitting caller together; lanes `1..threads` are the
+    /// pinned workers.  Idle is wall time minus busy time, clamped to
+    /// zero (a lane mid-chunk at snapshot time can read slightly ahead).
+    pub fn lane_stats(&self) -> Vec<LaneStats> {
+        let wall = self.started.elapsed().as_secs_f64();
+        self.shared
+            .lane_busy
+            .iter()
+            .map(|b| {
+                let busy = b.load(Ordering::Relaxed) as f64 / 1e9;
+                LaneStats { busy_secs: busy, idle_secs: (wall - busy).max(0.0) }
+            })
+            .collect()
     }
 
     /// Run `task(0..n_chunks)` across the pool and the calling thread;
@@ -151,9 +183,12 @@ impl ThreadPool {
             return;
         }
         if self.joins.is_empty() || n_chunks == 1 {
+            let t = Instant::now();
             for i in 0..n_chunks {
                 task(i);
             }
+            let nanos = t.elapsed().as_nanos() as u64;
+            self.shared.lane_busy[0].fetch_add(nanos, Ordering::Relaxed);
             return;
         }
         let task: &(dyn Fn(usize) + Sync) = &task;
@@ -173,7 +208,10 @@ impl ThreadPool {
         self.shared.queue.lock().unwrap().jobs.push_back(job.clone());
         self.shared.work_cv.notify_all();
         // the submitting thread is a full lane
+        let t = Instant::now();
         job.work();
+        let nanos = t.elapsed().as_nanos() as u64;
+        self.shared.lane_busy[0].fetch_add(nanos, Ordering::Relaxed);
         let mut done = job.done.lock().unwrap();
         while !*done {
             done = job.done_cv.wait(done).unwrap();
@@ -220,7 +258,7 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, lane: usize) {
     loop {
         let job = {
             let mut q = shared.queue.lock().unwrap();
@@ -237,7 +275,9 @@ fn worker_loop(shared: &Shared) {
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
+        let t = Instant::now();
         job.work();
+        shared.lane_busy[lane].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -368,6 +408,21 @@ mod tests {
             sum.fetch_add(i, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), (0..256).sum::<usize>());
+    }
+
+    #[test]
+    fn lane_stats_track_busy_time() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(8, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        let stats = pool.lane_stats();
+        assert_eq!(stats.len(), 2, "one entry per lane, callers folded into lane 0");
+        // the submitting caller is itself a lane and always claims chunks
+        assert!(stats[0].busy_secs > 0.0, "{stats:?}");
+        let total_busy: f64 = stats.iter().map(|s| s.busy_secs).sum();
+        assert!(total_busy >= 0.008, "8 x 2ms chunks across 2 lanes: {total_busy}");
+        assert!(stats.iter().all(|s| s.idle_secs >= 0.0), "{stats:?}");
     }
 
     #[test]

@@ -1,0 +1,26 @@
+//! End-to-end telemetry: lock-free latency histograms, request-stage
+//! tracing, and per-GEMM-node graph profiling (DESIGN.md §8).
+//!
+//! Three pieces, one design rule — *bounded memory, lock-free on the
+//! hot path, a single `Option` branch when disabled*:
+//!
+//! - [`Histogram`] — 2048 log-scale buckets (1% growth from 1 µs) of
+//!   atomic counters; replaces the unbounded `Vec<f64>` sample stores
+//!   that `coordinator::Metrics` used to sort under its mutex.
+//! - [`Stage`] / [`RequestTrace`] / [`TraceRing`] — the request
+//!   pipeline decomposed into queue → assembly → pack → execute →
+//!   respond spans, aggregated per variant into stage histograms, plus
+//!   a bounded ring of slow-request exemplars.
+//! - [`Telemetry`] / [`VariantProfile`] / [`NodeProfile`] — the Fig. 10
+//!   attribution layer: per-op-kind and per-GEMM-node wall time, the
+//!   `TileConfig` actually dispatched, effective intra-op threads, and
+//!   FLOPs → achieved GFLOP/s, recorded by `graph::execute_with` when a
+//!   profile handle is present.
+
+pub mod histogram;
+pub mod profile;
+pub mod trace;
+
+pub use histogram::Histogram;
+pub use profile::{NodeProfile, OpKind, Telemetry, VariantProfile, OP_KINDS};
+pub use trace::{RequestTrace, Stage, StageStats, TraceExemplar, TraceRing};

@@ -1,0 +1,470 @@
+//! Per-node graph profiling: the Fig. 10 attribution machinery.
+//!
+//! A [`Telemetry`] handle owns one [`VariantProfile`] per registered
+//! graph program.  The executor (`graph::execute_with`) records wall
+//! time per op *kind* plus, for every GEMM-backed op, per *node*: call
+//! count, nanoseconds, rows processed, FLOPs, and the dispatch that
+//! actually ran (effective batch M, the bucket-selected `TileConfig`,
+//! effective intra-op threads).  All counters are atomics sized at
+//! registration, so recording is lock-free and the profile adds no
+//! allocation to the serving path.
+//!
+//! Attribution contract: summing the per-op-kind times reproduces the
+//! end-to-end forward within the ISSUE's 20% bound.  `LstmStep` op time
+//! *includes* its internal gate GEMM (the node counters record that
+//! GEMM separately), so coverage sums op kinds only — never op kinds
+//! plus nodes, which would double-count recurrent models.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::graph::{GraphProgram, Op, PackedWeight};
+use crate::json::{arr, num, obj, s, Json};
+
+/// Executable op categories, mirroring `graph::Op`'s variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Gemm,
+    BiasAct,
+    Attention,
+    Im2col,
+    AvgPool2,
+    GlobalAvgPool,
+    Flatten,
+    LstmStep,
+    Residual,
+    LayerNorm,
+    MeanPool,
+    Zero,
+}
+
+/// Number of [`OpKind`] categories (counter-array size).
+pub const OP_KINDS: usize = 12;
+
+impl OpKind {
+    pub const ALL: [OpKind; OP_KINDS] = [
+        OpKind::Gemm,
+        OpKind::BiasAct,
+        OpKind::Attention,
+        OpKind::Im2col,
+        OpKind::AvgPool2,
+        OpKind::GlobalAvgPool,
+        OpKind::Flatten,
+        OpKind::LstmStep,
+        OpKind::Residual,
+        OpKind::LayerNorm,
+        OpKind::MeanPool,
+        OpKind::Zero,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            OpKind::Gemm => 0,
+            OpKind::BiasAct => 1,
+            OpKind::Attention => 2,
+            OpKind::Im2col => 3,
+            OpKind::AvgPool2 => 4,
+            OpKind::GlobalAvgPool => 5,
+            OpKind::Flatten => 6,
+            OpKind::LstmStep => 7,
+            OpKind::Residual => 8,
+            OpKind::LayerNorm => 9,
+            OpKind::MeanPool => 10,
+            OpKind::Zero => 11,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Gemm => "gemm",
+            OpKind::BiasAct => "bias_act",
+            OpKind::Attention => "attention",
+            OpKind::Im2col => "im2col",
+            OpKind::AvgPool2 => "avg_pool2",
+            OpKind::GlobalAvgPool => "global_avg_pool",
+            OpKind::Flatten => "flatten",
+            OpKind::LstmStep => "lstm_step",
+            OpKind::Residual => "residual",
+            OpKind::LayerNorm => "layer_norm",
+            OpKind::MeanPool => "mean_pool",
+            OpKind::Zero => "zero",
+        }
+    }
+
+    pub fn of(op: &Op) -> OpKind {
+        match op {
+            Op::Gemm { .. } => OpKind::Gemm,
+            Op::BiasAct { .. } => OpKind::BiasAct,
+            Op::Attention { .. } => OpKind::Attention,
+            Op::Im2col { .. } => OpKind::Im2col,
+            Op::AvgPool2 { .. } => OpKind::AvgPool2,
+            Op::GlobalAvgPool { .. } => OpKind::GlobalAvgPool,
+            Op::Flatten { .. } => OpKind::Flatten,
+            Op::LstmStep { .. } => OpKind::LstmStep,
+            Op::Residual { .. } => OpKind::Residual,
+            Op::LayerNorm { .. } => OpKind::LayerNorm,
+            Op::MeanPool { .. } => OpKind::MeanPool,
+            Op::Zero { .. } => OpKind::Zero,
+        }
+    }
+}
+
+fn family_label(w: &PackedWeight) -> &'static str {
+    match w {
+        PackedWeight::Dense(_) => "dense",
+        PackedWeight::Tw(_) => "tw",
+        PackedWeight::Tvw(_) => "tvw",
+        PackedWeight::Vw24(_) => "vw24",
+    }
+}
+
+/// Lock-free counters for one GEMM node (one `GraphProgram::weights`
+/// slot), pre-sized at registration so the hot path only does
+/// `fetch_add`s.
+pub struct NodeProfile {
+    pub name: String,
+    pub family: &'static str,
+    pub k: usize,
+    pub n: usize,
+    calls: AtomicU64,
+    nanos: AtomicU64,
+    rows: AtomicU64,
+    flops: AtomicU64,
+    last_m: AtomicUsize,
+    last_bm: AtomicUsize,
+    last_bk: AtomicUsize,
+    last_threads: AtomicUsize,
+}
+
+impl NodeProfile {
+    fn new(name: &str, family: &'static str, k: usize, n: usize) -> NodeProfile {
+        NodeProfile {
+            name: name.to_string(),
+            family,
+            k,
+            n,
+            calls: AtomicU64::new(0),
+            nanos: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            flops: AtomicU64::new(0),
+            last_m: AtomicUsize::new(0),
+            last_bm: AtomicUsize::new(0),
+            last_bk: AtomicUsize::new(0),
+            last_threads: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record one kernel dispatch on this node.
+    pub fn record(&self, m: usize, nanos: u64, flops: u64, bm: usize, bk: usize, threads: usize) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.rows.fetch_add(m as u64, Ordering::Relaxed);
+        self.flops.fetch_add(flops, Ordering::Relaxed);
+        self.last_m.store(m, Ordering::Relaxed);
+        self.last_bm.store(bm, Ordering::Relaxed);
+        self.last_bk.store(bk, Ordering::Relaxed);
+        self.last_threads.store(threads, Ordering::Relaxed);
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    pub fn flops(&self) -> u64 {
+        self.flops.load(Ordering::Relaxed)
+    }
+
+    /// Achieved GFLOP/s over this node's recorded time.
+    pub fn gflops(&self) -> f64 {
+        let secs = self.secs();
+        if secs > 0.0 {
+            self.flops() as f64 / secs / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// `(m, bm, bk, threads)` of the most recent dispatch.
+    pub fn last_dispatch(&self) -> (usize, usize, usize, usize) {
+        (
+            self.last_m.load(Ordering::Relaxed),
+            self.last_bm.load(Ordering::Relaxed),
+            self.last_bk.load(Ordering::Relaxed),
+            self.last_threads.load(Ordering::Relaxed),
+        )
+    }
+
+    fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+        self.nanos.store(0, Ordering::Relaxed);
+        self.rows.store(0, Ordering::Relaxed);
+        self.flops.store(0, Ordering::Relaxed);
+        self.last_m.store(0, Ordering::Relaxed);
+        self.last_bm.store(0, Ordering::Relaxed);
+        self.last_bk.store(0, Ordering::Relaxed);
+        self.last_threads.store(0, Ordering::Relaxed);
+    }
+
+    fn to_json(&self) -> Json {
+        let (m, bm, bk, threads) = self.last_dispatch();
+        obj(vec![
+            ("name", s(&self.name)),
+            ("family", s(self.family)),
+            ("k", num(self.k as f64)),
+            ("n", num(self.n as f64)),
+            ("calls", num(self.calls() as f64)),
+            ("secs", num(self.secs())),
+            ("rows", num(self.rows() as f64)),
+            ("flops", num(self.flops() as f64)),
+            ("gflops", num(self.gflops())),
+            ("last_m", num(m as f64)),
+            ("last_bm", num(bm as f64)),
+            ("last_bk", num(bk as f64)),
+            ("last_threads", num(threads as f64)),
+        ])
+    }
+}
+
+/// Profiling counters for one graph program (one serving variant):
+/// per-op-kind wall time plus one [`NodeProfile`] per weight slot,
+/// index-aligned with `GraphProgram::weights`.
+pub struct VariantProfile {
+    pub model: String,
+    pub variant: String,
+    op_calls: Vec<AtomicU64>,
+    op_nanos: Vec<AtomicU64>,
+    pub nodes: Vec<NodeProfile>,
+    /// Whole-forward invocations and nanoseconds (`execute` entry/exit).
+    forwards: AtomicU64,
+    forward_nanos: AtomicU64,
+}
+
+impl VariantProfile {
+    pub fn for_program(p: &GraphProgram) -> VariantProfile {
+        VariantProfile {
+            model: p.model.clone(),
+            variant: p.variant.clone(),
+            op_calls: (0..OP_KINDS).map(|_| AtomicU64::new(0)).collect(),
+            op_nanos: (0..OP_KINDS).map(|_| AtomicU64::new(0)).collect(),
+            nodes: p
+                .weights
+                .iter()
+                .map(|w| NodeProfile::new(&w.name, family_label(&w.weight), w.k, w.n))
+                .collect(),
+            forwards: AtomicU64::new(0),
+            forward_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_op(&self, kind: OpKind, nanos: u64) {
+        let i = kind.index();
+        self.op_calls[i].fetch_add(1, Ordering::Relaxed);
+        self.op_nanos[i].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn record_forward(&self, nanos: u64) {
+        self.forwards.fetch_add(1, Ordering::Relaxed);
+        self.forward_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn op_calls(&self, kind: OpKind) -> u64 {
+        self.op_calls[kind.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn op_secs(&self, kind: OpKind) -> f64 {
+        self.op_nanos[kind.index()].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Total attributed seconds: the sum over op kinds.  `LstmStep`
+    /// already includes its gate GEMM, so this never double-counts.
+    pub fn attributed_secs(&self) -> f64 {
+        OpKind::ALL.iter().map(|&k| self.op_secs(k)).sum()
+    }
+
+    pub fn forwards(&self) -> u64 {
+        self.forwards.load(Ordering::Relaxed)
+    }
+
+    pub fn forward_secs(&self) -> f64 {
+        self.forward_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn reset(&self) {
+        for c in self.op_calls.iter().chain(&self.op_nanos) {
+            c.store(0, Ordering::Relaxed);
+        }
+        for n in &self.nodes {
+            n.reset();
+        }
+        self.forwards.store(0, Ordering::Relaxed);
+        self.forward_nanos.store(0, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ops: Vec<Json> = OpKind::ALL
+            .iter()
+            .filter(|&&k| self.op_calls(k) > 0)
+            .map(|&k| {
+                obj(vec![
+                    ("kind", s(k.label())),
+                    ("calls", num(self.op_calls(k) as f64)),
+                    ("secs", num(self.op_secs(k))),
+                ])
+            })
+            .collect();
+        let nodes: Vec<Json> =
+            self.nodes.iter().filter(|n| n.calls() > 0).map(NodeProfile::to_json).collect();
+        obj(vec![
+            ("model", s(&self.model)),
+            ("variant", s(&self.variant)),
+            ("forwards", num(self.forwards() as f64)),
+            ("forward_secs", num(self.forward_secs())),
+            ("attributed_secs", num(self.attributed_secs())),
+            ("ops", arr(ops)),
+            ("nodes", arr(nodes)),
+        ])
+    }
+}
+
+/// The enable/disable seam: backends hold `Option<Arc<Telemetry>>`, the
+/// executor resolves `Option<&VariantProfile>` once per forward, and
+/// every timing site is a branch on that `Option` — `None` costs one
+/// predictable branch per op.
+#[derive(Default)]
+pub struct Telemetry {
+    variants: RwLock<Vec<Arc<VariantProfile>>>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// Register profiles for every program (idempotent per variant name).
+    pub fn register_programs(&self, programs: &[GraphProgram]) {
+        let mut vars = self.variants.write().expect("telemetry lock poisoned");
+        for p in programs {
+            if !vars.iter().any(|v| v.variant == p.variant) {
+                vars.push(Arc::new(VariantProfile::for_program(p)));
+            }
+        }
+    }
+
+    /// Profile handle for one variant (cheap Arc clone; resolve once per
+    /// forward, not per op).
+    pub fn variant(&self, name: &str) -> Option<Arc<VariantProfile>> {
+        let vars = self.variants.read().ok()?;
+        vars.iter().find(|v| v.variant == name).cloned()
+    }
+
+    pub fn variants(&self) -> Vec<Arc<VariantProfile>> {
+        self.variants.read().map(|v| v.clone()).unwrap_or_default()
+    }
+
+    /// Zero every counter (post-warmup reset in `profile` runs).
+    pub fn reset(&self) {
+        for v in self.variants() {
+            v.reset();
+        }
+    }
+
+    /// Full profile report as in-tree JSON.
+    pub fn report(&self) -> Json {
+        let variants: Vec<Json> = self.variants().iter().map(|v| v.to_json()).collect();
+        obj(vec![("variants", arr(variants))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::PatternFamily;
+    use crate::exec::ModelDims;
+    use crate::graph::{pack_weight, GraphBuilder, PackOptions};
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    fn tiny_program() -> GraphProgram {
+        let mut rng = Rng::new(7);
+        let w = Matrix::from_vec(4, 4, (0..16).map(|_| rng.normal_f32()).collect());
+        let mut b = GraphBuilder::new();
+        let input = b.buffer(2, 4);
+        b.scale_by_batch(input, 1);
+        let node = pack_weight(
+            "l0.up",
+            &w,
+            2,
+            &[1, 2],
+            PatternFamily::Dense,
+            &PackOptions::default(),
+            None,
+        )
+        .unwrap();
+        let out = b.gemm(input, node);
+        let dims = ModelDims { batch: 2, seq: 1, d_model: 4, n_classes: 4 };
+        b.finish("tiny", "model_dense", input, out, dims)
+    }
+
+    #[test]
+    fn op_kind_covers_every_op_exactly_once() {
+        // index() must be a bijection onto 0..OP_KINDS
+        let mut seen = [false; OP_KINDS];
+        for k in OpKind::ALL {
+            assert!(!seen[k.index()], "duplicate index for {:?}", k);
+            seen[k.index()] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn register_resolve_record_roundtrip() {
+        let tele = Telemetry::new();
+        let p = tiny_program();
+        tele.register_programs(&[p]);
+        assert!(tele.variant("nope").is_none());
+        let prof = tele.variant("model_dense").expect("registered variant resolves");
+        assert_eq!(prof.nodes.len(), 1);
+        assert_eq!(prof.nodes[0].name, "l0.up");
+        assert_eq!(prof.nodes[0].family, "dense");
+
+        prof.record_op(OpKind::Gemm, 1_000_000);
+        prof.nodes[0].record(2, 1_000_000, 64, 64, 64, 1);
+        prof.record_forward(1_500_000);
+
+        assert_eq!(prof.op_calls(OpKind::Gemm), 1);
+        assert!((prof.op_secs(OpKind::Gemm) - 1e-3).abs() < 1e-12);
+        assert!((prof.attributed_secs() - 1e-3).abs() < 1e-12);
+        assert_eq!(prof.nodes[0].calls(), 1);
+        assert_eq!(prof.nodes[0].rows(), 2);
+        assert!(prof.nodes[0].gflops() > 0.0);
+        assert_eq!(prof.nodes[0].last_dispatch(), (2, 64, 64, 1));
+
+        // report JSON carries the node and op rows
+        let rep = tele.report().to_string();
+        assert!(rep.contains("\"l0.up\""), "report: {rep}");
+        assert!(rep.contains("\"gemm\""), "report: {rep}");
+
+        tele.reset();
+        assert_eq!(prof.op_calls(OpKind::Gemm), 0);
+        assert_eq!(prof.nodes[0].calls(), 0);
+        assert_eq!(prof.forwards(), 0);
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_variant() {
+        let tele = Telemetry::new();
+        let p = tiny_program();
+        tele.register_programs(&[p]);
+        let p2 = tiny_program();
+        tele.register_programs(&[p2]);
+        assert_eq!(tele.variants().len(), 1);
+    }
+}

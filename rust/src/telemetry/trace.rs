@@ -1,0 +1,205 @@
+//! Request-stage tracing: each served request is decomposed into the
+//! five coordinator stages (queue-wait → batch-assembly → pack →
+//! execute → respond), aggregated per stage and per variant, with a
+//! bounded ring of slow-request exemplars for postmortems.
+//!
+//! The span model (DESIGN.md §8): stage boundaries come from four
+//! timestamps the worker loop already touches — `Request.submitted`,
+//! the batcher's first-receive and assembly-done instants, and the
+//! execute start/end pair — so tracing adds no extra clock reads on the
+//! kernel path.  `queue + assembly + pack = execute_start - submitted`
+//! exactly (for requests submitted before the batch opened), which the
+//! trace-consistency test pins down.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One coordinator pipeline stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// `submitted` → the batcher's first `recv` for the batch.
+    Queue,
+    /// First `recv` → batch handed to the worker (drain + wait window).
+    Assembly,
+    /// Batch handed over → kernels start (routing + activation packing).
+    Pack,
+    /// Kernel execution (`run_batch` / `run`).
+    Execute,
+    /// Execution end → response handed to the requester's channel.
+    Respond,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] =
+        [Stage::Queue, Stage::Assembly, Stage::Pack, Stage::Execute, Stage::Respond];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Assembly => "assembly",
+            Stage::Pack => "pack",
+            Stage::Execute => "execute",
+            Stage::Respond => "respond",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Queue => 0,
+            Stage::Assembly => 1,
+            Stage::Pack => 2,
+            Stage::Execute => 3,
+            Stage::Respond => 4,
+        }
+    }
+}
+
+/// Per-request stage durations in seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestTrace {
+    pub queue: f64,
+    pub assembly: f64,
+    pub pack: f64,
+    pub execute: f64,
+    pub respond: f64,
+}
+
+impl RequestTrace {
+    pub fn stage(&self, s: Stage) -> f64 {
+        match s {
+            Stage::Queue => self.queue,
+            Stage::Assembly => self.assembly,
+            Stage::Pack => self.pack,
+            Stage::Execute => self.execute,
+            Stage::Respond => self.respond,
+        }
+    }
+
+    /// End-to-end seconds: the stages partition the request lifetime, so
+    /// their sum is the submitted→responded latency.
+    pub fn total(&self) -> f64 {
+        self.queue + self.assembly + self.pack + self.execute + self.respond
+    }
+}
+
+/// One retained slow-request trace.
+#[derive(Clone, Debug)]
+pub struct TraceExemplar {
+    pub variant: String,
+    pub trace: RequestTrace,
+}
+
+/// Bounded ring of the last N traces whose end-to-end latency crossed
+/// the slow threshold.  Recording is a threshold check (two atomics) on
+/// the fast path; only actually-slow requests take the mutex.
+pub struct TraceRing {
+    ring: Mutex<VecDeque<TraceExemplar>>,
+    cap: usize,
+    /// f64 bit pattern of the threshold in seconds (atomic so it can be
+    /// retuned while workers run).
+    threshold_bits: AtomicU64,
+}
+
+/// Default exemplar capacity.
+pub const DEFAULT_EXEMPLARS: usize = 32;
+/// Default slow threshold: 100 ms.
+pub const DEFAULT_SLOW_SECS: f64 = 0.1;
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new(DEFAULT_EXEMPLARS, DEFAULT_SLOW_SECS)
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize, threshold_secs: f64) -> TraceRing {
+        TraceRing {
+            ring: Mutex::new(VecDeque::with_capacity(cap)),
+            cap: cap.max(1),
+            threshold_bits: AtomicU64::new(threshold_secs.to_bits()),
+        }
+    }
+
+    pub fn threshold_secs(&self) -> f64 {
+        f64::from_bits(self.threshold_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn set_threshold_secs(&self, secs: f64) {
+        self.threshold_bits.store(secs.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Retain the trace if it is slow enough; drops the oldest exemplar
+    /// when full.
+    pub fn offer(&self, variant: &str, trace: RequestTrace) {
+        if trace.total() < self.threshold_secs() {
+            return;
+        }
+        if let Ok(mut ring) = self.ring.lock() {
+            if ring.len() == self.cap {
+                ring.pop_front();
+            }
+            ring.push_back(TraceExemplar { variant: variant.to_string(), trace });
+        }
+    }
+
+    /// Snapshot of retained exemplars, oldest first.
+    pub fn exemplars(&self) -> Vec<TraceExemplar> {
+        self.ring.lock().map(|r| r.iter().cloned().collect()).unwrap_or_default()
+    }
+
+    pub fn clear(&self) {
+        if let Ok(mut ring) = self.ring.lock() {
+            ring.clear();
+        }
+    }
+}
+
+/// Aggregated per-stage statistics for one variant, produced by
+/// `Metrics::full_snapshot` from the stage histograms.
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub stage: &'static str,
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_partition_the_total() {
+        let t = RequestTrace { queue: 1.0, assembly: 0.5, pack: 0.25, execute: 2.0, respond: 0.1 };
+        let sum: f64 = Stage::ALL.iter().map(|&s| t.stage(s)).sum();
+        assert!((sum - t.total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_keeps_only_slow_traces_and_bounds_memory() {
+        let ring = TraceRing::new(3, 0.5);
+        let fast = RequestTrace { execute: 0.1, ..Default::default() };
+        ring.offer("model_tw", fast);
+        assert!(ring.exemplars().is_empty(), "fast trace must not be retained");
+        for i in 0..5 {
+            let slow = RequestTrace { execute: 1.0 + i as f64, ..Default::default() };
+            ring.offer("model_tw", slow);
+        }
+        let kept = ring.exemplars();
+        assert_eq!(kept.len(), 3, "ring is bounded at capacity");
+        // oldest were evicted: the survivors are the last three offered
+        assert!((kept[0].trace.execute - 3.0).abs() < 1e-12);
+        assert!((kept[2].trace.execute - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_is_retunable() {
+        let ring = TraceRing::default();
+        assert!((ring.threshold_secs() - DEFAULT_SLOW_SECS).abs() < 1e-12);
+        ring.set_threshold_secs(0.001);
+        ring.offer("v", RequestTrace { execute: 0.002, ..Default::default() });
+        assert_eq!(ring.exemplars().len(), 1);
+    }
+}

@@ -86,8 +86,12 @@ impl Stopwatch {
 }
 
 /// Percentile of a sample (linear interpolation); `q` in [0, 1].
+/// Total: an empty sample yields 0.0 instead of panicking, so callers
+/// snapshotting counters-but-no-samples state never abort.
 pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
-    assert!(!samples.is_empty());
+    if samples.is_empty() {
+        return 0.0;
+    }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = q.clamp(0.0, 1.0) * (samples.len() - 1) as f64;
     let lo = pos.floor() as usize;
@@ -170,6 +174,21 @@ mod tests {
         assert_eq!(percentile(&mut xs, 0.0), 1.0);
         assert_eq!(percentile(&mut xs, 1.0), 3.0);
         assert_eq!(percentile(&mut xs, 0.5), 2.0);
+    }
+
+    #[test]
+    fn percentile_of_empty_is_zero() {
+        let mut xs: Vec<f64> = vec![];
+        assert_eq!(percentile(&mut xs, 0.0), 0.0);
+        assert_eq!(percentile(&mut xs, 0.5), 0.0);
+        assert_eq!(percentile(&mut xs, 1.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_of_singleton() {
+        let mut xs = vec![7.5];
+        assert_eq!(percentile(&mut xs, 0.0), 7.5);
+        assert_eq!(percentile(&mut xs, 0.99), 7.5);
     }
 
     #[test]
