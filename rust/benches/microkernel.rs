@@ -1,0 +1,126 @@
+//! Bench: scalar loops vs the register-level SIMD microkernels for every
+//! GEMM pattern (dense / TW / TVW / 2:4) at the BERT-base paper shapes,
+//! plus packed-B panels vs strided B on the dense kernel.  Emits
+//! `BENCH_micro.json`; CI asserts SIMD >= scalar on the dense cells
+//! whenever an x86 SIMD ISA was detected.
+//!
+//!   cargo bench --bench microkernel
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, quick_mode, section};
+use tilewise::gemm::micro::{self, Isa};
+use tilewise::gemm::{
+    matmul_tiled_into, matmul_tiled_into_panel, tvw_matmul_into_with, tw_matmul_into_with,
+    vw24_matmul_into_with, MicroCfg, PackedPanel, TileConfig,
+};
+use tilewise::json::{arr, num, obj, s, Json};
+use tilewise::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+/// GFLOP/s from a median time, counting only the useful (kept) FLOPs the
+/// pattern actually executes — `density` is 1.0 for dense, (1 - sparsity)
+/// for TW/TVW, 0.5 for 2:4.
+fn gflops(m: usize, k: usize, n: usize, density: f64, us: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 * density / (us * 1e-6) / 1e9
+}
+
+fn main() {
+    let sparsity = 0.75;
+    let g = 32usize;
+    // BERT-base layer shapes at seq 128 (attention projection + the two
+    // FFN GEMMs — the FLOP-dominant layers the paper benchmarks)
+    let shapes: Vec<(usize, usize, usize)> = if quick_mode() {
+        vec![(32, 256, 256), (32, 256, 1024)]
+    } else {
+        vec![(128, 768, 768), (128, 768, 3072), (128, 3072, 768)]
+    };
+
+    let auto = micro::resolve(&TileConfig::dense_default());
+    let x86_simd = matches!(auto.isa, Isa::Avx2 | Isa::Avx512);
+    section(&format!(
+        "microkernel GFLOP/s, scalar vs {} (sparsity {sparsity}, G {g})",
+        micro::active_label()
+    ));
+
+    let mut rng = Rng::new(0xB16C);
+    let mut cells = Vec::new();
+    for &(m, k, n) in &shapes {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        let twplan = TwPlan::encode(&w, &prune_tw(&w, sparsity, g, None));
+        let (tws, mask) = prune_tvw(&w, sparsity, g);
+        let tvplan = TvwPlan::encode(&w, &tws, &mask);
+        let vplan = Vw24Plan::encode(&w, &prune_vw(&w, 0.5, 4)).expect("2:4 encodable");
+        let mut c = Matrix::zeros(m, n);
+
+        // (pattern, density, bench closure factory over a pinned cfg)
+        type Cell = (&'static str, f64, TileConfig);
+        let pats: [Cell; 4] = [
+            ("dense", 1.0, TileConfig::dense_default()),
+            ("tw", 1.0 - sparsity, TileConfig::tw_default()),
+            ("tvw", 1.0 - sparsity, TileConfig::tvw_default()),
+            ("vw24", 0.5, TileConfig::vw_default()),
+        ];
+        for (pattern, density, base) in pats {
+            let mut run = |mc: MicroCfg| -> f64 {
+                let cfg = base.with_micro(mc);
+                let name = format!("{pattern} {m}x{k}x{n} {}", mc.label());
+                let us = bench(&name, || {
+                    c.data.fill(0.0);
+                    match pattern {
+                        "dense" => matmul_tiled_into(&a, &w, &mut c, &cfg),
+                        "tw" => tw_matmul_into_with(&a, &twplan, &mut c, &cfg),
+                        "tvw" => tvw_matmul_into_with(&a, &tvplan, &mut c, &cfg),
+                        _ => vw24_matmul_into_with(&a, &vplan, &mut c, &cfg),
+                    }
+                });
+                gflops(m, k, n, density, us)
+            };
+            let scalar_gf = run(MicroCfg::Scalar);
+            let simd_gf = run(MicroCfg::Auto);
+            let mut cell = vec![
+                ("pattern", s(pattern)),
+                ("m", num(m as f64)),
+                ("k", num(k as f64)),
+                ("n", num(n as f64)),
+                ("density", num(density)),
+                ("scalar_gflops", num(scalar_gf)),
+                ("simd_gflops", num(simd_gf)),
+            ];
+            // packed-B panel variant: dense only, and only when a SIMD
+            // microkernel is live (the panel path is unreachable otherwise)
+            if pattern == "dense" && auto.is_simd() {
+                let panel = PackedPanel::pack(&w.data, k, n, n, auto.nr);
+                let cfg = base.with_micro(MicroCfg::Auto);
+                let us = bench(&format!("dense {m}x{k}x{n} panel"), || {
+                    matmul_tiled_into_panel(&a, &w, Some(&panel), &mut c, &cfg);
+                });
+                cell.push(("panel_gflops", num(gflops(m, k, n, 1.0, us))));
+            }
+            println!(
+                "    {pattern:<6} {m}x{k}x{n}: scalar {scalar_gf:.2} GFLOP/s, \
+                 simd {simd_gf:.2} GFLOP/s ({:.2}x)",
+                simd_gf / scalar_gf.max(1e-12)
+            );
+            cells.push(obj(cell));
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", s("micro")),
+        ("isa", s(auto.isa.label())),
+        ("micro", s(&micro::active_label())),
+        ("avx2", Json::Bool(x86_simd)),
+        ("sparsity", num(sparsity)),
+        ("g", num(g as f64)),
+        ("cells", arr(cells)),
+    ]);
+    let out = "BENCH_micro.json";
+    match std::fs::write(out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("writing {out}: {e}"),
+    }
+}

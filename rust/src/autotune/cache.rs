@@ -12,14 +12,15 @@ use std::path::Path;
 
 use super::space::{Candidate, KernelVariant};
 use crate::error::{Context, Result};
-use crate::gemm::TileConfig;
+use crate::gemm::{MicroCfg, TileConfig};
 use crate::gpusim::GemmShape;
 use crate::json::{arr, num, obj, s, Json};
 use crate::{anyhow, bail};
 
 /// Bump on any incompatible change to the cache layout or to the meaning
 /// of tuned parameters; stale caches are discarded wholesale on load.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: entries carry the tuned microkernel request (`micro` label).
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Cache key: one GEMM problem as tuned.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -66,6 +67,9 @@ pub struct TunedEntry {
     pub bk: usize,
     pub g: usize,
     pub threads: usize,
+    /// Winning microkernel request ([`MicroCfg::label`]: "auto" /
+    /// "scalar" / "simd{MR}x{NR}").
+    pub micro: String,
     /// Trimmed-mean measured latency of the winner, microseconds.
     pub measured_us: f64,
     /// gpusim pre-filter estimate for the winner, microseconds.
@@ -84,14 +88,39 @@ impl TunedEntry {
         }
     }
 
+    /// The tuned microkernel request (`Auto` when the label fails to
+    /// parse — `validate` rejects that case at load time).
+    pub fn micro_cfg(&self) -> MicroCfg {
+        MicroCfg::from_label(&self.micro).unwrap_or(MicroCfg::Auto)
+    }
+
+    /// The full tuned tile config, microkernel included.
+    pub fn tile(&self) -> TileConfig {
+        TileConfig::new(self.bm, self.bk).with_micro(self.micro_cfg())
+    }
+
     /// Reconstruct the winning candidate (for re-execution).
     pub fn candidate(&self) -> Option<Candidate> {
         Some(Candidate {
             variant: KernelVariant::from_label(&self.variant)?,
-            tile: TileConfig::new(self.bm, self.bk),
+            tile: self.tile(),
             g: self.g,
             threads: self.threads,
         })
+    }
+
+    /// Reject entries no kernel could honour — a stale or hand-edited
+    /// cache must fail loudly at load time, not silently mis-tile every
+    /// request routed through it (`docs/DESIGN.md` §9).
+    pub fn validate(&self) -> Result<()> {
+        let id = self.key.id();
+        TileConfig::new(self.bm, self.bk)
+            .validate(&self.key.pattern)
+            .map_err(|e| anyhow!("plan cache entry {id}: {e}"))?;
+        if MicroCfg::from_label(&self.micro).is_none() {
+            bail!("plan cache entry {id}: unknown microkernel label {:?}", self.micro);
+        }
+        Ok(())
     }
 
     fn to_json(&self) -> Json {
@@ -107,6 +136,7 @@ impl TunedEntry {
             ("bk", num(self.bk as f64)),
             ("g", num(self.g as f64)),
             ("threads", num(self.threads as f64)),
+            ("micro", s(&self.micro)),
             ("measured_us", num(self.measured_us)),
             ("model_us", num(self.model_us)),
             ("default_us", num(self.default_us)),
@@ -129,7 +159,7 @@ impl TunedEntry {
             sparsity_bp: field("sparsity_bp")? as u32,
             nthreads: field("nthreads")? as usize,
         };
-        Ok(TunedEntry {
+        let entry = TunedEntry {
             key,
             variant: v
                 .get("variant")
@@ -140,10 +170,17 @@ impl TunedEntry {
             bk: field("bk")? as usize,
             g: field("g")? as usize,
             threads: field("threads")? as usize,
+            micro: v
+                .get("micro")
+                .and_then(Json::as_str)
+                .context("entry missing \"micro\"")?
+                .to_string(),
             measured_us: field("measured_us")?,
             model_us: field("model_us")?,
             default_us: field("default_us")?,
-        })
+        };
+        entry.validate()?;
+        Ok(entry)
     }
 }
 
@@ -191,8 +228,7 @@ impl PlanCache {
         sparsity: f64,
         nthreads: usize,
     ) -> Option<TileConfig> {
-        self.get(&PlanKey::new(shape, pattern, sparsity, nthreads))
-            .map(|e| TileConfig::new(e.bm, e.bk))
+        self.get(&PlanKey::new(shape, pattern, sparsity, nthreads)).map(TunedEntry::tile)
     }
 
     /// Serving-time resolution: the best tuned tile config for a GEMM
@@ -222,7 +258,7 @@ impl PlanCache {
                     e.key.nthreads,
                 )
             })
-            .map(|e| TileConfig::new(e.bm, e.bk))
+            .map(TunedEntry::tile)
     }
 
     pub fn set_model_variant(&mut self, model: &str, variant: &str) {
@@ -303,6 +339,7 @@ mod tests {
             bk: 64,
             g: 32,
             threads: 1,
+            micro: "auto".into(),
             measured_us: 100.0,
             model_us: 80.0,
             default_us: 150.0,
@@ -335,10 +372,57 @@ mod tests {
         let text = cache
             .to_json()
             .to_string()
-            .replace("\"schema_version\":1", "\"schema_version\":99");
+            .replace("\"schema_version\":2", "\"schema_version\":99");
         assert!(text.contains("99"), "fixture edit failed");
         let v = Json::parse(&text).unwrap();
         assert!(PlanCache::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn stale_or_invalid_entries_are_rejected_on_load() {
+        // a cache written by a buggy or older tuner: structurally valid
+        // JSON whose tuned parameters no kernel could honour.  Loading
+        // must fail with a clear error instead of serving a zero-extent
+        // or misaligned blocking.
+        let mut cache = PlanCache::new();
+        cache.insert(entry(64, "TW"));
+        let good = cache.to_json().to_string();
+        // bm = 0: block extents must be nonzero
+        let v = Json::parse(&good.replace("\"bm\":64", "\"bm\":0")).unwrap();
+        let err = PlanCache::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("must be nonzero"), "{err}");
+        // a 2:4-family entry whose bk is not a K-group multiple
+        let mut cache = PlanCache::new();
+        let mut e = entry(64, "TVW");
+        e.variant = "tvw".into();
+        e.bk = 66;
+        cache.insert(e);
+        let v = Json::parse(&cache.to_json().to_string()).unwrap();
+        let err = PlanCache::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("multiple of 4"), "{err}");
+        // an unknown microkernel label
+        let v = Json::parse(&good.replace("\"micro\":\"auto\"", "\"micro\":\"simd9z\"")).unwrap();
+        let err = PlanCache::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("microkernel"), "{err}");
+        // the unedited cache still loads, micro intact
+        let back = PlanCache::from_json(&Json::parse(&good).unwrap()).unwrap();
+        assert_eq!(back.entries().next().unwrap().micro_cfg(), MicroCfg::Auto);
+    }
+
+    #[test]
+    fn tuned_micro_rides_through_tile_lookups() {
+        let mut cache = PlanCache::new();
+        let mut e = entry(256, "TW");
+        e.micro = "simd4x16".into();
+        cache.insert(e);
+        let shape = GemmShape::new(256, 768, 3072);
+        let want = MicroCfg::Simd { mr: 4, nr: 16 };
+        assert_eq!(cache.tile_config(shape, "TW", 0.75, 1).unwrap().micro, want);
+        let far = GemmShape::new(1024, 768, 3072);
+        assert_eq!(cache.lookup_tile_config(far, "TW", 0.8).unwrap().micro, want);
+        // and JSON round-trips it
+        let back = PlanCache::from_json(&Json::parse(&cache.to_json().to_string()).unwrap());
+        assert_eq!(back.unwrap().entries().next().unwrap().micro, "simd4x16");
     }
 
     #[test]

@@ -322,6 +322,23 @@ mod tests {
     }
 
     #[test]
+    fn micro_axis_candidates_are_measurable() {
+        use crate::gemm::MicroCfg;
+        let mut data = BenchData::new(GemmShape::new(8, 32, 32), 0.5, 12);
+        let opts =
+            MeasureOpts { warmup: 0, min_iters: 1, max_iters: 1, budget_secs: 0.0, trim_frac: 0.0 };
+        for mc in [MicroCfg::Scalar, MicroCfg::Simd { mr: 4, nr: 16 }] {
+            for family in
+                [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24]
+            {
+                let mut cand = Candidate::default_for(family);
+                cand.tile = cand.tile.with_micro(mc);
+                assert!(bench_candidate(&mut data, &cand, &opts).is_some(), "{family:?} {mc:?}");
+            }
+        }
+    }
+
+    #[test]
     fn phantom_parallel_candidates_are_rejected() {
         use crate::gemm::TileConfig;
         // M = 8 is far below the 8-rows-per-band floor for 4 threads: the

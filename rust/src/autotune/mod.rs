@@ -4,8 +4,8 @@
 //! execution strategy per GEMM: tile-wise sparsity lives or dies by the
 //! tile granularity chosen at the global-memory level, and TVW adds a
 //! register-level 2:4 dimension on top.  This layer searches the
-//! (kernel variant × tile shape × pattern granularity × thread count)
-//! space for each GEMM workload and persists the winners:
+//! (kernel variant × tile shape × pattern granularity × thread count ×
+//! microkernel) space for each GEMM workload and persists the winners:
 //!
 //! - [`space`] — candidate enumeration over [`crate::gemm::TileConfig`],
 //!   TW granularity G, kernel variant, and thread count

@@ -17,6 +17,12 @@ use crate::gpusim::{
 };
 
 /// Modeled latency (seconds) of one candidate on `specs`.
+///
+/// The microkernel axis (`cand.tile.micro`) is deliberately invisible to
+/// the model: the gpusim cost substrate has no notion of CPU register
+/// blocking, so micro-variants of one blocking score identically and the
+/// measured phase alone separates them.  The prefilter keeps ties in
+/// enumeration order, so scalar/SIMD twins survive or fall together.
 pub fn analytical_cost(
     shape: GemmShape,
     sparsity: f64,

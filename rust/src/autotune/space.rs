@@ -5,7 +5,7 @@
 //! (for condensed-plan kernels, where G is chosen at *encode* time), and
 //! the worker thread count.
 
-use crate::gemm::TileConfig;
+use crate::gemm::{micro, MicroCfg, TileConfig};
 use crate::gpusim::GemmShape;
 
 /// What the tuner optimises: the dense baseline or one sparsity-pattern
@@ -134,12 +134,13 @@ pub struct Candidate {
 impl Candidate {
     pub fn label(&self) -> String {
         format!(
-            "{}[bm{},bk{},g{},t{}]",
+            "{}[bm{},bk{},g{},t{},{}]",
             self.variant.label(),
             self.tile.bm,
             self.tile.bk,
             self.g,
-            self.threads
+            self.threads,
+            self.tile.micro.label()
         )
     }
 
@@ -186,6 +187,9 @@ pub struct SearchSpace {
     pub gs: Vec<usize>,
     /// Thread counts (always includes 1).
     pub threads: Vec<usize>,
+    /// Microkernel requests crossed with every blocking (the inner-loop
+    /// axis: scalar loops vs the detected ISA's register blocks).
+    pub micros: Vec<MicroCfg>,
 }
 
 impl Default for SearchSpace {
@@ -195,6 +199,7 @@ impl Default for SearchSpace {
             bks: vec![32, 64, 128],
             gs: vec![16, 32, 64, 128],
             threads: vec![1],
+            micros: micro::search_axis(),
         }
     }
 }
@@ -311,11 +316,25 @@ impl SearchSpace {
                 }
             }
         }
-        let default = Candidate::default_for(family);
-        if !out.contains(&default) {
-            out.push(default);
+        // microkernel axis: cross every blocking with each requested
+        // inner-loop strategy.  The family default keeps `Auto` (resolved
+        // at run time), so the historical behaviour stays a measured point.
+        let micros: &[MicroCfg] =
+            if self.micros.is_empty() { &[MicroCfg::Auto] } else { &self.micros };
+        let mut crossed: Vec<Candidate> = Vec::with_capacity(out.len() * micros.len());
+        for c in &out {
+            for &mc in micros {
+                let cc = Candidate { tile: c.tile.with_micro(mc), ..*c };
+                if !crossed.contains(&cc) {
+                    crossed.push(cc);
+                }
+            }
         }
-        out
+        let default = Candidate::default_for(family);
+        if !crossed.contains(&default) {
+            crossed.push(default);
+        }
+        crossed
     }
 }
 
@@ -371,6 +390,23 @@ mod tests {
             .iter()
             .filter(|c| **c != Candidate::default_for(PatternFamily::Tw))
             .all(|c| c.g <= 24));
+    }
+
+    #[test]
+    fn micro_axis_crosses_candidates() {
+        let shape = GemmShape::new(64, 256, 256);
+        let mut space = SearchSpace::default();
+        space.micros = vec![MicroCfg::Scalar, MicroCfg::Simd { mr: 4, nr: 16 }];
+        let simd = MicroCfg::Simd { mr: 4, nr: 16 };
+        for family in
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24]
+        {
+            let cands = space.candidates(shape, family);
+            assert!(cands.iter().any(|c| c.tile.micro == MicroCfg::Scalar), "{family:?}");
+            assert!(cands.iter().any(|c| c.tile.micro == simd), "{family:?}");
+            // the historical default (micro = Auto) stays a measured point
+            assert!(cands.contains(&Candidate::default_for(family)), "{family:?}");
+        }
     }
 
     #[test]

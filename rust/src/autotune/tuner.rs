@@ -133,6 +133,7 @@ impl Tuner {
             bk: win.tile.bk,
             g: win.g,
             threads: win.threads,
+            micro: win.tile.micro.label(),
             measured_us: win_secs * 1e6,
             model_us: win_model * 1e6,
             default_us: default_meas.mean_secs * 1e6,
@@ -213,6 +214,7 @@ mod tests {
                 bks: vec![64],
                 gs: vec![16, 32],
                 threads: vec![1],
+                ..SearchSpace::default()
             },
             ..TunerOpts::default()
         }

@@ -352,6 +352,7 @@ mod tests {
             bk: 64,
             g: 8,
             threads: 1,
+            micro: "auto".into(),
             measured_us: 1.0,
             model_us: 1.0,
             default_us: 2.0,

@@ -4,6 +4,7 @@
 //! `matmul_naive` is the textbook triple loop kept for correctness
 //! cross-checks and as the "before" point of the §Perf log.
 
+use super::micro::{self, PackedPanel};
 use super::TileConfig;
 use crate::pool::{self, ThreadPool};
 use crate::tensor::Matrix;
@@ -24,12 +25,37 @@ pub fn matmul_tiled(a: &Matrix, b: &Matrix, cfg: &TileConfig) -> Matrix {
 
 /// In-place blocked GEMM: `c` is fully overwritten (zeroed, then
 /// accumulated into).  The serving hot loop reuses the output allocation.
+/// Dispatches to the SIMD microkernels when `cfg.micro` resolves to one.
 pub fn matmul_tiled_into(a: &Matrix, b: &Matrix, c: &mut Matrix, cfg: &TileConfig) {
+    matmul_tiled_into_panel(a, b, None, c, cfg);
+}
+
+/// Panel-aware form of [`matmul_tiled_into`]: when the graph executor
+/// packed B into a [`PackedPanel`] at weight-pack time and its strip
+/// width matches the resolved microkernel, the kernel streams the panel
+/// contiguously instead of striding B rows.
+pub fn matmul_tiled_into_panel(
+    a: &Matrix,
+    b: &Matrix,
+    panel: Option<&PackedPanel>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+) {
     assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
     c.data.fill(0.0);
+    let r = micro::resolve(cfg);
+    if micro::dense_blocked(&r, a, b, panel, c, cfg) {
+        return;
+    }
+    scalar_tiled_into(a, b, c, cfg);
+}
+
+/// The scalar blocked loops (the always-available fallback; `c` must be
+/// pre-zeroed).  Loop order and 2-way k-unroll as in the module docs.
+fn scalar_tiled_into(a: &Matrix, b: &Matrix, c: &mut Matrix, cfg: &TileConfig) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
     let bm = cfg.bm();
     let bk = cfg.bk();
     for i0 in (0..m).step_by(bm) {
@@ -126,10 +152,18 @@ pub fn matmul_parallel_into(
     let band = m.div_ceil(eff);
     let a_data = &a.data;
     let b_data = &b.data;
+    let r = micro::resolve(cfg);
     pool.for_each_chunk_mut(&mut c.data, band * n, |t, chunk| {
         chunk.fill(0.0);
         let i0 = t * band;
         let rows = chunk.len() / n;
+        if rows == 0 {
+            return;
+        }
+        let arows = &a_data[i0 * k..];
+        if micro::gemm_strided(&r, rows, k, n, arows, k, b_data, n, chunk, n) {
+            return;
+        }
         for i in 0..rows {
             let arow = &a_data[(i0 + i) * k..(i0 + i + 1) * k];
             let crow = &mut chunk[i * n..(i + 1) * n];
@@ -223,6 +257,47 @@ mod tests {
         assert_eq!(effective_parallel_threads(64, 4), 4);
         assert_eq!(effective_parallel_threads(31, 4), 1);
         assert_eq!(effective_parallel_threads(1000, 1), 1);
+    }
+
+    #[test]
+    fn simd_and_scalar_paths_agree() {
+        use super::super::MicroCfg;
+        let mut rng = Rng::new(76);
+        // awkward shapes on purpose: K not a lane multiple, N not an NR
+        // multiple, m = 1, single-element
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (13, 9, 23), (33, 17, 40), (64, 65, 31)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let base = TileConfig::new(16, 16);
+            let scalar = matmul_tiled(&a, &b, &base.with_micro(MicroCfg::Scalar));
+            assert!(scalar.max_abs_diff(&matmul_naive(&a, &b)) < 1e-3);
+            for &(mr, nr) in &[(1u8, 8u8), (4, 8), (4, 16), (8, 8), (8, 16)] {
+                let cfg = base.with_micro(MicroCfg::Simd { mr, nr });
+                let got = matmul_tiled(&a, &b, &cfg);
+                let d = got.max_abs_diff(&scalar);
+                assert!(d < 1e-4, "m={m} k={k} n={n} mr={mr} nr={nr} diff={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_path_matches_strided() {
+        let mut rng = Rng::new(77);
+        let cfg = TileConfig::new(32, 24);
+        let r = crate::gemm::micro::resolve(&cfg);
+        if !r.is_simd() {
+            return; // scalar-only host (or PALLAS_FORCE_SCALAR): nothing to compare
+        }
+        for &(m, k, n) in &[(9usize, 31usize, 21usize), (1, 8, 16), (17, 64, 50)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let panel = crate::gemm::micro::PackedPanel::pack(&b.data, k, n, n, r.nr);
+            let mut want = Matrix::zeros(m, n);
+            matmul_tiled_into(&a, &b, &mut want, &cfg);
+            let mut got = Matrix::zeros(m, n);
+            matmul_tiled_into_panel(&a, &b, Some(&panel), &mut got, &cfg);
+            assert!(got.max_abs_diff(&want) < 1e-4, "{m}x{k}x{n}");
+        }
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! AVX2 f32 microkernels: 8-lane FMA with register-blocked MR x NR
+//! accumulator tiles, plus the 2:4 metadata-shuffle selection kernel.
+//!
+//! Everything here requires AVX2+FMA at runtime.  Callers go through the
+//! dispatch wrappers in [`super`], which consult
+//! `is_x86_feature_detected!` (cached in [`super::active_isa`]) before
+//! reaching this module — these functions are never called on hardware
+//! that lacks the features they enable.
+
+use core::arch::x86_64::*;
+
+use super::panel::PackedPanel;
+
+/// Snap an arbitrary (MR, NR-vectors) request onto a compiled kernel
+/// instantiation: NRV in {1, 2}, MR in {1, 2, 4, 8}, capped at MR = 4
+/// when NRV = 2 so the accumulator tile plus the two B vectors and the
+/// A broadcast stay inside the 16-register ymm file.
+pub(super) fn clamp_block(mr: usize, nrv: usize) -> (usize, usize) {
+    let nrv = if nrv >= 2 { 2 } else { 1 };
+    let cap = if nrv == 2 { 4 } else { 8 };
+    let want = mr.clamp(1, cap);
+    let mr = [8usize, 4, 2, 1].into_iter().find(|&c| c <= want).unwrap_or(1);
+    (mr, nrv)
+}
+
+macro_rules! def_kernel {
+    ($name:ident, $mr:expr, $nrv:expr) => {
+        /// One register tile: C[MR x 8*NRV] += A[MR x kt] * B[kt x 8*NRV].
+        /// A rows stride by `lda`, B reduction steps stride by `ldb`,
+        /// C rows stride by `ldc`; all pointers at the tile origin.
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $name(
+            a: *const f32,
+            lda: usize,
+            b: *const f32,
+            ldb: usize,
+            c: *mut f32,
+            ldc: usize,
+            kt: usize,
+        ) {
+            const MR: usize = $mr;
+            const NRV: usize = $nrv;
+            let mut acc = [[_mm256_setzero_ps(); NRV]; MR];
+            let mut ap = a;
+            let mut bp = b;
+            for _ in 0..kt {
+                let mut bv = [_mm256_setzero_ps(); NRV];
+                for (v, slot) in bv.iter_mut().enumerate() {
+                    *slot = _mm256_loadu_ps(bp.add(8 * v));
+                }
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*ap.add(i * lda));
+                    for (cell, bvec) in row.iter_mut().zip(bv.iter()) {
+                        *cell = _mm256_fmadd_ps(av, *bvec, *cell);
+                    }
+                }
+                ap = ap.add(1);
+                bp = bp.add(ldb);
+            }
+            for (i, row) in acc.iter().enumerate() {
+                for (v, cell) in row.iter().enumerate() {
+                    let cp = c.add(i * ldc + 8 * v);
+                    _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), *cell));
+                }
+            }
+        }
+    };
+}
+
+def_kernel!(k1x1, 1, 1);
+def_kernel!(k2x1, 2, 1);
+def_kernel!(k4x1, 4, 1);
+def_kernel!(k8x1, 8, 1);
+def_kernel!(k1x2, 1, 2);
+def_kernel!(k2x2, 2, 2);
+def_kernel!(k4x2, 4, 2);
+
+/// Route to the matching instantiation; `(mr, nrv)` must come from
+/// [`clamp_block`] (the wildcard arm is the remaining (1, 2) case).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn kernel(
+    mr: usize,
+    nrv: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    kt: usize,
+) {
+    match (mr, nrv) {
+        (8, 1) => k8x1(a, lda, b, ldb, c, ldc, kt),
+        (4, 1) => k4x1(a, lda, b, ldb, c, ldc, kt),
+        (2, 1) => k2x1(a, lda, b, ldb, c, ldc, kt),
+        (1, 1) => k1x1(a, lda, b, ldb, c, ldc, kt),
+        (4, 2) => k4x2(a, lda, b, ldb, c, ldc, kt),
+        (2, 2) => k2x2(a, lda, b, ldb, c, ldc, kt),
+        _ => k1x2(a, lda, b, ldb, c, ldc, kt),
+    }
+}
+
+/// All rows of one strip: MR-sized row blocks, row remainder at MR = 1.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn strip(
+    m: usize,
+    kt: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nrv: usize,
+) {
+    let mut i = 0;
+    while i + mr <= m {
+        kernel(mr, nrv, a.add(i * lda), lda, b, ldb, c.add(i * ldc), ldc, kt);
+        i += mr;
+    }
+    while i < m {
+        kernel(1, nrv, a.add(i * lda), lda, b, ldb, c.add(i * ldc), ldc, kt);
+        i += 1;
+    }
+}
+
+/// Columns past the last full 8-wide strip (< 8 of them): plain scalar —
+/// B is strided here, so masked loads would not pay for themselves.
+#[allow(clippy::too_many_arguments)]
+unsafe fn scalar_cols(
+    m: usize,
+    kt: usize,
+    w: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+) {
+    for i in 0..m {
+        for j in 0..w {
+            let mut acc = 0.0f32;
+            for kk in 0..kt {
+                acc += *a.add(i * lda + kk) * *b.add(kk * ldb + j);
+            }
+            *c.add(i * ldc + j) += acc;
+        }
+    }
+}
+
+/// C (m x n, row stride `ldc`) += A (m x kt, row stride `lda`) *
+/// B (kt x n, row stride `ldb`): the strided-B entry point.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn gemm_strided(
+    m: usize,
+    kt: usize,
+    n: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nrv: usize,
+) {
+    let (mr, nrv) = clamp_block(mr, nrv);
+    let mut j = 0;
+    while j + 8 * nrv <= n {
+        strip(m, kt, a, lda, b.add(j), ldb, c.add(j), ldc, mr, nrv);
+        j += 8 * nrv;
+    }
+    if nrv == 2 && j + 8 <= n {
+        strip(m, kt, a, lda, b.add(j), ldb, c.add(j), ldc, mr, 1);
+        j += 8;
+    }
+    if j < n {
+        scalar_cols(m, kt, n - j, a, lda, b.add(j), ldb, c.add(j), ldc);
+    }
+}
+
+/// C (m x panel.n, row stride `ldc`) += A (m x kt, row stride `lda`,
+/// reduction offset `k0` into the panel) * the packed strips of `panel`.
+/// Full strips stream contiguously at stride NR; the zero-padded tail
+/// strip is computed into a stack tile and only its valid lanes added.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn gemm_panel(
+    m: usize,
+    k0: usize,
+    kt: usize,
+    a: *const f32,
+    lda: usize,
+    panel: &PackedPanel,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+) {
+    let nr = panel.nr;
+    let (mr, nrv) = clamp_block(mr, nr / 8);
+    let data = panel.data.as_ptr();
+    for p in 0..panel.strips() {
+        let j0 = p * nr;
+        let bp = data.add(p * panel.kc * nr + k0 * nr);
+        if j0 + nr <= panel.n {
+            strip(m, kt, a, lda, bp, nr, c.add(j0), ldc, mr, nrv);
+        } else {
+            let w = panel.n - j0;
+            for i in 0..m {
+                let mut tile = [0.0f32; 16];
+                kernel(1, nrv, a.add(i * lda), lda, bp, nr, tile.as_mut_ptr(), 16, kt);
+                let crow = c.add(i * ldc + j0);
+                for (jj, v) in tile.iter().take(w).enumerate() {
+                    *crow.add(jj) += *v;
+                }
+            }
+        }
+    }
+}
+
+/// One activation row of the 2:4 selection kernel: for each output
+/// column `j`, `c[j] += a4[s0[j]] * v0[j] + a4[s1[j]] * v1[j]`.
+///
+/// The 2-bit metadata (in-group positions 0..4, stored as i32) is
+/// expanded in registers: `a4` is duplicated into both 128-bit halves of
+/// a ymm, so `vpermps` with the raw selector values picks the right A
+/// element in every lane, and both compressed value rows are folded in
+/// with one FMA each per 8 columns.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn sel24_row(
+    a4: *const f32,
+    v0: *const f32,
+    s0: *const i32,
+    v1: *const f32,
+    s1: *const i32,
+    c: *mut f32,
+    n: usize,
+) {
+    let a128 = _mm_loadu_ps(a4);
+    let av = _mm256_set_m128(a128, a128);
+    let mut j = 0;
+    while j + 8 <= n {
+        let sel0 = _mm256_loadu_si256(s0.add(j) as *const __m256i);
+        let sel1 = _mm256_loadu_si256(s1.add(j) as *const __m256i);
+        let x0 = _mm256_permutevar8x32_ps(av, sel0);
+        let x1 = _mm256_permutevar8x32_ps(av, sel1);
+        let mut acc = _mm256_loadu_ps(c.add(j));
+        acc = _mm256_fmadd_ps(x0, _mm256_loadu_ps(v0.add(j)), acc);
+        acc = _mm256_fmadd_ps(x1, _mm256_loadu_ps(v1.add(j)), acc);
+        _mm256_storeu_ps(c.add(j), acc);
+        j += 8;
+    }
+    while j < n {
+        let q0 = (*s0.add(j) as usize) & 3;
+        let q1 = (*s1.add(j) as usize) & 3;
+        *c.add(j) += *a4.add(q0) * *v0.add(j) + *a4.add(q1) * *v1.add(j);
+        j += 1;
+    }
+}

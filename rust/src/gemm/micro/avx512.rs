@@ -1,0 +1,187 @@
+//! AVX-512 f32 dense strip kernels (16-lane FMA).
+//!
+//! Compiled only when the build itself targets `avx512f`
+//! (`RUSTFLAGS="-C target-feature=+avx512f"`); default builds never see
+//! these intrinsics and the runtime dispatcher stops at AVX2.  One zmm
+//! per accumulator row (NR = 16), MR in {1, 2, 4, 8} — the 32-register
+//! file leaves headroom, but deeper tiles gain nothing at this width.
+//! The 2:4 selection kernel reuses the AVX2 shuffle path (any `avx512f`
+//! machine has AVX2+FMA).
+
+use core::arch::x86_64::*;
+
+use super::panel::PackedPanel;
+
+/// Snap MR onto a compiled instantiation (NR is fixed at 16 lanes).
+pub(super) fn clamp_mr(mr: usize) -> usize {
+    let want = mr.clamp(1, 8);
+    [8usize, 4, 2, 1].into_iter().find(|&c| c <= want).unwrap_or(1)
+}
+
+macro_rules! def_kernel {
+    ($name:ident, $mr:expr) => {
+        /// One register tile: C[MR x 16] += A[MR x kt] * B[kt x 16].
+        #[target_feature(enable = "avx512f")]
+        unsafe fn $name(
+            a: *const f32,
+            lda: usize,
+            b: *const f32,
+            ldb: usize,
+            c: *mut f32,
+            ldc: usize,
+            kt: usize,
+        ) {
+            const MR: usize = $mr;
+            let mut acc = [_mm512_setzero_ps(); MR];
+            let mut ap = a;
+            let mut bp = b;
+            for _ in 0..kt {
+                let bv = _mm512_loadu_ps(bp);
+                for (i, cell) in acc.iter_mut().enumerate() {
+                    let av = _mm512_set1_ps(*ap.add(i * lda));
+                    *cell = _mm512_fmadd_ps(av, bv, *cell);
+                }
+                ap = ap.add(1);
+                bp = bp.add(ldb);
+            }
+            for (i, cell) in acc.iter().enumerate() {
+                let cp = c.add(i * ldc);
+                _mm512_storeu_ps(cp, _mm512_add_ps(_mm512_loadu_ps(cp), *cell));
+            }
+        }
+    };
+}
+
+def_kernel!(k1, 1);
+def_kernel!(k2, 2);
+def_kernel!(k4, 4);
+def_kernel!(k8, 8);
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx512f")]
+unsafe fn kernel(
+    mr: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    kt: usize,
+) {
+    match mr {
+        8 => k8(a, lda, b, ldb, c, ldc, kt),
+        4 => k4(a, lda, b, ldb, c, ldc, kt),
+        2 => k2(a, lda, b, ldb, c, ldc, kt),
+        _ => k1(a, lda, b, ldb, c, ldc, kt),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx512f")]
+unsafe fn strip(
+    m: usize,
+    kt: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+) {
+    let mut i = 0;
+    while i + mr <= m {
+        kernel(mr, a.add(i * lda), lda, b, ldb, c.add(i * ldc), ldc, kt);
+        i += mr;
+    }
+    while i < m {
+        kernel(1, a.add(i * lda), lda, b, ldb, c.add(i * ldc), ldc, kt);
+        i += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+unsafe fn scalar_cols(
+    m: usize,
+    kt: usize,
+    w: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+) {
+    for i in 0..m {
+        for j in 0..w {
+            let mut acc = 0.0f32;
+            for kk in 0..kt {
+                acc += *a.add(i * lda + kk) * *b.add(kk * ldb + j);
+            }
+            *c.add(i * ldc + j) += acc;
+        }
+    }
+}
+
+/// C (m x n) += A (m x kt) * B (kt x n), strided row-major operands.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn gemm_strided(
+    m: usize,
+    kt: usize,
+    n: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+) {
+    let mr = clamp_mr(mr);
+    let mut j = 0;
+    while j + 16 <= n {
+        strip(m, kt, a, lda, b.add(j), ldb, c.add(j), ldc, mr);
+        j += 16;
+    }
+    if j < n {
+        scalar_cols(m, kt, n - j, a, lda, b.add(j), ldb, c.add(j), ldc);
+    }
+}
+
+/// Panel driver (NR = 16 strips; zero-padded tail via a stack tile).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn gemm_panel(
+    m: usize,
+    k0: usize,
+    kt: usize,
+    a: *const f32,
+    lda: usize,
+    panel: &PackedPanel,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+) {
+    let nr = panel.nr;
+    let mr = clamp_mr(mr);
+    let data = panel.data.as_ptr();
+    for p in 0..panel.strips() {
+        let j0 = p * nr;
+        let bp = data.add(p * panel.kc * nr + k0 * nr);
+        if j0 + nr <= panel.n {
+            strip(m, kt, a, lda, bp, nr, c.add(j0), ldc, mr);
+        } else {
+            let w = panel.n - j0;
+            for i in 0..m {
+                let mut tile = [0.0f32; 16];
+                kernel(1, a.add(i * lda), lda, bp, nr, tile.as_mut_ptr(), 16, kt);
+                let crow = c.add(i * ldc + j0);
+                for (jj, v) in tile.iter().take(w).enumerate() {
+                    *crow.add(jj) += *v;
+                }
+            }
+        }
+    }
+}

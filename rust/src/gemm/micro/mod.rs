@@ -1,0 +1,646 @@
+//! Register-level SIMD microkernels and their runtime dispatch.
+//!
+//! The paper's speedups live at two levels: tile-wise sparsity keeps the
+//! *memory*-level access pattern dense and regular, and the 2:4 pattern
+//! executes its selection at the *register* level.  This module supplies
+//! the register level for the CPU backend: explicit `std::arch`
+//! microkernels with register-blocked MR x NR accumulator tiles, a
+//! packed-B panel layout ([`PackedPanel`]) built once at weight-pack
+//! time, and the metadata-shuffle kernel for the compressed 2:4 format.
+//!
+//! Dispatch contract (see `docs/DESIGN.md` §9):
+//!
+//! 1. [`MicroCfg`] on a `TileConfig` *requests* a kernel (the autotuner's
+//!    microkernel axis; `Auto` everywhere else).
+//! 2. [`resolve`] turns the request into a concrete [`Resolved`] against
+//!    the runtime-detected ISA (`is_x86_feature_detected!`, cached) —
+//!    honouring `PALLAS_FORCE_SCALAR=1` and snapping MR/NR onto a
+//!    compiled instantiation.
+//! 3. Every kernel keeps its scalar loops as the always-available
+//!    fallback: a SIMD request on hardware without that ISA degrades to
+//!    scalar, it never panics.  All wrappers here return `bool` — `false`
+//!    means "not handled, run your scalar loop".
+
+pub mod panel;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+mod avx512;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+pub use panel::PackedPanel;
+
+use std::sync::OnceLock;
+
+use super::TileConfig;
+use crate::tensor::Matrix;
+
+/// Per-config microkernel request, carried on `TileConfig` and searched
+/// by the autotuner alongside the cache-blocking axes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MicroCfg {
+    /// Dispatcher's choice: SIMD at the detected ISA's default register
+    /// block when available, scalar otherwise.
+    Auto,
+    /// Pin to the scalar reference loops.
+    Scalar,
+    /// Pin to SIMD with an explicit MR x NR register block.  Snapped to
+    /// the nearest compiled instantiation; degrades to scalar when no
+    /// SIMD ISA is available at runtime.
+    Simd {
+        /// Accumulator rows per register tile.
+        mr: u8,
+        /// Output columns per register tile (a multiple of the lane width).
+        nr: u8,
+    },
+}
+
+impl MicroCfg {
+    /// Stable text form, used by the plan cache and candidate labels.
+    pub fn label(&self) -> String {
+        match self {
+            MicroCfg::Auto => "auto".to_string(),
+            MicroCfg::Scalar => "scalar".to_string(),
+            MicroCfg::Simd { mr, nr } => format!("simd{mr}x{nr}"),
+        }
+    }
+
+    /// Inverse of [`MicroCfg::label`].
+    pub fn from_label(s: &str) -> Option<MicroCfg> {
+        match s {
+            "auto" => Some(MicroCfg::Auto),
+            "scalar" => Some(MicroCfg::Scalar),
+            _ => {
+                let (mr, nr) = s.strip_prefix("simd")?.split_once('x')?;
+                Some(MicroCfg::Simd { mr: mr.parse().ok()?, nr: nr.parse().ok()? })
+            }
+        }
+    }
+}
+
+/// The SIMD instruction sets the dispatcher knows about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl Isa {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per SIMD register.
+    pub fn lanes(&self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 8,
+            Isa::Avx512 => 16,
+            Isa::Neon => 4,
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::Avx512 => 2,
+            Isa::Neon => 3,
+        }
+    }
+
+    fn from_index(i: usize) -> Isa {
+        match i {
+            1 => Isa::Avx2,
+            2 => Isa::Avx512,
+            3 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+}
+
+/// `PALLAS_FORCE_SCALAR=1` pins every dispatch to the scalar loops — the
+/// CI lane that keeps the fallback path exercised on any hardware.
+pub fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("PALLAS_FORCE_SCALAR").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Isa {
+    #[cfg(target_feature = "avx512f")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Isa::Avx512;
+        }
+    }
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Isa {
+    // NEON is part of the aarch64 baseline.
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Isa {
+    Isa::Scalar
+}
+
+/// The runtime-detected SIMD ISA, resolved once per process and
+/// overridden to `Scalar` by `PALLAS_FORCE_SCALAR`.
+pub fn active_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    if force_scalar() {
+        return Isa::Scalar;
+    }
+    *ISA.get_or_init(detect)
+}
+
+/// Whether any SIMD path can dispatch in this process.
+pub fn simd_available() -> bool {
+    active_isa() != Isa::Scalar
+}
+
+/// Banner label for `serve` startup: which kernel family this process
+/// dispatches to by default.
+pub fn active_label() -> String {
+    if force_scalar() {
+        "scalar(forced)".to_string()
+    } else {
+        active_isa().label().to_string()
+    }
+}
+
+/// Default register block (MR x NR) per ISA.
+pub fn default_block(isa: Isa) -> (usize, usize) {
+    match isa {
+        Isa::Scalar => (0, 0),
+        // 4x2 ymm accumulators + 2 B vectors + 1 A broadcast = 11/16 regs
+        Isa::Avx2 => (4, 16),
+        // one zmm per row out of the 32-register file
+        Isa::Avx512 => (8, 16),
+        Isa::Neon => (4, 8),
+    }
+}
+
+/// Snap a requested (MR, NR) onto the instantiations the ISA compiles.
+fn snap(isa: Isa, mr: usize, nr: usize) -> (usize, usize) {
+    let lanes = isa.lanes();
+    let wide = isa != Isa::Avx512 && nr >= 2 * lanes;
+    let nr = if wide { 2 * lanes } else { lanes };
+    let cap = if wide { 4 } else { 8 };
+    let want = mr.clamp(1, cap);
+    let mr = [8usize, 4, 2, 1].into_iter().find(|&c| c <= want).unwrap_or(1);
+    (mr, nr)
+}
+
+/// A concrete microkernel choice: what [`resolve`] turned a [`MicroCfg`]
+/// into for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resolved {
+    pub isa: Isa,
+    pub mr: usize,
+    pub nr: usize,
+}
+
+impl Resolved {
+    pub const SCALAR: Resolved = Resolved { isa: Isa::Scalar, mr: 0, nr: 0 };
+
+    pub fn is_simd(&self) -> bool {
+        self.isa != Isa::Scalar
+    }
+
+    /// Telemetry label, e.g. `"avx2 4x16"` or `"scalar"`.
+    pub fn label(&self) -> String {
+        if self.is_simd() {
+            format!("{} {}x{}", self.isa.label(), self.mr, self.nr)
+        } else {
+            "scalar".to_string()
+        }
+    }
+
+    /// Pack into a usize for lock-free telemetry
+    /// (`NodeProfile::last_micro` stores this in an atomic).
+    pub fn code(&self) -> usize {
+        (self.isa.index() << 16) | ((self.mr & 0xff) << 8) | (self.nr & 0xff)
+    }
+
+    pub fn from_code(code: usize) -> Resolved {
+        let isa = Isa::from_index((code >> 16) & 0xf);
+        Resolved { isa, mr: (code >> 8) & 0xff, nr: code & 0xff }
+    }
+}
+
+/// Telemetry label for a packed [`Resolved::code`] value.
+pub fn describe(code: usize) -> String {
+    Resolved::from_code(code).label()
+}
+
+/// Resolve a config's microkernel request against the detected ISA.
+pub fn resolve(cfg: &TileConfig) -> Resolved {
+    resolve_with(cfg.micro, active_isa())
+}
+
+/// Pure form of [`resolve`] (unit-testable on any hardware).
+pub fn resolve_with(micro: MicroCfg, isa: Isa) -> Resolved {
+    if isa == Isa::Scalar {
+        return Resolved::SCALAR;
+    }
+    match micro {
+        MicroCfg::Scalar => Resolved::SCALAR,
+        MicroCfg::Auto => {
+            let (mr, nr) = default_block(isa);
+            Resolved { isa, mr, nr }
+        }
+        MicroCfg::Simd { mr, nr } => {
+            let (mr, nr) = snap(isa, mr as usize, nr as usize);
+            Resolved { isa, mr, nr }
+        }
+    }
+}
+
+/// The autotuner's microkernel axis: always the scalar loops, plus the
+/// register blocks worth trying on the detected ISA.
+pub fn search_axis() -> Vec<MicroCfg> {
+    let mut axis = vec![MicroCfg::Scalar];
+    let isa = active_isa();
+    if isa != Isa::Scalar {
+        let (mr, nr) = default_block(isa);
+        axis.push(MicroCfg::Simd { mr: mr as u8, nr: nr as u8 });
+        // a narrow-NR alternative: deeper MR, one B vector per step
+        let alt = MicroCfg::Simd { mr: 8, nr: isa.lanes() as u8 };
+        if !axis.contains(&alt) {
+            axis.push(alt);
+        }
+    }
+    axis
+}
+
+/// Whether this binary actually compiled kernels for `r`'s ISA.
+pub fn supported(r: &Resolved) -> bool {
+    match r.isa {
+        Isa::Scalar => false,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => true,
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+        Isa::Avx512 => true,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// C (m x n, row stride `ldc`) += A (m x kt, row stride `lda`) *
+/// B (kt x n, row stride `ldb`).  Returns `false` when `r` resolves to
+/// scalar (or its ISA is compiled out) — the caller then runs its
+/// scalar loop; `c` is untouched in that case.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_strided(
+    r: &Resolved,
+    m: usize,
+    kt: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) -> bool {
+    if !supported(r) {
+        return false;
+    }
+    if m == 0 || n == 0 || kt == 0 {
+        return true; // nothing to accumulate; counts as handled
+    }
+    debug_assert!((m - 1) * lda + kt <= a.len());
+    debug_assert!((kt - 1) * ldb + n <= b.len());
+    debug_assert!((m - 1) * ldc + n <= c.len());
+    match r.isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            avx2::gemm_strided(
+                m,
+                kt,
+                n,
+                a.as_ptr(),
+                lda,
+                b.as_ptr(),
+                ldb,
+                c.as_mut_ptr(),
+                ldc,
+                r.mr,
+                r.nr / 8,
+            );
+            true
+        },
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+        Isa::Avx512 => unsafe {
+            let (bp, cp) = (b.as_ptr(), c.as_mut_ptr());
+            avx512::gemm_strided(m, kt, n, a.as_ptr(), lda, bp, ldb, cp, ldc, r.mr);
+            true
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::gemm_strided(
+                m,
+                kt,
+                n,
+                a.as_ptr(),
+                lda,
+                b.as_ptr(),
+                ldb,
+                c.as_mut_ptr(),
+                ldc,
+                r.mr,
+                r.nr / 4,
+            );
+            true
+        },
+        _ => false,
+    }
+}
+
+/// C (m x panel.n, row stride `ldc`) += A (m x kt, row stride `lda`,
+/// reduction offset `k0` into the panel's K extent) * the packed strips
+/// of `panel`.  Returns `false` (and leaves `c` untouched) when `r` is
+/// scalar, compiled out, or the panel's strip width does not match the
+/// resolved NR — callers fall back to [`gemm_strided`] or scalar.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_panel(
+    r: &Resolved,
+    m: usize,
+    k0: usize,
+    kt: usize,
+    a: &[f32],
+    lda: usize,
+    panel: &PackedPanel,
+    c: &mut [f32],
+    ldc: usize,
+) -> bool {
+    if !supported(r) || panel.nr != r.nr {
+        return false;
+    }
+    if m == 0 || kt == 0 || panel.n == 0 {
+        return true;
+    }
+    debug_assert!(k0 + kt <= panel.kc);
+    debug_assert!((m - 1) * lda + kt <= a.len());
+    debug_assert!((m - 1) * ldc + panel.n <= c.len());
+    match r.isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            avx2::gemm_panel(m, k0, kt, a.as_ptr(), lda, panel, c.as_mut_ptr(), ldc, r.mr);
+            true
+        },
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+        Isa::Avx512 => unsafe {
+            avx512::gemm_panel(m, k0, kt, a.as_ptr(), lda, panel, c.as_mut_ptr(), ldc, r.mr);
+            true
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::gemm_panel(m, k0, kt, a.as_ptr(), lda, panel, c.as_mut_ptr(), ldc, r.mr);
+            true
+        },
+        _ => false,
+    }
+}
+
+/// One activation-row step of the 2:4 selection: for each output column
+/// `j`, `c[j] += a4[s0[j]] * v0[j] + a4[s1[j]] * v1[j]`, with the 2-bit
+/// metadata expanded via in-register shuffles.  Returns `false` when the
+/// resolved kernel is scalar or the ISA has no shuffle path (NEON) —
+/// the caller then runs the scalar selection loop.
+pub fn sel24_row(
+    r: &Resolved,
+    a4: &[f32; 4],
+    v0: &[f32],
+    s0: &[i32],
+    v1: &[f32],
+    s1: &[i32],
+    c: &mut [f32],
+) -> bool {
+    if !supported(r) {
+        return false;
+    }
+    let n = c.len();
+    debug_assert!(v0.len() >= n && s0.len() >= n && v1.len() >= n && s1.len() >= n);
+    match r.isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 | Isa::Avx512 => unsafe {
+            avx2::sel24_row(
+                a4.as_ptr(),
+                v0.as_ptr(),
+                s0.as_ptr(),
+                v1.as_ptr(),
+                s1.as_ptr(),
+                c.as_mut_ptr(),
+                n,
+            );
+            true
+        },
+        _ => false,
+    }
+}
+
+/// Cache-blocked SIMD driver for the dense pattern: bm x bk blocking
+/// outside, register microkernels inside.  `panel` is consumed when its
+/// geometry matches the resolved NR and the operand shape; otherwise B
+/// streams strided.  Returns `false` on a scalar resolve — the caller
+/// then runs its scalar blocked loops.
+pub fn dense_blocked(
+    r: &Resolved,
+    a: &Matrix,
+    b: &Matrix,
+    panel: Option<&PackedPanel>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+) -> bool {
+    if !supported(r) {
+        return false;
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let bm = cfg.bm();
+    let bk = cfg.bk();
+    let panel = panel.filter(|p| p.nr == r.nr && p.kc == k && p.n == n);
+    for i0 in (0..m).step_by(bm) {
+        let mi = (i0 + bm).min(m) - i0;
+        for k0 in (0..k).step_by(bk) {
+            let kt = (k0 + bk).min(k) - k0;
+            let arow = &a.data[i0 * k + k0..];
+            let cblk = &mut c.data[i0 * n..];
+            let done = match panel {
+                Some(p) => gemm_panel(r, mi, k0, kt, arow, k, p, cblk, n),
+                None => false,
+            };
+            if !done {
+                gemm_strided(r, mi, kt, n, arow, k, &b.data[k0 * n..], n, cblk, n);
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn micro_cfg_labels_roundtrip() {
+        for mc in [MicroCfg::Auto, MicroCfg::Scalar, MicroCfg::Simd { mr: 4, nr: 16 }] {
+            assert_eq!(MicroCfg::from_label(&mc.label()), Some(mc));
+        }
+        assert_eq!(MicroCfg::from_label("simd8x8"), Some(MicroCfg::Simd { mr: 8, nr: 8 }));
+        assert!(MicroCfg::from_label("simd8").is_none());
+        assert!(MicroCfg::from_label("avx3").is_none());
+    }
+
+    #[test]
+    fn resolved_code_roundtrips_for_telemetry() {
+        for r in [
+            Resolved::SCALAR,
+            Resolved { isa: Isa::Avx2, mr: 4, nr: 16 },
+            Resolved { isa: Isa::Avx512, mr: 8, nr: 16 },
+            Resolved { isa: Isa::Neon, mr: 2, nr: 8 },
+        ] {
+            assert_eq!(Resolved::from_code(r.code()), r);
+        }
+        assert_eq!(describe(Resolved { isa: Isa::Avx2, mr: 4, nr: 16 }.code()), "avx2 4x16");
+        assert_eq!(describe(0), "scalar");
+    }
+
+    #[test]
+    fn resolve_snaps_onto_compiled_blocks() {
+        assert_eq!(resolve_with(MicroCfg::Auto, Isa::Scalar), Resolved::SCALAR);
+        assert_eq!(resolve_with(MicroCfg::Scalar, Isa::Avx2), Resolved::SCALAR);
+        let r = resolve_with(MicroCfg::Auto, Isa::Avx2);
+        assert_eq!((r.mr, r.nr), (4, 16));
+        // 8x16 exceeds the ymm file at NRV=2: MR snaps down
+        let r = resolve_with(MicroCfg::Simd { mr: 8, nr: 16 }, Isa::Avx2);
+        assert_eq!((r.mr, r.nr), (4, 16));
+        let r = resolve_with(MicroCfg::Simd { mr: 3, nr: 9 }, Isa::Avx2);
+        assert_eq!((r.mr, r.nr), (2, 8));
+        let r = resolve_with(MicroCfg::Simd { mr: 200, nr: 200 }, Isa::Avx2);
+        assert_eq!((r.mr, r.nr), (4, 16));
+        let r = resolve_with(MicroCfg::Simd { mr: 8, nr: 4 }, Isa::Neon);
+        assert_eq!((r.mr, r.nr), (8, 4));
+        let r = resolve_with(MicroCfg::Simd { mr: 5, nr: 64 }, Isa::Avx512);
+        assert_eq!((r.mr, r.nr), (4, 16));
+    }
+
+    #[test]
+    fn search_axis_always_offers_scalar() {
+        let axis = search_axis();
+        assert!(axis.contains(&MicroCfg::Scalar));
+        if simd_available() {
+            assert!(axis.iter().any(|m| matches!(m, MicroCfg::Simd { .. })));
+        } else {
+            assert_eq!(axis, vec![MicroCfg::Scalar]);
+        }
+    }
+
+    fn reference(m: usize, kt: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..kt {
+                    acc += a[i * kt + kk] * b[kk * n + j];
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn strided_kernel_matches_scalar_reference() {
+        let r = resolve_with(MicroCfg::Auto, active_isa());
+        if !supported(&r) {
+            return; // scalar-only host: the fallback path is the oracle
+        }
+        let mut rng = Rng::new(901);
+        for &(m, kt, n) in &[(1usize, 3usize, 1usize), (5, 7, 9), (13, 16, 24), (17, 33, 50)] {
+            let a: Vec<f32> = (0..m * kt).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..kt * n).map(|_| rng.next_f32() - 0.5).collect();
+            let mut c = vec![0.0f32; m * n];
+            assert!(gemm_strided(&r, m, kt, n, &a, kt, &b, n, &mut c, n));
+            let want = reference(m, kt, n, &a, &b);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{m}x{kt}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_kernel_matches_strided() {
+        let r = resolve_with(MicroCfg::Auto, active_isa());
+        if !supported(&r) {
+            return;
+        }
+        let mut rng = Rng::new(902);
+        // N deliberately not a multiple of NR: exercises the padded tail
+        for &(m, kt, n) in &[(6usize, 11usize, 19usize), (3, 8, 8), (1, 5, 33)] {
+            let a: Vec<f32> = (0..m * kt).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..kt * n).map(|_| rng.next_f32() - 0.5).collect();
+            let panel = PackedPanel::pack(&b, kt, n, n, r.nr);
+            let mut c = vec![0.0f32; m * n];
+            assert!(gemm_panel(&r, m, 0, kt, &a, kt, &panel, &mut c, n));
+            let want = reference(m, kt, n, &a, &b);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{m}x{kt}x{n}");
+            }
+        }
+        // strip-width mismatch refuses rather than mis-indexing
+        let b = vec![0.0f32; 4 * 8];
+        let panel = PackedPanel::pack(&b, 4, 8, 8, r.nr * 2);
+        let mut c = vec![0.0f32; 8];
+        assert!(!gemm_panel(&r, 1, 0, 4, &[0.0; 4], 4, &panel, &mut c, 8));
+    }
+
+    #[test]
+    fn sel24_matches_scalar_selection() {
+        let r = resolve_with(MicroCfg::Auto, active_isa());
+        if !supported(&r) {
+            return;
+        }
+        let mut rng = Rng::new(903);
+        let n = 21; // not a multiple of 8: scalar tail in play
+        let a4 = [0.5f32, -1.25, 2.0, 0.125];
+        let v0: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let v1: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let s0: Vec<i32> = (0..n).map(|_| rng.below(4) as i32).collect();
+        let s1: Vec<i32> = (0..n).map(|_| rng.below(4) as i32).collect();
+        let init: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let mut c = init.clone();
+        if !sel24_row(&r, &a4, &v0, &s0, &v1, &s1, &mut c) {
+            return; // no shuffle path on this ISA (NEON)
+        }
+        for j in 0..n {
+            let want = init[j] + a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
+            assert!((c[j] - want).abs() < 1e-4, "j={j}");
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! NEON f32 microkernels (4-lane FMA) for aarch64.
+//!
+//! Mirrors the AVX2 module at half the lane width: register-blocked
+//! MR x NR dense/strided kernels and the packed-panel driver.  The 2:4
+//! selection kernel stays scalar on this architecture (NEON `tbl` works
+//! on bytes, not f32 lanes; the scalar selection loop is already cheap
+//! relative to the 4-lane FMA win), so [`super::sel24_row`] reports
+//! "unsupported" here and the caller keeps its scalar loop.
+
+use core::arch::aarch64::*;
+
+use super::panel::PackedPanel;
+
+/// Snap onto a compiled instantiation: NRV in {1, 2}, MR in {1, 2, 4, 8}
+/// (capped at 4 when NRV = 2 — same tile shapes as the AVX2 set, so one
+/// autotune axis serves both ISAs).
+pub(super) fn clamp_block(mr: usize, nrv: usize) -> (usize, usize) {
+    let nrv = if nrv >= 2 { 2 } else { 1 };
+    let cap = if nrv == 2 { 4 } else { 8 };
+    let want = mr.clamp(1, cap);
+    let mr = [8usize, 4, 2, 1].into_iter().find(|&c| c <= want).unwrap_or(1);
+    (mr, nrv)
+}
+
+macro_rules! def_kernel {
+    ($name:ident, $mr:expr, $nrv:expr) => {
+        /// One register tile: C[MR x 4*NRV] += A[MR x kt] * B[kt x 4*NRV].
+        #[target_feature(enable = "neon")]
+        unsafe fn $name(
+            a: *const f32,
+            lda: usize,
+            b: *const f32,
+            ldb: usize,
+            c: *mut f32,
+            ldc: usize,
+            kt: usize,
+        ) {
+            const MR: usize = $mr;
+            const NRV: usize = $nrv;
+            let mut acc = [[vdupq_n_f32(0.0); NRV]; MR];
+            let mut ap = a;
+            let mut bp = b;
+            for _ in 0..kt {
+                let mut bv = [vdupq_n_f32(0.0); NRV];
+                for (v, slot) in bv.iter_mut().enumerate() {
+                    *slot = vld1q_f32(bp.add(4 * v));
+                }
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f32(*ap.add(i * lda));
+                    for (cell, bvec) in row.iter_mut().zip(bv.iter()) {
+                        *cell = vfmaq_f32(*cell, av, *bvec);
+                    }
+                }
+                ap = ap.add(1);
+                bp = bp.add(ldb);
+            }
+            for (i, row) in acc.iter().enumerate() {
+                for (v, cell) in row.iter().enumerate() {
+                    let cp = c.add(i * ldc + 4 * v);
+                    vst1q_f32(cp, vaddq_f32(vld1q_f32(cp), *cell));
+                }
+            }
+        }
+    };
+}
+
+def_kernel!(k1x1, 1, 1);
+def_kernel!(k2x1, 2, 1);
+def_kernel!(k4x1, 4, 1);
+def_kernel!(k8x1, 8, 1);
+def_kernel!(k1x2, 1, 2);
+def_kernel!(k2x2, 2, 2);
+def_kernel!(k4x2, 4, 2);
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn kernel(
+    mr: usize,
+    nrv: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    kt: usize,
+) {
+    match (mr, nrv) {
+        (8, 1) => k8x1(a, lda, b, ldb, c, ldc, kt),
+        (4, 1) => k4x1(a, lda, b, ldb, c, ldc, kt),
+        (2, 1) => k2x1(a, lda, b, ldb, c, ldc, kt),
+        (1, 1) => k1x1(a, lda, b, ldb, c, ldc, kt),
+        (4, 2) => k4x2(a, lda, b, ldb, c, ldc, kt),
+        (2, 2) => k2x2(a, lda, b, ldb, c, ldc, kt),
+        _ => k1x2(a, lda, b, ldb, c, ldc, kt),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn strip(
+    m: usize,
+    kt: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nrv: usize,
+) {
+    let mut i = 0;
+    while i + mr <= m {
+        kernel(mr, nrv, a.add(i * lda), lda, b, ldb, c.add(i * ldc), ldc, kt);
+        i += mr;
+    }
+    while i < m {
+        kernel(1, nrv, a.add(i * lda), lda, b, ldb, c.add(i * ldc), ldc, kt);
+        i += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+unsafe fn scalar_cols(
+    m: usize,
+    kt: usize,
+    w: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+) {
+    for i in 0..m {
+        for j in 0..w {
+            let mut acc = 0.0f32;
+            for kk in 0..kt {
+                acc += *a.add(i * lda + kk) * *b.add(kk * ldb + j);
+            }
+            *c.add(i * ldc + j) += acc;
+        }
+    }
+}
+
+/// C (m x n) += A (m x kt) * B (kt x n), strided row-major operands.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn gemm_strided(
+    m: usize,
+    kt: usize,
+    n: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nrv: usize,
+) {
+    let (mr, nrv) = clamp_block(mr, nrv);
+    let mut j = 0;
+    while j + 4 * nrv <= n {
+        strip(m, kt, a, lda, b.add(j), ldb, c.add(j), ldc, mr, nrv);
+        j += 4 * nrv;
+    }
+    if nrv == 2 && j + 4 <= n {
+        strip(m, kt, a, lda, b.add(j), ldb, c.add(j), ldc, mr, 1);
+        j += 4;
+    }
+    if j < n {
+        scalar_cols(m, kt, n - j, a, lda, b.add(j), ldb, c.add(j), ldc);
+    }
+}
+
+/// Panel driver: full strips stream contiguously, the zero-padded tail
+/// strip goes through a stack tile (see the AVX2 twin for the layout).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn gemm_panel(
+    m: usize,
+    k0: usize,
+    kt: usize,
+    a: *const f32,
+    lda: usize,
+    panel: &PackedPanel,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+) {
+    let nr = panel.nr;
+    let (mr, nrv) = clamp_block(mr, nr / 4);
+    let data = panel.data.as_ptr();
+    for p in 0..panel.strips() {
+        let j0 = p * nr;
+        let bp = data.add(p * panel.kc * nr + k0 * nr);
+        if j0 + nr <= panel.n {
+            strip(m, kt, a, lda, bp, nr, c.add(j0), ldc, mr, nrv);
+        } else {
+            let w = panel.n - j0;
+            for i in 0..m {
+                let mut tile = [0.0f32; 8];
+                kernel(1, nrv, a.add(i * lda), lda, bp, nr, tile.as_mut_ptr(), 8, kt);
+                let crow = c.add(i * ldc + j0);
+                for (jj, v) in tile.iter().take(w).enumerate() {
+                    *crow.add(jj) += *v;
+                }
+            }
+        }
+    }
+}

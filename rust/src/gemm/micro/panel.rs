@@ -1,0 +1,105 @@
+//! K-major packed-B panels.
+//!
+//! The strided microkernel loads each B row at stride `ldb`, which walks
+//! the cache a full row apart per reduction step.  For the serving path —
+//! where the weight is packed once and streamed on every request — we
+//! re-lay B out as NR-wide column strips stored K-major:
+//!
+//! ```text
+//! data[strip * kc * nr + kk * nr + lane]  ==  B[kk, strip * nr + lane]
+//! ```
+//!
+//! so the microkernel's per-k step reads one contiguous `nr`-wide run and
+//! an entire strip streams sequentially through the hardware prefetcher.
+//! The last strip is zero-padded to `nr` lanes: kernels may compute the
+//! full strip width into a staging tile, and the padding contributes
+//! exact zeros.
+//!
+//! Only the dense and TW operands need this treatment.  The TVW / 2:4
+//! plan arrays (`b_vals` / `b_sel`) are already laid out contiguously in
+//! the output-column direction — the condensed plan is its own panel
+//! layout — so those kernels stream the plan directly.
+
+/// One B operand repacked into K-major, NR-wide column strips.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedPanel {
+    /// Strip width (the microkernel NR).
+    pub nr: usize,
+    /// Reduction extent (B rows).
+    pub kc: usize,
+    /// Valid output columns (B cols; the last strip pads up to `nr`).
+    pub n: usize,
+    /// `strips() * kc * nr` values.
+    pub data: Vec<f32>,
+}
+
+impl PackedPanel {
+    /// Repack a row-major `kc x n` block (row stride `ldb >= n`) into
+    /// K-major NR-wide strips.  Rows beyond the source block are the
+    /// caller's concern; lanes past `n` in the last strip are zero.
+    pub fn pack(b: &[f32], kc: usize, n: usize, ldb: usize, nr: usize) -> PackedPanel {
+        assert!(nr > 0, "panel strip width must be nonzero");
+        assert!(n <= ldb, "panel: n={n} exceeds row stride ldb={ldb}");
+        assert!(kc == 0 || n == 0 || (kc - 1) * ldb + n <= b.len(), "panel source out of bounds");
+        let strips = n.div_ceil(nr);
+        let mut data = vec![0.0f32; strips * kc * nr];
+        for s in 0..strips {
+            let j0 = s * nr;
+            let w = (n - j0).min(nr);
+            for kk in 0..kc {
+                let src = &b[kk * ldb + j0..kk * ldb + j0 + w];
+                let base = s * kc * nr + kk * nr;
+                data[base..base + w].copy_from_slice(src);
+            }
+        }
+        PackedPanel { nr, kc, n, data }
+    }
+
+    /// Number of NR-wide strips (the last one may be partial).
+    pub fn strips(&self) -> usize {
+        self.n.div_ceil(self.nr)
+    }
+
+    /// Bytes held by the packed copy (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_reorders_into_k_major_strips() {
+        // 3 x 5 block inside a row stride of 6, nr = 2 -> 3 strips
+        let ldb = 6;
+        let b: Vec<f32> = (0..3 * ldb).map(|x| x as f32).collect();
+        let p = PackedPanel::pack(&b, 3, 5, ldb, 2);
+        assert_eq!(p.strips(), 3);
+        assert_eq!(p.data.len(), 3 * 3 * 2);
+        for kk in 0..3 {
+            for j in 0..5 {
+                let (s, lane) = (j / 2, j % 2);
+                let got = p.data[s * 3 * 2 + kk * 2 + lane];
+                assert_eq!(got, b[kk * ldb + j], "k={kk} j={j}");
+            }
+            // padded lane of the last strip stays zero
+            assert_eq!(p.data[2 * 3 * 2 + kk * 2 + 1], 0.0);
+        }
+        assert_eq!(p.bytes(), p.data.len() * 4);
+    }
+
+    #[test]
+    fn degenerate_shapes_pack_cleanly() {
+        let p = PackedPanel::pack(&[], 0, 0, 0, 8);
+        assert_eq!(p.strips(), 0);
+        assert!(p.data.is_empty());
+        let b = vec![1.0f32; 4];
+        let p = PackedPanel::pack(&b, 4, 1, 1, 8);
+        assert_eq!(p.strips(), 1);
+        assert_eq!(p.data.len(), 4 * 8);
+        assert_eq!(p.data[0], 1.0);
+        assert_eq!(p.data[1], 0.0);
+    }
+}

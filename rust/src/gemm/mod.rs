@@ -9,19 +9,21 @@
 //! searches over these configs empirically.
 
 pub mod dense;
+pub mod micro;
 pub mod spmm;
 pub mod tw;
 pub mod vw;
 
 pub use dense::{
     effective_parallel_threads, matmul, matmul_naive, matmul_parallel, matmul_parallel_into,
-    matmul_tiled, matmul_tiled_into,
+    matmul_tiled, matmul_tiled_into, matmul_tiled_into_panel,
 };
+pub use micro::{MicroCfg, PackedPanel};
 pub use spmm::{block_spmm, csr_spmm, BlockSparse};
 pub use tw::{
     tw_effective_parallel_threads, tw_matmul, tw_matmul_into, tw_matmul_into_scratch,
-    tw_matmul_into_with, tw_matmul_masked, tw_matmul_parallel, tw_matmul_parallel_into,
-    tw_matmul_per_tile, tw_matmul_with,
+    tw_matmul_into_scratch_panels, tw_matmul_into_with, tw_matmul_masked, tw_matmul_parallel,
+    tw_matmul_parallel_into, tw_matmul_per_tile, tw_matmul_with, tw_pack_panels,
 };
 pub use vw::{
     tvw_effective_parallel_threads, tvw_matmul, tvw_matmul_into_scratch, tvw_matmul_into_with,
@@ -77,11 +79,20 @@ pub struct TileConfig {
     pub bm: usize,
     /// Reduction-block (K) extent.
     pub bk: usize,
+    /// Microkernel request for the inner loops (the autotuner's third
+    /// axis; `Auto` picks SIMD whenever the runtime ISA allows it).
+    pub micro: MicroCfg,
 }
 
 impl TileConfig {
     pub const fn new(bm: usize, bk: usize) -> TileConfig {
-        TileConfig { bm, bk }
+        TileConfig { bm, bk, micro: MicroCfg::Auto }
+    }
+
+    /// Same blocking with an explicit microkernel request.
+    pub const fn with_micro(mut self, micro: MicroCfg) -> TileConfig {
+        self.micro = micro;
+        self
     }
 
     /// The crate's historical hard-coded dense blocking (64 x 64, tuned
@@ -113,6 +124,30 @@ impl TileConfig {
 
     pub fn bk(&self) -> usize {
         self.bk.max(1)
+    }
+
+    /// Validate block extents against a pattern family label ("DENSE" /
+    /// "TW" / "TVW" / "VW-4").  The kernels themselves clamp degenerate
+    /// extents (the historical in-process behaviour, kept above), but
+    /// *persisted* configs — plan-cache entries crossing a process
+    /// boundary — are rejected instead: a stale entry with `bm = 0` or a
+    /// misaligned `bk` should fail loudly at load time, not silently
+    /// mis-tile every request it routes.
+    pub fn validate(&self, pattern: &str) -> Result<(), String> {
+        if self.bm == 0 || self.bk == 0 {
+            return Err(format!(
+                "invalid tile config bm={} bk={}: block extents must be nonzero",
+                self.bm, self.bk
+            ));
+        }
+        if matches!(pattern, "TVW" | "VW-4") && self.bk % 4 != 0 {
+            return Err(format!(
+                "invalid tile config for {pattern}: bk={} must be a multiple of 4 \
+                 (2:4 K-groups are four reduction rows wide)",
+                self.bk
+            ));
+        }
+        Ok(())
     }
 }
 

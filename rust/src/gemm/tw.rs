@@ -9,6 +9,7 @@
 //!   3. `tw_matmul`          — single fused pass over all tiles driven by
 //!      the CTO offset tables (the paper's final CTO kernel).
 
+use super::micro::{self, PackedPanel};
 use super::TileConfig;
 use crate::pool::{self, split_range, SendPtr, ThreadPool};
 use crate::sparse::{Mask, TwPlan};
@@ -101,10 +102,41 @@ pub fn tw_matmul_into_scratch(
     cfg: &TileConfig,
     scratch: &mut crate::gemm::GemmScratch,
 ) {
+    tw_matmul_into_scratch_panels(a, plan, None, c, cfg, scratch);
+}
+
+/// Pack each condensed tile's `b_cond` block (`kmax x g`) into K-major
+/// panels for the SIMD microkernel.  Built once at weight-pack time
+/// (`graph::pack`) and fed to [`tw_matmul_into_scratch_panels`]; rows
+/// past a tile's `row_len` are the plan's zero padding, so the panels
+/// stay valid for every `kt`.
+pub fn tw_pack_panels(plan: &TwPlan, nr: usize) -> Vec<PackedPanel> {
+    (0..plan.tiles)
+        .map(|t| {
+            let base = t * plan.kmax * plan.g;
+            let block = &plan.b_cond[base..base + plan.kmax * plan.g];
+            PackedPanel::pack(block, plan.kmax, plan.g, plan.g, nr)
+        })
+        .collect()
+}
+
+/// Panel-aware form of [`tw_matmul_into_scratch`]: with matching panels
+/// the SIMD kernel streams each tile's condensed B contiguously; without
+/// them it strides `b_cond` directly (row stride `g`), and a scalar
+/// resolve keeps the historical blocked loops.
+pub fn tw_matmul_into_scratch_panels(
+    a: &Matrix,
+    plan: &TwPlan,
+    panels: Option<&[PackedPanel]>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut crate::gemm::GemmScratch,
+) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let m = a.rows;
     let bm = cfg.bm();
+    let r = micro::resolve(cfg);
     scratch.ensure(bm * plan.kmax, bm * plan.g);
     let (a_gather, c_tile) = (&mut scratch.a, &mut scratch.c);
     for t in 0..plan.tiles {
@@ -126,32 +158,58 @@ pub fn tw_matmul_into_scratch(
                     *d = arow[r as usize];
                 }
             }
-            // blocked (bm x kt) x (kt x width) GEMM into c_tile
-            // (§Perf: 2-way k unroll matching gemm::dense — one pass over
-            // the C row per two condensed B rows)
-            c_tile[..bm * width].fill(0.0);
-            for i in 0..bm {
-                let ag = &a_gather[i * plan.kmax..i * plan.kmax + kt];
-                let crow = &mut c_tile[i * width..(i + 1) * width];
-                let mut ii = 0usize;
-                while ii + 1 < kt {
-                    let a0 = ag[ii];
-                    let a1 = ag[ii + 1];
-                    let base0 = (t * plan.kmax + ii) * plan.g;
-                    let base1 = (t * plan.kmax + ii + 1) * plan.g;
-                    let b0 = &plan.b_cond[base0..base0 + width];
-                    let b1 = &plan.b_cond[base1..base1 + width];
-                    for ((cv, bv0), bv1) in crow.iter_mut().zip(b0).zip(b1) {
-                        *cv += a0 * bv0 + a1 * bv1;
+            // (bm x kt) x (kt x width) GEMM into c_tile; `stride` is the
+            // c_tile row stride the scatter below must use (the panel
+            // path computes the full g-wide tile, the others pack tight)
+            let mut stride = 0usize;
+            if let Some(ps) = panels {
+                let p = &ps[t];
+                if p.nr == r.nr && p.kc == plan.kmax && p.n == plan.g {
+                    let ct = &mut c_tile[..bm * plan.g];
+                    ct.fill(0.0);
+                    if micro::gemm_panel(&r, bm, 0, kt, a_gather, plan.kmax, p, ct, plan.g) {
+                        stride = plan.g;
                     }
-                    ii += 2;
                 }
-                if ii < kt {
-                    let av = ag[ii];
-                    let base = (t * plan.kmax + ii) * plan.g;
-                    let brow = &plan.b_cond[base..base + width];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * bv;
+            }
+            if stride == 0 && r.is_simd() {
+                let b = &plan.b_cond[t * plan.kmax * plan.g..];
+                let ct = &mut c_tile[..bm * width];
+                ct.fill(0.0);
+                if micro::gemm_strided(&r, bm, kt, width, a_gather, plan.kmax, b, plan.g, ct, width)
+                {
+                    stride = width;
+                }
+            }
+            if stride == 0 {
+                // scalar fallback (§Perf: 2-way k unroll matching
+                // gemm::dense — one pass over the C row per two condensed
+                // B rows)
+                stride = width;
+                c_tile[..bm * width].fill(0.0);
+                for i in 0..bm {
+                    let ag = &a_gather[i * plan.kmax..i * plan.kmax + kt];
+                    let crow = &mut c_tile[i * width..(i + 1) * width];
+                    let mut ii = 0usize;
+                    while ii + 1 < kt {
+                        let a0 = ag[ii];
+                        let a1 = ag[ii + 1];
+                        let base0 = (t * plan.kmax + ii) * plan.g;
+                        let base1 = (t * plan.kmax + ii + 1) * plan.g;
+                        let b0 = &plan.b_cond[base0..base0 + width];
+                        let b1 = &plan.b_cond[base1..base1 + width];
+                        for ((cv, bv0), bv1) in crow.iter_mut().zip(b0).zip(b1) {
+                            *cv += a0 * bv0 + a1 * bv1;
+                        }
+                        ii += 2;
+                    }
+                    if ii < kt {
+                        let av = ag[ii];
+                        let base = (t * plan.kmax + ii) * plan.g;
+                        let brow = &plan.b_cond[base..base + width];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
                     }
                 }
             }
@@ -159,7 +217,7 @@ pub fn tw_matmul_into_scratch(
             for i in 0..bm {
                 let crow = c.row_mut(i0 + i);
                 for j in 0..width {
-                    crow[plan.col_idx[t * plan.g + j] as usize] = c_tile[i * width + j];
+                    crow[plan.col_idx[t * plan.g + j] as usize] = c_tile[i * stride + j];
                 }
             }
         }
@@ -210,10 +268,12 @@ pub fn tw_matmul_parallel_into(
     }
     let m = a.rows;
     let n = plan.n;
+    let r = micro::resolve(cfg);
     let c_ptr = SendPtr(c.data.as_mut_ptr());
     pool.parallel_for(eff, |chunk| {
         let (t0, t1) = split_range(plan.tiles, eff, chunk);
         let mut a_gather = vec![0.0f32; plan.kmax];
+        let mut c_row = vec![0.0f32; plan.g];
         for t in t0..t1 {
             let kt = plan.row_len[t] as usize;
             let width = (0..plan.g)
@@ -225,8 +285,25 @@ pub fn tw_matmul_parallel_into(
             let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
             for i in 0..m {
                 let arow = a.row(i);
-                for (d, &r) in a_gather[..kt].iter_mut().zip(rows) {
-                    *d = arow[r as usize];
+                for (d, &ri) in a_gather[..kt].iter_mut().zip(rows) {
+                    *d = arow[ri as usize];
+                }
+                // SIMD row step: (1 x kt) x (kt x width) into c_row, then
+                // the same disjoint-column scatter as the scalar path
+                if r.is_simd() {
+                    let b = &plan.b_cond[t * plan.kmax * plan.g..];
+                    let ag = &a_gather[..kt];
+                    let ct = &mut c_row[..width];
+                    ct.fill(0.0);
+                    if micro::gemm_strided(&r, 1, kt, width, ag, kt, b, plan.g, ct, width) {
+                        for j in 0..width {
+                            let cj = plan.col_idx[t * plan.g + j] as usize;
+                            // SAFETY: tiles own disjoint output columns, and
+                            // tile ranges are disjoint across chunks
+                            unsafe { *c_ptr.0.add(i * n + cj) = c_row[j] };
+                        }
+                        continue;
+                    }
                 }
                 for j in 0..width {
                     let mut acc = 0.0f32;
@@ -330,6 +407,33 @@ mod tests {
             tw_matmul_into_scratch(&a, &plan, &mut c, &cfg, &mut scratch);
             assert!(c.max_abs_diff(&want) < 1e-6, "{m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn simd_paths_match_scalar_oracle() {
+        use crate::gemm::MicroCfg;
+        // odd m, K, N: row remainders, strip tails, and partial tiles
+        let (a, _, _, plan) = setup(33, 96, 80, 0.6, 16, 88);
+        let scalar_cfg = TileConfig::new(16, 64).with_micro(MicroCfg::Scalar);
+        let want = tw_matmul_with(&a, &plan, &scalar_cfg);
+        let simd_cfg = TileConfig::new(16, 64).with_micro(MicroCfg::Simd { mr: 4, nr: 16 });
+        let got = tw_matmul_with(&a, &plan, &simd_cfg);
+        assert!(got.max_abs_diff(&want) < 1e-4, "strided simd vs scalar");
+        // panel-fed serial form
+        let r = micro::resolve(&simd_cfg);
+        if r.is_simd() {
+            let panels = tw_pack_panels(&plan, r.nr);
+            let mut c = Matrix::zeros(a.rows, plan.n);
+            let mut scratch = crate::gemm::GemmScratch::new();
+            let ps = Some(panels.as_slice());
+            tw_matmul_into_scratch_panels(&a, &plan, ps, &mut c, &simd_cfg, &mut scratch);
+            assert!(c.max_abs_diff(&want) < 1e-4, "panel simd vs scalar");
+        }
+        // pooled form (disjoint-column scatter with the SIMD row step)
+        let pool = crate::pool::ThreadPool::new(4);
+        let mut c = Matrix::zeros(a.rows, plan.n);
+        tw_matmul_parallel_into(&a, &plan, &mut c, &simd_cfg, 4, &pool);
+        assert!(c.max_abs_diff(&want) < 1e-4, "pooled simd vs scalar");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! 2:4 vector-wise sparse GEMM (sparse-tensor-core emulation) and the TVW
 //! fused kernel on the CPU.
 
+use super::micro;
 use super::TileConfig;
 use crate::pool::{split_range, SendPtr, ThreadPool};
 use crate::sparse::{TvwPlan, Vw24Plan};
@@ -41,6 +42,7 @@ pub fn vw24_matmul_into_with(a: &Matrix, plan: &Vw24Plan, c: &mut Matrix, cfg: &
     let (m, n) = (a.rows, plan.n);
     let groups = plan.k / 4;
     let bm = cfg.bm();
+    let r = micro::resolve(cfg);
     c.data.fill(0.0);
     for i0 in (0..m).step_by(bm) {
         let i1 = (i0 + bm).min(m);
@@ -57,6 +59,11 @@ pub fn vw24_matmul_into_with(a: &Matrix, plan: &Vw24Plan, c: &mut Matrix, cfg: &
                     continue;
                 }
                 let crow = &mut c.data[i * n..(i + 1) * n];
+                // register-level 2:4: expand the metadata with in-register
+                // shuffles when the resolved microkernel has that path
+                if micro::sel24_row(&r, &a4, v0, s0, v1, s1, crow) {
+                    continue;
+                }
                 for j in 0..n {
                     crow[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
                 }
@@ -108,6 +115,7 @@ pub fn tvw_matmul_into_scratch(
     let m = a.rows;
     let khalf = plan.kmax / 2;
     let bm = cfg.bm();
+    let micro_r = micro::resolve(cfg);
     c.data.fill(0.0);
     scratch.ensure(plan.kmax, plan.g);
     // §Perf: accumulate into a compact c_tile and scatter once per row —
@@ -153,6 +161,10 @@ pub fn tvw_matmul_into_scratch(
                     let s0 = &plan.b_sel[base0..base0 + width];
                     let v1 = &plan.b_vals[base1..base1 + width];
                     let s1 = &plan.b_sel[base1..base1 + width];
+                    let ct = &mut c_tile[..width];
+                    if micro::sel24_row(&micro_r, &a4, v0, s0, v1, s1, ct) {
+                        continue;
+                    }
                     for j in 0..width {
                         c_tile[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
                     }
@@ -215,6 +227,7 @@ pub fn vw24_matmul_parallel_into(
         return 1;
     }
     let groups = plan.k / 4;
+    let micro_r = micro::resolve(cfg);
     let c_ptr = SendPtr(c.data.as_mut_ptr());
     pool.parallel_for(eff, |chunk| {
         let (j0, j1) = split_range(n, eff, chunk);
@@ -241,6 +254,9 @@ pub fn vw24_matmul_parallel_into(
                 // SAFETY: as above — this chunk owns columns j0..j1
                 let crow =
                     unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n + j0), width) };
+                if micro::sel24_row(&micro_r, &a4, v0, s0, v1, s1, crow) {
+                    continue;
+                }
                 for j in 0..width {
                     crow[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
                 }
@@ -274,6 +290,7 @@ pub fn tvw_matmul_parallel_into(
     let m = a.rows;
     let n = plan.n;
     let khalf = plan.kmax / 2;
+    let micro_r = micro::resolve(cfg);
     c.data.fill(0.0);
     let c_ptr = SendPtr(c.data.as_mut_ptr());
     pool.parallel_for(eff, |chunk| {
@@ -315,6 +332,10 @@ pub fn tvw_matmul_parallel_into(
                     let s0 = &plan.b_sel[base0..base0 + width];
                     let v1 = &plan.b_vals[base1..base1 + width];
                     let s1 = &plan.b_sel[base1..base1 + width];
+                    let ct = &mut c_tile[..width];
+                    if micro::sel24_row(&micro_r, &a4, v0, s0, v1, s1, ct) {
+                        continue;
+                    }
                     for j in 0..width {
                         c_tile[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
                     }
@@ -424,6 +445,41 @@ mod tests {
             let mut c = Matrix::zeros(11, n);
             tvw_matmul_into_scratch(&a, &plan, &mut c, &cfg, &mut scratch);
             assert!(c.max_abs_diff(&want) < 1e-6, "{k}x{n} g={g}");
+        }
+    }
+
+    #[test]
+    fn simd_paths_match_scalar_oracle() {
+        // forced-scalar vs forced-SIMD parity for both 2:4 kernels, serial
+        // and pooled, at m = 1 and at a column count that is not a lane
+        // multiple (84 = 10 full 8-wide chunks + a 4-wide scalar tail);
+        // on non-SIMD hosts the SIMD request degrades to scalar and the
+        // comparison is exact
+        use crate::gemm::MicroCfg;
+        let mut rng = Rng::new(96);
+        let scalar_cfg = TileConfig::new(8, 64).with_micro(MicroCfg::Scalar);
+        let simd_cfg = TileConfig::new(8, 64).with_micro(MicroCfg::Simd { mr: 4, nr: 16 });
+        let pool = ThreadPool::new(4);
+        for m in [1usize, 33] {
+            let a = Matrix::randn(m, 96, &mut rng);
+            let w = Matrix::randn(96, 84, &mut rng);
+            let mask = prune_vw(&w, 0.5, 4);
+            let vplan = Vw24Plan::encode(&w, &mask).unwrap();
+            let want = vw24_matmul_with(&a, &vplan, &scalar_cfg);
+            let got = vw24_matmul_with(&a, &vplan, &simd_cfg);
+            assert!(got.max_abs_diff(&want) < 1e-4, "vw24 serial m={m}");
+            let mut c = Matrix::zeros(m, 84);
+            vw24_matmul_parallel_into(&a, &vplan, &mut c, &simd_cfg, 4, &pool);
+            assert!(c.max_abs_diff(&want) < 1e-4, "vw24 pooled m={m}");
+
+            let (tw, tvmask) = prune_tvw(&w, 0.7, 16);
+            let tvplan = TvwPlan::encode(&w, &tw, &tvmask);
+            let want = tvw_matmul_with(&a, &tvplan, &scalar_cfg);
+            let got = tvw_matmul_with(&a, &tvplan, &simd_cfg);
+            assert!(got.max_abs_diff(&want) < 1e-4, "tvw serial m={m}");
+            let mut c = Matrix::zeros(m, 84);
+            tvw_matmul_parallel_into(&a, &tvplan, &mut c, &simd_cfg, 4, &pool);
+            assert!(c.max_abs_diff(&want) < 1e-4, "tvw pooled m={m}");
         }
     }
 

@@ -11,9 +11,9 @@ use std::time::Instant;
 use crate::error::Result;
 use crate::exec::{ModelDims, PreparedModel};
 use crate::gemm::{
-    effective_parallel_threads, matmul_parallel_into, matmul_tiled_into,
+    effective_parallel_threads, matmul_parallel_into, matmul_tiled_into_panel, micro,
     tvw_effective_parallel_threads, tvw_matmul_into_scratch, tvw_matmul_parallel_into,
-    tw_effective_parallel_threads, tw_matmul_into_scratch, tw_matmul_parallel_into,
+    tw_effective_parallel_threads, tw_matmul_into_scratch_panels, tw_matmul_parallel_into,
     vw24_effective_parallel_threads, vw24_matmul_into_with, vw24_matmul_parallel_into, GemmScratch,
     TileConfig,
 };
@@ -24,7 +24,7 @@ use crate::tensor::Matrix;
 use crate::{anyhow, ensure};
 
 use super::ir::{Act, BufId, GraphProgram, Op};
-use super::pack::{GemmNode, PackedWeight};
+use super::pack::{GemmNode, NodePanels, PackedWeight};
 
 /// One worker's mutable execution state: the buffer arena plus the
 /// serial-kernel staging scratch.  Built once per worker from the
@@ -91,6 +91,9 @@ fn put(bufs: &mut [Matrix], id: BufId, m: Matrix) {
 pub struct GemmDispatch {
     pub cfg: TileConfig,
     pub threads: usize,
+    /// Packed [`micro::Resolved`] code of the microkernel the config
+    /// resolved to (`micro::describe` turns it back into a label).
+    pub micro: usize,
 }
 
 /// Dispatch one packed GEMM into `c` (fully overwritten).  With an
@@ -114,6 +117,7 @@ pub fn run_gemm(
     // blocking tuned for this effective row count (falling back to the
     // compile default); `a.rows` already reflects the live batch prefix
     let cfg = node.cfg_for_m(a.rows);
+    let r = micro::resolve(&cfg);
     let used = match &node.weight {
         PackedWeight::Dense(w) => {
             let eff = effective_parallel_threads(a.rows, threads);
@@ -121,7 +125,11 @@ pub fn run_gemm(
                 matmul_parallel_into(a, w, c, &cfg, threads, pool);
                 eff
             } else {
-                matmul_tiled_into(a, w, c, &cfg);
+                let panel = match &node.panels {
+                    NodePanels::Dense(p) => Some(p),
+                    _ => None,
+                };
+                matmul_tiled_into_panel(a, w, panel, c, &cfg);
                 1
             }
         }
@@ -133,7 +141,11 @@ pub fn run_gemm(
                 tw_matmul_parallel_into(a, p, c, &cfg, threads, pool);
                 eff
             } else {
-                tw_matmul_into_scratch(a, p, c, &cfg, scratch);
+                let panels = match &node.panels {
+                    NodePanels::Tw(ps) => Some(ps.as_slice()),
+                    _ => None,
+                };
+                tw_matmul_into_scratch_panels(a, p, panels, c, &cfg, scratch);
                 1
             }
         }
@@ -158,7 +170,7 @@ pub fn run_gemm(
             }
         }
     };
-    GemmDispatch { cfg, threads: used }
+    GemmDispatch { cfg, threads: used, micro: r.code() }
 }
 
 /// Variable-M execution: resize the batch-scaled buffers to `m_eff`
@@ -199,6 +211,7 @@ fn note_gemm(
         d.cfg.bm(),
         d.cfg.bk(),
         d.threads,
+        d.micro,
     );
 }
 
@@ -619,5 +632,6 @@ mod tests {
         let d = run_gemm(&a, node, &mut c, None, &mut ws.scratch);
         assert_eq!((d.cfg.bm(), d.cfg.bk()), (node.cfg_for_m(2).bm(), node.cfg_for_m(2).bk()));
         assert_eq!(d.threads, 1, "no pool attached: one lane");
+        assert_eq!(d.micro, micro::resolve(&node.cfg_for_m(2)).code(), "microkernel code reported");
     }
 }

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use crate::autotune::{PatternFamily, PlanCache};
 use crate::error::Result;
-use crate::gemm::TileConfig;
+use crate::gemm::{micro, tw_pack_panels, PackedPanel, TileConfig};
 use crate::gpusim::GemmShape;
 use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
 use crate::tensor::Matrix;
@@ -59,6 +59,17 @@ impl PackedWeight {
     }
 }
 
+/// Packed-B panels built at graph-compile time for the patterns whose
+/// weight operand is still strided row-major (dense and TW).  The TVW and
+/// 2:4 condensed plans are already panel-contiguous — their value arrays
+/// *are* the panel layout — so they carry none (see `docs/DESIGN.md` §9).
+#[derive(Clone)]
+pub enum NodePanels {
+    None,
+    Dense(PackedPanel),
+    Tw(Vec<PackedPanel>),
+}
+
 /// One GEMM node of the graph: the packed operand plus its resolved
 /// cache-blocking.  Ops reference nodes by index into the program's
 /// weight table.
@@ -76,6 +87,10 @@ pub struct GemmNode {
     pub bucket_cfgs: Vec<(usize, TileConfig)>,
     pub k: usize,
     pub n: usize,
+    /// Microkernel panels packed once at compile time (strip width keyed
+    /// to the compile config's resolved NR; the executor re-checks the
+    /// width and falls back to the strided kernel on a mismatch).
+    pub panels: NodePanels,
 }
 
 impl GemmNode {
@@ -89,6 +104,7 @@ impl GemmNode {
             bucket_cfgs: Vec::new(),
             k: self.k,
             n: self.n,
+            panels: NodePanels::None,
         }
     }
 
@@ -239,7 +255,23 @@ pub fn pack_weight(
         }
         None => Vec::new(),
     };
-    Ok(GemmNode { name: name.to_string(), weight, cfg, bucket_cfgs, k, n })
+    // packed-B panels for the microkernel, built once here so the serving
+    // path never re-packs.  Strip width comes from the compile config's
+    // resolved ISA; run-time dispatch re-checks it (a bucket config that
+    // resolves to a different NR just takes the strided SIMD path).
+    let r = micro::resolve(&cfg);
+    let panels = if !r.is_simd() {
+        NodePanels::None
+    } else {
+        match &weight {
+            PackedWeight::Dense(m) => {
+                NodePanels::Dense(PackedPanel::pack(&m.data, m.rows, m.cols, m.cols, r.nr))
+            }
+            PackedWeight::Tw(p) => NodePanels::Tw(tw_pack_panels(p, r.nr)),
+            _ => NodePanels::None,
+        }
+    };
+    Ok(GemmNode { name: name.to_string(), weight, cfg, bucket_cfgs, k, n, panels })
 }
 
 /// Which pattern a compiled graph variant packs its prunable layers with.
@@ -374,6 +406,7 @@ mod tests {
                 bk: 64,
                 g: 16,
                 threads: 1,
+                micro: "auto".into(),
                 measured_us: 10.0,
                 model_us: 9.0,
                 default_us: 20.0,
@@ -412,6 +445,7 @@ mod tests {
             bk: 64,
             g: 16,
             threads: 1,
+            micro: "auto".into(),
             measured_us: 10.0,
             model_us: 9.0,
             default_us: 20.0,
@@ -423,6 +457,7 @@ mod tests {
             bk: 64,
             g: 0,
             threads: 1,
+            micro: "auto".into(),
             measured_us: 30.0,
             model_us: 28.0,
             default_us: 30.0,

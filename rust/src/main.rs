@@ -306,14 +306,15 @@ fn cmd_serve(args: &[String]) -> i32 {
         })
     });
     println!(
-        "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={} mode={}{}",
+        "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={} mode={}{} simd={}",
         handle.workers,
         handle.batch,
         handle.seq,
         handle.d_model,
         handle.n_classes,
         if dynamic_batch { "dynamic-m" } else { "padded" },
-        if low_latency { "+low-latency" } else { "" }
+        if low_latency { "+low-latency" } else { "" },
+        tilewise::gemm::micro::active_label()
     );
     let len = handle.seq * handle.d_model;
     let mut rng = Rng::new(123);
@@ -481,10 +482,11 @@ fn cmd_profile(args: &[String]) -> i32 {
             for n in nodes.iter().take(3) {
                 let (last_m, bm, bk, threads) = n.last_dispatch();
                 println!(
-                    "    {:<16} {:>8.2}ms  {:>7.2} GFLOP/s  m={last_m} bm={bm} bk={bk} t={threads}",
+                    "    {:<16} {:>8.2}ms  {:>7.2} GFLOP/s  m={last_m} bm={bm} bk={bk} t={threads} kernel={}",
                     n.name,
                     n.secs() * 1e3,
-                    n.gflops()
+                    n.gflops(),
+                    n.last_micro()
                 );
             }
             variant_jsons.push(obj(vec![("coverage", num(coverage)), ("profile", vp.to_json())]));

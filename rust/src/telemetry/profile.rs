@@ -134,6 +134,9 @@ pub struct NodeProfile {
     last_bm: AtomicUsize,
     last_bk: AtomicUsize,
     last_threads: AtomicUsize,
+    /// Packed `gemm::micro::Resolved` code of the last dispatch's
+    /// microkernel (`gemm::micro::describe` renders it).
+    last_micro: AtomicUsize,
 }
 
 impl NodeProfile {
@@ -151,11 +154,23 @@ impl NodeProfile {
             last_bm: AtomicUsize::new(0),
             last_bk: AtomicUsize::new(0),
             last_threads: AtomicUsize::new(0),
+            last_micro: AtomicUsize::new(0),
         }
     }
 
-    /// Record one kernel dispatch on this node.
-    pub fn record(&self, m: usize, nanos: u64, flops: u64, bm: usize, bk: usize, threads: usize) {
+    /// Record one kernel dispatch on this node.  `micro` is the packed
+    /// [`crate::gemm::micro::Resolved::code`] of the inner loops that ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        m: usize,
+        nanos: u64,
+        flops: u64,
+        bm: usize,
+        bk: usize,
+        threads: usize,
+        micro: usize,
+    ) {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
         self.rows.fetch_add(m as u64, Ordering::Relaxed);
@@ -164,6 +179,7 @@ impl NodeProfile {
         self.last_bm.store(bm, Ordering::Relaxed);
         self.last_bk.store(bk, Ordering::Relaxed);
         self.last_threads.store(threads, Ordering::Relaxed);
+        self.last_micro.store(micro, Ordering::Relaxed);
     }
 
     pub fn calls(&self) -> u64 {
@@ -202,6 +218,12 @@ impl NodeProfile {
         )
     }
 
+    /// Microkernel label of the most recent dispatch (e.g. "avx2 4x16"
+    /// or "scalar"); "scalar" before any dispatch.
+    pub fn last_micro(&self) -> String {
+        crate::gemm::micro::describe(self.last_micro.load(Ordering::Relaxed))
+    }
+
     fn reset(&self) {
         self.calls.store(0, Ordering::Relaxed);
         self.nanos.store(0, Ordering::Relaxed);
@@ -211,6 +233,7 @@ impl NodeProfile {
         self.last_bm.store(0, Ordering::Relaxed);
         self.last_bk.store(0, Ordering::Relaxed);
         self.last_threads.store(0, Ordering::Relaxed);
+        self.last_micro.store(0, Ordering::Relaxed);
     }
 
     fn to_json(&self) -> Json {
@@ -229,6 +252,7 @@ impl NodeProfile {
             ("last_bm", num(bm as f64)),
             ("last_bk", num(bk as f64)),
             ("last_threads", num(threads as f64)),
+            ("micro", s(&self.last_micro())),
         ])
     }
 }
@@ -436,7 +460,9 @@ mod tests {
         assert_eq!(prof.nodes[0].family, "dense");
 
         prof.record_op(OpKind::Gemm, 1_000_000);
-        prof.nodes[0].record(2, 1_000_000, 64, 64, 64, 1);
+        // packed micro code for "avx2 4x16" (Isa index 1, MR 4, NR 16)
+        let micro = (1usize << 16) | (4 << 8) | 16;
+        prof.nodes[0].record(2, 1_000_000, 64, 64, 64, 1, micro);
         prof.record_forward(1_500_000);
 
         assert_eq!(prof.op_calls(OpKind::Gemm), 1);
@@ -446,16 +472,19 @@ mod tests {
         assert_eq!(prof.nodes[0].rows(), 2);
         assert!(prof.nodes[0].gflops() > 0.0);
         assert_eq!(prof.nodes[0].last_dispatch(), (2, 64, 64, 1));
+        assert_eq!(prof.nodes[0].last_micro(), "avx2 4x16");
 
-        // report JSON carries the node and op rows
+        // report JSON carries the node and op rows, microkernel included
         let rep = tele.report().to_string();
         assert!(rep.contains("\"l0.up\""), "report: {rep}");
         assert!(rep.contains("\"gemm\""), "report: {rep}");
+        assert!(rep.contains("\"avx2 4x16\""), "report: {rep}");
 
         tele.reset();
         assert_eq!(prof.op_calls(OpKind::Gemm), 0);
         assert_eq!(prof.nodes[0].calls(), 0);
         assert_eq!(prof.forwards(), 0);
+        assert_eq!(prof.nodes[0].last_micro(), "scalar");
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! autotuner: any candidate it measures computes the same function.
 
 use tilewise::gemm::{
-    matmul_naive, matmul_tiled, tvw_matmul_with, tw_matmul_with, vw24_matmul_with, TileConfig,
+    matmul_naive, matmul_tiled, tvw_matmul_with, tw_matmul_with, vw24_matmul_with, MicroCfg,
+    TileConfig,
 };
 use tilewise::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
 use tilewise::tensor::Matrix;
@@ -77,6 +78,107 @@ fn tuned_kernels_match_naive_reference() {
     }
 }
 
+/// SIMD-vs-scalar oracle parity at deliberately awkward shapes: K not a
+/// lane multiple, N not an NR multiple, m = 1, and single-tile problems.
+/// Every requested register block (snapped or not) must agree with the
+/// forced-scalar run of the same kernel within 1e-4.  On hosts without
+/// SIMD the requests degrade to scalar and the comparison is exact.
+#[test]
+fn simd_tail_shapes_match_scalar_oracle() {
+    let mut rng = Rng::new(0x51D0);
+    // (m, k, n): lane-misaligned K (not /8 or /16), ragged N, m = 1,
+    // and a single-tile case (n <= g)
+    let shapes = [(1usize, 12usize, 9usize), (5, 20, 31), (17, 36, 50), (33, 28, 16), (2, 4, 3)];
+    let micros = [
+        MicroCfg::Simd { mr: 4, nr: 16 },
+        MicroCfg::Simd { mr: 8, nr: 8 },
+        MicroCfg::Simd { mr: 3, nr: 9 }, // snapped onto a compiled block
+        MicroCfg::Auto,
+    ];
+    for &(m, k, n) in &shapes {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        let scalar_cfg = TileConfig::new(16, 16).with_micro(MicroCfg::Scalar);
+
+        let want_dense = matmul_tiled(&a, &w, &scalar_cfg);
+        let g = 8.min(n);
+        let tw = prune_tw(&w, 0.5, g, None);
+        let twplan = TwPlan::encode(&w, &tw);
+        let want_tw = tw_matmul_with(&a, &twplan, &scalar_cfg);
+        let (tws, mask) = prune_tvw(&w, 0.5, g);
+        let tvplan = TvwPlan::encode(&w, &tws, &mask);
+        let want_tvw = tvw_matmul_with(&a, &tvplan, &scalar_cfg);
+        let vplan = (k % 4 == 0).then(|| {
+            let mask24 = prune_vw(&w, 0.5, 4);
+            Vw24Plan::encode(&w, &mask24).expect("2:4 encodable")
+        });
+        let want_vw = vplan.as_ref().map(|p| vw24_matmul_with(&a, p, &scalar_cfg));
+
+        for mc in micros {
+            let cfg = TileConfig::new(16, 16).with_micro(mc);
+            let ctx = format!("m={m} k={k} n={n} micro={}", mc.label());
+            let d = matmul_tiled(&a, &w, &cfg).max_abs_diff(&want_dense);
+            assert!(d < TOL, "dense {ctx}: {d}");
+            let d = tw_matmul_with(&a, &twplan, &cfg).max_abs_diff(&want_tw);
+            assert!(d < TOL, "tw {ctx}: {d}");
+            let d = tvw_matmul_with(&a, &tvplan, &cfg).max_abs_diff(&want_tvw);
+            assert!(d < TOL, "tvw {ctx}: {d}");
+            if let (Some(p), Some(want)) = (&vplan, &want_vw) {
+                let d = vw24_matmul_with(&a, p, &cfg).max_abs_diff(want);
+                assert!(d < TOL, "vw24 {ctx}: {d}");
+            }
+        }
+    }
+}
+
+/// The pooled kernels must agree with the forced-scalar serial oracle at
+/// the same tail shapes (chunk boundaries add their own edge cases).
+#[test]
+fn simd_pooled_kernels_match_scalar_oracle() {
+    use tilewise::gemm::{
+        matmul_parallel_into, tvw_matmul_parallel_into, tw_matmul_parallel_into,
+        vw24_matmul_parallel_into,
+    };
+    use tilewise::pool::ThreadPool;
+
+    let mut rng = Rng::new(0x51D1);
+    let pool = ThreadPool::new(4);
+    let simd_cfg = TileConfig::new(16, 16).with_micro(MicroCfg::Simd { mr: 4, nr: 16 });
+    let scalar_cfg = TileConfig::new(16, 16).with_micro(MicroCfg::Scalar);
+    for &(m, k, n) in &[(33usize, 36usize, 70usize), (64, 20, 96)] {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        let ctx = format!("m={m} k={k} n={n}");
+
+        let want = matmul_tiled(&a, &w, &scalar_cfg);
+        let mut c = Matrix::zeros(m, n);
+        matmul_parallel_into(&a, &w, &mut c, &simd_cfg, 4, &pool);
+        assert!(c.max_abs_diff(&want) < TOL, "dense-par {ctx}");
+
+        let g = 16.min(n);
+        let tw = prune_tw(&w, 0.5, g, None);
+        let twplan = TwPlan::encode(&w, &tw);
+        let want = tw_matmul_with(&a, &twplan, &scalar_cfg);
+        let mut c = Matrix::zeros(m, n); // pruned columns stay zero, as in the oracle
+        tw_matmul_parallel_into(&a, &twplan, &mut c, &simd_cfg, 4, &pool);
+        assert!(c.max_abs_diff(&want) < TOL, "tw-par {ctx}");
+
+        let (tws, mask) = prune_tvw(&w, 0.5, g);
+        let tvplan = TvwPlan::encode(&w, &tws, &mask);
+        let want = tvw_matmul_with(&a, &tvplan, &scalar_cfg);
+        let mut c = Matrix::zeros(m, n);
+        tvw_matmul_parallel_into(&a, &tvplan, &mut c, &simd_cfg, 4, &pool);
+        assert!(c.max_abs_diff(&want) < TOL, "tvw-par {ctx}");
+
+        let mask24 = prune_vw(&w, 0.5, 4);
+        let vplan = Vw24Plan::encode(&w, &mask24).expect("2:4 encodable");
+        let want = vw24_matmul_with(&a, &vplan, &scalar_cfg);
+        let mut c = Matrix::zeros(m, n);
+        vw24_matmul_parallel_into(&a, &vplan, &mut c, &simd_cfg, 4, &pool);
+        assert!(c.max_abs_diff(&want) < TOL, "vw24-par {ctx}");
+    }
+}
+
 /// The tuner's end product must survive a disk round-trip and still
 /// describe runnable candidates (the serving stack depends on this).
 #[test]
@@ -89,7 +191,13 @@ fn tuned_cache_roundtrip_reexecutes() {
 
     let opts = TunerOpts {
         measure: MeasureOpts { warmup: 0, min_iters: 1, max_iters: 1, budget_secs: 0.0, trim_frac: 0.0 },
-        space: SearchSpace { bms: vec![16, 32], bks: vec![64], gs: vec![16], threads: vec![1] },
+        space: SearchSpace {
+            bms: vec![16, 32],
+            bks: vec![64],
+            gs: vec![16],
+            threads: vec![1],
+            ..SearchSpace::default()
+        },
         max_measured: 2,
         m_cap: Some(16),
         ..TunerOpts::default()

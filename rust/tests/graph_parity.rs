@@ -96,6 +96,58 @@ fn nmt_matches_masked_dense_oracle_all_patterns() {
     }
 }
 
+/// Forced-microkernel parity: the same compiled model must serve logits
+/// within 1e-4 whether every GEMM node is pinned to the scalar loops or
+/// to an explicit SIMD register block (serial and pooled).  On hosts
+/// without a SIMD ISA the forced-SIMD request degrades to scalar and the
+/// comparison is trivially exact — the same degradation contract
+/// `PALLAS_FORCE_SCALAR=1` relies on at serve time.
+#[test]
+fn forced_microkernel_graph_execution_matches_scalar() {
+    use tilewise::gemm::MicroCfg;
+
+    fn pin(program: &mut tilewise::graph::GraphProgram, mc: MicroCfg) {
+        for node in &mut program.weights {
+            node.cfg = node.cfg.with_micro(mc);
+            for (_, c) in &mut node.bucket_cfgs {
+                *c = c.with_micro(mc);
+            }
+        }
+    }
+
+    let workload = models::bert_at(2, 4, 16, 2);
+    let pool = Arc::new(ThreadPool::new(3));
+    for pattern in PATTERNS {
+        let label = format!("{}/{:?}", workload.name, pattern);
+        let opts = small_opts().with_pattern(pattern);
+        let mut scalar_prog = compile(&workload, &opts).unwrap();
+        let mut simd_prog = compile(&workload, &small_opts().with_pattern(pattern)).unwrap();
+        pin(&mut scalar_prog, MicroCfg::Scalar);
+        pin(&mut simd_prog, MicroCfg::Simd { mr: 4, nr: 16 });
+
+        let variant = scalar_prog.variant.clone();
+        let dims = scalar_prog.dims;
+        let x = deterministic_input(dims.batch * dims.per_request_len());
+
+        let mut scalar_model = GraphModel::new(Arc::new(vec![scalar_prog]), None).unwrap();
+        let want = scalar_model.run(&variant, &x).unwrap();
+        assert!(want.iter().all(|v| v.is_finite()), "{label}: scalar non-finite");
+
+        let progs = Arc::new(vec![simd_prog]);
+        let mut simd_serial = GraphModel::new(progs.clone(), None).unwrap();
+        let got = simd_serial.run(&variant, &x).unwrap();
+        assert_eq!(got.len(), want.len(), "{label}");
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "{label}: serial logit {i}: {a} vs scalar {b}");
+        }
+        let mut simd_pooled = GraphModel::new(progs, Some(pool.clone())).unwrap();
+        let got_pooled = simd_pooled.run(&variant, &x).unwrap();
+        for (i, (a, b)) in got_pooled.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "{label}: pooled logit {i}: {a} vs scalar {b}");
+        }
+    }
+}
+
 /// Variable-batch parity: executing `m_eff` real rows inside a batch-`B`
 /// workspace must match a freshly compiled batch-`m_eff` model at 1e-4 —
 /// weights are deterministic in the seed and independent of the batch
