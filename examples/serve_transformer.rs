@@ -22,12 +22,14 @@ use tilewise::coordinator::{
 };
 use tilewise::exec::{Backend, NativeBackend, NativeModelSpec};
 use tilewise::util::Rng;
+use tilewise::variant::Variant;
 
 fn drive(handle: &ServerHandle, requests: usize, rate_rps: f64) {
     let len = handle.seq * handle.d_model;
     let mut rng = Rng::new(99);
 
-    // open-loop Poisson arrivals
+    // open-loop Poisson arrivals; every submission is a ResponseStream
+    // (a one-shot forward is a single-Done stream, waited on below)
     let mut pending = Vec::with_capacity(requests);
     let t0 = std::time::Instant::now();
     for _ in 0..requests {
@@ -36,8 +38,8 @@ fn drive(handle: &ServerHandle, requests: usize, rate_rps: f64) {
         std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate_rps)));
     }
     let mut completed = 0usize;
-    for rx in pending {
-        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+    for stream in pending {
+        if stream.wait().is_ok() {
             completed += 1;
         }
     }
@@ -51,18 +53,18 @@ fn drive(handle: &ServerHandle, requests: usize, rate_rps: f64) {
     }
 }
 
-fn variant_cfg(variant: &str, workers: usize) -> ServerConfig {
-    ServerConfig {
-        batcher: BatcherConfig {
+fn variant_cfg(variant: Variant, workers: usize) -> ServerConfig {
+    ServerConfig::builder()
+        .batcher(BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(3),
             ..BatcherConfig::default()
-        },
-        policy: Policy::Fixed(variant.to_string()),
-        variants: vec![variant.to_string()],
-        workers,
-        ..ServerConfig::default()
-    }
+        })
+        .policy(Policy::Fixed(variant))
+        .variants(vec![variant])
+        .workers(workers)
+        .build()
+        .expect("static example config")
 }
 
 fn main() -> tilewise::error::Result<()> {
@@ -71,7 +73,7 @@ fn main() -> tilewise::error::Result<()> {
     );
     let requests = 96;
     let rate = 60.0;
-    let variants = ["model_dense", "model_tw", "model_tvw"];
+    let variants = [Variant::Dense, Variant::Tw, Variant::Tvw];
 
     if dir.join("meta.json").exists() {
         println!(

@@ -12,8 +12,13 @@
 //! is where dynamic effective-batch serving shines: partial batches cost
 //! partial compute (compare with `--padded`).
 //!
-//!   cargo run --release --example serve_zoo [bert|vgg|nmt]
+//!   cargo run --release --example serve_zoo [bert|vgg|nmt|decoder]
 //!       [--arrival-rate R] [--padded] [--requests N]
+//!
+//! The decode-capable models (nmt, decoder) also demonstrate the
+//! streaming session API: `ServerHandle::submit_decode` returns a
+//! `ResponseStream` of per-step `StreamEvent::Token`s driven by the
+//! continuous-batching decode lane.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -21,6 +26,7 @@ use std::time::{Duration, Instant};
 use tilewise::coordinator::{start_with_backend, BatcherConfig, Policy, ServerConfig};
 use tilewise::exec::{Backend, ZooBackend, ZooSpec};
 use tilewise::util::Rng;
+use tilewise::variant::Variant;
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
@@ -49,13 +55,14 @@ fn main() -> tilewise::error::Result<()> {
         Some("bert") => vec!["bert"],
         Some("vgg") => vec!["vgg"],
         Some("nmt") => vec!["nmt"],
+        Some("decoder") => vec!["decoder"],
         Some(other) => {
-            eprintln!("unknown zoo model {other:?} (expected bert|vgg|nmt)");
+            eprintln!("unknown zoo model {other:?} (expected bert|vgg|nmt|decoder)");
             std::process::exit(2);
         }
         None => vec!["bert", "vgg", "nmt"],
     };
-    let variants = ["model_dense", "model_tw", "model_tvw"];
+    let variants = [Variant::Dense, Variant::Tw, Variant::Tvw];
 
     for model in models {
         let spec = ZooSpec::for_model(model)?;
@@ -86,7 +93,7 @@ fn main() -> tilewise::error::Result<()> {
                         ..BatcherConfig::default()
                     }
                 },
-                policy: Policy::Fixed(variant.into()),
+                policy: Policy::Fixed(variant),
                 workers: 2,
                 dynamic_batch,
                 ..ServerConfig::default()
@@ -110,8 +117,8 @@ fn main() -> tilewise::error::Result<()> {
                 })
                 .collect();
             let mut ok = 0;
-            for rx in pending {
-                if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            for stream in pending {
+                if stream.wait().is_ok() {
                     ok += 1;
                 }
             }
@@ -134,13 +141,45 @@ fn main() -> tilewise::error::Result<()> {
             }
             // where the end-to-end latency went: queue-wait -> batch
             // assembly -> pack -> execute -> respond
-            for vs in snap.stages.iter().filter(|vs| vs.variant == variant) {
+            for vs in snap.stages.iter().filter(|vs| vs.variant == variant.name()) {
                 let cols: Vec<String> = vs
                     .stages
                     .iter()
                     .map(|st| format!("{} {:.2}ms", st.stage, st.mean_ms))
                     .collect();
                 println!("    stages: {}", cols.join(" | "));
+            }
+        }
+        // streaming decode showcase: the decode-capable models (nmt,
+        // decoder) additionally run a handful of autoregressive sessions
+        // through the continuous-batching step scheduler, each streaming
+        // one token event per step
+        {
+            let cfg = ServerConfig::builder().policy(Policy::Fixed(Variant::Tw)).build()?;
+            let handle = start_with_backend(backend.clone(), cfg)?;
+            if let Some(caps) = handle.decode_caps {
+                let mut rng = Rng::new(11);
+                let streams: Vec<_> = (0..4)
+                    .map(|i| {
+                        let rows = 1 + i % (caps.max_steps / 2).max(1);
+                        let new_tokens = (caps.max_steps - rows).min(3).max(1);
+                        let prompt: Vec<f32> =
+                            (0..rows * caps.d_in).map(|_| rng.normal_f32() * 0.3).collect();
+                        handle.submit_decode(prompt, None, new_tokens)
+                    })
+                    .collect();
+                let mut tokens = 0usize;
+                for stream in streams {
+                    if let Ok(resp) = stream.wait() {
+                        tokens += resp.tokens;
+                    }
+                }
+                let d = handle.metrics.decode_stats();
+                println!(
+                    "  decode: 4 sessions -> {tokens} tokens, {:.1} tok/s, \
+                     mean active slots {:.2}, step p95 {:.3}ms",
+                    d.tokens_per_sec, d.mean_active_slots, d.step_p95_ms
+                );
             }
         }
         // Fig. 10-style attribution: the slowest GEMM nodes per variant,

@@ -10,18 +10,22 @@ mod bench_util;
 use std::time::Duration;
 
 use bench_util::{bench, section};
-use tilewise::coordinator::{pack_batch, start, BatcherConfig, Metrics, Policy, Request, ServerConfig};
+use tilewise::coordinator::{
+    pack_batch, start, BatcherConfig, Metrics, Policy, Request, ResponseStream, ServerConfig,
+};
 use tilewise::util::Rng;
+use tilewise::variant::Variant;
 
 fn mk_request(id: u64, len: usize) -> Request {
-    let (tx, rx) = std::sync::mpsc::channel();
-    std::mem::forget(rx); // bench: nobody reads the response
+    let (tx, stream) = ResponseStream::channel();
+    std::mem::forget(stream); // bench: nobody reads the events
     Request {
         id,
         activation: vec![0.5; len],
         variant: None,
+        decode_steps: 0,
         submitted: std::time::Instant::now(),
-        respond_to: tx,
+        events: tx,
     }
 }
 
@@ -48,15 +52,15 @@ fn main() {
     }
 
     section("end-to-end: closed-loop single-request latency per variant");
-    for variant in ["model_dense", "model_tw", "model_tvw"] {
+    for variant in [Variant::Dense, Variant::Tw, Variant::Tvw] {
         let cfg = ServerConfig {
             batcher: BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_micros(100),
                 ..BatcherConfig::default()
             },
-            policy: Policy::Fixed(variant.into()),
-            variants: vec![variant.into()],
+            policy: Policy::Fixed(variant),
+            variants: vec![variant],
             ..ServerConfig::default()
         };
         let handle = start(dir, cfg).expect("server start");

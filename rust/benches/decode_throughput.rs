@@ -1,0 +1,194 @@
+//! Bench: streaming autoregressive decode throughput — continuous
+//! batching (sessions join/leave the in-flight slot set at step
+//! boundaries) vs static wave batching (a wave of M sessions must fully
+//! drain before the next wave is admitted) over the graph-compiled NMT
+//! decoder, at M in {1, 8, 32} slots with mixed prompt/generation
+//! lengths.  The continuous scheduler's win is pure occupancy: a retired
+//! slot is refilled at the very next step instead of idling until the
+//! wave's longest session finishes.  Emits `BENCH_decode.json`.
+//!
+//!   cargo bench --bench decode_throughput
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::{scaled, section};
+use tilewise::exec::{Backend, PreparedModel, ZooBackend, ZooSpec};
+use tilewise::json::{arr, num, obj, s};
+
+const SLOT_COUNTS: [usize; 3] = [1, 8, 32];
+const VARIANT: &str = "model_tw";
+
+/// One synthetic session: a prompt of `rows` embedding rows, then
+/// `new_tokens` greedy-feedback steps.
+struct Session {
+    prompt: Vec<f32>,
+    new_tokens: usize,
+}
+
+/// Mixed lengths, deterministic: prompt rows cycle 1..=max_steps/2 and
+/// generation lengths cycle against them — the ragged retirement times
+/// that make continuous refill matter.
+fn mixed_sessions(n: usize, d_in: usize, max_steps: usize) -> Vec<Session> {
+    (0..n)
+        .map(|i| {
+            let rows = 1 + i % (max_steps / 2).max(1);
+            let budget = max_steps - rows;
+            let new_tokens = (1 + (i * 7) % budget.max(1)).min(budget).max(1);
+            let prompt =
+                (0..rows * d_in).map(|j| (((i + j) % 13) as f32 - 6.0) * 0.05).collect();
+            Session { prompt, new_tokens }
+        })
+        .collect()
+}
+
+struct Cell {
+    m: usize,
+    mode: &'static str,
+    sessions: usize,
+    tokens: usize,
+    steps: usize,
+    wall_secs: f64,
+    tokens_per_sec: f64,
+}
+
+/// Drive the decode engine over `sessions`.  `continuous` refills freed
+/// slots at every step boundary; static mode admits a wave only into a
+/// fully drained engine.
+fn run_schedule(
+    model: &mut dyn PreparedModel,
+    sessions: &[Session],
+    m: usize,
+    continuous: bool,
+) -> Cell {
+    let mut next = 0usize;
+    let mut want = vec![0usize; m];
+    let mut got = vec![0usize; m];
+    let mut tokens = 0usize;
+    let mut steps = 0usize;
+    let t0 = Instant::now();
+    loop {
+        let active = model.decode_active();
+        if continuous || active == 0 {
+            while next < sessions.len() {
+                let Some(slot) = model.decode_free_slot() else { break };
+                model.decode_begin(slot, &sessions[next].prompt).expect("admit session");
+                want[slot] = sessions[next].new_tokens;
+                got[slot] = 0;
+                next += 1;
+            }
+        }
+        if model.decode_active() == 0 {
+            break;
+        }
+        let outs = model.decode_step(VARIANT).expect("decode step");
+        steps += 1;
+        for out in outs {
+            if out.prompt_done {
+                got[out.slot] += 1;
+                tokens += 1;
+                if got[out.slot] >= want[out.slot] {
+                    model.decode_end(out.slot).expect("retire session");
+                }
+            }
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    Cell {
+        m,
+        mode: if continuous { "continuous" } else { "static" },
+        sessions: sessions.len(),
+        tokens,
+        steps,
+        wall_secs,
+        tokens_per_sec: tokens as f64 / wall_secs.max(1e-12),
+    }
+}
+
+fn main() {
+    // sessions per slot: enough waves that wave-boundary idling shows
+    let waves: usize = scaled(6, 2);
+    section("streaming decode throughput: continuous vs static batching (NMT, TW)");
+    println!(
+        "{:<6}{:<12}{:>10}{:>9}{:>8}{:>12}{:>14}",
+        "M", "mode", "sessions", "tokens", "steps", "wall(s)", "tokens/s"
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut spec_shape = (0usize, 0usize);
+    for m in SLOT_COUNTS {
+        let mut spec = ZooSpec::for_model("nmt").expect("nmt spec");
+        spec.batch = m;
+        spec.max_steps = 16;
+        let spec = spec.with_variants(&[VARIANT]);
+        spec_shape = (spec.width, spec.max_steps);
+        let backend = ZooBackend::new(spec, None).expect("compile nmt");
+        let mut model = backend.load().expect("load nmt");
+        let caps = model.decode_caps().expect("nmt decodes");
+        assert_eq!(caps.slots, m);
+        let sessions = mixed_sessions(m * waves, caps.d_in, caps.max_steps);
+        // warmup: one short session through every slot's state path
+        {
+            let warm = mixed_sessions(m, caps.d_in, caps.max_steps);
+            run_schedule(model.as_mut(), &warm, m, true);
+        }
+        for continuous in [false, true] {
+            let cell = run_schedule(model.as_mut(), &sessions, m, continuous);
+            println!(
+                "{:<6}{:<12}{:>10}{:>9}{:>8}{:>12.3}{:>14.1}",
+                cell.m,
+                cell.mode,
+                cell.sessions,
+                cell.tokens,
+                cell.steps,
+                cell.wall_secs,
+                cell.tokens_per_sec
+            );
+            cells.push(cell);
+        }
+    }
+    for m in SLOT_COUNTS {
+        let stat = cells.iter().find(|c| c.m == m && c.mode == "static");
+        let cont = cells.iter().find(|c| c.m == m && c.mode == "continuous");
+        if let (Some(st), Some(co)) = (stat, cont) {
+            println!(
+                "M={m}: continuous {:.2}x static tokens/s ({:.1} vs {:.1})",
+                co.tokens_per_sec / st.tokens_per_sec.max(1e-9),
+                co.tokens_per_sec,
+                st.tokens_per_sec
+            );
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", s("decode_throughput")),
+        ("model", s("nmt")),
+        ("variant", s(VARIANT)),
+        ("width", num(spec_shape.0 as f64)),
+        ("max_steps", num(spec_shape.1 as f64)),
+        ("waves", num(waves as f64)),
+        (
+            "cells",
+            arr(cells
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("m", num(c.m as f64)),
+                        ("mode", s(c.mode)),
+                        ("sessions", num(c.sessions as f64)),
+                        ("tokens", num(c.tokens as f64)),
+                        ("steps", num(c.steps as f64)),
+                        ("wall_secs", num(c.wall_secs)),
+                        ("tokens_per_sec", num(c.tokens_per_sec)),
+                    ])
+                })
+                .collect()),
+        ),
+    ]);
+    let out = "BENCH_decode.json";
+    match std::fs::write(out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("writing {out}: {e}"),
+    }
+}

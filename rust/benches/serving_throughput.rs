@@ -19,6 +19,7 @@ use tilewise::coordinator::{start_with_backend, BatcherConfig, Policy, ServerCon
 use tilewise::exec::{Backend, NativeBackend, NativeModelSpec};
 use tilewise::json::{arr, num, obj, s};
 use tilewise::util::percentile;
+use tilewise::variant::Variant;
 
 const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
 const VARIANTS: [&str; 3] = ["model_dense", "model_tw", "model_tvw"];
@@ -45,7 +46,7 @@ fn run_cell(
             max_wait: Duration::from_millis(1),
             ..BatcherConfig::default()
         },
-        policy: Policy::Fixed(variant.into()),
+        policy: Policy::Fixed(variant.parse::<Variant>().expect("bench variant")),
         workers,
         intra_threads: intra,
         ..ServerConfig::default()
@@ -56,14 +57,14 @@ fn run_cell(
 
     // warmup: one full batch through every worker's scratch path
     for rx in (0..workers * 8).map(|_| handle.submit(x.clone(), None)).collect::<Vec<_>>() {
-        let _ = rx.recv();
+        let _ = rx.wait();
     }
     // closed-loop burst: saturate the queue, measure drain rate
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..requests).map(|_| handle.submit(x.clone(), None)).collect();
     let mut ok = 0usize;
     for rx in rxs {
-        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+        if rx.wait().is_ok() {
             ok += 1;
         }
     }
@@ -113,7 +114,7 @@ fn run_sweep_cell(
                 ..BatcherConfig::default()
             }
         },
-        policy: Policy::Fixed("model_tw".into()),
+        policy: Policy::Fixed(Variant::Tw),
         workers: 1,
         dynamic_batch: dynamic,
         ..ServerConfig::default()
@@ -123,7 +124,7 @@ fn run_sweep_cell(
     let x = vec![0.1f32; len];
     // warmup one full batch through the worker's scratch path
     for rx in (0..8).map(|_| handle.submit(x.clone(), None)).collect::<Vec<_>>() {
-        let _ = rx.recv();
+        let _ = rx.wait();
     }
     let interval = Duration::from_secs_f64(1.0 / offered_rps.max(1e-9));
     let t0 = Instant::now();
@@ -141,12 +142,10 @@ fn run_sweep_cell(
     let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
     let mut occ_sum = 0.0f64;
     for rx in rxs {
-        if let Ok(r) = rx.recv() {
-            if r.is_ok() {
-                ok += 1;
-                lat_ms.push(r.total_secs() * 1e3);
-                occ_sum += r.batch_size as f64 / 8.0;
-            }
+        if let Ok(r) = rx.wait() {
+            ok += 1;
+            lat_ms.push(r.total_secs() * 1e3);
+            occ_sum += r.batch_size as f64 / 8.0;
         }
     }
     let wall = t0.elapsed().as_secs_f64();

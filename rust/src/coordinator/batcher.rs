@@ -136,17 +136,18 @@ mod tests {
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn req(id: u64, len: usize) -> (Request, mpsc::Receiver<super::super::request::Response>) {
-        let (tx, rx) = mpsc::channel();
+    fn req(id: u64, len: usize) -> (Request, super::super::request::ResponseStream) {
+        let (tx, stream) = super::super::request::ResponseStream::channel();
         (
             Request {
                 id,
                 activation: vec![id as f32; len],
                 variant: None,
+                decode_steps: 0,
                 submitted: Instant::now(),
-                respond_to: tx,
+                events: tx,
             },
-            rx,
+            stream,
         )
     }
 

@@ -87,6 +87,42 @@ pub struct Metrics {
     errors: AtomicU64,
     /// Slow-request exemplar ring (last N traces over the threshold).
     slow: TraceRing,
+    /// Streaming-decode meters (step spans, token counters, occupancy).
+    decode: DecodeMeters,
+}
+
+/// Bounded streaming-decode meters: one histogram of per-step wall time
+/// plus exact counters for steps, emitted tokens, and the active-slot
+/// occupancy mean — all lock-free except the tokens/s clock (touched once
+/// per step, like the completion clock).
+#[derive(Default)]
+struct DecodeMeters {
+    step_hist: Histogram,
+    steps: AtomicU64,
+    tokens: AtomicU64,
+    /// Active-slot samples: count + sum scaled by 1e9 (exact to 1e-9).
+    slot_count: AtomicU64,
+    slot_scaled: AtomicU64,
+    /// First/last step instants — the tokens/s window, so an idle tail
+    /// after decode stops does not dilute the figure.
+    clock: Mutex<(Option<Instant>, Option<Instant>)>,
+}
+
+/// Snapshot of the streaming-decode meters.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeStats {
+    /// Decode steps executed (one step advances every resident slot).
+    pub steps: u64,
+    /// Tokens emitted across all sessions (one per active slot per step).
+    pub tokens: u64,
+    /// Tokens per second over the first→last step window.
+    pub tokens_per_sec: f64,
+    /// Mean resident slots per step — continuous batching keeps this high
+    /// under churn where static batching drains to a long tail.
+    pub mean_active_slots: f64,
+    pub step_mean_ms: f64,
+    pub step_p50_ms: f64,
+    pub step_p95_ms: f64,
 }
 
 /// Snapshot of one variant's serving statistics.
@@ -139,6 +175,8 @@ pub struct MetricsSnapshot {
     pub stages: Vec<VariantStageStats>,
     /// Slow-request exemplars retained by the trace ring, oldest first.
     pub exemplars: Vec<TraceExemplar>,
+    /// Streaming-decode aggregates (zeroed when no decode ran).
+    pub decode: DecodeStats,
 }
 
 impl Metrics {
@@ -243,6 +281,62 @@ impl Metrics {
         self.sheds.load(Ordering::Relaxed)
     }
 
+    /// Record one decode step: its wall time, how many slots were
+    /// resident, and how many tokens it emitted (== active slots, but
+    /// kept separate so a future speculative path can differ).
+    pub fn record_decode_step(&self, secs: f64, active_slots: usize, tokens: usize) {
+        let d = &self.decode;
+        d.step_hist.record(secs);
+        d.steps.fetch_add(1, Ordering::Relaxed);
+        d.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        d.slot_count.fetch_add(1, Ordering::Relaxed);
+        d.slot_scaled.fetch_add(((active_slots as f64) * 1e9).round() as u64, Ordering::Relaxed);
+        let now = Instant::now();
+        let mut clock = d.clock.lock().unwrap();
+        if clock.0.is_none() {
+            clock.0 = Some(now);
+        }
+        clock.1 = Some(now);
+    }
+
+    pub fn decode_tokens(&self) -> u64 {
+        self.decode.tokens.load(Ordering::Relaxed)
+    }
+
+    /// Tokens per second over the first→last decode-step window (0.0
+    /// before two spread-out steps exist).
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let tokens = self.decode_tokens();
+        let clock = self.decode.clock.lock().unwrap();
+        match *clock {
+            (Some(first), Some(last)) if last > first => {
+                tokens as f64 / (last - first).as_secs_f64().max(1e-9)
+            }
+            (Some(first), _) => tokens as f64 / first.elapsed().as_secs_f64().max(1e-9),
+            _ => 0.0,
+        }
+    }
+
+    /// Streaming-decode aggregates in one view.
+    pub fn decode_stats(&self) -> DecodeStats {
+        let d = &self.decode;
+        let steps = d.steps.load(Ordering::Relaxed);
+        let slot_n = d.slot_count.load(Ordering::Relaxed);
+        DecodeStats {
+            steps,
+            tokens: self.decode_tokens(),
+            tokens_per_sec: self.decode_tokens_per_sec(),
+            mean_active_slots: if slot_n == 0 {
+                0.0
+            } else {
+                d.slot_scaled.load(Ordering::Relaxed) as f64 / (slot_n as f64 * 1e9)
+            },
+            step_mean_ms: d.step_hist.mean_secs() * 1e3,
+            step_p50_ms: if steps > 0 { d.step_hist.percentile(0.50) * 1e3 } else { 0.0 },
+            step_p95_ms: if steps > 0 { d.step_hist.percentile(0.95) * 1e3 } else { 0.0 },
+        }
+    }
+
     /// Count one failed execute invocation (lock-free).
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
@@ -343,6 +437,7 @@ impl Metrics {
             padded_rows_avoided: self.padded_rows_avoided(),
             stages: self.stage_stats(),
             exemplars: self.exemplars(),
+            decode: self.decode_stats(),
         }
     }
 }
@@ -402,6 +497,15 @@ impl MetricsSnapshot {
                 ])
             })
             .collect();
+        let decode = obj(vec![
+            ("steps", num(self.decode.steps as f64)),
+            ("tokens", num(self.decode.tokens as f64)),
+            ("tokens_per_sec", num(self.decode.tokens_per_sec)),
+            ("mean_active_slots", num(self.decode.mean_active_slots)),
+            ("step_mean_ms", num(self.decode.step_mean_ms)),
+            ("step_p50_ms", num(self.decode.step_p50_ms)),
+            ("step_p95_ms", num(self.decode.step_p95_ms)),
+        ]);
         obj(vec![
             ("completed", num(self.completed as f64)),
             ("sheds", num(self.sheds as f64)),
@@ -413,6 +517,7 @@ impl MetricsSnapshot {
             ("variants", arr(variants)),
             ("stages", arr(stages)),
             ("slow_exemplars", arr(exemplars)),
+            ("decode", decode),
         ])
     }
 }
@@ -581,6 +686,29 @@ mod tests {
         let json = snap.to_json().to_string();
         assert!(json.contains("slow_exemplars"), "{json}");
         assert!(json.contains("\"stages\""), "{json}");
+    }
+
+    #[test]
+    fn decode_steps_aggregate_tokens_and_occupancy() {
+        let m = Metrics::default();
+        let snap0 = m.full_snapshot();
+        assert_eq!(snap0.decode.steps, 0);
+        assert_eq!(snap0.decode.tokens_per_sec, 0.0);
+
+        // three steps: 4, 4, then 2 resident slots
+        m.record_decode_step(0.002, 4, 4);
+        std::thread::sleep(Duration::from_millis(15));
+        m.record_decode_step(0.002, 4, 4);
+        m.record_decode_step(0.001, 2, 2);
+        let d = m.decode_stats();
+        assert_eq!(d.steps, 3);
+        assert_eq!(d.tokens, 10);
+        assert!((d.mean_active_slots - 10.0 / 3.0).abs() < 1e-9, "{}", d.mean_active_slots);
+        assert!(d.tokens_per_sec > 0.0, "window tokens/s: {}", d.tokens_per_sec);
+        assert!(d.step_p95_ms >= d.step_p50_ms);
+        let json = m.full_snapshot().to_json().to_string();
+        assert!(json.contains("tokens_per_sec"), "{json}");
+        assert!(json.contains("mean_active_slots"), "{json}");
     }
 
     #[test]

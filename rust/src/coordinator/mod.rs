@@ -3,6 +3,14 @@
 //! ([`crate::exec`]: PJRT artifacts or the native CPU kernels) into a
 //! service (vLLM-router-shaped, scaled to this paper's
 //! inference-acceleration setting).
+//!
+//! The session-oriented API is stream-first: every submission returns a
+//! [`ResponseStream`] of [`StreamEvent`]s.  One-shot forwards are a
+//! single-`Done` stream ([`ResponseStream::wait`] for the blocking
+//! ergonomic); autoregressive decode sessions
+//! ([`server::ServerHandle::submit_decode`]) stream one
+//! [`StreamEvent::Token`] per step under the continuous-batching step
+//! scheduler, then the terminal `Done` (DESIGN.md §10).
 
 pub mod batcher;
 pub mod metrics;
@@ -14,7 +22,9 @@ pub use batcher::{
     collect_batch, collect_batch_shared, collect_batch_shared_traced, collect_batch_traced,
     pack_batch, BatcherConfig, CollectedBatch,
 };
-pub use metrics::{Metrics, MetricsSnapshot, VariantStageStats, VariantStats};
-pub use request::{Request, Response};
+pub use metrics::{DecodeStats, Metrics, MetricsSnapshot, VariantStageStats, VariantStats};
+pub use request::{Request, Response, ResponseStream, StreamEvent, TokenEvent};
 pub use router::{Policy, Router};
-pub use server::{start, start_with_backend, ServerConfig, ServerHandle};
+pub use server::{
+    start, start_with_backend, ServerConfig, ServerConfigBuilder, ServerHandle,
+};

@@ -1,48 +1,221 @@
-//! Request/response types flowing through the serving stack.
+//! Request/response types flowing through the serving stack: the
+//! session-oriented streaming surface.
+//!
+//! Every submission — one-shot forward or autoregressive decode — is a
+//! *stream*: the worker pushes zero or more [`StreamEvent::Token`]s
+//! (one per decode step) and terminates with exactly one
+//! [`StreamEvent::Done`] (carrying the final [`Response`]) or
+//! [`StreamEvent::Error`].  A one-shot forward is simply a single-`Done`
+//! stream, so the historical `submit → recv` call sites migrate to
+//! `submit → wait` mechanically.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::bail;
+use crate::variant::Variant;
+
 /// One inference request: a single sequence's activations `(seq, d_model)`
-/// flattened row-major.  The dynamic batcher packs up to `batch` of these
-/// into one executable invocation.
+/// flattened row-major.  For decode submissions (`decode_steps > 0`) the
+/// activation is the prompt, consumed one `(d_model)` row per step.
 pub struct Request {
     pub id: u64,
     pub activation: Vec<f32>,
-    /// Preferred model variant ("model_dense" / "model_tw" / "model_tvw");
-    /// `None` lets the router decide.
-    pub variant: Option<String>,
+    /// Preferred model variant; `None` lets the router decide.
+    pub variant: Option<Variant>,
+    /// Number of tokens to generate *after* the prompt is consumed.
+    /// `0` requests a one-shot forward over the full activation.
+    pub decode_steps: usize,
     pub submitted: Instant,
-    pub respond_to: mpsc::Sender<Response>,
+    /// Event sink for this request's stream.  Send failures mean the
+    /// client dropped its [`ResponseStream`]; workers ignore them.
+    pub events: mpsc::Sender<StreamEvent>,
 }
 
-/// The answer: per-sequence logits plus serving telemetry.
+impl Request {
+    /// True when this request wants streaming decode rather than a
+    /// one-shot forward.
+    pub fn is_decode(&self) -> bool {
+        self.decode_steps > 0
+    }
+}
+
+/// One streamed decode step: the logits produced at this step and the
+/// greedy token derived from them.  Steps that consume prompt rows are
+/// streamed too — the event at the last prompt step carries the logits a
+/// one-shot forward of the same prompt would return.
+#[derive(Clone, Debug)]
+pub struct TokenEvent {
+    pub id: u64,
+    /// Workspace slot this request occupied when the step ran.
+    pub slot: usize,
+    /// 0-based step index within this request's lifetime.
+    pub step: usize,
+    /// argmax of `logits`.
+    pub token: usize,
+    pub logits: Vec<f32>,
+}
+
+/// One element of a [`ResponseStream`].
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// A decode step completed for this request.
+    Token(TokenEvent),
+    /// Terminal: the request finished; carries the final [`Response`].
+    Done(Response),
+    /// Terminal: the request failed (shed, rejected, or execute error).
+    Error(String),
+}
+
+/// The final answer: per-sequence logits plus serving telemetry.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    /// Per-request logits; empty when `error` is set.
+    /// Per-request logits (for decode: the last step's logits).
     pub logits: Vec<f32>,
     /// Which executable served this request.
     pub variant: String,
-    /// Time spent waiting in the queue + batcher, seconds.
+    /// Time spent waiting for the batcher's first receive, seconds.
     pub queue_secs: f64,
-    /// Executable invocation time (shared by the whole batch), seconds.
+    /// Batch assembly window (drain + wait), seconds.
+    pub assembly_secs: f64,
+    /// Routing + activation packing, seconds.
+    pub pack_secs: f64,
+    /// Executable invocation time (for decode: summed step time), seconds.
     pub execute_secs: f64,
-    /// How many real requests shared the batch (the coalesced size, not
-    /// this request's position in it).
+    /// How many real requests shared the batch (for decode: the mean
+    /// in-flight slot count over this request's steps, rounded).
     pub batch_size: usize,
-    /// Set when the execute failed: the whole batch gets an explicit
-    /// error response instead of a silently dropped channel.
-    pub error: Option<String>,
+    /// Decode steps streamed before `Done` (0 for one-shot forwards).
+    pub tokens: usize,
 }
 
 impl Response {
+    /// End-to-end seconds as the coordinator observed them: every stage
+    /// of the request pipeline, matching `RequestTrace::total()` up to
+    /// the respond span (which ends after this response is sent, so it
+    /// cannot be part of it).  Historically this omitted assembly+pack,
+    /// under-reporting latency versus the stage histograms.
     pub fn total_secs(&self) -> f64 {
-        self.queue_secs + self.execute_secs
+        self.queue_secs + self.assembly_secs + self.pack_secs + self.execute_secs
+    }
+}
+
+/// Iterator over one request's [`StreamEvent`]s.  Ends after the
+/// terminal `Done`/`Error` event (or when the server drops the sender).
+pub struct ResponseStream {
+    rx: mpsc::Receiver<StreamEvent>,
+    terminated: bool,
+}
+
+impl ResponseStream {
+    /// A stream plus its sending half; the coordinator keeps the sender
+    /// on the [`Request`] and hands the stream to the caller.
+    pub fn channel() -> (mpsc::Sender<StreamEvent>, ResponseStream) {
+        let (tx, rx) = mpsc::channel();
+        (tx, ResponseStream { rx, terminated: false })
     }
 
-    /// True when the request was served (no execute error).
-    pub fn is_ok(&self) -> bool {
-        self.error.is_none()
+    /// Block until the terminal event, discarding intermediate tokens:
+    /// the one-shot ergonomic (`submit(..).wait()?`).
+    pub fn wait(self) -> crate::error::Result<Response> {
+        for ev in self {
+            match ev {
+                StreamEvent::Token(_) => {}
+                StreamEvent::Done(resp) => return Ok(resp),
+                StreamEvent::Error(msg) => bail!("{msg}"),
+            }
+        }
+        bail!("response stream closed before completion")
+    }
+}
+
+impl Iterator for ResponseStream {
+    type Item = StreamEvent;
+
+    fn next(&mut self) -> Option<StreamEvent> {
+        if self.terminated {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                if matches!(ev, StreamEvent::Done(_) | StreamEvent::Error(_)) {
+                    self.terminated = true;
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.terminated = true;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::RequestTrace;
+
+    fn resp(q: f64, a: f64, p: f64, e: f64) -> Response {
+        Response {
+            id: 1,
+            logits: vec![0.0],
+            variant: "model_tw".into(),
+            queue_secs: q,
+            assembly_secs: a,
+            pack_secs: p,
+            execute_secs: e,
+            batch_size: 1,
+            tokens: 0,
+        }
+    }
+
+    #[test]
+    fn total_secs_includes_every_stage() {
+        // regression: total_secs used to be queue + execute only, so a
+        // response disagreed with its own RequestTrace by assembly+pack
+        let r = resp(0.5, 0.25, 0.125, 2.0);
+        let trace = RequestTrace {
+            queue: 0.5,
+            assembly: 0.25,
+            pack: 0.125,
+            execute: 2.0,
+            respond: 0.0,
+        };
+        assert!((r.total_secs() - trace.total()).abs() < 1e-12);
+        assert!((r.total_secs() - 2.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_yields_tokens_then_terminates_on_done() {
+        let (tx, stream) = ResponseStream::channel();
+        tx.send(StreamEvent::Token(TokenEvent {
+            id: 1,
+            slot: 0,
+            step: 0,
+            token: 3,
+            logits: vec![0.0, 0.0, 0.0, 1.0],
+        }))
+        .unwrap();
+        tx.send(StreamEvent::Done(resp(0.0, 0.0, 0.0, 0.0))).unwrap();
+        // events after the terminal must never be yielded
+        tx.send(StreamEvent::Error("late".into())).unwrap();
+        let events: Vec<StreamEvent> = stream.collect();
+        assert_eq!(events.len(), 2);
+        assert!(matches!(events[0], StreamEvent::Token(ref t) if t.token == 3));
+        assert!(matches!(events[1], StreamEvent::Done(_)));
+    }
+
+    #[test]
+    fn wait_surfaces_errors_and_dropped_channels() {
+        let (tx, stream) = ResponseStream::channel();
+        tx.send(StreamEvent::Error("execute failed: model_bogus".into())).unwrap();
+        let err = stream.wait().unwrap_err().to_string();
+        assert!(err.contains("model_bogus"), "{err}");
+
+        let (tx, stream) = ResponseStream::channel();
+        drop(tx);
+        assert!(stream.wait().is_err());
     }
 }

@@ -5,40 +5,51 @@
 //! latency comparisons, as the e2e example does), or load-adaptive —
 //! serve dense while the queue is short, shed to the sparse variant under
 //! pressure (the paper's motivation: sparse models buy latency headroom).
+//!
+//! Policies are over the typed [`Variant`] enum, not strings: a policy
+//! that routes to a nonexistent variant is unrepresentable, and every
+//! match over patterns is checked for exhaustiveness at compile time.
+//! The string form only appears at the [`crate::exec::PreparedModel`]
+//! seam (`Variant::name`).
 
 use super::request::Request;
 use crate::autotune::PlanCache;
+use crate::variant::Variant;
 
 #[derive(Clone, Debug)]
 pub enum Policy {
     /// Always this variant.
-    Fixed(String),
+    Fixed(Variant),
     /// Rotate over variants per batch.
-    RoundRobin(Vec<String>),
+    RoundRobin(Vec<Variant>),
     /// Dense until queue depth exceeds the threshold, then sparse.
-    Adaptive { dense: String, sparse: String, queue_threshold: usize },
+    Adaptive { dense: Variant, sparse: Variant, queue_threshold: usize },
     /// Serve whatever the autotuner's plan cache recommends for `model`
     /// (`cache.model_variant(model)`), or `fallback` when the cache has no
     /// recommendation.  Resolved once at server startup via [`Policy::resolve`].
-    Tuned { model: String, fallback: String },
+    Tuned { model: String, fallback: Variant },
 }
 
 impl Policy {
     /// Collapse a `Tuned` policy to the concrete `Fixed` variant the plan
     /// cache recommends; every other policy passes through unchanged.
+    /// A recommendation that fails to parse as a [`Variant`] falls back
+    /// like a missing one (the cache file is external input).
     pub fn resolve(self, cache: Option<&PlanCache>) -> Policy {
         match self {
-            Policy::Tuned { model, fallback } => match cache.and_then(|c| c.model_variant(&model)) {
-                Some(variant) => Policy::Fixed(variant.to_string()),
-                None => {
-                    eprintln!(
-                        "[router] no tuned recommendation for {model:?} \
-                         (cache {}); serving fallback {fallback:?}",
-                        if cache.is_some() { "loaded" } else { "absent" }
-                    );
-                    Policy::Fixed(fallback)
+            Policy::Tuned { model, fallback } => {
+                match cache.and_then(|c| c.model_variant(&model)).and_then(|v| v.parse().ok()) {
+                    Some(variant) => Policy::Fixed(variant),
+                    None => {
+                        eprintln!(
+                            "[router] no tuned recommendation for {model:?} \
+                             (cache {}); serving fallback {fallback}",
+                            if cache.is_some() { "loaded" } else { "absent" }
+                        );
+                        Policy::Fixed(fallback)
+                    }
                 }
-            },
+            }
             other => other,
         }
     }
@@ -56,26 +67,33 @@ impl Router {
 
     /// Pick the executable for a batch.  A request's explicit variant
     /// preference (first in the batch that has one) wins over the policy.
-    pub fn route(&mut self, batch: &[Request], queue_depth: usize) -> String {
-        if let Some(v) = batch.iter().find_map(|r| r.variant.clone()) {
+    pub fn route(&mut self, batch: &[Request], queue_depth: usize) -> Variant {
+        if let Some(v) = batch.iter().find_map(|r| r.variant) {
             return v;
         }
+        self.route_policy(queue_depth)
+    }
+
+    /// Policy-only routing (no per-request preferences) — the decode
+    /// step-scheduler uses this to pick the variant a joining session is
+    /// admitted under when the request states no preference.
+    pub fn route_policy(&mut self, queue_depth: usize) -> Variant {
         match &self.policy {
-            Policy::Fixed(v) => v.clone(),
+            Policy::Fixed(v) => *v,
             Policy::RoundRobin(vs) => {
-                let v = vs[self.rr_next % vs.len()].clone();
+                let v = vs[self.rr_next % vs.len()];
                 self.rr_next += 1;
                 v
             }
             Policy::Adaptive { dense, sparse, queue_threshold } => {
                 if queue_depth > *queue_threshold {
-                    sparse.clone()
+                    *sparse
                 } else {
-                    dense.clone()
+                    *dense
                 }
             }
             // an unresolved Tuned policy behaves like its fallback
-            Policy::Tuned { fallback, .. } => fallback.clone(),
+            Policy::Tuned { fallback, .. } => *fallback,
         }
     }
 }
@@ -83,73 +101,84 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+    use crate::coordinator::request::ResponseStream;
     use std::time::Instant;
 
-    fn req(variant: Option<&str>) -> Request {
-        let (tx, _rx) = mpsc::channel();
+    fn req(variant: Option<Variant>) -> Request {
+        let (tx, _rx) = ResponseStream::channel();
         Request {
             id: 0,
             activation: vec![],
-            variant: variant.map(String::from),
+            variant,
+            decode_steps: 0,
             submitted: Instant::now(),
-            respond_to: tx,
+            events: tx,
         }
     }
 
     #[test]
     fn fixed_policy() {
-        let mut r = Router::new(Policy::Fixed("model_tw".into()));
-        assert_eq!(r.route(&[req(None)], 0), "model_tw");
+        let mut r = Router::new(Policy::Fixed(Variant::Tw));
+        assert_eq!(r.route(&[req(None)], 0), Variant::Tw);
     }
 
     #[test]
     fn round_robin_rotates() {
-        let mut r = Router::new(Policy::RoundRobin(vec!["a".into(), "b".into()]));
-        assert_eq!(r.route(&[req(None)], 0), "a");
-        assert_eq!(r.route(&[req(None)], 0), "b");
-        assert_eq!(r.route(&[req(None)], 0), "a");
+        let mut r = Router::new(Policy::RoundRobin(vec![Variant::Dense, Variant::Tvw]));
+        assert_eq!(r.route(&[req(None)], 0), Variant::Dense);
+        assert_eq!(r.route(&[req(None)], 0), Variant::Tvw);
+        assert_eq!(r.route(&[req(None)], 0), Variant::Dense);
     }
 
     #[test]
     fn adaptive_sheds_under_load() {
         let mut r = Router::new(Policy::Adaptive {
-            dense: "model_dense".into(),
-            sparse: "model_tvw".into(),
+            dense: Variant::Dense,
+            sparse: Variant::Tvw,
             queue_threshold: 4,
         });
-        assert_eq!(r.route(&[req(None)], 0), "model_dense");
-        assert_eq!(r.route(&[req(None)], 10), "model_tvw");
+        assert_eq!(r.route(&[req(None)], 0), Variant::Dense);
+        assert_eq!(r.route(&[req(None)], 10), Variant::Tvw);
     }
 
     #[test]
     fn explicit_preference_wins() {
-        let mut r = Router::new(Policy::Fixed("model_dense".into()));
-        assert_eq!(r.route(&[req(None), req(Some("model_tvw"))], 0), "model_tvw");
+        let mut r = Router::new(Policy::Fixed(Variant::Dense));
+        assert_eq!(r.route(&[req(None), req(Some(Variant::Tvw))], 0), Variant::Tvw);
     }
 
     #[test]
     fn tuned_policy_resolves_against_cache() {
         let mut cache = PlanCache::new();
         cache.set_model_variant("bert", "model_tw");
-        let tuned = Policy::Tuned { model: "bert".into(), fallback: "model_dense".into() };
+        let tuned = Policy::Tuned { model: "bert".into(), fallback: Variant::Dense };
         match tuned.clone().resolve(Some(&cache)) {
-            Policy::Fixed(v) => assert_eq!(v, "model_tw"),
+            Policy::Fixed(v) => assert_eq!(v, Variant::Tw),
             other => panic!("expected Fixed, got {other:?}"),
         }
         // no cache -> fallback; unknown model -> fallback
         match tuned.clone().resolve(None) {
-            Policy::Fixed(v) => assert_eq!(v, "model_dense"),
+            Policy::Fixed(v) => assert_eq!(v, Variant::Dense),
             other => panic!("expected Fixed, got {other:?}"),
         }
-        let other_model =
-            Policy::Tuned { model: "vgg16".into(), fallback: "model_dense".into() };
+        let other_model = Policy::Tuned { model: "vgg16".into(), fallback: Variant::Dense };
         match other_model.resolve(Some(&cache)) {
-            Policy::Fixed(v) => assert_eq!(v, "model_dense"),
+            Policy::Fixed(v) => assert_eq!(v, Variant::Dense),
             other => panic!("expected Fixed, got {other:?}"),
         }
         // unresolved Tuned routes to its fallback
         let mut r = Router::new(tuned);
-        assert_eq!(r.route(&[req(None)], 0), "model_dense");
+        assert_eq!(r.route(&[req(None)], 0), Variant::Dense);
+    }
+
+    #[test]
+    fn unparseable_recommendation_falls_back() {
+        let mut cache = PlanCache::new();
+        cache.set_model_variant("bert", "model_bogus");
+        let tuned = Policy::Tuned { model: "bert".into(), fallback: Variant::Tw };
+        match tuned.resolve(Some(&cache)) {
+            Policy::Fixed(v) => assert_eq!(v, Variant::Tw),
+            other => panic!("expected Fixed, got {other:?}"),
+        }
     }
 }

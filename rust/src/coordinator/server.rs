@@ -1,37 +1,49 @@
 //! The serving loop: a pool of worker threads sharing one request channel
 //! through the dynamic batcher and the router, each worker owning its own
-//! backend-loaded model.
+//! backend-loaded model — plus the two specialised lanes of the streaming
+//! API:
 //!
-//! The hot path stays allocation-light and contention-light: one shared-
-//! channel batch collection (exactly one worker blocks in `recv` while the
-//! others execute — that lock *is* the pipeline), one buffer staging, one
-//! execute.  Which kernels run is the backend's business
+//! - the **fast lane** (`ServerConfig::fast_lane`): one dedicated worker
+//!   on its own channel with an M=1 eager batcher, bypassing the
+//!   co-batching wait entirely for latency-critical one-shot requests
+//!   ([`ServerHandle::submit_fast`]);
+//! - the **decode lane**: one dedicated worker running the continuous-
+//!   batching step scheduler — autoregressive sessions join and leave the
+//!   in-flight slot set at *step boundaries* (Orca-style), each streaming
+//!   [`StreamEvent::Token`]s as it goes ([`ServerHandle::submit_decode`]).
+//!
+//! The one-shot hot path stays allocation-light and contention-light: one
+//! shared-channel batch collection (exactly one worker blocks in `recv`
+//! while the others execute — that lock *is* the pipeline), one buffer
+//! staging, one execute.  Which kernels run is the backend's business
 //! ([`crate::exec::Backend`]): the PJRT artifact engine, or the native
 //! in-process backend that packs weights once and runs the paper's
 //! TW/TVW/2:4 CPU kernels with no artifacts at all.
 
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::batcher::{collect_batch_shared_traced, pack_batch, BatcherConfig, CollectedBatch};
 use super::metrics::Metrics;
-use super::request::{Request, Response};
+use super::request::{Request, Response, ResponseStream, StreamEvent, TokenEvent};
 use super::router::{Policy, Router};
-use crate::anyhow;
 use crate::autotune::PlanCache;
 use crate::error::Result;
-use crate::exec::{Backend, ModelDims, PjrtBackend};
+use crate::exec::{Backend, DecodeCaps, ModelDims, PjrtBackend, PreparedModel};
 use crate::pool::{LaneStats, ThreadPool};
 use crate::telemetry::RequestTrace;
+use crate::variant::Variant;
+use crate::{anyhow, ensure};
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
     pub policy: Policy,
     /// Which executables to load ("model_*" entries in meta.json).
-    pub variants: Vec<String>,
+    pub variants: Vec<Variant>,
     /// Backpressure: submissions beyond this queue depth are shed
     /// immediately instead of growing the tail (0 = unbounded).
     pub max_queue: usize,
@@ -61,26 +73,154 @@ pub struct ServerConfig {
     /// everywhere (the A/B baseline `benches/serving_throughput.rs`
     /// measures against).
     pub dynamic_batch: bool,
+    /// Spawn the M=1 low-latency fast lane: a dedicated worker on its own
+    /// channel with an eager single-request batcher, reached via
+    /// [`ServerHandle::submit_fast`].  Without it `submit_fast` degrades
+    /// to the normal batched path.
+    pub fast_lane: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             batcher: BatcherConfig::default(),
-            policy: Policy::Fixed("model_tw".into()),
-            variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
+            policy: Policy::Fixed(Variant::Tw),
+            variants: vec![Variant::Dense, Variant::Tw, Variant::Tvw],
             max_queue: 0,
             plan_cache: None,
             workers: 1,
             intra_threads: 1,
             dynamic_batch: true,
+            fast_lane: false,
         }
     }
 }
 
-/// Client handle: submit requests, read metrics, shut down.
+impl ServerConfig {
+    /// Start from the defaults and override field by field.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder { cfg: ServerConfig::default() }
+    }
+
+    /// Throughput preset: a deeper batch window and a second worker so
+    /// collection overlaps execution — the saturation-serving shape.
+    pub fn throughput() -> ServerConfigBuilder {
+        ServerConfig::builder()
+            .workers(2)
+            .max_batch(16)
+            .max_wait(Duration::from_millis(4))
+            .dynamic_batch(true)
+    }
+
+    /// Low-latency preset: eager dispatch (no speculative co-batching
+    /// wait) plus the dedicated M=1 fast lane.
+    pub fn low_latency() -> ServerConfigBuilder {
+        ServerConfig::builder()
+            .batcher(BatcherConfig::low_latency(8))
+            .fast_lane(true)
+            .dynamic_batch(true)
+    }
+}
+
+/// Builder for [`ServerConfig`] with validation at
+/// [`ServerConfigBuilder::build`] — the misconfigurations that used to
+/// surface as runtime panics or silent starvation (a zero-worker pool, an
+/// empty round-robin rotation, a zero-size batch) are rejected up front.
+#[derive(Clone, Debug)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn intra_threads(mut self, n: usize) -> Self {
+        self.cfg.intra_threads = n;
+        self
+    }
+
+    pub fn max_queue(mut self, n: usize) -> Self {
+        self.cfg.max_queue = n;
+        self
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn variants(mut self, variants: Vec<Variant>) -> Self {
+        self.cfg.variants = variants;
+        self
+    }
+
+    pub fn plan_cache(mut self, path: PathBuf) -> Self {
+        self.cfg.plan_cache = Some(path);
+        self
+    }
+
+    pub fn batcher(mut self, batcher: BatcherConfig) -> Self {
+        self.cfg.batcher = batcher;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.batcher.max_batch = n;
+        self
+    }
+
+    pub fn max_wait(mut self, wait: Duration) -> Self {
+        self.cfg.batcher.max_wait = wait;
+        self
+    }
+
+    pub fn eager(mut self, eager: bool) -> Self {
+        self.cfg.batcher.eager = eager;
+        self
+    }
+
+    pub fn dynamic_batch(mut self, on: bool) -> Self {
+        self.cfg.dynamic_batch = on;
+        self
+    }
+
+    pub fn fast_lane(mut self, on: bool) -> Self {
+        self.cfg.fast_lane = on;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ServerConfig> {
+        let cfg = self.cfg;
+        ensure!(cfg.workers >= 1, "server config: the worker pool needs at least one worker");
+        ensure!(cfg.intra_threads >= 1, "server config: intra_threads must be >= 1");
+        ensure!(cfg.batcher.max_batch >= 1, "server config: max_batch must be >= 1");
+        ensure!(!cfg.variants.is_empty(), "server config: at least one variant must be loaded");
+        if let Policy::RoundRobin(vs) = &cfg.policy {
+            ensure!(!vs.is_empty(), "server config: a round-robin rotation cannot be empty");
+        }
+        if let Policy::Adaptive { dense, sparse, .. } = &cfg.policy {
+            ensure!(
+                dense != sparse,
+                "server config: adaptive policy needs two distinct variants (got {dense} twice)"
+            );
+        }
+        Ok(cfg)
+    }
+}
+
+/// Client handle: submit requests (batched, fast-lane, or streaming
+/// decode), read metrics, shut down.
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
+    /// Dedicated M=1 channel (`Some` iff `cfg.fast_lane`).
+    fast_tx: Option<mpsc::Sender<Request>>,
+    /// The decode lane's channel (always spawned; the lane answers with
+    /// an error stream when the model is one-shot only).
+    decode_tx: mpsc::Sender<Request>,
     pub metrics: Arc<Metrics>,
     /// The tuned plan cache the server loaded at startup, if any.
     pub plan_cache: Option<Arc<PlanCache>>,
@@ -91,12 +231,17 @@ pub struct ServerHandle {
     /// The shared intra-op kernel pool, kept for lane telemetry
     /// (`None` when `intra_threads <= 1`).
     intra: Option<Arc<ThreadPool>>,
-    /// How many workers the pool runs.
+    /// How many pool workers serve the shared channel (the fast and
+    /// decode lanes not included).
     pub workers: usize,
     pub seq: usize,
     pub d_model: usize,
     pub batch: usize,
     pub n_classes: usize,
+    /// Streaming-decode capability of the loaded model (`None` = the
+    /// backend is one-shot only and `submit_decode` returns error
+    /// streams).
+    pub decode_caps: Option<DecodeCaps>,
 }
 
 impl ServerHandle {
@@ -113,13 +258,13 @@ impl ServerHandle {
         self.intra.as_ref().map(|p| p.lane_stats())
     }
 
-    /// Submit with backpressure: sheds (returns None) when the queue is
+    /// Submit with backpressure: sheds (returns `None`) when the queue is
     /// beyond `max_queue`.
     pub fn try_submit(
         &self,
         activation: Vec<f32>,
-        variant: Option<String>,
-    ) -> Option<mpsc::Receiver<Response>> {
+        variant: Option<Variant>,
+    ) -> Option<ResponseStream> {
         if self.max_queue > 0 && self.queue_depth.load(Ordering::Relaxed) >= self.max_queue {
             self.metrics.record_shed();
             return None;
@@ -127,65 +272,141 @@ impl ServerHandle {
         Some(self.submit(activation, variant))
     }
 
-    /// Submit one sequence's activations; returns the response receiver.
+    /// Submit one sequence's activations; returns the event stream (a
+    /// one-shot forward is a single-`Done` stream, so
+    /// `submit(..).wait()` is the blocking ergonomic).
     ///
     /// An activation longer than the model's per-request capacity
-    /// (`seq * d_model`) is rejected here with an explicit error
-    /// [`Response`] (counted in `Metrics::errors`) — it could never be
-    /// served, and letting it reach `pack_batch` used to panic the
-    /// worker thread mid-batch.  Shorter activations remain accepted and
-    /// zero-padded, as ever.
-    pub fn submit(
+    /// (`seq * d_model`) is rejected here with a terminal
+    /// [`StreamEvent::Error`] (counted in `Metrics::errors`) — it could
+    /// never be served, and letting it reach `pack_batch` used to panic
+    /// the worker thread mid-batch.  Shorter activations remain accepted
+    /// and zero-padded, as ever.
+    pub fn submit(&self, activation: Vec<f32>, variant: Option<Variant>) -> ResponseStream {
+        self.submit_to(&self.tx, activation, variant)
+    }
+
+    /// Submit on the M=1 low-latency fast lane, bypassing the batcher's
+    /// co-batching wait entirely.  Degrades to the normal batched path
+    /// when the server was started without `fast_lane`.
+    pub fn submit_fast(&self, activation: Vec<f32>, variant: Option<Variant>) -> ResponseStream {
+        let lane = self.fast_tx.as_ref().unwrap_or(&self.tx);
+        self.submit_to(lane, activation, variant)
+    }
+
+    fn submit_to(
         &self,
+        lane: &mpsc::Sender<Request>,
         activation: Vec<f32>,
-        variant: Option<String>,
-    ) -> mpsc::Receiver<Response> {
-        let (tx, rx) = mpsc::channel();
+        variant: Option<Variant>,
+    ) -> ResponseStream {
+        let (tx, stream) = ResponseStream::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let per_request_len = self.seq * self.d_model;
         if activation.len() > per_request_len {
             self.metrics.record_error();
-            let _ = tx.send(Response {
-                id,
-                logits: Vec::new(),
-                variant: variant.unwrap_or_default(),
-                queue_secs: 0.0,
-                execute_secs: 0.0,
-                batch_size: 0,
-                error: Some(format!(
-                    "activation has {} floats, exceeding the model's per-request \
-                     capacity {per_request_len} (seq {} x d_model {})",
-                    activation.len(),
-                    self.seq,
-                    self.d_model
-                )),
-            });
-            return rx;
+            let _ = tx.send(StreamEvent::Error(format!(
+                "activation has {} floats, exceeding the model's per-request \
+                 capacity {per_request_len} (seq {} x d_model {})",
+                activation.len(),
+                self.seq,
+                self.d_model
+            )));
+            return stream;
         }
-        let req = Request { id, activation, variant, submitted: Instant::now(), respond_to: tx };
+        let req = Request {
+            id,
+            activation,
+            variant,
+            decode_steps: 0,
+            submitted: Instant::now(),
+            events: tx,
+        };
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
         // a closed channel means the server already shut down; the caller
-        // sees it as a dropped response channel
-        let _ = self.tx.send(req);
-        rx
+        // sees it as a closed stream
+        let _ = lane.send(req);
+        stream
     }
 
-    /// Blocking convenience: submit and wait.
-    pub fn infer(&self, activation: Vec<f32>, variant: Option<String>) -> Result<Response> {
-        let rx = self.submit(activation, variant);
-        Ok(rx.recv()?)
+    /// Open a streaming decode session: the prompt (`prompt.len()` a
+    /// positive multiple of `DecodeCaps::d_in`) is consumed one row per
+    /// step, then `max_new_tokens` tokens are generated by greedy
+    /// feedback — every step streams a [`StreamEvent::Token`], and the
+    /// terminal `Done` carries the last step's logits.  The session joins
+    /// the in-flight batch at the next step boundary with a free slot
+    /// (continuous batching) and leaves the moment its last token is out.
+    pub fn submit_decode(
+        &self,
+        prompt: Vec<f32>,
+        variant: Option<Variant>,
+        max_new_tokens: usize,
+    ) -> ResponseStream {
+        let (tx, stream) = ResponseStream::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let Some(caps) = self.decode_caps else {
+            self.metrics.record_error();
+            let _ = tx.send(StreamEvent::Error(
+                "streaming decode unavailable: the loaded model is one-shot only".into(),
+            ));
+            return stream;
+        };
+        if max_new_tokens == 0 {
+            self.metrics.record_error();
+            let _ = tx.send(StreamEvent::Error(
+                "streaming decode needs max_new_tokens >= 1 (use submit for one-shot)".into(),
+            ));
+            return stream;
+        }
+        if prompt.is_empty()
+            || prompt.len() % caps.d_in != 0
+            || prompt.len() / caps.d_in + max_new_tokens > caps.max_steps
+        {
+            self.metrics.record_error();
+            let _ = tx.send(StreamEvent::Error(format!(
+                "decode prompt of {} floats + {max_new_tokens} new tokens does not fit \
+                 the slot shape (d_in {}, max_steps {})",
+                prompt.len(),
+                caps.d_in,
+                caps.max_steps
+            )));
+            return stream;
+        }
+        let req = Request {
+            id,
+            activation: prompt,
+            variant,
+            decode_steps: max_new_tokens,
+            submitted: Instant::now(),
+            events: tx,
+        };
+        let _ = self.decode_tx.send(req);
+        stream
     }
 
-    /// Graceful shutdown: close the request channel and join the workers.
+    /// Blocking convenience: submit and wait for the terminal response.
+    pub fn infer(&self, activation: Vec<f32>, variant: Option<Variant>) -> Result<Response> {
+        self.submit(activation, variant).wait()
+    }
+
+    /// Graceful shutdown: close the request channels and join the workers.
     /// (Equivalent to dropping the handle; provided for explicitness.)
     pub fn shutdown(self) {}
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        // Closing tx ends collect_batch on every worker -> pool drains.
+        // Closing every lane ends collect_batch / the decode intake on
+        // every worker -> the pool drains; resident decode sessions still
+        // run to completion before their lane exits.
         let (dead_tx, _) = mpsc::channel();
         self.tx = dead_tx;
+        if let Some(fast) = self.fast_tx.as_mut() {
+            let (dead_tx, _) = mpsc::channel();
+            *fast = dead_tx;
+        }
+        let (dead_tx, _) = mpsc::channel();
+        self.decode_tx = dead_tx;
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
@@ -196,24 +417,358 @@ impl Drop for ServerHandle {
 /// kept as the historical entry point; degrades at startup when the
 /// `pjrt` feature or the artifacts are missing).
 pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<ServerHandle> {
-    let backend = Arc::new(PjrtBackend::new(artifact_dir, &cfg.variants));
+    let names: Vec<String> = cfg.variants.iter().map(|v| v.name().to_string()).collect();
+    let backend = Arc::new(PjrtBackend::new(artifact_dir, &names));
     start_with_backend(backend, cfg)
+}
+
+/// Shared per-lane context for [`worker_loop`].
+struct WorkerCtx {
+    metrics: Arc<Metrics>,
+    queue_depth: Arc<AtomicUsize>,
+    dynamic_batch: bool,
+    wid: usize,
+}
+
+/// One lane of the one-shot serving pool: collect a batch, route it,
+/// pack it, execute, stream every request its terminal event.  Both the
+/// shared pool workers and the M=1 fast lane run this loop — they differ
+/// only in channel and batcher config.
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<Request>>,
+    cfg: &BatcherConfig,
+    model: &mut dyn PreparedModel,
+    router: &mut Router,
+    ctx: &WorkerCtx,
+) {
+    let dims = model.dims();
+    // static-shape models (PJRT) would only re-pad a partial pack
+    // internally — give them the single full-B pack instead (same
+    // numerics, one allocation)
+    let dynamic_batch = ctx.dynamic_batch && model.supports_dynamic_batch();
+    let per_request_len = dims.per_request_len();
+    let n_classes = dims.n_classes;
+    while let Some(CollectedBatch { requests: batch_reqs, first_recv, assembled }) =
+        collect_batch_shared_traced(rx, cfg)
+    {
+        // the true coalesced size every response reports
+        let real = batch_reqs.len().min(dims.batch);
+        let depth = ctx.queue_depth.load(Ordering::Relaxed).saturating_sub(batch_reqs.len());
+        let variant = router.route(&batch_reqs, depth);
+        let vname = variant.name();
+        // dynamic effective batch: pack and execute only the real
+        // coalesced rows — the padded path packs (and computes) the full
+        // B as it always did
+        let t0;
+        let result = if dynamic_batch {
+            let packed = pack_batch(&batch_reqs, real, per_request_len);
+            t0 = Instant::now();
+            model.run_batch(vname, &packed, real)
+        } else {
+            let packed = pack_batch(&batch_reqs, dims.batch, per_request_len);
+            t0 = Instant::now();
+            model.run(vname, &packed)
+        };
+        let exec_secs = t0.elapsed().as_secs_f64();
+        ctx.queue_depth.fetch_sub(batch_reqs.len(), Ordering::Relaxed);
+        match result {
+            Ok(logits) => {
+                ctx.metrics.record_batch(vname, real, dims.batch, dynamic_batch);
+                for (i, req) in batch_reqs.into_iter().enumerate().take(dims.batch) {
+                    // stage decomposition: queue-wait ends at the head
+                    // recv, assembly at batch handoff, pack at execute
+                    // start; saturating math keeps requests that joined
+                    // mid-assembly non-negative
+                    let queue = first_recv.saturating_duration_since(req.submitted).as_secs_f64();
+                    let arrived = first_recv.max(req.submitted);
+                    let assembly = assembled.saturating_duration_since(arrived).as_secs_f64();
+                    let pack = t0.saturating_duration_since(assembled).as_secs_f64();
+                    ctx.metrics.record_for_worker(
+                        vname,
+                        (t0 - req.submitted).as_secs_f64().max(0.0) + exec_secs,
+                        real,
+                        ctx.wid,
+                    );
+                    let t_resp = Instant::now();
+                    let _ = req.events.send(StreamEvent::Done(Response {
+                        id: req.id,
+                        logits: logits[i * n_classes..(i + 1) * n_classes].to_vec(),
+                        variant: vname.to_string(),
+                        queue_secs: queue,
+                        assembly_secs: assembly,
+                        pack_secs: pack,
+                        execute_secs: exec_secs,
+                        batch_size: real,
+                        tokens: 0,
+                    }));
+                    let trace = RequestTrace {
+                        queue,
+                        assembly,
+                        pack,
+                        execute: exec_secs,
+                        respond: t_resp.elapsed().as_secs_f64(),
+                    };
+                    ctx.metrics.record_trace(vname, trace);
+                }
+            }
+            Err(e) => {
+                // failures are counted and reported, never silently
+                // dropped
+                ctx.metrics.record_error();
+                let msg = format!("execute {vname}: {e}");
+                eprintln!("[server] worker {}: {msg}", ctx.wid);
+                for req in batch_reqs {
+                    let _ = req.events.send(StreamEvent::Error(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// One in-flight decode session's coordinator-side bookkeeping (the
+/// model-side state — KV rows, recurrent rows, prompt cursor — lives in
+/// the engine's slot table behind [`PreparedModel::decode_begin`]).
+struct DecodeSession {
+    id: u64,
+    events: mpsc::Sender<StreamEvent>,
+    queue_secs: f64,
+    assembly_secs: f64,
+    pack_secs: f64,
+    /// Tokens to generate before retirement.
+    want_tokens: usize,
+    tokens: usize,
+    steps: usize,
+    /// Sum of the in-flight slot count over this session's steps (its
+    /// mean is the decode analogue of `Response::batch_size`).
+    slot_sum: usize,
+    exec_secs: f64,
+    last_logits: Vec<f32>,
+}
+
+struct PendingDecode {
+    req: Request,
+    /// When the decode lane first saw the request (closes its queue span).
+    seen: Instant,
+}
+
+/// The continuous-batching step scheduler (DESIGN.md §10).
+///
+/// One thread owns the decode-capable model and loops over step
+/// boundaries: drain the intake channel, admit pending sessions into
+/// free slots (lowest-free-first, keeping the high-water execution
+/// prefix tight), run ONE step for every resident slot, stream each
+/// slot its token, retire finished sessions.  Admission enforces the
+/// engine's single-variant in-flight set: a session demanding a
+/// different variant waits until the engine drains, while variant-
+/// agnostic sessions join whatever is resident.
+fn decode_loop(
+    rx: mpsc::Receiver<Request>,
+    mut model: Box<dyn PreparedModel>,
+    metrics: Arc<Metrics>,
+    policy: Policy,
+    wid: usize,
+) {
+    let Some(caps) = model.decode_caps() else {
+        // one-shot-only backend: answer every session with an error
+        // stream instead of leaving clients blocked
+        while let Ok(req) = rx.recv() {
+            metrics.record_error();
+            let _ = req.events.send(StreamEvent::Error(
+                "streaming decode unavailable: the loaded model is one-shot only".into(),
+            ));
+        }
+        return;
+    };
+    let mut router = Router::new(policy);
+    let mut pending: VecDeque<PendingDecode> = VecDeque::new();
+    let mut sessions: Vec<Option<DecodeSession>> = (0..caps.slots).map(|_| None).collect();
+    // the variant every resident slot decodes under (a step is one
+    // row-wise pass through one variant's packed weights)
+    let mut current: Option<Variant> = None;
+    let mut open = true;
+    loop {
+        // intake: block only when fully idle; otherwise a non-blocking
+        // drain so new sessions join at this step boundary
+        if open && pending.is_empty() && sessions.iter().all(Option::is_none) {
+            match rx.recv() {
+                Ok(r) => pending.push_back(PendingDecode { req: r, seen: Instant::now() }),
+                Err(_) => open = false,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(r) => pending.push_back(PendingDecode { req: r, seen: Instant::now() }),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        // admission at the step boundary
+        let mut i = 0;
+        while i < pending.len() {
+            let Some(slot) = model.decode_free_slot() else { break };
+            let engine_empty = sessions.iter().all(Option::is_none);
+            let want = pending[i].req.variant;
+            if !engine_empty && want.is_some() && want != current {
+                // single-variant in-flight set: joins once the engine
+                // drains to this request's variant
+                i += 1;
+                continue;
+            }
+            let p = pending.remove(i).expect("index in bounds");
+            let prompt_rows = p.req.activation.len() / caps.d_in.max(1);
+            if p.req.activation.is_empty()
+                || p.req.activation.len() % caps.d_in != 0
+                || prompt_rows + p.req.decode_steps > caps.max_steps
+            {
+                metrics.record_error();
+                let _ = p.req.events.send(StreamEvent::Error(format!(
+                    "decode prompt of {} floats + {} new tokens does not fit the slot \
+                     shape (d_in {}, max_steps {})",
+                    p.req.activation.len(),
+                    p.req.decode_steps,
+                    caps.d_in,
+                    caps.max_steps
+                )));
+                continue;
+            }
+            let admitted = Instant::now();
+            if let Err(e) = model.decode_begin(slot, &p.req.activation) {
+                metrics.record_error();
+                let _ = p.req.events.send(StreamEvent::Error(format!("decode admission: {e}")));
+                continue;
+            }
+            if engine_empty {
+                current = Some(want.unwrap_or_else(|| router.route_policy(pending.len())));
+            }
+            let arrived = p.seen.max(p.req.submitted);
+            sessions[slot] = Some(DecodeSession {
+                id: p.req.id,
+                events: p.req.events,
+                queue_secs: p.seen.saturating_duration_since(p.req.submitted).as_secs_f64(),
+                assembly_secs: admitted.saturating_duration_since(arrived).as_secs_f64(),
+                pack_secs: admitted.elapsed().as_secs_f64(),
+                want_tokens: p.req.decode_steps,
+                tokens: 0,
+                steps: 0,
+                slot_sum: 0,
+                exec_secs: 0.0,
+                last_logits: Vec::new(),
+            });
+        }
+        let n_active = sessions.iter().filter(|s| s.is_some()).count();
+        if n_active == 0 {
+            if !open && pending.is_empty() {
+                break;
+            }
+            continue;
+        }
+        let variant = current.expect("resident sessions imply an in-flight variant");
+        let vname = variant.name();
+        let t0 = Instant::now();
+        match model.decode_step(vname) {
+            Ok(outs) => {
+                let secs = t0.elapsed().as_secs_f64();
+                let emitted = outs.iter().filter(|o| o.prompt_done).count();
+                metrics.record_decode_step(secs, outs.len(), emitted);
+                let mut retired = Vec::new();
+                for out in outs {
+                    let sess = sessions[out.slot].as_mut().expect("step output of resident slot");
+                    sess.steps += 1;
+                    sess.slot_sum += n_active;
+                    sess.exec_secs += secs;
+                    let _ = sess.events.send(StreamEvent::Token(TokenEvent {
+                        id: sess.id,
+                        slot: out.slot,
+                        step: out.step,
+                        token: out.token,
+                        logits: out.logits.clone(),
+                    }));
+                    sess.last_logits = out.logits;
+                    if out.prompt_done {
+                        // the step consuming the last prompt row already
+                        // emits the first generated token (its logits are
+                        // the one-shot-parity logits)
+                        sess.tokens += 1;
+                        if sess.tokens >= sess.want_tokens {
+                            retired.push(out.slot);
+                        }
+                    }
+                }
+                for slot in retired {
+                    let sess = sessions[slot].take().expect("retiring a resident slot");
+                    let _ = model.decode_end(slot);
+                    let mean_slots =
+                        (sess.slot_sum as f64 / sess.steps.max(1) as f64).round().max(1.0) as usize;
+                    metrics.record_for_worker(
+                        vname,
+                        sess.queue_secs + sess.assembly_secs + sess.pack_secs + sess.exec_secs,
+                        mean_slots,
+                        wid,
+                    );
+                    metrics.record_trace(
+                        vname,
+                        RequestTrace {
+                            queue: sess.queue_secs,
+                            assembly: sess.assembly_secs,
+                            pack: sess.pack_secs,
+                            execute: sess.exec_secs,
+                            respond: 0.0,
+                        },
+                    );
+                    let _ = sess.events.send(StreamEvent::Done(Response {
+                        id: sess.id,
+                        logits: sess.last_logits,
+                        variant: vname.to_string(),
+                        queue_secs: sess.queue_secs,
+                        assembly_secs: sess.assembly_secs,
+                        pack_secs: sess.pack_secs,
+                        execute_secs: sess.exec_secs,
+                        batch_size: mean_slots,
+                        tokens: sess.tokens,
+                    }));
+                }
+                if sessions.iter().all(Option::is_none) {
+                    current = None;
+                }
+            }
+            Err(e) => {
+                // a failed step poisons every resident session (shared
+                // workspace state can no longer be trusted); fail them
+                // all explicitly and reset the in-flight set
+                metrics.record_error();
+                let msg = format!("decode step {vname}: {e}");
+                eprintln!("[server] decode lane: {msg}");
+                for (slot, s) in sessions.iter_mut().enumerate() {
+                    if let Some(sess) = s.take() {
+                        let _ = sess.events.send(StreamEvent::Error(msg.clone()));
+                        let _ = model.decode_end(slot);
+                    }
+                }
+                current = None;
+            }
+        }
+    }
 }
 
 /// Start the serving stack over any execution backend.
 ///
-/// Spawns `cfg.workers` threads; each calls `backend.load()` from inside
-/// its own thread (models need not be `Send` — the PJRT engine wraps `Rc`
+/// Spawns `cfg.workers` pool threads plus the decode lane (and the fast
+/// lane when configured); each calls `backend.load()` from inside its
+/// own thread (models need not be `Send` — the PJRT engine wraps `Rc`
 /// handles) and reports startup over a one-shot channel.  Any worker
 /// failing to load tears the pool down and surfaces the first error.
 pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Result<ServerHandle> {
     let (tx, rx) = mpsc::channel::<Request>();
     let rx = Arc::new(Mutex::new(rx));
+    let (decode_tx, decode_rx) = mpsc::channel::<Request>();
     let metrics = Arc::new(Metrics::default());
     let queue_depth = Arc::new(AtomicUsize::new(0));
     let workers = cfg.workers.max(1);
-    metrics.reserve_workers(workers);
-    let (init_tx, init_rx) = mpsc::channel::<Result<ModelDims>>();
+    metrics.reserve_workers(workers + usize::from(cfg.fast_lane));
+    let (init_tx, init_rx) = mpsc::channel::<Result<(ModelDims, Option<DecodeCaps>)>>();
 
     // tuned plan cache: loaded once at startup; Policy::Tuned resolves
     // against it before the pool spins up
@@ -236,13 +791,25 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
     let intra: Option<Arc<ThreadPool>> =
         (cfg.intra_threads > 1).then(|| Arc::new(ThreadPool::new(cfg.intra_threads)));
 
-    let mut joins = Vec::with_capacity(workers);
+    let mut joins = Vec::with_capacity(workers + 2);
+    let mut spawned = 0usize;
     let dynamic_batch = cfg.dynamic_batch;
-    for wid in 0..workers {
-        let rx = rx.clone();
+
+    // every one-shot lane: the pool workers on the shared channel, plus
+    // the M=1 fast lane on its own channel with eager singleton batches
+    let fast_pair = cfg.fast_lane.then(|| {
+        let (ftx, frx) = mpsc::channel::<Request>();
+        (ftx, Arc::new(Mutex::new(frx)))
+    });
+    let mut lanes: Vec<(usize, Arc<Mutex<mpsc::Receiver<Request>>>, BatcherConfig)> =
+        (0..workers).map(|wid| (wid, rx.clone(), cfg.batcher.clone())).collect();
+    if let Some((_, frx)) = &fast_pair {
+        lanes.push((workers, frx.clone(), BatcherConfig::low_latency(1)));
+    }
+
+    for (wid, lane_rx, lane_cfg) in lanes {
         let metrics2 = metrics.clone();
         let queue_depth2 = queue_depth.clone();
-        let batcher_cfg = cfg.batcher.clone();
         let backend = backend.clone();
         let policy = policy.clone();
         let init_tx = init_tx.clone();
@@ -259,122 +826,66 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
                         }
                     };
                     let dims = model.dims();
-                    let _ = init_tx.send(Ok(dims));
-                    // static-shape models (PJRT) would only re-pad a
-                    // partial pack internally — give them the single
-                    // full-B pack instead (same numerics, one allocation)
-                    let dynamic_batch = dynamic_batch && model.supports_dynamic_batch();
-                    let per_request_len = dims.per_request_len();
-                    let n_classes = dims.n_classes;
+                    let _ = init_tx.send(Ok((dims, model.decode_caps())));
                     // never collect more requests than the model batch
                     // holds — overflow requests would get no response
-                    let mut batcher_cfg = batcher_cfg;
-                    batcher_cfg.max_batch = batcher_cfg.max_batch.min(dims.batch).max(1);
-                    // per-worker router: RoundRobin/Adaptive state is local
-                    // to each worker (resolved policies are deterministic)
+                    let mut lane_cfg = lane_cfg;
+                    lane_cfg.max_batch = lane_cfg.max_batch.min(dims.batch).max(1);
+                    // per-worker router: RoundRobin/Adaptive state is
+                    // local to each worker (resolved policies are
+                    // deterministic)
                     let mut router = Router::new(policy);
-                    while let Some(CollectedBatch { requests: batch_reqs, first_recv, assembled }) =
-                        collect_batch_shared_traced(&rx, &batcher_cfg)
-                    {
-                        // the true coalesced size every response reports
-                        let real = batch_reqs.len().min(dims.batch);
-                        let depth = queue_depth2
-                            .load(Ordering::Relaxed)
-                            .saturating_sub(batch_reqs.len());
-                        let variant = router.route(&batch_reqs, depth);
-                        // dynamic effective batch: pack and execute only
-                        // the real coalesced rows — the padded path packs
-                        // (and computes) the full B as it always did
-                        let t0;
-                        let result = if dynamic_batch {
-                            let packed = pack_batch(&batch_reqs, real, per_request_len);
-                            t0 = Instant::now();
-                            model.run_batch(&variant, &packed, real)
-                        } else {
-                            let packed = pack_batch(&batch_reqs, dims.batch, per_request_len);
-                            t0 = Instant::now();
-                            model.run(&variant, &packed)
-                        };
-                        let exec_secs = t0.elapsed().as_secs_f64();
-                        queue_depth2.fetch_sub(batch_reqs.len(), Ordering::Relaxed);
-                        match result {
-                            Ok(logits) => {
-                                metrics2.record_batch(&variant, real, dims.batch, dynamic_batch);
-                                for (i, req) in
-                                    batch_reqs.into_iter().enumerate().take(dims.batch)
-                                {
-                                    let queue_secs =
-                                        (t0 - req.submitted).as_secs_f64().max(0.0);
-                                    metrics2.record_for_worker(
-                                        &variant,
-                                        queue_secs + exec_secs,
-                                        real,
-                                        wid,
-                                    );
-                                    let t_resp = Instant::now();
-                                    let _ = req.respond_to.send(Response {
-                                        id: req.id,
-                                        logits: logits[i * n_classes..(i + 1) * n_classes]
-                                            .to_vec(),
-                                        variant: variant.clone(),
-                                        queue_secs,
-                                        execute_secs: exec_secs,
-                                        batch_size: real,
-                                        error: None,
-                                    });
-                                    // stage decomposition: queue-wait ends
-                                    // at the head recv, assembly at batch
-                                    // handoff, pack at execute start;
-                                    // saturating math keeps requests that
-                                    // joined mid-assembly non-negative
-                                    let arrived = first_recv.max(req.submitted);
-                                    let trace = RequestTrace {
-                                        queue: first_recv
-                                            .saturating_duration_since(req.submitted)
-                                            .as_secs_f64(),
-                                        assembly: assembled
-                                            .saturating_duration_since(arrived)
-                                            .as_secs_f64(),
-                                        pack: t0.saturating_duration_since(assembled).as_secs_f64(),
-                                        execute: exec_secs,
-                                        respond: t_resp.elapsed().as_secs_f64(),
-                                    };
-                                    metrics2.record_trace(&variant, trace);
-                                }
-                            }
-                            Err(e) => {
-                                // failures are counted and reported, never
-                                // silently dropped
-                                metrics2.record_error();
-                                let msg = format!("execute {variant}: {e}");
-                                eprintln!("[server] worker {wid}: {msg}");
-                                for req in batch_reqs.into_iter().take(dims.batch) {
-                                    let queue_secs =
-                                        (t0 - req.submitted).as_secs_f64().max(0.0);
-                                    let _ = req.respond_to.send(Response {
-                                        id: req.id,
-                                        logits: Vec::new(),
-                                        variant: variant.clone(),
-                                        queue_secs,
-                                        execute_secs: exec_secs,
-                                        batch_size: real,
-                                        error: Some(msg.clone()),
-                                    });
-                                }
-                            }
-                        }
-                    }
+                    let ctx = WorkerCtx {
+                        metrics: metrics2,
+                        queue_depth: queue_depth2,
+                        dynamic_batch,
+                        wid,
+                    };
+                    worker_loop(&lane_rx, &lane_cfg, model.as_mut(), &mut router, &ctx);
                 })?,
         );
+        spawned += 1;
+    }
+
+    // the decode lane: always spawned so submit_decode always has a
+    // responder; degrades to an error-answering drain when the model
+    // advertises no decode capability
+    {
+        let metrics2 = metrics.clone();
+        let backend = backend.clone();
+        let policy = policy.clone();
+        let init_tx = init_tx.clone();
+        let intra = intra.clone();
+        let wid = workers + usize::from(cfg.fast_lane);
+        joins.push(
+            std::thread::Builder::new()
+                .name("tilewise-decode".into())
+                .spawn(move || {
+                    let model = match backend.load_with_intra(intra) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            let _ = init_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    let _ = init_tx.send(Ok((model.dims(), model.decode_caps())));
+                    decode_loop(decode_rx, model, metrics2, policy, wid);
+                })?,
+        );
+        spawned += 1;
     }
     drop(init_tx);
 
-    // wait for every worker's load result; fail fast on the first error
+    // wait for every lane's load result; fail fast on the first error
     let mut dims: Option<ModelDims> = None;
+    let mut decode_caps: Option<DecodeCaps> = None;
     let mut first_err: Option<crate::error::Error> = None;
-    for _ in 0..workers {
+    for _ in 0..spawned {
         match init_rx.recv() {
-            Ok(Ok(d)) => dims = Some(d),
+            Ok(Ok((d, caps))) => {
+                dims = Some(d);
+                decode_caps = decode_caps.or(caps);
+            }
             Ok(Err(e)) => first_err = first_err.or(Some(e)),
             Err(_) => {
                 first_err =
@@ -383,7 +894,10 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
         }
     }
     if let Some(e) = first_err {
-        drop(tx); // disconnect the channel so loaded workers exit
+        // disconnect every channel so loaded workers exit
+        drop(tx);
+        drop(fast_pair);
+        drop(decode_tx);
         for j in joins {
             let _ = j.join();
         }
@@ -393,6 +907,8 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
 
     Ok(ServerHandle {
         tx,
+        fast_tx: fast_pair.map(|(ftx, _)| ftx),
+        decode_tx,
         metrics,
         plan_cache,
         next_id: AtomicU64::new(0),
@@ -405,13 +921,14 @@ pub fn start_with_backend(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Resul
         d_model: dims.d_model,
         batch: dims.batch,
         n_classes: dims.n_classes,
+        decode_caps,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{NativeBackend, NativeModelSpec};
+    use crate::exec::{NativeBackend, NativeModelSpec, ZooBackend, ZooSpec};
 
     fn native_backend() -> Arc<NativeBackend> {
         Arc::new(NativeBackend::new(NativeModelSpec::default(), None).expect("pack native model"))
@@ -421,6 +938,20 @@ mod tests {
         start_with_backend(native_backend(), cfg).expect("native server start")
     }
 
+    fn tiny_zoo(model: &str) -> ZooSpec {
+        let mut spec = ZooSpec::for_model(model).unwrap();
+        spec.batch = 2;
+        spec.seq = 4;
+        spec.width = 16;
+        spec.n_layers = 1;
+        spec.n_classes = 4;
+        spec.g = 8;
+        spec.max_steps = 8;
+        spec
+    }
+
+    const VARIANTS: [Variant; 3] = [Variant::Dense, Variant::Tw, Variant::Tvw];
+
     // ---- native-backend serving tests: run unconditionally in CI (no
     // ---- artifacts, no `pjrt` feature needed)
 
@@ -429,16 +960,51 @@ mod tests {
         let handle = start_native(ServerConfig::default());
         let len = handle.seq * handle.d_model;
         let mut rng = crate::util::Rng::new(8);
-        for variant in ["model_dense", "model_tw", "model_tvw"] {
+        for variant in VARIANTS {
             let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-            let resp = handle.infer(x, Some(variant.into())).unwrap();
-            assert!(resp.is_ok(), "{variant}: {:?}", resp.error);
-            assert_eq!(resp.variant, variant);
+            let resp = handle.infer(x, Some(variant)).unwrap();
+            assert_eq!(resp.variant, variant.name());
             assert_eq!(resp.logits.len(), handle.n_classes);
             assert!(resp.logits.iter().all(|v| v.is_finite()));
+            // the bugfix: total_secs now covers every stage, so it can
+            // never undercut the execute span alone
+            assert!(resp.total_secs() >= resp.execute_secs);
         }
         assert_eq!(handle.metrics.completed(), 3);
         assert_eq!(handle.metrics.errors(), 0);
+    }
+
+    #[test]
+    fn config_builder_validates_and_presets_build() {
+        let tp = ServerConfig::throughput().build().unwrap();
+        assert_eq!(tp.workers, 2);
+        assert_eq!(tp.batcher.max_batch, 16);
+        let ll = ServerConfig::low_latency().build().unwrap();
+        assert!(ll.fast_lane);
+        assert!(ll.batcher.eager);
+        let custom = ServerConfig::builder()
+            .workers(3)
+            .max_queue(64)
+            .policy(Policy::Fixed(Variant::Tvw))
+            .max_batch(4)
+            .build()
+            .unwrap();
+        assert_eq!((custom.workers, custom.max_queue, custom.batcher.max_batch), (3, 64, 4));
+        assert!(matches!(custom.policy, Policy::Fixed(Variant::Tvw)));
+        // the misconfigurations that used to surface downstream
+        assert!(ServerConfig::builder().workers(0).build().is_err());
+        assert!(ServerConfig::builder().max_batch(0).build().is_err());
+        assert!(ServerConfig::builder().intra_threads(0).build().is_err());
+        assert!(ServerConfig::builder().variants(vec![]).build().is_err());
+        assert!(ServerConfig::builder().policy(Policy::RoundRobin(vec![])).build().is_err());
+        assert!(ServerConfig::builder()
+            .policy(Policy::Adaptive {
+                dense: Variant::Tw,
+                sparse: Variant::Tw,
+                queue_threshold: 4
+            })
+            .build()
+            .is_err());
     }
 
     #[test]
@@ -450,14 +1016,14 @@ mod tests {
         let mut shed = 0;
         for _ in 0..64 {
             match handle.try_submit(vec![0.1; len], None) {
-                Some(rx) => kept.push(rx),
+                Some(stream) => kept.push(stream),
                 None => shed += 1,
             }
         }
         assert!(shed > 0, "expected some sheds with max_queue=2");
         assert_eq!(handle.shed_count(), shed);
-        for rx in kept {
-            let _ = rx.recv();
+        for stream in kept {
+            assert!(stream.wait().is_ok());
         }
     }
 
@@ -473,8 +1039,8 @@ mod tests {
         };
         let handle = start_native(cfg);
         let len = handle.seq * handle.d_model;
-        let rxs: Vec<_> = (0..4).map(|_| handle.submit(vec![0.1; len], None)).collect();
-        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let streams: Vec<_> = (0..4).map(|_| handle.submit(vec![0.1; len], None)).collect();
+        let resps: Vec<_> = streams.into_iter().map(|s| s.wait().unwrap()).collect();
         // all four shared one invocation, and each response reports the
         // true coalesced size (not its position index)
         let max_batch_seen = resps.iter().map(|r| r.batch_size).max().unwrap();
@@ -488,10 +1054,9 @@ mod tests {
         let handle = start_native(cfg);
         assert_eq!(handle.workers, 4);
         let len = handle.seq * handle.d_model;
-        let rxs: Vec<_> = (0..32).map(|_| handle.submit(vec![0.2; len], None)).collect();
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
-            assert!(resp.is_ok());
+        let streams: Vec<_> = (0..32).map(|_| handle.submit(vec![0.2; len], None)).collect();
+        for stream in streams {
+            let resp = stream.wait().unwrap();
             assert_eq!(resp.logits.len(), handle.n_classes);
         }
         let snap = handle.metrics.full_snapshot();
@@ -511,21 +1076,43 @@ mod tests {
         let serial = start_native(ServerConfig::default());
         let len = pooled.seq * pooled.d_model;
         let x: Vec<f32> = (0..len).map(|i| ((i % 19) as f32 - 9.0) * 0.02).collect();
-        for variant in ["model_dense", "model_tw", "model_tvw"] {
-            let rp = pooled.infer(x.clone(), Some(variant.into())).unwrap();
-            let rs = serial.infer(x.clone(), Some(variant.into())).unwrap();
-            assert!(rp.is_ok(), "{variant}: {:?}", rp.error);
+        for variant in VARIANTS {
+            let rp = pooled.infer(x.clone(), Some(variant)).unwrap();
+            let rs = serial.infer(x.clone(), Some(variant)).unwrap();
             assert_eq!(rp.logits.len(), rs.logits.len());
             for (a, b) in rp.logits.iter().zip(&rs.logits) {
                 assert!((a - b).abs() < 1e-3, "{variant}: {a} vs {b}");
             }
         }
         // sustained load over the shared intra pool
-        let rxs: Vec<_> = (0..24).map(|_| pooled.submit(x.clone(), None)).collect();
-        for rx in rxs {
-            assert!(rx.recv().unwrap().is_ok());
+        let streams: Vec<_> = (0..24).map(|_| pooled.submit(x.clone(), None)).collect();
+        for stream in streams {
+            assert!(stream.wait().is_ok());
         }
         assert_eq!(pooled.metrics.errors(), 0);
+    }
+
+    #[test]
+    fn fast_lane_matches_batched_logits() {
+        // the M=1 fast path must be a latency optimisation only: same
+        // model, same kernels, same logits as the batched path
+        let handle = start_native(ServerConfig::low_latency().build().unwrap());
+        let len = handle.seq * handle.d_model;
+        let x: Vec<f32> = (0..len).map(|i| ((i % 11) as f32 - 5.0) * 0.06).collect();
+        for variant in VARIANTS {
+            let fast = handle.submit_fast(x.clone(), Some(variant)).wait().unwrap();
+            let batched = handle.submit(x.clone(), Some(variant)).wait().unwrap();
+            assert_eq!(fast.batch_size, 1, "{variant}: fast lane runs M=1");
+            assert_eq!(fast.logits.len(), batched.logits.len());
+            for (a, b) in fast.logits.iter().zip(&batched.logits) {
+                assert!((a - b).abs() < 1e-5, "{variant}: {a} vs {b}");
+            }
+        }
+        // without the lane, submit_fast degrades to the batched path
+        let plain = start_native(ServerConfig::default());
+        let resp = plain.submit_fast(x.clone(), Some(Variant::Tw)).wait().unwrap();
+        assert_eq!(resp.logits.len(), plain.n_classes);
+        assert_eq!(plain.metrics.errors(), 0);
     }
 
     #[test]
@@ -533,8 +1120,10 @@ mod tests {
         let handle = start_native(ServerConfig::default());
         let len = handle.seq * handle.d_model;
         for _ in 0..4 {
-            let resp = handle.infer(vec![0.1; len], Some("model_tw".into())).unwrap();
-            assert!(resp.is_ok());
+            let resp = handle.infer(vec![0.1; len], Some(Variant::Tw)).unwrap();
+            // the response's own stage fields agree with what the trace
+            // histograms were fed
+            assert!(resp.total_secs() >= resp.execute_secs);
         }
         let snap = handle.metrics.full_snapshot();
         let tw = snap.stages.iter().find(|s| s.variant == "model_tw").expect("traced variant");
@@ -556,7 +1145,7 @@ mod tests {
         let handle = start_native(cfg);
         let len = handle.seq * handle.d_model;
         for _ in 0..4 {
-            assert!(handle.infer(vec![0.2; len], Some("model_tw".into())).unwrap().is_ok());
+            assert!(handle.infer(vec![0.2; len], Some(Variant::Tw)).is_ok());
         }
         let lanes = handle.intra_lane_stats().expect("intra pool exists");
         assert_eq!(lanes.len(), 2);
@@ -568,57 +1157,108 @@ mod tests {
         // the whole zoo goes through the same coordinator seam: a tiny
         // graph-compiled BERT encoder served by a 2-worker pool with a
         // shared intra-op kernel pool
-        use crate::exec::{ZooBackend, ZooSpec};
-        let mut spec = ZooSpec::for_model("bert").unwrap();
-        spec.batch = 2;
-        spec.seq = 4;
-        spec.width = 16;
-        spec.n_layers = 1;
-        spec.n_classes = 4;
-        spec.g = 8;
-        let backend = Arc::new(ZooBackend::new(spec, None).unwrap());
+        let backend = Arc::new(ZooBackend::new(tiny_zoo("bert"), None).unwrap());
         let cfg = ServerConfig { workers: 2, intra_threads: 2, ..Default::default() };
         let handle = start_with_backend(backend, cfg).expect("zoo server start");
         assert_eq!(handle.n_classes, 4);
+        // a one-shot encoder advertises no decode slots ...
+        assert!(handle.decode_caps.is_none());
         let len = handle.seq * handle.d_model;
         let x: Vec<f32> = (0..len).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
-        for variant in ["model_dense", "model_tw", "model_tvw"] {
-            let resp = handle.infer(x.clone(), Some(variant.into())).unwrap();
-            assert!(resp.is_ok(), "{variant}: {:?}", resp.error);
+        for variant in VARIANTS {
+            let resp = handle.infer(x.clone(), Some(variant)).unwrap();
             assert_eq!(resp.logits.len(), handle.n_classes);
             assert!(resp.logits.iter().all(|v| v.is_finite()), "{variant}");
         }
+        // ... and submit_decode fails fast instead of hanging
+        let err = handle.submit_decode(x.clone(), None, 2).wait().unwrap_err().to_string();
+        assert!(err.contains("one-shot only"), "{err}");
+        assert_eq!(handle.metrics.errors(), 1);
+    }
+
+    #[test]
+    fn streaming_decode_sessions_join_stream_and_finish() {
+        // the tentpole end to end: two NMT sessions share the in-flight
+        // slot set, stream one token per step, and retire independently
+        let backend = Arc::new(ZooBackend::new(tiny_zoo("nmt"), None).unwrap());
+        let handle = start_with_backend(backend, ServerConfig::default()).unwrap();
+        let caps = handle.decode_caps.expect("nmt decodes");
+        assert_eq!((caps.slots, caps.d_in, caps.max_steps), (2, 16, 8));
+
+        let prompt: Vec<f32> = (0..2 * caps.d_in).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+        let s1 = handle.submit_decode(prompt.clone(), Some(Variant::Tw), 3);
+        let s2 = handle.submit_decode(prompt.clone(), Some(Variant::Tw), 2);
+
+        // a 2-row prompt + N new tokens runs 2 + N - 1 steps (the last
+        // prompt row's step already emits the first generated token)
+        for (stream, want_tokens, want_steps) in [(s1, 3, 4), (s2, 2, 3)] {
+            let events: Vec<StreamEvent> = stream.collect();
+            assert_eq!(events.len(), want_steps + 1, "steps + terminal Done");
+            for (step, ev) in events[..want_steps].iter().enumerate() {
+                let StreamEvent::Token(t) = ev else { panic!("expected Token, got {ev:?}") };
+                assert_eq!(t.step, step, "steps stream in order");
+                assert_eq!(t.logits.len(), handle.n_classes);
+            }
+            let StreamEvent::Done(resp) = &events[want_steps] else {
+                panic!("expected terminal Done, got {:?}", events[want_steps])
+            };
+            assert_eq!(resp.tokens, want_tokens);
+            assert_eq!(resp.variant, "model_tw");
+            assert_eq!(resp.logits.len(), handle.n_classes);
+            assert!(resp.execute_secs > 0.0);
+            assert!(resp.total_secs() >= resp.execute_secs);
+        }
+
+        let stats = handle.metrics.decode_stats();
+        assert_eq!(stats.tokens, 5, "3 + 2 generated tokens");
+        assert!(stats.steps >= 4, "at least the longer session's steps ran");
+        assert!(stats.mean_active_slots >= 1.0);
+
+        // the same handle still serves one-shot forwards
+        let x = vec![0.1; handle.seq * handle.d_model];
+        assert!(handle.infer(x, Some(Variant::Tw)).is_ok());
         assert_eq!(handle.metrics.errors(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_oversized_sessions_up_front() {
+        let backend = Arc::new(ZooBackend::new(tiny_zoo("nmt"), None).unwrap());
+        let handle = start_with_backend(backend, ServerConfig::default()).unwrap();
+        let caps = handle.decode_caps.unwrap();
+        // prompt rows + new tokens beyond max_steps could never retire
+        let long_prompt = vec![0.1; caps.d_in * caps.max_steps];
+        let err = handle.submit_decode(long_prompt, None, 1).wait().unwrap_err().to_string();
+        assert!(err.contains("does not fit"), "{err}");
+        // ragged prompt width
+        let ragged = vec![0.1; caps.d_in + 1];
+        assert!(handle.submit_decode(ragged, None, 1).wait().is_err());
+        // zero new tokens is a one-shot, not a decode
+        assert!(handle.submit_decode(vec![0.1; caps.d_in], None, 0).wait().is_err());
+        assert_eq!(handle.metrics.errors(), 3);
+        // valid sessions still run afterwards
+        let ok = handle.submit_decode(vec![0.1; caps.d_in], None, 2).wait().unwrap();
+        assert_eq!(ok.tokens, 2);
     }
 
     #[test]
     fn oversized_activation_rejected_at_submit_not_worker_panic() {
         // regression: an activation longer than seq*d_model used to blow
         // up pack_batch's copy_from_slice inside a worker thread; now the
-        // submit path rejects it with an explicit error Response
+        // submit path rejects it with a terminal Error event
         let handle = start_native(ServerConfig::default());
         let len = handle.seq * handle.d_model;
-        let resp = handle.infer(vec![0.1; len + 1], None).unwrap();
-        assert!(!resp.is_ok());
-        assert!(
-            resp.error.as_deref().unwrap().contains("per-request capacity"),
-            "{:?}",
-            resp.error
-        );
-        assert!(resp.logits.is_empty());
+        let err = handle.infer(vec![0.1; len + 1], None).unwrap_err().to_string();
+        assert!(err.contains("per-request capacity"), "{err}");
         assert_eq!(handle.metrics.errors(), 1);
         // try_submit validates through the same path
-        let resp2 = handle
-            .try_submit(vec![0.1; 2 * len], None)
-            .expect("length rejection is not a shed")
-            .recv()
-            .unwrap();
-        assert!(!resp2.is_ok());
+        let stream =
+            handle.try_submit(vec![0.1; 2 * len], None).expect("length rejection is not a shed");
+        assert!(stream.wait().is_err());
         assert_eq!(handle.metrics.errors(), 2);
         assert_eq!(handle.metrics.completed(), 0);
         // the worker pool survived: a valid request still round-trips
-        let ok = handle.infer(vec![0.1; len], Some("model_tw".into())).unwrap();
-        assert!(ok.is_ok());
+        let ok = handle.infer(vec![0.1; len], Some(Variant::Tw)).unwrap();
+        assert_eq!(ok.logits.len(), handle.n_classes);
         assert_eq!(handle.metrics.completed(), 1);
     }
 
@@ -630,10 +1270,9 @@ mod tests {
         let padded = start_native(ServerConfig { dynamic_batch: false, ..Default::default() });
         let len = dynamic.seq * dynamic.d_model;
         let x: Vec<f32> = (0..len).map(|i| ((i % 23) as f32 - 11.0) * 0.04).collect();
-        for variant in ["model_dense", "model_tw", "model_tvw"] {
-            let rd = dynamic.infer(x.clone(), Some(variant.into())).unwrap();
-            let rp = padded.infer(x.clone(), Some(variant.into())).unwrap();
-            assert!(rd.is_ok() && rp.is_ok(), "{variant}");
+        for variant in VARIANTS {
+            let rd = dynamic.infer(x.clone(), Some(variant)).unwrap();
+            let rp = padded.infer(x.clone(), Some(variant)).unwrap();
             assert_eq!(rd.logits.len(), rp.logits.len(), "{variant}");
             for (a, b) in rd.logits.iter().zip(&rp.logits) {
                 assert!((a - b).abs() < 1e-4, "{variant}: {a} vs {b}");
@@ -653,18 +1292,20 @@ mod tests {
     }
 
     #[test]
-    fn execute_failure_sends_error_response_and_counts() {
-        let handle = start_native(ServerConfig::default());
+    fn execute_failure_sends_error_stream_and_counts() {
+        // a zoo backend restricted to one variant: requesting another is
+        // a real execute failure surfaced through the stream
+        let backend =
+            Arc::new(ZooBackend::new(tiny_zoo("bert").with_variants(&["model_tw"]), None).unwrap());
+        let handle = start_with_backend(backend, ServerConfig::default()).unwrap();
         let len = handle.seq * handle.d_model;
-        let resp = handle.infer(vec![0.0; len], Some("model_bogus".into())).unwrap();
-        assert!(!resp.is_ok());
-        assert!(resp.error.as_deref().unwrap().contains("model_bogus"));
-        assert!(resp.logits.is_empty());
+        let err = handle.infer(vec![0.0; len], Some(Variant::Dense)).unwrap_err().to_string();
+        assert!(err.contains("model_dense"), "{err}");
         assert_eq!(handle.metrics.errors(), 1);
         assert_eq!(handle.metrics.completed(), 0);
         // the server keeps serving after a failed batch
-        let ok = handle.infer(vec![0.0; len], Some("model_tw".into())).unwrap();
-        assert!(ok.is_ok());
+        let ok = handle.infer(vec![0.0; len], Some(Variant::Tw)).unwrap();
+        assert_eq!(ok.logits.len(), handle.n_classes);
         assert_eq!(handle.metrics.full_snapshot().errors, 1);
     }
 
@@ -677,8 +1318,8 @@ mod tests {
         let handle = start_native(ServerConfig::default());
         let len = handle.seq * handle.d_model;
         let mut shapes = Vec::new();
-        for variant in ["model_dense", "model_tw", "model_tvw"] {
-            let resp = handle.infer(vec![0.3; len], Some(variant.into())).unwrap();
+        for variant in VARIANTS {
+            let resp = handle.infer(vec![0.3; len], Some(variant)).unwrap();
             assert!(resp.logits.iter().all(|v| v.is_finite()), "{variant}");
             shapes.push(resp.logits.len());
         }
@@ -704,10 +1345,10 @@ mod tests {
         let handle = start(&dir, ServerConfig::default()).unwrap();
         let len = handle.seq * handle.d_model;
         let mut rng = crate::util::Rng::new(8);
-        for variant in ["model_dense", "model_tw", "model_tvw"] {
+        for variant in VARIANTS {
             let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-            let resp = handle.infer(x, Some(variant.into())).unwrap();
-            assert_eq!(resp.variant, variant);
+            let resp = handle.infer(x, Some(variant)).unwrap();
+            assert_eq!(resp.variant, variant.name());
             assert_eq!(resp.logits.len(), handle.n_classes);
             assert!(resp.logits.iter().all(|v| v.is_finite()));
         }
@@ -724,14 +1365,14 @@ mod tests {
         let mut shed = 0;
         for _ in 0..32 {
             match handle.try_submit(vec![0.1; len], None) {
-                Some(rx) => kept.push(rx),
+                Some(stream) => kept.push(stream),
                 None => shed += 1,
             }
         }
         assert!(shed > 0, "expected some sheds with max_queue=2");
         assert_eq!(handle.shed_count(), shed);
-        for rx in kept {
-            let _ = rx.recv();
+        for stream in kept {
+            let _ = stream.wait();
         }
     }
 
@@ -748,8 +1389,8 @@ mod tests {
         };
         let handle = start(&dir, cfg).unwrap();
         let len = handle.seq * handle.d_model;
-        let rxs: Vec<_> = (0..4).map(|_| handle.submit(vec![0.1; len], None)).collect();
-        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let streams: Vec<_> = (0..4).map(|_| handle.submit(vec![0.1; len], None)).collect();
+        let resps: Vec<_> = streams.into_iter().map(|s| s.wait().unwrap()).collect();
         // all four should have shared one executable invocation, and each
         // response reports the true coalesced size
         let max_batch_seen = resps.iter().map(|r| r.batch_size).max().unwrap();

@@ -41,9 +41,9 @@ pub use zoo::{ZooBackend, ZooSpec};
 
 use std::sync::Arc;
 
-use crate::ensure;
 use crate::error::Result;
 use crate::pool::ThreadPool;
+use crate::{bail, ensure};
 
 /// Batch geometry of a prepared model — the serving analogue of the AOT
 /// `meta.json` header.  `batch` is the **maximum** executable batch: the
@@ -164,4 +164,76 @@ pub trait PreparedModel {
     fn supports_dynamic_batch(&self) -> bool {
         false
     }
+
+    /// Streaming decode capability.  `Some` advertises per-slot
+    /// recurrent/KV state the coordinator's step-scheduler can admit
+    /// sessions into; `None` (the default) means one-shot only and the
+    /// other `decode_*` methods fail.
+    fn decode_caps(&self) -> Option<DecodeCaps> {
+        None
+    }
+
+    /// Admit a session into `slot` with its prompt (`prompt.len()` a
+    /// positive multiple of `DecodeCaps::d_in`, at most `max_steps`
+    /// rows).  The slot's state rows are reset; stepping begins on the
+    /// next [`PreparedModel::decode_step`].
+    fn decode_begin(&mut self, slot: usize, prompt: &[f32]) -> Result<()> {
+        let _ = (slot, prompt);
+        bail!("this backend does not support streaming decode")
+    }
+
+    /// Advance every resident slot by one step under `variant`,
+    /// returning one [`StepOut`] per active slot.  All resident slots
+    /// must share the variant (the row-wise step runs one variant's
+    /// packed weights); an empty slot table returns an empty vec.
+    fn decode_step(&mut self, variant: &str) -> Result<Vec<StepOut>> {
+        let _ = variant;
+        bail!("this backend does not support streaming decode")
+    }
+
+    /// Retire `slot` (idempotent), zeroing its state rows and freeing it
+    /// for the next admission.
+    fn decode_end(&mut self, slot: usize) -> Result<()> {
+        let _ = slot;
+        bail!("this backend does not support streaming decode")
+    }
+
+    /// Resident (admitted, not yet retired) decode slots.
+    fn decode_active(&self) -> usize {
+        0
+    }
+
+    /// Lowest free decode slot, if the model supports decode and one is
+    /// available.
+    fn decode_free_slot(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Decode capability advertisement (see [`PreparedModel::decode_caps`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeCaps {
+    /// Concurrent sessions the per-slot state buffers are sized for
+    /// (the decode analogue of [`ModelDims::batch`]).
+    pub slots: usize,
+    /// Per-slot step capacity: prompt rows + generated tokens may not
+    /// exceed it (KV caches hold this many rows per slot).
+    pub max_steps: usize,
+    /// Floats per prompt row (one step consumes one `(d_in)` row).
+    pub d_in: usize,
+}
+
+/// One slot's result from a decode step.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    pub slot: usize,
+    /// 0-based step index within the slot's session.
+    pub step: usize,
+    /// argmax of `logits` (the greedy next token).
+    pub token: usize,
+    /// True once the slot has consumed its whole prompt — the logits of
+    /// the step where this first turns true are the one-shot-parity
+    /// logits.
+    pub prompt_done: bool,
+    pub logits: Vec<f32>,
 }

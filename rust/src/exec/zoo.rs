@@ -10,7 +10,10 @@ use std::sync::Arc;
 use super::{Backend, ModelDims, PreparedModel};
 use crate::autotune::PlanCache;
 use crate::error::Result;
-use crate::graph::{compile, CompileOptions, GraphModel, GraphPattern, GraphProgram, PackOptions};
+use crate::graph::{
+    compile, compile_decode_set, CompileOptions, DecodeSet, GraphModel, GraphPattern, GraphProgram,
+    PackOptions,
+};
 use crate::models::{self, ModelWorkload};
 use crate::pool::ThreadPool;
 use crate::{bail, ensure};
@@ -21,7 +24,7 @@ use crate::{bail, ensure};
 /// available through the `models::` constructors.
 #[derive(Clone, Debug)]
 pub struct ZooSpec {
-    /// "bert" | "vgg" | "nmt".
+    /// "bert" | "vgg" | "nmt" | "decoder".
     pub model: String,
     /// Requests per invocation (transformer/LSTM; conv models serve 1).
     pub batch: usize,
@@ -43,6 +46,9 @@ pub struct ZooSpec {
     pub sparsity: f64,
     pub g: usize,
     pub seed: u64,
+    /// Per-slot decode capacity in steps (prompt rows + generated tokens)
+    /// for streaming-capable models (nmt, decoder); sizes the KV caches.
+    pub max_steps: usize,
     /// Which variants to compile ("model_dense" / "model_tw" /
     /// "model_tvw" / "model_vw24" / "model_auto").
     pub variants: Vec<String>,
@@ -65,13 +71,15 @@ impl ZooSpec {
             sparsity: 0.75,
             g: 32,
             seed: 42,
+            max_steps: 32,
             variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
         };
         Ok(match model {
             "bert" => base,
             "vgg" | "vgg16" => ZooSpec { model: "vgg".into(), batch: 1, ..base },
             "nmt" => ZooSpec { batch: 8, seq: 8, width: 128, ..base },
-            other => bail!("unknown zoo model {other:?} (expected bert|vgg|nmt)"),
+            "decoder" => ZooSpec { model: "decoder".into(), n_classes: 16, ..base },
+            other => bail!("unknown zoo model {other:?} (expected bert|vgg|nmt|decoder)"),
         })
     }
 
@@ -96,8 +104,15 @@ impl ZooSpec {
             "bert" => models::bert_at(self.batch, self.seq, self.width, self.n_layers),
             "vgg" => models::vgg16_scaled(self.img, self.width_div, self.fc_dim),
             "nmt" => models::nmt_at(self.batch, self.width, self.seq),
-            other => bail!("unknown zoo model {other:?} (expected bert|vgg|nmt)"),
+            "decoder" => models::decoder_at(self.batch, self.seq, self.width, self.n_layers),
+            other => bail!("unknown zoo model {other:?} (expected bert|vgg|nmt|decoder)"),
         })
+    }
+
+    /// Whether this model has a streaming-decode topology (per-slot
+    /// recurrent or KV state a step program can carry across steps).
+    pub fn supports_decode(&self) -> bool {
+        matches!(self.model.as_str(), "nmt" | "decoder")
     }
 
     fn compile_options(&self, plan_cache: Option<Arc<PlanCache>>) -> CompileOptions {
@@ -107,6 +122,10 @@ impl ZooSpec {
             seq: self.seq,
             heads: self.heads,
             n_classes: self.n_classes,
+            // the decoder zoo model is the causal/streaming topology; its
+            // one-shot forward reads the last position so streamed decode
+            // has an exact parity twin
+            causal: self.model == "decoder",
             seed: self.seed,
             plan_cache,
             // Auto-pattern lookups must use the name the autotune CLI
@@ -121,6 +140,10 @@ impl ZooSpec {
 pub struct ZooBackend {
     dims: ModelDims,
     programs: Arc<Vec<GraphProgram>>,
+    /// Streaming-decode half (step programs + token embedding) for models
+    /// with a decode topology; `None` = one-shot only.  Compiled once and
+    /// `Arc`-shared; each loaded model instance owns its own engine state.
+    decode: Option<Arc<DecodeSet>>,
     /// Per-node/per-op profiling sink shared by every model instance this
     /// backend loads; `None` (the default) keeps the hot path unprofiled.
     telemetry: Option<Arc<crate::telemetry::Telemetry>>,
@@ -132,14 +155,21 @@ impl ZooBackend {
         let workload = spec.workload()?;
         let opts = spec.compile_options(plan_cache);
         let mut programs = Vec::with_capacity(spec.variants.len());
+        let mut patterns = Vec::with_capacity(spec.variants.len());
         for name in &spec.variants {
             let Some(pattern) = GraphPattern::from_variant(name) else {
                 bail!("unknown zoo variant {name:?}");
             };
             programs.push(compile(&workload, &opts.with_pattern(pattern))?);
+            patterns.push(pattern);
         }
+        let decode = if spec.supports_decode() {
+            Some(Arc::new(compile_decode_set(&workload, &opts, &patterns, spec.max_steps)?))
+        } else {
+            None
+        };
         let dims = programs[0].dims;
-        Ok(ZooBackend { dims, programs: Arc::new(programs), telemetry: None })
+        Ok(ZooBackend { dims, programs: Arc::new(programs), decode, telemetry: None })
     }
 
     pub fn dims(&self) -> ModelDims {
@@ -149,6 +179,12 @@ impl ZooBackend {
     /// The compiled programs (benches build `GraphModel`s directly).
     pub fn programs(&self) -> Arc<Vec<GraphProgram>> {
         self.programs.clone()
+    }
+
+    /// The compiled decode half, when the model has one (benches drive
+    /// `graph::DecodeEngine` directly for scheduler-free step timing).
+    pub fn decode_set(&self) -> Option<Arc<DecodeSet>> {
+        self.decode.clone()
     }
 
     /// Turn on per-node/per-op profiling for every model instance this
@@ -161,7 +197,12 @@ impl ZooBackend {
     }
 
     fn load_graph(&self, intra: Option<Arc<ThreadPool>>) -> Result<GraphModel> {
-        GraphModel::with_telemetry(self.programs.clone(), intra, self.telemetry.clone())
+        let mut model =
+            GraphModel::with_telemetry(self.programs.clone(), intra, self.telemetry.clone())?;
+        if let Some(set) = &self.decode {
+            model.attach_decode(set.clone())?;
+        }
+        Ok(model)
     }
 }
 
@@ -274,6 +315,36 @@ mod tests {
         assert!(prof.nodes.iter().any(|n| n.calls() > 0), "GEMM nodes attributed");
         // sibling variants are registered but untouched until they serve
         assert_eq!(tele.variant("model_dense").unwrap().forwards(), 0);
+    }
+
+    #[test]
+    fn decode_capable_models_advertise_caps_and_step() {
+        for model in ["nmt", "decoder"] {
+            let spec = tiny(model);
+            let backend = ZooBackend::new(spec, None).unwrap();
+            assert!(backend.decode_set().is_some(), "{model} compiles a decode set");
+            let mut m = backend.load().unwrap();
+            let caps = m.decode_caps().expect("decode caps advertised");
+            assert_eq!(caps.slots, m.dims().batch, "{model}");
+            let slot = m.decode_free_slot().expect("a free slot at load");
+            let prompt: Vec<f32> =
+                (0..2 * caps.d_in).map(|i| ((i % 5) as f32 - 2.0) * 0.2).collect();
+            m.decode_begin(slot, &prompt).unwrap();
+            assert_eq!(m.decode_active(), 1);
+            for step in 0..3 {
+                let outs = m.decode_step("model_tw").unwrap();
+                assert_eq!(outs.len(), 1, "{model}");
+                assert_eq!(outs[0].step, step);
+                assert!(outs[0].logits.iter().all(|v| v.is_finite()), "{model}");
+            }
+            m.decode_end(slot).unwrap();
+            assert_eq!(m.decode_active(), 0);
+        }
+        // one-shot-only models advertise nothing and refuse decode calls
+        let backend = ZooBackend::new(tiny("bert"), None).unwrap();
+        let mut m = backend.load().unwrap();
+        assert!(m.decode_caps().is_none());
+        assert!(m.decode_begin(0, &[0.0; 16]).is_err());
     }
 
     #[test]

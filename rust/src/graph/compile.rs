@@ -37,6 +37,7 @@ use crate::tensor::Matrix;
 use crate::util::Rng;
 use crate::{bail, ensure};
 
+use super::decode::DecodeSet;
 use super::ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
 use super::pack::{pack_weight, GemmNode, GraphPattern, PackOptions};
 
@@ -55,6 +56,12 @@ pub struct CompileOptions {
     /// Transformer classifier width (conv/LSTM take theirs from the
     /// workload's final layer).
     pub n_classes: usize,
+    /// Decoder-style transformer: causal attention masking and a
+    /// last-position (instead of mean-pooled) classifier head.  Makes the
+    /// one-shot forward the exact twin of step-by-step KV-cache decode —
+    /// `tests/decode_parity.rs` pins the two against each other.  Ignored
+    /// by conv/LSTM workloads (the LSTM recurrence is causal already).
+    pub causal: bool,
     /// Deterministic weight seed: every backend compiled from the same
     /// workload + seed serves identical logits.
     pub seed: u64,
@@ -74,6 +81,7 @@ impl Default for CompileOptions {
             seq: 16,
             heads: 4,
             n_classes: 8,
+            causal: false,
             seed: 42,
             plan_cache: None,
             model_key: None,
@@ -226,7 +234,17 @@ fn compile_transformer(workload: &ModelWorkload, opts: &CompileOptions) -> Resul
             qkv.prunable,
         )?;
         b.gemm_into(x, node, qkvb);
-        b.push(Op::Attention { qkv: qkvb, out: ctx, heads, seq, scores, qh, kh, vh });
+        b.push(Op::Attention {
+            qkv: qkvb,
+            out: ctx,
+            heads,
+            seq,
+            scores,
+            qh,
+            kh,
+            vh,
+            causal: opts.causal,
+        });
         let node = opts.pack_layer(
             model_key,
             &format!("l{layer}.attn_out"),
@@ -264,7 +282,13 @@ fn compile_transformer(workload: &ModelWorkload, opts: &CompileOptions) -> Resul
 
     let pooled = b.buffer(batch, d);
     b.scale_by_batch(pooled, 1);
-    b.push(Op::MeanPool { input: x, out: pooled, seq });
+    if opts.causal {
+        // decoder head: the last position already attends over the whole
+        // prompt, and it is the only row whose step-by-step twin exists
+        b.push(Op::LastPool { input: x, out: pooled, seq });
+    } else {
+        b.push(Op::MeanPool { input: x, out: pooled, seq });
+    }
     // the classifier head stays dense in every variant — the paper's
     // "keep the small accuracy-critical layers dense" rule
     let w_head = Matrix::randn(d, opts.n_classes, &mut rng);
@@ -539,4 +563,273 @@ fn compile_lstm(workload: &ModelWorkload, opts: &CompileOptions) -> Result<Graph
     let n_classes = tail.last().map(|l| l.shape.n).unwrap_or(hidden);
     let dims = ModelDims { batch, seq: steps, d_model: hidden, n_classes };
     Ok(b.finish(workload.name, opts.pattern.variant_name(), input, cur, dims))
+}
+
+// ------------------------------------------------------ decode steps --
+
+/// Seed-stream offset for the decode-only token embedding.  The embedding
+/// feeds *generated* tokens back as input rows; prompt parity never reads
+/// it, so it draws from its own stream instead of perturbing the one-shot
+/// weight-draw order the step programs must replay exactly.
+const EMBED_SEED_SALT: u64 = 0x00DE_C0DE;
+
+/// Compile one variant's streaming-decode half: a single-pattern
+/// [`DecodeSet`] (step program + token embedding).  Backends serving
+/// several variants use [`compile_decode_set`].
+pub fn compile_decode(
+    workload: &ModelWorkload,
+    opts: &CompileOptions,
+    max_steps: usize,
+) -> Result<DecodeSet> {
+    compile_decode_set(workload, opts, &[opts.pattern], max_steps)
+}
+
+/// Compile step programs for every listed pattern into one [`DecodeSet`].
+/// Each program replays the one-shot weight-draw order from
+/// `CompileOptions::seed`, so streamed logits at the last prompt step
+/// match a one-shot forward of the same prompt; all programs share one
+/// arena layout (patterns change packed weights, never buffer shapes), as
+/// [`super::decode::DecodeEngine`] requires.
+pub fn compile_decode_set(
+    workload: &ModelWorkload,
+    opts: &CompileOptions,
+    patterns: &[GraphPattern],
+    max_steps: usize,
+) -> Result<DecodeSet> {
+    ensure!(max_steps >= 1, "decode needs max_steps >= 1");
+    ensure!(!patterns.is_empty(), "decode set needs at least one pattern");
+    let has_conv = workload.layers.iter().any(|l| matches!(l.kind, LayerKind::Conv(_)));
+    let has_gates = workload.layers.iter().any(|l| l.name.ends_with("_gates"));
+    let has_qkv = workload.layers.iter().any(|l| l.name == "qkv");
+    ensure!(
+        !has_conv && (has_gates || has_qkv),
+        "workload {} has no streaming-decode topology (conv models are one-shot only)",
+        workload.name
+    );
+    let mut programs = Vec::with_capacity(patterns.len());
+    for &pattern in patterns {
+        let o = opts.with_pattern(pattern);
+        let p = if has_gates {
+            compile_lstm_decode(workload, &o, max_steps)?
+        } else {
+            compile_transformer_decode(workload, &o, max_steps)?
+        };
+        programs.push(p);
+    }
+    let dims = programs[0].dims;
+    let mut erng = Rng::new(opts.seed ^ EMBED_SEED_SALT);
+    let embed = Matrix::randn(dims.n_classes, dims.d_model, &mut erng);
+    Ok(DecodeSet { programs, embed, max_steps })
+}
+
+/// The per-step twin of [`compile_lstm`]: one `LstmStep` per stacked cell
+/// over a `(batch, hidden)` input row (step index 0 — the op reads the
+/// whole row when the input buffer is exactly `hidden` wide), then the FC
+/// tail over the top hidden state, producing logits *every* step.  No
+/// `Op::Zero` resets: `h`/`c` rows persist across steps and are zeroed
+/// per slot by the engine's admission/retirement lifecycle.
+fn compile_lstm_decode(
+    workload: &ModelWorkload,
+    opts: &CompileOptions,
+    max_steps: usize,
+) -> Result<GraphProgram> {
+    let _ = max_steps; // LSTM state is O(1) per slot; capacity is policy only
+    let gates: Vec<&GemmLayer> =
+        workload.layers.iter().filter(|l| l.name.ends_with("_gates")).collect();
+    let tail: Vec<&GemmLayer> =
+        workload.layers.iter().filter(|l| !l.name.ends_with("_gates")).collect();
+    ensure!(!gates.is_empty(), "LSTM workload {} lists no *_gates layers", workload.name);
+    ensure!(!tail.is_empty(), "LSTM workload {} needs an FC tail", workload.name);
+
+    let model_key = opts.model_key.as_deref().unwrap_or(workload.name);
+    let hidden = gates[0].shape.k / 2;
+    let batch = gates[0].shape.m;
+    ensure!(hidden > 0, "LSTM hidden width must be positive");
+    for g in &gates {
+        ensure!(
+            g.shape.k == 2 * hidden && g.shape.n == 4 * hidden,
+            "gate layer {} must be (2H, 4H)",
+            g.name
+        );
+        ensure!(g.shape.m == batch, "gate layers must agree on M");
+    }
+
+    let mut rng = Rng::new(opts.seed);
+    let mut b = GraphBuilder::new();
+    let input = b.buffer(batch, hidden);
+    let xh = b.buffer(batch, 2 * hidden);
+    let gbuf = b.buffer(batch, 4 * hidden);
+    for id in [input, xh, gbuf] {
+        b.scale_by_batch(id, 1);
+    }
+    let buckets = batch_buckets(batch);
+
+    struct Cell {
+        h: BufId,
+        w: usize,
+        bias: usize,
+        c: BufId,
+    }
+    let mut cells: Vec<Cell> = Vec::with_capacity(gates.len());
+    for g in &gates {
+        let h = b.buffer(batch, hidden);
+        let c = b.buffer(batch, hidden);
+        b.scale_by_batch(h, 1);
+        b.scale_by_batch(c, 1);
+        // identical draw order to compile_lstm: per cell, gate weight then
+        // gate bias — same seed, same weights, same pruning masks
+        let w = Matrix::randn(2 * hidden, 4 * hidden, &mut rng);
+        let node = opts.pack_layer(model_key, &g.name, &w, batch, &buckets, g.prunable)?;
+        let w = b.add_weight(node);
+        let bias = b.add_bias(small_bias(4 * hidden, &mut rng));
+        cells.push(Cell { h, w, bias, c });
+    }
+
+    for (idx, cell) in cells.iter().enumerate() {
+        let src = if idx == 0 { input } else { cells[idx - 1].h };
+        b.push(Op::LstmStep {
+            input: src,
+            step: 0,
+            w: cell.w,
+            bias: cell.bias,
+            h: cell.h,
+            c: cell.c,
+            xh,
+            gates: gbuf,
+            hidden,
+        });
+    }
+
+    let mut cur = cells.last().map(|c| c.h).unwrap();
+    for (i, l) in tail.iter().enumerate() {
+        ensure!(l.shape.m == batch, "tail layer {} must run at batch M", l.name);
+        let w = Matrix::randn(l.shape.k, l.shape.n, &mut rng);
+        let node = opts.pack_layer(model_key, &l.name, &w, batch, &buckets, l.prunable)?;
+        let out = b.gemm(cur, node);
+        if i + 1 < tail.len() {
+            b.push(Op::BiasAct { buf: out, bias: None, act: Some(Act::Tanh) });
+        }
+        cur = out;
+    }
+
+    let n_classes = tail.last().map(|l| l.shape.n).unwrap_or(hidden);
+    let dims = ModelDims { batch, seq: 1, d_model: hidden, n_classes };
+    Ok(b.finish(workload.name, opts.pattern.variant_name(), input, cur, dims))
+}
+
+/// The per-step twin of a *causal* [`compile_transformer`]: every encoder
+/// GEMM runs one row per slot, attention becomes [`Op::DecodeAttend`]
+/// against per-layer `(batch * max_steps, d)` KV caches, and the dense
+/// head projects the current position directly (the one-shot twin reads
+/// the same row through `Op::LastPool`).
+fn compile_transformer_decode(
+    workload: &ModelWorkload,
+    opts: &CompileOptions,
+    max_steps: usize,
+) -> Result<GraphProgram> {
+    let get = |name: &str| -> Result<&GemmLayer> {
+        workload
+            .layers
+            .iter()
+            .find(|l| l.name == name)
+            .with_context(|| {
+                format!("transformer workload {} missing layer {name:?}", workload.name)
+            })
+    };
+    let model_key = opts.model_key.as_deref().unwrap_or(workload.name);
+    let (qkv, attn_out, ffn1, ffn2) = (get("qkv")?, get("attn_out")?, get("ffn1")?, get("ffn2")?);
+    let d = qkv.shape.k;
+    let m = qkv.shape.m;
+    let d_ff = ffn1.shape.n;
+    let n_layers = qkv.count.max(1);
+    ensure!(qkv.shape.n == 3 * d, "qkv must project to 3*d_model");
+    ensure!(attn_out.shape.k == d && attn_out.shape.n == d, "attn_out must be (d, d)");
+    ensure!(ffn1.shape.k == d && ffn2.shape.k == d_ff && ffn2.shape.n == d, "ffn pair shapes");
+    let seq = opts.seq.max(1);
+    ensure!(m % seq == 0, "M={m} not divisible by seq={seq}");
+    let batch = m / seq;
+    let heads = opts.heads.max(1);
+    ensure!(d % heads == 0, "d_model {d} not divisible by heads {heads}");
+    ensure!(opts.n_classes > 0, "transformer head needs n_classes >= 1");
+
+    let mut rng = Rng::new(opts.seed);
+    let mut b = GraphBuilder::new();
+    let x = b.buffer(batch, d);
+    let qkvb = b.buffer(batch, 3 * d);
+    let ctx = b.buffer(batch, d);
+    let t = b.buffer(batch, d);
+    let h = b.buffer(batch, d_ff);
+    for id in [x, qkvb, ctx, t, h] {
+        b.scale_by_batch(id, 1);
+    }
+    // one head's score row over the longest possible cache prefix
+    let scores = b.buffer(1, max_steps);
+    let buckets = batch_buckets(batch);
+
+    for layer in 0..n_layers {
+        // identical draw order to compile_transformer: qkv, attn_out,
+        // ffn up/down, ffn bias — per layer, from the same seed
+        let w_qkv = Matrix::randn(d, 3 * d, &mut rng);
+        let w_out = Matrix::randn(d, d, &mut rng);
+        let w_up = Matrix::randn(d, d_ff, &mut rng);
+        let w_down = Matrix::randn(d_ff, d, &mut rng);
+        let ffn_bias = small_bias(d_ff, &mut rng);
+
+        // this layer's appendable KV cache: max_steps rows per slot
+        let kcache = b.buffer(batch * max_steps, d);
+        let vcache = b.buffer(batch * max_steps, d);
+        b.scale_by_batch(kcache, max_steps);
+        b.scale_by_batch(vcache, max_steps);
+
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.qkv"),
+            &w_qkv,
+            batch,
+            &buckets,
+            qkv.prunable,
+        )?;
+        b.gemm_into(x, node, qkvb);
+        b.push(Op::DecodeAttend { qkv: qkvb, kcache, vcache, out: ctx, heads, max_steps, scores });
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.attn_out"),
+            &w_out,
+            batch,
+            &buckets,
+            attn_out.prunable,
+        )?;
+        b.gemm_into(ctx, node, t);
+        b.push(Op::Residual { src: t, dst: x });
+        b.push(Op::LayerNorm { buf: x });
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.ffn1"),
+            &w_up,
+            batch,
+            &buckets,
+            ffn1.prunable,
+        )?;
+        b.gemm_into(x, node, h);
+        let bias = b.add_bias(ffn_bias);
+        b.push(Op::BiasAct { buf: h, bias: Some(bias), act: Some(Act::Relu) });
+        let node = opts.pack_layer(
+            model_key,
+            &format!("l{layer}.ffn2"),
+            &w_down,
+            batch,
+            &buckets,
+            ffn2.prunable,
+        )?;
+        b.gemm_into(h, node, t);
+        b.push(Op::Residual { src: t, dst: x });
+        b.push(Op::LayerNorm { buf: x });
+    }
+
+    let w_head = Matrix::randn(d, opts.n_classes, &mut rng);
+    let head = opts.pack_layer(model_key, "head", &w_head, batch, &buckets, false)?;
+    let logits = b.gemm(x, head);
+
+    let dims = ModelDims { batch, seq: 1, d_model: d, n_classes: opts.n_classes };
+    Ok(b.finish(workload.name, opts.pattern.variant_name(), x, logits, dims))
 }

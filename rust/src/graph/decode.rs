@@ -1,0 +1,369 @@
+//! Streaming autoregressive decode over the graph IR.
+//!
+//! A decode-capable model carries, next to its one-shot programs, a
+//! [`DecodeSet`]: one *step program* per variant (the per-step twin of
+//! the one-shot op list — same packed weights, no state reset) plus a
+//! token-embedding table for generated-token feedback.  The
+//! [`DecodeEngine`] owns the mutable side: a dedicated [`Workspace`]
+//! whose batch-scaled buffers hold **per-slot state** (LSTM `h`/`c`
+//! rows, appendable KV-cache row ranges) that persists across steps,
+//! and per-slot session bookkeeping (prompt, position, last token).
+//!
+//! The step model is *unified prefill/decode*: every slot consumes one
+//! input row per global step — its next prompt row while the prompt
+//! lasts, then the embedding of its previous argmax token.  A joining
+//! request therefore interleaves its prompt consumption with other
+//! slots' generation; no separate prefill pass exists, which is what
+//! makes step-boundary admission safe (a prefill pass over the shared
+//! state buffers would clobber resident slots).
+//!
+//! Execution uses the *high-water prefix*: slots are allocated
+//! lowest-free-first and a step runs at effective batch
+//! `highest_active_slot + 1` through the same variable-M machinery as
+//! one-shot serving (`Workspace::set_effective_batch`).  Rows of
+//! retired slots inside the prefix are zeroed ([`Workspace::reset_slot`])
+//! so they compute bounded garbage until reused.
+//!
+//! Parity contract (pinned by `tests/decode_parity.rs`): after a slot
+//! consumes its full prompt, its streamed logits at the last prompt
+//! step equal a one-shot forward of the same prompt at 1e-4 — the step
+//! program replays the one-shot weight-draw order from the same seed,
+//! and every op is row-wise, so resident slots are unaffected by
+//! admission/retirement of their neighbours.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::exec::{DecodeCaps, StepOut};
+use crate::pool::ThreadPool;
+use crate::tensor::Matrix;
+use crate::{bail, ensure};
+
+use super::exec::{execute, Workspace};
+use super::ir::GraphProgram;
+
+/// The immutable decode half of a compiled model: per-variant step
+/// programs (sharing one arena layout) plus the token-embedding table.
+/// `Arc`-shared across workers like the one-shot programs.
+pub struct DecodeSet {
+    /// One step program per variant; op lists advance every resident
+    /// slot by one step (no `Op::Zero` state resets).
+    pub programs: Vec<GraphProgram>,
+    /// `(n_classes, d_in)` embedding used to feed generated tokens back
+    /// as the next step's input row.  Decode-only: prompt-parity never
+    /// reads it, so it is drawn from its own seed stream.
+    pub embed: Matrix,
+    /// Per-slot state capacity in steps (KV-cache rows per slot); a
+    /// slot's `prompt_steps + generated` may not exceed it.
+    pub max_steps: usize,
+}
+
+/// One workspace slot's session bookkeeping.
+#[derive(Clone, Default)]
+struct Slot {
+    active: bool,
+    /// Flattened `(prompt_steps, d_in)` prompt rows, consumed one per step.
+    prompt: Vec<f32>,
+    prompt_steps: usize,
+    /// Steps already executed for this slot (== its cache length).
+    pos: usize,
+    /// argmax of the previous step's logits (feedback input after the
+    /// prompt is consumed).
+    last_token: usize,
+}
+
+/// Mutable decode state for one worker's model: slot table + the decode
+/// workspace whose batch-scaled rows are the per-slot recurrent/KV state.
+pub struct DecodeEngine {
+    set: Arc<DecodeSet>,
+    ws: Workspace,
+    slots: Vec<Slot>,
+}
+
+impl DecodeEngine {
+    pub fn new(set: Arc<DecodeSet>) -> Result<DecodeEngine> {
+        ensure!(!set.programs.is_empty(), "decode set needs at least one step program");
+        let first = &set.programs[0];
+        for p in set.programs.iter().skip(1) {
+            ensure!(
+                p.buf_shapes == first.buf_shapes
+                    && p.dims == first.dims
+                    && p.buf_rows_per_request == first.buf_rows_per_request,
+                "decode variants must share one arena layout ({} vs {})",
+                p.variant,
+                first.variant
+            );
+        }
+        ensure!(
+            set.embed.cols == first.dims.d_model,
+            "embedding width {} != decode input width {}",
+            set.embed.cols,
+            first.dims.d_model
+        );
+        ensure!(set.max_steps >= 1, "decode set needs max_steps >= 1");
+        let slots = vec![Slot::default(); first.dims.batch];
+        let ws = Workspace::for_program(first);
+        Ok(DecodeEngine { set: Arc::clone(&set), ws, slots })
+    }
+
+    pub fn caps(&self) -> DecodeCaps {
+        let dims = self.set.programs[0].dims;
+        DecodeCaps { slots: dims.batch, max_steps: self.set.max_steps, d_in: dims.d_model }
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.active).count()
+    }
+
+    /// Lowest free slot, if any — the allocation order that keeps the
+    /// high-water execution prefix tight.
+    pub fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| !s.active)
+    }
+
+    /// Admit a session into `slot`: validates the prompt, zeroes the
+    /// slot's state rows, and arms its prompt cursor.  Steps begin on
+    /// the next [`DecodeEngine::step`] call — admission happens only at
+    /// step boundaries by construction.
+    pub fn begin(&mut self, slot: usize, prompt: &[f32]) -> Result<()> {
+        let caps = self.caps();
+        ensure!(slot < caps.slots, "slot {slot} out of range 0..{}", caps.slots);
+        ensure!(!self.slots[slot].active, "slot {slot} already occupied");
+        ensure!(
+            !prompt.is_empty() && prompt.len() % caps.d_in == 0,
+            "prompt length {} not a positive multiple of d_in {}",
+            prompt.len(),
+            caps.d_in
+        );
+        let prompt_steps = prompt.len() / caps.d_in;
+        ensure!(
+            prompt_steps <= caps.max_steps,
+            "prompt of {prompt_steps} steps exceeds slot capacity {}",
+            caps.max_steps
+        );
+        self.ws.reset_slot(&self.set.programs[0], slot);
+        self.slots[slot] = Slot {
+            active: true,
+            prompt: prompt.to_vec(),
+            prompt_steps,
+            pos: 0,
+            last_token: 0,
+        };
+        Ok(())
+    }
+
+    /// Retire `slot` (idempotent): its state rows are zeroed so the dead
+    /// row computes bounded values while it stays inside the high-water
+    /// prefix, and the slot becomes claimable by the next admission.
+    pub fn end(&mut self, slot: usize) -> Result<()> {
+        let caps = self.caps();
+        ensure!(slot < caps.slots, "slot {slot} out of range 0..{}", caps.slots);
+        self.slots[slot] = Slot::default();
+        self.ws.reset_slot(&self.set.programs[0], slot);
+        Ok(())
+    }
+
+    /// Advance every resident slot by one step under `variant`.
+    ///
+    /// All concurrently-resident slots must decode under the *same*
+    /// variant: a step is one row-wise pass through that variant's
+    /// packed weights, so mixing variants within a step is unexecutable
+    /// — the coordinator's scheduler enforces a single-variant in-flight
+    /// set at admission.
+    pub fn step(&mut self, variant: &str, intra: Option<&ThreadPool>) -> Result<Vec<StepOut>> {
+        let set = Arc::clone(&self.set);
+        let Some(p) = set.programs.iter().find(|p| p.variant == variant) else {
+            bail!("variant {variant:?} has no compiled decode program");
+        };
+        let Some(high_water) = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.active)
+            .map(|(i, _)| i + 1)
+            .next_back()
+        else {
+            return Ok(Vec::new());
+        };
+        let d_in = p.dims.d_model;
+        for (i, s) in self.slots.iter().enumerate().take(high_water) {
+            ensure!(
+                !s.active || s.pos < set.max_steps,
+                "slot {i} exceeded its {}-step capacity without retirement",
+                set.max_steps
+            );
+        }
+        self.ws.set_effective_batch(p, high_water);
+        // per-slot cache positions for DecodeAttend; dead prefix rows sit
+        // at 0 and overwrite their own scratch cache row harmlessly
+        for b in 0..self.slots.len() {
+            self.ws.slot_pos[b] = if self.slots[b].active { self.slots[b].pos } else { 0 };
+        }
+        {
+            let input = self.ws.buf_mut(p.input);
+            debug_assert_eq!(input.cols, d_in);
+            for b in 0..high_water {
+                let row = input.row_mut(b);
+                let s = &self.slots[b];
+                if !s.active {
+                    row.fill(0.0);
+                } else if s.pos < s.prompt_steps {
+                    row.copy_from_slice(&s.prompt[s.pos * d_in..(s.pos + 1) * d_in]);
+                } else {
+                    let tok = s.last_token.min(set.embed.rows - 1);
+                    row.copy_from_slice(set.embed.row(tok));
+                }
+            }
+        }
+        execute(p, &mut self.ws, intra);
+        let out = self.ws.buf(p.output);
+        let mut results = Vec::with_capacity(self.active_slots());
+        for b in 0..high_water {
+            if !self.slots[b].active {
+                continue;
+            }
+            let logits = out.row(b).to_vec();
+            let token = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let s = &mut self.slots[b];
+            let step = s.pos;
+            s.pos += 1;
+            s.last_token = token;
+            results.push(StepOut {
+                slot: b,
+                step,
+                token,
+                prompt_done: s.pos >= s.prompt_steps,
+                logits,
+            });
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{compile, compile_decode, CompileOptions, GraphPattern, PackOptions};
+    use crate::models;
+
+    fn nmt_opts() -> CompileOptions {
+        CompileOptions { pack: PackOptions { sparsity: 0.75, g: 8 }, ..CompileOptions::default() }
+    }
+
+    fn nmt_engine(pattern: GraphPattern) -> DecodeEngine {
+        let wl = models::nmt_at(2, 16, 4);
+        let set = compile_decode(&wl, &nmt_opts().with_pattern(pattern), 8).unwrap();
+        DecodeEngine::new(Arc::new(set)).unwrap()
+    }
+
+    #[test]
+    fn lifecycle_admits_steps_and_retires() {
+        let mut eng = nmt_engine(GraphPattern::Dense);
+        let caps = eng.caps();
+        assert_eq!(caps.slots, 2);
+        assert_eq!(caps.d_in, 16);
+        assert_eq!(eng.free_slot(), Some(0));
+
+        let prompt: Vec<f32> = (0..4 * 16).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+        eng.begin(0, &prompt).unwrap();
+        assert_eq!(eng.free_slot(), Some(1));
+        assert!(eng.begin(0, &prompt).is_err(), "double admission must fail");
+
+        // 4 prompt steps then 2 generated
+        for step in 0..6 {
+            let outs = eng.step("model_dense", None).unwrap();
+            assert_eq!(outs.len(), 1);
+            let o = &outs[0];
+            assert_eq!((o.slot, o.step), (0, step));
+            assert_eq!(o.prompt_done, step >= 3);
+            assert!(o.logits.iter().all(|v| v.is_finite()));
+        }
+        eng.end(0).unwrap();
+        eng.end(0).unwrap(); // idempotent
+        assert_eq!(eng.active_slots(), 0);
+        assert!(eng.step("model_dense", None).unwrap().is_empty(), "no slots -> no work");
+    }
+
+    #[test]
+    fn prompt_validation_rejects_bad_shapes() {
+        let mut eng = nmt_engine(GraphPattern::Tw);
+        assert!(eng.begin(0, &[]).is_err());
+        assert!(eng.begin(0, &[0.0; 17]).is_err(), "not a multiple of d_in");
+        assert!(eng.begin(0, &[0.0; 16 * 9]).is_err(), "prompt longer than max_steps");
+        assert!(eng.begin(5, &[0.0; 16]).is_err(), "slot out of range");
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_slot_isolated() {
+        // slot 1 decoding alone must generate the same tokens as slot 1
+        // decoding next to a neighbour that joins and leaves
+        let prompt_a: Vec<f32> = (0..2 * 16).map(|i| ((i % 7) as f32 - 3.0) * 0.25).collect();
+        let prompt_b: Vec<f32> = (0..3 * 16).map(|i| ((i % 4) as f32 - 1.5) * 0.4).collect();
+
+        let mut solo = nmt_engine(GraphPattern::Tvw);
+        solo.begin(0, &prompt_b).unwrap();
+        let mut solo_tokens = Vec::new();
+        for _ in 0..6 {
+            let outs = solo.step("model_tvw", None).unwrap();
+            solo_tokens.push(outs[0].token);
+        }
+
+        let mut busy = nmt_engine(GraphPattern::Tvw);
+        busy.begin(0, &prompt_a).unwrap();
+        busy.step("model_tvw", None).unwrap();
+        let slot = busy.free_slot().unwrap();
+        assert_eq!(slot, 1);
+        busy.begin(slot, &prompt_b).unwrap();
+        let mut busy_tokens = Vec::new();
+        for step in 0..6 {
+            if step == 3 {
+                busy.end(0).unwrap(); // neighbour leaves mid-decode
+            }
+            let outs = busy.step("model_tvw", None).unwrap();
+            let o = outs.iter().find(|o| o.slot == 1).unwrap();
+            busy_tokens.push(o.token);
+        }
+        assert_eq!(solo_tokens, busy_tokens, "neighbour churn must not perturb a slot");
+    }
+
+    #[test]
+    fn streamed_prompt_matches_one_shot_logits() {
+        // the core parity claim at engine level (the full four-pattern
+        // sweep lives in tests/decode_parity.rs)
+        let wl = models::nmt_at(2, 16, 4);
+        let opts = nmt_opts();
+        let p = compile(&wl, &opts).unwrap();
+        let set = compile_decode(&wl, &opts, 8).unwrap();
+        let x: Vec<f32> = (0..2 * 4 * 16).map(|i| ((i % 9) as f32 - 4.0) * 0.2).collect();
+
+        let mut one_shot =
+            crate::graph::GraphModel::new(Arc::new(vec![p]), None).unwrap();
+        use crate::exec::PreparedModel;
+        let want = one_shot.run("model_dense", &x).unwrap();
+        let n_classes = want.len() / 2;
+
+        let mut eng = DecodeEngine::new(Arc::new(set)).unwrap();
+        let per = 4 * 16;
+        eng.begin(0, &x[..per]).unwrap();
+        eng.begin(1, &x[per..]).unwrap();
+        let mut last = vec![Vec::new(), Vec::new()];
+        for _ in 0..4 {
+            for o in eng.step("model_dense", None).unwrap() {
+                last[o.slot] = o.logits.clone();
+            }
+        }
+        for slot in 0..2 {
+            let got = &last[slot];
+            assert_eq!(got.len(), n_classes);
+            let want_row = &want[slot * n_classes..(slot + 1) * n_classes];
+            for (a, b) in got.iter().zip(want_row) {
+                assert!((a - b).abs() < 1e-4, "slot {slot}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::Result;
-use crate::exec::{ModelDims, PreparedModel};
+use crate::exec::{DecodeCaps, ModelDims, PreparedModel, StepOut};
 use crate::gemm::{
     effective_parallel_threads, matmul_parallel_into, matmul_tiled_into_panel, micro,
     tvw_effective_parallel_threads, tvw_matmul_into_scratch, tvw_matmul_parallel_into,
@@ -17,11 +17,11 @@ use crate::gemm::{
     vw24_effective_parallel_threads, vw24_matmul_into_with, vw24_matmul_parallel_into, GemmScratch,
     TileConfig,
 };
-use crate::nn::{attention_into, im2col_into, lstm_gate_update, AttnScratch, ImgSrc};
+use crate::nn::{attention_window_into, im2col_into, lstm_gate_update, AttnScratch, ImgSrc};
 use crate::pool::ThreadPool;
 use crate::telemetry::{OpKind, Telemetry, VariantProfile};
 use crate::tensor::Matrix;
-use crate::{anyhow, ensure};
+use crate::{anyhow, bail, ensure};
 
 use super::ir::{Act, BufId, GraphProgram, Op};
 use super::pack::{GemmNode, NodePanels, PackedWeight};
@@ -32,6 +32,11 @@ use super::pack::{GemmNode, NodePanels, PackedWeight};
 pub struct Workspace {
     bufs: Vec<Matrix>,
     scratch: GemmScratch,
+    /// Per-slot cache length for decode programs: `slot_pos[b]` is the
+    /// number of steps slot `b` has already cached, read by
+    /// `Op::DecodeAttend` (which appends at that index) and advanced by
+    /// the decode driver once per step.  Unused by one-shot programs.
+    pub slot_pos: Vec<usize>,
 }
 
 impl Workspace {
@@ -39,6 +44,7 @@ impl Workspace {
         Workspace {
             bufs: p.buf_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
             scratch: GemmScratch::with_capacity(p.scratch_a, p.scratch_c),
+            slot_pos: vec![0; p.dims.batch],
         }
     }
 
@@ -69,6 +75,28 @@ impl Workspace {
                 buf.rows = rows;
                 buf.data.resize(rows * buf.cols, 0.0);
             }
+        }
+    }
+
+    /// Zero every batch-scaled buffer's rows belonging to `slot` and
+    /// reset its cache position — the slot-lifecycle reset run when a
+    /// decode request is admitted into (or retired from) a workspace
+    /// slot.  Rows beyond the current effective batch are already dead
+    /// (truncated by [`Workspace::set_effective_batch`], which re-grows
+    /// them zero-filled), so only the resident prefix needs clearing.
+    pub fn reset_slot(&mut self, p: &GraphProgram, slot: usize) {
+        debug_assert!(slot < p.dims.batch);
+        for (buf, rpr) in self.bufs.iter_mut().zip(&p.buf_rows_per_request) {
+            let Some(rpr) = rpr else { continue };
+            let (lo, hi) = (slot * rpr, (slot + 1) * rpr);
+            let hi = hi.min(buf.rows);
+            if lo >= hi {
+                continue;
+            }
+            buf.data[lo * buf.cols..hi * buf.cols].fill(0.0);
+        }
+        if slot < self.slot_pos.len() {
+            self.slot_pos[slot] = 0;
         }
     }
 }
@@ -228,7 +256,7 @@ pub fn execute_with(
     prof: Option<&VariantProfile>,
 ) {
     assert_eq!(ws.bufs.len(), p.buf_shapes.len(), "workspace built for a different program");
-    let Workspace { bufs, scratch } = ws;
+    let Workspace { bufs, scratch, slot_pos } = ws;
     let t_fwd = prof.map(|_| Instant::now());
     for op in &p.ops {
         let t_op = prof.map(|_| Instant::now());
@@ -270,7 +298,7 @@ pub fn execute_with(
                     None => {}
                 }
             }
-            Op::Attention { qkv, out, heads, seq, scores, qh, kh, vh } => {
+            Op::Attention { qkv, out, heads, seq, scores, qh, kh, vh, causal } => {
                 let mut ctx = take(bufs, *out);
                 let mut sc = AttnScratch {
                     scores: take(bufs, *scores),
@@ -282,7 +310,9 @@ pub fn execute_with(
                     let qkvb = &bufs[qkv.0];
                     let batch = qkvb.rows / seq;
                     for b in 0..batch {
-                        attention_into(qkvb, &mut ctx, b * seq, *seq, *heads, &mut sc);
+                        attention_window_into(
+                            qkvb, &mut ctx, b * seq, *seq, *heads, &mut sc, *causal,
+                        );
                     }
                 }
                 put(bufs, *out, ctx);
@@ -290,6 +320,59 @@ pub fn execute_with(
                 put(bufs, *qh, sc.qh);
                 put(bufs, *kh, sc.kh);
                 put(bufs, *vh, sc.vh);
+            }
+            Op::DecodeAttend { qkv, kcache, vcache, out, heads, max_steps, scores } => {
+                let mut kc = take(bufs, *kcache);
+                let mut vc = take(bufs, *vcache);
+                let mut ctx = take(bufs, *out);
+                let mut sc = take(bufs, *scores);
+                {
+                    let qkvb = &bufs[qkv.0];
+                    let d = ctx.cols;
+                    debug_assert_eq!(qkvb.cols, 3 * d);
+                    debug_assert_eq!(d % heads, 0);
+                    let dh = d / heads;
+                    let scale = 1.0 / (dh as f32).sqrt();
+                    for b in 0..qkvb.rows {
+                        // append this step's K/V at the slot's position,
+                        // clamped so dead prefix rows (retired slots kept
+                        // resident by the high-water prefix) stay in-bounds
+                        let pos = slot_pos.get(b).copied().unwrap_or(0).min(max_steps - 1);
+                        let base = b * max_steps;
+                        let row = qkvb.row(b);
+                        kc.row_mut(base + pos).copy_from_slice(&row[d..2 * d]);
+                        vc.row_mut(base + pos).copy_from_slice(&row[2 * d..3 * d]);
+                        let q = &row[..d];
+                        for h in 0..*heads {
+                            let hcol = h * dh..(h + 1) * dh;
+                            let qh = &q[hcol.clone()];
+                            let srow = &mut sc.row_mut(0)[..pos + 1];
+                            for (j, sv) in srow.iter_mut().enumerate() {
+                                let kj = &kc.row(base + j)[hcol.clone()];
+                                *sv = qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+                            }
+                            let mx = srow.iter().fold(f32::MIN, |a, &b| a.max(b));
+                            let mut z = 0.0;
+                            for v in srow.iter_mut() {
+                                *v = (*v - mx).exp();
+                                z += *v;
+                            }
+                            let out_row = &mut ctx.row_mut(b)[hcol.clone()];
+                            out_row.fill(0.0);
+                            for (j, wj) in srow.iter().enumerate() {
+                                let w = wj / z;
+                                let vj = &vc.row(base + j)[hcol.clone()];
+                                for (o, vv) in out_row.iter_mut().zip(vj) {
+                                    *o += w * vv;
+                                }
+                            }
+                        }
+                    }
+                }
+                put(bufs, *kcache, kc);
+                put(bufs, *vcache, vc);
+                put(bufs, *out, ctx);
+                put(bufs, *scores, sc);
             }
             Op::Im2col { input, out, spec, in_hw, from_chw } => {
                 let mut a = take(bufs, *out);
@@ -430,6 +513,16 @@ pub fn execute_with(
                 }
                 put(bufs, *out, o);
             }
+            Op::LastPool { input, out, seq } => {
+                let mut o = take(bufs, *out);
+                {
+                    let src = &bufs[input.0];
+                    for b in 0..o.rows {
+                        o.row_mut(b).copy_from_slice(src.row(b * seq + (seq - 1)));
+                    }
+                }
+                put(bufs, *out, o);
+            }
             Op::Zero { buf } => {
                 bufs[buf.0].data.fill(0.0);
             }
@@ -455,6 +548,10 @@ pub struct GraphModel {
     /// Shared profiling handle; `None` keeps every timing site to one
     /// branch per op.
     telemetry: Option<Arc<Telemetry>>,
+    /// Streaming decode engine (step programs + per-slot state in its
+    /// own workspace, so one-shot runs between steps never clobber
+    /// resident sessions); `None` = one-shot only.
+    decode: Option<super::decode::DecodeEngine>,
 }
 
 impl GraphModel {
@@ -494,7 +591,16 @@ impl GraphModel {
         if let Some(tele) = &telemetry {
             tele.register_programs(&programs);
         }
-        Ok(GraphModel { programs, ws, intra, telemetry })
+        Ok(GraphModel { programs, ws, intra, telemetry, decode: None })
+    }
+
+    /// Attach a streaming-decode engine built from `set` (the compiled
+    /// step programs + embedding).  The engine gets its own workspace:
+    /// per-slot recurrent/KV state must survive one-shot forwards that
+    /// run between decode steps on the same worker.
+    pub fn attach_decode(&mut self, set: Arc<super::decode::DecodeSet>) -> Result<()> {
+        self.decode = Some(super::decode::DecodeEngine::new(set)?);
+        Ok(())
     }
 
     /// Shared variable-M execution: `packed` holds exactly `m_eff`
@@ -553,6 +659,40 @@ impl PreparedModel for GraphModel {
 
     fn supports_dynamic_batch(&self) -> bool {
         true
+    }
+
+    fn decode_caps(&self) -> Option<DecodeCaps> {
+        self.decode.as_ref().map(super::decode::DecodeEngine::caps)
+    }
+
+    fn decode_begin(&mut self, slot: usize, prompt: &[f32]) -> Result<()> {
+        match self.decode.as_mut() {
+            Some(d) => d.begin(slot, prompt),
+            None => bail!("model {} has no decode programs attached", self.programs[0].model),
+        }
+    }
+
+    fn decode_step(&mut self, variant: &str) -> Result<Vec<StepOut>> {
+        let intra = self.intra.clone();
+        match self.decode.as_mut() {
+            Some(d) => d.step(variant, intra.as_deref()),
+            None => bail!("model {} has no decode programs attached", self.programs[0].model),
+        }
+    }
+
+    fn decode_end(&mut self, slot: usize) -> Result<()> {
+        match self.decode.as_mut() {
+            Some(d) => d.end(slot),
+            None => bail!("model {} has no decode programs attached", self.programs[0].model),
+        }
+    }
+
+    fn decode_active(&self) -> usize {
+        self.decode.as_ref().map_or(0, super::decode::DecodeEngine::active_slots)
+    }
+
+    fn decode_free_slot(&self) -> Option<usize> {
+        self.decode.as_ref().and_then(super::decode::DecodeEngine::free_slot)
     }
 }
 

@@ -46,6 +46,29 @@ pub enum Op {
         qh: BufId,
         kh: BufId,
         vh: BufId,
+        /// Causal masking: position `i` attends only to positions
+        /// `0..=i` of its window (decoder-style models).  The causal
+        /// one-shot forward is then the exact twin of step-by-step
+        /// KV-cache decode, which the decode-parity suite exploits.
+        causal: bool,
+    },
+    /// One KV-cache attention step (decoder decode path).  Row `b` of
+    /// `qkv` (`(batch, 3d)`) appends its K/V projections into this
+    /// layer's cache at `slot_pos[b]` (`kcache`/`vcache` are
+    /// `(batch*max_steps, d)`, `max_steps` rows per slot), then attends
+    /// its Q against cache rows `0..=slot_pos[b]` per head, writing
+    /// context row `b` of `out` (`(batch, d)`).  `slot_pos` lives in the
+    /// workspace and is advanced by the decode driver once per step —
+    /// not by this op, since every layer of a step shares the position.
+    DecodeAttend {
+        qkv: BufId,
+        kcache: BufId,
+        vcache: BufId,
+        out: BufId,
+        heads: usize,
+        max_steps: usize,
+        /// `(1, max_steps)` scratch row for one head's scores.
+        scores: BufId,
     },
     /// img2col lowering of one image into the GEMM activation matrix.
     /// `from_chw`: the input buffer is a flat CHW image (the network
@@ -79,6 +102,10 @@ pub enum Op {
     LayerNorm { buf: BufId },
     /// Mean over each `seq`-row window: `(batch*seq, d)` -> `(batch, d)`.
     MeanPool { input: BufId, out: BufId, seq: usize },
+    /// Last row of each `seq`-row window: `(batch*seq, d)` -> `(batch, d)`
+    /// (the decoder head reads the final position, so one-shot logits
+    /// match the last decode step's).
+    LastPool { input: BufId, out: BufId, seq: usize },
     /// `buf = 0` (recurrent-state reset at the start of a request).
     Zero { buf: BufId },
 }

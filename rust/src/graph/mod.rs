@@ -29,11 +29,13 @@
 //! `exec::zoo`) are thin adapters over [`GraphModel`].
 
 pub mod compile;
+pub mod decode;
 pub mod exec;
 pub mod ir;
 pub mod pack;
 
-pub use compile::{batch_buckets, compile, CompileOptions};
+pub use compile::{batch_buckets, compile, compile_decode, compile_decode_set, CompileOptions};
+pub use decode::{DecodeEngine, DecodeSet};
 pub use exec::{execute, execute_batch, execute_with, run_gemm, GemmDispatch, GraphModel, Workspace};
 pub use ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
 pub use pack::{pack_weight, resolve_tile, GemmNode, GraphPattern, PackOptions, PackedWeight};

@@ -60,3 +60,4 @@ pub mod sparse;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;
+pub mod variant;

@@ -18,6 +18,7 @@ use std::time::Instant;
 use tilewise::autotune::{MeasureOpts, PatternFamily, PlanCache, Tuner, TunerOpts};
 use tilewise::coordinator::{start, start_with_backend, BatcherConfig, Policy, ServerConfig};
 use tilewise::exec::{Backend, NativeBackend, NativeModelSpec, ZooBackend, ZooSpec};
+use tilewise::variant::Variant;
 use tilewise::figures::{fig10, fig6, fig7, fig8, fig9, headline};
 use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
 use tilewise::models::{self, ModelWorkload};
@@ -44,12 +45,14 @@ fn main() {
                  commands:\n\
                  \x20 serve [--backend pjrt|native] [--workers N] [--intra-threads N] [--artifacts DIR]\n\
                  \x20       [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
-                 \x20       [--plan-cache FILE] [--model bert|vgg|nmt|nano|bert-ffn]\n\
-                 \x20       [--low-latency] [--padded] [--telemetry-json FILE]\n\
-                 \x20       (bert/vgg/nmt serve the graph-compiled zoo model; nano the\n\
-                 \x20        residual-MLP surrogate; bert-ffn the BERT-base FFN widths;\n\
-                 \x20        --low-latency dispatches partial batches without waiting;\n\
+                 \x20       [--plan-cache FILE] [--model bert|vgg|nmt|decoder|nano|bert-ffn]\n\
+                 \x20       [--low-latency] [--padded] [--decode N] [--telemetry-json FILE]\n\
+                 \x20       (bert/vgg/nmt/decoder serve the graph-compiled zoo model; nano\n\
+                 \x20        the residual-MLP surrogate; bert-ffn the BERT-base FFN widths;\n\
+                 \x20        --low-latency enables eager dispatch + the M=1 fast lane;\n\
                  \x20        --padded disables dynamic effective-batch execution;\n\
+                 \x20        --decode N streams N autoregressive sessions through the\n\
+                 \x20        continuous-batching decode lane (nmt|decoder models);\n\
                  \x20        --telemetry-json dumps metrics + graph profile periodically)\n\
                  \x20 profile [--model bert|vgg|nmt] [--runs N] [--intra-threads N] [--out FILE]\n\
                  \x20         (per-GEMM-node time/FLOPs attribution across all variants;\n\
@@ -162,17 +165,14 @@ fn cmd_serve(args: &[String]) -> i32 {
     let rate: f64 = flag(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(50.0);
     let plan_cache = flag(args, "--plan-cache").map(PathBuf::from);
     let telemetry_json = flag(args, "--telemetry-json").map(PathBuf::from);
+    let decode_sessions: usize = flag(args, "--decode").and_then(|v| v.parse().ok()).unwrap_or(0);
     let policy = match flag(args, "--policy").as_deref() {
-        Some("dense") => Policy::Fixed("model_dense".into()),
-        Some("tvw") => Policy::Fixed("model_tvw".into()),
-        Some("rr") => Policy::RoundRobin(vec![
-            "model_dense".into(),
-            "model_tw".into(),
-            "model_tvw".into(),
-        ]),
+        Some("dense") => Policy::Fixed(Variant::Dense),
+        Some("tvw") => Policy::Fixed(Variant::Tvw),
+        Some("rr") => Policy::RoundRobin(vec![Variant::Dense, Variant::Tw, Variant::Tvw]),
         Some("adaptive") => Policy::Adaptive {
-            dense: "model_dense".into(),
-            sparse: "model_tvw".into(),
+            dense: Variant::Dense,
+            sparse: Variant::Tvw,
             queue_threshold: 8,
         },
         Some("tuned") => Policy::Tuned {
@@ -183,36 +183,39 @@ fn cmd_serve(args: &[String]) -> i32 {
                 Some(m) => m.into(),
                 None => "bert".into(),
             },
-            fallback: "model_dense".into(),
+            fallback: Variant::Dense,
         },
         // no explicit policy: the native backend round-robins so one run
         // exercises dense/TW/TVW end-to-end; pjrt keeps the TW default
-        None if backend_name == "native" => Policy::RoundRobin(vec![
-            "model_dense".into(),
-            "model_tw".into(),
-            "model_tvw".into(),
-        ]),
-        _ => Policy::Fixed("model_tw".into()),
+        None if backend_name == "native" => {
+            Policy::RoundRobin(vec![Variant::Dense, Variant::Tw, Variant::Tvw])
+        }
+        _ => Policy::Fixed(Variant::Tw),
     };
-    // --low-latency: dispatch partial batches as soon as the queue is
-    // drained; --padded: keep the historical full-B zero-padded execution
-    // (dynamic effective-batch is the default)
+    // --low-latency: eager dispatch + the M=1 fast lane; --padded: keep
+    // the historical full-B zero-padded execution (dynamic effective-
+    // batch is the default)
     let low_latency = args.iter().any(|a| a == "--low-latency");
     let dynamic_batch = !args.iter().any(|a| a == "--padded");
-    let batcher = if low_latency {
-        BatcherConfig::low_latency(BatcherConfig::default().max_batch)
-    } else {
-        BatcherConfig::default()
-    };
-    let mut cfg = ServerConfig {
-        batcher,
-        policy,
-        variants: ServerConfig::default().variants,
-        max_queue: 0,
-        plan_cache: plan_cache.clone(),
-        workers,
-        intra_threads,
-        dynamic_batch,
+    let mut builder = ServerConfig::builder()
+        .policy(policy)
+        .workers(workers)
+        .intra_threads(intra_threads)
+        .dynamic_batch(dynamic_batch);
+    if low_latency {
+        builder = builder
+            .batcher(BatcherConfig::low_latency(BatcherConfig::default().max_batch))
+            .fast_lane(true);
+    }
+    if let Some(p) = plan_cache.clone() {
+        builder = builder.plan_cache(p);
+    }
+    let mut cfg = match builder.build() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bad serve configuration: {e}");
+            return 2;
+        }
     };
     let mut native_cache: Option<Arc<PlanCache>> = None;
     // graph-level per-node profiling sink, populated when --telemetry-json
@@ -244,7 +247,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             // "nano"/default the fast residual-MLP surrogate
             let backend: tilewise::error::Result<Arc<dyn Backend>> =
                 match flag(args, "--model").as_deref() {
-                    Some(m @ ("bert" | "vgg" | "vgg16" | "nmt")) => ZooSpec::for_model(m)
+                    Some(m @ ("bert" | "vgg" | "vgg16" | "nmt" | "decoder")) => ZooSpec::for_model(m)
                         .and_then(|s| ZooBackend::new(s, cache))
                         .map(|mut b| {
                             if want_tele {
@@ -313,24 +316,61 @@ fn cmd_serve(args: &[String]) -> i32 {
         handle.d_model,
         handle.n_classes,
         if dynamic_batch { "dynamic-m" } else { "padded" },
-        if low_latency { "+low-latency" } else { "" },
+        if low_latency { "+low-latency+fast-lane" } else { "" },
         tilewise::gemm::micro::active_label()
     );
     let len = handle.seq * handle.d_model;
     let mut rng = Rng::new(123);
+    if decode_sessions > 0 {
+        // streaming decode client: open-loop session arrivals with mixed
+        // prompt/generation lengths through the continuous-batching lane
+        let Some(caps) = handle.decode_caps else {
+            eprintln!(
+                "--decode needs a streaming-capable model \
+                 (--backend native --model nmt|decoder)"
+            );
+            return 2;
+        };
+        let mut streams = Vec::with_capacity(decode_sessions);
+        for i in 0..decode_sessions {
+            let prompt_rows = 1 + i % caps.max_steps.saturating_sub(2).max(1);
+            let new_tokens = (caps.max_steps - prompt_rows).min(4).max(1);
+            let prompt: Vec<f32> =
+                (0..prompt_rows * caps.d_in).map(|_| rng.normal_f32()).collect();
+            streams.push(handle.submit_decode(prompt, None, new_tokens));
+            std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
+        }
+        let mut tokens = 0usize;
+        let mut dfailed = 0usize;
+        for stream in streams {
+            match stream.wait() {
+                Ok(resp) => tokens += resp.tokens,
+                Err(_) => dfailed += 1,
+            }
+        }
+        let d = handle.metrics.decode_stats();
+        println!(
+            "decode: {decode_sessions} sessions -> {tokens} tokens ({dfailed} failed), \
+             {:.1} tok/s, mean active slots {:.2}, step p50 {:.3}ms p95 {:.3}ms",
+            d.tokens_per_sec, d.mean_active_slots, d.step_p50_ms, d.step_p95_ms
+        );
+    }
     let mut pending = Vec::new();
     for _ in 0..requests {
         let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-        pending.push(handle.submit(x, None));
+        // under --low-latency the client exercises the M=1 fast lane
+        // (submit_fast degrades to the batched path without it)
+        let stream =
+            if low_latency { handle.submit_fast(x, None) } else { handle.submit(x, None) };
+        pending.push(stream);
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
     }
     let mut ok = 0;
     let mut failed = 0;
-    for rx in pending {
-        match rx.recv() {
-            Ok(resp) if resp.is_ok() => ok += 1,
-            Ok(_) => failed += 1,
-            Err(_) => {}
+    for stream in pending {
+        match stream.wait() {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
         }
     }
     let snap = handle.metrics.full_snapshot();

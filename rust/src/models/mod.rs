@@ -153,6 +153,22 @@ pub fn bert_base(batch: usize, seq: usize) -> ModelWorkload {
     bert_at(batch, seq, 768, 12)
 }
 
+/// Decoder-style transformer at arbitrary width/depth: the same fused
+/// QKV / FFN block shapes as [`bert_at`], but compiled with causal
+/// attention and a last-position head (`CompileOptions::causal`) and
+/// served through the streaming-decode path with per-layer KV caches.
+pub fn decoder_at(batch: usize, seq: usize, d_model: usize, n_layers: usize) -> ModelWorkload {
+    let m = batch * seq;
+    let d = d_model;
+    let layers = vec![
+        fc("qkv", m, d, 3 * d, n_layers),
+        fc("attn_out", m, d, d, n_layers),
+        fc("ffn1", m, d, 4 * d, n_layers),
+        fc("ffn2", m, 4 * d, d, n_layers),
+    ];
+    ModelWorkload { name: "decoder", metric: "acc", layers }
+}
+
 /// GNMT-style NMT at arbitrary hidden width / unroll depth: 2-layer LSTM
 /// encoder + decoder (each step's four gates are one
 /// `(batch, 2H, 4H)` GEMM), an attention FC, and an `8H`-wide projection.

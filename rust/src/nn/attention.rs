@@ -49,6 +49,35 @@ pub fn attention_into(
     n_heads: usize,
     scratch: &mut AttnScratch,
 ) {
+    attention_window_into(qkv, ctx, row0, seq, n_heads, scratch, false)
+}
+
+/// Causal variant of [`attention_into`]: position `i` attends only to
+/// positions `0..=i` of its window.  Because each output row then
+/// depends solely on earlier rows, a causal one-shot forward equals
+/// step-by-step KV-cache decode exactly — the decode-parity contract.
+pub fn attention_causal_into(
+    qkv: &Matrix,
+    ctx: &mut Matrix,
+    row0: usize,
+    seq: usize,
+    n_heads: usize,
+    scratch: &mut AttnScratch,
+) {
+    attention_window_into(qkv, ctx, row0, seq, n_heads, scratch, true)
+}
+
+/// The shared window core behind [`attention_into`] /
+/// [`attention_causal_into`].
+pub fn attention_window_into(
+    qkv: &Matrix,
+    ctx: &mut Matrix,
+    row0: usize,
+    seq: usize,
+    n_heads: usize,
+    scratch: &mut AttnScratch,
+    causal: bool,
+) {
     let d = ctx.cols;
     assert_eq!(qkv.cols, 3 * d, "qkv projection must be 3*d_model wide");
     assert_eq!(qkv.rows, ctx.rows);
@@ -70,10 +99,12 @@ pub fn attention_into(
             scratch.kh.row_mut(i).copy_from_slice(&src[k0..k0 + dh]);
             scratch.vh.row_mut(i).copy_from_slice(&src[v0..v0 + dh]);
         }
-        // scores = softmax(q k^T * scale), (seq, seq)
+        // scores = softmax(q k^T * scale), (seq, seq); causal masking
+        // restricts row i to its 0..=i prefix
         for i in 0..seq {
+            let lim = if causal { i + 1 } else { seq };
             let qi = scratch.qh.row(i);
-            let row = scratch.scores.row_mut(i);
+            let row = &mut scratch.scores.row_mut(i)[..lim];
             for (j, sv) in row.iter_mut().enumerate() {
                 let kj = scratch.kh.row(j);
                 *sv = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
@@ -90,9 +121,10 @@ pub fn attention_into(
         }
         // ctx_head = scores @ v_head (contiguous accumulate)
         for i in 0..seq {
+            let lim = if causal { i + 1 } else { seq };
             let out = &mut ctx.row_mut(row0 + i)[h * dh..(h + 1) * dh];
             out.fill(0.0);
-            for j in 0..seq {
+            for j in 0..lim {
                 let w = scratch.scores.at(i, j);
                 for (o, vv) in out.iter_mut().zip(scratch.vh.row(j)) {
                     *o += w * vv;
@@ -250,6 +282,30 @@ mod tests {
                 for (x, y) in ctx.row(b * s + i).iter().zip(ctx1.row(i)) {
                     assert!((x - y).abs() < 1e-6, "window {b}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn causal_rows_equal_prefix_windows() {
+        // the decode contract: causal row i == non-causal attention over
+        // the 0..=i prefix window, read at its last row
+        let mut rng = Rng::new(35);
+        let (s, d, heads) = (6, 16, 4);
+        let qkv = Matrix::randn(s, 3 * d, &mut rng);
+        let mut ctx = Matrix::zeros(s, d);
+        let mut sc = AttnScratch::new(s, d / heads);
+        attention_causal_into(&qkv, &mut ctx, 0, s, heads, &mut sc);
+        for i in 0..s {
+            let mut pre = Matrix::zeros(i + 1, 3 * d);
+            for r in 0..=i {
+                pre.row_mut(r).copy_from_slice(qkv.row(r));
+            }
+            let mut pctx = Matrix::zeros(i + 1, d);
+            let mut psc = AttnScratch::new(i + 1, d / heads);
+            attention_into(&pre, &mut pctx, 0, i + 1, heads, &mut psc);
+            for (a, b) in ctx.row(i).iter().zip(pctx.row(i)) {
+                assert!((a - b).abs() < 1e-5, "row {i}");
             }
         }
     }

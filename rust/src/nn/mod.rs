@@ -13,6 +13,9 @@ pub mod attention;
 pub mod conv;
 pub mod lstm;
 
-pub use attention::{attention_forward, attention_forward_unbuffered, attention_into, AttnScratch};
+pub use attention::{
+    attention_causal_into, attention_forward, attention_forward_unbuffered, attention_into,
+    attention_window_into, AttnScratch,
+};
 pub use conv::{conv2d, im2col, im2col_into, Conv2dSpec, ImgSrc};
 pub use lstm::{lstm_gate_update, LstmCell, LstmScratch, LstmState};

@@ -35,11 +35,13 @@ pub enum OpKind {
     Residual,
     LayerNorm,
     MeanPool,
+    LastPool,
+    DecodeAttend,
     Zero,
 }
 
 /// Number of [`OpKind`] categories (counter-array size).
-pub const OP_KINDS: usize = 12;
+pub const OP_KINDS: usize = 14;
 
 impl OpKind {
     pub const ALL: [OpKind; OP_KINDS] = [
@@ -54,6 +56,8 @@ impl OpKind {
         OpKind::Residual,
         OpKind::LayerNorm,
         OpKind::MeanPool,
+        OpKind::LastPool,
+        OpKind::DecodeAttend,
         OpKind::Zero,
     ];
 
@@ -70,7 +74,9 @@ impl OpKind {
             OpKind::Residual => 8,
             OpKind::LayerNorm => 9,
             OpKind::MeanPool => 10,
-            OpKind::Zero => 11,
+            OpKind::LastPool => 11,
+            OpKind::DecodeAttend => 12,
+            OpKind::Zero => 13,
         }
     }
 
@@ -87,6 +93,8 @@ impl OpKind {
             OpKind::Residual => "residual",
             OpKind::LayerNorm => "layer_norm",
             OpKind::MeanPool => "mean_pool",
+            OpKind::LastPool => "last_pool",
+            OpKind::DecodeAttend => "decode_attend",
             OpKind::Zero => "zero",
         }
     }
@@ -104,6 +112,8 @@ impl OpKind {
             Op::Residual { .. } => OpKind::Residual,
             Op::LayerNorm { .. } => OpKind::LayerNorm,
             Op::MeanPool { .. } => OpKind::MeanPool,
+            Op::LastPool { .. } => OpKind::LastPool,
+            Op::DecodeAttend { .. } => OpKind::DecodeAttend,
             Op::Zero { .. } => OpKind::Zero,
         }
     }

@@ -1,0 +1,105 @@
+//! The shared serving-variant vocabulary.
+//!
+//! Every layer of the serving stack used to pass `"model_tw"`-style
+//! strings around (router policies, autotune keys, metrics labels,
+//! telemetry), which made exhaustiveness unverifiable: a typo'd variant
+//! string routed requests into `run()` errors at the worker, not at the
+//! call site.  [`Variant`] is the typed replacement — the coordinator
+//! speaks `Variant` end to end and converts to the executable's string
+//! name (`Variant::name`) only at the `PreparedModel::run` seam, where
+//! oracle variants (`"model_tw_oracle"`) and other compiled program
+//! names legitimately extend past this enum.
+//!
+//! `Display`/`FromStr` round-trip the historical names so CLI flags and
+//! JSON plan caches are unchanged: `"model_tw".parse::<Variant>()` and
+//! the short CLI form `"tw"` both resolve to [`Variant::Tw`].
+
+use crate::bail;
+use crate::error::Error;
+use std::fmt;
+use std::str::FromStr;
+
+/// A sparsity-pattern serving variant (one compiled program per model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Unpruned baseline.
+    Dense,
+    /// Tile-wise (fused CTO) sparsity.
+    Tw,
+    /// Tile-vector-wise sparsity.
+    Tvw,
+    /// 2:4 structured sparsity.
+    Vw24,
+    /// Per-layer pattern selection from the autotune plan cache.
+    Auto,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 5] =
+        [Variant::Dense, Variant::Tw, Variant::Tvw, Variant::Vw24, Variant::Auto];
+
+    /// The executable program name (`GraphProgram::variant` /
+    /// `PreparedModel::run` key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Dense => "model_dense",
+            Variant::Tw => "model_tw",
+            Variant::Tvw => "model_tvw",
+            Variant::Vw24 => "model_vw24",
+            Variant::Auto => "model_auto",
+        }
+    }
+
+    /// The short CLI label (`--policy tw`, zoo spec variant lists).
+    pub fn short(self) -> &'static str {
+        match self {
+            Variant::Dense => "dense",
+            Variant::Tw => "tw",
+            Variant::Tvw => "tvw",
+            Variant::Vw24 => "vw24",
+            Variant::Auto => "auto",
+        }
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Variant {
+    type Err = Error;
+
+    /// Accepts both the program name (`"model_tw"`) and the short CLI
+    /// form (`"tw"`).
+    fn from_str(s: &str) -> Result<Variant, Error> {
+        let stripped = s.strip_prefix("model_").unwrap_or(s);
+        for v in Variant::ALL {
+            if stripped == v.short() {
+                return Ok(v);
+            }
+        }
+        bail!("unknown variant {s:?} (expected one of dense/tw/tvw/vw24/auto)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_fromstr_round_trips_both_forms() {
+        for v in Variant::ALL {
+            assert_eq!(v.to_string().parse::<Variant>().unwrap(), v);
+            assert_eq!(v.short().parse::<Variant>().unwrap(), v);
+            assert_eq!(v.name(), format!("model_{}", v.short()));
+        }
+    }
+
+    #[test]
+    fn unknown_variant_is_an_error() {
+        assert!("model_bogus".parse::<Variant>().is_err());
+        assert!("".parse::<Variant>().is_err());
+    }
+}
