@@ -1,0 +1,215 @@
+//! Bench: f32 vs int8 (i8×i8→i32, dequant-on-store) for every GEMM
+//! pattern at serving-sized M, plus end-to-end zoo-model forwards at both
+//! precisions.  Emits `BENCH_quant.json`; CI validates the grid is
+//! complete (all four patterns per shape) and fails if int8 dense loses
+//! to f32 whenever an x86 SIMD ISA was detected.
+//!
+//! The int8 timings include the full serving cost: dynamic activation
+//! quantization, the i32 accumulation, and per-channel dequantization on
+//! store — so `speedup` is the number a `--precision int8` deployment
+//! actually sees per dispatch.
+//!
+//!   cargo bench --bench quant_speedup
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::{bench, quick_mode, section};
+use tilewise::gemm::micro::{self, Isa};
+use tilewise::gemm::{
+    int8_dense_panel, int8_matmul_tiled_into, int8_tvw_matmul_into, int8_tw_matmul_into,
+    int8_tw_pack_panels, int8_vw24_matmul_into, matmul_tiled_into, matmul_tiled_into_panel,
+    tvw_matmul_into_with, tw_matmul_into_with, vw24_matmul_into_with, GemmScratch, Int8TvwPlan,
+    Int8TwPlan, Int8Vw24Plan, PackedPanel, TileConfig,
+};
+use tilewise::graph::{compile, CompileOptions, GraphModel, GraphPattern, PackOptions};
+use tilewise::json::{arr, num, obj, s, Json};
+use tilewise::models;
+use tilewise::quant::{Precision, QuantMatrix};
+use tilewise::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+fn gflops(m: usize, k: usize, n: usize, density: f64, us: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 * density / (us * 1e-6) / 1e9
+}
+
+fn main() {
+    let sparsity = 0.75;
+    let g = 32usize;
+    // serving-sized M (batch x seq at the zoo serving defaults) over the
+    // BERT-base projection/FFN widths; quick mode shrinks K/N, not M —
+    // the serving-M claim is the point of this bench
+    let shapes: Vec<(usize, usize, usize)> = if quick_mode() {
+        vec![(64, 256, 256), (64, 256, 1024)]
+    } else {
+        vec![(64, 768, 768), (64, 768, 3072), (64, 3072, 768)]
+    };
+
+    let auto = micro::resolve(&TileConfig::dense_default());
+    let x86_simd = matches!(auto.isa, Isa::Avx2 | Isa::Avx512);
+    section(&format!(
+        "f32 vs int8 GFLOP/s at serving M, kernel {} (sparsity {sparsity}, G {g})",
+        micro::active_label()
+    ));
+
+    let mut rng = Rng::new(0x18A7);
+    let mut cells = Vec::new();
+    for &(m, k, n) in &shapes {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        // f32 plans and their quantized twins (same pruning decision)
+        let twplan = TwPlan::encode(&w, &prune_tw(&w, sparsity, g, None));
+        let (tws, mask) = prune_tvw(&w, sparsity, g);
+        let tvplan = TvwPlan::encode(&w, &tws, &mask);
+        let vplan = Vw24Plan::encode(&w, &prune_vw(&w, 0.5, 4)).expect("2:4 encodable");
+        let qw = QuantMatrix::quantize(&w);
+        let q_tw = Int8TwPlan::from_plan(&twplan);
+        let q_tvw = Int8TvwPlan::from_plan(&tvplan);
+        let q_vw = Int8Vw24Plan::from_plan(&vplan);
+        let q_panel = int8_dense_panel(&qw, auto.nr);
+        let q_tw_panels = int8_tw_pack_panels(&q_tw, auto.nr);
+        let f_panel = auto.is_simd().then(|| PackedPanel::pack(&w.data, k, n, n, auto.nr));
+        let mut c = Matrix::zeros(m, n);
+        let mut scratch = GemmScratch::new();
+
+        for (pattern, density) in
+            [("dense", 1.0), ("tw", 1.0 - sparsity), ("tvw", 1.0 - sparsity), ("vw24", 0.5)]
+        {
+            let fp32_us = bench(&format!("{pattern} {m}x{k}x{n} f32"), || {
+                c.data.fill(0.0);
+                match pattern {
+                    "dense" => match &f_panel {
+                        Some(p) => matmul_tiled_into_panel(
+                            &a,
+                            &w,
+                            Some(p),
+                            &mut c,
+                            &TileConfig::dense_default(),
+                        ),
+                        None => matmul_tiled_into(&a, &w, &mut c, &TileConfig::dense_default()),
+                    },
+                    "tw" => tw_matmul_into_with(&a, &twplan, &mut c, &TileConfig::tw_default()),
+                    "tvw" => tvw_matmul_into_with(&a, &tvplan, &mut c, &TileConfig::tvw_default()),
+                    _ => vw24_matmul_into_with(&a, &vplan, &mut c, &TileConfig::vw_default()),
+                }
+            });
+            let int8_us = bench(&format!("{pattern} {m}x{k}x{n} int8"), || {
+                c.data.fill(0.0);
+                match pattern {
+                    "dense" => int8_matmul_tiled_into(
+                        &a,
+                        &qw,
+                        Some(&q_panel),
+                        &mut c,
+                        &TileConfig::dense_default(),
+                        &mut scratch,
+                    ),
+                    "tw" => int8_tw_matmul_into(
+                        &a,
+                        &q_tw,
+                        Some(&q_tw_panels),
+                        &mut c,
+                        &TileConfig::tw_default(),
+                        &mut scratch,
+                    ),
+                    "tvw" => int8_tvw_matmul_into(
+                        &a,
+                        &q_tvw,
+                        &mut c,
+                        &TileConfig::tvw_default(),
+                        &mut scratch,
+                    ),
+                    _ => int8_vw24_matmul_into(
+                        &a,
+                        &q_vw,
+                        &mut c,
+                        &TileConfig::vw_default(),
+                        &mut scratch,
+                    ),
+                }
+            });
+            let (fp_gf, i8_gf) =
+                (gflops(m, k, n, density, fp32_us), gflops(m, k, n, density, int8_us));
+            println!(
+                "    {pattern:<6} {m}x{k}x{n}: f32 {fp_gf:.2} GFLOP/s, int8 {i8_gf:.2} GFLOP/s \
+                 ({:.2}x)",
+                fp32_us / int8_us.max(1e-12)
+            );
+            cells.push(obj(vec![
+                ("pattern", s(pattern)),
+                ("m", num(m as f64)),
+                ("k", num(k as f64)),
+                ("n", num(n as f64)),
+                ("density", num(density)),
+                ("fp32_gflops", num(fp_gf)),
+                ("int8_gflops", num(i8_gf)),
+                ("fp32_us", num(fp32_us)),
+                ("int8_us", num(int8_us)),
+                ("speedup", num(fp32_us / int8_us.max(1e-12))),
+            ]));
+        }
+    }
+
+    // end-to-end: the compiled zoo transformer at both precisions,
+    // through the same graph executor `serve --backend native` dispatches
+    section("end-to-end model forward, f32 vs int8 (quantize-at-pack)");
+    let (batch, seq, width, layers) = if quick_mode() { (2, 4, 32, 1) } else { (4, 16, 256, 2) };
+    let workload = models::bert_at(batch, seq, width, layers);
+    let opts = CompileOptions {
+        seq,
+        heads: 4,
+        n_classes: 8,
+        pack: PackOptions { sparsity, g, ..Default::default() },
+        seed: 42,
+        ..CompileOptions::default()
+    };
+    let mut model_cells = Vec::new();
+    for pattern in [GraphPattern::Dense, GraphPattern::Tw, GraphPattern::Tvw, GraphPattern::Vw24] {
+        let f32_prog = compile(&workload, &opts.with_pattern(pattern)).expect("f32 compile");
+        let int8_prog =
+            compile(&workload, &opts.with_pattern(pattern).with_precision(Precision::Int8))
+                .expect("int8 compile");
+        let dims = f32_prog.dims;
+        let variant = f32_prog.variant.clone();
+        let x: Vec<f32> =
+            (0..dims.batch * dims.per_request_len()).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect();
+        let mut fm = GraphModel::new(Arc::new(vec![f32_prog]), None).unwrap();
+        let mut qm = GraphModel::new(Arc::new(vec![int8_prog]), None).unwrap();
+        let fp32_us = bench(&format!("bert/{variant} f32"), || {
+            fm.run(&variant, &x).unwrap();
+        });
+        let int8_us = bench(&format!("bert/{variant} int8"), || {
+            qm.run(&variant, &x).unwrap();
+        });
+        println!(
+            "    bert/{variant}: f32 {fp32_us:.1}us, int8 {int8_us:.1}us ({:.2}x)",
+            fp32_us / int8_us.max(1e-12)
+        );
+        model_cells.push(obj(vec![
+            ("model", s("bert")),
+            ("variant", s(&variant)),
+            ("fp32_us", num(fp32_us)),
+            ("int8_us", num(int8_us)),
+            ("speedup", num(fp32_us / int8_us.max(1e-12))),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("bench", s("quant")),
+        ("isa", s(auto.isa.label())),
+        ("micro", s(&micro::active_label())),
+        ("avx2", Json::Bool(x86_simd)),
+        ("sparsity", num(sparsity)),
+        ("g", num(g as f64)),
+        ("cells", arr(cells)),
+        ("models", arr(model_cells)),
+    ]);
+    let out = "BENCH_quant.json";
+    match std::fs::write(out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("writing {out}: {e}"),
+    }
+}

@@ -83,18 +83,30 @@ impl Mlp {
 
     pub fn accuracy(&self, x: &Matrix, y: &[usize]) -> f64 {
         let (_, logits) = self.forward(x);
-        let mut correct = 0usize;
-        for i in 0..x.rows {
-            let row = logits.row(i);
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            correct += (pred == y[i]) as usize;
+        argmax_accuracy(&logits, y)
+    }
+
+    /// Test accuracy with the forward run through the int8 serving path:
+    /// both weight matrices per-channel quantized ([`QuantMatrix`]), the
+    /// activations dynamically quantized per GEMM — the exact arithmetic
+    /// `serve --precision int8` dispatches.  The guardrail tests compare
+    /// this against [`Mlp::accuracy`] to bound quantization damage on the
+    /// surrogate score.
+    pub fn accuracy_int8(&self, x: &Matrix, y: &[usize]) -> f64 {
+        use crate::gemm::{int8_matmul_tiled_into, GemmScratch, TileConfig};
+        use crate::quant::QuantMatrix;
+        let q1 = QuantMatrix::quantize(&self.w1);
+        let q2 = QuantMatrix::quantize(&self.w2);
+        let cfg = TileConfig::dense_default();
+        let mut scratch = GemmScratch::new();
+        let mut h = Matrix::zeros(x.rows, self.w1.cols);
+        int8_matmul_tiled_into(x, &q1, None, &mut h, &cfg, &mut scratch);
+        for v in &mut h.data {
+            *v = v.max(0.0);
         }
-        correct as f64 / x.rows as f64
+        let mut logits = Matrix::zeros(x.rows, self.w2.cols);
+        int8_matmul_tiled_into(&h, &q2, None, &mut logits, &cfg, &mut scratch);
+        argmax_accuracy(&logits, y)
     }
 
     /// One epoch of minibatch SGD with optional masks (masked-out weights
@@ -160,6 +172,17 @@ impl Mlp {
             }
         }
     }
+}
+
+fn argmax_accuracy(logits: &Matrix, y: &[usize]) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..logits.rows {
+        let row = logits.row(i);
+        let pred =
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        correct += (pred == y[i]) as usize;
+    }
+    correct as f64 / logits.rows as f64
 }
 
 /// Result of one pattern's prune→fine-tune sweep.
@@ -229,6 +252,32 @@ mod tests {
         let task = small_task();
         let pts = prune_finetune_sweep(&task, Pattern::Ew, &[0.5], 64, 3);
         assert!(pts[0].accuracy > 0.75, "{pts:?}");
+    }
+
+    #[test]
+    fn int8_quantization_guardrail_on_surrogate_score() {
+        // the PR 9 accuracy contract: serving the pruned + fine-tuned
+        // surrogate at int8 (per-channel weights, dynamic activations)
+        // moves its test score by at most 0.5% absolute vs the f32 path
+        let task = Task::synth(32, 4, 1200, 1000, 13);
+        let mut rng = Rng::new(17);
+        let mut m = Mlp::init(task.dim, 64, task.classes, 19);
+        for _ in 0..30 {
+            m.sgd_epoch(&task.train_x, &task.train_y, 0.05, 32, None, &mut rng);
+        }
+        let mask = Pattern::Tw { g: 8 }.prune(&m.w1, 0.75);
+        m.w1 = mask.apply(&m.w1);
+        let full2 = Mask::all(m.w2.rows, m.w2.cols);
+        for _ in 0..10 {
+            m.sgd_epoch(&task.train_x, &task.train_y, 0.05, 32, Some((&mask, &full2)), &mut rng);
+        }
+        let f32_acc = m.accuracy(&task.test_x, &task.test_y);
+        let int8_acc = m.accuracy_int8(&task.test_x, &task.test_y);
+        assert!(f32_acc > 0.7, "pruned surrogate should still classify: {f32_acc}");
+        assert!(
+            (f32_acc - int8_acc).abs() <= 0.005,
+            "int8 surrogate score {int8_acc} drifted more than 0.5% from f32 {f32_acc}"
+        );
     }
 
     #[test]

@@ -15,12 +15,14 @@ use crate::error::{Context, Result};
 use crate::gemm::{MicroCfg, TileConfig};
 use crate::gpusim::GemmShape;
 use crate::json::{arr, num, obj, s, Json};
+use crate::quant::Precision;
 use crate::{anyhow, bail};
 
 /// Bump on any incompatible change to the cache layout or to the meaning
 /// of tuned parameters; stale caches are discarded wholesale on load.
 /// v2: entries carry the tuned microkernel request (`micro` label).
-pub const SCHEMA_VERSION: u64 = 2;
+/// v3: entries carry the tuned numeric precision (`precision` label).
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Cache key: one GEMM problem as tuned.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -70,6 +72,9 @@ pub struct TunedEntry {
     /// Winning microkernel request ([`MicroCfg::label`]: "auto" /
     /// "scalar" / "simd{MR}x{NR}").
     pub micro: String,
+    /// Winning numeric precision ([`Precision::label`]: "fp32" / "int8";
+    /// "auto" never persists — the tuner stores what actually won).
+    pub precision: String,
     /// Trimmed-mean measured latency of the winner, microseconds.
     pub measured_us: f64,
     /// gpusim pre-filter estimate for the winner, microseconds.
@@ -99,6 +104,12 @@ impl TunedEntry {
         TileConfig::new(self.bm, self.bk).with_micro(self.micro_cfg())
     }
 
+    /// The tuned numeric precision (`Fp32` when the label fails to parse
+    /// — `validate` rejects that case at load time).
+    pub fn precision_value(&self) -> Precision {
+        Precision::from_label(&self.precision).unwrap_or(Precision::Fp32)
+    }
+
     /// Reconstruct the winning candidate (for re-execution).
     pub fn candidate(&self) -> Option<Candidate> {
         Some(Candidate {
@@ -106,6 +117,7 @@ impl TunedEntry {
             tile: self.tile(),
             g: self.g,
             threads: self.threads,
+            precision: self.precision_value(),
         })
     }
 
@@ -119,6 +131,9 @@ impl TunedEntry {
             .map_err(|e| anyhow!("plan cache entry {id}: {e}"))?;
         if MicroCfg::from_label(&self.micro).is_none() {
             bail!("plan cache entry {id}: unknown microkernel label {:?}", self.micro);
+        }
+        if Precision::from_label(&self.precision).is_none() {
+            bail!("plan cache entry {id}: unknown precision label {:?}", self.precision);
         }
         Ok(())
     }
@@ -137,6 +152,7 @@ impl TunedEntry {
             ("g", num(self.g as f64)),
             ("threads", num(self.threads as f64)),
             ("micro", s(&self.micro)),
+            ("precision", s(&self.precision)),
             ("measured_us", num(self.measured_us)),
             ("model_us", num(self.model_us)),
             ("default_us", num(self.default_us)),
@@ -174,6 +190,11 @@ impl TunedEntry {
                 .get("micro")
                 .and_then(Json::as_str)
                 .context("entry missing \"micro\"")?
+                .to_string(),
+            precision: v
+                .get("precision")
+                .and_then(Json::as_str)
+                .unwrap_or("fp32")
                 .to_string(),
             measured_us: field("measured_us")?,
             model_us: field("model_us")?,
@@ -261,6 +282,31 @@ impl PlanCache {
             .map(TunedEntry::tile)
     }
 
+    /// Serving-time precision resolution, the `Precision::Auto` seam:
+    /// the tuned numeric precision for a GEMM under the same transfer
+    /// rule as [`PlanCache::lookup_tile_config`] — exact (K, N, pattern),
+    /// nearest sparsity, then nearest M, then smallest thread budget.
+    /// `None` (untuned shape) means the packer stays at f32.
+    pub fn lookup_precision(
+        &self,
+        shape: GemmShape,
+        pattern: &str,
+        sparsity: f64,
+    ) -> Option<Precision> {
+        let want_bp = (sparsity * 10_000.0).round().clamp(0.0, 10_000.0) as i64;
+        self.entries
+            .values()
+            .filter(|e| e.key.k == shape.k && e.key.n == shape.n && e.key.pattern == pattern)
+            .min_by_key(|e| {
+                (
+                    (e.key.sparsity_bp as i64 - want_bp).abs(),
+                    (e.key.m as i64 - shape.m as i64).abs(),
+                    e.key.nthreads,
+                )
+            })
+            .map(TunedEntry::precision_value)
+    }
+
     pub fn set_model_variant(&mut self, model: &str, variant: &str) {
         self.models.insert(model.to_string(), variant.to_string());
     }
@@ -340,6 +386,7 @@ mod tests {
             g: 32,
             threads: 1,
             micro: "auto".into(),
+            precision: "fp32".into(),
             measured_us: 100.0,
             model_us: 80.0,
             default_us: 150.0,
@@ -372,7 +419,7 @@ mod tests {
         let text = cache
             .to_json()
             .to_string()
-            .replace("\"schema_version\":2", "\"schema_version\":99");
+            .replace("\"schema_version\":3", "\"schema_version\":99");
         assert!(text.contains("99"), "fixture edit failed");
         let v = Json::parse(&text).unwrap();
         assert!(PlanCache::from_json(&v).is_err());
@@ -404,6 +451,11 @@ mod tests {
         let v = Json::parse(&good.replace("\"micro\":\"auto\"", "\"micro\":\"simd9z\"")).unwrap();
         let err = PlanCache::from_json(&v).unwrap_err().to_string();
         assert!(err.contains("microkernel"), "{err}");
+        // an unknown precision label
+        let v =
+            Json::parse(&good.replace("\"precision\":\"fp32\"", "\"precision\":\"fp64\"")).unwrap();
+        let err = PlanCache::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
         // the unedited cache still loads, micro intact
         let back = PlanCache::from_json(&Json::parse(&good).unwrap()).unwrap();
         assert_eq!(back.entries().next().unwrap().micro_cfg(), MicroCfg::Auto);
@@ -423,6 +475,26 @@ mod tests {
         // and JSON round-trips it
         let back = PlanCache::from_json(&Json::parse(&cache.to_json().to_string()).unwrap());
         assert_eq!(back.unwrap().entries().next().unwrap().micro, "simd4x16");
+    }
+
+    #[test]
+    fn precision_persists_and_resolves_for_serving() {
+        let mut cache = PlanCache::new();
+        let mut e = entry(256, "DENSE");
+        e.precision = "int8".into();
+        cache.insert(e);
+        // round-trips through JSON
+        let back = PlanCache::from_json(&Json::parse(&cache.to_json().to_string()).unwrap());
+        let back = back.unwrap();
+        assert_eq!(back.entries().next().unwrap().precision_value(), Precision::Int8);
+        // transfers across M like tile lookups (the quantize-at-pack seam)
+        let serving = GemmShape::new(1024, 768, 3072);
+        assert_eq!(back.lookup_precision(serving, "DENSE", 0.75), Some(Precision::Int8));
+        assert_eq!(back.lookup_precision(serving, "TW", 0.75), None);
+        // a missing precision key defaults to fp32 (freshly bumped caches)
+        let text = cache.to_json().to_string().replace("\"precision\":\"int8\",", "");
+        let back = PlanCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.entries().next().unwrap().precision_value(), Precision::Fp32);
     }
 
     #[test]

@@ -14,11 +14,15 @@ use std::rc::Rc;
 
 use super::space::{Candidate, KernelVariant};
 use crate::gemm::{
-    effective_parallel_threads, matmul_parallel, matmul_tiled, tvw_effective_parallel_threads,
+    effective_parallel_threads, int8_dense_panel, int8_matmul_parallel_into,
+    int8_matmul_tiled_into, int8_tvw_matmul_into, int8_tw_matmul_into, int8_tw_pack_panels,
+    int8_vw24_matmul_into, matmul_parallel, matmul_tiled, micro, tvw_effective_parallel_threads,
     tvw_matmul_parallel_into, tvw_matmul_with, tw_effective_parallel_threads, tw_matmul_parallel,
     tw_matmul_with, vw24_effective_parallel_threads, vw24_matmul_parallel_into, vw24_matmul_with,
+    GemmScratch, Int8TvwPlan, Int8TwPlan, Int8Vw24Plan,
 };
 use crate::gpusim::GemmShape;
+use crate::quant::{Precision, QuantMatrix};
 use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
 use crate::tensor::Matrix;
 use crate::util::{Rng, Stopwatch};
@@ -101,6 +105,11 @@ pub struct BenchData {
     tw_plans: HashMap<usize, Rc<TwPlan>>,
     tvw_plans: HashMap<usize, Rc<TvwPlan>>,
     vw_plan: Option<Option<Rc<Vw24Plan>>>,
+    // quantized twins, converted from the f32 plans above on demand
+    qw: Option<Rc<QuantMatrix>>,
+    int8_tw_plans: HashMap<usize, Rc<Int8TwPlan>>,
+    int8_tvw_plans: HashMap<usize, Rc<Int8TvwPlan>>,
+    int8_vw_plan: Option<Option<Rc<Int8Vw24Plan>>>,
 }
 
 impl BenchData {
@@ -116,6 +125,10 @@ impl BenchData {
             tw_plans: HashMap::new(),
             tvw_plans: HashMap::new(),
             vw_plan: None,
+            qw: None,
+            int8_tw_plans: HashMap::new(),
+            int8_tvw_plans: HashMap::new(),
+            int8_vw_plan: None,
         }
     }
 
@@ -157,6 +170,42 @@ impl BenchData {
         }
         self.vw_plan.clone().unwrap()
     }
+
+    /// Per-channel quantized weight (built once from `w`).
+    pub fn quant_weight(&mut self) -> Rc<QuantMatrix> {
+        let w = &self.w;
+        self.qw.get_or_insert_with(|| Rc::new(QuantMatrix::quantize(w))).clone()
+    }
+
+    /// Quantized TW plan at granularity `g`, converted from the f32 plan
+    /// so an int8 candidate is measured on the *same* pruning decision
+    /// its f32 sibling was.
+    pub fn int8_tw_plan(&mut self, g: usize) -> Rc<Int8TwPlan> {
+        if !self.int8_tw_plans.contains_key(&g) {
+            let plan = self.tw_plan(g);
+            self.int8_tw_plans.insert(g, Rc::new(Int8TwPlan::from_plan(&plan)));
+        }
+        self.int8_tw_plans[&g].clone()
+    }
+
+    /// Quantized TVW plan at granularity `g` (same sparsity floor as
+    /// [`BenchData::tvw_plan`]).
+    pub fn int8_tvw_plan(&mut self, g: usize) -> Rc<Int8TvwPlan> {
+        if !self.int8_tvw_plans.contains_key(&g) {
+            let plan = self.tvw_plan(g);
+            self.int8_tvw_plans.insert(g, Rc::new(Int8TvwPlan::from_plan(&plan)));
+        }
+        self.int8_tvw_plans[&g].clone()
+    }
+
+    /// Quantized 2:4 plan; `None` when K is not 4-aligned.
+    pub fn int8_vw24_plan(&mut self) -> Option<Rc<Int8Vw24Plan>> {
+        if self.int8_vw_plan.is_none() {
+            let built = self.vw24_plan().map(|p| Rc::new(Int8Vw24Plan::from_plan(&p)));
+            self.int8_vw_plan = Some(built);
+        }
+        self.int8_vw_plan.clone().unwrap()
+    }
 }
 
 /// Measure one candidate end-to-end on `data`'s operands.  Returns `None`
@@ -167,6 +216,9 @@ pub fn bench_candidate(
     opts: &MeasureOpts,
 ) -> Option<Measurement> {
     let tile = cand.tile;
+    if cand.precision == Precision::Int8 {
+        return bench_int8(data, cand, opts);
+    }
     match cand.variant {
         KernelVariant::DenseBlocked => {
             let (a, w) = (&data.a, &data.w);
@@ -277,6 +329,102 @@ pub fn bench_candidate(
     }
 }
 
+/// Int8 leg of [`bench_candidate`]: the same variants, run through the
+/// i8×i8→i32 kernels with packed-i8 panels and a reused [`GemmScratch`]
+/// (the serving hot-loop idiom — dynamic activation quantization is part
+/// of the measured cost, exactly as it is per dispatch at serve time).
+/// Only dense has a pooled int8 entry point, so int8 × parallel condensed
+/// variants are unmeasurable and return `None` (the search space already
+/// skips them; this keeps ad-hoc candidates honest too).
+fn bench_int8(data: &mut BenchData, cand: &Candidate, opts: &MeasureOpts) -> Option<Measurement> {
+    let tile = cand.tile;
+    let nr = micro::resolve(&tile).nr;
+    let mut scratch = GemmScratch::new();
+    match cand.variant {
+        KernelVariant::DenseBlocked => {
+            let qw = data.quant_weight();
+            let panel = int8_dense_panel(&qw, nr);
+            let a = &data.a;
+            let mut c = Matrix::zeros(a.rows, qw.cols);
+            Some(measure(
+                || {
+                    int8_matmul_tiled_into(a, &qw, Some(&panel), &mut c, &tile, &mut scratch);
+                    std::hint::black_box(&c);
+                },
+                opts,
+            ))
+        }
+        KernelVariant::DenseParallel => {
+            let t = cand.threads.max(1);
+            if t > 1 && effective_parallel_threads(data.shape.m, t) != t {
+                return None; // phantom-parallelism guard (see bench_candidate)
+            }
+            let qw = data.quant_weight();
+            let panel = int8_dense_panel(&qw, nr);
+            let a = &data.a;
+            let mut c = Matrix::zeros(a.rows, qw.cols);
+            Some(measure(
+                || {
+                    int8_matmul_parallel_into(
+                        a,
+                        &qw,
+                        Some(&panel),
+                        &mut c,
+                        &tile,
+                        t,
+                        crate::pool::global(),
+                        &mut scratch,
+                    );
+                    std::hint::black_box(&c);
+                },
+                opts,
+            ))
+        }
+        KernelVariant::TwFused => {
+            let plan = data.int8_tw_plan(cand.g.max(1));
+            let panels = int8_tw_pack_panels(&plan, nr);
+            let a = &data.a;
+            // the TW scatter assigns kept columns; dropped columns stay at
+            // the zero this allocation starts from
+            let mut c = Matrix::zeros(a.rows, plan.n);
+            Some(measure(
+                || {
+                    int8_tw_matmul_into(a, &plan, Some(&panels), &mut c, &tile, &mut scratch);
+                    std::hint::black_box(&c);
+                },
+                opts,
+            ))
+        }
+        KernelVariant::TvwFused => {
+            let plan = data.int8_tvw_plan(cand.g.max(1));
+            let a = &data.a;
+            let mut c = Matrix::zeros(a.rows, plan.n);
+            Some(measure(
+                || {
+                    int8_tvw_matmul_into(a, &plan, &mut c, &tile, &mut scratch);
+                    std::hint::black_box(&c);
+                },
+                opts,
+            ))
+        }
+        KernelVariant::Vw24 => {
+            let plan = data.int8_vw24_plan()?;
+            let a = &data.a;
+            let mut c = Matrix::zeros(a.rows, plan.n);
+            Some(measure(
+                || {
+                    int8_vw24_matmul_into(a, &plan, &mut c, &tile, &mut scratch);
+                    std::hint::black_box(&c);
+                },
+                opts,
+            ))
+        }
+        KernelVariant::TwParallel | KernelVariant::TvwParallel | KernelVariant::Vw24Parallel => {
+            None
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,6 +498,7 @@ mod tests {
             tile: TileConfig::dense_default(),
             g: 0,
             threads: 4,
+            precision: Precision::Fp32,
         };
         assert!(bench_candidate(&mut data, &dense_par, &opts).is_none());
         // a genuinely parallelisable TVW plan (several condensed tiles)
@@ -359,6 +508,7 @@ mod tests {
             tile: TileConfig::tvw_default(),
             g: 16,
             threads: 2,
+            precision: Precision::Fp32,
         };
         assert!(bench_candidate(&mut data, &tvw_par, &opts).is_some());
         // column-parallel 2:4 needs >= 16 columns per thread
@@ -367,8 +517,56 @@ mod tests {
             tile: TileConfig::vw_default(),
             g: 0,
             threads: 32,
+            precision: Precision::Fp32,
         };
         assert!(bench_candidate(&mut data, &vw_par, &opts).is_none());
+    }
+
+    #[test]
+    fn int8_candidates_are_measurable_per_family() {
+        // K = 32 divides 4 (2:4 leg) and sits far below the i32
+        // accumulator bound, so every family's int8 twin must measure
+        let mut data = BenchData::new(GemmShape::new(8, 32, 32), 0.5, 21);
+        let opts =
+            MeasureOpts { warmup: 0, min_iters: 1, max_iters: 1, budget_secs: 0.0, trim_frac: 0.0 };
+        for family in
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24]
+        {
+            let mut cand = Candidate::default_for(family);
+            cand.precision = Precision::Int8;
+            assert!(bench_candidate(&mut data, &cand, &opts).is_some(), "{family:?} int8");
+        }
+        // quantized plans are cached like their f32 twins
+        let q1 = data.quant_weight();
+        let q2 = data.quant_weight();
+        assert!(Rc::ptr_eq(&q1, &q2));
+    }
+
+    #[test]
+    fn int8_parallel_condensed_is_rejected() {
+        use crate::gemm::TileConfig;
+        // plenty of condensed tiles — the f32 TW parallel kernel WOULD
+        // run here, but there is no int8 pooled TW entry point, so the
+        // int8 twin must be unmeasurable rather than silently mis-timed
+        let mut data = BenchData::new(GemmShape::new(64, 64, 64), 0.75, 23);
+        let opts = MeasureOpts::quick();
+        let tw_par = Candidate {
+            variant: KernelVariant::TwParallel,
+            tile: TileConfig::tw_default(),
+            g: 16,
+            threads: 2,
+            precision: Precision::Int8,
+        };
+        assert!(bench_candidate(&mut data, &tw_par, &opts).is_none());
+        // ...while the int8 *dense* pooled kernel exists and measures
+        let dense_par = Candidate {
+            variant: KernelVariant::DenseParallel,
+            tile: TileConfig::dense_default(),
+            g: 0,
+            threads: 2,
+            precision: Precision::Int8,
+        };
+        assert!(bench_candidate(&mut data, &dense_par, &opts).is_some());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! tile granularity chosen at the global-memory level, and TVW adds a
 //! register-level 2:4 dimension on top.  This layer searches the
 //! (kernel variant × tile shape × pattern granularity × thread count ×
-//! microkernel) space for each GEMM workload and persists the winners:
+//! microkernel × numeric precision) space for each GEMM workload and
+//! persists the winners:
 //!
 //! - [`space`] — candidate enumeration over [`crate::gemm::TileConfig`],
 //!   TW granularity G, kernel variant, and thread count

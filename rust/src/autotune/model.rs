@@ -98,6 +98,7 @@ mod tests {
             tile: crate::gemm::TileConfig::tw_default(),
             g: 64,
             threads: 1,
+            precision: crate::quant::Precision::Fp32,
         };
         let dense = Candidate::default_for(PatternFamily::Dense);
         let c_tw = analytical_cost(shape, 0.75, &tw, &specs, &cal);

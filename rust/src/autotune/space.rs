@@ -7,6 +7,7 @@
 
 use crate::gemm::{micro, MicroCfg, TileConfig};
 use crate::gpusim::GemmShape;
+use crate::quant::Precision;
 
 /// What the tuner optimises: the dense baseline or one sparsity-pattern
 /// execution family.  (The pattern's G is a *search axis*, not part of
@@ -129,18 +130,21 @@ pub struct Candidate {
     pub g: usize,
     /// Worker threads (1 for serial variants).
     pub threads: usize,
+    /// Numeric precision of the kernel (quantize-at-pack axis).
+    pub precision: Precision,
 }
 
 impl Candidate {
     pub fn label(&self) -> String {
         format!(
-            "{}[bm{},bk{},g{},t{},{}]",
+            "{}[bm{},bk{},g{},t{},{},{}]",
             self.variant.label(),
             self.tile.bm,
             self.tile.bk,
             self.g,
             self.threads,
-            self.tile.micro.label()
+            self.tile.micro.label(),
+            self.precision.label()
         )
     }
 
@@ -153,24 +157,28 @@ impl Candidate {
                 tile: TileConfig::dense_default(),
                 g: 0,
                 threads: 1,
+                precision: Precision::Fp32,
             },
             PatternFamily::Tw => Candidate {
                 variant: KernelVariant::TwFused,
                 tile: TileConfig::tw_default(),
                 g: 64,
                 threads: 1,
+                precision: Precision::Fp32,
             },
             PatternFamily::Tvw => Candidate {
                 variant: KernelVariant::TvwFused,
                 tile: TileConfig::tvw_default(),
                 g: 64,
                 threads: 1,
+                precision: Precision::Fp32,
             },
             PatternFamily::Vw24 => Candidate {
                 variant: KernelVariant::Vw24,
                 tile: TileConfig::vw_default(),
                 g: 0,
                 threads: 1,
+                precision: Precision::Fp32,
             },
         }
     }
@@ -190,6 +198,10 @@ pub struct SearchSpace {
     /// Microkernel requests crossed with every blocking (the inner-loop
     /// axis: scalar loops vs the detected ISA's register blocks).
     pub micros: Vec<MicroCfg>,
+    /// Numeric precisions crossed with every candidate (the
+    /// quantize-at-pack axis).  `Auto` is a pack-time *resolution* mode,
+    /// never a measured point — only concrete precisions belong here.
+    pub precisions: Vec<Precision>,
 }
 
 impl Default for SearchSpace {
@@ -200,6 +212,7 @@ impl Default for SearchSpace {
             gs: vec![16, 32, 64, 128],
             threads: vec![1],
             micros: micro::search_axis(),
+            precisions: vec![Precision::Fp32, Precision::Int8],
         }
     }
 }
@@ -237,6 +250,7 @@ impl SearchSpace {
                             tile: TileConfig::new(bm, bk),
                             g: 0,
                             threads: 1,
+                            precision: Precision::Fp32,
                         });
                     }
                 }
@@ -247,6 +261,7 @@ impl SearchSpace {
                             tile: TileConfig::dense_default(),
                             g: 0,
                             threads: t,
+                            precision: Precision::Fp32,
                         });
                     }
                 }
@@ -259,6 +274,7 @@ impl SearchSpace {
                             tile: TileConfig::new(bm, 64),
                             g,
                             threads: 1,
+                            precision: Precision::Fp32,
                         });
                     }
                     for &t in &self.threads {
@@ -268,6 +284,7 @@ impl SearchSpace {
                                 tile: TileConfig::tw_default(),
                                 g,
                                 threads: t,
+                                precision: Precision::Fp32,
                             });
                         }
                     }
@@ -281,6 +298,7 @@ impl SearchSpace {
                             tile: TileConfig::new(bm, 64),
                             g,
                             threads: 1,
+                            precision: Precision::Fp32,
                         });
                     }
                     for &t in &self.threads {
@@ -290,6 +308,7 @@ impl SearchSpace {
                                 tile: TileConfig::tvw_default(),
                                 g,
                                 threads: t,
+                                precision: Precision::Fp32,
                             });
                         }
                     }
@@ -302,6 +321,7 @@ impl SearchSpace {
                         tile: TileConfig::new(bm, 64),
                         g: 0,
                         threads: 1,
+                        precision: Precision::Fp32,
                     });
                 }
                 for &t in &self.threads {
@@ -311,6 +331,7 @@ impl SearchSpace {
                             tile: TileConfig::vw_default(),
                             g: 0,
                             threads: t,
+                            precision: Precision::Fp32,
                         });
                     }
                 }
@@ -321,12 +342,29 @@ impl SearchSpace {
         // at run time), so the historical behaviour stays a measured point.
         let micros: &[MicroCfg] =
             if self.micros.is_empty() { &[MicroCfg::Auto] } else { &self.micros };
-        let mut crossed: Vec<Candidate> = Vec::with_capacity(out.len() * micros.len());
+        // precision axis: crossed into every candidate, except that the
+        // condensed int8 kernels have no pool-parallel entry points — only
+        // dense gets int8 x parallel candidates.
+        let precisions: &[Precision] =
+            if self.precisions.is_empty() { &[Precision::Fp32] } else { &self.precisions };
+        let mut crossed: Vec<Candidate> =
+            Vec::with_capacity(out.len() * micros.len() * precisions.len());
         for c in &out {
             for &mc in micros {
-                let cc = Candidate { tile: c.tile.with_micro(mc), ..*c };
-                if !crossed.contains(&cc) {
-                    crossed.push(cc);
+                for &p in precisions {
+                    if p == Precision::Auto {
+                        continue;
+                    }
+                    if p == Precision::Int8
+                        && c.variant.is_parallel()
+                        && family != PatternFamily::Dense
+                    {
+                        continue;
+                    }
+                    let cc = Candidate { tile: c.tile.with_micro(mc), precision: p, ..*c };
+                    if !crossed.contains(&cc) {
+                        crossed.push(cc);
+                    }
                 }
             }
         }
@@ -407,6 +445,35 @@ mod tests {
             // the historical default (micro = Auto) stays a measured point
             assert!(cands.contains(&Candidate::default_for(family)), "{family:?}");
         }
+    }
+
+    #[test]
+    fn precision_axis_crosses_candidates() {
+        let shape = GemmShape::new(64, 256, 256);
+        let space = SearchSpace::default().with_threads(4);
+        for family in
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24]
+        {
+            let cands = space.candidates(shape, family);
+            assert!(cands.iter().any(|c| c.precision == Precision::Fp32), "{family:?}");
+            assert!(cands.iter().any(|c| c.precision == Precision::Int8), "{family:?}");
+            // only dense has pool-parallel int8 entry points
+            if family != PatternFamily::Dense {
+                assert!(
+                    cands
+                        .iter()
+                        .all(|c| !(c.precision == Precision::Int8 && c.variant.is_parallel())),
+                    "{family:?}: condensed int8 kernels run serial"
+                );
+            }
+        }
+        let dense = space.candidates(shape, PatternFamily::Dense);
+        assert!(dense
+            .iter()
+            .any(|c| c.precision == Precision::Int8 && c.variant.is_parallel()));
+        // the label distinguishes the precision axis
+        let c = Candidate { precision: Precision::Int8, ..Candidate::default_for(PatternFamily::Tw) };
+        assert!(c.label().ends_with(",int8]"), "{}", c.label());
     }
 
     #[test]

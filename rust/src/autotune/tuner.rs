@@ -134,6 +134,7 @@ impl Tuner {
             g: win.g,
             threads: win.threads,
             micro: win.tile.micro.label(),
+            precision: win.precision.label().to_string(),
             measured_us: win_secs * 1e6,
             model_us: win_model * 1e6,
             default_us: default_meas.mean_secs * 1e6,
@@ -261,11 +262,26 @@ mod tests {
         assert_eq!(cache.len(), 4);
         let rec = cache.model_variant("tiny").expect("recommendation set");
         assert!(rec == "model_dense" || rec == "model_tw", "{rec}");
-        // every entry is resolvable back to an executable candidate
+        // every entry is resolvable back to an executable candidate and
+        // carries a valid precision label (the axis the serving-side
+        // `Precision::Auto` resolution reads back)
         for e in cache.entries() {
             assert!(e.candidate().is_some());
             assert!(e.measured_us > 0.0);
+            assert!(e.precision == "fp32" || e.precision == "int8", "{}", e.precision);
         }
+    }
+
+    #[test]
+    fn precision_axis_is_searched_and_persisted() {
+        use crate::quant::Precision;
+        let tuner = Tuner::new(quick_opts());
+        let res = tuner.tune_gemm(GemmShape::new(16, 64, 64), PatternFamily::Dense).unwrap();
+        // the winner (whichever precision it is) round-trips through the
+        // entry back into an executable candidate of that precision
+        let cand = res.entry.candidate().expect("resolvable");
+        assert_eq!(cand.precision.label(), res.entry.precision);
+        assert_ne!(cand.precision, Precision::Auto);
     }
 
     #[test]

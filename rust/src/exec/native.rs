@@ -129,7 +129,7 @@ fn residual_mlp_program(
     // implementation graph::compile uses for the zoo models
     let opts = CompileOptions {
         pattern,
-        pack: PackOptions { sparsity: spec.sparsity, g: spec.g },
+        pack: PackOptions { sparsity: spec.sparsity, g: spec.g, ..PackOptions::default() },
         seed: spec.seed,
         plan_cache: cache.cloned(),
         model_key: Some("residual-mlp".into()),
@@ -353,6 +353,7 @@ mod tests {
             g: 8,
             threads: 1,
             micro: "auto".into(),
+            precision: "fp32".into(),
             measured_us: 1.0,
             model_us: 1.0,
             default_us: 2.0,

@@ -16,6 +16,7 @@ use crate::graph::{
 };
 use crate::models::{self, ModelWorkload};
 use crate::pool::ThreadPool;
+use crate::quant::Precision;
 use crate::{bail, ensure};
 
 /// Which zoo model to serve, at serving-sized dims.  The defaults keep a
@@ -45,6 +46,10 @@ pub struct ZooSpec {
     pub fc_dim: usize,
     pub sparsity: f64,
     pub g: usize,
+    /// Numeric precision every layer packs at (`serve --precision`):
+    /// `Fp32`, `Int8` (quantize-at-pack), or `Auto` (ask the plan cache
+    /// per layer shape, f32 for untuned shapes).
+    pub precision: Precision,
     pub seed: u64,
     /// Per-slot decode capacity in steps (prompt rows + generated tokens)
     /// for streaming-capable models (nmt, decoder); sizes the KV caches.
@@ -70,6 +75,7 @@ impl ZooSpec {
             fc_dim: 256,
             sparsity: 0.75,
             g: 32,
+            precision: Precision::Fp32,
             seed: 42,
             max_steps: 32,
             variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
@@ -118,7 +124,7 @@ impl ZooSpec {
     fn compile_options(&self, plan_cache: Option<Arc<PlanCache>>) -> CompileOptions {
         CompileOptions {
             pattern: GraphPattern::Dense, // per-variant override below
-            pack: PackOptions { sparsity: self.sparsity, g: self.g },
+            pack: PackOptions { sparsity: self.sparsity, g: self.g, precision: self.precision },
             seq: self.seq,
             heads: self.heads,
             n_classes: self.n_classes,
@@ -251,6 +257,39 @@ mod tests {
                 let logits = m.run(variant, &packed).unwrap();
                 assert_eq!(logits.len(), dims.batch * dims.n_classes, "{model}/{variant}");
                 assert!(logits.iter().all(|v| v.is_finite()), "{model}/{variant}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zoo_models_serve_all_variants_at_int8() {
+        // the tentpole end-to-end claim: every pattern runs at int8
+        // through the same serving seam, and quantization error stays
+        // small relative to the f32 twin's logits
+        for model in ["bert", "nmt", "decoder"] {
+            let mut spec = tiny(model).with_variants(&["model_dense", "model_tw", "model_tvw"]);
+            spec.precision = Precision::Int8;
+            let mut fp_spec = spec.clone();
+            fp_spec.precision = Precision::Fp32;
+            let mut q = ZooBackend::new(spec, None).unwrap().load().unwrap();
+            let mut f = ZooBackend::new(fp_spec, None).unwrap().load().unwrap();
+            let dims = q.dims();
+            let packed: Vec<f32> = (0..dims.batch * dims.per_request_len())
+                .map(|i| ((i % 9) as f32 - 4.0) * 0.1)
+                .collect();
+            for variant in ["model_dense", "model_tw", "model_tvw"] {
+                let ql = q.run(variant, &packed).unwrap();
+                let fl = f.run(variant, &packed).unwrap();
+                assert_eq!(ql.len(), dims.batch * dims.n_classes, "{model}/{variant}");
+                let scale =
+                    fl.iter().fold(1.0f32, |a, &v| a.max(v.abs()));
+                for (a, b) in ql.iter().zip(&fl) {
+                    assert!(a.is_finite(), "{model}/{variant}");
+                    assert!(
+                        (a - b).abs() <= 0.12 * scale,
+                        "{model}/{variant}: int8 {a} vs f32 {b} (scale {scale})"
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,897 @@
+//! Int8 serving kernels for all four GEMM patterns (paper §VI-B/§VI-D:
+//! Int8-Dense / Int8-Sparse vs the pruning patterns).
+//!
+//! Every kernel here follows one contract:
+//!
+//! 1. The weight operand was quantized **at pack time** with per-output-
+//!    channel symmetric scales (`crate::quant`); the activation batch is
+//!    quantized **dynamically per call** with one tensor-wide scale,
+//!    staged through the workspace [`GemmScratch`] (`qa` / `qg` / `qi`)
+//!    so the steady-state serving loop performs zero allocations.
+//! 2. The multiply accumulates exactly in i32 (overflow-free while
+//!    `K <= ` [`crate::quant::I32_ACC_SAFE_K`]) and dequantizes on store:
+//!    `c[i][j] = acc * a_scale * scales[col(j)]`.
+//! 3. SIMD rides the `gemm::micro` dispatch contract: the quad-grouped
+//!    [`Int8Panel`] feeds `micro::int8_gemm_panel`, the 2:4 kernels use
+//!    `micro::int8_sel24_row`, and every path keeps a scalar i32 loop as
+//!    the always-available fallback (`PALLAS_FORCE_SCALAR` exercises it).
+//!
+//! The sparse plans ([`Int8TwPlan`] / [`Int8TvwPlan`] / [`Int8Vw24Plan`])
+//! mirror their f32 twins in `sparse::cto` with the value array narrowed
+//! to i8 — the offset tables (`row_idx` / `col_idx` / `b_sel`) stay i32,
+//! exactly as the hardware formats keep metadata at full width.  Scales
+//! are indexed by **original output column**, not condensed position, so
+//! the CTO scatter dequantizes with the same per-channel scale the
+//! quantizer derived.
+
+use super::micro::{self, Int8Panel};
+use super::{GemmScratch, TileConfig};
+use crate::pool::ThreadPool;
+use crate::quant::QuantMatrix;
+use crate::sparse::{TvwPlan, TwPlan, Vw24Plan};
+use crate::tensor::Matrix;
+
+/// Quantize activation rows into `dst` with row stride `lda >= a.cols`,
+/// zero-filling the padding tail of every row (the panel kernels read
+/// whole 4-byte quads).  One dynamic tensor-wide symmetric scale; all-zero
+/// batches get scale 1.0.  Returns the scale.
+pub fn quantize_rows_into(a: &Matrix, lda: usize, dst: &mut [i8]) -> f32 {
+    let (m, k) = (a.rows, a.cols);
+    debug_assert!(lda >= k);
+    debug_assert!(dst.len() >= m * lda);
+    let amax = a.data.iter().fold(0.0f32, |x, &v| x.max(v.abs()));
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    for i in 0..m {
+        let row = &a.data[i * k..(i + 1) * k];
+        let drow = &mut dst[i * lda..(i + 1) * lda];
+        for (d, &v) in drow.iter_mut().zip(row) {
+            *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+        for d in drow[k..].iter_mut() {
+            *d = 0;
+        }
+    }
+    scale
+}
+
+/// Row stride (bytes) of a quantized activation block with reduction
+/// depth `k`: padded up to whole quads.
+#[inline]
+pub fn quad_stride(k: usize) -> usize {
+    k.div_ceil(4) * 4
+}
+
+// ---------------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------------
+
+/// Pack a quantized dense weight into the quad-grouped panel layout for
+/// `micro::int8_gemm_panel` (NR from the resolved microkernel).
+pub fn int8_dense_panel(w: &QuantMatrix, nr: usize) -> Int8Panel {
+    Int8Panel::pack(&w.data, w.rows, w.cols, w.cols, nr)
+}
+
+/// C = A * dequant(W): int8 dense GEMM with dequantization on store.
+/// `c` is fully overwritten.  `panel` is consumed when its geometry
+/// matches the resolved microkernel; otherwise the scalar i32 loop runs
+/// against the row-major quantized weight.
+pub fn int8_matmul_tiled_into(
+    a: &Matrix,
+    w: &QuantMatrix,
+    panel: Option<&Int8Panel>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(a.cols, w.rows, "GEMM shape mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, w.cols);
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let lda = quad_stride(k);
+    scratch.ensure_int8(m * lda, 0, m * n);
+    let (qa, acc) = (&mut scratch.qa, &mut scratch.qi);
+    let a_scale = quantize_rows_into(a, lda, qa);
+    let acc = &mut acc[..m * n];
+    acc.fill(0);
+    let r = micro::resolve(cfg);
+    let panel = panel.filter(|p| p.kc == k && p.n == n);
+    let done = match panel {
+        Some(p) => micro::int8_gemm_panel(&r, m, qa, lda, p, acc, n),
+        None => false,
+    };
+    if !done {
+        int8_scalar_strided(qa, lda, &w.data, m, k, n, acc);
+    }
+    dequant_rows(acc, a_scale, &w.scales, &mut c.data);
+}
+
+/// In-place multi-threaded int8 dense GEMM: the activation batch is
+/// quantized once (serial), then row bands accumulate into per-band i32
+/// buffers on `pool` and dequantize into their disjoint slice of `c`.
+/// Returns the effective thread count (1 = serial fallback, which honours
+/// `cfg` and the panel).
+#[allow(clippy::too_many_arguments)]
+pub fn int8_matmul_parallel_into(
+    a: &Matrix,
+    w: &QuantMatrix,
+    panel: Option<&Int8Panel>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+    scratch: &mut GemmScratch,
+) -> usize {
+    assert_eq!(a.cols, w.rows, "GEMM shape mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, w.cols);
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let eff = super::dense::effective_parallel_threads(m, threads);
+    if eff == 1 {
+        int8_matmul_tiled_into(a, w, panel, c, cfg, scratch);
+        return 1;
+    }
+    let lda = quad_stride(k);
+    scratch.ensure_int8(m * lda, 0, 0);
+    let a_scale = quantize_rows_into(a, lda, &mut scratch.qa);
+    let qa = &scratch.qa;
+    let band = m.div_ceil(eff);
+    let r = micro::resolve(cfg);
+    let panel = panel.filter(|p| p.kc == k && p.n == n);
+    let scales = &w.scales;
+    let w_data = &w.data;
+    pool.for_each_chunk_mut(&mut c.data, band * n, |t, chunk| {
+        let i0 = t * band;
+        let rows = chunk.len() / n;
+        if rows == 0 {
+            return;
+        }
+        // per-band accumulator: bands are few (= threads) and short-lived
+        let mut acc = vec![0i32; rows * n];
+        let arows = &qa[i0 * lda..];
+        let done = match panel {
+            Some(p) => micro::int8_gemm_panel(&r, rows, arows, lda, p, &mut acc, n),
+            None => false,
+        };
+        if !done {
+            int8_scalar_strided(arows, lda, w_data, rows, k, n, &mut acc);
+        }
+        dequant_rows(&acc, a_scale, scales, chunk);
+    });
+    eff
+}
+
+/// Scalar i32 fallback: C (m x n) += qa (m x k, stride `lda`) * B (k x n),
+/// skipping zero activation bytes (the same short-circuit the f32
+/// fallback uses — quantized activations are frequently exactly zero).
+fn int8_scalar_strided(qa: &[i8], lda: usize, b: &[i8], m: usize, k: usize, n: usize, acc: &mut [i32]) {
+    for i in 0..m {
+        let arow = &qa[i * lda..i * lda + k];
+        let crow = &mut acc[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+}
+
+/// Dequantize whole rows on store: `out[i*n + j] = acc * a_scale * scales[j]`.
+fn dequant_rows(acc: &[i32], a_scale: f32, scales: &[f32], out: &mut [f32]) {
+    let n = scales.len();
+    for (crow, arow) in out.chunks_exact_mut(n).zip(acc.chunks_exact(n)) {
+        for ((cv, &av), &s) in crow.iter_mut().zip(arow).zip(scales) {
+            *cv = av as f32 * a_scale * s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TW (fused CTO condensation)
+// ---------------------------------------------------------------------------
+
+/// [`crate::sparse::TwPlan`] with the condensed values quantized to i8.
+/// Offset tables are shared shapes with the f32 plan; `scales` is indexed
+/// by **original output column** (length `n`).
+#[derive(Clone, Debug)]
+pub struct Int8TwPlan {
+    /// Quantized condensed values, `(tiles, kmax, g)`.
+    pub b_cond: Vec<i8>,
+    pub row_idx: Vec<i32>,
+    pub row_len: Vec<i32>,
+    pub col_idx: Vec<i32>,
+    pub tiles: usize,
+    pub kmax: usize,
+    pub g: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Per-output-channel scales (original column space, length `n`);
+    /// pruned columns keep scale 1.0.
+    pub scales: Vec<f32>,
+}
+
+/// Per-original-column symmetric scales over a condensed value array:
+/// `amax` per kept column / 127, with 1.0 for all-zero (or pruned)
+/// columns.  `at(t, kk, j)` reads the condensed value.
+fn column_scales(
+    n: usize,
+    tiles: usize,
+    g: usize,
+    col_idx: &[i32],
+    row_len: &[i32],
+    kt_extent: impl Fn(usize) -> usize,
+    at: impl Fn(usize, usize, usize) -> f32,
+) -> Vec<f32> {
+    let mut scales = vec![1.0f32; n];
+    for t in 0..tiles {
+        let kt = kt_extent(row_len[t] as usize);
+        for j in 0..g {
+            let col = col_idx[t * g + j] as usize;
+            if col >= n {
+                break; // sentinel: no more kept columns in this tile
+            }
+            let mut amax = 0.0f32;
+            for kk in 0..kt {
+                amax = amax.max(at(t, kk, j).abs());
+            }
+            if amax > 0.0 {
+                scales[col] = amax / 127.0;
+            }
+        }
+    }
+    scales
+}
+
+impl Int8TwPlan {
+    /// Quantize a condensed TW plan per original output column.
+    pub fn from_plan(plan: &TwPlan) -> Int8TwPlan {
+        let (tiles, kmax, g, n) = (plan.tiles, plan.kmax, plan.g, plan.n);
+        let scales =
+            column_scales(n, tiles, g, &plan.col_idx, &plan.row_len, |kt| kt, |t, kk, j| {
+                plan.b_cond[(t * kmax + kk) * g + j]
+            });
+        let mut b_cond = vec![0i8; plan.b_cond.len()];
+        for t in 0..tiles {
+            for j in 0..g {
+                let col = plan.col_idx[t * g + j] as usize;
+                if col >= n {
+                    break;
+                }
+                let inv = 1.0 / scales[col];
+                for kk in 0..kmax {
+                    let idx = (t * kmax + kk) * g + j;
+                    b_cond[idx] = (plan.b_cond[idx] * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        Int8TwPlan {
+            b_cond,
+            row_idx: plan.row_idx.clone(),
+            row_len: plan.row_len.clone(),
+            col_idx: plan.col_idx.clone(),
+            tiles,
+            kmax,
+            g,
+            k: plan.k,
+            n,
+            scales,
+        }
+    }
+
+    /// Dequantize back to the dense masked weight (the parity oracle).
+    pub fn decode(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.k, self.n);
+        for t in 0..self.tiles {
+            let kt = self.row_len[t] as usize;
+            for i in 0..kt {
+                let r = self.row_idx[t * self.kmax + i] as usize;
+                for j in 0..self.g {
+                    let c = self.col_idx[t * self.g + j] as usize;
+                    if c < self.n {
+                        *w.at_mut(r, c) =
+                            self.b_cond[(t * self.kmax + i) * self.g + j] as f32 * self.scales[c];
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// Bytes of the quantized condensed representation.
+    pub fn storage_bytes(&self) -> usize {
+        self.b_cond.len()
+            + self.row_idx.len() * 4
+            + self.col_idx.len() * 4
+            + self.row_len.len() * 4
+            + self.scales.len() * 4
+    }
+}
+
+/// Per-tile quad-grouped panels over the quantized condensed blocks.
+pub fn int8_tw_pack_panels(plan: &Int8TwPlan, nr: usize) -> Vec<Int8Panel> {
+    (0..plan.tiles)
+        .map(|t| {
+            let base = t * plan.kmax * plan.g;
+            Int8Panel::pack(
+                &plan.b_cond[base..base + plan.kmax * plan.g],
+                plan.kmax,
+                plan.g,
+                plan.g,
+                nr,
+            )
+        })
+        .collect()
+}
+
+/// Int8 TW fused kernel: CTO gather on the *quantized* activation block,
+/// condensed i32 GEMM, dequantizing CTO scatter.  Like the f32 kernel,
+/// only kept output columns are written — the caller zeroes `c` if pruned
+/// columns may hold stale data.
+pub fn int8_tw_matmul_into(
+    a: &Matrix,
+    plan: &Int8TwPlan,
+    panels: Option<&[Int8Panel]>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(a.cols, plan.k);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
+    let m = a.rows;
+    let bm = cfg.bm();
+    let r = micro::resolve(cfg);
+    debug_assert_eq!(plan.kmax % 4, 0, "encode rounds kmax to a multiple of 8");
+    scratch.ensure_int8(m * a.cols, bm * plan.kmax, bm * plan.g);
+    let (qa, qg, qi) = (&mut scratch.qa, &mut scratch.qg, &mut scratch.qi);
+    let a_scale = quantize_rows_into(a, a.cols, qa);
+    for t in 0..plan.tiles {
+        let kt = plan.row_len[t] as usize;
+        let width = (0..plan.g)
+            .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < plan.n)
+            .count();
+        if kt == 0 || width == 0 {
+            continue;
+        }
+        let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+        for i0 in (0..m).step_by(bm) {
+            let bm = bm.min(m - i0);
+            // CTO gather of quantized A columns (quad-padded rows)
+            for i in 0..bm {
+                let arow = &qa[(i0 + i) * a.cols..(i0 + i + 1) * a.cols];
+                let dst = &mut qg[i * plan.kmax..(i + 1) * plan.kmax];
+                for (d, &rr) in dst.iter_mut().zip(rows) {
+                    *d = arow[rr as usize];
+                }
+                for d in dst[kt..].iter_mut() {
+                    *d = 0;
+                }
+            }
+            let acc = &mut qi[..bm * plan.g];
+            acc.fill(0);
+            let mut stride = 0usize;
+            if let Some(ps) = panels {
+                let p = &ps[t];
+                if p.kc == plan.kmax
+                    && p.n == plan.g
+                    && micro::int8_gemm_panel(&r, bm, qg, plan.kmax, p, acc, plan.g)
+                {
+                    stride = plan.g;
+                }
+            }
+            if stride == 0 {
+                stride = width;
+                let b = &plan.b_cond[t * plan.kmax * plan.g..];
+                for i in 0..bm {
+                    let ag = &qg[i * plan.kmax..i * plan.kmax + kt];
+                    let crow = &mut acc[i * width..(i + 1) * width];
+                    for (kk, &av) in ag.iter().enumerate() {
+                        if av == 0 {
+                            continue;
+                        }
+                        let av = av as i32;
+                        let brow = &b[kk * plan.g..kk * plan.g + width];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv as i32;
+                        }
+                    }
+                }
+            }
+            // dequantizing CTO scatter (assign, like the f32 kernel)
+            for i in 0..bm {
+                let crow = c.row_mut(i0 + i);
+                for j in 0..width {
+                    let col = plan.col_idx[t * plan.g + j] as usize;
+                    crow[col] = acc[i * stride + j] as f32 * a_scale * plan.scales[col];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TVW (CTO + register-level 2:4)
+// ---------------------------------------------------------------------------
+
+/// [`crate::sparse::TvwPlan`] with the kept values quantized to i8.
+#[derive(Clone, Debug)]
+pub struct Int8TvwPlan {
+    /// Quantized kept values, `(tiles, kmax/2, g)`.
+    pub b_vals: Vec<i8>,
+    /// In-group positions (0..3), same shape — metadata stays i32.
+    pub b_sel: Vec<i32>,
+    pub row_idx: Vec<i32>,
+    pub row_len: Vec<i32>,
+    pub col_idx: Vec<i32>,
+    pub tiles: usize,
+    pub kmax: usize,
+    pub g: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Per-output-channel scales (original column space, length `n`).
+    pub scales: Vec<f32>,
+}
+
+impl Int8TvwPlan {
+    /// Quantize a TVW plan per original output column.
+    pub fn from_plan(plan: &TvwPlan) -> Int8TvwPlan {
+        let (tiles, kmax, g, n) = (plan.tiles, plan.kmax, plan.g, plan.n);
+        let khalf = kmax / 2;
+        let scales = column_scales(
+            n,
+            tiles,
+            g,
+            &plan.col_idx,
+            &plan.row_len,
+            |kt| kt.div_ceil(2).min(khalf),
+            |t, h, j| plan.b_vals[(t * khalf + h) * g + j],
+        );
+        let mut b_vals = vec![0i8; plan.b_vals.len()];
+        for t in 0..tiles {
+            for j in 0..g {
+                let col = plan.col_idx[t * g + j] as usize;
+                if col >= n {
+                    break;
+                }
+                let inv = 1.0 / scales[col];
+                for h in 0..khalf {
+                    let idx = (t * khalf + h) * g + j;
+                    b_vals[idx] = (plan.b_vals[idx] * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        Int8TvwPlan {
+            b_vals,
+            b_sel: plan.b_sel.clone(),
+            row_idx: plan.row_idx.clone(),
+            row_len: plan.row_len.clone(),
+            col_idx: plan.col_idx.clone(),
+            tiles,
+            kmax,
+            g,
+            k: plan.k,
+            n,
+            scales,
+        }
+    }
+
+    /// Dequantize back to the dense masked weight (the parity oracle).
+    pub fn decode(&self) -> Matrix {
+        let khalf = self.kmax / 2;
+        let mut w = Matrix::zeros(self.k, self.n);
+        for t in 0..self.tiles {
+            let kt = self.row_len[t] as usize;
+            for h in 0..khalf {
+                let grp_base = (h / 2) * 4;
+                for j in 0..self.g {
+                    let c = self.col_idx[t * self.g + j] as usize;
+                    if c >= self.n {
+                        continue;
+                    }
+                    let pos = self.b_sel[(t * khalf + h) * self.g + j] as usize;
+                    let cond_row = grp_base + pos;
+                    if cond_row >= kt {
+                        continue; // zero-padded region beyond the tile's rows
+                    }
+                    let r = self.row_idx[t * self.kmax + cond_row] as usize;
+                    let v = self.b_vals[(t * khalf + h) * self.g + j];
+                    if v != 0 {
+                        *w.at_mut(r, c) = v as f32 * self.scales[c];
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// Bytes of the quantized representation (i8 values + 2-bit metadata
+    /// as on hardware + offset tables + scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.b_vals.len()
+            + self.b_vals.len() / 4
+            + self.row_idx.len() * 4
+            + self.col_idx.len() * 4
+            + self.scales.len() * 4
+    }
+}
+
+/// Int8 TVW fused kernel: CTO gather of quantized activations + register-
+/// level 2:4 selection in i32, dequantizing scatter.  `c` is fully
+/// overwritten.
+pub fn int8_tvw_matmul_into(
+    a: &Matrix,
+    plan: &Int8TvwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(a.cols, plan.k);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
+    let m = a.rows;
+    let khalf = plan.kmax / 2;
+    let bm = cfg.bm();
+    let r = micro::resolve(cfg);
+    c.data.fill(0.0);
+    scratch.ensure_int8(m * a.cols, plan.kmax, plan.g);
+    let (qa, qg, qi) = (&mut scratch.qa, &mut scratch.qg, &mut scratch.qi);
+    let a_scale = quantize_rows_into(a, a.cols, qa);
+    for i0 in (0..m).step_by(bm) {
+        let i1 = (i0 + bm).min(m);
+        for t in 0..plan.tiles {
+            let kt = plan.row_len[t] as usize;
+            let width = (0..plan.g)
+                .take_while(|&j| (plan.col_idx[t * plan.g + j] as usize) < plan.n)
+                .count();
+            if kt == 0 || width == 0 {
+                continue;
+            }
+            let rows = &plan.row_idx[t * plan.kmax..t * plan.kmax + kt];
+            let groups_max = kt.div_ceil(4).min(plan.kmax / 4);
+            for i in i0..i1 {
+                let arow = &qa[i * a.cols..(i + 1) * a.cols];
+                for (d, &rr) in qg[..kt].iter_mut().zip(rows) {
+                    *d = arow[rr as usize];
+                }
+                for d in qg[kt..plan.kmax].iter_mut() {
+                    *d = 0;
+                }
+                let acc = &mut qi[..width];
+                acc.fill(0);
+                for grp in 0..groups_max {
+                    let a4 = [
+                        qg[grp * 4] as i32,
+                        qg[grp * 4 + 1] as i32,
+                        qg[grp * 4 + 2] as i32,
+                        qg[grp * 4 + 3] as i32,
+                    ];
+                    if a4 == [0; 4] {
+                        continue;
+                    }
+                    let base0 = (t * khalf + grp * 2) * plan.g;
+                    let base1 = (t * khalf + grp * 2 + 1) * plan.g;
+                    let v0 = &plan.b_vals[base0..base0 + width];
+                    let s0 = &plan.b_sel[base0..base0 + width];
+                    let v1 = &plan.b_vals[base1..base1 + width];
+                    let s1 = &plan.b_sel[base1..base1 + width];
+                    if micro::int8_sel24_row(&r, &a4, v0, s0, v1, s1, acc) {
+                        continue;
+                    }
+                    for j in 0..width {
+                        acc[j] +=
+                            a4[s0[j] as usize] * v0[j] as i32 + a4[s1[j] as usize] * v1[j] as i32;
+                    }
+                }
+                let crow = c.row_mut(i);
+                for j in 0..width {
+                    let col = plan.col_idx[t * plan.g + j] as usize;
+                    crow[col] += acc[j] as f32 * a_scale * plan.scales[col];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2:4 (VW)
+// ---------------------------------------------------------------------------
+
+/// [`crate::sparse::Vw24Plan`] with the kept values quantized to i8.
+#[derive(Clone, Debug)]
+pub struct Int8Vw24Plan {
+    /// `(k/2, n)` quantized kept values.
+    pub b_vals: Vec<i8>,
+    /// `(k/2, n)` in-group positions (0..3).
+    pub b_sel: Vec<i32>,
+    pub k: usize,
+    pub n: usize,
+    /// Per-output-channel scales (length `n`).
+    pub scales: Vec<f32>,
+}
+
+impl Int8Vw24Plan {
+    /// Quantize a 2:4 plan per output column.
+    pub fn from_plan(plan: &Vw24Plan) -> Int8Vw24Plan {
+        let (k, n) = (plan.k, plan.n);
+        let khalf = k / 2;
+        let mut scales = vec![1.0f32; n];
+        for (c, s) in scales.iter_mut().enumerate() {
+            let mut amax = 0.0f32;
+            for h in 0..khalf {
+                amax = amax.max(plan.b_vals[h * n + c].abs());
+            }
+            if amax > 0.0 {
+                *s = amax / 127.0;
+            }
+        }
+        let mut b_vals = vec![0i8; plan.b_vals.len()];
+        for h in 0..khalf {
+            for c in 0..n {
+                let q = (plan.b_vals[h * n + c] / scales[c]).round().clamp(-127.0, 127.0);
+                b_vals[h * n + c] = q as i8;
+            }
+        }
+        Int8Vw24Plan { b_vals, b_sel: plan.b_sel.clone(), k, n, scales }
+    }
+
+    /// Dequantize back to the dense masked weight (the parity oracle).
+    pub fn decode(&self) -> Matrix {
+        let khalf = self.k / 2;
+        let mut w = Matrix::zeros(self.k, self.n);
+        for c in 0..self.n {
+            for h in 0..khalf {
+                let r = (h / 2) * 4 + self.b_sel[h * self.n + c] as usize;
+                *w.at_mut(r, c) = self.b_vals[h * self.n + c] as f32 * self.scales[c];
+            }
+        }
+        w
+    }
+
+    /// Bytes of the quantized representation (i8 values + 2-bit metadata
+    /// as on hardware + scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.b_vals.len() + self.b_vals.len() / 4 + self.scales.len() * 4
+    }
+}
+
+/// Int8 2:4 kernel: register-level selection in i32, one activation row's
+/// accumulator at a time, dequantized on store.  `c` is fully overwritten.
+pub fn int8_vw24_matmul_into(
+    a: &Matrix,
+    plan: &Int8Vw24Plan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(a.cols, plan.k);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, plan.n);
+    let (m, n) = (a.rows, plan.n);
+    let groups = plan.k / 4;
+    let r = micro::resolve(cfg);
+    scratch.ensure_int8(m * a.cols, 0, n);
+    let (qa, qi) = (&mut scratch.qa, &mut scratch.qi);
+    let a_scale = quantize_rows_into(a, a.cols, qa);
+    for i in 0..m {
+        let arow = &qa[i * a.cols..(i + 1) * a.cols];
+        let acc = &mut qi[..n];
+        acc.fill(0);
+        for grp in 0..groups {
+            let a4 = [
+                arow[grp * 4] as i32,
+                arow[grp * 4 + 1] as i32,
+                arow[grp * 4 + 2] as i32,
+                arow[grp * 4 + 3] as i32,
+            ];
+            if a4 == [0; 4] {
+                continue;
+            }
+            let v0 = &plan.b_vals[(grp * 2) * n..(grp * 2 + 1) * n];
+            let s0 = &plan.b_sel[(grp * 2) * n..(grp * 2 + 1) * n];
+            let v1 = &plan.b_vals[(grp * 2 + 1) * n..(grp * 2 + 2) * n];
+            let s1 = &plan.b_sel[(grp * 2 + 1) * n..(grp * 2 + 2) * n];
+            if micro::int8_sel24_row(&r, &a4, v0, s0, v1, s1, acc) {
+                continue;
+            }
+            for j in 0..n {
+                acc[j] += a4[s0[j] as usize] * v0[j] as i32 + a4[s1[j] as usize] * v1[j] as i32;
+            }
+        }
+        let crow = c.row_mut(i);
+        for ((cv, &av), &s) in crow.iter_mut().zip(acc.iter()).zip(&plan.scales) {
+            *cv = av as f32 * a_scale * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{matmul_naive, MicroCfg};
+    use crate::sparse::{prune_tvw, prune_tw, prune_vw};
+    use crate::util::Rng;
+
+    fn mat(r: usize, c: usize, seed: u64) -> Matrix {
+        Matrix::randn(r, c, &mut Rng::new(seed))
+    }
+
+    /// Quantization-aware tolerance for C = A * W at reduction depth `k`:
+    /// weight error `w_eb` per element, activation error `a_eb`, operand
+    /// magnitudes bounded by the oracle inputs.
+    fn tolerance(a: &Matrix, w: &Matrix, a_eb: f32, w_eb: f32) -> f32 {
+        let a_amax = a.data.iter().fold(0.0f32, |x, &v| x.max(v.abs()));
+        let w_amax = w.data.iter().fold(0.0f32, |x, &v| x.max(v.abs()));
+        let k = a.cols as f32;
+        k * (w_eb * a_amax + a_eb * w_amax + a_eb * w_eb) + 1e-5
+    }
+
+    #[test]
+    fn int8_dense_matches_fp32_within_quant_error() {
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (9, 33, 21), (16, 64, 48)] {
+            let a = mat(m, k, 300 + m as u64);
+            let w = mat(k, n, 400 + n as u64);
+            let q = QuantMatrix::quantize(&w);
+            let mut c = Matrix::zeros(m, n);
+            let mut scratch = GemmScratch::new();
+            int8_matmul_tiled_into(&a, &q, None, &mut c, &TileConfig::dense_default(), &mut scratch);
+            let want = matmul_naive(&a, &w);
+            let a_eb = a.data.iter().fold(0.0f32, |x, &v| x.max(v.abs())) / 254.0;
+            let tol = tolerance(&a, &w, a_eb, q.max_error_bound());
+            assert!(c.max_abs_diff(&want) <= tol, "{m}x{k}x{n}: {} > {tol}", c.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn int8_dense_panel_and_scalar_agree_exactly() {
+        let cfg = TileConfig::dense_default();
+        let r = micro::resolve(&cfg);
+        if !r.is_simd() {
+            return; // scalar host: single path, nothing to cross-check
+        }
+        let (m, k, n) = (6usize, 35usize, 29usize);
+        let a = mat(m, k, 301);
+        let q = QuantMatrix::quantize(&mat(k, n, 401));
+        let panel = int8_dense_panel(&q, r.nr);
+        let mut scratch = GemmScratch::new();
+        let mut simd = Matrix::zeros(m, n);
+        int8_matmul_tiled_into(&a, &q, Some(&panel), &mut simd, &cfg, &mut scratch);
+        let mut scalar = Matrix::zeros(m, n);
+        let scfg = cfg.with_micro(MicroCfg::Scalar);
+        int8_matmul_tiled_into(&a, &q, None, &mut scalar, &scfg, &mut scratch);
+        // both paths share the i32 accumulation and the same scales: the
+        // dequantized outputs are bit-identical
+        assert_eq!(simd.data, scalar.data);
+    }
+
+    #[test]
+    fn int8_dense_parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let (m, k, n) = (64usize, 32usize, 24usize);
+        let a = mat(m, k, 302);
+        let q = QuantMatrix::quantize(&mat(k, n, 402));
+        let cfg = TileConfig::dense_default();
+        let mut scratch = GemmScratch::new();
+        let mut serial = Matrix::zeros(m, n);
+        int8_matmul_tiled_into(&a, &q, None, &mut serial, &cfg, &mut scratch);
+        let mut par = Matrix::zeros(m, n);
+        let eff =
+            int8_matmul_parallel_into(&a, &q, None, &mut par, &cfg, 4, &pool, &mut scratch);
+        assert_eq!(eff, 4);
+        assert_eq!(par.data, serial.data);
+    }
+
+    #[test]
+    fn int8_tw_matches_masked_oracle_within_quant_error() {
+        let (k, n, g) = (64usize, 48usize, 16usize);
+        let w = mat(k, n, 403);
+        let tw = prune_tw(&w, 0.75, g, None);
+        let plan = crate::sparse::TwPlan::encode(&w, &tw);
+        let qplan = Int8TwPlan::from_plan(&plan);
+        let wd = plan.decode(); // the masked f32 oracle weight
+        let a = mat(9, k, 303);
+        let mut c = Matrix::zeros(9, n);
+        let mut scratch = GemmScratch::new();
+        int8_tw_matmul_into(&a, &qplan, None, &mut c, &TileConfig::tw_default(), &mut scratch);
+        let want = matmul_naive(&a, &wd);
+        let a_eb = a.data.iter().fold(0.0f32, |x, &v| x.max(v.abs())) / 254.0;
+        let w_eb = qplan.scales.iter().fold(0.0f32, |x, &s| x.max(s)) * 0.5;
+        let tol = tolerance(&a, &wd, a_eb, w_eb);
+        assert!(c.max_abs_diff(&want) <= tol, "{} > {tol}", c.max_abs_diff(&want));
+        // panel path agrees exactly with the scalar i32 path
+        let r = micro::resolve(&TileConfig::tw_default());
+        if r.is_simd() {
+            let panels = int8_tw_pack_panels(&qplan, r.nr);
+            let mut cp = Matrix::zeros(9, n);
+            int8_tw_matmul_into(
+                &a,
+                &qplan,
+                Some(&panels),
+                &mut cp,
+                &TileConfig::tw_default(),
+                &mut scratch,
+            );
+            assert_eq!(cp.data, c.data);
+        }
+    }
+
+    #[test]
+    fn int8_tvw_matches_masked_oracle_within_quant_error() {
+        let (k, n, g) = (64usize, 32usize, 16usize);
+        let w = mat(k, n, 404);
+        let (tw, mask) = prune_tvw(&w, 0.5, g);
+        let plan = crate::sparse::TvwPlan::encode(&w, &tw, &mask);
+        let qplan = Int8TvwPlan::from_plan(&plan);
+        let wd = plan.decode();
+        let a = mat(7, k, 304);
+        let mut c = Matrix::zeros(7, n);
+        let mut scratch = GemmScratch::new();
+        int8_tvw_matmul_into(&a, &qplan, &mut c, &TileConfig::tvw_default(), &mut scratch);
+        let want = matmul_naive(&a, &wd);
+        let a_eb = a.data.iter().fold(0.0f32, |x, &v| x.max(v.abs())) / 254.0;
+        let w_eb = qplan.scales.iter().fold(0.0f32, |x, &s| x.max(s)) * 0.5;
+        let tol = tolerance(&a, &wd, a_eb, w_eb);
+        assert!(c.max_abs_diff(&want) <= tol, "{} > {tol}", c.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn int8_vw24_matches_masked_oracle_within_quant_error() {
+        let (k, n) = (64usize, 40usize);
+        let w = mat(k, n, 405);
+        let mask = prune_vw(&w, 0.5, 4);
+        let plan = crate::sparse::Vw24Plan::encode(&w, &mask).unwrap();
+        let qplan = Int8Vw24Plan::from_plan(&plan);
+        let wd = plan.decode();
+        let a = mat(5, k, 305);
+        let mut c = Matrix::zeros(5, n);
+        let mut scratch = GemmScratch::new();
+        int8_vw24_matmul_into(&a, &qplan, &mut c, &TileConfig::vw_default(), &mut scratch);
+        let want = matmul_naive(&a, &wd);
+        let a_eb = a.data.iter().fold(0.0f32, |x, &v| x.max(v.abs())) / 254.0;
+        let w_eb = qplan.scales.iter().fold(0.0f32, |x, &s| x.max(s)) * 0.5;
+        let tol = tolerance(&a, &wd, a_eb, w_eb);
+        assert!(c.max_abs_diff(&want) <= tol, "{} > {tol}", c.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn int8_plans_decode_close_to_f32_plans() {
+        let (k, n, g) = (32usize, 32usize, 8usize);
+        let w = mat(k, n, 406);
+        let tw = prune_tw(&w, 0.75, g, None);
+        let plan = crate::sparse::TwPlan::encode(&w, &tw);
+        let qplan = Int8TwPlan::from_plan(&plan);
+        let (f, q) = (plan.decode(), qplan.decode());
+        for c in 0..n {
+            for r in 0..k {
+                let d = (f.at(r, c) - q.at(r, c)).abs();
+                assert!(d <= qplan.scales[c] * 0.5 + 1e-6, "({r},{c}) d={d}");
+            }
+        }
+        // quantized storage is roughly a quarter of the f32 plan's values
+        assert!(qplan.storage_bytes() < plan.storage_bytes());
+    }
+
+    #[test]
+    fn quantize_rows_pads_quads_with_zeros() {
+        let a = mat(3, 7, 407); // stride rounds 7 -> 8
+        let lda = quad_stride(7);
+        assert_eq!(lda, 8);
+        let mut dst = vec![99i8; 3 * lda];
+        let scale = quantize_rows_into(&a, lda, &mut dst);
+        assert!(scale > 0.0);
+        for i in 0..3 {
+            assert_eq!(dst[i * lda + 7], 0, "row {i} pad");
+        }
+        let zero = Matrix::zeros(2, 4);
+        let mut dz = vec![5i8; 8];
+        assert_eq!(quantize_rows_into(&zero, 4, &mut dz), 1.0);
+        assert!(dz.iter().all(|&x| x == 0));
+    }
+}

@@ -9,7 +9,7 @@
 
 use core::arch::x86_64::*;
 
-use super::panel::PackedPanel;
+use super::panel::{Int8Panel, PackedPanel};
 
 /// Snap an arbitrary (MR, NR-vectors) request onto a compiled kernel
 /// instantiation: NRV in {1, 2}, MR in {1, 2, 4, 8}, capped at MR = 4
@@ -220,6 +220,189 @@ pub(super) unsafe fn gemm_panel(
                 }
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Int8 microkernels: i8 x i8 -> i32 with the `maddubs`/`madd` pair.
+//
+// AVX2 has no signed-by-signed byte multiply; `vpmaddubsw` multiplies
+// *unsigned* bytes by signed bytes.  The standard identity rescues it:
+// `a * b == |a| * (b * sign(a))`, so each A quad is broadcast, `vpabsb`'d
+// into the unsigned operand, and `vpsignb` transfers A's sign onto B.
+// Values are clamped to +/-127 at quantization time, so the i16 pair sums
+// stay <= 2 * 127 * 127 = 32258 and `vpmaddubsw`'s saturation never
+// engages; `vpmaddwd` against ones then widens the pairs into the i32
+// accumulator lanes.  This is exactly the two-instruction emulation of
+// AVX-512 VNNI's `vpdpbusd` (which `gemm/micro/avx512.rs` uses directly
+// when the CPU has it).
+// ---------------------------------------------------------------------
+
+macro_rules! def_int8_kernel {
+    ($name:ident, $mr:expr, $nrv:expr) => {
+        /// One register tile: C_i32[MR x 8*NRV] += A_q[MR x 4*kq] * the
+        /// quad-grouped panel bytes at `b`.  A rows stride by `lda` bytes
+        /// and must be zero-padded to the panel's quad extent; `b` steps
+        /// `nr * 4` bytes per quad.
+        #[target_feature(enable = "avx2")]
+        unsafe fn $name(
+            a: *const i8,
+            lda: usize,
+            b: *const i8,
+            c: *mut i32,
+            ldc: usize,
+            kq: usize,
+            nr: usize,
+        ) {
+            const MR: usize = $mr;
+            const NRV: usize = $nrv;
+            let ones = _mm256_set1_epi16(1);
+            let mut acc = [[_mm256_setzero_si256(); NRV]; MR];
+            let mut bp = b;
+            for q in 0..kq {
+                let mut bv = [_mm256_setzero_si256(); NRV];
+                for (v, slot) in bv.iter_mut().enumerate() {
+                    *slot = _mm256_loadu_si256(bp.add(32 * v) as *const __m256i);
+                }
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let quad = (a.add(i * lda + q * 4) as *const i32).read_unaligned();
+                    let ab = _mm256_set1_epi32(quad);
+                    let ua = _mm256_abs_epi8(ab);
+                    for (cell, bvec) in row.iter_mut().zip(bv.iter()) {
+                        let sb = _mm256_sign_epi8(*bvec, ab);
+                        let pairs = _mm256_maddubs_epi16(ua, sb);
+                        *cell = _mm256_add_epi32(*cell, _mm256_madd_epi16(pairs, ones));
+                    }
+                }
+                bp = bp.add(nr * 4);
+            }
+            for (i, row) in acc.iter().enumerate() {
+                for (v, cell) in row.iter().enumerate() {
+                    let cp = c.add(i * ldc + 8 * v) as *mut __m256i;
+                    _mm256_storeu_si256(cp, _mm256_add_epi32(_mm256_loadu_si256(cp), *cell));
+                }
+            }
+        }
+    };
+}
+
+def_int8_kernel!(q1x1, 1, 1);
+def_int8_kernel!(q2x1, 2, 1);
+def_int8_kernel!(q4x1, 4, 1);
+def_int8_kernel!(q8x1, 8, 1);
+def_int8_kernel!(q1x2, 1, 2);
+def_int8_kernel!(q2x2, 2, 2);
+def_int8_kernel!(q4x2, 4, 2);
+
+/// Route to the matching int8 instantiation; `(mr, nrv)` must come from
+/// [`clamp_block`] (the wildcard arm is the remaining (1, 2) case).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn int8_kernel(
+    mr: usize,
+    nrv: usize,
+    a: *const i8,
+    lda: usize,
+    b: *const i8,
+    c: *mut i32,
+    ldc: usize,
+    kq: usize,
+    nr: usize,
+) {
+    match (mr, nrv) {
+        (8, 1) => q8x1(a, lda, b, c, ldc, kq, nr),
+        (4, 1) => q4x1(a, lda, b, c, ldc, kq, nr),
+        (2, 1) => q2x1(a, lda, b, c, ldc, kq, nr),
+        (1, 1) => q1x1(a, lda, b, c, ldc, kq, nr),
+        (4, 2) => q4x2(a, lda, b, c, ldc, kq, nr),
+        (2, 2) => q2x2(a, lda, b, c, ldc, kq, nr),
+        _ => q1x2(a, lda, b, c, ldc, kq, nr),
+    }
+}
+
+/// C_i32 (m x panel.n, row stride `ldc`) += A_q (m x kc i8, row stride
+/// `lda` with rows zero-padded to `panel.kq * 4` bytes) * the packed
+/// strips of `panel`.  The full reduction runs in one pass — at serving
+/// M the i8 operands of one strip stay L1-resident, and a single pass
+/// keeps the i32 accumulators in registers for their whole lifetime.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn int8_gemm_panel(
+    m: usize,
+    a: *const i8,
+    lda: usize,
+    panel: &Int8Panel,
+    c: *mut i32,
+    ldc: usize,
+    mr: usize,
+) {
+    let nr = panel.nr;
+    let kq = panel.kq;
+    let (mr, nrv) = clamp_block(mr, nr / 8);
+    let data = panel.data.as_ptr();
+    for s in 0..panel.strips() {
+        let j0 = s * nr;
+        let bp = data.add(s * kq * nr * 4);
+        if j0 + nr <= panel.n {
+            let mut i = 0;
+            while i + mr <= m {
+                int8_kernel(mr, nrv, a.add(i * lda), lda, bp, c.add(i * ldc + j0), ldc, kq, nr);
+                i += mr;
+            }
+            while i < m {
+                int8_kernel(1, nrv, a.add(i * lda), lda, bp, c.add(i * ldc + j0), ldc, kq, nr);
+                i += 1;
+            }
+        } else {
+            // zero-padded tail strip: compute the full width into a stack
+            // tile, add only the valid lanes
+            let w = panel.n - j0;
+            for i in 0..m {
+                let mut tile = [0i32; 16];
+                int8_kernel(1, nrv, a.add(i * lda), lda, bp, tile.as_mut_ptr(), 16, kq, nr);
+                let crow = c.add(i * ldc + j0);
+                for (jj, v) in tile.iter().take(w).enumerate() {
+                    *crow.add(jj) += *v;
+                }
+            }
+        }
+    }
+}
+
+/// Int8 twin of [`sel24_row`]: `c[j] += a4[s0[j]] * v0[j] + a4[s1[j]] *
+/// v1[j]` with i32 accumulators.  The gathered A quad arrives widened to
+/// i32; `vpermd` against the duplicated quad expands the 2-bit metadata,
+/// and the compressed i8 value rows are sign-extended with `vpmovsxbd`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn int8_sel24_row(
+    a4: *const i32,
+    v0: *const i8,
+    s0: *const i32,
+    v1: *const i8,
+    s1: *const i32,
+    c: *mut i32,
+    n: usize,
+) {
+    let a128 = _mm_loadu_si128(a4 as *const __m128i);
+    let av = _mm256_set_m128i(a128, a128);
+    let mut j = 0;
+    while j + 8 <= n {
+        let sel0 = _mm256_loadu_si256(s0.add(j) as *const __m256i);
+        let sel1 = _mm256_loadu_si256(s1.add(j) as *const __m256i);
+        let x0 = _mm256_permutevar8x32_epi32(av, sel0);
+        let x1 = _mm256_permutevar8x32_epi32(av, sel1);
+        let w0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(v0.add(j) as *const __m128i));
+        let w1 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(v1.add(j) as *const __m128i));
+        let mut acc = _mm256_loadu_si256(c.add(j) as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(x0, w0));
+        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(x1, w1));
+        _mm256_storeu_si256(c.add(j) as *mut __m256i, acc);
+        j += 8;
+    }
+    while j < n {
+        let q0 = (*s0.add(j) as usize) & 3;
+        let q1 = (*s1.add(j) as usize) & 3;
+        *c.add(j) += *a4.add(q0) * *v0.add(j) as i32 + *a4.add(q1) * *v1.add(j) as i32;
+        j += 1;
     }
 }
 

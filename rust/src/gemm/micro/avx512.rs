@@ -10,7 +10,7 @@
 
 use core::arch::x86_64::*;
 
-use super::panel::PackedPanel;
+use super::panel::{Int8Panel, PackedPanel};
 
 /// Snap MR onto a compiled instantiation (NR is fixed at 16 lanes).
 pub(super) fn clamp_mr(mr: usize) -> usize {
@@ -184,4 +184,148 @@ pub(super) unsafe fn gemm_panel(
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 path (VNNI).
+//
+// `vpdpbusd` multiplies u8 x i8 and accumulates pair-of-pairs into i32
+// lanes, so the signed A quad is split as a * b == |a| * (b * sign(a)):
+// |a| rides the unsigned operand, and b is conditionally negated under
+// the byte-sign mask of a (AVX-512 has no `vpsignb`; a masked subtract
+// from zero does the same and zeros nothing — where a == 0, |a| = 0
+// already kills the product).  Both the sign mask and the fallback-free
+// negation need AVX512-BW, which every VNNI part ships; the driver
+// returns `false` when the running CPU lacks either feature and the
+// dispatcher drops to the AVX2 int8 kernel instead.
+// ---------------------------------------------------------------------------
+
+macro_rules! def_int8_kernel {
+    ($name:ident, $mr:expr) => {
+        /// One register tile: C[MR x 16] (i32) += A[MR x kq quads] * strip.
+        #[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+        unsafe fn $name(
+            a: *const i8,
+            lda: usize,
+            b: *const i8,
+            c: *mut i32,
+            ldc: usize,
+            kq: usize,
+            nr: usize,
+        ) {
+            const MR: usize = $mr;
+            let zero = _mm512_setzero_si512();
+            let mut acc = [zero; MR];
+            let mut bp = b;
+            for q in 0..kq {
+                let bv = _mm512_loadu_si512(bp as *const _);
+                for (i, cell) in acc.iter_mut().enumerate() {
+                    let quad = (a.add(i * lda + q * 4) as *const i32).read_unaligned();
+                    let ab = _mm512_set1_epi32(quad);
+                    let ua = _mm512_abs_epi8(ab);
+                    let neg = _mm512_movepi8_mask(ab);
+                    let sb = _mm512_mask_sub_epi8(bv, neg, zero, bv);
+                    *cell = _mm512_dpbusd_epi32(*cell, ua, sb);
+                }
+                bp = bp.add(nr * 4);
+            }
+            for (i, cell) in acc.iter().enumerate() {
+                let cp = c.add(i * ldc);
+                let sum = _mm512_add_epi32(_mm512_loadu_si512(cp as *const _), *cell);
+                _mm512_storeu_si512(cp as *mut _, sum);
+            }
+        }
+    };
+}
+
+def_int8_kernel!(q1, 1);
+def_int8_kernel!(q2, 2);
+def_int8_kernel!(q4, 4);
+def_int8_kernel!(q8, 8);
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn int8_kernel(
+    mr: usize,
+    a: *const i8,
+    lda: usize,
+    b: *const i8,
+    c: *mut i32,
+    ldc: usize,
+    kq: usize,
+    nr: usize,
+) {
+    match mr {
+        8 => q8(a, lda, b, c, ldc, kq, nr),
+        4 => q4(a, lda, b, c, ldc, kq, nr),
+        2 => q2(a, lda, b, c, ldc, kq, nr),
+        _ => q1(a, lda, b, c, ldc, kq, nr),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn int8_strip(
+    m: usize,
+    a: *const i8,
+    lda: usize,
+    b: *const i8,
+    c: *mut i32,
+    ldc: usize,
+    kq: usize,
+    nr: usize,
+    mr: usize,
+) {
+    let mut i = 0;
+    while i + mr <= m {
+        int8_kernel(mr, a.add(i * lda), lda, b, c.add(i * ldc), ldc, kq, nr);
+        i += mr;
+    }
+    while i < m {
+        int8_kernel(1, a.add(i * lda), lda, b, c.add(i * ldc), ldc, kq, nr);
+        i += 1;
+    }
+}
+
+/// C (m x panel.n, i32) += A (m x kq quads) * panel, dequant elsewhere.
+///
+/// A rows must be zero-padded to `panel.kq * 4` bytes (the kernel reads
+/// whole 4-byte quads).  Returns `false` without touching `c` when the
+/// running CPU lacks VNNI (or BW); the caller then retries on the AVX2
+/// int8 kernel, which any x86 machine reaching this module supports.
+pub(super) unsafe fn int8_gemm_panel(
+    m: usize,
+    a: *const i8,
+    lda: usize,
+    panel: &Int8Panel,
+    c: *mut i32,
+    ldc: usize,
+    mr: usize,
+) -> bool {
+    if !std::arch::is_x86_feature_detected!("avx512vnni")
+        || !std::arch::is_x86_feature_detected!("avx512bw")
+    {
+        return false;
+    }
+    let nr = panel.nr;
+    let mr = clamp_mr(mr);
+    let data = panel.data.as_ptr();
+    for p in 0..panel.strips() {
+        let j0 = p * nr;
+        let bp = data.add(p * panel.kq * nr * 4);
+        if j0 + nr <= panel.n {
+            int8_strip(m, a, lda, bp, c.add(j0), ldc, panel.kq, nr, mr);
+        } else {
+            let w = panel.n - j0;
+            for i in 0..m {
+                let mut tile = [0i32; 16];
+                int8_kernel(1, a.add(i * lda), lda, bp, tile.as_mut_ptr(), 16, panel.kq, nr);
+                let crow = c.add(i * ldc + j0);
+                for (jj, v) in tile.iter().take(w).enumerate() {
+                    *crow.add(jj) += *v;
+                }
+            }
+        }
+    }
+    true
 }

@@ -30,7 +30,7 @@ mod avx512;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 
-pub use panel::PackedPanel;
+pub use panel::{Int8Panel, PackedPanel};
 
 use std::sync::OnceLock;
 
@@ -464,6 +464,93 @@ pub fn sel24_row(
     }
 }
 
+/// C (m x panel.n, i32, row stride `ldc`) += quantized A (m rows of
+/// `panel.kq * 4` zero-padded i8 bytes, row stride `lda`) * the packed
+/// quad-strips of `panel`.  The i32 accumulation is exact; the caller
+/// dequantizes on store.  Returns `false` (with `c` untouched) when `r`
+/// is scalar, compiled out, or the panel's strip width does not match
+/// the resolved NR — callers then run the scalar i32 loop.
+///
+/// On an AVX-512 resolve the VNNI kernel is tried first; machines
+/// without `avx512vnni` drop to the AVX2 `maddubs` pair kernel, which
+/// handles the 16-lane strips as two ymm vectors.
+pub fn int8_gemm_panel(
+    r: &Resolved,
+    m: usize,
+    a: &[i8],
+    lda: usize,
+    panel: &Int8Panel,
+    c: &mut [i32],
+    ldc: usize,
+) -> bool {
+    if !supported(r) || panel.nr != r.nr {
+        return false;
+    }
+    if m == 0 || panel.n == 0 || panel.kq == 0 {
+        return true;
+    }
+    debug_assert!(lda >= panel.kq * 4, "A rows must be padded to whole quads");
+    debug_assert!((m - 1) * lda + panel.kq * 4 <= a.len());
+    debug_assert!((m - 1) * ldc + panel.n <= c.len());
+    match r.isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            avx2::int8_gemm_panel(m, a.as_ptr(), lda, panel, c.as_mut_ptr(), ldc, r.mr);
+            true
+        },
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+        Isa::Avx512 => unsafe {
+            let (ap, cp) = (a.as_ptr(), c.as_mut_ptr());
+            if !avx512::int8_gemm_panel(m, ap, lda, panel, cp, ldc, r.mr) {
+                avx2::int8_gemm_panel(m, ap, lda, panel, cp, ldc, r.mr);
+            }
+            true
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::int8_gemm_panel(m, a.as_ptr(), lda, panel, c.as_mut_ptr(), ldc, r.mr);
+            true
+        },
+        _ => false,
+    }
+}
+
+/// Int8 analogue of [`sel24_row`]: `c[j] += a4[s0[j]] * v0[j] +
+/// a4[s1[j]] * v1[j]` with `a4` already quantized to i32 lanes and the
+/// plan values as i8.  Same support surface as the f32 kernel (x86
+/// shuffle path only); returns `false` for the scalar i32 loop.
+pub fn int8_sel24_row(
+    r: &Resolved,
+    a4: &[i32; 4],
+    v0: &[i8],
+    s0: &[i32],
+    v1: &[i8],
+    s1: &[i32],
+    c: &mut [i32],
+) -> bool {
+    if !supported(r) {
+        return false;
+    }
+    let n = c.len();
+    debug_assert!(v0.len() >= n && s0.len() >= n && v1.len() >= n && s1.len() >= n);
+    match r.isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 | Isa::Avx512 => unsafe {
+            avx2::int8_sel24_row(
+                a4.as_ptr(),
+                v0.as_ptr(),
+                s0.as_ptr(),
+                v1.as_ptr(),
+                s1.as_ptr(),
+                c.as_mut_ptr(),
+                n,
+            );
+            true
+        },
+        _ => false,
+    }
+}
+
 /// Cache-blocked SIMD driver for the dense pattern: bm x bk blocking
 /// outside, register microkernels inside.  `panel` is consumed when its
 /// geometry matches the resolved NR and the operand shape; otherwise B
@@ -618,6 +705,84 @@ mod tests {
         let panel = PackedPanel::pack(&b, 4, 8, 8, r.nr * 2);
         let mut c = vec![0.0f32; 8];
         assert!(!gemm_panel(&r, 1, 0, 4, &[0.0; 4], 4, &panel, &mut c, 8));
+    }
+
+    #[test]
+    fn int8_panel_kernel_matches_scalar_i32_reference() {
+        let r = resolve_with(MicroCfg::Auto, active_isa());
+        if !supported(&r) {
+            return;
+        }
+        let mut rng = Rng::new(904);
+        // K and N deliberately off the quad/strip grid: padding in play
+        for &(m, kt, n) in &[(1usize, 3usize, 1usize), (5, 7, 9), (6, 13, 19), (9, 32, 40)] {
+            let kq = kt.div_ceil(4);
+            let lda = kq * 4;
+            let mut a = vec![0i8; m * lda];
+            for i in 0..m {
+                for kk in 0..kt {
+                    a[i * lda + kk] = (rng.below(255) as i32 - 127) as i8;
+                }
+            }
+            let b: Vec<i8> = (0..kt * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let panel = Int8Panel::pack(&b, kt, n, n, r.nr);
+            let mut c = vec![0i32; m * n];
+            assert!(int8_gemm_panel(&r, m, &a, lda, &panel, &mut c, n));
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0i32;
+                    for kk in 0..kt {
+                        want += a[i * lda + kk] as i32 * b[kk * n + j] as i32;
+                    }
+                    assert_eq!(c[i * n + j], want, "{m}x{kt}x{n} at ({i},{j})");
+                }
+            }
+        }
+        // strip-width mismatch refuses rather than mis-indexing
+        let b = vec![0i8; 4 * 8];
+        let panel = Int8Panel::pack(&b, 4, 8, 8, r.nr * 2);
+        let mut c = vec![0i32; 8];
+        assert!(!int8_gemm_panel(&r, 1, &[0i8; 4], 4, &panel, &mut c, 8));
+    }
+
+    #[test]
+    fn int8_kernel_accumulates_into_existing_c() {
+        let r = resolve_with(MicroCfg::Auto, active_isa());
+        if !supported(&r) {
+            return;
+        }
+        let (m, kt, n) = (2usize, 8usize, 5usize);
+        let a = vec![1i8; m * kt];
+        let b = vec![2i8; kt * n];
+        let panel = Int8Panel::pack(&b, kt, n, n, r.nr);
+        let mut c = vec![100i32; m * n];
+        assert!(int8_gemm_panel(&r, m, &a, kt, &panel, &mut c, n));
+        assert!(c.iter().all(|&x| x == 100 + 16), "{c:?}");
+    }
+
+    #[test]
+    fn int8_sel24_matches_scalar_selection() {
+        let r = resolve_with(MicroCfg::Auto, active_isa());
+        if !supported(&r) {
+            return;
+        }
+        let mut rng = Rng::new(905);
+        let n = 21; // not a multiple of 8: scalar tail in play
+        let a4 = [127i32, -88, 3, -127];
+        let v0: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let v1: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let s0: Vec<i32> = (0..n).map(|_| rng.below(4) as i32).collect();
+        let s1: Vec<i32> = (0..n).map(|_| rng.below(4) as i32).collect();
+        let init: Vec<i32> = (0..n).map(|_| rng.below(1000) as i32 - 500).collect();
+        let mut c = init.clone();
+        if !int8_sel24_row(&r, &a4, &v0, &s0, &v1, &s1, &mut c) {
+            return; // no shuffle path on this ISA (NEON)
+        }
+        for j in 0..n {
+            let want =
+                init[j] + a4[s0[j] as usize] * v0[j] as i32 + a4[s1[j] as usize] * v1[j] as i32;
+            assert_eq!(c[j], want, "j={j}");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use core::arch::aarch64::*;
 
-use super::panel::PackedPanel;
+use super::panel::{Int8Panel, PackedPanel};
 
 /// Snap onto a compiled instantiation: NRV in {1, 2}, MR in {1, 2, 4, 8}
 /// (capped at 4 when NRV = 2 — same tile shapes as the AVX2 set, so one
@@ -203,6 +203,162 @@ pub(super) unsafe fn gemm_panel(
             for i in 0..m {
                 let mut tile = [0.0f32; 8];
                 kernel(1, nrv, a.add(i * lda), lda, bp, nr, tile.as_mut_ptr(), 8, kt);
+                let crow = c.add(i * ldc + j0);
+                for (jj, v) in tile.iter().take(w).enumerate() {
+                    *crow.add(jj) += *v;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 path.
+//
+// Each 128-bit B vector holds 4 output columns x one 4-byte K-quad (the
+// Int8Panel byte order), and the A quad is splatted as 4 x i32 then
+// reinterpreted to bytes, so corresponding byte positions multiply.
+// When the build enables `dotprod`, a single `sdot` reduces each column
+// group straight into the i32 accumulator; the baseline NEON fallback
+// widens through `smull` / `smull2` and pairwise-adds twice
+// (`saddlp` + `addp`), which costs 4 ops per vector instead of 1 but
+// needs nothing past the aarch64 baseline.  Signed x signed multiply is
+// native here — no AVX2-style sign trick.
+// ---------------------------------------------------------------------------
+
+macro_rules! def_int8_kernel {
+    ($name:ident, $mr:expr, $nrv:expr) => {
+        /// One register tile: C[MR x 4*NRV] (i32) += A[MR x kq quads] * strip.
+        #[target_feature(enable = "neon")]
+        unsafe fn $name(
+            a: *const i8,
+            lda: usize,
+            b: *const i8,
+            c: *mut i32,
+            ldc: usize,
+            kq: usize,
+            nr: usize,
+        ) {
+            const MR: usize = $mr;
+            const NRV: usize = $nrv;
+            let mut acc = [[vdupq_n_s32(0); NRV]; MR];
+            let mut bp = b;
+            for q in 0..kq {
+                let mut bv = [vdupq_n_s8(0); NRV];
+                for (v, slot) in bv.iter_mut().enumerate() {
+                    *slot = vld1q_s8(bp.add(16 * v));
+                }
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let quad = (a.add(i * lda + q * 4) as *const i32).read_unaligned();
+                    let ab = vreinterpretq_s8_s32(vdupq_n_s32(quad));
+                    for (cell, bvec) in row.iter_mut().zip(bv.iter()) {
+                        #[cfg(target_feature = "dotprod")]
+                        {
+                            *cell = vdotq_s32(*cell, *bvec, ab);
+                        }
+                        #[cfg(not(target_feature = "dotprod"))]
+                        {
+                            let lo = vpaddlq_s16(vmull_s8(vget_low_s8(*bvec), vget_low_s8(ab)));
+                            let hi = vpaddlq_s16(vmull_s8(vget_high_s8(*bvec), vget_high_s8(ab)));
+                            *cell = vaddq_s32(*cell, vpaddq_s32(lo, hi));
+                        }
+                    }
+                }
+                bp = bp.add(nr * 4);
+            }
+            for (i, row) in acc.iter().enumerate() {
+                for (v, cell) in row.iter().enumerate() {
+                    let cp = c.add(i * ldc + 4 * v);
+                    vst1q_s32(cp, vaddq_s32(vld1q_s32(cp), *cell));
+                }
+            }
+        }
+    };
+}
+
+def_int8_kernel!(q1x1, 1, 1);
+def_int8_kernel!(q2x1, 2, 1);
+def_int8_kernel!(q4x1, 4, 1);
+def_int8_kernel!(q8x1, 8, 1);
+def_int8_kernel!(q1x2, 1, 2);
+def_int8_kernel!(q2x2, 2, 2);
+def_int8_kernel!(q4x2, 4, 2);
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn int8_kernel(
+    mr: usize,
+    nrv: usize,
+    a: *const i8,
+    lda: usize,
+    b: *const i8,
+    c: *mut i32,
+    ldc: usize,
+    kq: usize,
+    nr: usize,
+) {
+    match (mr, nrv) {
+        (8, 1) => q8x1(a, lda, b, c, ldc, kq, nr),
+        (4, 1) => q4x1(a, lda, b, c, ldc, kq, nr),
+        (2, 1) => q2x1(a, lda, b, c, ldc, kq, nr),
+        (1, 1) => q1x1(a, lda, b, c, ldc, kq, nr),
+        (4, 2) => q4x2(a, lda, b, c, ldc, kq, nr),
+        (2, 2) => q2x2(a, lda, b, c, ldc, kq, nr),
+        _ => q1x2(a, lda, b, c, ldc, kq, nr),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn int8_strip(
+    m: usize,
+    a: *const i8,
+    lda: usize,
+    b: *const i8,
+    c: *mut i32,
+    ldc: usize,
+    kq: usize,
+    nr: usize,
+    mr: usize,
+    nrv: usize,
+) {
+    let mut i = 0;
+    while i + mr <= m {
+        int8_kernel(mr, nrv, a.add(i * lda), lda, b, c.add(i * ldc), ldc, kq, nr);
+        i += mr;
+    }
+    while i < m {
+        int8_kernel(1, nrv, a.add(i * lda), lda, b, c.add(i * ldc), ldc, kq, nr);
+        i += 1;
+    }
+}
+
+/// C (m x panel.n, i32) += A (m x kq quads) * panel; dequant elsewhere.
+/// A rows must be zero-padded to `panel.kq * 4` bytes (whole-quad reads).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn int8_gemm_panel(
+    m: usize,
+    a: *const i8,
+    lda: usize,
+    panel: &Int8Panel,
+    c: *mut i32,
+    ldc: usize,
+    mr: usize,
+) {
+    let nr = panel.nr;
+    let (mr, nrv) = clamp_block(mr, nr / 4);
+    let data = panel.data.as_ptr();
+    for p in 0..panel.strips() {
+        let j0 = p * nr;
+        let bp = data.add(p * panel.kq * nr * 4);
+        if j0 + nr <= panel.n {
+            int8_strip(m, a, lda, bp, c.add(j0), ldc, panel.kq, nr, mr, nrv);
+        } else {
+            let w = panel.n - j0;
+            for i in 0..m {
+                let mut tile = [0i32; 8];
+                int8_kernel(1, nrv, a.add(i * lda), lda, bp, tile.as_mut_ptr(), 8, panel.kq, nr);
                 let crow = c.add(i * ldc + j0);
                 for (jj, v) in tile.iter().take(w).enumerate() {
                     *crow.add(jj) += *v;

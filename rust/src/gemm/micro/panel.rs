@@ -66,6 +66,67 @@ impl PackedPanel {
     }
 }
 
+/// The i8 analogue of [`PackedPanel`] for the Int8 kernels, with one
+/// extra twist: K is grouped into **quads** (4 reduction rows), because
+/// the int8 dot-product instructions (`vpmaddubsw`+`vpmaddwd`,
+/// `vpdpbusd`, `sdot`) all consume 4 bytes per lane per step.
+///
+/// ```text
+/// data[((strip * kq + q) * nr + lane) * 4 + p]  ==  B[q * 4 + p, strip * nr + lane]
+/// ```
+///
+/// so one quad step reads a contiguous `nr * 4`-byte run whose byte
+/// groups line up with the i32 accumulator lanes.  Both the last quad
+/// (K not a multiple of 4) and the last strip (N not a multiple of NR)
+/// are zero-padded: padding contributes exact zero products.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Int8Panel {
+    /// Strip width in output columns (the microkernel's i32-lane NR).
+    pub nr: usize,
+    /// Reduction extent before quad padding (B rows).
+    pub kc: usize,
+    /// Quad count: `kc.div_ceil(4)`.
+    pub kq: usize,
+    /// Valid output columns (the last strip pads up to `nr`).
+    pub n: usize,
+    /// `strips() * kq * nr * 4` bytes.
+    pub data: Vec<i8>,
+}
+
+impl Int8Panel {
+    /// Repack a row-major `kc x n` i8 block (row stride `ldb >= n`) into
+    /// quad-grouped K-major NR-wide strips.
+    pub fn pack(b: &[i8], kc: usize, n: usize, ldb: usize, nr: usize) -> Int8Panel {
+        assert!(nr > 0, "panel strip width must be nonzero");
+        assert!(n <= ldb, "panel: n={n} exceeds row stride ldb={ldb}");
+        assert!(kc == 0 || n == 0 || (kc - 1) * ldb + n <= b.len(), "panel source out of bounds");
+        let strips = n.div_ceil(nr);
+        let kq = kc.div_ceil(4);
+        let mut data = vec![0i8; strips * kq * nr * 4];
+        for s in 0..strips {
+            let j0 = s * nr;
+            let w = (n - j0).min(nr);
+            for kk in 0..kc {
+                let (q, p) = (kk / 4, kk % 4);
+                for lane in 0..w {
+                    data[((s * kq + q) * nr + lane) * 4 + p] = b[kk * ldb + j0 + lane];
+                }
+            }
+        }
+        Int8Panel { nr, kc, kq, n, data }
+    }
+
+    /// Number of NR-wide strips (the last one may be partial).
+    pub fn strips(&self) -> usize {
+        self.n.div_ceil(self.nr)
+    }
+
+    /// Bytes held by the packed copy (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +162,50 @@ mod tests {
         assert_eq!(p.data.len(), 4 * 8);
         assert_eq!(p.data[0], 1.0);
         assert_eq!(p.data[1], 0.0);
+    }
+
+    #[test]
+    fn int8_pack_groups_k_into_quads() {
+        // 6 x 5 block inside a row stride of 6, nr = 2 -> 3 strips, 2 quads
+        let ldb = 6;
+        let b: Vec<i8> = (0..6 * ldb).map(|x| (x % 100) as i8).collect();
+        let p = Int8Panel::pack(&b, 6, 5, ldb, 2);
+        assert_eq!((p.strips(), p.kq), (3, 2));
+        assert_eq!(p.data.len(), 3 * 2 * 2 * 4);
+        for kk in 0..6 {
+            let (q, pos) = (kk / 4, kk % 4);
+            for j in 0..5 {
+                let (s, lane) = (j / 2, j % 2);
+                let got = p.data[((s * 2 + q) * 2 + lane) * 4 + pos];
+                assert_eq!(got, b[kk * ldb + j], "k={kk} j={j}");
+            }
+        }
+        // quad padding (k = 6, 7 within strip 0's quad 1) and lane padding
+        // stay zero
+        let (s, q) = (0, 1);
+        for lane in 0..2 {
+            for pos in 2..4 {
+                assert_eq!(p.data[((s * 2 + q) * 2 + lane) * 4 + pos], 0, "quad pad");
+            }
+        }
+        for q in 0..2 {
+            for pos in 0..4 {
+                assert_eq!(p.data[((2 * 2 + q) * 2 + 1) * 4 + pos], 0, "lane pad");
+            }
+        }
+        assert_eq!(p.bytes(), p.data.len());
+    }
+
+    #[test]
+    fn int8_degenerate_shapes_pack_cleanly() {
+        let p = Int8Panel::pack(&[], 0, 0, 0, 8);
+        assert_eq!(p.strips(), 0);
+        assert!(p.data.is_empty());
+        let b = vec![1i8; 4];
+        let p = Int8Panel::pack(&b, 4, 1, 1, 8);
+        assert_eq!((p.strips(), p.kq), (1, 1));
+        assert_eq!(p.data.len(), 8 * 4);
+        assert_eq!(&p.data[0..4], &[1, 1, 1, 1]);
+        assert_eq!(&p.data[4..8], &[0, 0, 0, 0]);
     }
 }

@@ -9,6 +9,7 @@
 //! searches over these configs empirically.
 
 pub mod dense;
+pub mod int8;
 pub mod micro;
 pub mod spmm;
 pub mod tw;
@@ -18,7 +19,12 @@ pub use dense::{
     effective_parallel_threads, matmul, matmul_naive, matmul_parallel, matmul_parallel_into,
     matmul_tiled, matmul_tiled_into, matmul_tiled_into_panel,
 };
-pub use micro::{MicroCfg, PackedPanel};
+pub use int8::{
+    int8_dense_panel, int8_matmul_parallel_into, int8_matmul_tiled_into, int8_tvw_matmul_into,
+    int8_tw_matmul_into, int8_tw_pack_panels, int8_vw24_matmul_into, Int8TvwPlan, Int8TwPlan,
+    Int8Vw24Plan,
+};
+pub use micro::{Int8Panel, MicroCfg, PackedPanel};
 pub use spmm::{block_spmm, csr_spmm, BlockSparse};
 pub use tw::{
     tw_effective_parallel_threads, tw_matmul, tw_matmul_into, tw_matmul_into_scratch,
@@ -43,6 +49,12 @@ pub use vw::{
 pub struct GemmScratch {
     pub(crate) a: Vec<f32>,
     pub(crate) c: Vec<f32>,
+    /// Quantized activation rows (i8, quad-padded) for the int8 paths.
+    pub(crate) qa: Vec<i8>,
+    /// Int8 CTO gather staging (quantized A columns, per tile).
+    pub(crate) qg: Vec<i8>,
+    /// i32 accumulator tile for the int8 condensed kernels.
+    pub(crate) qi: Vec<i32>,
 }
 
 impl GemmScratch {
@@ -52,7 +64,7 @@ impl GemmScratch {
 
     /// Pre-sized scratch (graph compile computes the per-model maxima).
     pub fn with_capacity(a_len: usize, c_len: usize) -> GemmScratch {
-        GemmScratch { a: vec![0.0; a_len], c: vec![0.0; c_len] }
+        GemmScratch { a: vec![0.0; a_len], c: vec![0.0; c_len], ..GemmScratch::default() }
     }
 
     /// Grow (never shrink) to at least the requested staging sizes.
@@ -62,6 +74,20 @@ impl GemmScratch {
         }
         if self.c.len() < c_len {
             self.c.resize(c_len, 0.0);
+        }
+    }
+
+    /// Grow the int8 staging areas: quantized activations (`qa`), the
+    /// per-tile gather block (`qg`) and the i32 accumulator tile (`qi`).
+    pub(crate) fn ensure_int8(&mut self, qa_len: usize, qg_len: usize, qi_len: usize) {
+        if self.qa.len() < qa_len {
+            self.qa.resize(qa_len, 0);
+        }
+        if self.qg.len() < qg_len {
+            self.qg.resize(qg_len, 0);
+        }
+        if self.qi.len() < qi_len {
+            self.qi.resize(qi_len, 0);
         }
     }
 }

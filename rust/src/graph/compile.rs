@@ -33,6 +33,7 @@ use crate::exec::ModelDims;
 use crate::gpusim::GemmShape;
 use crate::models::{GemmLayer, LayerKind, ModelWorkload};
 use crate::nn::Conv2dSpec;
+use crate::quant::Precision;
 use crate::tensor::Matrix;
 use crate::util::Rng;
 use crate::{bail, ensure};
@@ -93,6 +94,15 @@ impl CompileOptions {
     /// Same options, different pattern — the per-variant loop backends use.
     pub fn with_pattern(&self, pattern: GraphPattern) -> CompileOptions {
         CompileOptions { pattern, ..self.clone() }
+    }
+
+    /// Same options, different numeric precision (the `--precision` knob;
+    /// flows into [`PackOptions::precision`], so every packed layer is
+    /// quantized — or plan-cache-resolved under `Auto` — at pack time).
+    pub fn with_precision(&self, precision: Precision) -> CompileOptions {
+        let mut o = self.clone();
+        o.pack.precision = precision;
+        o
     }
 
     fn family_for(&self, model: &str, prunable: bool, shape: GemmShape) -> PatternFamily {

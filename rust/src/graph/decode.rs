@@ -252,7 +252,10 @@ mod tests {
     use crate::models;
 
     fn nmt_opts() -> CompileOptions {
-        CompileOptions { pack: PackOptions { sparsity: 0.75, g: 8 }, ..CompileOptions::default() }
+        CompileOptions {
+            pack: PackOptions { sparsity: 0.75, g: 8, ..Default::default() },
+            ..CompileOptions::default()
+        }
     }
 
     fn nmt_engine(pattern: GraphPattern) -> DecodeEngine {

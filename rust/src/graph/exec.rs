@@ -11,11 +11,12 @@ use std::time::Instant;
 use crate::error::Result;
 use crate::exec::{DecodeCaps, ModelDims, PreparedModel, StepOut};
 use crate::gemm::{
-    effective_parallel_threads, matmul_parallel_into, matmul_tiled_into_panel, micro,
-    tvw_effective_parallel_threads, tvw_matmul_into_scratch, tvw_matmul_parallel_into,
-    tw_effective_parallel_threads, tw_matmul_into_scratch_panels, tw_matmul_parallel_into,
-    vw24_effective_parallel_threads, vw24_matmul_into_with, vw24_matmul_parallel_into, GemmScratch,
-    TileConfig,
+    effective_parallel_threads, int8_matmul_parallel_into, int8_matmul_tiled_into,
+    int8_tvw_matmul_into, int8_tw_matmul_into, int8_vw24_matmul_into, matmul_parallel_into,
+    matmul_tiled_into_panel, micro, tvw_effective_parallel_threads, tvw_matmul_into_scratch,
+    tvw_matmul_parallel_into, tw_effective_parallel_threads, tw_matmul_into_scratch_panels,
+    tw_matmul_parallel_into, vw24_effective_parallel_threads, vw24_matmul_into_with,
+    vw24_matmul_parallel_into, GemmScratch, TileConfig,
 };
 use crate::nn::{attention_window_into, im2col_into, lstm_gate_update, AttnScratch, ImgSrc};
 use crate::pool::ThreadPool;
@@ -41,9 +42,11 @@ pub struct Workspace {
 
 impl Workspace {
     pub fn for_program(p: &GraphProgram) -> Workspace {
+        let mut scratch = GemmScratch::with_capacity(p.scratch_a, p.scratch_c);
+        scratch.ensure_int8(p.scratch_qa, p.scratch_qg, p.scratch_qi);
         Workspace {
             bufs: p.buf_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
-            scratch: GemmScratch::with_capacity(p.scratch_a, p.scratch_c),
+            scratch,
             slot_pos: vec![0; p.dims.batch],
         }
     }
@@ -197,6 +200,41 @@ pub fn run_gemm(
                 1
             }
         }
+        PackedWeight::Int8Dense(w) => {
+            let panel = match &node.panels {
+                NodePanels::Int8Dense(p) => Some(p),
+                _ => None,
+            };
+            if let Some(pool) =
+                intra.filter(|_| effective_parallel_threads(a.rows, threads) > 1)
+            {
+                int8_matmul_parallel_into(a, w, panel, c, &cfg, threads, pool, scratch)
+            } else {
+                int8_matmul_tiled_into(a, w, panel, c, &cfg, scratch);
+                1
+            }
+        }
+        // the condensed int8 kernels run serial even under a pool: their
+        // compact per-tile problems are below the parallel split threshold
+        // at serving M, and the i32 staging lives in the (per-worker)
+        // GemmScratch — inter-worker parallelism still applies above
+        PackedWeight::Int8Tw(p) => {
+            c.data.fill(0.0);
+            let panels = match &node.panels {
+                NodePanels::Int8Tw(ps) => Some(ps.as_slice()),
+                _ => None,
+            };
+            int8_tw_matmul_into(a, p, panels, c, &cfg, scratch);
+            1
+        }
+        PackedWeight::Int8Tvw(p) => {
+            int8_tvw_matmul_into(a, p, c, &cfg, scratch);
+            1
+        }
+        PackedWeight::Int8Vw24(p) => {
+            int8_vw24_matmul_into(a, p, c, &cfg, scratch);
+            1
+        }
     };
     GemmDispatch { cfg, threads: used, micro: r.code() }
 }
@@ -236,6 +274,7 @@ fn note_gemm(
         m,
         started.elapsed().as_nanos() as u64,
         node.flops(m),
+        node.bytes_moved(m),
         d.cfg.bm(),
         d.cfg.bk(),
         d.threads,
@@ -574,6 +613,8 @@ impl GraphModel {
         ensure!(!programs.is_empty(), "graph model needs at least one compiled variant");
         let first = &programs[0];
         let (mut sa, mut sc) = (first.scratch_a, first.scratch_c);
+        let (mut qa, mut qg, mut qi) =
+            (first.scratch_qa, first.scratch_qg, first.scratch_qi);
         for p in programs.iter().skip(1) {
             ensure!(
                 p.buf_shapes == first.buf_shapes
@@ -585,9 +626,13 @@ impl GraphModel {
             );
             sa = sa.max(p.scratch_a);
             sc = sc.max(p.scratch_c);
+            qa = qa.max(p.scratch_qa);
+            qg = qg.max(p.scratch_qg);
+            qi = qi.max(p.scratch_qi);
         }
         let mut ws = Workspace::for_program(first);
         ws.scratch = GemmScratch::with_capacity(sa, sc);
+        ws.scratch.ensure_int8(qa, qg, qi);
         if let Some(tele) = &telemetry {
             tele.register_programs(&programs);
         }
@@ -708,7 +753,7 @@ mod tests {
             seq: 4,
             heads: 4,
             n_classes: 4,
-            pack: PackOptions { sparsity: 0.75, g: 8 },
+            pack: PackOptions { sparsity: 0.75, g: 8, ..Default::default() },
             ..CompileOptions::default()
         };
         compile(&wl, &opts.with_pattern(pattern)).unwrap()

@@ -139,6 +139,12 @@ pub struct GraphProgram {
     /// Kernel scratch maxima over all weights (`GemmScratch` sizing).
     pub scratch_a: usize,
     pub scratch_c: usize,
+    /// Int8 staging maxima (quantized activations / CTO gather / i32
+    /// accumulator tile) over all int8-packed weights at the full
+    /// compile-time batch.  All zero for a pure-f32 program.
+    pub scratch_qa: usize,
+    pub scratch_qg: usize,
+    pub scratch_qi: usize,
 }
 
 impl GraphProgram {
@@ -159,6 +165,9 @@ impl GraphProgram {
             dims: self.dims,
             scratch_a: 0,
             scratch_c: 0,
+            scratch_qa: 0,
+            scratch_qg: 0,
+            scratch_qi: 0,
         }
     }
 
@@ -268,6 +277,28 @@ impl GraphBuilder {
             sa = sa.max(a);
             sc = sc.max(c);
         }
+        // Int8 staging depends on the activation row count, so walk the
+        // ops to find each weight's driving buffer at the full
+        // compile-time batch (Gemm reads `input`, LstmStep reads `xh`).
+        let mut max_rows = vec![0usize; self.weights.len()];
+        for op in &self.ops {
+            match *op {
+                Op::Gemm { input, w, .. } => {
+                    max_rows[w] = max_rows[w].max(self.buf_shapes[input.0].0);
+                }
+                Op::LstmStep { w, xh, .. } => {
+                    max_rows[w] = max_rows[w].max(self.buf_shapes[xh.0].0);
+                }
+                _ => {}
+            }
+        }
+        let (mut qa, mut qg, mut qi) = (0usize, 0usize, 0usize);
+        for (w, &rows) in self.weights.iter().zip(&max_rows) {
+            let (a, g, i) = w.scratch_needs_int8(rows);
+            qa = qa.max(a);
+            qg = qg.max(g);
+            qi = qi.max(i);
+        }
         GraphProgram {
             model: model.to_string(),
             variant: variant.to_string(),
@@ -281,6 +312,9 @@ impl GraphBuilder {
             dims,
             scratch_a: sa,
             scratch_c: sc,
+            scratch_qa: qa,
+            scratch_qg: qg,
+            scratch_qi: qi,
         }
     }
 }

@@ -60,7 +60,7 @@ mod tests {
             seq: 4,
             heads: 4,
             n_classes: 4,
-            pack: PackOptions { sparsity: 0.75, g: 8 },
+            pack: PackOptions { sparsity: 0.75, g: 8, ..Default::default() },
             ..CompileOptions::default()
         };
         let patterns =
@@ -141,7 +141,7 @@ mod tests {
         let opts = CompileOptions {
             seq: 4,
             n_classes: 4,
-            pack: PackOptions { sparsity: 0.75, g: 8 },
+            pack: PackOptions { sparsity: 0.75, g: 8, ..Default::default() },
             plan_cache: Some(Arc::new(cache)),
             model_key: Some("bert".into()),
             ..CompileOptions::default()

@@ -7,14 +7,21 @@ use std::sync::Arc;
 
 use crate::autotune::{PatternFamily, PlanCache};
 use crate::error::Result;
-use crate::gemm::{micro, tw_pack_panels, PackedPanel, TileConfig};
+use crate::gemm::{
+    int8_dense_panel, int8_tw_pack_panels, micro, tw_pack_panels, Int8Panel, Int8TvwPlan,
+    Int8TwPlan, Int8Vw24Plan, PackedPanel, TileConfig,
+};
 use crate::gpusim::GemmShape;
+use crate::quant::{Precision, QuantMatrix};
 use crate::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
 use crate::tensor::Matrix;
 use crate::{anyhow, bail};
 
 /// A GEMM weight operand packed into one serving variant's kernel-ready
 /// form (the per-layer analogue of the paper's offline compilation step).
+/// The `Int8*` forms are the quantize-at-pack variants: the same pruned
+/// encoding with values narrowed to i8 and per-output-channel scales
+/// carried alongside (`docs/DESIGN.md` §11).
 #[derive(Clone)]
 pub enum PackedWeight {
     /// Raw row-major weights, run by `gemm::matmul_tiled_into`.
@@ -26,15 +33,35 @@ pub enum PackedWeight {
     Tvw(TvwPlan),
     /// Plain 2:4 along K, run by `gemm::vw24_matmul_into_with`.
     Vw24(Vw24Plan),
+    /// Quantized dense weights + per-channel scales, run by
+    /// `gemm::int8_matmul_tiled_into`.
+    Int8Dense(QuantMatrix),
+    /// Quantized TW condensed tiles, run by `gemm::int8_tw_matmul_into`.
+    Int8Tw(Int8TwPlan),
+    /// Quantized TVW plan, run by `gemm::int8_tvw_matmul_into`.
+    Int8Tvw(Int8TvwPlan),
+    /// Quantized 2:4 plan, run by `gemm::int8_vw24_matmul_into`.
+    Int8Vw24(Int8Vw24Plan),
 }
 
 impl PackedWeight {
     pub fn family(&self) -> PatternFamily {
         match self {
-            PackedWeight::Dense(_) => PatternFamily::Dense,
-            PackedWeight::Tw(_) => PatternFamily::Tw,
-            PackedWeight::Tvw(_) => PatternFamily::Tvw,
-            PackedWeight::Vw24(_) => PatternFamily::Vw24,
+            PackedWeight::Dense(_) | PackedWeight::Int8Dense(_) => PatternFamily::Dense,
+            PackedWeight::Tw(_) | PackedWeight::Int8Tw(_) => PatternFamily::Tw,
+            PackedWeight::Tvw(_) | PackedWeight::Int8Tvw(_) => PatternFamily::Tvw,
+            PackedWeight::Vw24(_) | PackedWeight::Int8Vw24(_) => PatternFamily::Vw24,
+        }
+    }
+
+    /// The numeric precision this operand executes at.
+    pub fn precision(&self) -> Precision {
+        match self {
+            PackedWeight::Dense(_)
+            | PackedWeight::Tw(_)
+            | PackedWeight::Tvw(_)
+            | PackedWeight::Vw24(_) => Precision::Fp32,
+            _ => Precision::Int8,
         }
     }
 
@@ -45,16 +72,42 @@ impl PackedWeight {
             PackedWeight::Tw(p) => (p.k, p.n),
             PackedWeight::Tvw(p) => (p.k, p.n),
             PackedWeight::Vw24(p) => (p.k, p.n),
+            PackedWeight::Int8Dense(w) => (w.rows, w.cols),
+            PackedWeight::Int8Tw(p) => (p.k, p.n),
+            PackedWeight::Int8Tvw(p) => (p.k, p.n),
+            PackedWeight::Int8Vw24(p) => (p.k, p.n),
         }
     }
 
-    /// Expand back to the masked-dense weight matrix (the parity oracle).
+    /// Expand back to the masked-dense weight matrix (the parity oracle;
+    /// Int8 forms dequantize, so the oracle carries the quantization
+    /// error and parity tests compare at the quantization-aware bound).
     pub fn decode(&self) -> Matrix {
         match self {
             PackedWeight::Dense(w) => w.clone(),
             PackedWeight::Tw(p) => p.decode(),
             PackedWeight::Tvw(p) => p.decode(),
             PackedWeight::Vw24(p) => p.decode(),
+            PackedWeight::Int8Dense(w) => w.dequantize(),
+            PackedWeight::Int8Tw(p) => p.decode(),
+            PackedWeight::Int8Tvw(p) => p.decode(),
+            PackedWeight::Int8Vw24(p) => p.decode(),
+        }
+    }
+
+    /// Bytes the kernel streams from this operand per dispatch (the "B
+    /// traffic" term of the profiler's bytes-moved counter) — values at
+    /// the node's precision plus offset/metadata tables.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            PackedWeight::Dense(w) => w.data.len() * 4,
+            PackedWeight::Tw(p) => p.storage_bytes(),
+            PackedWeight::Tvw(p) => p.storage_bytes(),
+            PackedWeight::Vw24(p) => p.b_vals.len() * 4 + p.b_vals.len() / 4,
+            PackedWeight::Int8Dense(w) => w.storage_bytes(),
+            PackedWeight::Int8Tw(p) => p.storage_bytes(),
+            PackedWeight::Int8Tvw(p) => p.storage_bytes(),
+            PackedWeight::Int8Vw24(p) => p.storage_bytes(),
         }
     }
 }
@@ -68,6 +121,10 @@ pub enum NodePanels {
     None,
     Dense(PackedPanel),
     Tw(Vec<PackedPanel>),
+    /// Quad-grouped i8 panel over the quantized dense weight.
+    Int8Dense(Int8Panel),
+    /// Per-tile quad-grouped i8 panels over the quantized condensed tiles.
+    Int8Tw(Vec<Int8Panel>),
 }
 
 /// One GEMM node of the graph: the packed operand plus its resolved
@@ -128,11 +185,33 @@ impl GemmNode {
     /// dense by construction.
     pub fn flops(&self, m: usize) -> u64 {
         match &self.weight {
-            PackedWeight::Dense(_) => 2 * (m * self.k * self.n) as u64,
+            PackedWeight::Dense(_) | PackedWeight::Int8Dense(_) => {
+                2 * (m * self.k * self.n) as u64
+            }
             PackedWeight::Tw(p) => p.flops(m) as u64,
             PackedWeight::Tvw(p) => p.flops(m) as u64,
-            PackedWeight::Vw24(_) => (m * self.k * self.n) as u64,
+            PackedWeight::Vw24(_) | PackedWeight::Int8Vw24(_) => (m * self.k * self.n) as u64,
+            // the int8 plans condense identically to their f32 twins
+            PackedWeight::Int8Tw(p) => {
+                2 * (m * p.g * p.row_len.iter().map(|&x| x as usize).sum::<usize>()) as u64
+            }
+            PackedWeight::Int8Tvw(p) => {
+                (m * p.g * p.row_len.iter().map(|&x| x as usize).sum::<usize>()) as u64
+            }
         }
+    }
+
+    /// Bytes one dispatch at `m` activation rows moves: the activation
+    /// operand at the node's precision (int8 nodes stream the quantized
+    /// copy), the packed weight, and the f32 output.  The profiler's
+    /// memory-traffic counter — comparing a node's fp32 and int8 figures
+    /// shows the B-traffic halving the quantized path buys.
+    pub fn bytes_moved(&self, m: usize) -> u64 {
+        let a_elem = match self.weight.precision() {
+            Precision::Int8 => 1,
+            _ => 4,
+        };
+        (m * self.k * a_elem + self.weight.weight_bytes() + m * self.n * 4) as u64
     }
 
     /// Serial-kernel scratch this node needs: `(a_gather, c_tile)` staging
@@ -141,15 +220,32 @@ impl GemmNode {
     /// config, so variable-M dispatch never grows the scratch on the
     /// request path.
     pub fn scratch_needs(&self) -> (usize, usize) {
-        let bm_max = self
-            .bucket_cfgs
-            .iter()
-            .map(|(_, cfg)| cfg.bm())
-            .fold(self.cfg.bm(), usize::max);
+        let bm_max = self.bm_max();
         match &self.weight {
-            PackedWeight::Dense(_) | PackedWeight::Vw24(_) => (0, 0),
             PackedWeight::Tw(p) => (bm_max * p.kmax, bm_max * p.g),
             PackedWeight::Tvw(p) => (p.kmax, p.g),
+            _ => (0, 0), // dense, 2:4 and every int8 form stage elsewhere
+        }
+    }
+
+    /// Largest row block any dispatch of this node can use.
+    fn bm_max(&self) -> usize {
+        self.bucket_cfgs.iter().map(|(_, cfg)| cfg.bm()).fold(self.cfg.bm(), usize::max)
+    }
+
+    /// Int8 staging this node needs at up to `max_rows` activation rows:
+    /// `(qa, qg, qi)` lengths (quantized activations, CTO gather block,
+    /// i32 accumulator — see [`crate::gemm::GemmScratch`]).  Zero for f32
+    /// nodes.
+    pub fn scratch_needs_int8(&self, max_rows: usize) -> (usize, usize, usize) {
+        let bm = self.bm_max().min(max_rows.max(1));
+        let qa = max_rows * crate::gemm::int8::quad_stride(self.k);
+        match &self.weight {
+            PackedWeight::Int8Dense(_) => (qa, 0, max_rows * self.n),
+            PackedWeight::Int8Tw(p) => (qa, bm * p.kmax, bm * p.g),
+            PackedWeight::Int8Tvw(p) => (qa, p.kmax, p.g),
+            PackedWeight::Int8Vw24(_) => (qa, 0, self.n),
+            _ => (0, 0, 0),
         }
     }
 }
@@ -161,11 +257,14 @@ pub struct PackOptions {
     pub sparsity: f64,
     /// TW tile granularity G (clamped to the layer's N).
     pub g: usize,
+    /// Numeric precision to pack at.  `Auto` asks the plan cache per
+    /// layer shape and falls back to f32 for untuned shapes.
+    pub precision: Precision,
 }
 
 impl Default for PackOptions {
     fn default() -> Self {
-        PackOptions { sparsity: 0.75, g: 32 }
+        PackOptions { sparsity: 0.75, g: 32, precision: Precision::Fp32 }
     }
 }
 
@@ -239,6 +338,27 @@ pub fn pack_weight(
             }
         }
     };
+    // quantize-at-pack: the f32 pruned encoding converts to its i8 twin
+    // here, once, so the request path never touches f32 weights.  `Auto`
+    // defers to the plan cache's per-shape precision pick (f32 when the
+    // shape is untuned).
+    let precision = match opts.precision {
+        Precision::Auto => cache
+            .and_then(|c| c.lookup_precision(shape, family.label(), sparsity))
+            .unwrap_or(Precision::Fp32),
+        p => p,
+    };
+    let weight = if precision == Precision::Int8 {
+        match weight {
+            PackedWeight::Dense(m) => PackedWeight::Int8Dense(QuantMatrix::quantize(&m)),
+            PackedWeight::Tw(p) => PackedWeight::Int8Tw(Int8TwPlan::from_plan(&p)),
+            PackedWeight::Tvw(p) => PackedWeight::Int8Tvw(Int8TvwPlan::from_plan(&p)),
+            PackedWeight::Vw24(p) => PackedWeight::Int8Vw24(Int8Vw24Plan::from_plan(&p)),
+            w => w,
+        }
+    } else {
+        weight
+    };
     let cfg = resolve_tile(cache, shape, family, sparsity);
     // per-bucket tile plans: probe the cache once per bucket M at pack
     // time so dispatch is a table walk, never a cache lookup.  Without a
@@ -268,6 +388,8 @@ pub fn pack_weight(
                 NodePanels::Dense(PackedPanel::pack(&m.data, m.rows, m.cols, m.cols, r.nr))
             }
             PackedWeight::Tw(p) => NodePanels::Tw(tw_pack_panels(p, r.nr)),
+            PackedWeight::Int8Dense(q) => NodePanels::Int8Dense(int8_dense_panel(q, r.nr)),
+            PackedWeight::Int8Tw(p) => NodePanels::Int8Tw(int8_tw_pack_panels(p, r.nr)),
             _ => NodePanels::None,
         }
     };
@@ -362,7 +484,7 @@ mod tests {
     fn pack_families_roundtrip_through_decode() {
         let mut rng = Rng::new(40);
         let w = Matrix::randn(32, 48, &mut rng);
-        let opts = PackOptions { sparsity: 0.75, g: 16 };
+        let opts = PackOptions { sparsity: 0.75, g: 16, ..Default::default() };
         let families =
             [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24];
         for fam in families {
@@ -378,6 +500,35 @@ mod tests {
                 let zeros = dec.data.iter().filter(|v| **v == 0.0).count();
                 assert!(zeros > w.data.len() / 4, "{fam:?}");
             }
+        }
+    }
+
+    #[test]
+    fn int8_pack_quantizes_every_family_and_decodes_close() {
+        let mut rng = Rng::new(43);
+        let w = Matrix::randn(32, 48, &mut rng);
+        let opts =
+            PackOptions { sparsity: 0.75, g: 16, precision: crate::quant::Precision::Int8 };
+        let families =
+            [PatternFamily::Dense, PatternFamily::Tw, PatternFamily::Tvw, PatternFamily::Vw24];
+        for fam in families {
+            let node = pack_weight("l", &w, 8, &[], fam, &opts, None).unwrap();
+            assert_eq!(node.weight.family(), fam, "{fam:?}");
+            assert_eq!(node.weight.precision(), crate::quant::Precision::Int8);
+            assert_eq!(node.weight.kn(), (32, 48));
+            // the dequantized oracle stays close to the f32 pack of the
+            // same family
+            let f32_opts = PackOptions { sparsity: 0.75, g: 16, ..Default::default() };
+            let f32_node = pack_weight("l", &w, 8, &[], fam, &f32_opts, None).unwrap();
+            let d = node.weight.decode().max_abs_diff(&f32_node.weight.decode());
+            let amax = w.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            assert!(d <= amax / 254.0 + 1e-6, "{fam:?}: {d}");
+            // quantized storage beats f32 storage
+            assert!(node.weight.weight_bytes() < f32_node.weight.weight_bytes(), "{fam:?}");
+            // int8 scratch is requested, f32 scratch is not (and vice versa)
+            assert_eq!(f32_node.scratch_needs_int8(8), (0, 0, 0));
+            let (qa, _, qi) = node.scratch_needs_int8(8);
+            assert!(qa >= 8 * 32 && qi > 0, "{fam:?}");
         }
     }
 
@@ -407,6 +558,7 @@ mod tests {
                 g: 16,
                 threads: 1,
                 micro: "auto".into(),
+                precision: "fp32".into(),
                 measured_us: 10.0,
                 model_us: 9.0,
                 default_us: 20.0,
@@ -414,7 +566,7 @@ mod tests {
         }
         let mut rng = Rng::new(42);
         let w = Matrix::randn(k, n, &mut rng);
-        let opts = PackOptions { sparsity: 0.75, g: 16 };
+        let opts = PackOptions { sparsity: 0.75, g: 16, ..Default::default() };
         let node =
             pack_weight("l", &w, 64, &[4, 16, 64], PatternFamily::Tw, &opts, Some(&cache)).unwrap();
         assert_eq!(node.bucket_cfgs.len(), 3);
@@ -446,6 +598,7 @@ mod tests {
             g: 16,
             threads: 1,
             micro: "auto".into(),
+            precision: "fp32".into(),
             measured_us: 10.0,
             model_us: 9.0,
             default_us: 20.0,
@@ -458,6 +611,7 @@ mod tests {
             g: 0,
             threads: 1,
             micro: "auto".into(),
+            precision: "fp32".into(),
             measured_us: 30.0,
             model_us: 28.0,
             default_us: 30.0,

@@ -22,6 +22,7 @@ use tilewise::variant::Variant;
 use tilewise::figures::{fig10, fig6, fig7, fig8, fig9, headline};
 use tilewise::gpusim::{self, Calibration, GemmShape, Pipe, TwStrategy};
 use tilewise::models::{self, ModelWorkload};
+use tilewise::quant::Precision;
 use tilewise::sparse::Pattern;
 use tilewise::telemetry::Telemetry;
 use tilewise::tensor::Matrix;
@@ -46,9 +47,12 @@ fn main() {
                  \x20 serve [--backend pjrt|native] [--workers N] [--intra-threads N] [--artifacts DIR]\n\
                  \x20       [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
                  \x20       [--plan-cache FILE] [--model bert|vgg|nmt|decoder|nano|bert-ffn]\n\
-                 \x20       [--low-latency] [--padded] [--decode N] [--telemetry-json FILE]\n\
+                 \x20       [--precision fp32|int8|auto] [--low-latency] [--padded] [--decode N]\n\
+                 \x20       [--telemetry-json FILE]\n\
                  \x20       (bert/vgg/nmt/decoder serve the graph-compiled zoo model; nano\n\
                  \x20        the residual-MLP surrogate; bert-ffn the BERT-base FFN widths;\n\
+                 \x20        --precision packs zoo weights at f32, int8 (quantize-at-pack),\n\
+                 \x20        or the plan cache's tuned choice per layer (auto);\n\
                  \x20        --low-latency enables eager dispatch + the M=1 fast lane;\n\
                  \x20        --padded disables dynamic effective-batch execution;\n\
                  \x20        --decode N streams N autoregressive sessions through the\n\
@@ -59,6 +63,7 @@ fn main() {
                  \x20          default sweeps bert+vgg+nmt into BENCH_profile.json)\n\
                  \x20 autotune [--model vgg16|resnet18|resnet50|nmt|bert] [--sparsity S] [--out FILE]\n\
                  \x20          [--threads T] [--m-cap M] [--budget-ms MS] [--quick]\n\
+                 \x20          [--precision fp32|int8]  (pin the precision axis; default searches both)\n\
                  \x20 figure <fig6a|fig6b|fig6c|fig7a|fig7b|fig8|fig9|fig10|fig11|headline|all> [--csv DIR]\n\
                  \x20 inspect-patterns\n\
                  \x20 prune [--pattern ew|vw|bw|tw|tew|tvw] [--sparsity S] [--g G]\n\
@@ -105,6 +110,17 @@ fn cmd_autotune(args: &[String]) -> i32 {
     opts.measure = if quick { MeasureOpts::quick() } else { MeasureOpts::default() };
     if let Some(ms) = flag(args, "--budget-ms").and_then(|v| v.parse::<f64>().ok()) {
         opts.measure.budget_secs = ms / 1e3;
+    }
+    // --precision pins the search axis to one numeric precision; the
+    // default space measures fp32 AND int8 twins of every candidate
+    if let Some(v) = flag(args, "--precision") {
+        match Precision::from_label(&v) {
+            Some(p @ (Precision::Fp32 | Precision::Int8)) => opts.space.precisions = vec![p],
+            _ => {
+                eprintln!("unknown precision {v:?} (expected fp32|int8)");
+                return 2;
+            }
+        }
     }
     let tuner = Tuner::new(opts);
 
@@ -166,6 +182,16 @@ fn cmd_serve(args: &[String]) -> i32 {
     let plan_cache = flag(args, "--plan-cache").map(PathBuf::from);
     let telemetry_json = flag(args, "--telemetry-json").map(PathBuf::from);
     let decode_sessions: usize = flag(args, "--decode").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let precision = match flag(args, "--precision").as_deref() {
+        None => Precision::Fp32,
+        Some(v) => match Precision::from_label(v) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown precision {v:?} (expected fp32|int8|auto)");
+                return 2;
+            }
+        },
+    };
     let policy = match flag(args, "--policy").as_deref() {
         Some("dense") => Policy::Fixed(Variant::Dense),
         Some("tvw") => Policy::Fixed(Variant::Tvw),
@@ -239,6 +265,17 @@ fn cmd_serve(args: &[String]) -> i32 {
             cfg.policy = cfg.policy.clone().resolve(cache.as_deref());
             cfg.plan_cache = None;
             native_cache = cache.clone();
+            if precision != Precision::Fp32
+                && !matches!(
+                    flag(args, "--model").as_deref(),
+                    Some("bert" | "vgg" | "vgg16" | "nmt" | "decoder")
+                )
+            {
+                eprintln!(
+                    "[serve] --precision applies to the graph-compiled zoo models; \
+                     nano/bert-ffn serve f32"
+                );
+            }
             // --model picks what gets compiled: "bert"/"vgg"/"nmt" build
             // the zoo model through the layer-graph IR (per-layer packed
             // sparse weights, workspace-arena execution); "bert-ffn"
@@ -248,7 +285,10 @@ fn cmd_serve(args: &[String]) -> i32 {
             let backend: tilewise::error::Result<Arc<dyn Backend>> =
                 match flag(args, "--model").as_deref() {
                     Some(m @ ("bert" | "vgg" | "vgg16" | "nmt" | "decoder")) => ZooSpec::for_model(m)
-                        .and_then(|s| ZooBackend::new(s, cache))
+                        .and_then(|mut s| {
+                            s.precision = precision;
+                            ZooBackend::new(s, cache)
+                        })
                         .map(|mut b| {
                             if want_tele {
                                 graph_tele = Some(b.enable_telemetry());
@@ -309,7 +349,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         })
     });
     println!(
-        "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={} mode={}{} simd={}",
+        "serving[{backend_name}]: workers={} intra-threads={intra_threads} batch={} seq={} d_model={} classes={} mode={}{} precision={} simd={}",
         handle.workers,
         handle.batch,
         handle.seq,
@@ -317,6 +357,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         handle.n_classes,
         if dynamic_batch { "dynamic-m" } else { "padded" },
         if low_latency { "+low-latency+fast-lane" } else { "" },
+        precision.label(),
         tilewise::gemm::micro::active_label()
     );
     let len = handle.seq * handle.d_model;

@@ -1,42 +1,124 @@
 //! Int8 quantization substrate (paper §VI-B/§VI-D compares Int8-Dense and
 //! Int8-Sparse against the pruning patterns).
 //!
-//! Symmetric per-tensor quantization: `q = clamp(round(x / scale), -127,
-//! 127)` with `scale = max|x| / 127`, plus an Int8 GEMM with i32
-//! accumulation and float dequantization — the arithmetic the tensor
-//! core's Int8 path performs.  The paper's survey claim ("Int8 exhibits
-//! almost no accuracy loss") is validated on the accuracy proxy.
+//! Symmetric quantization: `q = clamp(round(x / scale), -127, 127)` with
+//! `scale = max|x| / 127`.  Weights are quantized **per output channel**
+//! (one scale per output column of the `K x N` operand) so a single
+//! badly-scaled channel cannot inflate the quantization error of every
+//! other column; activations are quantized **dynamically per batch** with
+//! one tensor-wide scale (the activation range is not known at pack time).
+//! The Int8 GEMM accumulates in i32 and dequantizes on store:
+//! `c[i][j] = acc_i32 * a_scale * w_scales[j]`.
+//!
+//! The paper's survey claim ("Int8 exhibits almost no accuracy loss") is
+//! validated on the accuracy surrogate (see `accuracy/`), and the serving
+//! kernels built on this substrate live in `gemm::int8`.
 
 use crate::tensor::Matrix;
 
-/// A symmetric per-tensor Int8 quantized matrix.
+/// Largest reduction depth the i32 accumulator provably survives: every
+/// product is at most `127 * 127 = 16129 < 2^14`, so `K <= 2^16` keeps the
+/// running sum below `2^30 < i32::MAX` even when every term has the same
+/// sign at the worst-case magnitude.  `QuantMatrix::quantize` debug-asserts
+/// this bound; no model in the zoo comes within two orders of magnitude of
+/// it.
+pub const I32_ACC_SAFE_K: usize = 1 << 16;
+
+/// Numeric precision of a packed GEMM node / a compiled graph.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// The f32 kernels (PRs 2-8): the baseline serving path.
+    #[default]
+    Fp32,
+    /// i8 x i8 -> i32 kernels with dequantization on store.
+    Int8,
+    /// Defer to the plan cache's per-shape recommendation (falls back to
+    /// f32 for shapes the tuner has not measured).
+    Auto,
+}
+
+impl Precision {
+    /// Stable text form, used by the plan cache and the serve CLI.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+            Precision::Auto => "auto",
+        }
+    }
+
+    /// Inverse of [`Precision::label`].
+    pub fn from_label(s: &str) -> Option<Precision> {
+        match s {
+            "fp32" => Some(Precision::Fp32),
+            "int8" => Some(Precision::Int8),
+            "auto" => Some(Precision::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// A symmetric Int8 quantized `K x N` weight matrix with **per-output-
+/// channel** scales (`scales[c]` covers column `c`).
 #[derive(Clone, Debug)]
 pub struct QuantMatrix {
     pub rows: usize,
     pub cols: usize,
+    /// Row-major `rows x cols` quantized values.
     pub data: Vec<i8>,
-    pub scale: f32,
+    /// One scale per output column; all-zero columns get scale 1.0 so
+    /// dequantization never multiplies by a degenerate (zero) scale.
+    pub scales: Vec<f32>,
 }
 
 impl QuantMatrix {
-    /// Quantize with scale = max|x| / 127 (symmetric, zero-point 0).
+    /// Quantize per output channel with `scales[c] = max|x[:, c]| / 127`
+    /// (symmetric, zero-point 0).  All-zero channels take scale 1.0: their
+    /// quantized values are exactly 0, and a 1.0 scale keeps
+    /// `dequantize`/`error_bound` well-defined instead of propagating a
+    /// degenerate 0 (or NaN-producing) scale downstream.
+    ///
+    /// The i32 GEMM accumulator is provably overflow-free only while the
+    /// reduction depth stays within [`I32_ACC_SAFE_K`] (worst case
+    /// `K * 127 * 127 < 2^31`); quantizing a weight deeper than that is a
+    /// caller bug.
     pub fn quantize(x: &Matrix) -> QuantMatrix {
-        let amax = x.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
-        let data = x
-            .data
-            .iter()
-            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
-            .collect();
-        QuantMatrix { rows: x.rows, cols: x.cols, data, scale }
+        debug_assert!(
+            x.rows <= I32_ACC_SAFE_K,
+            "K={} exceeds the i32 accumulator safety bound {} (127*127*K would overflow)",
+            x.rows,
+            I32_ACC_SAFE_K
+        );
+        let (rows, cols) = (x.rows, x.cols);
+        let mut scales = vec![1.0f32; cols];
+        for (c, s) in scales.iter_mut().enumerate() {
+            let mut amax = 0.0f32;
+            for r in 0..rows {
+                amax = amax.max(x.data[r * cols + c].abs());
+            }
+            if amax > 0.0 {
+                *s = amax / 127.0;
+            }
+        }
+        let mut data = vec![0i8; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let q = (x.data[r * cols + c] / scales[c]).round().clamp(-127.0, 127.0);
+                data[r * cols + c] = q as i8;
+            }
+        }
+        QuantMatrix { rows, cols, data, scales }
     }
 
     pub fn dequantize(&self) -> Matrix {
-        Matrix::from_vec(
-            self.rows,
-            self.cols,
-            self.data.iter().map(|&q| q as f32 * self.scale).collect(),
-        )
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[r * self.cols + c] =
+                    self.data[r * self.cols + c] as f32 * self.scales[c];
+            }
+        }
+        out
     }
 
     #[inline]
@@ -44,53 +126,82 @@ impl QuantMatrix {
         self.data[r * self.cols + c]
     }
 
-    /// Worst-case element quantization error bound: scale / 2.
-    pub fn error_bound(&self) -> f32 {
-        self.scale * 0.5
+    /// Worst-case element quantization error of column `c`: scale / 2
+    /// (round-to-nearest halves the quantization step).
+    pub fn error_bound(&self, c: usize) -> f32 {
+        self.scales[c] * 0.5
+    }
+
+    /// The loosest per-channel bound — a whole-matrix tolerance.
+    pub fn max_error_bound(&self) -> f32 {
+        self.scales.iter().fold(0.0f32, |a, &s| a.max(s)) * 0.5
+    }
+
+    /// Bytes of the quantized representation (values + scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
     }
 }
 
-/// Int8 GEMM with i32 accumulation, dequantized to f32 on output — the
-/// tensor-core Int8 data path.
-pub fn int8_matmul(a: &QuantMatrix, b: &QuantMatrix) -> Matrix {
-    assert_eq!(a.cols, b.rows);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+/// Dynamic per-batch activation quantization: one symmetric tensor-wide
+/// scale over `src`, quantized values written into `dst[..src.len()]`
+/// (the caller stages `dst` in the workspace `GemmScratch` — no
+/// per-request allocation).  Returns the scale; all-zero batches get
+/// scale 1.0 like all-zero weight channels.
+pub fn quantize_activations_into(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert!(dst.len() >= src.len());
+    let amax = src.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Reference Int8 GEMM (the scalar oracle for the SIMD kernels in
+/// `gemm::int8`): dynamically quantizes `a`, accumulates in i32, and
+/// dequantizes on store via `a_scale * w.scales[j]`.
+pub fn int8_matmul(a: &Matrix, w: &QuantMatrix) -> Matrix {
+    assert_eq!(a.cols, w.rows);
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let mut qa = vec![0i8; m * k];
+    let a_scale = quantize_activations_into(&a.data, &mut qa);
     let mut c = Matrix::zeros(m, n);
-    let out_scale = a.scale * b.scale;
     for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = c.row_mut(i);
+        let arow = &qa[i * k..(i + 1) * k];
         let mut acc = vec![0i32; n];
         for (kk, &aik) in arow.iter().enumerate() {
             if aik == 0 {
                 continue;
             }
-            let brow = &b.data[kk * n..(kk + 1) * n];
+            let brow = &w.data[kk * n..(kk + 1) * n];
             let aik = aik as i32;
             for (av, bv) in acc.iter_mut().zip(brow) {
                 *av += aik * *bv as i32;
             }
         }
-        for (cv, av) in crow.iter_mut().zip(&acc) {
-            *cv = *av as f32 * out_scale;
+        for (j, (cv, av)) in c.row_mut(i).iter_mut().zip(&acc).enumerate() {
+            *cv = *av as f32 * a_scale * w.scales[j];
         }
     }
     c
 }
 
-/// Int8 + 2:4 sparse GEMM (the "Int8-Sparse" configuration): B is
-/// 2:4-compressed Int8 values + positions.
+/// Int8 + 2:4 sparse storage (the "Int8-Sparse" configuration): B is
+/// 2:4-compressed Int8 values + positions, with per-output-channel scales.
 #[derive(Clone, Debug)]
 pub struct QuantVw24 {
     pub k: usize,
     pub n: usize,
     pub vals: Vec<i8>,
     pub sel: Vec<u8>,
-    pub scale: f32,
+    pub scales: Vec<f32>,
 }
 
 impl QuantVw24 {
-    /// Quantize then 2:4-compress along K (keep top-2 magnitudes/group).
+    /// Quantize per channel then 2:4-compress along K (keep top-2
+    /// magnitudes per 4-group).
     pub fn from_dense(w: &Matrix) -> QuantVw24 {
         assert_eq!(w.rows % 4, 0);
         let q = QuantMatrix::quantize(w);
@@ -110,19 +221,21 @@ impl QuantVw24 {
                 }
             }
         }
-        QuantVw24 { k, n, vals, sel, scale: q.scale }
+        QuantVw24 { k, n, vals, sel, scales: q.scales }
     }
 }
 
-/// C = A_q * B_q24 with i32 accumulation (sparse-tensor-core Int8 path).
-pub fn int8_vw24_matmul(a: &QuantMatrix, b: &QuantVw24) -> Matrix {
+/// C = A_q * B_q24 with i32 accumulation (sparse-tensor-core Int8 path);
+/// `a` is dynamically quantized like [`int8_matmul`].
+pub fn int8_vw24_matmul(a: &Matrix, b: &QuantVw24) -> Matrix {
     assert_eq!(a.cols, b.k);
     let (m, n) = (a.rows, b.n);
     let khalf = b.k / 2;
+    let mut qa = vec![0i8; m * a.cols];
+    let a_scale = quantize_activations_into(&a.data, &mut qa);
     let mut c = Matrix::zeros(m, n);
-    let out_scale = a.scale * b.scale;
     for i in 0..m {
-        let arow = &a.data[i * a.cols..(i + 1) * a.cols];
+        let arow = &qa[i * a.cols..(i + 1) * a.cols];
         let mut acc = vec![0i32; n];
         for ii in 0..khalf {
             let grp_base = (ii / 2) * 4;
@@ -133,8 +246,8 @@ pub fn int8_vw24_matmul(a: &QuantMatrix, b: &QuantVw24) -> Matrix {
                 acc[j] += arow[r] as i32 * vrow[j] as i32;
             }
         }
-        for (cv, av) in c.row_mut(i).iter_mut().zip(&acc) {
-            *cv = *av as f32 * out_scale;
+        for (j, (cv, av)) in c.row_mut(i).iter_mut().zip(&acc).enumerate() {
+            *cv = *av as f32 * a_scale * b.scales[j];
         }
     }
     c
@@ -147,13 +260,24 @@ mod tests {
     use crate::util::Rng;
 
     #[test]
-    fn quantize_roundtrip_error_bounded() {
+    fn quantize_roundtrip_error_bounded_per_channel() {
         let mut rng = Rng::new(1);
-        let x = Matrix::randn(32, 32, &mut rng);
+        let mut x = Matrix::randn(32, 32, &mut rng);
+        // one deliberately tiny-range channel: per-channel scales keep its
+        // roundtrip error proportional to *its* range, not the matrix max
+        for r in 0..32 {
+            x.data[r * 32 + 5] *= 1e-3;
+        }
         let q = QuantMatrix::quantize(&x);
         let back = q.dequantize();
-        let err = x.max_abs_diff(&back);
-        assert!(err <= q.error_bound() + 1e-6, "err {err} > bound {}", q.error_bound());
+        for c in 0..32 {
+            let bound = q.error_bound(c) + 1e-6;
+            for r in 0..32 {
+                let err = (x.at(r, c) - back.at(r, c)).abs();
+                assert!(err <= bound, "col {c}: err {err} > bound {bound}");
+            }
+        }
+        assert!(q.error_bound(5) < q.error_bound(0) * 1e-2, "tiny channel gets a tiny scale");
     }
 
     #[test]
@@ -162,7 +286,7 @@ mod tests {
         let a = Matrix::randn(24, 48, &mut rng);
         let b = Matrix::randn(48, 32, &mut rng);
         let c_fp = matmul_naive(&a, &b);
-        let c_q = int8_matmul(&QuantMatrix::quantize(&a), &QuantMatrix::quantize(&b));
+        let c_q = int8_matmul(&a, &QuantMatrix::quantize(&b));
         // relative Frobenius error small (the "almost no accuracy loss" claim)
         let rel = c_q.dist(&c_fp) / c_fp.dist(&Matrix::zeros(24, 32)).max(1e-9);
         assert!(rel < 0.03, "relative error {rel}");
@@ -173,28 +297,60 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = Matrix::randn(16, 32, &mut rng);
         let w = Matrix::randn(32, 24, &mut rng);
-        let aq = QuantMatrix::quantize(&a);
         let wq24 = QuantVw24::from_dense(&w);
-        let got = int8_vw24_matmul(&aq, &wq24);
-        // reference: dequantize the kept values and run fp GEMM
+        let got = int8_vw24_matmul(&a, &wq24);
+        // reference: dequantize the kept values and run fp GEMM on the
+        // dequantized activations
         let khalf = wq24.k / 2;
         let mut wd = Matrix::zeros(wq24.k, wq24.n);
         for c in 0..wq24.n {
             for ii in 0..khalf {
                 let r = (ii / 2) * 4 + wq24.sel[ii * wq24.n + c] as usize;
-                *wd.at_mut(r, c) = wq24.vals[ii * wq24.n + c] as f32 * wq24.scale;
+                *wd.at_mut(r, c) = wq24.vals[ii * wq24.n + c] as f32 * wq24.scales[c];
             }
         }
-        let want = matmul_naive(&aq.dequantize(), &wd);
+        let mut qa = vec![0i8; a.data.len()];
+        let a_scale = quantize_activations_into(&a.data, &mut qa);
+        let ad = Matrix::from_vec(
+            a.rows,
+            a.cols,
+            qa.iter().map(|&q| q as f32 * a_scale).collect(),
+        );
+        let want = matmul_naive(&ad, &wd);
         assert!(got.max_abs_diff(&want) < 1e-3, "{}", got.max_abs_diff(&want));
     }
 
     #[test]
-    fn zero_matrix_quantizes() {
+    fn zero_matrix_and_zero_channels_quantize_with_unit_scale() {
         let z = Matrix::zeros(4, 4);
         let q = QuantMatrix::quantize(&z);
         assert!(q.data.iter().all(|&v| v == 0));
+        assert!(q.scales.iter().all(|&s| s == 1.0), "all-zero channel keeps scale 1.0");
         assert_eq!(q.dequantize(), z);
+        // mixed: one live channel, three zero ones
+        let mut x = Matrix::zeros(4, 4);
+        for r in 0..4 {
+            x.data[r * 4 + 2] = (r as f32 + 1.0) * 0.25;
+        }
+        let q = QuantMatrix::quantize(&x);
+        assert_eq!(q.scales[0], 1.0);
+        assert_eq!(q.scales[3], 1.0);
+        assert!((q.dequantize().max_abs_diff(&x)) <= q.error_bound(2) + 1e-6);
+    }
+
+    #[test]
+    fn activation_quantization_is_dynamic_and_bounded() {
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..257).map(|_| (rng.next_f32() - 0.5) * 3.0).collect();
+        let mut q = vec![0i8; 257];
+        let scale = quantize_activations_into(&x, &mut q);
+        for (&v, &qv) in x.iter().zip(&q) {
+            assert!((v - qv as f32 * scale).abs() <= scale * 0.5 + 1e-6);
+        }
+        // all-zero batch: unit scale, zero codes
+        let scale = quantize_activations_into(&[0.0; 8], &mut q);
+        assert_eq!(scale, 1.0);
+        assert!(q[..8].iter().all(|&v| v == 0));
     }
 
     #[test]
@@ -205,5 +361,15 @@ mod tests {
         let q = QuantMatrix::quantize(&x);
         assert_eq!(q.data.len(), x.data.len());
         assert_eq!(std::mem::size_of_val(&q.data[..]) * 4, std::mem::size_of_val(&x.data[..]));
+        assert!(q.storage_bytes() < x.data.len() * 4 / 3);
+    }
+
+    #[test]
+    fn precision_labels_roundtrip() {
+        for p in [Precision::Fp32, Precision::Int8, Precision::Auto] {
+            assert_eq!(Precision::from_label(p.label()), Some(p));
+        }
+        assert!(Precision::from_label("f16").is_none());
+        assert_eq!(Precision::default(), Precision::Fp32);
     }
 }

@@ -125,6 +125,10 @@ fn family_label(w: &PackedWeight) -> &'static str {
         PackedWeight::Tw(_) => "tw",
         PackedWeight::Tvw(_) => "tvw",
         PackedWeight::Vw24(_) => "vw24",
+        PackedWeight::Int8Dense(_) => "dense-i8",
+        PackedWeight::Int8Tw(_) => "tw-i8",
+        PackedWeight::Int8Tvw(_) => "tvw-i8",
+        PackedWeight::Int8Vw24(_) => "vw24-i8",
     }
 }
 
@@ -140,6 +144,9 @@ pub struct NodeProfile {
     nanos: AtomicU64,
     rows: AtomicU64,
     flops: AtomicU64,
+    /// Bytes moved through memory per dispatch at the node's storage
+    /// precision: A reads (i8 or f32) + packed weight bytes + C writes.
+    bytes: AtomicU64,
     last_m: AtomicUsize,
     last_bm: AtomicUsize,
     last_bk: AtomicUsize,
@@ -160,6 +167,7 @@ impl NodeProfile {
             nanos: AtomicU64::new(0),
             rows: AtomicU64::new(0),
             flops: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
             last_m: AtomicUsize::new(0),
             last_bm: AtomicUsize::new(0),
             last_bk: AtomicUsize::new(0),
@@ -176,6 +184,7 @@ impl NodeProfile {
         m: usize,
         nanos: u64,
         flops: u64,
+        bytes: u64,
         bm: usize,
         bk: usize,
         threads: usize,
@@ -185,6 +194,7 @@ impl NodeProfile {
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
         self.rows.fetch_add(m as u64, Ordering::Relaxed);
         self.flops.fetch_add(flops, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
         self.last_m.store(m, Ordering::Relaxed);
         self.last_bm.store(bm, Ordering::Relaxed);
         self.last_bk.store(bk, Ordering::Relaxed);
@@ -206,6 +216,20 @@ impl NodeProfile {
 
     pub fn flops(&self) -> u64 {
         self.flops.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Achieved effective memory bandwidth (GB/s) over recorded time.
+    pub fn gbps(&self) -> f64 {
+        let secs = self.secs();
+        if secs > 0.0 {
+            self.bytes() as f64 / secs / 1e9
+        } else {
+            0.0
+        }
     }
 
     /// Achieved GFLOP/s over this node's recorded time.
@@ -239,6 +263,7 @@ impl NodeProfile {
         self.nanos.store(0, Ordering::Relaxed);
         self.rows.store(0, Ordering::Relaxed);
         self.flops.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
         self.last_m.store(0, Ordering::Relaxed);
         self.last_bm.store(0, Ordering::Relaxed);
         self.last_bk.store(0, Ordering::Relaxed);
@@ -258,6 +283,8 @@ impl NodeProfile {
             ("rows", num(self.rows() as f64)),
             ("flops", num(self.flops() as f64)),
             ("gflops", num(self.gflops())),
+            ("bytes", num(self.bytes() as f64)),
+            ("gbps", num(self.gbps())),
             ("last_m", num(m as f64)),
             ("last_bm", num(bm as f64)),
             ("last_bk", num(bk as f64)),
@@ -472,7 +499,7 @@ mod tests {
         prof.record_op(OpKind::Gemm, 1_000_000);
         // packed micro code for "avx2 4x16" (Isa index 1, MR 4, NR 16)
         let micro = (1usize << 16) | (4 << 8) | 16;
-        prof.nodes[0].record(2, 1_000_000, 64, 64, 64, 1, micro);
+        prof.nodes[0].record(2, 1_000_000, 64, 128, 64, 64, 1, micro);
         prof.record_forward(1_500_000);
 
         assert_eq!(prof.op_calls(OpKind::Gemm), 1);
@@ -481,6 +508,8 @@ mod tests {
         assert_eq!(prof.nodes[0].calls(), 1);
         assert_eq!(prof.nodes[0].rows(), 2);
         assert!(prof.nodes[0].gflops() > 0.0);
+        assert_eq!(prof.nodes[0].bytes(), 128);
+        assert!(prof.nodes[0].gbps() > 0.0);
         assert_eq!(prof.nodes[0].last_dispatch(), (2, 64, 64, 1));
         assert_eq!(prof.nodes[0].last_micro(), "avx2 4x16");
 

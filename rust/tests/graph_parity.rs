@@ -23,7 +23,7 @@ fn small_opts() -> CompileOptions {
         seq: 4,
         heads: 4,
         n_classes: 4,
-        pack: PackOptions { sparsity: 0.75, g: 8 },
+        pack: PackOptions { sparsity: 0.75, g: 8, ..Default::default() },
         seed: 7,
         ..CompileOptions::default()
     }
