@@ -1,0 +1,281 @@
+//! Bench: fused GEMM epilogues (bias + relu + residual applied at store
+//! time) vs the unfused kernel + separate elementwise sweeps, for every
+//! GEMM pattern at serving-sized M, plus end-to-end zoo-model forwards
+//! compiled with and without the graph fusion pass.  Emits
+//! `BENCH_fusion.json`; CI validates the grid is complete (all four
+//! patterns per shape) and fails if fusion ever loses on the
+//! bandwidth-bound FFN shapes whenever an x86 SIMD ISA was detected.
+//!
+//! The unfused side performs the exact work the graph executor used to
+//! do per layer: the bare GEMM, then a bias+activation sweep over C,
+//! then a residual-add sweep — two extra full passes of C through
+//! memory that the fused epilogue eliminates.
+//!
+//!   cargo bench --bench fusion_speedup
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::{bench, quick_mode, section};
+use tilewise::exec::PreparedModel;
+use tilewise::gemm::micro::{self, Isa};
+use tilewise::gemm::{
+    matmul_tiled_into, matmul_tiled_into_panel, matmul_tiled_into_panel_epi,
+    tvw_matmul_into_scratch, tvw_matmul_into_scratch_epi, tw_matmul_into_scratch_panels,
+    tw_matmul_into_scratch_panels_epi, vw24_matmul_into_epi, vw24_matmul_into_with, Act, Epilogue,
+    GemmScratch, PackedPanel, TileConfig,
+};
+use tilewise::graph::{compile, CompileOptions, GraphModel, GraphPattern, Op, PackOptions};
+use tilewise::json::{arr, num, obj, s, Json};
+use tilewise::models;
+use tilewise::sparse::{prune_tvw, prune_tw, prune_vw, TvwPlan, TwPlan, Vw24Plan};
+use tilewise::tensor::Matrix;
+use tilewise::util::Rng;
+
+fn gflops(m: usize, k: usize, n: usize, density: f64, us: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 * density / (us * 1e-6) / 1e9
+}
+
+/// The unfused elementwise tail: one bias+relu sweep, one residual sweep.
+fn unfused_tail(c: &mut Matrix, bias: &[f32], r: &Matrix) {
+    let cols = c.cols;
+    for row in c.data.chunks_mut(cols) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    for (cv, rv) in c.data.iter_mut().zip(&r.data) {
+        *cv += rv;
+    }
+}
+
+fn arena_floats(p: &tilewise::graph::GraphProgram) -> u64 {
+    p.buf_shapes.iter().map(|&(r, c)| (r * c) as u64).sum()
+}
+
+fn main() {
+    let sparsity = 0.75;
+    let g = 32usize;
+    // serving-sized M over the BERT-base projection/FFN widths; quick
+    // mode shrinks K/N, not M — the serving-M claim is the point
+    let shapes: Vec<(usize, usize, usize)> = if quick_mode() {
+        vec![(64, 256, 256), (64, 256, 1024)]
+    } else {
+        vec![(64, 768, 768), (64, 768, 3072), (64, 3072, 768)]
+    };
+
+    let auto = micro::resolve(&TileConfig::dense_default());
+    let x86_simd = matches!(auto.isa, Isa::Avx2 | Isa::Avx512);
+    section(&format!(
+        "fused vs unfused epilogue (bias+relu+residual) at serving M, kernel {} (sparsity {sparsity}, G {g})",
+        micro::active_label()
+    ));
+
+    let mut rng = Rng::new(0xF5ED);
+    let mut cells = Vec::new();
+    for &(m, k, n) in &shapes {
+        let a = Matrix::randn(m, k, &mut rng);
+        let w = Matrix::randn(k, n, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|j| ((j % 17) as f32 - 8.0) * 0.02).collect();
+        let r = Matrix::randn(m, n, &mut rng);
+        let twplan = TwPlan::encode(&w, &prune_tw(&w, sparsity, g, None));
+        let (tws, mask) = prune_tvw(&w, sparsity, g);
+        let tvplan = TvwPlan::encode(&w, &tws, &mask);
+        let vplan = Vw24Plan::encode(&w, &prune_vw(&w, 0.5, 4)).expect("2:4 encodable");
+        let f_panel = auto.is_simd().then(|| PackedPanel::pack(&w.data, k, n, n, auto.nr));
+        let mut c = Matrix::zeros(m, n);
+        let mut scratch = GemmScratch::new();
+        let epi = Epilogue { bias: Some(&bias), act: Some(Act::Relu), residual: Some(&r) };
+
+        for (pattern, density) in
+            [("dense", 1.0), ("tw", 1.0 - sparsity), ("tvw", 1.0 - sparsity), ("vw24", 0.5)]
+        {
+            let unfused_us = bench(&format!("{pattern} {m}x{k}x{n} unfused"), || {
+                match pattern {
+                    "dense" => match &f_panel {
+                        Some(p) => matmul_tiled_into_panel(
+                            &a,
+                            &w,
+                            Some(p),
+                            &mut c,
+                            &TileConfig::dense_default(),
+                        ),
+                        None => matmul_tiled_into(&a, &w, &mut c, &TileConfig::dense_default()),
+                    },
+                    "tw" => {
+                        c.data.fill(0.0);
+                        tw_matmul_into_scratch_panels(
+                            &a,
+                            &twplan,
+                            None,
+                            &mut c,
+                            &TileConfig::tw_default(),
+                            &mut scratch,
+                        );
+                    }
+                    "tvw" => tvw_matmul_into_scratch(
+                        &a,
+                        &tvplan,
+                        &mut c,
+                        &TileConfig::tvw_default(),
+                        &mut scratch,
+                    ),
+                    _ => vw24_matmul_into_with(&a, &vplan, &mut c, &TileConfig::vw_default()),
+                }
+                unfused_tail(&mut c, &bias, &r);
+            });
+            let fused_us = bench(&format!("{pattern} {m}x{k}x{n} fused"), || match pattern {
+                "dense" => match &f_panel {
+                    Some(p) => matmul_tiled_into_panel_epi(
+                        &a,
+                        &w,
+                        Some(p),
+                        &mut c,
+                        &TileConfig::dense_default(),
+                        Some(&epi),
+                    ),
+                    None => matmul_tiled_into_panel_epi(
+                        &a,
+                        &w,
+                        None,
+                        &mut c,
+                        &TileConfig::dense_default(),
+                        Some(&epi),
+                    ),
+                },
+                "tw" => {
+                    // caller-prefill contract: pruned columns read epi(0)
+                    epi.prefill(&mut c);
+                    tw_matmul_into_scratch_panels_epi(
+                        &a,
+                        &twplan,
+                        None,
+                        &mut c,
+                        &TileConfig::tw_default(),
+                        &mut scratch,
+                        Some(&epi),
+                    );
+                }
+                "tvw" => tvw_matmul_into_scratch_epi(
+                    &a,
+                    &tvplan,
+                    &mut c,
+                    &TileConfig::tvw_default(),
+                    &mut scratch,
+                    Some(&epi),
+                ),
+                _ => vw24_matmul_into_epi(
+                    &a,
+                    &vplan,
+                    &mut c,
+                    &TileConfig::vw_default(),
+                    Some(&epi),
+                ),
+            });
+            let (f_gf, u_gf) =
+                (gflops(m, k, n, density, fused_us), gflops(m, k, n, density, unfused_us));
+            println!(
+                "    {pattern:<6} {m}x{k}x{n}: unfused {u_gf:.2} GFLOP/s, fused {f_gf:.2} GFLOP/s \
+                 ({:.2}x)",
+                unfused_us / fused_us.max(1e-12)
+            );
+            cells.push(obj(vec![
+                ("pattern", s(pattern)),
+                ("m", num(m as f64)),
+                ("k", num(k as f64)),
+                ("n", num(n as f64)),
+                ("density", num(density)),
+                ("unfused_gflops", num(u_gf)),
+                ("fused_gflops", num(f_gf)),
+                ("unfused_us", num(unfused_us)),
+                ("fused_us", num(fused_us)),
+                ("speedup", num(unfused_us / fused_us.max(1e-12))),
+            ]));
+        }
+    }
+
+    // end-to-end: zoo models compiled with and without the fusion pass,
+    // through the same graph executor `serve --backend native` dispatches
+    section("end-to-end model forward, fused vs unfused compile");
+    let (batch, seq, width, layers) = if quick_mode() { (2, 4, 32, 1) } else { (4, 16, 256, 2) };
+    let mut model_cells = Vec::new();
+    for (model, workload) in [
+        ("bert", models::bert_at(batch, seq, width, layers)),
+        ("nmt", models::nmt_at(batch, width.min(64), seq)),
+    ] {
+        let opts = CompileOptions {
+            seq,
+            heads: 4,
+            n_classes: 8,
+            pack: PackOptions { sparsity, g, ..Default::default() },
+            seed: 42,
+            ..CompileOptions::default()
+        };
+        for pattern in [GraphPattern::Dense, GraphPattern::Tw, GraphPattern::Tvw] {
+            let fused_prog =
+                compile(&workload, &CompileOptions { fuse: true, ..opts.with_pattern(pattern) })
+                    .expect("fused compile");
+            let unfused_prog =
+                compile(&workload, &CompileOptions { fuse: false, ..opts.with_pattern(pattern) })
+                    .expect("unfused compile");
+            let tail_ops = |p: &tilewise::graph::GraphProgram| {
+                p.ops
+                    .iter()
+                    .filter(|o| matches!(o, Op::BiasAct { .. } | Op::Residual { .. }))
+                    .count()
+            };
+            let ops_removed = tail_ops(&unfused_prog) - tail_ops(&fused_prog);
+            let (fused_arena, unfused_arena) =
+                (arena_floats(&fused_prog), arena_floats(&unfused_prog));
+            let dims = fused_prog.dims;
+            let variant = fused_prog.variant.clone();
+            let x: Vec<f32> = (0..dims.batch * dims.per_request_len())
+                .map(|i| ((i % 13) as f32 - 6.0) * 0.05)
+                .collect();
+            let mut fm = GraphModel::new(Arc::new(vec![fused_prog]), None).unwrap();
+            let mut um = GraphModel::new(Arc::new(vec![unfused_prog]), None).unwrap();
+            let unfused_us = bench(&format!("{model}/{variant} unfused"), || {
+                um.run(&variant, &x).unwrap();
+            });
+            let fused_us = bench(&format!("{model}/{variant} fused"), || {
+                fm.run(&variant, &x).unwrap();
+            });
+            println!(
+                "    {model}/{variant}: unfused {unfused_us:.1}us, fused {fused_us:.1}us \
+                 ({:.2}x, {ops_removed} tail ops removed, arena {unfused_arena} -> {fused_arena} floats)",
+                unfused_us / fused_us.max(1e-12)
+            );
+            model_cells.push(obj(vec![
+                ("model", s(model)),
+                ("variant", s(&variant)),
+                ("unfused_us", num(unfused_us)),
+                ("fused_us", num(fused_us)),
+                ("speedup", num(unfused_us / fused_us.max(1e-12))),
+                ("tail_ops_removed", num(ops_removed as f64)),
+                ("unfused_arena_floats", num(unfused_arena as f64)),
+                ("fused_arena_floats", num(fused_arena as f64)),
+            ]));
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", s("fusion")),
+        ("isa", s(auto.isa.label())),
+        ("micro", s(&micro::active_label())),
+        ("avx2", Json::Bool(x86_simd)),
+        ("sparsity", num(sparsity)),
+        ("g", num(g as f64)),
+        ("cells", arr(cells)),
+        ("models", arr(model_cells)),
+    ]);
+    let out = "BENCH_fusion.json";
+    match std::fs::write(out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("writing {out}: {e}"),
+    }
+}

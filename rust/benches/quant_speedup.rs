@@ -17,6 +17,7 @@ mod bench_util;
 use std::sync::Arc;
 
 use bench_util::{bench, quick_mode, section};
+use tilewise::exec::PreparedModel;
 use tilewise::gemm::micro::{self, Isa};
 use tilewise::gemm::{
     int8_dense_panel, int8_matmul_tiled_into, int8_tvw_matmul_into, int8_tw_matmul_into,

@@ -54,6 +54,9 @@ pub struct NativeModelSpec {
     /// TW tile granularity G.
     pub g: usize,
     pub seed: u64,
+    /// Graph-level epilogue fusion (`serve --no-fusion` clears it; the
+    /// `PALLAS_NO_FUSION` env still applies when this stays true).
+    pub fuse: bool,
     /// Which variants to pack (packing TW/TVW plans for large layers is
     /// the expensive part of construction; benches prune this list).
     pub variants: Vec<String>,
@@ -75,6 +78,7 @@ impl Default for NativeModelSpec {
             sparsity: 0.75,
             g: 16,
             seed: 42,
+            fuse: true,
             variants: NATIVE_VARIANTS.iter().map(|v| v.to_string()).collect(),
         }
     }
@@ -190,7 +194,13 @@ fn residual_mlp_program(
         d_model: spec.d_model,
         n_classes: spec.n_classes,
     };
-    Ok(b.finish("residual-mlp", variant, x, logits, dims))
+    let mut p = b.finish("residual-mlp", variant, x, logits, dims);
+    // this builder bypasses graph::compile, so it runs the fusion pass
+    // itself; opts.fuse carries the PALLAS_NO_FUSION env default
+    if opts.fuse && spec.fuse {
+        crate::graph::fuse_program(&mut p);
+    }
+    Ok(p)
 }
 
 /// The shared, immutable packed model (compiled variant programs).

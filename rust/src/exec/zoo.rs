@@ -50,6 +50,9 @@ pub struct ZooSpec {
     /// `Fp32`, `Int8` (quantize-at-pack), or `Auto` (ask the plan cache
     /// per layer shape, f32 for untuned shapes).
     pub precision: Precision,
+    /// Graph-level epilogue fusion (`serve --no-fusion` clears it; the
+    /// `PALLAS_NO_FUSION` env still applies when this stays true).
+    pub fuse: bool,
     pub seed: u64,
     /// Per-slot decode capacity in steps (prompt rows + generated tokens)
     /// for streaming-capable models (nmt, decoder); sizes the KV caches.
@@ -76,6 +79,7 @@ impl ZooSpec {
             sparsity: 0.75,
             g: 32,
             precision: Precision::Fp32,
+            fuse: true,
             seed: 42,
             max_steps: 32,
             variants: vec!["model_dense".into(), "model_tw".into(), "model_tvw".into()],
@@ -132,6 +136,8 @@ impl ZooSpec {
             // one-shot forward reads the last position so streamed decode
             // has an exact parity twin
             causal: self.model == "decoder",
+            // the env escape hatch still wins when the spec leaves fusion on
+            fuse: self.fuse && CompileOptions::default().fuse,
             seed: self.seed,
             plan_cache,
             // Auto-pattern lookups must use the name the autotune CLI

@@ -5,7 +5,7 @@
 //! cross-checks and as the "before" point of the §Perf log.
 
 use super::micro::{self, PackedPanel};
-use super::TileConfig;
+use super::{Epilogue, TileConfig};
 use crate::pool::{self, ThreadPool};
 use crate::tensor::Matrix;
 
@@ -41,20 +41,37 @@ pub fn matmul_tiled_into_panel(
     c: &mut Matrix,
     cfg: &TileConfig,
 ) {
+    matmul_tiled_into_panel_epi(a, b, panel, c, cfg, None);
+}
+
+/// [`matmul_tiled_into_panel`] with a fused [`Epilogue`] applied on each
+/// completed row block before the kernel moves to the next — C is
+/// written exactly once per cell, so the extra bias/activation/residual
+/// sweeps the unfused graph pays disappear.  `epi: None` is the plain
+/// GEMM (identical accumulation order, bit-identical output).
+pub fn matmul_tiled_into_panel_epi(
+    a: &Matrix,
+    b: &Matrix,
+    panel: Option<&PackedPanel>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
     c.data.fill(0.0);
     let r = micro::resolve(cfg);
-    if micro::dense_blocked(&r, a, b, panel, c, cfg) {
+    if micro::dense_blocked(&r, a, b, panel, c, cfg, epi) {
         return;
     }
-    scalar_tiled_into(a, b, c, cfg);
+    scalar_tiled_into(a, b, c, cfg, epi);
 }
 
 /// The scalar blocked loops (the always-available fallback; `c` must be
 /// pre-zeroed).  Loop order and 2-way k-unroll as in the module docs.
-fn scalar_tiled_into(a: &Matrix, b: &Matrix, c: &mut Matrix, cfg: &TileConfig) {
+/// The epilogue applies per row block once its reduction is complete.
+fn scalar_tiled_into(a: &Matrix, b: &Matrix, c: &mut Matrix, cfg: &TileConfig, epi: Option<&Epilogue>) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let bm = cfg.bm();
     let bk = cfg.bk();
@@ -85,6 +102,9 @@ fn scalar_tiled_into(a: &Matrix, b: &Matrix, c: &mut Matrix, cfg: &TileConfig) {
                     }
                 }
             }
+        }
+        if let Some(e) = epi {
+            e.apply_rows(c, i0, i1);
         }
     }
 }
@@ -140,13 +160,28 @@ pub fn matmul_parallel_into(
     threads: usize,
     pool: &ThreadPool,
 ) -> usize {
+    matmul_parallel_into_epi(a, b, c, cfg, threads, pool, None)
+}
+
+/// [`matmul_parallel_into`] with a fused [`Epilogue`]: each lane applies
+/// it to its own completed row band before releasing the chunk, so the
+/// fused sweeps parallelize with the GEMM itself.
+pub fn matmul_parallel_into_epi(
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+    epi: Option<&Epilogue>,
+) -> usize {
     assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let eff = effective_parallel_threads(m, threads);
     if eff == 1 {
-        matmul_tiled_into(a, b, c, cfg);
+        matmul_tiled_into_panel_epi(a, b, None, c, cfg, epi);
         return 1;
     }
     let band = m.div_ceil(eff);
@@ -161,21 +196,23 @@ pub fn matmul_parallel_into(
             return;
         }
         let arows = &a_data[i0 * k..];
-        if micro::gemm_strided(&r, rows, k, n, arows, k, b_data, n, chunk, n) {
-            return;
-        }
-        for i in 0..rows {
-            let arow = &a_data[(i0 + i) * k..(i0 + i + 1) * k];
-            let crow = &mut chunk[i * n..(i + 1) * n];
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &b_data[kk * n..(kk + 1) * n];
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += aik * bv;
+        if !micro::gemm_strided(&r, rows, k, n, arows, k, b_data, n, chunk, n) {
+            for i in 0..rows {
+                let arow = &a_data[(i0 + i) * k..(i0 + i + 1) * k];
+                let crow = &mut chunk[i * n..(i + 1) * n];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b_data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
                 }
             }
+        }
+        if let Some(e) = epi {
+            e.apply_chunk(chunk, i0, n);
         }
     });
     eff
@@ -297,6 +334,49 @@ mod tests {
             let mut got = Matrix::zeros(m, n);
             matmul_tiled_into_panel(&a, &b, Some(&panel), &mut got, &cfg);
             assert!(got.max_abs_diff(&want) < 1e-4, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_is_bit_identical_to_separate_passes() {
+        use super::super::Act;
+        let mut rng = Rng::new(78);
+        let pool = crate::pool::ThreadPool::new(3);
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (13, 16, 23), (64, 32, 24)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|j| (j as f32 - 2.0) * 0.1).collect();
+            let res = Matrix::randn(m, n, &mut rng);
+            // unfused reference: GEMM, then the separate sweeps the graph
+            // executor would run
+            let mut want = Matrix::zeros(m, n);
+            matmul_tiled_into(&a, &b, &mut want, &TileConfig::new(16, 16));
+            for i in 0..m {
+                for j in 0..n {
+                    let mut v = want.at(i, j) + bias[j];
+                    if v < 0.0 {
+                        v = 0.0;
+                    }
+                    *want.at_mut(i, j) = v + res.at(i, j);
+                }
+            }
+            let epi =
+                Epilogue { bias: Some(&bias), act: Some(Act::Relu), residual: Some(&res) };
+            let mut got = Matrix::zeros(m, n);
+            matmul_tiled_into_panel_epi(&a, &b, None, &mut got, &TileConfig::new(16, 16), Some(&epi));
+            assert_eq!(got.data, want.data, "serial {m}x{k}x{n}");
+            let mut got_p = Matrix::zeros(m, n);
+            matmul_parallel_into_epi(
+                &a,
+                &b,
+                &mut got_p,
+                &TileConfig::new(16, 16),
+                3,
+                &pool,
+                Some(&epi),
+            );
+            // pooled bands band the rows differently, so compare at tolerance
+            assert!(got_p.max_abs_diff(&want) < 1e-4, "pooled {m}x{k}x{n}");
         }
     }
 

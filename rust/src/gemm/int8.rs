@@ -25,7 +25,7 @@
 //! quantizer derived.
 
 use super::micro::{self, Int8Panel};
-use super::{GemmScratch, TileConfig};
+use super::{Epilogue, GemmScratch, TileConfig};
 use crate::pool::ThreadPool;
 use crate::quant::QuantMatrix;
 use crate::sparse::{TvwPlan, TwPlan, Vw24Plan};
@@ -84,6 +84,23 @@ pub fn int8_matmul_tiled_into(
     cfg: &TileConfig,
     scratch: &mut GemmScratch,
 ) {
+    int8_matmul_tiled_into_epi(a, w, panel, c, cfg, scratch, None)
+}
+
+/// [`int8_matmul_tiled_into`] with a fused [`Epilogue`] composed into the
+/// dequantizing store: `c = epi(acc * a_scale * scales[j])` — the epilogue
+/// sees dequantized f32 values, so bias/activation/residual semantics are
+/// identical to the f32 kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn int8_matmul_tiled_into_epi(
+    a: &Matrix,
+    w: &QuantMatrix,
+    panel: Option<&Int8Panel>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(a.cols, w.rows, "GEMM shape mismatch");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, w.cols);
@@ -106,7 +123,7 @@ pub fn int8_matmul_tiled_into(
     if !done {
         int8_scalar_strided(qa, lda, &w.data, m, k, n, acc);
     }
-    dequant_rows(acc, a_scale, &w.scales, &mut c.data);
+    dequant_rows(acc, a_scale, &w.scales, &mut c.data, 0, epi);
 }
 
 /// In-place multi-threaded int8 dense GEMM: the activation batch is
@@ -125,13 +142,31 @@ pub fn int8_matmul_parallel_into(
     pool: &ThreadPool,
     scratch: &mut GemmScratch,
 ) -> usize {
+    int8_matmul_parallel_into_epi(a, w, panel, c, cfg, threads, pool, scratch, None)
+}
+
+/// [`int8_matmul_parallel_into`] with a fused [`Epilogue`]: each band
+/// dequantizes + applies the epilogue into its disjoint slice of `c`
+/// (global row index = band offset + local row).
+#[allow(clippy::too_many_arguments)]
+pub fn int8_matmul_parallel_into_epi(
+    a: &Matrix,
+    w: &QuantMatrix,
+    panel: Option<&Int8Panel>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+    scratch: &mut GemmScratch,
+    epi: Option<&Epilogue>,
+) -> usize {
     assert_eq!(a.cols, w.rows, "GEMM shape mismatch");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, w.cols);
     let (m, k, n) = (a.rows, a.cols, w.cols);
     let eff = super::dense::effective_parallel_threads(m, threads);
     if eff == 1 {
-        int8_matmul_tiled_into(a, w, panel, c, cfg, scratch);
+        int8_matmul_tiled_into_epi(a, w, panel, c, cfg, scratch, epi);
         return 1;
     }
     let lda = quad_stride(k);
@@ -159,7 +194,7 @@ pub fn int8_matmul_parallel_into(
         if !done {
             int8_scalar_strided(arows, lda, w_data, rows, k, n, &mut acc);
         }
-        dequant_rows(&acc, a_scale, scales, chunk);
+        dequant_rows(&acc, a_scale, scales, chunk, i0, epi);
     });
     eff
 }
@@ -184,12 +219,30 @@ fn int8_scalar_strided(qa: &[i8], lda: usize, b: &[i8], m: usize, k: usize, n: u
     }
 }
 
-/// Dequantize whole rows on store: `out[i*n + j] = acc * a_scale * scales[j]`.
-fn dequant_rows(acc: &[i32], a_scale: f32, scales: &[f32], out: &mut [f32]) {
+/// Dequantize whole rows on store: `out[i*n + j] = acc * a_scale * scales[j]`,
+/// composing an optional fused [`Epilogue`] after the dequant (`row0` is the
+/// global row index of `out`'s first row, for bias/residual addressing).
+fn dequant_rows(
+    acc: &[i32],
+    a_scale: f32,
+    scales: &[f32],
+    out: &mut [f32],
+    row0: usize,
+    epi: Option<&Epilogue>,
+) {
     let n = scales.len();
-    for (crow, arow) in out.chunks_exact_mut(n).zip(acc.chunks_exact(n)) {
-        for ((cv, &av), &s) in crow.iter_mut().zip(arow).zip(scales) {
-            *cv = av as f32 * a_scale * s;
+    for (ri, (crow, arow)) in out.chunks_exact_mut(n).zip(acc.chunks_exact(n)).enumerate() {
+        match epi {
+            Some(e) => {
+                for (j, ((cv, &av), &s)) in crow.iter_mut().zip(arow).zip(scales).enumerate() {
+                    *cv = e.apply(row0 + ri, j, av as f32 * a_scale * s);
+                }
+            }
+            None => {
+                for ((cv, &av), &s) in crow.iter_mut().zip(arow).zip(scales) {
+                    *cv = av as f32 * a_scale * s;
+                }
+            }
         }
     }
 }
@@ -343,6 +396,23 @@ pub fn int8_tw_matmul_into(
     cfg: &TileConfig,
     scratch: &mut GemmScratch,
 ) {
+    int8_tw_matmul_into_epi(a, plan, panels, c, cfg, scratch, None)
+}
+
+/// [`int8_tw_matmul_into`] with a fused [`Epilogue`] applied at the
+/// dequantizing CTO scatter.  Same caller-prefill contract as the f32 TW
+/// kernel: when fusing, seed `c` with [`Epilogue::prefill`] first so pruned
+/// columns hold `epi(i, j, 0.0)` instead of stale data.
+#[allow(clippy::too_many_arguments)]
+pub fn int8_tw_matmul_into_epi(
+    a: &Matrix,
+    plan: &Int8TwPlan,
+    panels: Option<&[Int8Panel]>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(a.cols, plan.k);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
@@ -406,11 +476,26 @@ pub fn int8_tw_matmul_into(
                 }
             }
             // dequantizing CTO scatter (assign, like the f32 kernel)
-            for i in 0..bm {
-                let crow = c.row_mut(i0 + i);
-                for j in 0..width {
-                    let col = plan.col_idx[t * plan.g + j] as usize;
-                    crow[col] = acc[i * stride + j] as f32 * a_scale * plan.scales[col];
+            match epi {
+                Some(e) => {
+                    for i in 0..bm {
+                        let row = i0 + i;
+                        let crow = c.row_mut(row);
+                        for j in 0..width {
+                            let col = plan.col_idx[t * plan.g + j] as usize;
+                            let v = acc[i * stride + j] as f32 * a_scale * plan.scales[col];
+                            crow[col] = e.apply(row, col, v);
+                        }
+                    }
+                }
+                None => {
+                    for i in 0..bm {
+                        let crow = c.row_mut(i0 + i);
+                        for j in 0..width {
+                            let col = plan.col_idx[t * plan.g + j] as usize;
+                            crow[col] = acc[i * stride + j] as f32 * a_scale * plan.scales[col];
+                        }
+                    }
                 }
             }
         }
@@ -533,6 +618,21 @@ pub fn int8_tvw_matmul_into(
     cfg: &TileConfig,
     scratch: &mut GemmScratch,
 ) {
+    int8_tvw_matmul_into_epi(a, plan, c, cfg, scratch, None)
+}
+
+/// [`int8_tvw_matmul_into`] with a fused [`Epilogue`] applied at the
+/// dequantizing scatter.  The kernel seeds `c` itself (prefill when fusing,
+/// zero otherwise); each (row, col) is finalized exactly once because tiles
+/// own disjoint output columns and each row visits each tile once.
+pub fn int8_tvw_matmul_into_epi(
+    a: &Matrix,
+    plan: &Int8TvwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(a.cols, plan.k);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
@@ -540,7 +640,10 @@ pub fn int8_tvw_matmul_into(
     let khalf = plan.kmax / 2;
     let bm = cfg.bm();
     let r = micro::resolve(cfg);
-    c.data.fill(0.0);
+    match epi {
+        Some(e) => e.prefill(c),
+        None => c.data.fill(0.0),
+    }
     scratch.ensure_int8(m * a.cols, plan.kmax, plan.g);
     let (qa, qg, qi) = (&mut scratch.qa, &mut scratch.qg, &mut scratch.qi);
     let a_scale = quantize_rows_into(a, a.cols, qa);
@@ -591,9 +694,20 @@ pub fn int8_tvw_matmul_into(
                     }
                 }
                 let crow = c.row_mut(i);
-                for j in 0..width {
-                    let col = plan.col_idx[t * plan.g + j] as usize;
-                    crow[col] += acc[j] as f32 * a_scale * plan.scales[col];
+                match epi {
+                    Some(e) => {
+                        for j in 0..width {
+                            let col = plan.col_idx[t * plan.g + j] as usize;
+                            let v = acc[j] as f32 * a_scale * plan.scales[col];
+                            crow[col] = e.apply(i, col, v);
+                        }
+                    }
+                    None => {
+                        for j in 0..width {
+                            let col = plan.col_idx[t * plan.g + j] as usize;
+                            crow[col] += acc[j] as f32 * a_scale * plan.scales[col];
+                        }
+                    }
                 }
             }
         }
@@ -671,6 +785,19 @@ pub fn int8_vw24_matmul_into(
     cfg: &TileConfig,
     scratch: &mut GemmScratch,
 ) {
+    int8_vw24_matmul_into_epi(a, plan, c, cfg, scratch, None)
+}
+
+/// [`int8_vw24_matmul_into`] with a fused [`Epilogue`] composed into the
+/// per-row dequantizing store.  `c` is fully overwritten.
+pub fn int8_vw24_matmul_into_epi(
+    a: &Matrix,
+    plan: &Int8Vw24Plan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut GemmScratch,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(a.cols, plan.k);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
@@ -706,8 +833,19 @@ pub fn int8_vw24_matmul_into(
             }
         }
         let crow = c.row_mut(i);
-        for ((cv, &av), &s) in crow.iter_mut().zip(acc.iter()).zip(&plan.scales) {
-            *cv = av as f32 * a_scale * s;
+        match epi {
+            Some(e) => {
+                for (j, ((cv, &av), &s)) in
+                    crow.iter_mut().zip(acc.iter()).zip(&plan.scales).enumerate()
+                {
+                    *cv = e.apply(i, j, av as f32 * a_scale * s);
+                }
+            }
+            None => {
+                for ((cv, &av), &s) in crow.iter_mut().zip(acc.iter()).zip(&plan.scales) {
+                    *cv = av as f32 * a_scale * s;
+                }
+            }
         }
     }
 }
@@ -876,6 +1014,50 @@ mod tests {
         }
         // quantized storage is roughly a quarter of the f32 plan's values
         assert!(qplan.storage_bytes() < plan.storage_bytes());
+    }
+
+    #[test]
+    fn int8_fused_epilogue_matches_separate_passes() {
+        use crate::gemm::Act;
+        let (m, k, n) = (9usize, 33usize, 21usize);
+        let a = mat(m, k, 310);
+        let q = QuantMatrix::quantize(&mat(k, n, 410));
+        let bias: Vec<f32> = (0..n).map(|j| (j as f32 - 4.0) * 0.05).collect();
+        let res = mat(m, n, 510);
+        let cfg = TileConfig::dense_default();
+        let mut scratch = GemmScratch::new();
+        // unfused reference: int8 GEMM, then bias+relu, then residual
+        let mut want = Matrix::zeros(m, n);
+        int8_matmul_tiled_into(&a, &q, None, &mut want, &cfg, &mut scratch);
+        for i in 0..m {
+            for j in 0..n {
+                let mut v = want.at(i, j) + bias[j];
+                if v < 0.0 {
+                    v = 0.0;
+                }
+                *want.at_mut(i, j) = v + res.at(i, j);
+            }
+        }
+        let epi = Epilogue { bias: Some(&bias), act: Some(Act::Relu), residual: Some(&res) };
+        let mut got = Matrix::zeros(m, n);
+        int8_matmul_tiled_into_epi(&a, &q, None, &mut got, &cfg, &mut scratch, Some(&epi));
+        // same i32 accumulation + same f32 epilogue order: bit-identical
+        assert_eq!(got.data, want.data);
+        // pooled lane
+        let pool = ThreadPool::new(3);
+        let mut gp = Matrix::zeros(m, n);
+        int8_matmul_parallel_into_epi(
+            &a,
+            &q,
+            None,
+            &mut gp,
+            &cfg,
+            3,
+            &pool,
+            &mut scratch,
+            Some(&epi),
+        );
+        assert_eq!(gp.data, want.data);
     }
 
     #[test]

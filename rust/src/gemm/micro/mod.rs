@@ -34,7 +34,7 @@ pub use panel::{Int8Panel, PackedPanel};
 
 use std::sync::OnceLock;
 
-use super::TileConfig;
+use super::{Epilogue, TileConfig};
 use crate::tensor::Matrix;
 
 /// Per-config microkernel request, carried on `TileConfig` and searched
@@ -554,8 +554,11 @@ pub fn int8_sel24_row(
 /// Cache-blocked SIMD driver for the dense pattern: bm x bk blocking
 /// outside, register microkernels inside.  `panel` is consumed when its
 /// geometry matches the resolved NR and the operand shape; otherwise B
-/// streams strided.  Returns `false` on a scalar resolve — the caller
-/// then runs its scalar blocked loops.
+/// streams strided.  A fused [`Epilogue`] applies to each row block as
+/// soon as its full reduction is complete — the block is still hot in
+/// cache, so the bias/activation/residual transform costs no extra
+/// memory traffic.  Returns `false` on a scalar resolve — the caller
+/// then runs its scalar blocked loops (applying `epi` itself).
 pub fn dense_blocked(
     r: &Resolved,
     a: &Matrix,
@@ -563,6 +566,7 @@ pub fn dense_blocked(
     panel: Option<&PackedPanel>,
     c: &mut Matrix,
     cfg: &TileConfig,
+    epi: Option<&Epilogue>,
 ) -> bool {
     if !supported(r) {
         return false;
@@ -572,7 +576,8 @@ pub fn dense_blocked(
     let bk = cfg.bk();
     let panel = panel.filter(|p| p.nr == r.nr && p.kc == k && p.n == n);
     for i0 in (0..m).step_by(bm) {
-        let mi = (i0 + bm).min(m) - i0;
+        let i1 = (i0 + bm).min(m);
+        let mi = i1 - i0;
         for k0 in (0..k).step_by(bk) {
             let kt = (k0 + bk).min(k) - k0;
             let arow = &a.data[i0 * k + k0..];
@@ -584,6 +589,9 @@ pub fn dense_blocked(
             if !done {
                 gemm_strided(r, mi, kt, n, arow, k, &b.data[k0 * n..], n, cblk, n);
             }
+        }
+        if let Some(e) = epi {
+            e.apply_rows(c, i0, i1);
         }
     }
     true

@@ -17,25 +17,171 @@ pub mod vw;
 
 pub use dense::{
     effective_parallel_threads, matmul, matmul_naive, matmul_parallel, matmul_parallel_into,
-    matmul_tiled, matmul_tiled_into, matmul_tiled_into_panel,
+    matmul_parallel_into_epi, matmul_tiled, matmul_tiled_into, matmul_tiled_into_panel,
+    matmul_tiled_into_panel_epi,
 };
 pub use int8::{
-    int8_dense_panel, int8_matmul_parallel_into, int8_matmul_tiled_into, int8_tvw_matmul_into,
-    int8_tw_matmul_into, int8_tw_pack_panels, int8_vw24_matmul_into, Int8TvwPlan, Int8TwPlan,
-    Int8Vw24Plan,
+    int8_dense_panel, int8_matmul_parallel_into, int8_matmul_parallel_into_epi,
+    int8_matmul_tiled_into, int8_matmul_tiled_into_epi, int8_tvw_matmul_into,
+    int8_tvw_matmul_into_epi, int8_tw_matmul_into, int8_tw_matmul_into_epi, int8_tw_pack_panels,
+    int8_vw24_matmul_into, int8_vw24_matmul_into_epi, Int8TvwPlan, Int8TwPlan, Int8Vw24Plan,
 };
 pub use micro::{Int8Panel, MicroCfg, PackedPanel};
 pub use spmm::{block_spmm, csr_spmm, BlockSparse};
 pub use tw::{
     tw_effective_parallel_threads, tw_matmul, tw_matmul_into, tw_matmul_into_scratch,
-    tw_matmul_into_scratch_panels, tw_matmul_into_with, tw_matmul_masked, tw_matmul_parallel,
-    tw_matmul_parallel_into, tw_matmul_per_tile, tw_matmul_with, tw_pack_panels,
+    tw_matmul_into_scratch_panels, tw_matmul_into_scratch_panels_epi, tw_matmul_into_with,
+    tw_matmul_masked, tw_matmul_parallel, tw_matmul_parallel_into, tw_matmul_parallel_into_epi,
+    tw_matmul_per_tile, tw_matmul_with, tw_pack_panels,
 };
 pub use vw::{
-    tvw_effective_parallel_threads, tvw_matmul, tvw_matmul_into_scratch, tvw_matmul_into_with,
-    tvw_matmul_parallel_into, tvw_matmul_with, vw24_effective_parallel_threads, vw24_matmul,
-    vw24_matmul_into_with, vw24_matmul_parallel_into, vw24_matmul_with,
+    tvw_effective_parallel_threads, tvw_matmul, tvw_matmul_into_scratch,
+    tvw_matmul_into_scratch_epi, tvw_matmul_into_with, tvw_matmul_parallel_into,
+    tvw_matmul_parallel_into_epi, tvw_matmul_with, vw24_effective_parallel_threads, vw24_matmul,
+    vw24_matmul_into_epi, vw24_matmul_into_with, vw24_matmul_parallel_into,
+    vw24_matmul_parallel_into_epi, vw24_matmul_with,
 };
+
+use crate::tensor::Matrix;
+
+/// Elementwise activation a fused epilogue (or the unfused
+/// `Op::BiasAct` executor arm — same formulas, so dense-f32 fusion is
+/// bit-identical) applies after the bias add.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+}
+
+/// A fused GEMM epilogue applied at the kernel's store site:
+///
+/// ```text
+/// c[i][j] = act(acc[i][j] + bias[j]) + residual[i][j]
+/// ```
+///
+/// Each stage is optional.  Fusing here removes the separate
+/// `Op::BiasAct` / `Op::Residual` full-matrix sweeps the graph executor
+/// would otherwise pay — on the bandwidth-bound serving shapes those
+/// sweeps cost as much memory traffic as the GEMM's own C write.
+///
+/// Contract per pattern (see `docs/DESIGN.md` §12): kernels that store
+/// every output cell (dense, 2:4) apply it on their completed row
+/// blocks before moving on; the condensed kernels (TW, TVW) apply it in
+/// the CTO scatter and require the **caller** to seed pruned — never
+/// stored — cells with [`Epilogue::prefill`] instead of zeroing C.  The
+/// int8 kernels compose it after the per-channel dequant in the same
+/// store.  All fields are shared references, so one epilogue is lent
+/// simultaneously to every lane of a pooled dispatch.
+#[derive(Clone, Copy)]
+pub struct Epilogue<'a> {
+    /// Per-output-column bias row (length N), added before `act`.
+    pub bias: Option<&'a [f32]>,
+    pub act: Option<Act>,
+    /// Residual operand (same shape as C), added after `act`.
+    pub residual: Option<&'a Matrix>,
+}
+
+impl Epilogue<'_> {
+    /// The epilogue transform for one output cell.
+    #[inline(always)]
+    pub fn apply(&self, i: usize, j: usize, v: f32) -> f32 {
+        let mut v = v;
+        if let Some(b) = self.bias {
+            v += b[j];
+        }
+        match self.act {
+            Some(Act::Relu) => {
+                if v < 0.0 {
+                    v = 0.0;
+                }
+            }
+            Some(Act::Tanh) => v = v.tanh(),
+            None => {}
+        }
+        if let Some(r) = self.residual {
+            v += r.data[i * r.cols + j];
+        }
+        v
+    }
+
+    /// Seed every cell of `c` with `apply(i, j, 0.0)` — what the
+    /// condensed kernels' pruned columns must read after the dispatch
+    /// (their accumulator is identically zero).  Replaces the
+    /// `c.data.fill(0.0)` a caller performs on the unfused path; same
+    /// single sweep of C.
+    pub fn prefill(&self, c: &mut Matrix) {
+        let cols = c.cols;
+        for (i, row) in c.data.chunks_exact_mut(cols).enumerate() {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = self.apply(i, j, 0.0);
+            }
+        }
+    }
+
+    /// Apply in place over the completed rows `i0..i1` of `c` — the
+    /// post-pass form for kernels that finish whole row blocks (dense
+    /// scalar, 2:4) before the epilogue.
+    pub fn apply_rows(&self, c: &mut Matrix, i0: usize, i1: usize) {
+        let cols = c.cols;
+        for i in i0..i1 {
+            let row = &mut c.data[i * cols..(i + 1) * cols];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = self.apply(i, j, *v);
+            }
+        }
+    }
+
+    /// Apply in place over a raw row-major chunk whose first row is
+    /// global row `row0` (the pooled kernels' per-lane output bands).
+    pub fn apply_chunk(&self, chunk: &mut [f32], row0: usize, n: usize) {
+        for (ri, row) in chunk.chunks_exact_mut(n).enumerate() {
+            let i = row0 + ri;
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = self.apply(i, j, *v);
+            }
+        }
+    }
+
+    /// Compact bit-flag code for telemetry: 1 = bias, 2 = relu,
+    /// 4 = tanh, 8 = residual (0 = no epilogue recorded).
+    pub fn kind_code(&self) -> usize {
+        let mut code = 0;
+        if self.bias.is_some() {
+            code |= 1;
+        }
+        match self.act {
+            Some(Act::Relu) => code |= 2,
+            Some(Act::Tanh) => code |= 4,
+            None => {}
+        }
+        if self.residual.is_some() {
+            code |= 8;
+        }
+        code
+    }
+}
+
+/// Human-readable label for an [`Epilogue::kind_code`] (telemetry /
+/// `profile` output).
+pub fn epilogue_label(code: usize) -> String {
+    if code == 0 {
+        return "-".to_string();
+    }
+    let mut parts = Vec::new();
+    if code & 1 != 0 {
+        parts.push("bias");
+    }
+    if code & 2 != 0 {
+        parts.push("relu");
+    }
+    if code & 4 != 0 {
+        parts.push("tanh");
+    }
+    if code & 8 != 0 {
+        parts.push("res");
+    }
+    parts.join("+")
+}
 
 /// Reusable internal scratch for the condensed-kernel hot paths (the CTO
 /// gather block and the compact output tile).  The serial TW/TVW `_into`

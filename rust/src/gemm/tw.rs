@@ -10,7 +10,7 @@
 //!      the CTO offset tables (the paper's final CTO kernel).
 
 use super::micro::{self, PackedPanel};
-use super::TileConfig;
+use super::{Epilogue, TileConfig};
 use crate::pool::{self, split_range, SendPtr, ThreadPool};
 use crate::sparse::{Mask, TwPlan};
 use crate::tensor::Matrix;
@@ -132,6 +132,26 @@ pub fn tw_matmul_into_scratch_panels(
     cfg: &TileConfig,
     scratch: &mut crate::gemm::GemmScratch,
 ) {
+    tw_matmul_into_scratch_panels_epi(a, plan, panels, c, cfg, scratch, None);
+}
+
+/// [`tw_matmul_into_scratch_panels`] with a fused [`Epilogue`] applied
+/// inside the CTO scatter itself — TW's output transform rides the
+/// scatter's existing write, paying **zero** extra passes over C (the
+/// paper's fused-epilogue argument for tile-wise sparsity).  When `epi`
+/// is `Some`, the caller must seed C with [`Epilogue::prefill`] instead
+/// of zeroing it, so pruned (never-scattered) columns also read
+/// `act(bias) + residual`.
+#[allow(clippy::too_many_arguments)]
+pub fn tw_matmul_into_scratch_panels_epi(
+    a: &Matrix,
+    plan: &TwPlan,
+    panels: Option<&[PackedPanel]>,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut crate::gemm::GemmScratch,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let m = a.rows;
@@ -213,11 +233,26 @@ pub fn tw_matmul_into_scratch_panels(
                     }
                 }
             }
-            // CTO scatter of output columns
-            for i in 0..bm {
-                let crow = c.row_mut(i0 + i);
-                for j in 0..width {
-                    crow[plan.col_idx[t * plan.g + j] as usize] = c_tile[i * stride + j];
+            // CTO scatter of output columns (the epilogue fuses into the
+            // scatter write itself)
+            match epi {
+                Some(e) => {
+                    for i in 0..bm {
+                        let row = i0 + i;
+                        let crow = c.row_mut(row);
+                        for j in 0..width {
+                            let cj = plan.col_idx[t * plan.g + j] as usize;
+                            crow[cj] = e.apply(row, cj, c_tile[i * stride + j]);
+                        }
+                    }
+                }
+                None => {
+                    for i in 0..bm {
+                        let crow = c.row_mut(i0 + i);
+                        for j in 0..width {
+                            crow[plan.col_idx[t * plan.g + j] as usize] = c_tile[i * stride + j];
+                        }
+                    }
                 }
             }
         }
@@ -259,11 +294,35 @@ pub fn tw_matmul_parallel_into(
     threads: usize,
     pool: &ThreadPool,
 ) -> usize {
+    tw_matmul_parallel_into_epi(a, plan, c, cfg, threads, pool, None)
+}
+
+/// [`tw_matmul_parallel_into`] with a fused [`Epilogue`] applied at both
+/// scatter sites (SIMD row step and scalar fallback).  Same prefill
+/// contract as [`tw_matmul_into_scratch_panels_epi`]: with `epi: Some`
+/// the caller seeds C via [`Epilogue::prefill`] rather than zeroing.
+pub fn tw_matmul_parallel_into_epi(
+    a: &Matrix,
+    plan: &TwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+    epi: Option<&Epilogue>,
+) -> usize {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let eff = tw_effective_parallel_threads(plan.tiles, threads);
     if eff == 1 {
-        tw_matmul_into_with(a, plan, c, cfg);
+        tw_matmul_into_scratch_panels_epi(
+            a,
+            plan,
+            None,
+            c,
+            cfg,
+            &mut crate::gemm::GemmScratch::new(),
+            epi,
+        );
         return 1;
     }
     let m = a.rows;
@@ -298,9 +357,13 @@ pub fn tw_matmul_parallel_into(
                     if micro::gemm_strided(&r, 1, kt, width, ag, kt, b, plan.g, ct, width) {
                         for j in 0..width {
                             let cj = plan.col_idx[t * plan.g + j] as usize;
+                            let v = match epi {
+                                Some(e) => e.apply(i, cj, c_row[j]),
+                                None => c_row[j],
+                            };
                             // SAFETY: tiles own disjoint output columns, and
                             // tile ranges are disjoint across chunks
-                            unsafe { *c_ptr.0.add(i * n + cj) = c_row[j] };
+                            unsafe { *c_ptr.0.add(i * n + cj) = v };
                         }
                         continue;
                     }
@@ -311,9 +374,13 @@ pub fn tw_matmul_parallel_into(
                         acc += a_gather[ii] * plan.b_cond[(t * plan.kmax + ii) * plan.g + j];
                     }
                     let cj = plan.col_idx[t * plan.g + j] as usize;
+                    let v = match epi {
+                        Some(e) => e.apply(i, cj, acc),
+                        None => acc,
+                    };
                     // SAFETY: tiles own disjoint output columns, and tile
                     // ranges are disjoint across chunks
-                    unsafe { *c_ptr.0.add(i * n + cj) = acc };
+                    unsafe { *c_ptr.0.add(i * n + cj) = v };
                 }
             }
         }
@@ -434,6 +501,39 @@ mod tests {
         let mut c = Matrix::zeros(a.rows, plan.n);
         tw_matmul_parallel_into(&a, &plan, &mut c, &simd_cfg, 4, &pool);
         assert!(c.max_abs_diff(&want) < 1e-4, "pooled simd vs scalar");
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_passes_including_pruned_columns() {
+        use crate::gemm::Act;
+        let (a, w, tw, plan) = setup(19, 64, 48, 0.6, 16, 89);
+        let (m, n) = (a.rows, plan.n);
+        let mut rng = Rng::new(90);
+        let bias: Vec<f32> = (0..n).map(|j| (j as f32 - 20.0) * 0.07).collect();
+        let res = Matrix::randn(m, n, &mut rng);
+        // unfused reference: masked-dense GEMM, then bias+relu, then residual
+        let mut want = matmul_naive(&a, &tw.mask().apply(&w));
+        for i in 0..m {
+            for j in 0..n {
+                let mut v = want.at(i, j) + bias[j];
+                if v < 0.0 {
+                    v = 0.0;
+                }
+                *want.at_mut(i, j) = v + res.at(i, j);
+            }
+        }
+        let epi = Epilogue { bias: Some(&bias), act: Some(Act::Relu), residual: Some(&res) };
+        let cfg = TileConfig::new(16, 64);
+        let mut scratch = crate::gemm::GemmScratch::new();
+        let mut c = Matrix::zeros(m, n);
+        epi.prefill(&mut c); // pruned columns read act(bias) + residual
+        tw_matmul_into_scratch_panels_epi(&a, &plan, None, &mut c, &cfg, &mut scratch, Some(&epi));
+        assert!(c.max_abs_diff(&want) < 1e-3, "serial fused");
+        let pool = crate::pool::ThreadPool::new(4);
+        let mut cp = Matrix::zeros(m, n);
+        epi.prefill(&mut cp);
+        tw_matmul_parallel_into_epi(&a, &plan, &mut cp, &cfg, 4, &pool, Some(&epi));
+        assert!(cp.max_abs_diff(&want) < 1e-3, "pooled fused");
     }
 
     #[test]

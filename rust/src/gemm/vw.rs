@@ -2,7 +2,7 @@
 //! fused kernel on the CPU.
 
 use super::micro;
-use super::TileConfig;
+use super::{Epilogue, TileConfig};
 use crate::pool::{split_range, SendPtr, ThreadPool};
 use crate::sparse::{TvwPlan, Vw24Plan};
 use crate::tensor::Matrix;
@@ -36,6 +36,19 @@ pub fn vw24_matmul_with(a: &Matrix, plan: &Vw24Plan, cfg: &TileConfig) -> Matrix
 /// group by group).  The serving hot loop reuses the output allocation —
 /// the same idiom as [`crate::gemm::tw_matmul_into_with`].
 pub fn vw24_matmul_into_with(a: &Matrix, plan: &Vw24Plan, c: &mut Matrix, cfg: &TileConfig) {
+    vw24_matmul_into_epi(a, plan, c, cfg, None);
+}
+
+/// [`vw24_matmul_into_with`] with a fused [`Epilogue`]: 2:4 stores every
+/// output cell, so the epilogue applies in place on each completed row
+/// block (still cache-hot) before the kernel advances.
+pub fn vw24_matmul_into_epi(
+    a: &Matrix,
+    plan: &Vw24Plan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(a.cols, plan.k);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
@@ -68,6 +81,9 @@ pub fn vw24_matmul_into_with(a: &Matrix, plan: &Vw24Plan, c: &mut Matrix, cfg: &
                     crow[j] += a4[s0[j] as usize] * v0[j] + a4[s1[j] as usize] * v1[j];
                 }
             }
+        }
+        if let Some(e) = epi {
+            e.apply_rows(c, i0, i1);
         }
     }
 }
@@ -110,13 +126,33 @@ pub fn tvw_matmul_into_scratch(
     cfg: &TileConfig,
     scratch: &mut crate::gemm::GemmScratch,
 ) {
+    tvw_matmul_into_scratch_epi(a, plan, c, cfg, scratch, None);
+}
+
+/// [`tvw_matmul_into_scratch`] with a fused [`Epilogue`] applied at the
+/// CTO scatter.  Tiles own disjoint output columns and each row block
+/// visits a tile once, so every (row, column) is scattered exactly once
+/// — the kernel seeds C itself ([`Epilogue::prefill`] when fused, zeros
+/// otherwise; pruned columns then read `act(bias) + residual`) and the
+/// scatter assigns `epi.apply(...)` over that seed.
+pub fn tvw_matmul_into_scratch_epi(
+    a: &Matrix,
+    plan: &TvwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    scratch: &mut crate::gemm::GemmScratch,
+    epi: Option<&Epilogue>,
+) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let m = a.rows;
     let khalf = plan.kmax / 2;
     let bm = cfg.bm();
     let micro_r = micro::resolve(cfg);
-    c.data.fill(0.0);
+    match epi {
+        Some(e) => e.prefill(c),
+        None => c.data.fill(0.0),
+    }
     scratch.ensure(plan.kmax, plan.g);
     // §Perf: accumulate into a compact c_tile and scatter once per row —
     // the inner loop then writes a contiguous stream the compiler can
@@ -170,8 +206,18 @@ pub fn tvw_matmul_into_scratch(
                     }
                 }
                 let crow = c.row_mut(i);
-                for j in 0..width {
-                    crow[plan.col_idx[t * plan.g + j] as usize] += c_tile[j];
+                match epi {
+                    Some(e) => {
+                        for j in 0..width {
+                            let cj = plan.col_idx[t * plan.g + j] as usize;
+                            crow[cj] = e.apply(i, cj, c_tile[j]);
+                        }
+                    }
+                    None => {
+                        for j in 0..width {
+                            crow[plan.col_idx[t * plan.g + j] as usize] += c_tile[j];
+                        }
+                    }
                 }
             }
         }
@@ -217,13 +263,29 @@ pub fn vw24_matmul_parallel_into(
     threads: usize,
     pool: &ThreadPool,
 ) -> usize {
+    vw24_matmul_parallel_into_epi(a, plan, c, cfg, threads, pool, None)
+}
+
+/// [`vw24_matmul_parallel_into`] with a fused [`Epilogue`]: each lane
+/// applies it over its own column block once all K-groups have been
+/// accumulated, so the fused sweeps parallelize with the GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn vw24_matmul_parallel_into_epi(
+    a: &Matrix,
+    plan: &Vw24Plan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+    epi: Option<&Epilogue>,
+) -> usize {
     assert_eq!(a.cols, plan.k);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let (m, n) = (a.rows, plan.n);
     let eff = vw24_effective_parallel_threads(n, threads);
     if eff == 1 {
-        vw24_matmul_into_with(a, plan, c, cfg);
+        vw24_matmul_into_epi(a, plan, c, cfg, epi);
         return 1;
     }
     let groups = plan.k / 4;
@@ -262,6 +324,16 @@ pub fn vw24_matmul_parallel_into(
                 }
             }
         }
+        if let Some(e) = epi {
+            for i in 0..m {
+                // SAFETY: as above — this chunk owns columns j0..j1
+                let crow =
+                    unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n + j0), width) };
+                for (jo, v) in crow.iter_mut().enumerate() {
+                    *v = e.apply(i, j0 + jo, *v);
+                }
+            }
+        }
     });
     eff
 }
@@ -280,18 +352,37 @@ pub fn tvw_matmul_parallel_into(
     threads: usize,
     pool: &ThreadPool,
 ) -> usize {
+    tvw_matmul_parallel_into_epi(a, plan, c, cfg, threads, pool, None)
+}
+
+/// [`tvw_matmul_parallel_into`] with a fused [`Epilogue`] applied at the
+/// disjoint-column scatter (same seed-then-assign contract as the serial
+/// [`tvw_matmul_into_scratch_epi`]; the kernel seeds C itself).
+#[allow(clippy::too_many_arguments)]
+pub fn tvw_matmul_parallel_into_epi(
+    a: &Matrix,
+    plan: &TvwPlan,
+    c: &mut Matrix,
+    cfg: &TileConfig,
+    threads: usize,
+    pool: &ThreadPool,
+    epi: Option<&Epilogue>,
+) -> usize {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, plan.n);
     let eff = tvw_effective_parallel_threads(plan.tiles, threads);
     if eff == 1 {
-        tvw_matmul_into_with(a, plan, c, cfg);
+        tvw_matmul_into_scratch_epi(a, plan, c, cfg, &mut crate::gemm::GemmScratch::new(), epi);
         return 1;
     }
     let m = a.rows;
     let n = plan.n;
     let khalf = plan.kmax / 2;
     let micro_r = micro::resolve(cfg);
-    c.data.fill(0.0);
+    match epi {
+        Some(e) => e.prefill(c),
+        None => c.data.fill(0.0),
+    }
     let c_ptr = SendPtr(c.data.as_mut_ptr());
     pool.parallel_for(eff, |chunk| {
         let (t0, t1) = split_range(plan.tiles, eff, chunk);
@@ -342,11 +433,15 @@ pub fn tvw_matmul_parallel_into(
                 }
                 for j in 0..width {
                     let cj = plan.col_idx[t * plan.g + j] as usize;
+                    let v = match epi {
+                        Some(e) => e.apply(i, cj, c_tile[j]),
+                        None => c_tile[j],
+                    };
                     // SAFETY: tiles own disjoint output columns, and tile
                     // ranges are disjoint across chunks; each (row, tile)
                     // pair is visited exactly once, so assignment over the
-                    // pre-zeroed output equals the serial accumulate
-                    unsafe { *c_ptr.0.add(i * n + cj) = c_tile[j] };
+                    // pre-seeded output equals the serial accumulate
+                    unsafe { *c_ptr.0.add(i * n + cj) = v };
                 }
             }
         }

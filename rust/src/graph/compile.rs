@@ -39,6 +39,7 @@ use crate::util::Rng;
 use crate::{bail, ensure};
 
 use super::decode::DecodeSet;
+use super::fuse::fuse_program;
 use super::ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
 use super::pack::{pack_weight, GemmNode, GraphPattern, PackOptions};
 
@@ -72,6 +73,11 @@ pub struct CompileOptions {
     /// recommendation as "bert", not the workload's display name).
     /// Defaults to the workload's display name when unset.
     pub model_key: Option<String>,
+    /// Run the epilogue fusion pass (`graph::fuse`) on the compiled op
+    /// stream.  On by default; the `PALLAS_NO_FUSION=1` environment
+    /// variable (or `serve --no-fusion`) flips the default off — the
+    /// escape hatch the no-fusion CI lane exercises.
+    pub fuse: bool,
 }
 
 impl Default for CompileOptions {
@@ -86,8 +92,15 @@ impl Default for CompileOptions {
             seed: 42,
             plan_cache: None,
             model_key: None,
+            fuse: !no_fusion_env(),
         }
     }
+}
+
+/// `PALLAS_NO_FUSION` set to anything but "" / "0" disables fusion by
+/// default (read per call — tests toggle it).
+fn no_fusion_env() -> bool {
+    std::env::var("PALLAS_NO_FUSION").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
 impl CompileOptions {
@@ -156,19 +169,23 @@ pub fn compile(workload: &ModelWorkload, opts: &CompileOptions) -> Result<GraphP
     let has_gates = workload.layers.iter().any(|l| l.name.ends_with("_gates"));
     let has_qkv = workload.layers.iter().any(|l| l.name == "qkv");
     ensure!(!workload.layers.is_empty(), "workload {} has no layers", workload.name);
-    if has_conv {
-        compile_conv(workload, opts)
+    let mut p = if has_conv {
+        compile_conv(workload, opts)?
     } else if has_gates {
-        compile_lstm(workload, opts)
+        compile_lstm(workload, opts)?
     } else if has_qkv {
-        compile_transformer(workload, opts)
+        compile_transformer(workload, opts)?
     } else {
         bail!(
             "workload {} has no compilable structure (expected conv layers, *_gates layers, \
              or a qkv/ffn transformer block)",
             workload.name
         );
+    };
+    if opts.fuse {
+        fuse_program(&mut p);
     }
+    Ok(p)
 }
 
 fn small_bias(n: usize, rng: &mut Rng) -> Vec<f32> {
@@ -619,11 +636,14 @@ pub fn compile_decode_set(
     let mut programs = Vec::with_capacity(patterns.len());
     for &pattern in patterns {
         let o = opts.with_pattern(pattern);
-        let p = if has_gates {
+        let mut p = if has_gates {
             compile_lstm_decode(workload, &o, max_steps)?
         } else {
             compile_transformer_decode(workload, &o, max_steps)?
         };
+        if o.fuse {
+            fuse_program(&mut p);
+        }
         programs.push(p);
     }
     let dims = programs[0].dims;

@@ -11,12 +11,13 @@ use std::time::Instant;
 use crate::error::Result;
 use crate::exec::{DecodeCaps, ModelDims, PreparedModel, StepOut};
 use crate::gemm::{
-    effective_parallel_threads, int8_matmul_parallel_into, int8_matmul_tiled_into,
-    int8_tvw_matmul_into, int8_tw_matmul_into, int8_vw24_matmul_into, matmul_parallel_into,
-    matmul_tiled_into_panel, micro, tvw_effective_parallel_threads, tvw_matmul_into_scratch,
-    tvw_matmul_parallel_into, tw_effective_parallel_threads, tw_matmul_into_scratch_panels,
-    tw_matmul_parallel_into, vw24_effective_parallel_threads, vw24_matmul_into_with,
-    vw24_matmul_parallel_into, GemmScratch, TileConfig,
+    effective_parallel_threads, int8_matmul_parallel_into_epi, int8_matmul_tiled_into_epi,
+    int8_tvw_matmul_into_epi, int8_tw_matmul_into_epi, int8_vw24_matmul_into_epi,
+    matmul_parallel_into_epi, matmul_tiled_into_panel_epi, micro, tvw_effective_parallel_threads,
+    tvw_matmul_into_scratch_epi, tvw_matmul_parallel_into_epi, tw_effective_parallel_threads,
+    tw_matmul_into_scratch_panels_epi, tw_matmul_parallel_into_epi,
+    vw24_effective_parallel_threads, vw24_matmul_into_epi, vw24_matmul_parallel_into_epi,
+    Epilogue, GemmScratch, TileConfig,
 };
 use crate::nn::{attention_window_into, im2col_into, lstm_gate_update, AttnScratch, ImgSrc};
 use crate::pool::ThreadPool;
@@ -136,12 +137,19 @@ pub struct GemmDispatch {
 /// serial TW/TVW execution stages through the workspace's [`GemmScratch`]
 /// and the request loop stays allocation-free even with `intra_threads > 1`
 /// on problems too small to split.
+///
+/// `epi` is the fused store-time epilogue (bias / activation / residual),
+/// applied by every kernel family at its store or scatter site — `None`
+/// reproduces the bare GEMM bit-for-bit.  For the partial-scatter TW
+/// patterns this function seeds `c` with the epilogue prefill so pruned
+/// output columns hold `epi(0)` instead of stale data.
 pub fn run_gemm(
     a: &Matrix,
     node: &GemmNode,
     c: &mut Matrix,
     intra: Option<&ThreadPool>,
     scratch: &mut GemmScratch,
+    epi: Option<&Epilogue>,
 ) -> GemmDispatch {
     let threads = intra.map_or(1, ThreadPool::threads);
     // dynamic-M dispatch: the bucket table resolved at pack time picks the
@@ -149,54 +157,59 @@ pub fn run_gemm(
     // compile default); `a.rows` already reflects the live batch prefix
     let cfg = node.cfg_for_m(a.rows);
     let r = micro::resolve(&cfg);
+    // the TW scatter only writes kept output columns: seed the rest here
+    // (epilogue prefill when fusing, zero otherwise)
+    let seed_partial = |c: &mut Matrix| match epi {
+        Some(e) => e.prefill(c),
+        None => c.data.fill(0.0),
+    };
     let used = match &node.weight {
         PackedWeight::Dense(w) => {
             let eff = effective_parallel_threads(a.rows, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                matmul_parallel_into(a, w, c, &cfg, threads, pool);
+                matmul_parallel_into_epi(a, w, c, &cfg, threads, pool, epi);
                 eff
             } else {
                 let panel = match &node.panels {
                     NodePanels::Dense(p) => Some(p),
                     _ => None,
                 };
-                matmul_tiled_into_panel(a, w, panel, c, &cfg);
+                matmul_tiled_into_panel_epi(a, w, panel, c, &cfg, epi);
                 1
             }
         }
         PackedWeight::Tw(p) => {
-            // the TW scatter only writes kept output columns; clear the rest
-            c.data.fill(0.0);
+            seed_partial(c);
             let eff = tw_effective_parallel_threads(p.tiles, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                tw_matmul_parallel_into(a, p, c, &cfg, threads, pool);
+                tw_matmul_parallel_into_epi(a, p, c, &cfg, threads, pool, epi);
                 eff
             } else {
                 let panels = match &node.panels {
                     NodePanels::Tw(ps) => Some(ps.as_slice()),
                     _ => None,
                 };
-                tw_matmul_into_scratch_panels(a, p, panels, c, &cfg, scratch);
+                tw_matmul_into_scratch_panels_epi(a, p, panels, c, &cfg, scratch, epi);
                 1
             }
         }
         PackedWeight::Tvw(p) => {
             let eff = tvw_effective_parallel_threads(p.tiles, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                tvw_matmul_parallel_into(a, p, c, &cfg, threads, pool);
+                tvw_matmul_parallel_into_epi(a, p, c, &cfg, threads, pool, epi);
                 eff
             } else {
-                tvw_matmul_into_scratch(a, p, c, &cfg, scratch);
+                tvw_matmul_into_scratch_epi(a, p, c, &cfg, scratch, epi);
                 1
             }
         }
         PackedWeight::Vw24(p) => {
             let eff = vw24_effective_parallel_threads(p.n, threads);
             if let Some(pool) = intra.filter(|_| eff > 1) {
-                vw24_matmul_parallel_into(a, p, c, &cfg, threads, pool);
+                vw24_matmul_parallel_into_epi(a, p, c, &cfg, threads, pool, epi);
                 eff
             } else {
-                vw24_matmul_into_with(a, p, c, &cfg);
+                vw24_matmul_into_epi(a, p, c, &cfg, epi);
                 1
             }
         }
@@ -208,9 +221,9 @@ pub fn run_gemm(
             if let Some(pool) =
                 intra.filter(|_| effective_parallel_threads(a.rows, threads) > 1)
             {
-                int8_matmul_parallel_into(a, w, panel, c, &cfg, threads, pool, scratch)
+                int8_matmul_parallel_into_epi(a, w, panel, c, &cfg, threads, pool, scratch, epi)
             } else {
-                int8_matmul_tiled_into(a, w, panel, c, &cfg, scratch);
+                int8_matmul_tiled_into_epi(a, w, panel, c, &cfg, scratch, epi);
                 1
             }
         }
@@ -219,20 +232,20 @@ pub fn run_gemm(
         // at serving M, and the i32 staging lives in the (per-worker)
         // GemmScratch — inter-worker parallelism still applies above
         PackedWeight::Int8Tw(p) => {
-            c.data.fill(0.0);
+            seed_partial(c);
             let panels = match &node.panels {
                 NodePanels::Int8Tw(ps) => Some(ps.as_slice()),
                 _ => None,
             };
-            int8_tw_matmul_into(a, p, panels, c, &cfg, scratch);
+            int8_tw_matmul_into_epi(a, p, panels, c, &cfg, scratch, epi);
             1
         }
         PackedWeight::Int8Tvw(p) => {
-            int8_tvw_matmul_into(a, p, c, &cfg, scratch);
+            int8_tvw_matmul_into_epi(a, p, c, &cfg, scratch, epi);
             1
         }
         PackedWeight::Int8Vw24(p) => {
-            int8_vw24_matmul_into(a, p, c, &cfg, scratch);
+            int8_vw24_matmul_into_epi(a, p, c, &cfg, scratch, epi);
             1
         }
     };
@@ -270,6 +283,11 @@ fn note_gemm(
     started: Instant,
     d: &GemmDispatch,
 ) {
+    let (epi_code, avoided) = node
+        .epilogue
+        .as_ref()
+        .map(|s| (s.kind_code(), s.bytes_avoided(m, node.n)))
+        .unwrap_or((0, 0));
     pr.nodes[w].record(
         m,
         started.elapsed().as_nanos() as u64,
@@ -279,6 +297,8 @@ fn note_gemm(
         d.cfg.bk(),
         d.threads,
         d.micro,
+        epi_code,
+        avoided,
     );
 }
 
@@ -298,15 +318,30 @@ pub fn execute_with(
     let Workspace { bufs, scratch, slot_pos } = ws;
     let t_fwd = prof.map(|_| Instant::now());
     for op in &p.ops {
+        // pure-copy chains (`BiasAct { bias: None, act: None }`) would walk
+        // the buffer for nothing; the fusion pass drops them from compiled
+        // programs, and the unfused executor skips any that remain
+        if let Op::BiasAct { bias: None, act: None, .. } = op {
+            continue;
+        }
         let t_op = prof.map(|_| Instant::now());
         match op {
             Op::Gemm { input, w, out } => {
                 let mut c = take(bufs, *out);
                 let m = bufs[input.0].rows;
+                let node = &p.weights[*w];
+                // materialize the fused epilogue: bias slice from the bias
+                // table, residual as a shared borrow of its arena buffer
+                // (disjoint from `c`, which `take` moved out of the arena)
+                let epi = node.epilogue.as_ref().map(|s| Epilogue {
+                    bias: s.bias.map(|bi| p.biases[bi].as_slice()),
+                    act: s.act,
+                    residual: s.residual.map(|r| &bufs[r.0]),
+                });
                 let t = prof.map(|_| Instant::now());
-                let d = run_gemm(&bufs[input.0], &p.weights[*w], &mut c, intra, scratch);
+                let d = run_gemm(&bufs[input.0], node, &mut c, intra, scratch, epi.as_ref());
                 if let (Some(pr), Some(t0)) = (prof, t) {
-                    note_gemm(pr, &p.weights[*w], *w, m, t0, &d);
+                    note_gemm(pr, node, *w, m, t0, &d);
                 }
                 put(bufs, *out, c);
             }
@@ -501,7 +536,7 @@ pub fn execute_with(
                     }
                     let m = xhb.rows;
                     let t = prof.map(|_| Instant::now());
-                    let d = run_gemm(&xhb, &p.weights[*w], &mut gb, intra, scratch);
+                    let d = run_gemm(&xhb, &p.weights[*w], &mut gb, intra, scratch, None);
                     if let (Some(pr), Some(t0)) = (prof, t) {
                         note_gemm(pr, &p.weights[*w], *w, m, t0, &d);
                     }
@@ -814,7 +849,7 @@ mod tests {
         let node = &p.weights[0];
         let a = Matrix::zeros(2, node.k);
         let mut c = Matrix::zeros(2, node.n);
-        let d = run_gemm(&a, node, &mut c, None, &mut ws.scratch);
+        let d = run_gemm(&a, node, &mut c, None, &mut ws.scratch, None);
         assert_eq!((d.cfg.bm(), d.cfg.bk()), (node.cfg_for_m(2).bm(), node.cfg_for_m(2).bk()));
         assert_eq!(d.threads, 1, "no pool attached: one lane");
         assert_eq!(d.micro, micro::resolve(&node.cfg_for_m(2)).code(), "microkernel code reported");

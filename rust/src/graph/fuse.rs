@@ -1,0 +1,277 @@
+//! Graph-level epilogue fusion: rewrite `Gemm -> BiasAct (-> Residual)`
+//! chains into a single GEMM node carrying an [`EpilogueSpec`], so the
+//! elementwise tail is applied on tile-resident accumulators at store
+//! time instead of re-streaming the output through memory (the inter-op
+//! round-trip the paper's tiled kernels otherwise pay between layers).
+//!
+//! The pass runs once at compile time, after the topology is built and
+//! before the program is sealed into serving.  It is purely an op-stream
+//! rewrite — buffer shapes, weight packing and tile configs are
+//! untouched — so every pattern variant of one model fuses identically
+//! and the variants keep sharing one arena layout.
+//!
+//! ## Residual fusion and the buffer swap
+//!
+//! `Gemm { input, w, out: t }` followed by `Residual { src: t, dst: x }`
+//! computes `x += gemm(...)`.  Fused, the kernel writes
+//! `t = act(acc + bias) + x_old` directly — buffer `t` now holds the
+//! value downstream expects in `x`, and `x` holds its stale pre-residual
+//! contents.  The pass therefore renames `t <-> x` in every *subsequent*
+//! op (and in the program output).  That swap is sound iff:
+//!
+//! - `t` and `x` have identical shapes and batch scaling (the rename is
+//!   a pure relabeling of interchangeable arena slots), and
+//! - no later op reads `t`'s old value: the first later op referencing
+//!   `t` must fully overwrite it (ping-pong reuse), or `t` must be dead.
+//!
+//! The program input is never renamed: request copy-in happens before
+//! op 0, which the rewrite does not reach.
+
+use super::ir::{BufId, GraphProgram, Op};
+use super::pack::EpilogueSpec;
+
+/// What one [`fuse_program`] call did (surfaced in logs and tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FusionReport {
+    /// `BiasAct` ops folded into the preceding GEMM's epilogue.
+    pub bias_act_fused: usize,
+    /// `Residual` ops folded into the preceding GEMM's epilogue.
+    pub residual_fused: usize,
+    /// Pure-copy `BiasAct { bias: None, act: None }` ops deleted outright.
+    pub noop_dropped: usize,
+    /// Arena buffers left unreferenced by fusion and shrunk to zero.
+    pub bufs_freed: usize,
+}
+
+/// Fuse eligible `Gemm -> BiasAct (-> Residual)` chains in place.
+/// Idempotent; safe on any program (ineligible chains are left alone).
+pub fn fuse_program(p: &mut GraphProgram) -> FusionReport {
+    let mut report = FusionReport::default();
+
+    // 1. no-op BiasAct chains are pure copies: delete them everywhere,
+    //    fused or not, before pattern matching sees them
+    let before = p.ops.len();
+    p.ops.retain(|op| !matches!(op, Op::BiasAct { bias: None, act: None, .. }));
+    report.noop_dropped = before - p.ops.len();
+
+    // weight indices used by more than one op can't carry an epilogue
+    // (it would fire on every use — LSTM gate weights shared across
+    // steps are the live case)
+    let mut w_uses = vec![0usize; p.weights.len()];
+    for op in &p.ops {
+        match *op {
+            Op::Gemm { w, .. } | Op::LstmStep { w, .. } => w_uses[w] += 1,
+            _ => {}
+        }
+    }
+
+    // 2. left-to-right chain absorption.  Epilogues attached at earlier
+    //    positions are final: a later residual swap renames only ops
+    //    *after* its own position, so earlier specs never need patching.
+    let mut i = 0;
+    while i < p.ops.len() {
+        let Op::Gemm { w, out, .. } = p.ops[i] else {
+            i += 1;
+            continue;
+        };
+        if w_uses[w] != 1 {
+            i += 1;
+            continue;
+        }
+        let mut spec = EpilogueSpec { bias: None, act: None, residual: None };
+        let absorb = match p.ops.get(i + 1) {
+            Some(&Op::BiasAct { buf, bias, act }) if buf == out => Some((bias, act)),
+            _ => None,
+        };
+        if let Some((bias, act)) = absorb {
+            spec.bias = bias;
+            spec.act = act;
+            p.ops.remove(i + 1);
+            report.bias_act_fused += 1;
+        }
+        let resid = match p.ops.get(i + 1) {
+            Some(&Op::Residual { src, dst }) if src == out => Some(dst),
+            _ => None,
+        };
+        if let Some(dst) = resid {
+            if residual_swap_is_safe(p, i + 2, out, dst) {
+                spec.residual = Some(dst);
+                p.ops.remove(i + 1);
+                report.residual_fused += 1;
+                // rename t <-> x in everything downstream
+                for op in &mut p.ops[i + 1..] {
+                    op.visit_bufs_mut(|b| {
+                        if *b == out {
+                            *b = dst;
+                        } else if *b == dst {
+                            *b = out;
+                        }
+                    });
+                }
+                if p.output == out {
+                    p.output = dst;
+                } else if p.output == dst {
+                    p.output = out;
+                }
+            }
+        }
+        if spec.bias.is_some() || spec.act.is_some() || spec.residual.is_some() {
+            p.weights[w].epilogue = Some(spec);
+        }
+        i += 1;
+    }
+
+    // 3. shrink buffers fusion left unreferenced so the arena stops
+    //    allocating them (ping-pong topologies usually free nothing —
+    //    both swap endpoints stay live — but dead intermediates from
+    //    dropped no-op chains can unhook a buffer entirely)
+    let mut live = vec![false; p.buf_shapes.len()];
+    live[p.input.0] = true;
+    live[p.output.0] = true;
+    for op in &p.ops {
+        op.visit_bufs(|b| live[b.0] = true);
+    }
+    for node in &p.weights {
+        if let Some(EpilogueSpec { residual: Some(r), .. }) = &node.epilogue {
+            live[r.0] = true;
+        }
+    }
+    for (id, alive) in live.iter().enumerate() {
+        if !alive && p.buf_shapes[id] != (0, 0) {
+            p.buf_shapes[id] = (0, 0);
+            p.buf_rows_per_request[id] = None;
+            report.bufs_freed += 1;
+        }
+    }
+    report
+}
+
+/// Is swapping `t <-> x` in `p.ops[from..]` sound?  (`t` = the fused
+/// GEMM's output, `x` = the residual destination.)  See the module docs
+/// for the derivation.
+fn residual_swap_is_safe(p: &GraphProgram, from: usize, t: BufId, x: BufId) -> bool {
+    if t == x
+        || p.buf_shapes[t.0] != p.buf_shapes[x.0]
+        || p.buf_rows_per_request[t.0] != p.buf_rows_per_request[x.0]
+    {
+        return false;
+    }
+    for op in &p.ops[from..] {
+        let mut referenced = false;
+        op.visit_bufs(|b| referenced |= b == t);
+        if !referenced {
+            continue;
+        }
+        let mut read = false;
+        op.reads(|b| read |= b == t);
+        // the first op touching t must be a clean full overwrite: that
+        // re-establishes the naming isomorphism for t itself.  Any read
+        // (or a scratch-style partial use) would see the stale value.
+        return !read && op.full_overwrite() == Some(t);
+    }
+    // t is never referenced again: safe unless the program output reads it
+    p.output != t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::Act;
+    use super::super::{compile, CompileOptions, GraphPattern, Op};
+    use super::*;
+    use crate::models;
+
+    fn ffn_ops(p: &GraphProgram) -> (usize, usize, usize) {
+        let gemms = p.ops.iter().filter(|o| matches!(o, Op::Gemm { .. })).count();
+        let bias = p.ops.iter().filter(|o| matches!(o, Op::BiasAct { .. })).count();
+        let res = p.ops.iter().filter(|o| matches!(o, Op::Residual { .. })).count();
+        (gemms, bias, res)
+    }
+
+    #[test]
+    fn transformer_fusion_removes_every_bias_act_and_residual() {
+        let wl = models::bert_at(2, 4, 16, 2);
+        let opts = CompileOptions { seq: 4, heads: 4, n_classes: 4, ..CompileOptions::default() };
+        for pattern in [GraphPattern::Dense, GraphPattern::Tw] {
+            let fused = compile(&wl, &opts.with_pattern(pattern)).unwrap();
+            let (gemms, bias, res) = ffn_ops(&fused);
+            assert!(gemms >= 4, "{pattern:?}: {gemms} gemms");
+            assert_eq!((bias, res), (0, 0), "{pattern:?}: unfused elementwise ops remain");
+            let with_epi = fused.weights.iter().filter(|w| w.epilogue.is_some()).count();
+            assert!(with_epi >= 4, "{pattern:?}: only {with_epi} fused nodes");
+            // every residual endpoint passed the shape/scaling gates
+            for w in &fused.weights {
+                if let Some(spec) = &w.epilogue {
+                    if let Some(r) = spec.residual {
+                        assert_ne!(fused.buf_shapes[r.0], (0, 0));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_fusion_option_leaves_the_op_stream_alone() {
+        let wl = models::bert_at(2, 4, 16, 1);
+        let opts = CompileOptions { seq: 4, heads: 4, n_classes: 4, ..CompileOptions::default() };
+        let unfused = compile(&wl, &CompileOptions { fuse: false, ..opts.clone() }).unwrap();
+        let (_, bias, res) = ffn_ops(&unfused);
+        assert!(bias > 0 && res > 0, "unfused program must keep elementwise ops");
+        assert!(unfused.weights.iter().all(|w| w.epilogue.is_none()));
+    }
+
+    #[test]
+    fn noop_bias_act_chains_are_dropped_even_where_fusion_cannot_reach() {
+        // hand-build: Gemm -> noop BiasAct where the gemm weight is used
+        // twice (fusion-ineligible) — the noop must still disappear
+        let wl = models::bert_at(1, 4, 16, 1);
+        let opts = CompileOptions { seq: 4, heads: 4, n_classes: 4, ..CompileOptions::default() };
+        let mut p = compile(&wl, &CompileOptions { fuse: false, ..opts }).unwrap();
+        p.ops.push(Op::BiasAct { buf: p.output, bias: None, act: None });
+        let before = p.ops.len();
+        let report = fuse_program(&mut p);
+        assert!(report.noop_dropped >= 1);
+        assert!(p.ops.len() < before);
+        assert!(!p.ops.iter().any(|o| matches!(o, Op::BiasAct { bias: None, act: None, .. })));
+    }
+
+    #[test]
+    fn fusion_is_identical_across_pattern_variants() {
+        // the pass decides from ops + shapes only, so every variant of
+        // one model must fuse the same chains and keep one arena layout
+        let wl = models::bert_at(1, 4, 16, 1);
+        let opts = CompileOptions { seq: 4, heads: 4, n_classes: 4, ..CompileOptions::default() };
+        let programs: Vec<GraphProgram> =
+            [GraphPattern::Dense, GraphPattern::Tw, GraphPattern::Tvw, GraphPattern::Vw24]
+                .iter()
+                .map(|p| compile(&wl, &opts.with_pattern(*p)).unwrap())
+                .collect();
+        assert!(programs.windows(2).all(|w| w[0].buf_shapes == w[1].buf_shapes));
+        let codes: Vec<Vec<usize>> = programs
+            .iter()
+            .map(|p| {
+                p.weights
+                    .iter()
+                    .map(|w| w.epilogue.as_ref().map(|e| e.kind_code()).unwrap_or(0))
+                    .collect()
+            })
+            .collect();
+        assert!(codes.windows(2).all(|w| w[0] == w[1]), "variants fused differently: {codes:?}");
+    }
+
+    #[test]
+    fn conv_bias_relu_fuses_into_the_gemm() {
+        let wl = models::vgg16_scaled(32, 16, 32);
+        let p = compile(&wl, &CompileOptions::default()).unwrap();
+        let fused_relu = p
+            .weights
+            .iter()
+            .filter(|w| {
+                matches!(
+                    &w.epilogue,
+                    Some(EpilogueSpec { bias: Some(_), act: Some(Act::Relu), .. })
+                )
+            })
+            .count();
+        assert!(fused_relu >= 2, "conv chains should fuse bias+relu, got {fused_relu}");
+    }
+}

@@ -17,12 +17,10 @@ use super::pack::GemmNode;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BufId(pub usize);
 
-/// Elementwise activation of a [`Op::BiasAct`] node.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Act {
-    Relu,
-    Tanh,
-}
+/// Elementwise activation of a [`Op::BiasAct`] node (and of a fused GEMM
+/// epilogue — the kernel-layer type is the canonical definition so both
+/// layers agree on semantics by construction).
+pub use crate::gemm::Act;
 
 /// One executable node.  Every referenced buffer is distinct per op (the
 /// executor temporarily takes mutated buffers out of the arena).
@@ -108,6 +106,139 @@ pub enum Op {
     LastPool { input: BufId, out: BufId, seq: usize },
     /// `buf = 0` (recurrent-state reset at the start of a request).
     Zero { buf: BufId },
+}
+
+impl Op {
+    /// Visit every [`BufId`] this op references (reads, writes, scratch).
+    pub fn visit_bufs(&self, mut f: impl FnMut(BufId)) {
+        // reuse the mutable visitor on a clone so the two never drift
+        let mut op = self.clone();
+        op.visit_bufs_mut(|b| f(*b));
+    }
+
+    /// Visit every [`BufId`] this op references, mutably — the fusion
+    /// pass's buffer-remap hook.  Must enumerate every `BufId` field of
+    /// every variant.
+    pub fn visit_bufs_mut(&mut self, mut f: impl FnMut(&mut BufId)) {
+        match self {
+            Op::Gemm { input, out, .. } => {
+                f(input);
+                f(out);
+            }
+            Op::BiasAct { buf, .. } => f(buf),
+            Op::Attention { qkv, out, scores, qh, kh, vh, .. } => {
+                f(qkv);
+                f(out);
+                f(scores);
+                f(qh);
+                f(kh);
+                f(vh);
+            }
+            Op::DecodeAttend { qkv, kcache, vcache, out, scores, .. } => {
+                f(qkv);
+                f(kcache);
+                f(vcache);
+                f(out);
+                f(scores);
+            }
+            Op::Im2col { input, out, .. } => {
+                f(input);
+                f(out);
+            }
+            Op::AvgPool2 { input, out, .. } => {
+                f(input);
+                f(out);
+            }
+            Op::GlobalAvgPool { input, out } => {
+                f(input);
+                f(out);
+            }
+            Op::Flatten { input, out } => {
+                f(input);
+                f(out);
+            }
+            Op::LstmStep { input, h, c, xh, gates, .. } => {
+                f(input);
+                f(h);
+                f(c);
+                f(xh);
+                f(gates);
+            }
+            Op::Residual { src, dst } => {
+                f(src);
+                f(dst);
+            }
+            Op::LayerNorm { buf } => f(buf),
+            Op::MeanPool { input, out, .. } => {
+                f(input);
+                f(out);
+            }
+            Op::LastPool { input, out, .. } => {
+                f(input);
+                f(out);
+            }
+            Op::Zero { buf } => f(buf),
+        }
+    }
+
+    /// Buffers this op *reads* (including read-modify-write operands like
+    /// the residual destination or recurrent state).  Used by the fusion
+    /// pass's overwrite-before-read check.
+    pub fn reads(&self, mut f: impl FnMut(BufId)) {
+        match *self {
+            Op::Gemm { input, .. } => f(input),
+            // in-place read-modify ops read their buffer
+            Op::BiasAct { buf, .. } => f(buf),
+            Op::LayerNorm { buf } => f(buf),
+            Op::Attention { qkv, .. } => f(qkv),
+            // caches are read-modify (append + attend over the prefix)
+            Op::DecodeAttend { qkv, kcache, vcache, .. } => {
+                f(qkv);
+                f(kcache);
+                f(vcache);
+            }
+            Op::Im2col { input, .. } => f(input),
+            Op::AvgPool2 { input, .. } => f(input),
+            Op::GlobalAvgPool { input, .. } => f(input),
+            Op::Flatten { input, .. } => f(input),
+            // h/c are carried state (read-modify), xh/gates pure scratch
+            // that the step fully rewrites before reading
+            Op::LstmStep { input, h, c, .. } => {
+                f(input);
+                f(h);
+                f(c);
+            }
+            Op::Residual { src, dst } => {
+                f(src);
+                f(dst); // dst += src reads dst
+            }
+            Op::MeanPool { input, .. } => f(input),
+            Op::LastPool { input, .. } => f(input),
+            Op::Zero { .. } => {}
+        }
+    }
+
+    /// The buffer this op *fully overwrites* without reading its previous
+    /// contents, if any.  Attention scratch (`scores`/`qh`/...) is
+    /// excluded: those are internal and never fusion endpoints.
+    pub fn full_overwrite(&self) -> Option<BufId> {
+        match *self {
+            Op::Gemm { out, .. } => Some(out),
+            Op::Attention { out, .. } => Some(out),
+            Op::DecodeAttend { out, .. } => Some(out),
+            Op::Im2col { out, .. } => Some(out),
+            Op::AvgPool2 { out, .. } => Some(out),
+            Op::GlobalAvgPool { out, .. } => Some(out),
+            Op::Flatten { out, .. } => Some(out),
+            Op::MeanPool { out, .. } => Some(out),
+            Op::LastPool { out, .. } => Some(out),
+            Op::Zero { buf } => Some(buf),
+            Op::BiasAct { .. }
+            | Op::LstmStep { .. }
+            | Op::Residual { .. }
+            | Op::LayerNorm { .. } => None,
+        }
+    }
 }
 
 /// A compiled, immutable, executable model: ops + packed weights + buffer

@@ -31,14 +31,18 @@
 pub mod compile;
 pub mod decode;
 pub mod exec;
+pub mod fuse;
 pub mod ir;
 pub mod pack;
 
 pub use compile::{batch_buckets, compile, compile_decode, compile_decode_set, CompileOptions};
 pub use decode::{DecodeEngine, DecodeSet};
 pub use exec::{execute, execute_batch, execute_with, run_gemm, GemmDispatch, GraphModel, Workspace};
+pub use fuse::{fuse_program, FusionReport};
 pub use ir::{Act, BufId, GraphBuilder, GraphProgram, Op};
-pub use pack::{pack_weight, resolve_tile, GemmNode, GraphPattern, PackOptions, PackedWeight};
+pub use pack::{
+    pack_weight, resolve_tile, EpilogueSpec, GemmNode, GraphPattern, PackOptions, PackedWeight,
+};
 
 #[cfg(test)]
 mod tests {

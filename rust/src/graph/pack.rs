@@ -127,6 +127,57 @@ pub enum NodePanels {
     Int8Tw(Vec<Int8Panel>),
 }
 
+/// A fused GEMM epilogue attached to a node by the graph fusion pass
+/// (`graph::fuse`): what the kernel applies on register/tile-resident
+/// accumulators at store time instead of separate elementwise passes.
+/// `c[i][j] = act(acc[i][j] + biases[bias][j]) + bufs[residual][i][j]`,
+/// each part optional.  Indices resolve against the owning program's
+/// bias table / arena at execution time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpilogueSpec {
+    /// Index into `GraphProgram::biases`.
+    pub bias: Option<usize>,
+    pub act: Option<crate::gemm::Act>,
+    /// Arena buffer added after the activation (the transformer residual).
+    pub residual: Option<super::ir::BufId>,
+}
+
+impl EpilogueSpec {
+    /// The kernel-layer bit code of this spec (see
+    /// [`crate::gemm::epilogue_label`]) — what node telemetry records.
+    pub fn kind_code(&self) -> usize {
+        let mut code = 0usize;
+        if self.bias.is_some() {
+            code |= 1;
+        }
+        match self.act {
+            Some(crate::gemm::Act::Relu) => code |= 2,
+            Some(crate::gemm::Act::Tanh) => code |= 4,
+            None => {}
+        }
+        if self.residual.is_some() {
+            code |= 8;
+        }
+        code
+    }
+
+    /// Arena bytes the fusion avoided per dispatch at `m` rows of an
+    /// `m x n` output: an unfused bias/act pass re-reads and re-writes C
+    /// (2 sweeps), an unfused residual reads dst + src and writes dst
+    /// (3 sweeps).
+    pub fn bytes_avoided(&self, m: usize, n: usize) -> u64 {
+        let sweep = (m * n * 4) as u64;
+        let mut avoided = 0u64;
+        if self.bias.is_some() || self.act.is_some() {
+            avoided += 2 * sweep;
+        }
+        if self.residual.is_some() {
+            avoided += 3 * sweep;
+        }
+        avoided
+    }
+}
+
 /// One GEMM node of the graph: the packed operand plus its resolved
 /// cache-blocking.  Ops reference nodes by index into the program's
 /// weight table.
@@ -148,6 +199,10 @@ pub struct GemmNode {
     /// to the compile config's resolved NR; the executor re-checks the
     /// width and falls back to the strided kernel on a mismatch).
     pub panels: NodePanels,
+    /// Fused store-time epilogue, attached by `graph::fuse` when the op
+    /// stream proves the following elementwise ops fold into this GEMM.
+    /// `None` straight out of packing.
+    pub epilogue: Option<EpilogueSpec>,
 }
 
 impl GemmNode {
@@ -162,6 +217,9 @@ impl GemmNode {
             k: self.k,
             n: self.n,
             panels: NodePanels::None,
+            // the oracle keeps the fused epilogue: a fused program's twin
+            // must compute the same function
+            epilogue: self.epilogue.clone(),
         }
     }
 
@@ -393,7 +451,7 @@ pub fn pack_weight(
             _ => NodePanels::None,
         }
     };
-    Ok(GemmNode { name: name.to_string(), weight, cfg, bucket_cfgs, k, n, panels })
+    Ok(GemmNode { name: name.to_string(), weight, cfg, bucket_cfgs, k, n, panels, epilogue: None })
 }
 
 /// Which pattern a compiled graph variant packs its prunable layers with.

@@ -48,7 +48,7 @@ fn main() {
                  \x20       [--requests N] [--rate RPS] [--policy dense|tw|tvw|rr|adaptive|tuned]\n\
                  \x20       [--plan-cache FILE] [--model bert|vgg|nmt|decoder|nano|bert-ffn]\n\
                  \x20       [--precision fp32|int8|auto] [--low-latency] [--padded] [--decode N]\n\
-                 \x20       [--telemetry-json FILE]\n\
+                 \x20       [--no-fusion] [--telemetry-json FILE]\n\
                  \x20       (bert/vgg/nmt/decoder serve the graph-compiled zoo model; nano\n\
                  \x20        the residual-MLP surrogate; bert-ffn the BERT-base FFN widths;\n\
                  \x20        --precision packs zoo weights at f32, int8 (quantize-at-pack),\n\
@@ -57,6 +57,8 @@ fn main() {
                  \x20        --padded disables dynamic effective-batch execution;\n\
                  \x20        --decode N streams N autoregressive sessions through the\n\
                  \x20        continuous-batching decode lane (nmt|decoder models);\n\
+                 \x20        --no-fusion disables graph-level epilogue fusion (also\n\
+                 \x20        via PALLAS_NO_FUSION=1) for A/B and parity runs;\n\
                  \x20        --telemetry-json dumps metrics + graph profile periodically)\n\
                  \x20 profile [--model bert|vgg|nmt] [--runs N] [--intra-threads N] [--out FILE]\n\
                  \x20         (per-GEMM-node time/FLOPs attribution across all variants;\n\
@@ -223,6 +225,9 @@ fn cmd_serve(args: &[String]) -> i32 {
     // batch is the default)
     let low_latency = args.iter().any(|a| a == "--low-latency");
     let dynamic_batch = !args.iter().any(|a| a == "--padded");
+    // --no-fusion: compile without the graph-level epilogue fusion pass
+    // (the escape hatch; PALLAS_NO_FUSION=1 reaches the same switch)
+    let no_fusion = args.iter().any(|a| a == "--no-fusion");
     let mut builder = ServerConfig::builder()
         .policy(policy)
         .workers(workers)
@@ -287,6 +292,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                     Some(m @ ("bert" | "vgg" | "vgg16" | "nmt" | "decoder")) => ZooSpec::for_model(m)
                         .and_then(|mut s| {
                             s.precision = precision;
+                            s.fuse = !no_fusion;
                             ZooBackend::new(s, cache)
                         })
                         .map(|mut b| {
@@ -296,23 +302,30 @@ fn cmd_serve(args: &[String]) -> i32 {
                             Arc::new(b) as Arc<dyn Backend>
                         }),
                     Some("bert-ffn") => {
-                        NativeBackend::new(NativeModelSpec::bert_base(8, 32), cache).map(|mut b| {
+                        let spec =
+                            NativeModelSpec { fuse: !no_fusion, ..NativeModelSpec::bert_base(8, 32) };
+                        NativeBackend::new(spec, cache).map(|mut b| {
                             if want_tele {
                                 graph_tele = Some(b.enable_telemetry());
                             }
                             Arc::new(b) as Arc<dyn Backend>
                         })
                     }
-                    None | Some("nano") => NativeBackend::new(NativeModelSpec::default(), cache)
-                        .map(|mut b| {
-                            if want_tele {
-                                graph_tele = Some(b.enable_telemetry());
-                            }
-                            Arc::new(b) as Arc<dyn Backend>
-                        }),
+                    None | Some("nano") => NativeBackend::new(
+                        NativeModelSpec { fuse: !no_fusion, ..NativeModelSpec::default() },
+                        cache,
+                    )
+                    .map(|mut b| {
+                        if want_tele {
+                            graph_tele = Some(b.enable_telemetry());
+                        }
+                        Arc::new(b) as Arc<dyn Backend>
+                    }),
                     Some(other) => {
                         eprintln!("[serve] unknown native model {other:?}; serving nano default");
-                        NativeBackend::new(NativeModelSpec::default(), cache).map(|mut b| {
+                        let spec =
+                            NativeModelSpec { fuse: !no_fusion, ..NativeModelSpec::default() };
+                        NativeBackend::new(spec, cache).map(|mut b| {
                             if want_tele {
                                 graph_tele = Some(b.enable_telemetry());
                             }
@@ -563,11 +576,13 @@ fn cmd_profile(args: &[String]) -> i32 {
             for n in nodes.iter().take(3) {
                 let (last_m, bm, bk, threads) = n.last_dispatch();
                 println!(
-                    "    {:<16} {:>8.2}ms  {:>7.2} GFLOP/s  m={last_m} bm={bm} bk={bk} t={threads} kernel={}",
+                    "    {:<16} {:>8.2}ms  {:>7.2} GFLOP/s  m={last_m} bm={bm} bk={bk} t={threads} kernel={} epilogue={} avoided={}KB",
                     n.name,
                     n.secs() * 1e3,
                     n.gflops(),
-                    n.last_micro()
+                    n.last_micro(),
+                    n.last_epilogue(),
+                    n.bytes_avoided() / 1024
                 );
             }
             variant_jsons.push(obj(vec![("coverage", num(coverage)), ("profile", vp.to_json())]));

@@ -154,6 +154,12 @@ pub struct NodeProfile {
     /// Packed `gemm::micro::Resolved` code of the last dispatch's
     /// microkernel (`gemm::micro::describe` renders it).
     last_micro: AtomicUsize,
+    /// [`crate::graph::EpilogueSpec::kind_code`] of the last dispatch's
+    /// fused epilogue (0 = bare GEMM; `gemm::epilogue_label` renders it).
+    last_epilogue: AtomicUsize,
+    /// Memory traffic the fused epilogue avoided versus running the
+    /// elementwise tail as separate passes (cumulative, like `bytes`).
+    bytes_avoided: AtomicU64,
 }
 
 impl NodeProfile {
@@ -173,11 +179,15 @@ impl NodeProfile {
             last_bk: AtomicUsize::new(0),
             last_threads: AtomicUsize::new(0),
             last_micro: AtomicUsize::new(0),
+            last_epilogue: AtomicUsize::new(0),
+            bytes_avoided: AtomicU64::new(0),
         }
     }
 
     /// Record one kernel dispatch on this node.  `micro` is the packed
-    /// [`crate::gemm::micro::Resolved::code`] of the inner loops that ran.
+    /// [`crate::gemm::micro::Resolved::code`] of the inner loops that ran;
+    /// `epilogue` is the fused epilogue's kind code (0 when unfused) and
+    /// `avoided` the memory traffic that fusion saved for this dispatch.
     #[allow(clippy::too_many_arguments)]
     pub fn record(
         &self,
@@ -189,6 +199,8 @@ impl NodeProfile {
         bk: usize,
         threads: usize,
         micro: usize,
+        epilogue: usize,
+        avoided: u64,
     ) {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
@@ -200,6 +212,8 @@ impl NodeProfile {
         self.last_bk.store(bk, Ordering::Relaxed);
         self.last_threads.store(threads, Ordering::Relaxed);
         self.last_micro.store(micro, Ordering::Relaxed);
+        self.last_epilogue.store(epilogue, Ordering::Relaxed);
+        self.bytes_avoided.fetch_add(avoided, Ordering::Relaxed);
     }
 
     pub fn calls(&self) -> u64 {
@@ -258,6 +272,17 @@ impl NodeProfile {
         crate::gemm::micro::describe(self.last_micro.load(Ordering::Relaxed))
     }
 
+    /// Fused-epilogue label of the most recent dispatch (e.g.
+    /// "bias+relu+res"); "-" for a bare GEMM or before any dispatch.
+    pub fn last_epilogue(&self) -> String {
+        crate::gemm::epilogue_label(self.last_epilogue.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative memory traffic avoided by epilogue fusion.
+    pub fn bytes_avoided(&self) -> u64 {
+        self.bytes_avoided.load(Ordering::Relaxed)
+    }
+
     fn reset(&self) {
         self.calls.store(0, Ordering::Relaxed);
         self.nanos.store(0, Ordering::Relaxed);
@@ -269,6 +294,8 @@ impl NodeProfile {
         self.last_bk.store(0, Ordering::Relaxed);
         self.last_threads.store(0, Ordering::Relaxed);
         self.last_micro.store(0, Ordering::Relaxed);
+        self.last_epilogue.store(0, Ordering::Relaxed);
+        self.bytes_avoided.store(0, Ordering::Relaxed);
     }
 
     fn to_json(&self) -> Json {
@@ -290,6 +317,8 @@ impl NodeProfile {
             ("last_bk", num(bk as f64)),
             ("last_threads", num(threads as f64)),
             ("micro", s(&self.last_micro())),
+            ("epilogue", s(&self.last_epilogue())),
+            ("bytes_avoided", num(self.bytes_avoided() as f64)),
         ])
     }
 }
@@ -499,7 +528,8 @@ mod tests {
         prof.record_op(OpKind::Gemm, 1_000_000);
         // packed micro code for "avx2 4x16" (Isa index 1, MR 4, NR 16)
         let micro = (1usize << 16) | (4 << 8) | 16;
-        prof.nodes[0].record(2, 1_000_000, 64, 128, 64, 64, 1, micro);
+        // epilogue kind 3 = bias + relu; 64 bytes of tail traffic avoided
+        prof.nodes[0].record(2, 1_000_000, 64, 128, 64, 64, 1, micro, 3, 64);
         prof.record_forward(1_500_000);
 
         assert_eq!(prof.op_calls(OpKind::Gemm), 1);
@@ -512,18 +542,24 @@ mod tests {
         assert!(prof.nodes[0].gbps() > 0.0);
         assert_eq!(prof.nodes[0].last_dispatch(), (2, 64, 64, 1));
         assert_eq!(prof.nodes[0].last_micro(), "avx2 4x16");
+        assert_eq!(prof.nodes[0].last_epilogue(), "bias+relu");
+        assert_eq!(prof.nodes[0].bytes_avoided(), 64);
 
         // report JSON carries the node and op rows, microkernel included
         let rep = tele.report().to_string();
         assert!(rep.contains("\"l0.up\""), "report: {rep}");
         assert!(rep.contains("\"gemm\""), "report: {rep}");
         assert!(rep.contains("\"avx2 4x16\""), "report: {rep}");
+        assert!(rep.contains("\"bias+relu\""), "report: {rep}");
+        assert!(rep.contains("\"bytes_avoided\""), "report: {rep}");
 
         tele.reset();
         assert_eq!(prof.op_calls(OpKind::Gemm), 0);
         assert_eq!(prof.nodes[0].calls(), 0);
         assert_eq!(prof.forwards(), 0);
         assert_eq!(prof.nodes[0].last_micro(), "scalar");
+        assert_eq!(prof.nodes[0].last_epilogue(), "-");
+        assert_eq!(prof.nodes[0].bytes_avoided(), 0);
     }
 
     #[test]

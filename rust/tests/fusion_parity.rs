@@ -1,0 +1,200 @@
+//! Fused-epilogue parity: every zoo model (BERT / NMT / decoder at small
+//! dims) compiled with the graph fusion pass must serve the same logits
+//! as its unfused twin (`CompileOptions { fuse: false }`) at 1e-4 —
+//! across dense / TW / TVW / 2:4, f32 and int8, serial and pooled, and
+//! at every effective batch prefix (m_eff = 1, B/2, B).  For dense f32
+//! the fused epilogue performs the identical float ops in the identical
+//! order, so serial parity is required to be bit-exact.
+//!
+//! The fused side compiles under the *default* options, so the no-fusion
+//! CI lane (`PALLAS_NO_FUSION=1`) degrades it to the unfused program and
+//! the comparison stays trivially green — the same degradation contract
+//! the forced-scalar lane (`PALLAS_FORCE_SCALAR=1`) relies on.  The
+//! op-stream structure tests pin `fuse: true` explicitly so they hold in
+//! every lane.
+
+use std::sync::Arc;
+
+use tilewise::exec::PreparedModel;
+use tilewise::graph::{compile, CompileOptions, GraphModel, GraphPattern, Op, PackOptions};
+use tilewise::models::{self, ModelWorkload};
+use tilewise::pool::ThreadPool;
+use tilewise::quant::Precision;
+
+const PATTERNS: [GraphPattern; 4] =
+    [GraphPattern::Dense, GraphPattern::Tw, GraphPattern::Tvw, GraphPattern::Vw24];
+
+fn opts_at(precision: Precision, causal: bool) -> CompileOptions {
+    CompileOptions {
+        seq: 4,
+        heads: 4,
+        n_classes: 4,
+        pack: PackOptions { sparsity: 0.75, g: 8, precision },
+        seed: 7,
+        causal,
+        // fuse: the env-aware default — on everywhere except the
+        // no-fusion CI lane
+        ..CompileOptions::default()
+    }
+}
+
+fn deterministic_input(len: usize) -> Vec<f32> {
+    (0..len).map(|i| ((i * 17 % 23) as f32 - 11.0) * 0.05).collect()
+}
+
+/// Compile `workload` fused and unfused under one pattern/precision, and
+/// require logit agreement serial, pooled, and at batch prefixes.
+fn check_fusion_parity(
+    workload: &ModelWorkload,
+    pattern: GraphPattern,
+    precision: Precision,
+    causal: bool,
+    pool: &Arc<ThreadPool>,
+) {
+    let label = format!("{}/{:?}/{}", workload.name, pattern, precision.label());
+    let opts = opts_at(precision, causal).with_pattern(pattern);
+    let fused = compile(workload, &opts).unwrap_or_else(|e| panic!("{label}: compile: {e}"));
+    let unfused = compile(workload, &CompileOptions { fuse: false, ..opts.clone() }).unwrap();
+    let dims = fused.dims;
+    assert_eq!(dims, unfused.dims, "{label}: fused/unfused dims diverge");
+    let variant = fused.variant.clone();
+    let full = deterministic_input(dims.batch * dims.per_request_len());
+
+    let mut fused_serial = GraphModel::new(Arc::new(vec![fused]), None).unwrap();
+    let mut unfused_serial = GraphModel::new(Arc::new(vec![unfused]), None).unwrap();
+    let want = unfused_serial.run(&variant, &full).unwrap();
+    let got = fused_serial.run(&variant, &full).unwrap();
+    assert_eq!(got.len(), want.len(), "{label}");
+    assert!(want.iter().all(|v| v.is_finite()), "{label}: unfused non-finite");
+    if pattern == GraphPattern::Dense && precision == Precision::Fp32 {
+        // dense f32 runs the same float ops in the same order fused or
+        // not: serial parity must be bit-exact, not just within tolerance
+        assert_eq!(got, want, "{label}: dense f32 fusion must be bit-identical");
+    }
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4, "{label}: serial logit {i}: fused {a} vs unfused {b}");
+    }
+
+    // pooled dispatch of the fused program against the serial unfused
+    // oracle: fusion must compose with every parallel kernel path
+    let fused2 = compile(workload, &opts).unwrap();
+    let mut fused_pooled = GraphModel::new(Arc::new(vec![fused2]), Some(pool.clone())).unwrap();
+    let got_pooled = fused_pooled.run(&variant, &full).unwrap();
+    for (i, (a, b)) in got_pooled.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4, "{label}: pooled logit {i}: fused {a} vs unfused {b}");
+    }
+
+    // batch prefixes: the per-bucket variable-M dispatch must thread the
+    // epilogue exactly like the full-batch path
+    let mut m_effs = vec![1, (dims.batch / 2).max(1)];
+    m_effs.dedup();
+    for m_eff in m_effs {
+        let prefix = &full[..m_eff * dims.per_request_len()];
+        let want_m = unfused_serial.run_batch(&variant, prefix, m_eff).unwrap();
+        let got_m = fused_serial.run_batch(&variant, prefix, m_eff).unwrap();
+        assert_eq!(got_m.len(), m_eff * dims.n_classes, "{label} m_eff={m_eff}");
+        for (i, (a, b)) in got_m.iter().zip(&want_m).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "{label} m_eff={m_eff}: logit {i}: fused {a} vs unfused {b}"
+            );
+        }
+        let got_mp = fused_pooled.run_batch(&variant, prefix, m_eff).unwrap();
+        for (i, (a, b)) in got_mp.iter().zip(&want_m).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "{label} m_eff={m_eff}: pooled logit {i}: fused {a} vs unfused {b}"
+            );
+        }
+    }
+    // the full batch still executes correctly after prefix runs shrank
+    // and regrew the fused workspace
+    let again = fused_serial.run(&variant, &full).unwrap();
+    assert_eq!(got, again, "{label}: full batch after prefix runs differs");
+}
+
+fn check_model(workload: &ModelWorkload, causal: bool) {
+    let pool = Arc::new(ThreadPool::new(3));
+    for precision in [Precision::Fp32, Precision::Int8] {
+        for pattern in PATTERNS {
+            check_fusion_parity(workload, pattern, precision, causal, &pool);
+        }
+    }
+}
+
+#[test]
+fn bert_fused_matches_unfused_all_patterns_and_precisions() {
+    check_model(&models::bert_at(4, 4, 16, 2), false);
+}
+
+#[test]
+fn nmt_fused_matches_unfused_all_patterns_and_precisions() {
+    check_model(&models::nmt_at(4, 8, 3), false);
+}
+
+#[test]
+fn decoder_fused_matches_unfused_all_patterns_and_precisions() {
+    check_model(&models::decoder_at(4, 4, 16, 2), true);
+}
+
+#[test]
+fn fused_transformer_op_stream_has_no_elementwise_tail_ops() {
+    // pinned fuse: true so this structural claim holds in the no-fusion
+    // CI lane too — the pass itself must strip every BiasAct/Residual a
+    // transformer layer emits, for every pattern and precision
+    for precision in [Precision::Fp32, Precision::Int8] {
+        for pattern in PATTERNS {
+            let opts = CompileOptions { fuse: true, ..opts_at(precision, false) }
+                .with_pattern(pattern);
+            let p = compile(&models::bert_at(2, 4, 16, 2), &opts).unwrap();
+            let bias = p.ops.iter().filter(|o| matches!(o, Op::BiasAct { .. })).count();
+            let res = p.ops.iter().filter(|o| matches!(o, Op::Residual { .. })).count();
+            assert_eq!(
+                (bias, res),
+                (0, 0),
+                "{pattern:?}/{}: unfused elementwise ops remain",
+                precision.label()
+            );
+            assert!(
+                p.weights.iter().any(|w| w.epilogue.is_some()),
+                "{pattern:?}/{}: no node carries an epilogue",
+                precision.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_step_programs_fuse_and_match_the_unfused_decode() {
+    // the skinny-M decode-step GEMMs thread the epilogue too: a fused
+    // decode engine must stream the same logits as an unfused one
+    use tilewise::graph::{compile_decode_set, DecodeEngine};
+    let wl = models::decoder_at(2, 4, 16, 2);
+    let opts = CompileOptions { fuse: true, ..opts_at(Precision::Fp32, true) };
+    let patterns = [GraphPattern::Dense, GraphPattern::Tw];
+    let fused = compile_decode_set(&wl, &opts, &patterns, 8).unwrap();
+    let unfused =
+        compile_decode_set(&wl, &CompileOptions { fuse: false, ..opts }, &patterns, 8).unwrap();
+    let mut fe = DecodeEngine::new(Arc::new(fused)).unwrap();
+    let mut ue = DecodeEngine::new(Arc::new(unfused)).unwrap();
+    let d_in = fe.caps().d_in;
+    let prompt: Vec<f32> = (0..2 * d_in).map(|i| ((i % 5) as f32 - 2.0) * 0.2).collect();
+    let slot = fe.free_slot().unwrap();
+    fe.begin(slot, &prompt).unwrap();
+    ue.begin(slot, &prompt).unwrap();
+    for variant in ["model_dense", "model_tw"] {
+        for step in 0..3 {
+            let f = fe.step(variant, None).unwrap();
+            let u = ue.step(variant, None).unwrap();
+            assert_eq!(f.len(), u.len(), "{variant} step {step}");
+            for (a, b) in f.iter().flat_map(|o| &o.logits).zip(u.iter().flat_map(|o| &o.logits)) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "{variant} step {step}: fused {a} vs unfused {b}"
+                );
+            }
+        }
+    }
+    fe.end(slot).unwrap();
+    ue.end(slot).unwrap();
+}
